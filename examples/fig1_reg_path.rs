@@ -1,0 +1,71 @@
+//! Figure 1 reproduction: regularization paths of L1 / MCP / SCAD / ℓ0.5
+//! on the correlated design — non-convex penalties achieve exact support
+//! recovery, lower estimation error, and their best-estimation and
+//! best-prediction λ coincide (the paper's headline qualitative claim).
+//!
+//! ```bash
+//! cargo run --release --offline --example fig1_reg_path [-- --full]
+//! ```
+
+use skglm::data::{correlated, CorrelatedSpec};
+use skglm::estimators::path::{geometric_grid, lasso_path, lq_path, mcp_path, scad_path};
+use skglm::solver::SolverOpts;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { 1.0 } else { 0.15 };
+    let ds = correlated(CorrelatedSpec::figure1(scale), 42);
+    let mut design = ds.design.clone();
+    design.normalize_cols((ds.n() as f64).sqrt());
+    println!(
+        "Figure-1 data: n={}, p={}, |supp(β*)|={}, SNR=5, ρ=0.6",
+        ds.n(),
+        ds.p(),
+        ds.beta_true.iter().filter(|&&b| b != 0.0).count()
+    );
+
+    let ratios = geometric_grid(1e-3, if full { 30 } else { 15 });
+    let opts = SolverOpts::default().with_tol(1e-7);
+
+    let paths = vec![
+        lasso_path(&design, &ds.y, Some(&ds.beta_true), &ratios, &opts),
+        mcp_path(&design, &ds.y, Some(&ds.beta_true), &ratios, 3.0, &opts),
+        scad_path(&design, &ds.y, Some(&ds.beta_true), &ratios, 3.7, &opts),
+        lq_path(&design, &ds.y, Some(&ds.beta_true), &ratios, 0.5, &opts),
+    ];
+
+    for path in &paths {
+        println!("\n=== {} (path computed in {:.2}s) ===", path.penalty_name, path.total_time);
+        println!("{:<12} {:>8} {:>5} {:>5} {:>11} {:>11}", "λ/λmax", "supp", "tp", "fp", "est_err", "pred_mse");
+        for pt in &path.points {
+            let rec = pt.recovery.as_ref().unwrap();
+            println!(
+                "{:<12.4e} {:>8} {:>5} {:>5} {:>11.4e} {:>11.4e}",
+                pt.lambda_ratio,
+                pt.support_size,
+                rec.true_positives,
+                rec.false_positives,
+                pt.estimation_error.unwrap(),
+                pt.prediction_mse.unwrap()
+            );
+        }
+        let be = path.best_estimation().unwrap();
+        let bp = path.best_prediction().unwrap();
+        println!(
+            "-> exact recovery anywhere: {} | best-estimation λ/λmax {:.3e} | best-prediction λ/λmax {:.3e}{}",
+            path.any_exact_recovery(),
+            be.lambda_ratio,
+            bp.lambda_ratio,
+            if (be.lambda_ratio - bp.lambda_ratio).abs() < 1e-12 {
+                "  (they coincide — the paper's top/bottom-panel agreement)"
+            } else {
+                ""
+            }
+        );
+    }
+
+    println!("\nPaper's Figure-1 claims to check above:");
+    println!(" 1. non-convex paths (mcp/scad/lq) reach exact support recovery; l1 does not");
+    println!(" 2. non-convex best estimation error < lasso best estimation error");
+    println!(" 3. for non-convex penalties the optimal λ in estimation and prediction agree");
+}

@@ -1,0 +1,86 @@
+//! Figure 4 reproduction: M/EEG source localisation on the simulated
+//! right-auditory-stimulation dataset. The convex ℓ2,1 penalty biases
+//! amplitudes and splits/mislocalises sources; block-MCP and block-SCAD
+//! recover exactly one source per hemisphere.
+//!
+//! ```bash
+//! cargo run --release --offline --example meeg_source_localization
+//! ```
+
+use skglm::data::meeg::{localize, simulate, MeegSpec};
+use skglm::estimators::multitask::{
+    block_lambda_max, flatten_tasks, unflatten_coef, BlockMcpRegressor, BlockScadRegressor,
+    MultiTaskLasso,
+};
+use skglm::linalg::Design;
+
+fn main() {
+    let spec = MeegSpec::default();
+    let pb = simulate(spec, 42);
+    println!(
+        "simulated M/EEG: {} sensors, {} sources, {} time points, 2 planted sources at positions {:+.2} / {:+.2}",
+        pb.gain.nrows(),
+        pb.gain.ncols(),
+        pb.measurements.ncols(),
+        pb.positions[pb.active[0]],
+        pb.positions[pb.active[1]]
+    );
+
+    let design = Design::Dense(pb.gain.clone());
+    let y = flatten_tasks(&pb.measurements);
+    let t = pb.measurements.ncols();
+    let lam_max = block_lambda_max(&design, &y, t);
+    let lam = 0.3 * lam_max;
+    // γ > 1/L_j = n_sensors for the unit-norm leadfield (semi-convexity)
+    let gamma = 2.5 * pb.gain.nrows() as f64;
+
+    let runs: Vec<(&str, skglm::solver::MultiTaskFit)> = vec![
+        ("l2,1 (convex)", MultiTaskLasso::new(lam).with_tol(1e-6).fit(&design, &y, t)),
+        ("block-MCP", BlockMcpRegressor::new(lam, gamma).with_tol(1e-6).fit(&design, &y, t)),
+        ("block-SCAD", BlockScadRegressor::new(lam, gamma).fit(&design, &y, t)),
+    ];
+
+    println!(
+        "\n{:<14} {:>6} {:>12} {:>12} {:>18} {:>10}",
+        "penalty", "rows", "hemispheres", "pos-error", "epochs", "converged"
+    );
+    for (name, fit) in &runs {
+        let w = unflatten_coef(&fit.w, t);
+        let loc = localize(&pb, &w, 1e-6);
+        println!(
+            "{:<14} {:>6} {:>12} {:>12} {:>18} {:>10}",
+            name,
+            loc.recovered.len(),
+            format!("{}/2", loc.hemispheres_hit),
+            if loc.max_position_error.is_finite() {
+                format!("{:.4}", loc.max_position_error)
+            } else {
+                "missed".into()
+            },
+            fit.n_epochs,
+            fit.converged
+        );
+    }
+
+    // amplitude bias: compare recovered row norms at the true sources
+    println!("\nrecovered amplitude at the true sources (truth row-norms shown first):");
+    let truth_norm = |j: usize| {
+        (0..t).map(|tt| pb.sources_true.get(j, tt).powi(2)).sum::<f64>().sqrt()
+    };
+    print!("{:<14}", "truth");
+    for &j in &pb.active {
+        print!(" src@{:+.2}: {:>7.3}", pb.positions[j], truth_norm(j));
+    }
+    println!();
+    for (name, fit) in &runs {
+        let w = unflatten_coef(&fit.w, t);
+        print!("{name:<14}");
+        for &j in &pb.active {
+            let norm = (0..t).map(|tt| w.get(j, tt).powi(2)).sum::<f64>().sqrt();
+            print!(" src@{:+.2}: {:>7.3}", pb.positions[j], norm);
+        }
+        println!();
+    }
+    println!("\n(expected: ℓ2,1 under-estimates amplitudes / may split sources;");
+    println!(" block-MCP and block-SCAD hit both hemispheres with tight positions)");
+}

@@ -1,0 +1,59 @@
+//! Perf probe: sweep solver knobs (inner tolerance ratio, Anderson M,
+//! ws growth) on the dense Figure-1 workload and an rcv1-like sparse one.
+//! Used for the EXPERIMENTS.md §Perf iteration log.
+//!
+//! ```bash
+//! cargo run --release --offline --example perf_probe
+//! ```
+
+use skglm::data::{correlated, sparse, CorrelatedSpec, Dataset, SparseSpec};
+use skglm::datafit::Quadratic;
+use skglm::estimators::linear::quadratic_lambda_max;
+use skglm::penalty::L1;
+use skglm::solver::{solve, SolverOpts};
+
+fn bench(ds: &Dataset, lam_div: f64, label: &str, opts_fn: impl Fn(&mut SolverOpts)) {
+    let lam = quadratic_lambda_max(&ds.design, &ds.y) / lam_div;
+    let pen = L1::new(lam);
+    let mut opts = SolverOpts::default().with_tol(1e-10);
+    opts_fn(&mut opts);
+    // median of 3
+    let mut times = Vec::new();
+    let mut last = None;
+    for _ in 0..3 {
+        let mut f = Quadratic::new();
+        let t0 = std::time::Instant::now();
+        let r = solve(&ds.design, &ds.y, &mut f, &pen, &opts, None, None);
+        times.push(t0.elapsed().as_secs_f64());
+        last = Some(r);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let r = last.unwrap();
+    println!(
+        "{label:<36} λ/{lam_div:<5} {:>8.3}s  outer {:>3}  epochs {:>6}  acc/rej {}/{}  kkt {:.1e}",
+        times[1], r.n_outer, r.n_epochs, r.accepted_extrapolations, r.rejected_extrapolations, r.kkt
+    );
+}
+
+fn main() {
+    let dense = correlated(CorrelatedSpec { n: 1000, p: 2000, rho: 0.6, nnz: 200, snr: 5.0 }, 42);
+    let sp = sparse(
+        "sparse_probe",
+        SparseSpec { n: 3000, p: 60_000, density: 1e-3, support_frac: 5e-4, snr: 5.0, binary: false },
+        42,
+    );
+    for (name, ds, divs) in [("dense 1000x2000", &dense, [10.0, 100.0]), ("sparse 3000x60000", &sp, [10.0, 50.0])] {
+        println!("=== {name} ===");
+        for div in divs {
+            bench(ds, div, "default (ratio 0.3, M=5)", |_| {});
+            bench(ds, div, "inner ratio 0.1", |o| o.inner_tol_ratio = 0.1);
+            bench(ds, div, "inner ratio 0.05", |o| o.inner_tol_ratio = 0.05);
+            bench(ds, div, "inner ratio 0.5", |o| o.inner_tol_ratio = 0.5);
+            bench(ds, div, "M=3", |o| o.anderson_m = 3);
+            bench(ds, div, "M=8", |o| o.anderson_m = 8);
+            bench(ds, div, "no accel", |o| o.anderson_m = 0);
+            bench(ds, div, "no ws", |o| o.use_ws = false);
+            println!();
+        }
+    }
+}

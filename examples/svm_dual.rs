@@ -1,0 +1,65 @@
+//! §E.4 reproduction: hinge-loss SVM solved in the dual as Problem (1)
+//! with the box-indicator penalty. Shows the generalized-support concept
+//! (Definition 4) on a non-sparsity problem: the working set tracks the
+//! *free* dual variables (margin support vectors).
+//!
+//! ```bash
+//! cargo run --release --offline --example svm_dual
+//! ```
+
+use skglm::data::{paper_dataset_small, Dataset};
+use skglm::estimators::LinearSvc;
+use skglm::linalg::Design;
+
+fn main() {
+    let ds: Dataset = paper_dataset_small("real-sim", 42).expect("real-sim stand-in");
+    let x = match &ds.design {
+        Design::Sparse(s) => s.clone(),
+        _ => unreachable!(),
+    };
+    println!(
+        "real-sim stand-in: n={} samples, d={} features, density {:.1e}",
+        ds.n(),
+        ds.p(),
+        x.density()
+    );
+
+    println!(
+        "\n{:>6} {:>10} {:>10} {:>10} {:>10} {:>9} {:>10}",
+        "C", "dual obj", "kkt", "free α", "bound α", "epochs", "train acc"
+    );
+    for &c in &[0.1, 1.0, 10.0] {
+        let t0 = std::time::Instant::now();
+        let fit = LinearSvc::new(c).with_tol(1e-7).fit_sparse(&x, &ds.y);
+        let pen = skglm::penalty::BoxIndicator::new(c);
+        use skglm::penalty::Penalty;
+        let free = fit.alpha.beta.iter().filter(|&&a| pen.in_gsupp(a)).count();
+        let at_bounds = fit.alpha.beta.len() - free;
+        // training accuracy from the recovered primal coefficients
+        let mut scores = vec![0.0; ds.n()];
+        ds.design.matvec(&fit.primal_coef, &mut scores);
+        // wait: primal scores are X β; our design is X itself
+        let acc = scores
+            .iter()
+            .zip(ds.y.iter())
+            .filter(|(s, y)| s.signum() == y.signum())
+            .count() as f64
+            / ds.n() as f64;
+        println!(
+            "{:>6} {:>10.3} {:>10.1e} {:>10} {:>10} {:>9} {:>9.1}%  ({:.2}s)",
+            c,
+            fit.alpha.objective,
+            fit.alpha.kkt,
+            free,
+            at_bounds,
+            fit.alpha.n_epochs,
+            acc * 100.0,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+
+    println!("\nDefinition-4 check: the generalized support of the dual problem is");
+    println!("the set of FREE variables 0 < α_i < C — the working-set solver only");
+    println!("sweeps those once identified, which is why harder problems (larger C,");
+    println!("more margin violations) still solve quickly.");
+}

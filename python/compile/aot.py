@@ -1,0 +1,100 @@
+"""AOT lowering: JAX/Pallas (L2/L1) → HLO text → artifacts/.
+
+Run once at build time (``make artifacts``). Emits one
+``<op>_n{n}_p{p}.hlo.txt`` per (op, shape) — the naming convention the
+Rust runtime (`runtime::client::artifact_path`) resolves.
+
+HLO **text** is the interchange format, NOT ``lowered.serialize()``:
+the image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos
+(64-bit instruction ids, ``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot [--out-dir ../artifacts] [--check]``.
+"""
+
+import argparse
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (op, n, p) artifact matrix:
+#   - (200, 400): integration-test shape (rust/tests/integration_runtime)
+#   - (1000, 2000): the Figure-1 dense workload
+#   - (1000, 5000): the Figure-5 dense MCP workload
+SHAPES = [(200, 400), (1000, 2000), (1000, 5000)]
+OPS = ["xt_r", "score_l1", "score_mcp", "obj_l1"]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple so the Rust
+    side unwraps with to_tuple1/to_tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(op: str, n: int, p: int) -> str:
+    fn, args = model.lower_entry(op, n, p)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: pathlib.Path, shapes=None, ops=None, force=False) -> list[pathlib.Path]:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    written = []
+    for n, p in shapes or SHAPES:
+        for op in ops or OPS:
+            path = out_dir / f"{op}_n{n}_p{p}.hlo.txt"
+            if path.exists() and not force:
+                continue
+            text = lower_artifact(op, n, p)
+            assert text.startswith("HloModule"), f"unexpected HLO header for {op}"
+            path.write_text(text)
+            written.append(path)
+            print(f"[aot] wrote {path} ({len(text)} chars)")
+    return written
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true", help="rebuild even if present")
+    ap.add_argument(
+        "--check", action="store_true", help="verify numerics of lowered fns vs ref"
+    )
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    written = build(out, force=args.force)
+    if not written:
+        print("[aot] artifacts up to date")
+    if args.check:
+        _check()
+    return 0
+
+
+def _check():
+    """Spot-check the lowered xt_r against the jnp oracle."""
+    import numpy as np
+
+    from .kernels import ref
+
+    rng = np.random.default_rng(0)
+    n, p = 200, 400
+    xt = np.asarray(rng.normal(size=(p, n)), dtype=np.float32)
+    r = np.asarray(rng.normal(size=n), dtype=np.float32)
+    fn, _ = model.lower_entry("xt_r", n, p)
+    (got,) = jax.jit(fn)(xt, r)
+    want = ref.xt_r_ref(xt, r, 1.0 / n)
+    err = float(abs(got - want).max())
+    assert err < 1e-5, f"xt_r check failed: {err}"
+    print(f"[aot] numeric check ok (max err {err:.2e})")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

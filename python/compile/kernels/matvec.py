@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: the tiled `Xᵀr` scoring pass.
+
+This is the O(n·p) hot spot of the paper's Algorithm 1: every outer
+iteration recomputes the full gradient `∇f(β) = Xᵀ(Xβ−y)/n` to rank
+features. On TPU this is a matvec streamed through VMEM:
+
+- `Xᵀ` arrives as a [p, n] array (the Rust design matrix is column-major
+  [n, p], which is bit-identical to row-major [p, n] — zero-copy across
+  the FFI boundary);
+- the grid is (p/bp, n/bn); each step loads a (bp, bn) tile of `Xᵀ` and a
+  (bn,) slice of `r` into VMEM and accumulates `tile @ r_slice` into the
+  (bp,) output block — an MXU-shaped contraction with f32 accumulation;
+- the n-axis is the reduction axis: the output block is zeroed at the
+  first n-step and accumulated across the rest ("revisiting" grid
+  semantics).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's numba
+CPU kernels become BlockSpec-scheduled VMEM tiles; block sizes target MXU
+alignment (multiples of 128) with graceful fallback for small test shapes.
+
+interpret=True ALWAYS — real-TPU lowering emits a Mosaic custom-call that
+the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of `dim` that is <= preferred (MXU-aligned when the
+    shape allows it; exact-divisor fallback keeps interpret-mode indexing
+    simple for the small pytest shapes)."""
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+def _xt_r_kernel(xt_ref, r_ref, o_ref):
+    """One (bp, bn) tile: o[bp] += Xᵀ-tile @ r-slice, zeroed at n-step 0."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (bp, bn) @ (bn,) -> (bp,); jnp.dot on f32 tiles maps to the MXU
+    o_ref[...] += jnp.dot(xt_ref[...], r_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "block_n"))
+def xt_r(xt, r, *, block_p: int = 128, block_n: int = 512):
+    """`Xᵀ r` via the tiled Pallas kernel. xt: f32[p, n], r: f32[n] → f32[p].
+
+    NOTE: returns the *unnormalised* product; the L2 model layer applies
+    the 1/n factor (kept separate so the same kernel serves every datafit).
+    """
+    p, n = xt.shape
+    assert r.shape == (n,), f"residual shape {r.shape} != ({n},)"
+    bp = _pick_block(p, block_p)
+    bn = _pick_block(n, block_n)
+    grid = (p // bp, n // bn)
+    return pl.pallas_call(
+        _xt_r_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bp, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xt, r)
+
+
+def vmem_bytes(block_p: int, block_n: int) -> int:
+    """VMEM footprint of one grid step (f32): Xᵀ tile + r slice + out block.
+
+    Used by DESIGN.md §Perf to check the schedule fits the ~16 MiB/core
+    VMEM budget on real TPUs.
+    """
+    return 4 * (block_p * block_n + block_n + block_p)
+
+
+def mxu_utilization_estimate(p: int, n: int, block_p: int, block_n: int) -> float:
+    """Fraction of MXU-aligned work: how much of each (bp, bn) tile is
+    'real' when padded up to 128×128 systolic passes. 1.0 = perfectly
+    aligned tiles."""
+    pad = lambda b: -(-b // 128) * 128
+    return (block_p * block_n) / (pad(block_p) * pad(block_n))

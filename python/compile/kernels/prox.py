@@ -1,0 +1,80 @@
+"""L1 Pallas kernels: vectorised proximal operators (VPU elementwise).
+
+The batched prox bank — applied to a whole coefficient block at once — is
+what a TPU deployment of proximal *gradient* steps (ISTA/FISTA baselines)
+or of the extrapolation guard would run. Each kernel is a pure
+elementwise map over 1-D blocks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matvec import _pick_block
+
+
+def _soft(v, t):
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0)
+
+
+def _prox_l1_kernel(v_ref, params_ref, o_ref):
+    step, lam = params_ref[0], params_ref[1]
+    o_ref[...] = _soft(v_ref[...], step * lam)
+
+
+def _prox_mcp_kernel(v_ref, params_ref, o_ref):
+    step, lam, gamma = params_ref[0], params_ref[1], params_ref[2]
+    v = v_ref[...]
+    a = jnp.abs(v)
+    tau = step * lam
+    firm = jnp.sign(v) * (a - tau) / (1.0 - step / gamma)
+    o_ref[...] = jnp.where(a <= tau, 0.0, jnp.where(a <= gamma * lam, firm, v))
+
+
+def _prox_scad_kernel(v_ref, params_ref, o_ref):
+    step, lam, gamma = params_ref[0], params_ref[1], params_ref[2]
+    v = v_ref[...]
+    a = jnp.abs(v)
+    soft = _soft(v, step * lam)
+    mid = ((gamma - 1.0) * v - jnp.sign(v) * step * gamma * lam) / (
+        gamma - 1.0 - step
+    )
+    o_ref[...] = jnp.where(
+        a <= lam * (1.0 + step), soft, jnp.where(a <= gamma * lam, mid, v)
+    )
+
+
+def _elementwise_call(kernel, v, params, block: int):
+    (p,) = v.shape
+    b = _pick_block(p, block)
+    return pl.pallas_call(
+        kernel,
+        grid=(p // b,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((params.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        interpret=True,
+    )(v, params)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def prox_l1(v, params, *, block: int = 1024):
+    """Soft threshold. params = [step, λ]."""
+    return _elementwise_call(_prox_l1_kernel, v, params, block)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def prox_mcp(v, params, *, block: int = 1024):
+    """Firm threshold (MCP). params = [step, λ, γ], valid for γ > step."""
+    return _elementwise_call(_prox_mcp_kernel, v, params, block)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def prox_scad(v, params, *, block: int = 1024):
+    """SCAD prox. params = [step, λ, γ], valid for γ > 1 + step."""
+    return _elementwise_call(_prox_scad_kernel, v, params, block)

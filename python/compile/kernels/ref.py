@@ -1,0 +1,74 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite compares every kernel against
+(the paper's working-set scoring math, written in the most obvious way).
+"""
+
+import jax.numpy as jnp
+
+
+def xt_r_ref(xt, r, inv_n):
+    """Full-gradient scoring pass: grad = Xᵀ r / n, with xt = Xᵀ [p, n]."""
+    return (xt @ r) * inv_n
+
+
+def score_l1_ref(xt, r, beta, lam, inv_n):
+    """Fused L1 working-set score (paper Eq. 2 for g = λ|·|).
+
+    Returns (grad, score) where
+      score_j = max(|grad_j| - λ, 0)        if β_j == 0
+              = |grad_j + λ sign(β_j)|      otherwise.
+    """
+    grad = xt_r_ref(xt, r, inv_n)
+    at_zero = jnp.maximum(jnp.abs(grad) - lam, 0.0)
+    away = jnp.abs(grad + lam * jnp.sign(beta))
+    return grad, jnp.where(beta == 0.0, at_zero, away)
+
+
+def score_mcp_ref(xt, r, beta, lam, gamma, inv_n):
+    """Fused MCP working-set score (paper Eq. 2).
+
+    score_j = max(|grad_j| - λ, 0)                 if β_j == 0
+            = |grad_j + λ sign(β_j) - β_j/γ|       if 0 < |β_j| < γλ
+            = |grad_j|                             otherwise.
+    """
+    grad = xt_r_ref(xt, r, inv_n)
+    at_zero = jnp.maximum(jnp.abs(grad) - lam, 0.0)
+    mid = jnp.abs(grad + lam * jnp.sign(beta) - beta / gamma)
+    flat = jnp.abs(grad)
+    score = jnp.where(
+        beta == 0.0, at_zero, jnp.where(jnp.abs(beta) < gamma * lam, mid, flat)
+    )
+    return grad, score
+
+
+def soft_threshold_ref(v, t):
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0)
+
+
+def prox_l1_ref(v, step, lam):
+    """Elementwise prox of step·λ|·|."""
+    return soft_threshold_ref(v, step * lam)
+
+
+def prox_mcp_ref(v, step, lam, gamma):
+    """Elementwise firm threshold: prox of step·MCP_{λ,γ} (γ > step)."""
+    a = jnp.abs(v)
+    tau = step * lam
+    firm = jnp.sign(v) * (a - tau) / (1.0 - step / gamma)
+    return jnp.where(a <= tau, 0.0, jnp.where(a <= gamma * lam, firm, v))
+
+
+def prox_scad_ref(v, step, lam, gamma):
+    """Elementwise prox of step·SCAD_{λ,γ} (γ > 1 + step)."""
+    a = jnp.abs(v)
+    soft = soft_threshold_ref(v, step * lam)
+    mid = ((gamma - 1.0) * v - jnp.sign(v) * step * gamma * lam) / (gamma - 1.0 - step)
+    return jnp.where(
+        a <= lam * (1.0 + step), soft, jnp.where(a <= gamma * lam, mid, v)
+    )
+
+
+def quad_objective_ref(r, inv_n):
+    """Quadratic datafit value from the residual: ‖r‖²/(2n)."""
+    return 0.5 * inv_n * jnp.sum(r * r)

@@ -1,0 +1,103 @@
+"""L2: the JAX compute graph the Rust coordinator calls through PJRT.
+
+The paper's algorithmic hot spot at L3 is the working-set scoring pass —
+the only O(n·p) operation per outer iteration. This module expresses it
+as jitted JAX functions wrapping the L1 Pallas kernels:
+
+- ``grad_quadratic``  — ∇f(β) = Xᵀr/n  (artifact ``xt_r``; consumed by the
+  Rust ``PjrtGradEngine``),
+- ``score_l1_pass`` / ``score_mcp_pass`` — fused gradient + Eq.-(2) score
+  (artifacts ``score_l1`` / ``score_mcp``),
+- ``prox_bank`` — batched proximal operators for full-vector steps.
+
+Shapes are static at lowering time (one artifact per (n, p)); the 1/n
+normalisation is baked in. Python never runs at solve time — aot.py lowers
+these once to HLO text.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matvec, prox, score
+
+# Kernel schedules (EXPERIMENTS.md §Perf / DESIGN.md §Hardware-Adaptation):
+#   - "tpu": (128, 512) tiles — MXU-aligned, 262 KiB/step VMEM, the layout
+#     a real TPU deployment streams HBM→VMEM with. This is what the kernel
+#     is *written for*.
+#   - "cpu": whole-array blocks. interpret=True executes each grid step as
+#     a data-copying loop iteration costing ~3 ms on this CPU, so the AOT
+#     artifacts (which run on CPU PJRT) minimise grid steps: measured
+#     106 ms → 0.43 ms for the 2000×1000 scoring pass (245×; §Perf).
+#     The kernel body is identical — only BlockSpec parameters change.
+SCHEDULES = {
+    "tpu": (128, 512),
+    "cpu": (1 << 30, 1 << 30),  # _pick_block clamps to the full dimension
+}
+
+
+def _blocks(schedule: str):
+    try:
+        return SCHEDULES[schedule]
+    except KeyError:
+        raise ValueError(f"unknown schedule {schedule!r}") from None
+
+
+def grad_quadratic(xt, r, *, schedule: str = "cpu"):
+    """∇f(β) = Xᵀ r / n for the quadratic datafit.
+
+    xt: f32[p, n] (Xᵀ — bit-identical to Rust's column-major X), r: f32[n]
+    (the residual Xβ − y maintained by the Rust solver). Returns f32[p].
+    """
+    bp, bn = _blocks(schedule)
+    inv_n = 1.0 / xt.shape[1]
+    return matvec.xt_r(xt, r, block_p=bp, block_n=bn) * inv_n
+
+
+def score_l1_pass(xt, r, beta, lam, *, schedule: str = "cpu"):
+    """Fused (grad, score^∂) for g = λ|·| (paper Eq. 2). lam: f32[1]."""
+    bp, bn = _blocks(schedule)
+    inv_n = 1.0 / xt.shape[1]
+    # fold 1/n into the residual so the fused kernel's epilogue sees the
+    # correctly-scaled gradient (one multiply on the [n] vector instead of
+    # [p] postprocessing)
+    grad, sc = score.score_l1(xt, r * inv_n, beta, lam, block_p=bp, block_n=bn)
+    return grad, sc
+
+
+def score_mcp_pass(xt, r, beta, params, *, schedule: str = "cpu"):
+    """Fused (grad, score^∂) for the MCP. params = [λ, γ] (f32[2])."""
+    bp, bn = _blocks(schedule)
+    inv_n = 1.0 / xt.shape[1]
+    grad, sc = score.score_mcp(xt, r * inv_n, beta, params, block_p=bp, block_n=bn)
+    return grad, sc
+
+
+def prox_bank(kind: str):
+    """Batched prox for full-vector steps: kind ∈ {l1, mcp, scad}."""
+    return {"l1": prox.prox_l1, "mcp": prox.prox_mcp, "scad": prox.prox_scad}[kind]
+
+
+def objective_quadratic_l1(xt, r, beta, lam):
+    """Φ(β) = ‖r‖²/2n + λ‖β‖₁ — used by the extrapolation-guard artifact."""
+    inv_n = 1.0 / xt.shape[1]
+    return 0.5 * inv_n * jnp.sum(r * r) + lam[0] * jnp.sum(jnp.abs(beta))
+
+
+def lower_entry(op: str, n: int, p: int):
+    """Return (fn, example_args) for an artifact entry point."""
+    f32 = jnp.float32
+    xt = jax.ShapeDtypeStruct((p, n), f32)
+    r = jax.ShapeDtypeStruct((n,), f32)
+    beta = jax.ShapeDtypeStruct((p,), f32)
+    if op == "xt_r":
+        return (lambda xt, r: (grad_quadratic(xt, r),)), (xt, r)
+    if op == "score_l1":
+        lam = jax.ShapeDtypeStruct((1,), f32)
+        return (lambda *a: tuple(score_l1_pass(*a))), (xt, r, beta, lam)
+    if op == "score_mcp":
+        params = jax.ShapeDtypeStruct((2,), f32)
+        return (lambda *a: tuple(score_mcp_pass(*a))), (xt, r, beta, params)
+    if op == "obj_l1":
+        lam = jax.ShapeDtypeStruct((1,), f32)
+        return (lambda *a: (objective_quadratic_l1(*a),)), (xt, r, beta, lam)
+    raise ValueError(f"unknown artifact op {op!r}")

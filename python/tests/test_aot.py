@@ -1,0 +1,56 @@
+"""AOT path: lowering produces loadable HLO text with the right interface."""
+
+import pathlib
+import tempfile
+
+import pytest
+
+from compile import aot, model
+
+
+class TestLowering:
+    def test_hlo_text_header_and_shapes(self):
+        text = aot.lower_artifact("xt_r", 16, 24)
+        assert text.startswith("HloModule")
+        # parameter and result shapes must appear in the text
+        assert "f32[24,16]" in text, "Xᵀ parameter shape"
+        assert "f32[16]" in text, "residual parameter shape"
+        assert "f32[24]" in text, "gradient output shape"
+
+    def test_fused_score_has_two_outputs(self):
+        text = aot.lower_artifact("score_l1", 16, 24)
+        assert text.startswith("HloModule")
+        # tuple of two f32[p] outputs
+        assert text.count("f32[24]") >= 2
+
+    def test_lowering_is_deterministic(self):
+        a = aot.lower_artifact("obj_l1", 8, 8)
+        b = aot.lower_artifact("obj_l1", 8, 8)
+        assert a == b
+
+
+class TestBuild:
+    def test_build_writes_and_skips_existing(self):
+        with tempfile.TemporaryDirectory() as d:
+            out = pathlib.Path(d)
+            written = aot.build(out, shapes=[(8, 16)], ops=["xt_r"])
+            assert len(written) == 1
+            assert written[0].name == "xt_r_n8_p16.hlo.txt"
+            assert written[0].read_text().startswith("HloModule")
+            # second run: up to date, nothing written
+            assert aot.build(out, shapes=[(8, 16)], ops=["xt_r"]) == []
+            # force rebuilds
+            assert len(aot.build(out, shapes=[(8, 16)], ops=["xt_r"], force=True)) == 1
+
+    def test_default_matrix_covers_runtime_test_shape(self):
+        # the Rust integration test loads (200, 400); it must be in SHAPES
+        assert (200, 400) in aot.SHAPES
+        assert "xt_r" in aot.OPS
+
+
+class TestEntryConsistency:
+    @pytest.mark.parametrize("op", aot.OPS)
+    def test_every_default_op_lowers(self, op):
+        fn, args = model.lower_entry(op, 8, 16)
+        assert callable(fn)
+        assert len(args) >= 2

@@ -1,0 +1,120 @@
+"""Property-based sweeps (hypothesis): kernel-vs-oracle equality over
+randomised shapes, block sizes and value distributions — the broad net
+behind the hand-picked cases in test_kernels.py."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matvec, prox, ref, score
+
+SET = settings(max_examples=25, deadline=None)
+
+
+def np_floats(shape, seed, scale):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype=jnp.float32)
+
+
+@st.composite
+def matvec_case(draw):
+    p = draw(st.integers(min_value=1, max_value=96))
+    n = draw(st.integers(min_value=1, max_value=96))
+    bp = draw(st.integers(min_value=1, max_value=128))
+    bn = draw(st.integers(min_value=1, max_value=128))
+    seed = draw(st.integers(min_value=0, max_value=2**31))
+    scale = draw(st.sampled_from([1e-3, 1.0, 1e3]))
+    return p, n, bp, bn, seed, scale
+
+
+@SET
+@given(matvec_case())
+def test_xt_r_matches_ref_for_any_shape(case):
+    p, n, bp, bn, seed, scale = case
+    xt = np_floats((p, n), seed, scale)
+    r = np_floats((n,), seed + 1, scale)
+    got = matvec.xt_r(xt, r, block_p=bp, block_n=bn)
+    want = ref.xt_r_ref(xt, r, 1.0)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4 * scale * scale * n)
+
+
+@SET
+@given(matvec_case(), st.floats(min_value=1e-4, max_value=10.0))
+def test_score_l1_matches_ref_for_any_shape(case, lam):
+    p, n, bp, bn, seed, _ = case
+    xt = np_floats((p, n), seed, 1.0)
+    r = np_floats((n,), seed + 1, 1.0)
+    beta = np_floats((p,), seed + 2, 1.0)
+    # sparsify beta so both score branches are exercised
+    beta = jnp.where(jnp.abs(beta) < 0.5, 0.0, beta)
+    g, s = score.score_l1(
+        xt, r, beta, jnp.array([lam], jnp.float32), block_p=bp, block_n=bn
+    )
+    ge, se = ref.score_l1_ref(xt, r, beta, lam, 1.0)
+    np.testing.assert_allclose(g, ge, rtol=5e-4, atol=5e-4 * n)
+    np.testing.assert_allclose(s, se, rtol=5e-4, atol=5e-4 * n)
+
+
+@SET
+@given(
+    st.integers(min_value=1, max_value=300),
+    st.integers(min_value=1, max_value=64),
+    st.floats(min_value=0.05, max_value=2.0),
+    st.floats(min_value=0.01, max_value=3.0),
+    st.integers(min_value=0, max_value=2**31),
+)
+def test_prox_l1_matches_ref(p, block, step, lam, seed):
+    v = np_floats((p,), seed, 3.0)
+    got = prox.prox_l1(v, jnp.array([step, lam], jnp.float32), block=block)
+    want = ref.prox_l1_ref(v, step, lam)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@SET
+@given(
+    st.integers(min_value=1, max_value=300),
+    st.floats(min_value=0.05, max_value=1.5),
+    st.floats(min_value=0.01, max_value=2.0),
+    st.floats(min_value=2.0, max_value=10.0),
+    st.integers(min_value=0, max_value=2**31),
+)
+def test_prox_mcp_matches_ref_in_semiconvex_regime(p, step, lam, gamma, seed):
+    # gamma > step guaranteed by the strategy bounds
+    v = np_floats((p,), seed, 3.0 * gamma * lam)
+    got = prox.prox_mcp(v, jnp.array([step, lam, gamma], jnp.float32))
+    want = ref.prox_mcp_ref(v, step, lam, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@SET
+@given(
+    st.integers(min_value=1, max_value=300),
+    st.floats(min_value=0.05, max_value=1.5),
+    st.floats(min_value=0.01, max_value=2.0),
+    st.floats(min_value=3.0, max_value=10.0),
+    st.integers(min_value=0, max_value=2**31),
+)
+def test_prox_scad_matches_ref_in_semiconvex_regime(p, step, lam, gamma, seed):
+    v = np_floats((p,), seed, 3.0 * gamma * lam)
+    got = prox.prox_scad(v, jnp.array([step, lam, gamma], jnp.float32))
+    want = ref.prox_scad_ref(v, step, lam, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@SET
+@given(
+    st.integers(min_value=1, max_value=200),
+    st.floats(min_value=0.05, max_value=1.5),
+    st.floats(min_value=0.01, max_value=2.0),
+    st.integers(min_value=0, max_value=2**31),
+)
+def test_prox_l1_is_nonexpansive(p, step, lam, seed):
+    # ‖prox(u) − prox(v)‖ ≤ ‖u − v‖ for convex penalties
+    u = np_floats((p,), seed, 2.0)
+    v = np_floats((p,), seed + 1, 2.0)
+    params = jnp.array([step, lam], jnp.float32)
+    pu = prox.prox_l1(u, params)
+    pv = prox.prox_l1(v, params)
+    lhs = float(jnp.linalg.norm(pu - pv))
+    rhs = float(jnp.linalg.norm(u - v))
+    assert lhs <= rhs + 1e-5 * (1.0 + rhs)

@@ -1,0 +1,165 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal of the compile path — the Rust solver
+trusts these kernels through the AOT artifacts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import matvec, prox, ref, score
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype=jnp.float32)
+
+
+def sparse_beta(p, seed, frac=0.3):
+    rng = np.random.default_rng(seed)
+    mask = rng.random(p) < frac
+    return jnp.asarray(rng.normal(size=p) * mask, dtype=jnp.float32)
+
+
+SHAPES = [(8, 16), (24, 40), (128, 256), (200, 144), (96, 200), (1, 8), (7, 13)]
+
+
+class TestXtR:
+    @pytest.mark.parametrize("p,n", SHAPES)
+    def test_matches_ref(self, p, n):
+        xt = rand((p, n), 1)
+        r = rand((n,), 2)
+        got = matvec.xt_r(xt, r, block_p=64, block_n=64)
+        want = ref.xt_r_ref(xt, r, 1.0)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("bp,bn", [(1, 1), (8, 16), (128, 512)])
+    def test_block_size_invariance(self, bp, bn):
+        xt = rand((32, 48), 3)
+        r = rand((48,), 4)
+        got = matvec.xt_r(xt, r, block_p=bp, block_n=bn)
+        want = ref.xt_r_ref(xt, r, 1.0)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_zero_residual_gives_zero_gradient(self):
+        xt = rand((16, 24), 5)
+        out = matvec.xt_r(xt, jnp.zeros(24, jnp.float32))
+        assert float(jnp.max(jnp.abs(out))) == 0.0
+
+    def test_large_values_stay_finite(self):
+        xt = rand((16, 24), 6, scale=1e4)
+        r = rand((24,), 7, scale=1e4)
+        out = matvec.xt_r(xt, r)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
+class TestScoreL1:
+    @pytest.mark.parametrize("p,n", SHAPES)
+    def test_matches_ref(self, p, n):
+        xt = rand((p, n), 11)
+        r = rand((n,), 12)
+        beta = sparse_beta(p, 13)
+        lam = jnp.array([0.37], jnp.float32)
+        g, s = score.score_l1(xt, r, beta, lam, block_p=64, block_n=64)
+        ge, se = ref.score_l1_ref(xt, r, beta, 0.37, 1.0)
+        np.testing.assert_allclose(g, ge, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(s, se, rtol=RTOL, atol=ATOL)
+
+    def test_score_zero_at_kkt_point(self):
+        # craft grad = -lam*sign(beta) exactly on the support
+        p, n = 4, 4
+        xt = jnp.eye(p, n, dtype=jnp.float32)
+        beta = jnp.array([1.0, -2.0, 0.0, 0.0], jnp.float32)
+        lam = 0.5
+        r = jnp.array([-lam, lam, 0.1, -0.2], jnp.float32)  # grad = r here
+        _, s = score.score_l1(xt, r, beta, jnp.array([lam], jnp.float32))
+        np.testing.assert_allclose(s, 0.0, atol=1e-6)
+
+    def test_all_zero_beta_uses_at_zero_branch(self):
+        xt = rand((16, 8), 14)
+        r = rand((8,), 15)
+        lam = jnp.array([10.0], jnp.float32)  # lam > every |grad|
+        _, s = score.score_l1(xt, r, jnp.zeros(16, jnp.float32), lam)
+        np.testing.assert_allclose(s, 0.0, atol=1e-6)
+
+
+class TestScoreMcp:
+    @pytest.mark.parametrize("p,n", SHAPES)
+    def test_matches_ref(self, p, n):
+        xt = rand((p, n), 21)
+        r = rand((n,), 22)
+        beta = sparse_beta(p, 23) * 3.0  # hit all three regions
+        params = jnp.array([0.4, 3.0], jnp.float32)
+        g, s = score.score_mcp(xt, r, beta, params, block_p=64, block_n=64)
+        ge, se = ref.score_mcp_ref(xt, r, beta, 0.4, 3.0, 1.0)
+        np.testing.assert_allclose(g, ge, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(s, se, rtol=RTOL, atol=ATOL)
+
+    def test_flat_region_score_is_grad_magnitude(self):
+        p, n = 4, 4
+        xt = jnp.eye(p, n, dtype=jnp.float32)
+        r = jnp.array([0.3, -0.4, 0.0, 0.0], jnp.float32)
+        beta = jnp.array([100.0, -50.0, 0.0, 0.0], jnp.float32)  # far past γλ
+        params = jnp.array([0.5, 3.0], jnp.float32)
+        _, s = score.score_mcp(xt, r, beta, params)
+        np.testing.assert_allclose(s[:2], jnp.abs(r[:2]), rtol=1e-6)
+
+
+class TestProx:
+    @pytest.mark.parametrize("p", [8, 100, 1024, 37])
+    def test_l1_matches_ref(self, p):
+        v = rand((p,), 31, scale=2.0)
+        params = jnp.array([0.7, 0.3], jnp.float32)
+        got = prox.prox_l1(v, params, block=64)
+        want = ref.prox_l1_ref(v, 0.7, 0.3)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("p", [8, 100, 1024, 37])
+    def test_mcp_matches_ref(self, p):
+        v = rand((p,), 32, scale=3.0)
+        params = jnp.array([0.9, 0.5, 3.0], jnp.float32)
+        got = prox.prox_mcp(v, params, block=64)
+        want = ref.prox_mcp_ref(v, 0.9, 0.5, 3.0)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("p", [8, 100, 1024, 37])
+    def test_scad_matches_ref(self, p):
+        v = rand((p,), 33, scale=4.0)
+        params = jnp.array([0.8, 0.5, 3.7], jnp.float32)
+        got = prox.prox_scad(v, params, block=64)
+        want = ref.prox_scad_ref(v, 0.8, 0.5, 3.7)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_prox_mcp_dead_zone_and_identity(self):
+        params = jnp.array([1.0, 0.5, 3.0], jnp.float32)
+        v = jnp.array([0.3, -0.3, 5.0, -5.0], jnp.float32)
+        out = prox.prox_mcp(v, params)
+        assert out[0] == 0.0 and out[1] == 0.0
+        assert out[2] == 5.0 and out[3] == -5.0
+
+    def test_prox_l1_shrinks_toward_zero(self):
+        params = jnp.array([1.0, 0.5], jnp.float32)
+        v = rand((64,), 34)
+        out = prox.prox_l1(v, params)
+        assert bool(jnp.all(jnp.abs(out) <= jnp.abs(v) + 1e-7))
+
+
+class TestHelpers:
+    def test_pick_block_divides(self):
+        for dim in [1, 7, 128, 200, 1000]:
+            for pref in [1, 8, 128, 512]:
+                b = matvec._pick_block(dim, pref)
+                assert dim % b == 0
+                assert 1 <= b <= max(pref, 1)
+
+    def test_vmem_budget_for_paper_shapes(self):
+        # production schedule must fit in ~16 MiB VMEM
+        assert matvec.vmem_bytes(128, 512) < 16 * 2**20
+
+    def test_mxu_utilization_perfect_for_aligned_tiles(self):
+        assert matvec.mxu_utilization_estimate(2000, 1000, 128, 512) == 1.0
+        assert matvec.mxu_utilization_estimate(200, 100, 8, 100) < 0.1

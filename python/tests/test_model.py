@@ -1,0 +1,90 @@
+"""L2 correctness: the jitted model functions and artifact entry points."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype=jnp.float32)
+
+
+class TestGradQuadratic:
+    def test_normalisation_baked_in(self):
+        xt = rand((40, 24), 0)
+        r = rand((24,), 1)
+        got = model.grad_quadratic(xt, r)
+        want = ref.xt_r_ref(xt, r, 1.0 / 24)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+    def test_matches_dense_lstsq_gradient(self):
+        # gradient of ||y - Xb||^2/2n at b: X^T(Xb - y)/n
+        rng = np.random.default_rng(2)
+        n, p = 30, 12
+        x = rng.normal(size=(n, p)).astype(np.float32)
+        y = rng.normal(size=n).astype(np.float32)
+        b = rng.normal(size=p).astype(np.float32)
+        resid = x @ b - y
+        want = x.T @ resid / n
+        got = model.grad_quadratic(jnp.asarray(x.T), jnp.asarray(resid))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+class TestScorePasses:
+    def test_score_l1_pass_scales_gradient(self):
+        xt = rand((16, 32), 3)
+        r = rand((32,), 4)
+        beta = jnp.zeros(16, jnp.float32)
+        lam = jnp.array([0.05], jnp.float32)
+        grad, score = model.score_l1_pass(xt, r, beta, lam)
+        want_grad, want_score = ref.score_l1_ref(xt, r, beta, 0.05, 1.0 / 32)
+        np.testing.assert_allclose(grad, want_grad, rtol=2e-5, atol=2e-6)
+        np.testing.assert_allclose(score, want_score, rtol=2e-5, atol=2e-6)
+
+    def test_score_mcp_pass(self):
+        xt = rand((16, 32), 5)
+        r = rand((32,), 6)
+        beta = rand((16,), 7, scale=2.0)
+        params = jnp.array([0.1, 3.0], jnp.float32)
+        grad, score = model.score_mcp_pass(xt, r, beta, params)
+        want_grad, want_score = ref.score_mcp_ref(xt, r, beta, 0.1, 3.0, 1.0 / 32)
+        np.testing.assert_allclose(grad, want_grad, rtol=2e-5, atol=2e-6)
+        np.testing.assert_allclose(score, want_score, rtol=2e-5, atol=2e-6)
+
+
+class TestObjective:
+    def test_objective_quadratic_l1(self):
+        xt = rand((8, 16), 8)
+        r = rand((16,), 9)
+        beta = rand((8,), 10)
+        lam = jnp.array([0.3], jnp.float32)
+        got = model.objective_quadratic_l1(xt, r, beta, lam)
+        want = ref.quad_objective_ref(r, 1.0 / 16) + 0.3 * jnp.sum(jnp.abs(beta))
+        np.testing.assert_allclose(got, want, rtol=2e-6)
+
+
+class TestLowerEntry:
+    @pytest.mark.parametrize("op", ["xt_r", "score_l1", "score_mcp", "obj_l1"])
+    def test_entry_points_jit_and_return_tuples(self, op):
+        n, p = 16, 24
+        fn, args = model.lower_entry(op, n, p)
+        concrete = [rand(a.shape, i) for i, a in enumerate(args)]
+        out = jax.jit(fn)(*concrete)
+        assert isinstance(out, tuple)
+        for o in out:
+            assert bool(jnp.all(jnp.isfinite(o)))
+
+    def test_unknown_op_raises(self):
+        with pytest.raises(ValueError):
+            model.lower_entry("nope", 8, 8)
+
+    def test_prox_bank_dispatch(self):
+        for kind in ["l1", "mcp", "scad"]:
+            assert callable(model.prox_bank(kind))
+        with pytest.raises(KeyError):
+            model.prox_bank("l2")

@@ -1,0 +1,33 @@
+//! Bench: regenerate paper Figure 2 (Lasso duality gap vs time).
+//!
+//! `cargo bench --bench fig2_lasso [-- --full]` — smoke scale by default;
+//! `--full` runs the EXPERIMENTS.md configuration. Prints the
+//! time-to-target summary per (dataset, λ) and writes CSV/JSON under
+//! `results/fig2/`. (criterion is unavailable offline; the benchopt-style
+//! harness in `skglm::bench` does the timing.)
+
+use skglm::bench::figures::{run_fig2, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Smoke };
+    eprintln!("[fig2_lasso] scale = {scale:?}");
+    let t0 = std::time::Instant::now();
+    match run_fig2(scale) {
+        Ok(paths) => {
+            for p in &paths {
+                println!("wrote {}", p.display());
+            }
+            // print the summaries inline for the bench log
+            for p in paths.iter().filter(|p| p.extension().map(|e| e == "md").unwrap_or(false)) {
+                println!("\n== {} ==", p.display());
+                println!("{}", std::fs::read_to_string(p).unwrap_or_default());
+            }
+            println!("[fig2_lasso] done in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("fig2 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

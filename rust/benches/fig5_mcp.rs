@@ -1,0 +1,26 @@
+//! Bench: regenerate paper Figure 5 (MCP objective + stationarity vs time).
+//!
+//! `cargo bench --bench fig5_mcp [-- --full]` — smoke scale by default.
+//! Writes CSV/JSON series under `results/` (criterion is unavailable
+//! offline; timing comes from the benchopt-style harness).
+
+use skglm::bench::figures::{run_fig5, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Smoke };
+    eprintln!("[fig5_mcp] scale = {scale:?}");
+    let t0 = std::time::Instant::now();
+    match run_fig5(scale) {
+        Ok(paths) => {
+            for p in &paths {
+                println!("wrote {}", p.display());
+            }
+            println!("[fig5_mcp] done in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("fig5_mcp failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

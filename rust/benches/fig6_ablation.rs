@@ -1,0 +1,26 @@
+//! Bench: regenerate paper Figure 6 (working-set x Anderson ablation).
+//!
+//! `cargo bench --bench fig6_ablation [-- --full]` — smoke scale by default.
+//! Writes CSV/JSON series under `results/` (criterion is unavailable
+//! offline; timing comes from the benchopt-style harness).
+
+use skglm::bench::figures::{run_fig6, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Smoke };
+    eprintln!("[fig6_ablation] scale = {scale:?}");
+    let t0 = std::time::Instant::now();
+    match run_fig6(scale) {
+        Ok(paths) => {
+            for p in &paths {
+                println!("wrote {}", p.display());
+            }
+            println!("[fig6_ablation] done in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("fig6_ablation failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate paper Figure 9 (dual SVM suboptimality vs time).
+//!
+//! `cargo bench --bench fig9_svm [-- --full]` — smoke scale by default.
+//! Writes CSV/JSON series under `results/` (criterion is unavailable
+//! offline; timing comes from the benchopt-style harness).
+
+use skglm::bench::figures::{run_fig9, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Smoke };
+    eprintln!("[fig9_svm] scale = {scale:?}");
+    let t0 = std::time::Instant::now();
+    match run_fig9(scale) {
+        Ok(paths) => {
+            for p in &paths {
+                println!("wrote {}", p.display());
+            }
+            println!("[fig9_svm] done in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("fig9_svm failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

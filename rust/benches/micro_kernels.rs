@@ -1,0 +1,170 @@
+//! Micro-benchmarks of the solver hot paths (criterion replacement:
+//! warmup + repeated timing with median-of-reps reporting).
+//!
+//! Covers: dense/sparse CD epochs, the full-gradient scoring pass
+//! (native vs PJRT artifact when available), Anderson extrapolation,
+//! prox throughput. These are the §Perf numbers in EXPERIMENTS.md.
+
+use skglm::data::{correlated, paper_dataset_small, sparse, CorrelatedSpec, SparseSpec};
+use skglm::datafit::{Datafit, Quadratic};
+use skglm::linalg::Design;
+use skglm::penalty::{Mcp, L1};
+use skglm::solver::anderson::Anderson;
+use skglm::solver::cd::cd_epoch;
+use std::hint::black_box;
+use std::time::Instant;
+
+/// median-of-`reps` wall time of `f`, after `warmup` runs.
+fn time_it<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[reps / 2]
+}
+
+fn row(name: &str, secs: f64, work_items: f64) {
+    println!(
+        "{name:<42} {:>10.3} µs   {:>10.1} Mitem/s",
+        secs * 1e6,
+        work_items / secs / 1e6
+    );
+}
+
+fn bench_cd_epoch_dense() {
+    let ds = correlated(CorrelatedSpec { n: 1000, p: 2000, rho: 0.5, nnz: 100, snr: 8.0 }, 0);
+    let mut f = Quadratic::new();
+    f.init(&ds.design, &ds.y);
+    let pen = L1::new(skglm::estimators::linear::quadratic_lambda_max(&ds.design, &ds.y) / 20.0);
+    let ws: Vec<usize> = (0..ds.p()).collect();
+    let mut beta = vec![0.0; ds.p()];
+    let mut state = f.init_state(&ds.design, &ds.y, &beta);
+    let secs = time_it(3, 9, || {
+        black_box(cd_epoch(&ds.design, &ds.y, &f, &pen, &mut beta, &mut state, &ws));
+    });
+    // one epoch touches n*p entries (dense)
+    row("cd_epoch dense 1000x2000 (full sweep)", secs, (ds.n() * ds.p()) as f64);
+}
+
+fn bench_cd_epoch_sparse() {
+    let ds = paper_dataset_small("news20", 0).unwrap();
+    let nnz = match &ds.design {
+        Design::Sparse(s) => s.nnz(),
+        _ => unreachable!(),
+    };
+    let mut f = Quadratic::new();
+    f.init(&ds.design, &ds.y);
+    let pen = L1::new(skglm::estimators::linear::quadratic_lambda_max(&ds.design, &ds.y) / 20.0);
+    let ws: Vec<usize> = (0..ds.p()).collect();
+    let mut beta = vec![0.0; ds.p()];
+    let mut state = f.init_state(&ds.design, &ds.y, &beta);
+    let secs = time_it(3, 9, || {
+        black_box(cd_epoch(&ds.design, &ds.y, &f, &pen, &mut beta, &mut state, &ws));
+    });
+    row(
+        &format!("cd_epoch sparse news20-small ({nnz} nnz)"),
+        secs,
+        nnz as f64,
+    );
+}
+
+fn bench_cd_epoch_mcp() {
+    let ds = correlated(CorrelatedSpec { n: 1000, p: 2000, rho: 0.5, nnz: 100, snr: 8.0 }, 1);
+    let mut design = ds.design.clone();
+    design.normalize_cols((1000.0f64).sqrt());
+    let mut f = Quadratic::new();
+    f.init(&design, &ds.y);
+    let pen = Mcp::new(
+        skglm::estimators::linear::quadratic_lambda_max(&design, &ds.y) / 20.0,
+        3.0,
+    );
+    let ws: Vec<usize> = (0..ds.p()).collect();
+    let mut beta = vec![0.0; ds.p()];
+    let mut state = f.init_state(&design, &ds.y, &beta);
+    let secs = time_it(3, 9, || {
+        black_box(cd_epoch(&design, &ds.y, &f, &pen, &mut beta, &mut state, &ws));
+    });
+    row("cd_epoch dense MCP 1000x2000", secs, (ds.n() * ds.p()) as f64);
+}
+
+fn bench_scoring_pass(n: usize, p: usize) {
+    let ds = correlated(
+        CorrelatedSpec { n, p, rho: 0.5, nnz: p / 20, snr: 8.0 },
+        2,
+    );
+    let mut f = Quadratic::new();
+    f.init(&ds.design, &ds.y);
+    let beta = vec![0.0; p];
+    let state = f.init_state(&ds.design, &ds.y, &beta);
+    let mut grad = vec![0.0; p];
+    let secs = time_it(3, 9, || {
+        f.grad_full(&ds.design, &ds.y, &state, &beta, &mut grad);
+        black_box(&grad);
+    });
+    row(&format!("scoring pass native {n}x{p}"), secs, (n * p) as f64);
+
+    // PJRT path when the artifact exists
+    if skglm::runtime::PjrtRuntime::available("xt_r", n, p) {
+        if let Ok(rt) = skglm::runtime::PjrtRuntime::cpu() {
+            if let Ok(mut engine) = skglm::runtime::PjrtGradEngine::for_design(&rt, &ds.design) {
+                use skglm::solver::GradEngine;
+                let secs = time_it(3, 9, || {
+                    assert!(engine.grad_full(&ds.design, &ds.y, &state, &beta, &mut grad));
+                    black_box(&grad);
+                });
+                row(&format!("scoring pass pjrt   {n}x{p}"), secs, (n * p) as f64);
+            }
+        }
+    } else {
+        println!("scoring pass pjrt   {n}x{p}: skipped (no artifact — run `make artifacts`)");
+    }
+}
+
+fn bench_anderson() {
+    for dim in [100usize, 2000] {
+        let mut an = Anderson::new(5);
+        let base: Vec<f64> = (0..dim).map(|i| (i as f64).sin()).collect();
+        for k in 0..6 {
+            let x: Vec<f64> = base.iter().map(|v| v * 0.9f64.powi(k)).collect();
+            an.push(&x);
+        }
+        let secs = time_it(3, 15, || {
+            black_box(an.extrapolate());
+        });
+        row(&format!("anderson extrapolate M=5 dim={dim}"), secs, dim as f64 * 25.0);
+    }
+}
+
+fn bench_sparse_matvec_t() {
+    let ds = sparse(
+        "bench",
+        SparseSpec { n: 5000, p: 50_000, density: 1e-3, support_frac: 0.001, snr: 5.0, binary: false },
+        3,
+    );
+    let nnz = ds.design.stored_entries();
+    let r: Vec<f64> = (0..ds.n()).map(|i| (i as f64).cos()).collect();
+    let mut out = vec![0.0; ds.p()];
+    let secs = time_it(2, 7, || {
+        ds.design.matvec_t(&r, &mut out);
+        black_box(&out);
+    });
+    row(&format!("sparse matvec_t 5000x50000 ({nnz} nnz)"), secs, nnz as f64);
+}
+
+fn main() {
+    println!("micro_kernels — median of reps, warmup excluded\n");
+    bench_cd_epoch_dense();
+    bench_cd_epoch_sparse();
+    bench_cd_epoch_mcp();
+    bench_scoring_pass(200, 400);
+    bench_scoring_pass(1000, 2000);
+    bench_anderson();
+    bench_sparse_matvec_t();
+}

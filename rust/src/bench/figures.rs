@@ -1,0 +1,687 @@
+//! Experiment runners: one function per paper figure/table. Each runs the
+//! workload through the black-box harness and writes CSV/JSON/markdown
+//! into `results/<figure>/`. `Scale::Smoke` shrinks datasets and budgets
+//! for tests and quick runs; `Scale::Full` is the EXPERIMENTS.md
+//! configuration.
+
+use crate::bench::harness::{black_box_curve, budget_schedule, SolverCurve};
+use crate::bench::report::{summary_table, write_curves, write_markdown};
+use crate::data::meeg::{localize, simulate, MeegSpec};
+use crate::data::{correlated, paper_dataset, paper_dataset_small, CorrelatedSpec, Dataset};
+use crate::datafit::{Datafit, Quadratic};
+use crate::estimators::linear::quadratic_lambda_max;
+use crate::estimators::multitask::{block_lambda_max, flatten_tasks, unflatten_coef};
+use crate::estimators::path::{geometric_grid, lasso_path, lq_path, mcp_path, scad_path};
+use crate::estimators::{BlockMcpRegressor, MultiTaskLasso};
+use crate::penalty::{L1L2, Mcp, Penalty, L1};
+use crate::solver::baselines::{
+    admm::solve_admm, celer::solve_celer, fireworks::solve_fireworks,
+    irls::solve_irls_mcp, lbfgs::solve_lbfgs_svm, pgd::solve_pgd,
+    strong_rules::solve_strong_rules_enet,
+};
+use crate::solver::{solve, SolverOpts};
+use crate::util::table::{sci, Table};
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Experiment scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// tiny datasets + short budgets (tests, CI)
+    Smoke,
+    /// the EXPERIMENTS.md configuration
+    Full,
+}
+
+impl Scale {
+    fn max_budget(&self, full: usize) -> usize {
+        match self {
+            Scale::Smoke => (full / 8).max(4),
+            Scale::Full => full,
+        }
+    }
+
+    fn dataset(&self, name: &str, seed: u64) -> Option<Dataset> {
+        match self {
+            Scale::Smoke => paper_dataset_small(name, seed),
+            Scale::Full => paper_dataset(name, seed),
+        }
+    }
+}
+
+fn residual(design: &crate::linalg::Design, y: &[f64], beta: &[f64]) -> Vec<f64> {
+    let mut xb = vec![0.0; design.nrows()];
+    design.matvec(beta, &mut xb);
+    y.iter().zip(xb.iter()).map(|(a, b)| a - b).collect()
+}
+
+/// Normalised Lasso gap: gap / P(0) so curves start near 1 (the paper's
+/// "normalized duality gap" y-axis).
+fn norm_lasso_gap(ds: &Dataset, beta: &[f64], lam: f64) -> f64 {
+    let r = residual(&ds.design, &ds.y, beta);
+    let p0 = crate::linalg::sq_nrm2(&ds.y) / (2.0 * ds.n() as f64);
+    crate::metrics::lasso_gap(&ds.design, &ds.y, beta, &r, lam) / p0.max(1e-300)
+}
+
+fn norm_enet_gap(ds: &Dataset, beta: &[f64], lam: f64, rho: f64) -> f64 {
+    let r = residual(&ds.design, &ds.y, beta);
+    let p0 = crate::linalg::sq_nrm2(&ds.y) / (2.0 * ds.n() as f64);
+    crate::metrics::enet_gap(&ds.design, &ds.y, beta, &r, lam, rho) / p0.max(1e-300)
+}
+
+// ------------------------------------------------------------- Figure 1 --
+
+/// Regularization paths of L1 / MCP / SCAD / ℓ0.5 on the correlated
+/// design: support recovery, estimation error, prediction error per λ.
+pub fn run_fig1(scale: Scale) -> Result<Vec<PathBuf>> {
+    let spec = match scale {
+        Scale::Smoke => CorrelatedSpec::figure1(0.06),
+        Scale::Full => CorrelatedSpec::figure1(1.0),
+    };
+    let ds = correlated(spec, 42);
+    // paper normalises columns for the non-convex penalties; use one
+    // normalised design throughout so β* stays comparable (‖X_j‖=√n keeps
+    // the planted coefficients' scale)
+    let mut design = ds.design.clone();
+    design.normalize_cols((ds.n() as f64).sqrt());
+    let n_points = match scale {
+        Scale::Smoke => 8,
+        Scale::Full => 30,
+    };
+    let ratios = geometric_grid(1e-3, n_points);
+    let opts = SolverOpts::default().with_tol(1e-7);
+
+    let paths = vec![
+        lasso_path(&design, &ds.y, Some(&ds.beta_true), &ratios, &opts),
+        mcp_path(&design, &ds.y, Some(&ds.beta_true), &ratios, 3.0, &opts),
+        scad_path(&design, &ds.y, Some(&ds.beta_true), &ratios, 3.7, &opts),
+        lq_path(&design, &ds.y, Some(&ds.beta_true), &ratios, 0.5, &opts),
+    ];
+
+    let mut t = Table::new(&[
+        "penalty", "lambda_ratio", "support", "tp", "fp", "estimation_err", "prediction_mse",
+    ]);
+    for path in &paths {
+        for pt in &path.points {
+            let rec = pt.recovery.as_ref().unwrap();
+            t.row(vec![
+                path.penalty_name.clone(),
+                format!("{:.4e}", pt.lambda_ratio),
+                pt.support_size.to_string(),
+                rec.true_positives.to_string(),
+                rec.false_positives.to_string(),
+                sci(pt.estimation_error.unwrap()),
+                sci(pt.prediction_mse.unwrap()),
+            ]);
+        }
+    }
+    let dir = crate::bench::report::results_dir().join("fig1");
+    crate::bench::report::ensure_dir(&dir)?;
+    std::fs::write(dir.join("paths.csv"), t.csv())?;
+
+    // headline summary: best-λ agreement + exact recovery per penalty
+    let mut s = Table::new(&[
+        "penalty",
+        "exact_recovery_anywhere",
+        "best_est_lambda_ratio",
+        "best_pred_lambda_ratio",
+        "best_estimation_err",
+        "path_time_s",
+    ]);
+    for path in &paths {
+        let be = path.best_estimation().unwrap();
+        let bp = path.best_prediction().unwrap();
+        s.row(vec![
+            path.penalty_name.clone(),
+            path.any_exact_recovery().to_string(),
+            format!("{:.4e}", be.lambda_ratio),
+            format!("{:.4e}", bp.lambda_ratio),
+            sci(be.estimation_error.unwrap()),
+            format!("{:.2}", path.total_time),
+        ]);
+    }
+    let md = write_markdown("fig1", "summary", &s)?;
+    Ok(vec![dir.join("paths.csv"), md])
+}
+
+// ------------------------------------------------------------- Figure 2 --
+
+/// Lasso: normalised duality gap vs time; solvers sklearn-CD / celer-like /
+/// blitz-fireworks-like / skglm, multiple datasets × λ ratios.
+pub fn run_fig2(scale: Scale) -> Result<Vec<PathBuf>> {
+    let datasets: &[&str] = match scale {
+        Scale::Smoke => &["rcv1"],
+        Scale::Full => &["rcv1", "news20", "finance", "url"],
+    };
+    let lam_divs: &[f64] = match scale {
+        Scale::Smoke => &[10.0, 100.0],
+        Scale::Full => &[10.0, 100.0, 1000.0],
+    };
+    let budgets = budget_schedule(scale.max_budget(60), 1.7);
+    let mut outputs = Vec::new();
+
+    for name in datasets {
+        let ds = scale.dataset(name, 7).expect("known dataset");
+        let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+        for &div in lam_divs {
+            let lam = lam_max / div;
+            let pen = L1::new(lam);
+            let curves = vec![
+                black_box_curve("sklearn_cd", &budgets, |b| {
+                    let mut f = Quadratic::new();
+                    let mut opts = SolverOpts::default().with_tol(1e-12).without_ws().without_acceleration();
+                    opts.max_outer = 1;
+                    opts.max_epochs = b * 10;
+                    opts.inner_tol_ratio = 0.0;
+                    let r = solve_full_cd_budget(&ds, &pen, &mut f, &opts);
+                    (r.objective, norm_lasso_gap(&ds, &r.beta, lam))
+                }),
+                black_box_curve("celer_like", &budgets, |b| {
+                    let mut opts = SolverOpts::default().with_tol(1e-14);
+                    opts.max_outer = b;
+                    let r = solve_celer(&ds.design, &ds.y, lam, &opts);
+                    (r.objective, norm_lasso_gap(&ds, &r.beta, lam))
+                }),
+                black_box_curve("blitz_fireworks_like", &budgets, |b| {
+                    let mut f = Quadratic::new();
+                    let mut opts = SolverOpts::default().with_tol(1e-14);
+                    opts.max_outer = b;
+                    let r = solve_fireworks(&ds.design, &ds.y, &mut f, &pen, &opts);
+                    (r.objective, norm_lasso_gap(&ds, &r.beta, lam))
+                }),
+                black_box_curve("skglm", &budgets, |b| {
+                    let mut f = Quadratic::new();
+                    let mut opts = SolverOpts::default().with_tol(1e-14);
+                    opts.max_outer = b;
+                    let r = solve(&ds.design, &ds.y, &mut f, &pen, &opts, None, None);
+                    (r.objective, norm_lasso_gap(&ds, &r.beta, lam))
+                }),
+            ];
+            outputs.push(write_curves("fig2", name, &format!("lmax_over_{div}"), &curves)?);
+            let summary = summary_table(&curves, &[1e-4, 1e-6, 1e-9]);
+            outputs.push(write_markdown(
+                "fig2",
+                &format!("{name}_lmax_over_{div}_summary"),
+                &summary,
+            )?);
+        }
+    }
+    Ok(outputs)
+}
+
+/// full-CD run where `opts` already encodes the budget.
+fn solve_full_cd_budget(
+    ds: &Dataset,
+    pen: &impl Penalty,
+    f: &mut Quadratic,
+    opts: &SolverOpts,
+) -> crate::solver::FitResult {
+    solve(&ds.design, &ds.y, f, pen, opts, None, None)
+}
+
+// ------------------------------------------------------------- Figure 3 --
+
+/// Elastic net (ρ=0.5): sklearn-CD vs vanilla CD vs FISTA vs skglm.
+pub fn run_fig3(scale: Scale) -> Result<Vec<PathBuf>> {
+    let datasets: &[&str] = match scale {
+        Scale::Smoke => &["rcv1"],
+        Scale::Full => &["rcv1", "news20", "finance"],
+    };
+    let lam_divs: &[f64] = match scale {
+        Scale::Smoke => &[10.0, 1000.0],
+        Scale::Full => &[10.0, 100.0, 1000.0],
+    };
+    let rho = 0.5;
+    let budgets = budget_schedule(scale.max_budget(60), 1.7);
+    let mut outputs = Vec::new();
+
+    for name in datasets {
+        let ds = scale.dataset(name, 11).expect("known dataset");
+        let lam_max = quadratic_lambda_max(&ds.design, &ds.y) / rho;
+        for &div in lam_divs {
+            let lam = lam_max / div;
+            let pen = L1L2::new(lam, rho);
+            let curves = vec![
+                black_box_curve("sklearn_cd", &budgets, |b| {
+                    let mut f = Quadratic::new();
+                    let mut opts = SolverOpts::default().with_tol(1e-12).without_ws().without_acceleration();
+                    opts.max_outer = 1;
+                    opts.max_epochs = b * 10;
+                    opts.inner_tol_ratio = 0.0;
+                    let r = solve(&ds.design, &ds.y, &mut f, &pen, &opts, None, None);
+                    (r.objective, norm_enet_gap(&ds, &r.beta, lam, rho))
+                }),
+                black_box_curve("fista", &budgets, |b| {
+                    let mut f = Quadratic::new();
+                    let r = solve_pgd(&ds.design, &ds.y, &mut f, &pen, b * 10, 1e-14, true);
+                    (r.objective, norm_enet_gap(&ds, &r.beta, lam, rho))
+                }),
+                black_box_curve("skglm", &budgets, |b| {
+                    let mut f = Quadratic::new();
+                    let mut opts = SolverOpts::default().with_tol(1e-14);
+                    opts.max_outer = b;
+                    let r = solve(&ds.design, &ds.y, &mut f, &pen, &opts, None, None);
+                    (r.objective, norm_enet_gap(&ds, &r.beta, lam, rho))
+                }),
+            ];
+            outputs.push(write_curves("fig3", name, &format!("lmax_over_{div}"), &curves)?);
+        }
+    }
+    Ok(outputs)
+}
+
+// ------------------------------------------------------------- Figure 4 --
+
+/// M/EEG source localisation: ℓ2,1 vs block-MCP (and block-SCAD) on the
+/// simulated right-auditory dataset; reports hemisphere hits, support
+/// sizes, position errors.
+pub fn run_fig4(scale: Scale) -> Result<Vec<PathBuf>> {
+    let spec = match scale {
+        Scale::Smoke => MeegSpec { n_sensors: 40, n_sources: 150, n_times: 10, ..Default::default() },
+        Scale::Full => MeegSpec::default(),
+    };
+    let pb = simulate(spec, 42);
+    let design = crate::linalg::Design::Dense(pb.gain.clone());
+    let y = flatten_tasks(&pb.measurements);
+    let t_count = pb.measurements.ncols();
+    let lam_max = block_lambda_max(&design, &y, t_count);
+
+    let mut table = Table::new(&[
+        "penalty", "lambda_ratio", "active_rows", "hemispheres", "max_position_err", "converged",
+    ]);
+    // block-MCP/SCAD semi-convexity: γ > 1/L_j = n_sensors for the
+    // unit-norm leadfield
+    let gamma = 2.5 * pb.gain.nrows() as f64;
+    for &ratio in &[0.5, 0.3, 0.2] {
+        let lam = lam_max * ratio;
+        let l21 = MultiTaskLasso::new(lam).with_tol(1e-6).fit(&design, &y, t_count);
+        let mcp = BlockMcpRegressor::new(lam, gamma).with_tol(1e-6).fit(&design, &y, t_count);
+        let scad = crate::estimators::multitask::BlockScadRegressor::new(lam, gamma)
+            .fit(&design, &y, t_count);
+        for (name, fit) in [("l21", &l21), ("block_mcp", &mcp), ("block_scad", &scad)] {
+            let loc = localize(&pb, &unflatten_coef(&fit.w, t_count), 1e-6);
+            table.row(vec![
+                name.to_string(),
+                format!("{ratio}"),
+                loc.recovered.len().to_string(),
+                loc.hemispheres_hit.to_string(),
+                if loc.max_position_error.is_finite() {
+                    format!("{:.4}", loc.max_position_error)
+                } else {
+                    "missed".to_string()
+                },
+                fit.converged.to_string(),
+            ]);
+        }
+    }
+    let md = write_markdown("fig4", "localization", &table)?;
+    Ok(vec![md])
+}
+
+// ------------------------------------------------------------- Figure 5 --
+
+/// MCP regression: objective and stationarity vs time; picasso-like full
+/// CD, reweighted-ℓ1 and skglm on the dense simulated dataset + rcv1.
+pub fn run_fig5(scale: Scale) -> Result<Vec<PathBuf>> {
+    let mut workloads: Vec<(String, Dataset)> = Vec::new();
+    let dense_spec = match scale {
+        Scale::Smoke => CorrelatedSpec { n: 120, p: 400, rho: 0.5, nnz: 20, snr: 8.0 },
+        Scale::Full => CorrelatedSpec { n: 1000, p: 5000, rho: 0.5, nnz: 100, snr: 8.0 },
+    };
+    workloads.push(("simulated_dense".into(), correlated(dense_spec, 3)));
+    workloads.push(("rcv1".into(), scale.dataset("rcv1", 3).unwrap()));
+
+    let lam_divs: &[f64] = match scale {
+        Scale::Smoke => &[10.0],
+        Scale::Full => &[10.0, 100.0],
+    };
+    let gamma = 3.0;
+    let budgets = budget_schedule(scale.max_budget(50), 1.7);
+    let mut outputs = Vec::new();
+
+    for (name, ds) in &workloads {
+        // paper: columns normalised to √n for MCP
+        let mut design = ds.design.clone();
+        design.normalize_cols((ds.n() as f64).sqrt());
+        let norm_ds = Dataset {
+            name: ds.name.clone(),
+            design,
+            y: ds.y.clone(),
+            beta_true: ds.beta_true.clone(),
+        };
+        let lam_max = quadratic_lambda_max(&norm_ds.design, &norm_ds.y);
+        for &div in lam_divs {
+            let lam = lam_max / div;
+            let pen = Mcp::new(lam, gamma);
+            let stat = |beta: &[f64]| {
+                let mut f = Quadratic::new();
+                f.init(&norm_ds.design, &norm_ds.y);
+                let state = f.init_state(&norm_ds.design, &norm_ds.y, beta);
+                crate::metrics::stationarity(&norm_ds.design, &norm_ds.y, &f, &pen, beta, &state)
+            };
+            let curves = vec![
+                black_box_curve("picasso_like_cd", &budgets, |b| {
+                    let mut f = Quadratic::new();
+                    let mut opts = SolverOpts::default().with_tol(1e-12).without_ws().without_acceleration();
+                    opts.max_outer = 1;
+                    opts.max_epochs = b * 10;
+                    opts.inner_tol_ratio = 0.0;
+                    let r = solve(&norm_ds.design, &norm_ds.y, &mut f, &pen, &opts, None, None);
+                    (r.objective, stat(&r.beta))
+                }),
+                black_box_curve("reweighted_l1", &budgets, |b| {
+                    let mut opts = SolverOpts::default().with_tol(1e-10);
+                    opts.max_outer = 20;
+                    let rounds = (b / 5).max(1);
+                    let r = solve_irls_mcp(&norm_ds.design, &norm_ds.y, lam, gamma, rounds, &opts);
+                    (r.objective, stat(&r.beta))
+                }),
+                black_box_curve("skglm", &budgets, |b| {
+                    let mut f = Quadratic::new();
+                    let mut opts = SolverOpts::default().with_tol(1e-14);
+                    opts.max_outer = b;
+                    let r = solve(&norm_ds.design, &norm_ds.y, &mut f, &pen, &opts, None, None);
+                    (r.objective, stat(&r.beta))
+                }),
+            ];
+            outputs.push(write_curves("fig5", name, &format!("lmax_over_{div}"), &curves)?);
+        }
+    }
+    Ok(outputs)
+}
+
+// ------------------------------------------------------------- Figure 6 --
+
+/// Ablation: working sets × Anderson acceleration (4 combos) on the Lasso.
+pub fn run_fig6(scale: Scale) -> Result<Vec<PathBuf>> {
+    let datasets: &[&str] = match scale {
+        Scale::Smoke => &["rcv1"],
+        Scale::Full => &["rcv1", "news20", "finance"],
+    };
+    let lam_divs: &[f64] = match scale {
+        Scale::Smoke => &[10.0, 100.0],
+        Scale::Full => &[10.0, 100.0, 1000.0],
+    };
+    let budgets = budget_schedule(scale.max_budget(60), 1.7);
+    let mut outputs = Vec::new();
+
+    for name in datasets {
+        let ds = scale.dataset(name, 13).expect("known dataset");
+        let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+        for &div in lam_divs {
+            let lam = lam_max / div;
+            let pen = L1::new(lam);
+            let combos: [(&str, bool, usize); 4] = [
+                ("no_ws_no_accel", false, 0),
+                ("no_ws_accel", false, 5),
+                ("ws_no_accel", true, 0),
+                ("ws_accel", true, 5),
+            ];
+            let curves: Vec<SolverCurve> = combos
+                .iter()
+                .map(|&(label, use_ws, m)| {
+                    black_box_curve(label, &budgets, |b| {
+                        let mut f = Quadratic::new();
+                        let mut opts = SolverOpts::default().with_tol(1e-14);
+                        opts.use_ws = use_ws;
+                        opts.anderson_m = m;
+                        if use_ws {
+                            opts.max_outer = b;
+                        } else {
+                            opts.max_outer = 1;
+                            opts.max_epochs = b * 10;
+                            opts.inner_tol_ratio = 0.0;
+                        }
+                        let r = solve(&ds.design, &ds.y, &mut f, &pen, &opts, None, None);
+                        (r.objective, norm_lasso_gap(&ds, &r.beta, lam))
+                    })
+                })
+                .collect();
+            outputs.push(write_curves("fig6", name, &format!("lmax_over_{div}"), &curves)?);
+        }
+    }
+    Ok(outputs)
+}
+
+// ------------------------------------------------------------- Figure 7 --
+
+/// ADMM vs skglm on a synthetic elastic net.
+pub fn run_fig7(scale: Scale) -> Result<Vec<PathBuf>> {
+    let spec = match scale {
+        Scale::Smoke => CorrelatedSpec { n: 100, p: 80, rho: 0.4, nnz: 8, snr: 10.0 },
+        Scale::Full => CorrelatedSpec { n: 1000, p: 600, rho: 0.5, nnz: 40, snr: 10.0 },
+    };
+    let ds = correlated(spec, 17);
+    let rho = 0.5;
+    let lam = quadratic_lambda_max(&ds.design, &ds.y) / rho / 50.0;
+    let pen = L1L2::new(lam, rho);
+    let budgets = budget_schedule(scale.max_budget(80), 1.7);
+
+    let curves = vec![
+        black_box_curve("admm", &budgets, |b| {
+            let r = solve_admm(&ds.design, &ds.y, lam, rho, 1.0, b * 10, 1e-14);
+            (r.objective, norm_enet_gap(&ds, &r.beta, lam, rho))
+        }),
+        black_box_curve("skglm", &budgets, |b| {
+            let mut f = Quadratic::new();
+            let mut opts = SolverOpts::default().with_tol(1e-14);
+            opts.max_outer = b;
+            let r = solve(&ds.design, &ds.y, &mut f, &pen, &opts, None, None);
+            (r.objective, norm_enet_gap(&ds, &r.beta, lam, rho))
+        }),
+    ];
+    Ok(vec![write_curves("fig7", "synthetic", "lmax_over_50", &curves)?])
+}
+
+// ------------------------------------------------------------- Figure 8 --
+
+/// glmnet-like strong-rules path solver vs skglm on a synthetic enet.
+pub fn run_fig8(scale: Scale) -> Result<Vec<PathBuf>> {
+    let spec = match scale {
+        Scale::Smoke => CorrelatedSpec { n: 100, p: 150, rho: 0.5, nnz: 10, snr: 10.0 },
+        Scale::Full => CorrelatedSpec { n: 800, p: 2000, rho: 0.5, nnz: 60, snr: 10.0 },
+    };
+    let ds = correlated(spec, 19);
+    let rho = 0.5;
+    let lam = quadratic_lambda_max(&ds.design, &ds.y) / rho / 100.0;
+    let budgets = budget_schedule(scale.max_budget(60), 1.7);
+
+    let curves = vec![
+        black_box_curve("glmnet_like_path", &budgets, |b| {
+            // budget controls the per-step epoch allowance; glmnet must
+            // traverse the whole path to reach the target λ
+            let r = solve_strong_rules_enet(&ds.design, &ds.y, lam, rho, 15, b * 5, 1e-12);
+            (r.objective, norm_enet_gap(&ds, &r.beta, lam, rho))
+        }),
+        black_box_curve("skglm", &budgets, |b| {
+            let mut f = Quadratic::new();
+            let mut opts = SolverOpts::default().with_tol(1e-14);
+            opts.max_outer = b;
+            let pen = L1L2::new(lam, rho);
+            let r = solve(&ds.design, &ds.y, &mut f, &pen, &opts, None, None);
+            (r.objective, norm_enet_gap(&ds, &r.beta, lam, rho))
+        }),
+    ];
+    Ok(vec![write_curves("fig8", "synthetic", "lmax_over_100", &curves)?])
+}
+
+// ------------------------------------------------------------- Figure 9 --
+
+/// Dual SVM: suboptimality vs time for C ∈ {0.1, 1, 10}; CD, skglm (dual)
+/// and L-BFGS on the squared-hinge primal (each solver's suboptimality is
+/// measured against its own problem's reference optimum — see DESIGN.md).
+pub fn run_fig9(scale: Scale) -> Result<Vec<PathBuf>> {
+    let ds = scale.dataset("real-sim", 23).expect("real-sim stand-in");
+    let x = match &ds.design {
+        crate::linalg::Design::Sparse(s) => s.clone(),
+        crate::linalg::Design::Dense(_) => unreachable!("real-sim stand-in is sparse"),
+    };
+    let dual_design = crate::datafit::QuadraticSvc::dual_design_sparse(&x, &ds.y);
+    let budgets = budget_schedule(scale.max_budget(50), 1.7);
+    let cs: &[f64] = match scale {
+        Scale::Smoke => &[1.0],
+        Scale::Full => &[0.1, 1.0, 10.0],
+    };
+    let mut outputs = Vec::new();
+
+    for &c in cs {
+        let pen = crate::penalty::BoxIndicator::new(c);
+        // reference dual optimum (high precision)
+        let mut f_ref = crate::datafit::QuadraticSvc::new();
+        let mut ref_opts = SolverOpts::default().with_tol(1e-11);
+        ref_opts.max_outer = 400;
+        let reference = solve(&dual_design, &ds.y, &mut f_ref, &pen, &ref_opts, None, None);
+        let dual_opt = reference.objective;
+        // reference primal optimum for the L-BFGS curve
+        let lb_ref = solve_lbfgs_svm(&ds.design, &ds.y, c, 10, 3000, 1e-12);
+        let primal_opt = lb_ref.objective;
+
+        let curves = vec![
+            black_box_curve("cd_dual", &budgets, |b| {
+                let mut f = crate::datafit::QuadraticSvc::new();
+                let mut opts = SolverOpts::default().with_tol(1e-14).without_ws().without_acceleration();
+                opts.max_outer = 1;
+                opts.max_epochs = b * 10;
+                opts.inner_tol_ratio = 0.0;
+                let r = solve(&dual_design, &ds.y, &mut f, &pen, &opts, None, None);
+                (r.objective, (r.objective - dual_opt).max(1e-16))
+            }),
+            black_box_curve("skglm_dual", &budgets, |b| {
+                let mut f = crate::datafit::QuadraticSvc::new();
+                let mut opts = SolverOpts::default().with_tol(1e-14);
+                opts.max_outer = b;
+                let r = solve(&dual_design, &ds.y, &mut f, &pen, &opts, None, None);
+                (r.objective, (r.objective - dual_opt).max(1e-16))
+            }),
+            black_box_curve("lbfgs_primal_sqhinge", &budgets, |b| {
+                let r = solve_lbfgs_svm(&ds.design, &ds.y, c, 10, b * 5, 1e-16);
+                (r.objective, (r.objective - primal_opt).max(1e-16))
+            }),
+        ];
+        outputs.push(write_curves("fig9", "real-sim", &format!("C_{c}"), &curves)?);
+    }
+    Ok(outputs)
+}
+
+// ------------------------------------------------------------ Figure 10 --
+
+/// benchopt-artefact illustration: repeated black-box runs of the same
+/// solver produce non-monotone time curves (run-to-run timing noise).
+pub fn run_fig10(scale: Scale) -> Result<Vec<PathBuf>> {
+    let ds = scale.dataset("rcv1", 29).expect("rcv1 stand-in");
+    let lam = quadratic_lambda_max(&ds.design, &ds.y) / 100.0;
+    let pen = L1::new(lam);
+    let budgets = budget_schedule(scale.max_budget(40), 1.5);
+    let reps = match scale {
+        Scale::Smoke => 2,
+        Scale::Full => 5,
+    };
+    let curves: Vec<SolverCurve> = (0..reps)
+        .map(|rep| {
+            let mut c = black_box_curve("sklearn_cd", &budgets, |b| {
+                let mut f = Quadratic::new();
+                let mut opts = SolverOpts::default().with_tol(1e-12).without_ws().without_acceleration();
+                opts.max_outer = 1;
+                opts.max_epochs = b * 5;
+                opts.inner_tol_ratio = 0.0;
+                let r = solve(&ds.design, &ds.y, &mut f, &pen, &opts, None, None);
+                (r.objective, norm_lasso_gap(&ds, &r.beta, lam))
+            });
+            c.solver = format!("sklearn_cd_rep{rep}");
+            c
+        })
+        .collect();
+    Ok(vec![write_curves("fig10", "rcv1", "lmax_over_100", &curves)?])
+}
+
+// --------------------------------------------------------------- Tables --
+
+/// Table 1: capability matrix (self-checked for our row).
+pub fn run_table1() -> Result<Vec<PathBuf>> {
+    let t = crate::bench::capability::capability_table();
+    Ok(vec![write_markdown("table1", "capabilities", &t)?])
+}
+
+/// Table 2: characteristics of the synthetic stand-ins (paper values in
+/// comments in DESIGN.md §Substitutions).
+pub fn run_table2(scale: Scale) -> Result<Vec<PathBuf>> {
+    let mut t = Table::new(&["dataset", "n_samples", "n_features", "density"]);
+    for name in ["rcv1", "news20", "finance", "kdda", "url", "real-sim"] {
+        if let Some(ds) = scale.dataset(name, 0) {
+            let density = match &ds.design {
+                crate::linalg::Design::Sparse(s) => s.density(),
+                crate::linalg::Design::Dense(_) => 1.0,
+            };
+            t.row(vec![
+                name.to_string(),
+                ds.n().to_string(),
+                ds.p().to_string(),
+                format!("{density:.2e}"),
+            ]);
+        }
+    }
+    Ok(vec![write_markdown("table2", "datasets", &t)?])
+}
+
+/// Run a named experiment.
+pub fn run_experiment(name: &str, scale: Scale) -> Result<Vec<PathBuf>> {
+    match name {
+        "fig1" => run_fig1(scale),
+        "fig2" => run_fig2(scale),
+        "fig3" => run_fig3(scale),
+        "fig4" => run_fig4(scale),
+        "fig5" => run_fig5(scale),
+        "fig6" => run_fig6(scale),
+        "fig7" => run_fig7(scale),
+        "fig8" => run_fig8(scale),
+        "fig9" => run_fig9(scale),
+        "fig10" => run_fig10(scale),
+        "table1" => run_table1(),
+        "table2" => run_table2(scale),
+        "all" => {
+            let mut out = Vec::new();
+            for exp in ALL_EXPERIMENTS {
+                eprintln!("[exp] running {exp}");
+                out.extend(run_experiment(exp, scale)?);
+            }
+            Ok(out)
+        }
+        other => anyhow::bail!("unknown experiment {other:?}; try one of {ALL_EXPERIMENTS:?}"),
+    }
+}
+
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table1",
+    "table2",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn with_tmp_results<F: FnOnce()>(f: F) {
+        let tmp = std::env::temp_dir().join(format!("skglm_fig_{}", std::process::id()));
+        std::env::set_var("SKGLM_RESULTS", &tmp);
+        f();
+        std::env::remove_var("SKGLM_RESULTS");
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn smoke_fig7_and_table2() {
+        with_tmp_results(|| {
+            let out = run_fig7(Scale::Smoke).unwrap();
+            assert!(!out.is_empty());
+            for p in &out {
+                assert!(p.exists(), "{}", p.display());
+            }
+            let out = run_table2(Scale::Smoke).unwrap();
+            assert!(out[0].exists());
+        });
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(run_experiment("fig99", Scale::Smoke).is_err());
+    }
+}

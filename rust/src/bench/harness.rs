@@ -1,0 +1,180 @@
+//! benchopt-style black-box benchmarking (Moreau et al. 2022) — the
+//! paper's §3 methodology: each solver is re-run from scratch with an
+//! increasing iteration budget; every run records (budget, wall time,
+//! objective, metric). Curves are non-monotone in time by construction
+//! (Figure 10), which [`SolverCurve::monotone_envelope`] optionally cleans
+//! for reporting.
+
+use crate::util::json::Json;
+
+/// One (budget → outcome) sample.
+#[derive(Clone, Debug)]
+pub struct BenchPoint {
+    pub budget: usize,
+    /// wall-clock seconds of this run
+    pub time: f64,
+    pub objective: f64,
+    /// duality gap / stationarity / suboptimality — figure-dependent
+    pub metric: f64,
+}
+
+/// A solver's convergence curve on one problem.
+#[derive(Clone, Debug)]
+pub struct SolverCurve {
+    pub solver: String,
+    pub points: Vec<BenchPoint>,
+}
+
+impl SolverCurve {
+    /// Time needed to reach `target` metric (first point at or below);
+    /// None if never reached.
+    pub fn time_to(&self, target: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .filter(|p| p.metric <= target)
+            .map(|p| p.time)
+            .fold(None, |acc, t| Some(acc.map_or(t, |a: f64| a.min(t))))
+    }
+
+    /// Best metric achieved within a time budget.
+    pub fn best_within(&self, time_budget: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .filter(|p| p.time <= time_budget)
+            .map(|p| p.metric)
+            .fold(None, |acc, m| Some(acc.map_or(m, |a: f64| a.min(m))))
+    }
+
+    /// Sorted-by-time, cumulative-min metric (cleaned curve for tables).
+    pub fn monotone_envelope(&self) -> Vec<(f64, f64)> {
+        let mut pts: Vec<(f64, f64)> =
+            self.points.iter().map(|p| (p.time, p.metric)).collect();
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut best = f64::INFINITY;
+        pts.iter()
+            .map(|&(t, m)| {
+                best = best.min(m);
+                (t, best)
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj().with("solver", self.solver.as_str()).with(
+            "points",
+            Json::Arr(
+                self.points
+                    .iter()
+                    .map(|p| {
+                        Json::obj()
+                            .with("budget", p.budget)
+                            .with("time", p.time)
+                            .with("objective", p.objective)
+                            .with("metric", p.metric)
+                    })
+                    .collect(),
+            ),
+        )
+    }
+}
+
+/// Geometric budget schedule 1, 2, 3, 5, 8, 13, … up to `max` (benchopt's
+/// default growth), always ending exactly at `max`.
+pub fn budget_schedule(max: usize, growth: f64) -> Vec<usize> {
+    assert!(growth > 1.0);
+    let mut out = Vec::new();
+    let mut b = 1.0f64;
+    loop {
+        let v = b.round() as usize;
+        if out.last() != Some(&v) {
+            out.push(v);
+        }
+        if v >= max {
+            break;
+        }
+        b *= growth;
+        if b.round() as usize > max {
+            out.push(max);
+            break;
+        }
+    }
+    out.dedup();
+    out
+}
+
+/// Run a solver as a black box over the budget schedule. `run(budget)`
+/// must solve *from scratch* and return `(objective, metric)`.
+pub fn black_box_curve<F>(solver: &str, budgets: &[usize], mut run: F) -> SolverCurve
+where
+    F: FnMut(usize) -> (f64, f64),
+{
+    let mut points = Vec::with_capacity(budgets.len());
+    for &budget in budgets {
+        let t0 = std::time::Instant::now();
+        let (objective, metric) = run(budget);
+        points.push(BenchPoint {
+            budget,
+            time: t0.elapsed().as_secs_f64(),
+            objective,
+            metric,
+        });
+    }
+    SolverCurve { solver: solver.to_string(), points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_increasing_and_caps_at_max() {
+        let s = budget_schedule(100, 1.6);
+        assert_eq!(s[0], 1);
+        assert_eq!(*s.last().unwrap(), 100);
+        for w in s.windows(2) {
+            assert!(w[1] > w[0], "{s:?}");
+        }
+    }
+
+    #[test]
+    fn curve_records_all_budgets() {
+        let budgets = [1, 2, 4];
+        let c = black_box_curve("toy", &budgets, |b| (1.0 / b as f64, 1.0 / b as f64));
+        assert_eq!(c.points.len(), 3);
+        assert_eq!(c.points[2].budget, 4);
+        assert!(c.points[2].metric < c.points[0].metric);
+    }
+
+    #[test]
+    fn time_to_and_best_within() {
+        let c = SolverCurve {
+            solver: "s".into(),
+            points: vec![
+                BenchPoint { budget: 1, time: 0.1, objective: 1.0, metric: 0.5 },
+                BenchPoint { budget: 2, time: 0.3, objective: 0.5, metric: 0.01 },
+            ],
+        };
+        assert_eq!(c.time_to(0.1), Some(0.3));
+        assert_eq!(c.time_to(1e-9), None);
+        assert_eq!(c.best_within(0.2), Some(0.5));
+        assert_eq!(c.best_within(0.05), None);
+    }
+
+    #[test]
+    fn envelope_is_monotone() {
+        let c = SolverCurve {
+            solver: "s".into(),
+            points: vec![
+                BenchPoint { budget: 2, time: 0.3, objective: 0.0, metric: 0.2 },
+                BenchPoint { budget: 1, time: 0.1, objective: 0.0, metric: 0.5 },
+                BenchPoint { budget: 3, time: 0.2, objective: 0.0, metric: 0.9 }, // noisy rerun
+            ],
+        };
+        let env = c.monotone_envelope();
+        assert_eq!(env.len(), 3);
+        for w in env.windows(2) {
+            assert!(w[1].1 <= w[0].1);
+            assert!(w[1].0 >= w[0].0);
+        }
+    }
+}

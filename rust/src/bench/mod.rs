@@ -1,0 +1,10 @@
+//! Benchmark layer: the benchopt-like black-box harness (§3 "How to do a
+//! fair comparison between solvers?"), experiment runners for every paper
+//! figure/table, and result emitters.
+
+pub mod capability;
+pub mod figures;
+pub mod harness;
+pub mod report;
+
+pub use harness::{black_box_curve, budget_schedule, BenchPoint, SolverCurve};

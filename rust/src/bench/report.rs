@@ -1,0 +1,118 @@
+//! Result emitters: write experiment outputs (markdown tables, CSV series,
+//! JSON curves) under `results/`.
+
+use crate::bench::harness::SolverCurve;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Output directory (override with `SKGLM_RESULTS`).
+pub fn results_dir() -> PathBuf {
+    std::env::var_os("SKGLM_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("results"))
+}
+
+pub fn ensure_dir(p: &Path) -> Result<()> {
+    std::fs::create_dir_all(p).with_context(|| format!("creating {}", p.display()))
+}
+
+/// Persist a family of solver curves for one (figure, dataset, λ) cell:
+/// a CSV with one row per point plus a JSON file with the raw curves.
+pub fn write_curves(
+    figure: &str,
+    dataset: &str,
+    lambda_label: &str,
+    curves: &[SolverCurve],
+) -> Result<PathBuf> {
+    let dir = results_dir().join(figure);
+    ensure_dir(&dir)?;
+    let stem = format!("{dataset}_{}", lambda_label.replace('/', "_"));
+
+    let mut t = Table::new(&["solver", "budget", "time_s", "objective", "metric"]);
+    for c in curves {
+        for p in &c.points {
+            t.row(vec![
+                c.solver.clone(),
+                p.budget.to_string(),
+                format!("{:.6}", p.time),
+                format!("{:.12e}", p.objective),
+                format!("{:.6e}", p.metric),
+            ]);
+        }
+    }
+    let csv_path = dir.join(format!("{stem}.csv"));
+    std::fs::write(&csv_path, t.csv())?;
+
+    let json = Json::Arr(curves.iter().map(|c| c.to_json()).collect());
+    std::fs::write(dir.join(format!("{stem}.json")), json.render())?;
+    Ok(csv_path)
+}
+
+/// Write a standalone markdown table.
+pub fn write_markdown(figure: &str, name: &str, table: &Table) -> Result<PathBuf> {
+    let dir = results_dir().join(figure);
+    ensure_dir(&dir)?;
+    let path = dir.join(format!("{name}.md"));
+    std::fs::write(&path, table.markdown())?;
+    Ok(path)
+}
+
+/// Summarise curves the way the paper's figures read: time to reach each
+/// decade of the metric, per solver.
+pub fn summary_table(curves: &[SolverCurve], targets: &[f64]) -> Table {
+    let mut header: Vec<String> = vec!["solver".to_string()];
+    header.extend(targets.iter().map(|t| format!("t@{t:.0e}")));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&header_refs);
+    for c in curves {
+        let mut row = vec![c.solver.clone()];
+        for &tgt in targets {
+            row.push(match c.time_to(tgt) {
+                Some(t) => format!("{t:.3}s"),
+                None => "—".to_string(),
+            });
+        }
+        table.row(row);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::harness::BenchPoint;
+
+    fn curve() -> SolverCurve {
+        SolverCurve {
+            solver: "skglm".into(),
+            points: vec![
+                BenchPoint { budget: 1, time: 0.01, objective: 1.0, metric: 1e-2 },
+                BenchPoint { budget: 4, time: 0.05, objective: 0.9, metric: 1e-6 },
+            ],
+        }
+    }
+
+    #[test]
+    fn writes_csv_and_json() {
+        let tmp = std::env::temp_dir().join(format!("skglm_report_{}", std::process::id()));
+        std::env::set_var("SKGLM_RESULTS", &tmp);
+        let path = write_curves("figX", "toy", "lmax/10", &[curve()]).unwrap();
+        assert!(path.exists());
+        let csv = std::fs::read_to_string(&path).unwrap();
+        assert!(csv.lines().count() == 3, "{csv}");
+        let json_path = path.with_extension("json");
+        assert!(json_path.exists());
+        std::env::remove_var("SKGLM_RESULTS");
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn summary_table_reports_times_and_misses() {
+        let t = summary_table(&[curve()], &[1e-4, 1e-9]);
+        let md = t.markdown();
+        assert!(md.contains("skglm"));
+        assert!(md.contains("—"), "unreached target shown as dash: {md}");
+    }
+}

@@ -1,0 +1,142 @@
+//! Dependency-free CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `skglm <subcommand> [positional...] [--flag value] [--switch]`.
+//! Flags may be `--key value` or `--key=value`; unknown flags are
+//! collected and reported by [`Args::finish`] so typos fail loudly.
+
+use std::collections::{HashMap, HashSet};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: HashSet<String>,
+    consumed: HashSet<String>,
+}
+
+impl Args {
+    /// Parse from raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.switches.insert(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// First positional (the subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn get(&mut self, key: &str) -> Option<String> {
+        self.consumed.insert(key.to_string());
+        self.flags.get(key).cloned()
+    }
+
+    pub fn get_or(&mut self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_f64(&mut self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_usize(&mut self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn has(&mut self, key: &str) -> bool {
+        self.consumed.insert(key.to_string());
+        self.switches.contains(key)
+    }
+
+    /// Error on unconsumed flags (call after all gets).
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let unknown: Vec<&String> = self
+            .flags
+            .keys()
+            .chain(self.switches.iter())
+            .filter(|k| !self.consumed.contains(*k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("unknown flags: {unknown:?}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_positional_flags_switches() {
+        let mut a = parse("exp fig2 --lambda 0.1 --verbose --tol=1e-8");
+        assert_eq!(a.subcommand(), Some("exp"));
+        assert_eq!(a.positional[1], "fig2");
+        assert_eq!(a.get_f64("lambda", 0.0).unwrap(), 0.1);
+        assert_eq!(a.get_f64("tol", 0.0).unwrap(), 1e-8);
+        assert!(a.has("verbose"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn negative_number_flag_values() {
+        let mut a = parse("solve --shift -3.5");
+        // "-3.5" doesn't start with --, so it's the value
+        assert_eq!(a.get_f64("shift", 0.0).unwrap(), -3.5);
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let mut a = parse("solve --typo 1");
+        let _ = a.get("lambda");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_number_reports_error() {
+        let mut a = parse("solve --lambda abc");
+        assert!(a.get_f64("lambda", 0.0).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = parse("solve");
+        assert_eq!(a.get_or("dataset", "rcv1"), "rcv1");
+        assert_eq!(a.get_usize("seed", 42).unwrap(), 42);
+        assert!(!a.has("verbose"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Coordinator: the process-level runtime around the solver library.
+//!
+//! The paper's contribution is the solver, so L3's coordination layer is
+//! deliberately thin (per the session architecture note): a std-thread
+//! worker pool ([`pool`]) used to parallelise experiment sweeps, and a
+//! fit service ([`service`]) that owns a job queue, executes fits on
+//! worker threads and streams results back — the shape a model-serving
+//! deployment of the library would take (tokio is unavailable offline;
+//! the service is a compact std::sync::mpsc equivalent).
+
+pub mod pool;
+pub mod service;
+
+pub use pool::run_parallel;
+pub use service::{FitJob, FitOutcome, SolveService};

@@ -1,0 +1,192 @@
+//! Fit service: a leader/worker queue over the estimator API.
+//!
+//! Callers submit [`FitJob`]s; worker threads execute them with the
+//! library's solvers; results stream back over a channel in completion
+//! order (each tagged with its job id). This is the long-running-process
+//! shape of the library (a model-fitting microservice), built on
+//! std::sync::mpsc since tokio is unavailable offline.
+
+use crate::data::Dataset;
+use crate::estimators::{ElasticNet, Lasso, McpRegressor};
+use crate::solver::{FitResult, SolverOpts};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Which estimator a job runs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EstimatorSpec {
+    Lasso { lambda: f64 },
+    ElasticNet { lambda: f64, l1_ratio: f64 },
+    Mcp { lambda: f64, gamma: f64 },
+}
+
+/// A fit request. The dataset is shared (`Arc`) so a sweep over λ doesn't
+/// copy the design per job.
+#[derive(Clone)]
+pub struct FitJob {
+    pub id: u64,
+    pub dataset: Arc<Dataset>,
+    pub spec: EstimatorSpec,
+    pub opts: SolverOpts,
+}
+
+/// A completed fit.
+pub struct FitOutcome {
+    pub id: u64,
+    pub spec: EstimatorSpec,
+    pub result: FitResult,
+    pub wall_time: f64,
+}
+
+enum Msg {
+    Job(FitJob),
+    Shutdown,
+}
+
+/// The service: submit jobs, receive outcomes, shut down cleanly.
+pub struct SolveService {
+    tx: Sender<Msg>,
+    pub results: Receiver<FitOutcome>,
+    workers: Vec<JoinHandle<()>>,
+    submitted: u64,
+}
+
+impl SolveService {
+    pub fn start(n_workers: usize) -> Self {
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (res_tx, res_rx) = channel::<FitOutcome>();
+        let workers = (0..n_workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let res_tx = res_tx.clone();
+                std::thread::spawn(move || loop {
+                    let msg = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match msg {
+                        Ok(Msg::Job(job)) => {
+                            let t0 = std::time::Instant::now();
+                            let result = run_job(&job);
+                            let _ = res_tx.send(FitOutcome {
+                                id: job.id,
+                                spec: job.spec,
+                                result,
+                                wall_time: t0.elapsed().as_secs_f64(),
+                            });
+                        }
+                        Ok(Msg::Shutdown) | Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        Self { tx, results: res_rx, workers, submitted: 0 }
+    }
+
+    /// Submit a job; returns its id.
+    pub fn submit(&mut self, dataset: Arc<Dataset>, spec: EstimatorSpec, opts: SolverOpts) -> u64 {
+        let id = self.submitted;
+        self.submitted += 1;
+        self.tx
+            .send(Msg::Job(FitJob { id, dataset, spec, opts }))
+            .expect("service is down");
+        id
+    }
+
+    /// Block until `count` outcomes arrive.
+    pub fn collect(&self, count: usize) -> Vec<FitOutcome> {
+        (0..count).map(|_| self.results.recv().expect("worker died")).collect()
+    }
+
+    /// Graceful shutdown: drains workers.
+    pub fn shutdown(self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn run_job(job: &FitJob) -> FitResult {
+    let ds = &job.dataset;
+    match job.spec {
+        EstimatorSpec::Lasso { lambda } => {
+            Lasso::new(lambda).with_solver(job.opts.clone()).fit(&ds.design, &ds.y)
+        }
+        EstimatorSpec::ElasticNet { lambda, l1_ratio } => {
+            ElasticNet::new(lambda, l1_ratio).with_solver(job.opts.clone()).fit(&ds.design, &ds.y)
+        }
+        EstimatorSpec::Mcp { lambda, gamma } => {
+            McpRegressor::new(lambda, gamma).with_solver(job.opts.clone()).fit(&ds.design, &ds.y).0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{correlated, CorrelatedSpec};
+
+    #[test]
+    fn sweep_over_lambda_completes() {
+        let ds = Arc::new(correlated(
+            CorrelatedSpec { n: 60, p: 80, rho: 0.4, nnz: 5, snr: 10.0 },
+            0,
+        ));
+        let lam_max = Lasso::lambda_max(&ds.design, &ds.y);
+        let mut svc = SolveService::start(2);
+        for k in 1..=6 {
+            svc.submit(
+                Arc::clone(&ds),
+                EstimatorSpec::Lasso { lambda: lam_max / (2.0 * k as f64) },
+                SolverOpts::default(),
+            );
+        }
+        let mut outcomes = svc.collect(6);
+        svc.shutdown();
+        assert_eq!(outcomes.len(), 6);
+        outcomes.sort_by_key(|o| o.id);
+        // smaller lambda (later ids) -> larger support
+        let first = outcomes.first().unwrap().result.support().len();
+        let last = outcomes.last().unwrap().result.support().len();
+        assert!(last >= first);
+        for o in &outcomes {
+            assert!(o.result.converged);
+            assert!(o.wall_time >= 0.0);
+        }
+    }
+
+    #[test]
+    fn mixed_estimators() {
+        let ds = Arc::new(correlated(
+            CorrelatedSpec { n: 80, p: 60, rho: 0.3, nnz: 5, snr: 10.0 },
+            1,
+        ));
+        let lam = Lasso::lambda_max(&ds.design, &ds.y) / 10.0;
+        let mut svc = SolveService::start(2);
+        svc.submit(Arc::clone(&ds), EstimatorSpec::Lasso { lambda: lam }, SolverOpts::default());
+        svc.submit(
+            Arc::clone(&ds),
+            EstimatorSpec::ElasticNet { lambda: lam, l1_ratio: 0.5 },
+            SolverOpts::default(),
+        );
+        svc.submit(
+            Arc::clone(&ds),
+            EstimatorSpec::Mcp { lambda: lam, gamma: 3.0 },
+            SolverOpts::default(),
+        );
+        let outcomes = svc.collect(3);
+        svc.shutdown();
+        assert_eq!(outcomes.len(), 3);
+    }
+
+    #[test]
+    fn shutdown_without_jobs() {
+        let svc = SolveService::start(3);
+        svc.shutdown(); // must not hang
+    }
+}

@@ -1,0 +1,159 @@
+//! libsvm / svmlight format parser.
+//!
+//! The paper's datasets (rcv1, news20, finance, kdda, url, real-sim) ship
+//! in this format: one sample per line, `label idx:val idx:val ...`, with
+//! 1-based feature indices. This environment has no network access so the
+//! benchmarks run on synthetic stand-ins (see [`crate::data::synthetic`]),
+//! but the parser makes the harness run on the real files whenever they
+//! are present (drop them under `data/` and pass `--dataset path`).
+
+use crate::linalg::CscMatrix;
+use anyhow::{bail, Context, Result};
+use std::io::BufRead;
+use std::path::Path;
+
+/// A supervised dataset: design + targets.
+#[derive(Clone, Debug)]
+pub struct LibsvmData {
+    pub x: CscMatrix,
+    pub y: Vec<f64>,
+}
+
+/// Parse libsvm text from a reader. `min_features` lets the caller force a
+/// feature-count (files may not mention trailing all-zero features).
+pub fn parse_reader<R: BufRead>(reader: R, min_features: usize) -> Result<LibsvmData> {
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::new();
+    let mut y: Vec<f64> = Vec::new();
+    let mut p = min_features;
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.context("I/O error reading libsvm data")?;
+        let line = line.split('#').next().unwrap_or("").trim(); // strip comments
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: empty", lineno + 1))?;
+        let label: f64 = label
+            .parse()
+            .with_context(|| format!("line {}: bad label {label:?}", lineno + 1))?;
+        let row = y.len();
+        y.push(label);
+        let mut prev_idx = 0usize;
+        for tok in parts {
+            let (idx, val) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: bad pair {tok:?}", lineno + 1))?;
+            let idx: usize = idx
+                .parse()
+                .with_context(|| format!("line {}: bad index {idx:?}", lineno + 1))?;
+            if idx == 0 {
+                bail!("line {}: libsvm indices are 1-based, got 0", lineno + 1);
+            }
+            if idx <= prev_idx {
+                bail!("line {}: indices not strictly increasing", lineno + 1);
+            }
+            prev_idx = idx;
+            let val: f64 = val
+                .parse()
+                .with_context(|| format!("line {}: bad value {val:?}", lineno + 1))?;
+            p = p.max(idx);
+            if val != 0.0 {
+                triplets.push((row, idx - 1, val));
+            }
+        }
+    }
+    let n = y.len();
+    Ok(LibsvmData { x: CscMatrix::from_triplets(n, p, &triplets), y })
+}
+
+/// Parse a libsvm file from disk.
+pub fn parse_file(path: impl AsRef<Path>) -> Result<LibsvmData> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    parse_reader(std::io::BufReader::new(f), 0)
+}
+
+/// Write a dataset in libsvm format (used for round-trip tests and for
+/// exporting the synthetic stand-ins for external tools).
+pub fn write_libsvm(data: &LibsvmData, out: &mut impl std::io::Write) -> Result<()> {
+    let n = data.x.nrows();
+    let p = data.x.ncols();
+    // CSC is column-major; gather per-row pairs first.
+    let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+    for j in 0..p {
+        let (ridx, vals) = data.x.col(j);
+        for (&i, &v) in ridx.iter().zip(vals.iter()) {
+            rows[i as usize].push((j + 1, v));
+        }
+    }
+    for (i, pairs) in rows.iter().enumerate() {
+        write!(out, "{}", data.y[i])?;
+        for (j, v) in pairs {
+            write!(out, " {j}:{v}")?;
+        }
+        writeln!(out)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_basic_file() {
+        let text = "1 1:0.5 3:2.0\n-1 2:1.5\n";
+        let d = parse_reader(Cursor::new(text), 0).unwrap();
+        assert_eq!(d.y, vec![1.0, -1.0]);
+        assert_eq!(d.x.nrows(), 2);
+        assert_eq!(d.x.ncols(), 3);
+        assert_eq!(d.x.col_dot(0, &[1.0, 1.0]), 0.5);
+        assert_eq!(d.x.col_dot(1, &[1.0, 1.0]), 1.5);
+        assert_eq!(d.x.col_dot(2, &[1.0, 1.0]), 2.0);
+    }
+
+    #[test]
+    fn strips_comments_and_blank_lines() {
+        let text = "# header\n1 1:1.0 # trailing\n\n2 2:3.0\n";
+        let d = parse_reader(Cursor::new(text), 0).unwrap();
+        assert_eq!(d.y, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn respects_min_features() {
+        let d = parse_reader(Cursor::new("1 1:1\n"), 10).unwrap();
+        assert_eq!(d.x.ncols(), 10);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(parse_reader(Cursor::new("1 0:1\n"), 0).is_err());
+    }
+
+    #[test]
+    fn rejects_unsorted_indices() {
+        assert!(parse_reader(Cursor::new("1 3:1 2:1\n"), 0).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_reader(Cursor::new("abc 1:1\n"), 0).is_err());
+        assert!(parse_reader(Cursor::new("1 1:abc\n"), 0).is_err());
+        assert!(parse_reader(Cursor::new("1 nocolon\n"), 0).is_err());
+    }
+
+    #[test]
+    fn round_trip() {
+        let text = "1 1:0.5 3:2\n-1 2:1.5\n0.25 1:-1\n";
+        let d = parse_reader(Cursor::new(text), 0).unwrap();
+        let mut buf = Vec::new();
+        write_libsvm(&d, &mut buf).unwrap();
+        let d2 = parse_reader(Cursor::new(buf), d.x.ncols()).unwrap();
+        assert_eq!(d.y, d2.y);
+        assert_eq!(d.x, d2.x);
+    }
+}

@@ -1,0 +1,8 @@
+//! Dataset substrate: libsvm parsing, synthetic generators (including the
+//! paper-dataset stand-ins) and the simulated M/EEG inverse problem.
+
+pub mod libsvm;
+pub mod meeg;
+pub mod synthetic;
+
+pub use synthetic::{correlated, paper_dataset, paper_dataset_small, sparse, CorrelatedSpec, Dataset, SparseSpec};

@@ -1,0 +1,184 @@
+//! Logistic datafit `f(β) = (1/n) Σ log(1 + exp(−y_i (Xβ)_i))` with
+//! labels y ∈ {−1, +1} — sparse logistic regression.
+//!
+//! State = `Xβ` (the raw scores): each coordinate gradient needs the
+//! elementwise sigmoid weights, computed on the fly over the column's
+//! stored entries via [`Design::col_dot_map`].
+
+use super::Datafit;
+use crate::linalg::Design;
+
+#[derive(Clone, Debug, Default)]
+pub struct Logistic {
+    lipschitz: Vec<f64>,
+    inv_n: f64,
+}
+
+impl Logistic {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Numerically stable log(1 + exp(v)).
+#[inline]
+fn log1p_exp(v: f64) -> f64 {
+    if v > 33.0 {
+        v
+    } else if v > -33.0 {
+        v.exp().ln_1p()
+    } else {
+        0.0
+    }
+}
+
+/// σ(v) = 1/(1+e^{−v}), stable.
+#[inline]
+fn sigmoid(v: f64) -> f64 {
+    if v >= 0.0 {
+        1.0 / (1.0 + (-v).exp())
+    } else {
+        let e = v.exp();
+        e / (1.0 + e)
+    }
+}
+
+impl Datafit for Logistic {
+    fn init(&mut self, design: &Design, y: &[f64]) {
+        assert_eq!(design.nrows(), y.len());
+        for &yi in y {
+            assert!(yi == 1.0 || yi == -1.0, "logistic labels must be ±1, got {yi}");
+        }
+        let n = design.nrows() as f64;
+        self.inv_n = 1.0 / n;
+        // |F''| <= 1/4 elementwise -> L_j = ||X_j||² / (4n)
+        self.lipschitz = design.col_sq_norms().iter().map(|s| s / (4.0 * n)).collect();
+    }
+
+    fn lipschitz(&self) -> &[f64] {
+        &self.lipschitz
+    }
+
+    /// State = Xβ.
+    fn init_state(&self, design: &Design, _y: &[f64], beta: &[f64]) -> Vec<f64> {
+        let mut xw = vec![0.0; design.nrows()];
+        design.matvec(beta, &mut xw);
+        xw
+    }
+
+    #[inline]
+    fn update_state(&self, design: &Design, j: usize, delta: f64, state: &mut [f64]) {
+        design.col_axpy(j, delta, state);
+    }
+
+    fn value(&self, y: &[f64], _beta: &[f64], state: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for (&xw, &yi) in state.iter().zip(y.iter()) {
+            s += log1p_exp(-yi * xw);
+        }
+        s * self.inv_n
+    }
+
+    #[inline]
+    fn grad_j(&self, design: &Design, y: &[f64], state: &[f64], _beta: &[f64], j: usize) -> f64 {
+        let inv_n = self.inv_n;
+        design.col_dot_map(j, state, |i, xw_i| -y[i] * sigmoid(-y[i] * xw_i) * inv_n)
+    }
+
+    fn grad_full(
+        &self,
+        design: &Design,
+        y: &[f64],
+        state: &[f64],
+        _beta: &[f64],
+        out: &mut [f64],
+    ) {
+        // fused pass: materialise the weights once (O(n)), then Xᵀw
+        let w: Vec<f64> = state
+            .iter()
+            .zip(y.iter())
+            .map(|(&xw, &yi)| -yi * sigmoid(-yi * xw) * self.inv_n)
+            .collect();
+        design.matvec_t(&w, out);
+    }
+
+    fn name(&self) -> &'static str {
+        "logistic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMatrix;
+
+    fn setup() -> (Design, Vec<f64>, Logistic) {
+        let x = DenseMatrix::from_rows(&[
+            vec![1.0, 2.0],
+            vec![-3.0, 1.0],
+            vec![0.5, -1.0],
+            vec![2.0, 0.3],
+        ]);
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let d: Design = x.into();
+        let mut f = Logistic::new();
+        f.init(&d, &y);
+        (d, y, f)
+    }
+
+    #[test]
+    fn value_at_zero_is_log2() {
+        let (d, y, f) = setup();
+        let beta = vec![0.0, 0.0];
+        let state = f.init_state(&d, &y, &beta);
+        assert!((f.value(&y, &beta, &state) - (2.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let (d, y, f) = setup();
+        let beta = vec![0.4, -0.2];
+        let state = f.init_state(&d, &y, &beta);
+        let eps = 1e-6;
+        for j in 0..2 {
+            let mut bp = beta.clone();
+            bp[j] += eps;
+            let sp = f.init_state(&d, &y, &bp);
+            let mut bm = beta.clone();
+            bm[j] -= eps;
+            let sm = f.init_state(&d, &y, &bm);
+            let fd = (f.value(&y, &bp, &sp) - f.value(&y, &bm, &sm)) / (2.0 * eps);
+            let an = f.grad_j(&d, &y, &state, &beta, j);
+            assert!((fd - an).abs() < 1e-6, "j={j}: fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn grad_full_matches_grad_j() {
+        let (d, y, f) = setup();
+        let beta = vec![0.4, -0.2];
+        let state = f.init_state(&d, &y, &beta);
+        let mut full = vec![0.0; 2];
+        f.grad_full(&d, &y, &state, &beta, &mut full);
+        for j in 0..2 {
+            assert!((full[j] - f.grad_j(&d, &y, &state, &beta, j)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn stable_for_extreme_scores() {
+        assert!((log1p_exp(1000.0) - 1000.0).abs() < 1e-9);
+        assert_eq!(log1p_exp(-1000.0), 0.0);
+        assert!(sigmoid(1000.0) <= 1.0);
+        assert!(sigmoid(-1000.0) >= 0.0);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "labels must be ±1")]
+    fn rejects_regression_targets() {
+        let x = DenseMatrix::from_rows(&[vec![1.0]]);
+        let mut f = Logistic::new();
+        f.init(&x.into(), &[0.5]);
+    }
+}

@@ -1,0 +1,144 @@
+//! Multitask quadratic datafit `f(W) = ‖Y − XW‖²_F / (2n)` for
+//! `W ∈ R^{p×T}` — the M/EEG inverse problem loss (paper §3.2, Figure 4).
+//!
+//! Operated on by the block coordinate-descent solver
+//! ([`crate::solver::multitask`]): one "coordinate" is a row `W_{j,:}`,
+//! the state is the residual `R = XW − Y` (n × T, column-major by task).
+
+use crate::linalg::Design;
+
+#[derive(Clone, Debug, Default)]
+pub struct QuadraticMultiTask {
+    lipschitz: Vec<f64>,
+    inv_n: f64,
+    n_tasks: usize,
+}
+
+impl QuadraticMultiTask {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn init(&mut self, design: &Design, n_tasks: usize) {
+        let n = design.nrows() as f64;
+        self.inv_n = 1.0 / n;
+        self.n_tasks = n_tasks;
+        self.lipschitz = design.col_sq_norms().iter().map(|s| s / n).collect();
+    }
+
+    pub fn lipschitz(&self) -> &[f64] {
+        &self.lipschitz
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.n_tasks
+    }
+
+    /// Residual R = XW − Y, stored task-major: `state[t*n + i]`.
+    /// `w` is row-major by coefficient row: `w[j*T + t]`.
+    pub fn init_state(&self, design: &Design, y: &[f64], w: &[f64]) -> Vec<f64> {
+        let n = design.nrows();
+        let p = design.ncols();
+        let t_count = self.n_tasks;
+        assert_eq!(y.len(), n * t_count);
+        assert_eq!(w.len(), p * t_count);
+        let mut state = vec![0.0; n * t_count];
+        let mut beta_t = vec![0.0; p];
+        let mut xb = vec![0.0; n];
+        for t in 0..t_count {
+            for j in 0..p {
+                beta_t[j] = w[j * t_count + t];
+            }
+            design.matvec(&beta_t, &mut xb);
+            for i in 0..n {
+                state[t * n + i] = xb[i] - y[t * n + i];
+            }
+        }
+        state
+    }
+
+    /// After `W_{j,:} += delta` (length T): `R[:, t] += delta_t · X[:, j]`.
+    pub fn update_state(&self, design: &Design, j: usize, delta: &[f64], state: &mut [f64]) {
+        let n = design.nrows();
+        for (t, &d) in delta.iter().enumerate() {
+            if d != 0.0 {
+                design.col_axpy(j, d, &mut state[t * n..(t + 1) * n]);
+            }
+        }
+    }
+
+    pub fn value(&self, state: &[f64]) -> f64 {
+        0.5 * self.inv_n * crate::linalg::sq_nrm2(state)
+    }
+
+    /// Gradient block `∇_{j,:} f = X[:,j]ᵀ R / n` into `out` (length T).
+    pub fn grad_row(&self, design: &Design, state: &[f64], j: usize, out: &mut [f64]) {
+        let n = design.nrows();
+        for (t, g) in out.iter_mut().enumerate() {
+            *g = self.inv_n * design.col_dot(j, &state[t * n..(t + 1) * n]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMatrix;
+
+    fn setup() -> (Design, Vec<f64>, QuadraticMultiTask) {
+        let x = DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, -1.0], vec![0.0, 1.0]]);
+        // Y: 3 samples × 2 tasks, task-major
+        let y = vec![1.0, 0.0, -1.0, 0.5, 0.5, 0.0];
+        let d: Design = x.into();
+        let mut f = QuadraticMultiTask::new();
+        f.init(&d, 2);
+        (d, y, f)
+    }
+
+    #[test]
+    fn state_is_residual_per_task() {
+        let (d, y, f) = setup();
+        // W rows: w[j*T + t]
+        let w = vec![1.0, 0.0, 0.0, 1.0]; // W = [[1,0],[0,1]]
+        let state = f.init_state(&d, &y, &w);
+        // task 0 uses beta = [1, 0] -> Xb = [1,3,0]; residual = Xb - y[:,0]
+        assert_eq!(&state[0..3], &[0.0, 3.0, 1.0]);
+        // task 1 uses beta = [0, 1] -> Xb = [2,-1,1]
+        assert_eq!(&state[3..6], &[1.5, -1.5, 1.0]);
+    }
+
+    #[test]
+    fn update_matches_rebuild() {
+        let (d, y, f) = setup();
+        let mut w = vec![0.0; 4];
+        let mut state = f.init_state(&d, &y, &w);
+        let delta = [0.5, -1.0];
+        w[2] += delta[0]; // row j=1, task 0
+        w[3] += delta[1];
+        f.update_state(&d, 1, &delta, &mut state);
+        let fresh = f.init_state(&d, &y, &w);
+        for (a, b) in state.iter().zip(fresh.iter()) {
+            assert!((a - b).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn grad_row_matches_finite_differences() {
+        let (d, y, f) = setup();
+        let w = vec![0.2, -0.1, 0.4, 0.3];
+        let state = f.init_state(&d, &y, &w);
+        let mut g = vec![0.0; 2];
+        f.grad_row(&d, &state, 0, &mut g);
+        let eps = 1e-6;
+        for t in 0..2 {
+            let mut wp = w.clone();
+            wp[t] += eps;
+            let sp = f.init_state(&d, &y, &wp);
+            let mut wm = w.clone();
+            wm[t] -= eps;
+            let sm = f.init_state(&d, &y, &wm);
+            let fd = (f.value(&sp) - f.value(&sm)) / (2.0 * eps);
+            assert!((fd - g[t]).abs() < 1e-6, "t={t}");
+        }
+    }
+}

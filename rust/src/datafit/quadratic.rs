@@ -1,0 +1,189 @@
+//! Quadratic datafit `f(β) = ‖y − Xβ‖² / (2n)` — the Lasso / elastic net /
+//! MCP regression loss. The hot case: its state is the residual
+//! `r = Xβ − y`, so the CD gradient is `X[:,j]ᵀ r / n` (one sparse dot) and
+//! the state update after `β_j += δ` is `r += δ·X[:,j]` (one sparse axpy).
+
+use super::Datafit;
+use crate::linalg::Design;
+
+#[derive(Clone, Debug, Default)]
+pub struct Quadratic {
+    lipschitz: Vec<f64>,
+    inv_n: f64,
+}
+
+impl Quadratic {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Datafit for Quadratic {
+    fn init(&mut self, design: &Design, y: &[f64]) {
+        assert_eq!(design.nrows(), y.len());
+        let n = design.nrows() as f64;
+        self.inv_n = 1.0 / n;
+        self.lipschitz = design.col_sq_norms().iter().map(|s| s / n).collect();
+    }
+
+    fn lipschitz(&self) -> &[f64] {
+        &self.lipschitz
+    }
+
+    /// State = residual `Xβ − y`.
+    fn init_state(&self, design: &Design, y: &[f64], beta: &[f64]) -> Vec<f64> {
+        let mut xw = vec![0.0; design.nrows()];
+        design.matvec(beta, &mut xw);
+        for (r, &yi) in xw.iter_mut().zip(y.iter()) {
+            *r -= yi;
+        }
+        xw
+    }
+
+    #[inline]
+    fn update_state(&self, design: &Design, j: usize, delta: f64, state: &mut [f64]) {
+        design.col_axpy(j, delta, state);
+    }
+
+    fn value(&self, _y: &[f64], _beta: &[f64], state: &[f64]) -> f64 {
+        0.5 * self.inv_n * crate::linalg::sq_nrm2(state)
+    }
+
+    #[inline]
+    fn grad_j(&self, design: &Design, _y: &[f64], state: &[f64], _beta: &[f64], j: usize) -> f64 {
+        self.inv_n * design.col_dot(j, state)
+    }
+
+    fn grad_full(
+        &self,
+        design: &Design,
+        _y: &[f64],
+        state: &[f64],
+        _beta: &[f64],
+        out: &mut [f64],
+    ) {
+        design.matvec_t(state, out);
+        for g in out.iter_mut() {
+            *g *= self.inv_n;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "quadratic"
+    }
+
+    /// ‖X‖₂²/n via a few power iterations (tight, unlike the Σ L_j default).
+    fn global_lipschitz(&self, design: &Design) -> f64 {
+        let (n, p) = (design.nrows(), design.ncols());
+        let mut v = vec![1.0 / (p as f64).sqrt(); p];
+        let mut xv = vec![0.0; n];
+        let mut xtxv = vec![0.0; p];
+        let mut lam = 0.0;
+        for _ in 0..30 {
+            design.matvec(&v, &mut xv);
+            design.matvec_t(&xv, &mut xtxv);
+            lam = crate::linalg::nrm2(&xtxv);
+            if lam == 0.0 {
+                return 0.0;
+            }
+            for (vi, &ui) in v.iter_mut().zip(xtxv.iter()) {
+                *vi = ui / lam;
+            }
+        }
+        lam / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMatrix;
+
+    fn setup() -> (Design, Vec<f64>, Quadratic) {
+        let x = DenseMatrix::from_rows(&[
+            vec![1.0, 2.0],
+            vec![3.0, -1.0],
+            vec![0.5, 0.0],
+        ]);
+        let y = vec![1.0, -1.0, 0.5];
+        let d: Design = x.into();
+        let mut f = Quadratic::new();
+        f.init(&d, &y);
+        (d, y, f)
+    }
+
+    #[test]
+    fn value_matches_formula() {
+        let (d, y, f) = setup();
+        let beta = vec![0.5, -0.25];
+        let state = f.init_state(&d, &y, &beta);
+        let mut xb = vec![0.0; 3];
+        d.matvec(&beta, &mut xb);
+        let expect: f64 =
+            xb.iter().zip(y.iter()).map(|(a, b)| (a - b) * (a - b)).sum::<f64>() / 6.0;
+        assert!((f.value(&y, &beta, &state) - expect).abs() < 1e-14);
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let (d, y, f) = setup();
+        let beta = vec![0.3, -0.7];
+        let state = f.init_state(&d, &y, &beta);
+        let eps = 1e-6;
+        for j in 0..2 {
+            let mut bp = beta.clone();
+            bp[j] += eps;
+            let sp = f.init_state(&d, &y, &bp);
+            let mut bm = beta.clone();
+            bm[j] -= eps;
+            let sm = f.init_state(&d, &y, &bm);
+            let fd = (f.value(&y, &bp, &sp) - f.value(&y, &bm, &sm)) / (2.0 * eps);
+            let an = f.grad_j(&d, &y, &state, &beta, j);
+            assert!((fd - an).abs() < 1e-6, "j={j}: fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn grad_full_matches_grad_j() {
+        let (d, y, f) = setup();
+        let beta = vec![0.3, -0.7];
+        let state = f.init_state(&d, &y, &beta);
+        let mut full = vec![0.0; 2];
+        f.grad_full(&d, &y, &state, &beta, &mut full);
+        for j in 0..2 {
+            assert!((full[j] - f.grad_j(&d, &y, &state, &beta, j)).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn update_state_tracks_residual() {
+        let (d, y, f) = setup();
+        let mut beta = vec![0.0, 0.0];
+        let mut state = f.init_state(&d, &y, &beta);
+        beta[1] = 2.0;
+        f.update_state(&d, 1, 2.0, &mut state);
+        let fresh = f.init_state(&d, &y, &beta);
+        for (a, b) in state.iter().zip(fresh.iter()) {
+            assert!((a - b).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn lipschitz_is_col_norm_over_n() {
+        let (d, _, f) = setup();
+        let expect: Vec<f64> = d.col_sq_norms().iter().map(|s| s / 3.0).collect();
+        assert_eq!(f.lipschitz(), &expect[..]);
+    }
+
+    #[test]
+    fn global_lipschitz_bounds_coordinate_constants() {
+        let (d, _, f) = setup();
+        let gl = f.global_lipschitz(&d);
+        // ||X||_2^2/n >= max_j ||X_j||^2/n
+        let max_lj = f.lipschitz().iter().cloned().fold(0.0, f64::max);
+        assert!(gl >= max_lj - 1e-10, "gl={gl} max_lj={max_lj}");
+        // and is bounded above by the Frobenius bound
+        let frob: f64 = d.col_sq_norms().iter().sum::<f64>() / 3.0;
+        assert!(gl <= frob + 1e-10);
+    }
+}

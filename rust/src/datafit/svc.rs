@@ -1,0 +1,204 @@
+//! Dual-SVM datafit (paper §E.4): the hinge-loss SVM dual
+//!
+//! ```text
+//! argmin_{α ∈ R^n}  ½ αᵀQα − Σ_i α_i    s.t.  0 ≤ α_i ≤ C,
+//! ```
+//!
+//! with `Q = G Gᵀ`, `G = diag(y) X`. Writing `f(α) = ½‖Gᵀα‖² − Σα`, this is
+//! Problem (1) with penalty `ι_{[0,C]}` per coordinate. The *design* passed
+//! to the solver is `Gᵀ` (d × n: one column per dual variable), the state
+//! is `v = Gᵀα ∈ R^d`, and `∇_i f = G_i·v − 1 = col_dot(i, v) − 1`.
+//!
+//! The generalized support (Definition 4) is the set of *free* dual
+//! variables `0 < α_i < C` — the working set tracks the non-bound support
+//! vectors, exactly the paper's point that gsupp goes beyond sparsity.
+
+use super::Datafit;
+use crate::linalg::{CscMatrix, DenseMatrix, Design};
+
+#[derive(Clone, Debug, Default)]
+pub struct QuadraticSvc {
+    lipschitz: Vec<f64>,
+}
+
+impl QuadraticSvc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build the dual design `Gᵀ` (d × n) from a primal dense design
+    /// (n × d) and labels y ∈ {−1, 1}.
+    pub fn dual_design_dense(x: &DenseMatrix, y: &[f64]) -> Design {
+        let (n, d) = (x.nrows(), x.ncols());
+        assert_eq!(y.len(), n);
+        let mut g_t = DenseMatrix::zeros(d, n);
+        for i in 0..n {
+            for j in 0..d {
+                g_t.set(j, i, y[i] * x.get(i, j));
+            }
+        }
+        g_t.into()
+    }
+
+    /// Build the dual design `Gᵀ` from a primal sparse design.
+    pub fn dual_design_sparse(x: &CscMatrix, y: &[f64]) -> Design {
+        let (n, d) = (x.nrows(), x.ncols());
+        assert_eq!(y.len(), n);
+        let mut triplets = Vec::with_capacity(x.nnz());
+        for j in 0..d {
+            let (rows, vals) = x.col(j);
+            for (&i, &v) in rows.iter().zip(vals.iter()) {
+                // entry (j, i) of Gᵀ = y_i X_{ij}
+                triplets.push((j, i as usize, y[i as usize] * v));
+            }
+        }
+        CscMatrix::from_triplets(d, n, &triplets).into()
+    }
+
+    /// Recover the primal coefficients `β = Σ_i y_i α_i X_i: = Gᵀα` —
+    /// which is exactly the solver state (Eq. 35 of the paper).
+    pub fn primal_coef(state: &[f64]) -> Vec<f64> {
+        state.to_vec()
+    }
+}
+
+impl Datafit for QuadraticSvc {
+    /// `y` here is unused (the labels are folded into the dual design);
+    /// pass anything of length n.
+    fn init(&mut self, design: &Design, _y: &[f64]) {
+        // L_i = ‖G_i:‖² = squared norm of column i of Gᵀ
+        self.lipschitz = design.col_sq_norms();
+    }
+
+    fn lipschitz(&self) -> &[f64] {
+        &self.lipschitz
+    }
+
+    /// State = Gᵀα ∈ R^d.
+    fn init_state(&self, design: &Design, _y: &[f64], alpha: &[f64]) -> Vec<f64> {
+        let mut v = vec![0.0; design.nrows()];
+        design.matvec(alpha, &mut v);
+        v
+    }
+
+    #[inline]
+    fn update_state(&self, design: &Design, i: usize, delta: f64, state: &mut [f64]) {
+        design.col_axpy(i, delta, state);
+    }
+
+    fn value(&self, _y: &[f64], alpha: &[f64], state: &[f64]) -> f64 {
+        0.5 * crate::linalg::sq_nrm2(state) - alpha.iter().sum::<f64>()
+    }
+
+    #[inline]
+    fn grad_j(&self, design: &Design, _y: &[f64], state: &[f64], _alpha: &[f64], i: usize) -> f64 {
+        design.col_dot(i, state) - 1.0
+    }
+
+    fn grad_full(
+        &self,
+        design: &Design,
+        _y: &[f64],
+        state: &[f64],
+        _alpha: &[f64],
+        out: &mut [f64],
+    ) {
+        design.matvec_t(state, out);
+        for g in out.iter_mut() {
+            *g -= 1.0;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "quadratic_svc"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> (DenseMatrix, Vec<f64>) {
+        let x = DenseMatrix::from_rows(&[
+            vec![1.0, 2.0],
+            vec![-1.0, 0.5],
+            vec![2.0, -1.0],
+        ]);
+        let y = vec![1.0, -1.0, 1.0];
+        (x, y)
+    }
+
+    #[test]
+    fn dual_design_is_yx_transposed() {
+        let (x, y) = toy();
+        let d = QuadraticSvc::dual_design_dense(&x, &y);
+        assert_eq!(d.nrows(), 2); // features
+        assert_eq!(d.ncols(), 3); // samples
+        // column i of Gᵀ = y_i * X_{i,:}
+        assert_eq!(d.col_dot(1, &[1.0, 0.0]), -1.0 * 1.0 * -1.0); // y_1 X_{1,0} = 1
+    }
+
+    #[test]
+    fn sparse_and_dense_dual_designs_agree() {
+        let (x, y) = toy();
+        let mut trips = Vec::new();
+        for i in 0..3 {
+            for j in 0..2 {
+                if x.get(i, j) != 0.0 {
+                    trips.push((i, j, x.get(i, j)));
+                }
+            }
+        }
+        let xs = CscMatrix::from_triplets(3, 2, &trips);
+        let dd = QuadraticSvc::dual_design_dense(&x, &y);
+        let ds = QuadraticSvc::dual_design_sparse(&xs, &y);
+        let alpha = [0.3, 0.7, 0.1];
+        let (mut a, mut b) = (vec![0.0; 2], vec![0.0; 2]);
+        dd.matvec(&alpha, &mut a);
+        ds.matvec(&alpha, &mut b);
+        for (u, v) in a.iter().zip(b.iter()) {
+            assert!((u - v).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn value_and_grad_match_quadratic_form() {
+        let (x, y) = toy();
+        let d = QuadraticSvc::dual_design_dense(&x, &y);
+        let mut f = QuadraticSvc::new();
+        f.init(&d, &[0.0; 3]);
+        let alpha = vec![0.2, 0.5, 0.3];
+        let state = f.init_state(&d, &[0.0; 3], &alpha);
+        // brute force: Q_{ik} = y_i y_k <X_i, X_k>
+        let q = |i: usize, k: usize| {
+            y[i] * y[k] * (x.get(i, 0) * x.get(k, 0) + x.get(i, 1) * x.get(k, 1))
+        };
+        let mut quad = 0.0;
+        for i in 0..3 {
+            for k in 0..3 {
+                quad += alpha[i] * alpha[k] * q(i, k);
+            }
+        }
+        let expect = 0.5 * quad - alpha.iter().sum::<f64>();
+        assert!((f.value(&[0.0; 3], &alpha, &state) - expect).abs() < 1e-12);
+        for i in 0..3 {
+            let gi: f64 = (0..3).map(|k| q(i, k) * alpha[k]).sum::<f64>() - 1.0;
+            assert!((f.grad_j(&d, &[0.0; 3], &state, &alpha, i) - gi).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn grad_full_matches_grad_j() {
+        let (x, y) = toy();
+        let d = QuadraticSvc::dual_design_dense(&x, &y);
+        let mut f = QuadraticSvc::new();
+        f.init(&d, &[0.0; 3]);
+        let alpha = vec![0.1, 0.9, 0.4];
+        let state = f.init_state(&d, &[0.0; 3], &alpha);
+        let mut full = vec![0.0; 3];
+        f.grad_full(&d, &[0.0; 3], &state, &alpha, &mut full);
+        for i in 0..3 {
+            assert!((full[i] - f.grad_j(&d, &[0.0; 3], &state, &alpha, i)).abs() < 1e-13);
+        }
+    }
+}

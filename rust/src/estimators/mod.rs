@@ -1,0 +1,15 @@
+//! scikit-learn-style estimator API on top of the generic solver — the
+//! library surface a practitioner uses (the paper's Table-1 "modular"
+//! column: a new model is one datafit + one penalty).
+
+pub mod cv;
+pub mod linear;
+pub mod multitask;
+pub mod path;
+pub mod svc;
+
+pub use cv::{lasso_cv, CvResult};
+pub use linear::{ElasticNet, Lasso, McpRegressor, ScadRegressor, SparseLogisticRegression};
+pub use multitask::{BlockMcpRegressor, MultiTaskLasso};
+pub use path::{lasso_path, mcp_path, scad_path, PathPoint, PathResult};
+pub use svc::LinearSvc;

@@ -1,0 +1,149 @@
+//! Linear SVM via the dual formulation (paper §E.4): hinge-loss SVC solved
+//! as Problem (1) with the [`QuadraticSvc`] datafit and the box-indicator
+//! penalty; the primal coefficients are recovered as `β = Gᵀα` (Eq. 35).
+
+use crate::datafit::QuadraticSvc;
+use crate::linalg::{CscMatrix, DenseMatrix, Design};
+use crate::penalty::BoxIndicator;
+use crate::solver::{solve, FitResult, SolverOpts};
+
+#[derive(Clone, Debug)]
+pub struct LinearSvc {
+    pub c: f64,
+    pub opts: SolverOpts,
+}
+
+/// Fit output: dual solution + recovered primal coefficients.
+#[derive(Clone, Debug)]
+pub struct SvcFit {
+    pub alpha: FitResult,
+    pub primal_coef: Vec<f64>,
+    /// number of support vectors (α_i > 0)
+    pub n_support: usize,
+}
+
+impl LinearSvc {
+    pub fn new(c: f64) -> Self {
+        Self { c, opts: SolverOpts::default() }
+    }
+
+    pub fn with_tol(mut self, tol: f64) -> Self {
+        self.opts.tol = tol;
+        self
+    }
+
+    pub fn with_solver(mut self, opts: SolverOpts) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Fit from a dense primal design (n × d) and ±1 labels.
+    pub fn fit_dense(&self, x: &DenseMatrix, y: &[f64]) -> SvcFit {
+        let dual = QuadraticSvc::dual_design_dense(x, y);
+        self.fit_dual(&dual, y)
+    }
+
+    /// Fit from a sparse primal design.
+    pub fn fit_sparse(&self, x: &CscMatrix, y: &[f64]) -> SvcFit {
+        let dual = QuadraticSvc::dual_design_sparse(x, y);
+        self.fit_dual(&dual, y)
+    }
+
+    /// Fit on a prebuilt dual design `Gᵀ` (d × n).
+    pub fn fit_dual(&self, dual_design: &Design, y: &[f64]) -> SvcFit {
+        let n = dual_design.ncols();
+        assert_eq!(y.len(), n);
+        let mut datafit = QuadraticSvc::new();
+        let pen = BoxIndicator::new(self.c);
+        let alpha = solve(dual_design, y, &mut datafit, &pen, &self.opts, None, None);
+        // primal coef = Gᵀ α (the datafit state, recomputed here from α)
+        let mut primal = vec![0.0; dual_design.nrows()];
+        dual_design.matvec(&alpha.beta, &mut primal);
+        let n_support = alpha.beta.iter().filter(|&&a| a > 0.0).count();
+        SvcFit { alpha, primal_coef: primal, n_support }
+    }
+
+    /// Decision function `x ↦ xᵀβ` on a dense design.
+    pub fn decision_function(x: &DenseMatrix, primal_coef: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; x.nrows()];
+        Design::Dense(x.clone()).matvec(primal_coef, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{correlated, CorrelatedSpec};
+    use crate::util::rng::Rng;
+
+    fn classification_data(n: usize, d: usize, seed: u64) -> (DenseMatrix, Vec<f64>) {
+        let ds = correlated(
+            CorrelatedSpec { n, p: d, rho: 0.3, nnz: d.min(5), snr: 10.0 },
+            seed,
+        );
+        let y: Vec<f64> = ds.y.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+        match ds.design {
+            Design::Dense(m) => (m, y),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn dual_solution_is_feasible_and_accurate() {
+        let (x, y) = classification_data(100, 10, 0);
+        let fit = LinearSvc::new(1.0).with_tol(1e-8).fit_dense(&x, &y);
+        assert!(fit.alpha.converged, "kkt {}", fit.alpha.kkt);
+        for &a in &fit.alpha.beta {
+            assert!((-1e-12..=1.0 + 1e-12).contains(&a), "alpha {a} out of box");
+        }
+        let scores = LinearSvc::decision_function(&x, &fit.primal_coef);
+        let acc = scores
+            .iter()
+            .zip(y.iter())
+            .filter(|(s, yi)| (s.signum() - **yi).abs() < 1e-12)
+            .count() as f64
+            / y.len() as f64;
+        assert!(acc > 0.85, "accuracy {acc}");
+    }
+
+    #[test]
+    fn support_vectors_are_a_strict_subset() {
+        let (x, y) = classification_data(150, 8, 1);
+        let fit = LinearSvc::new(1.0).with_tol(1e-8).fit_dense(&x, &y);
+        assert!(fit.n_support > 0);
+        assert!(fit.n_support < 150, "not every point should be a support vector");
+    }
+
+    #[test]
+    fn larger_c_fits_harder() {
+        let (x, mut y) = classification_data(100, 6, 2);
+        // flip a few labels to create margin violations
+        let mut rng = Rng::seed_from_u64(3);
+        for _ in 0..8 {
+            let i = rng.below(100);
+            y[i] = -y[i];
+        }
+        let loose = LinearSvc::new(0.01).with_tol(1e-8).fit_dense(&x, &y);
+        let tight = LinearSvc::new(10.0).with_tol(1e-8).fit_dense(&x, &y);
+        // higher C → larger dual objective magnitude (more support weight)
+        let sum_loose: f64 = loose.alpha.beta.iter().sum();
+        let sum_tight: f64 = tight.alpha.beta.iter().sum();
+        assert!(sum_tight > sum_loose);
+    }
+
+    #[test]
+    fn sparse_and_dense_fits_agree() {
+        let (x, y) = classification_data(60, 5, 4);
+        let mut trips = Vec::new();
+        for i in 0..60 {
+            for j in 0..5 {
+                trips.push((i, j, x.get(i, j)));
+            }
+        }
+        let xs = crate::linalg::CscMatrix::from_triplets(60, 5, &trips);
+        let a = LinearSvc::new(1.0).with_tol(1e-10).fit_dense(&x, &y);
+        let b = LinearSvc::new(1.0).with_tol(1e-10).fit_sparse(&xs, &y);
+        assert!((a.alpha.objective - b.alpha.objective).abs() < 1e-8);
+    }
+}

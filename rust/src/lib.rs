@@ -1,0 +1,51 @@
+//! # skglm-rs
+//!
+//! Rust + JAX + Pallas reproduction of **"Beyond L1: Faster and Better
+//! Sparse Models with skglm"** (Bertrand et al., NeurIPS 2022): a generic,
+//! Anderson-accelerated working-set coordinate-descent solver for sparse
+//! generalized linear models with convex *and* non-convex separable
+//! penalties.
+//!
+//! Architecture (see DESIGN.md):
+//! - **L3 (this crate)** — the full solver framework: datafits, penalties,
+//!   Algorithms 1–4, baselines, datasets, the benchopt-like harness, the
+//!   PJRT runtime and the CLI. Python never runs on the solve path.
+//! - **L2/L1 (python/compile)** — the dense scoring hot spot (`Xᵀr`) as a
+//!   JAX function wrapping a Pallas kernel, AOT-lowered to HLO text and
+//!   executed from Rust through the `xla` crate (PJRT CPU).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use skglm::prelude::*;
+//!
+//! let ds = skglm::data::correlated(CorrelatedSpec::figure1(0.1), 42);
+//! let lam = Lasso::lambda_max(&ds.design, &ds.y) / 10.0;
+//! let fit = Lasso::new(lam).fit(&ds.design, &ds.y);
+//! println!("support size: {}", fit.support().len());
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod datafit;
+pub mod estimators;
+pub mod linalg;
+pub mod metrics;
+pub mod penalty;
+pub mod runtime;
+pub mod solver;
+pub mod util;
+
+/// Convenient glob-import surface.
+pub mod prelude {
+    pub use crate::data::{CorrelatedSpec, Dataset, SparseSpec};
+    pub use crate::datafit::{Datafit, Logistic, Quadratic, QuadraticSvc};
+    pub use crate::estimators::{ElasticNet, Lasso, LinearSvc, McpRegressor, ScadRegressor};
+    pub use crate::linalg::{CscMatrix, DenseMatrix, Design};
+    pub use crate::penalty::{
+        BlockL21, BlockMcp, BlockScad, BoxIndicator, L1L2, Lq, Mcp, Penalty, Scad, WeightedL1, L1,
+    };
+    pub use crate::solver::{solve, FitResult, SolverOpts};
+}

@@ -1,0 +1,234 @@
+//! Dense column-major design matrix and the vector kernels the solver's
+//! hot loop is built from.
+//!
+//! Coordinate descent touches one column at a time, so the design matrix is
+//! stored column-major: `X[:, j]` is a contiguous slice. The kernels here
+//! (dot, axpy, nrm2) are written so LLVM auto-vectorises them; the 4-way
+//! manually unrolled variants exist because rustc does not always unroll
+//! reductions profitably on its own (measured in `benches/micro_kernels.rs`).
+
+/// Dense matrix, column-major (Fortran order), `n` rows × `p` columns.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    n: usize,
+    p: usize,
+    /// Column-major storage, length `n * p`.
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// Build from column-major storage. Panics if `data.len() != n * p`.
+    pub fn from_col_major(n: usize, p: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), n * p, "column-major buffer has wrong length");
+        Self { n, p, data }
+    }
+
+    /// Build from row-major storage (as a literature-style `[[row], ..]`).
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let n = rows.len();
+        let p = if n == 0 { 0 } else { rows[0].len() };
+        let mut data = vec![0.0; n * p];
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.len(), p, "ragged rows");
+            for (j, &v) in r.iter().enumerate() {
+                data[j * n + i] = v;
+            }
+        }
+        Self { n, p, data }
+    }
+
+    pub fn zeros(n: usize, p: usize) -> Self {
+        Self { n, p, data: vec![0.0; n * p] }
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.p
+    }
+
+    /// Contiguous column slice `X[:, j]`.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        debug_assert!(j < self.p);
+        &self.data[j * self.n..(j + 1) * self.n]
+    }
+
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        debug_assert!(j < self.p);
+        &mut self.data[j * self.n..(j + 1) * self.n]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[j * self.n + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[j * self.n + i] = v;
+    }
+
+    /// Raw column-major buffer (used by the PJRT bridge, which wants f32).
+    pub fn raw(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// `X β` into `out` (length n). `beta` has length p.
+    pub fn matvec(&self, beta: &[f64], out: &mut [f64]) {
+        assert_eq!(beta.len(), self.p);
+        assert_eq!(out.len(), self.n);
+        out.fill(0.0);
+        for j in 0..self.p {
+            let b = beta[j];
+            if b != 0.0 {
+                axpy(b, self.col(j), out);
+            }
+        }
+    }
+
+    /// `Xᵀ r` into `out` (length p). `r` has length n.
+    pub fn matvec_t(&self, r: &[f64], out: &mut [f64]) {
+        assert_eq!(r.len(), self.n);
+        assert_eq!(out.len(), self.p);
+        for j in 0..self.p {
+            out[j] = dot(self.col(j), r);
+        }
+    }
+
+    /// Squared ℓ2 norms of all columns.
+    pub fn col_sq_norms(&self) -> Vec<f64> {
+        (0..self.p).map(|j| sq_nrm2(self.col(j))).collect()
+    }
+
+    /// Scale column j in place.
+    pub fn scale_col(&mut self, j: usize, s: f64) {
+        for v in self.col_mut(j) {
+            *v *= s;
+        }
+    }
+}
+
+/// Dot product with 4-way unrolled accumulators (keeps the FP dependency
+/// chain short so the compiler vectorises the reduction).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for k in 0..chunks {
+        let i = 4 * k;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn sq_nrm2(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    sq_nrm2(x).sqrt()
+}
+
+/// ℓ∞ norm.
+#[inline]
+pub fn norm_inf(x: &[f64]) -> f64 {
+    x.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
+}
+
+/// ℓ1 norm.
+#[inline]
+pub fn norm1(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_rows_round_trip() {
+        let m = DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        assert_eq!(m.nrows(), 3);
+        assert_eq!(m.ncols(), 2);
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(2, 1), 6.0);
+        assert_eq!(m.col(1), &[2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn matvec_matches_manual() {
+        let m = DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let mut out = vec![0.0; 2];
+        m.matvec(&[1.0, -1.0], &mut out);
+        assert_eq!(out, vec![-1.0, -1.0]);
+    }
+
+    #[test]
+    fn matvec_t_matches_manual() {
+        let m = DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let mut out = vec![0.0; 2];
+        m.matvec_t(&[1.0, 1.0], &mut out);
+        assert_eq!(out, vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn dot_handles_remainder_lengths() {
+        for n in 0..9 {
+            let a: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            let b: Vec<f64> = (0..n).map(|i| (i as f64) * 0.5).collect();
+            let expect: f64 = (0..n).map(|i| (i * i) as f64 * 0.5).sum();
+            assert!((dot(&a, &b) - expect).abs() < 1e-12, "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut y = vec![1.0, 1.0, 1.0];
+        axpy(2.0, &[1.0, 2.0, 3.0], &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let x = [3.0, -4.0];
+        assert!((nrm2(&x) - 5.0).abs() < 1e-15);
+        assert_eq!(norm_inf(&x), 4.0);
+        assert_eq!(norm1(&x), 7.0);
+    }
+
+    #[test]
+    fn col_sq_norms_and_scale() {
+        let mut m = DenseMatrix::from_rows(&[vec![1.0, 0.0], vec![2.0, 3.0]]);
+        assert_eq!(m.col_sq_norms(), vec![5.0, 9.0]);
+        m.scale_col(1, 2.0);
+        assert_eq!(m.col(1), &[0.0, 6.0]);
+    }
+}

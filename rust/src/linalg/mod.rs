@@ -1,0 +1,10 @@
+//! Linear-algebra substrate: dense column-major and CSC sparse matrices,
+//! plus the [`Design`] abstraction the solvers are generic over.
+
+pub mod dense;
+pub mod design;
+pub mod sparse;
+
+pub use dense::{axpy, dot, norm1, norm_inf, nrm2, sq_nrm2, DenseMatrix};
+pub use design::Design;
+pub use sparse::CscMatrix;

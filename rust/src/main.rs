@@ -1,0 +1,315 @@
+//! `skglm` — CLI launcher for the skglm-rs framework.
+//!
+//! ```text
+//! skglm solve   --dataset rcv1 --penalty l1 --lambda-ratio 0.01 [--engine pjrt]
+//! skglm path    --dataset fig1 --penalty mcp --points 20
+//! skglm exp     <fig1..fig10|table1|table2|all> [--full]
+//! skglm serve   --jobs 8            # demo of the fit service
+//! skglm info                        # capability table + runtime probe
+//! ```
+
+use anyhow::{bail, Result};
+use skglm::bench::figures::{run_experiment, Scale, ALL_EXPERIMENTS};
+use skglm::cli::Args;
+use skglm::data::{correlated, paper_dataset, paper_dataset_small, CorrelatedSpec, Dataset};
+use skglm::datafit::Quadratic;
+use skglm::estimators::linear::quadratic_lambda_max;
+use skglm::penalty::{L1L2, Lq, Mcp, Scad, L1};
+use skglm::solver::{solve, FitResult, SolverOpts};
+
+fn main() {
+    let mut args = Args::from_env();
+    let code = match dispatch(&mut args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &mut Args) -> Result<()> {
+    match args.subcommand() {
+        Some("solve") => cmd_solve(args),
+        Some("path") => cmd_path(args),
+        Some("cv") => cmd_cv(args),
+        Some("exp") => cmd_exp(args),
+        Some("serve") => cmd_serve(args),
+        Some("synth") => cmd_synth(args),
+        Some("info") => cmd_info(args),
+        Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "usage:
+  skglm solve --dataset <name|libsvm-path> --penalty <l1|enet|mcp|scad|l05> \\
+              --lambda-ratio 0.1 [--gamma 3.0] [--rho 0.5] [--tol 1e-8] \\
+              [--engine native|pjrt] [--no-ws] [--no-accel] [--seed 42] [--small]
+  skglm path  --penalty <l1|mcp|scad|l05> [--points 20] [--min-ratio 1e-3]
+  skglm cv    --dataset <name> [--folds 5] [--points 15] [--workers 4] [--small]
+  skglm exp   <fig1..fig10|table1|table2|all> [--full]
+  skglm serve [--workers 4] [--lambdas 8]
+  skglm synth --dataset <rcv1|news20|...|fig1> --out <file.svm> [--small]
+  skglm info";
+
+fn load_dataset(args: &mut Args) -> Result<Dataset> {
+    let name = args.get_or("dataset", "rcv1");
+    let seed = args.get_usize("seed", 42)? as u64;
+    let small = args.has("small");
+    if std::path::Path::new(&name).exists() {
+        let parsed = skglm::data::libsvm::parse_file(&name)?;
+        return Ok(Dataset {
+            name,
+            design: parsed.x.into(),
+            y: parsed.y,
+            beta_true: Vec::new(),
+        });
+    }
+    if name == "fig1" {
+        return Ok(correlated(CorrelatedSpec::figure1(if small { 0.1 } else { 1.0 }), seed));
+    }
+    let ds = if small { paper_dataset_small(&name, seed) } else { paper_dataset(&name, seed) };
+    ds.ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?} (and not a file)"))
+}
+
+fn print_fit(res: &FitResult, n: usize) {
+    println!("converged      : {}", res.converged);
+    println!("objective      : {:.10e}", res.objective);
+    println!("kkt violation  : {:.3e}", res.kkt);
+    println!("support size   : {}", res.support().len());
+    println!("outer iters    : {}", res.n_outer);
+    println!("cd epochs      : {}", res.n_epochs);
+    println!("extrapolations : {} accepted / {} rejected", res.accepted_extrapolations, res.rejected_extrapolations);
+    if let Some(h) = res.history.last() {
+        println!("solve time     : {:.3}s  (n={n})", h.t);
+    }
+}
+
+fn cmd_solve(args: &mut Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let penalty = args.get_or("penalty", "l1");
+    let ratio = args.get_f64("lambda-ratio", 0.1)?;
+    let gamma = args.get_f64("gamma", 3.0)?;
+    let rho = args.get_f64("rho", 0.5)?;
+    let tol = args.get_f64("tol", 1e-8)?;
+    let engine = args.get_or("engine", "native");
+    let mut opts = SolverOpts::default().with_tol(tol);
+    if args.has("no-ws") {
+        opts.use_ws = false;
+    }
+    if args.has("no-accel") {
+        opts.anderson_m = 0;
+    }
+    opts.verbose = args.has("verbose");
+    args.finish()?;
+
+    // MCP/SCAD: paper convention, normalise columns to √n
+    let needs_norm = matches!(penalty.as_str(), "mcp" | "scad" | "l05");
+    let mut design = ds.design.clone();
+    if needs_norm {
+        design.normalize_cols((ds.n() as f64).sqrt());
+    }
+    let lam_max = quadratic_lambda_max(&design, &ds.y);
+    let lam = lam_max * ratio;
+    println!(
+        "dataset {} (n={}, p={}), penalty {penalty}, lambda = {:.3e} (ratio {ratio})",
+        ds.name,
+        ds.n(),
+        ds.p(),
+        lam
+    );
+
+    let mut datafit = Quadratic::new();
+    let mut pjrt_engine = None;
+    if engine == "pjrt" {
+        let rt = skglm::runtime::PjrtRuntime::cpu()?;
+        match skglm::runtime::PjrtGradEngine::for_design(&rt, &design) {
+            Ok(e) => {
+                println!("scoring engine : pjrt ({})", rt.platform());
+                pjrt_engine = Some(e);
+            }
+            Err(e) => println!("scoring engine : native (pjrt unavailable: {e})"),
+        }
+    }
+    let engine_ref: Option<&mut dyn skglm::solver::GradEngine> =
+        pjrt_engine.as_mut().map(|e| e as &mut dyn skglm::solver::GradEngine);
+
+    let res = match penalty.as_str() {
+        "l1" => solve(&design, &ds.y, &mut datafit, &L1::new(lam), &opts, engine_ref, None),
+        "enet" => solve(&design, &ds.y, &mut datafit, &L1L2::new(lam, rho), &opts, engine_ref, None),
+        "mcp" => solve(&design, &ds.y, &mut datafit, &Mcp::new(lam, gamma), &opts, engine_ref, None),
+        "scad" => solve(&design, &ds.y, &mut datafit, &Scad::new(lam, gamma), &opts, engine_ref, None),
+        "l05" => solve(&design, &ds.y, &mut datafit, &Lq::half(lam), &opts, engine_ref, None),
+        other => bail!("unknown penalty {other:?}"),
+    };
+    print_fit(&res, ds.n());
+    if let Some(e) = &pjrt_engine {
+        println!("pjrt grad calls: {}", e.calls);
+    }
+    Ok(())
+}
+
+fn cmd_path(args: &mut Args) -> Result<()> {
+    let penalty = args.get_or("penalty", "l1");
+    let points = args.get_usize("points", 20)?;
+    let min_ratio = args.get_f64("min-ratio", 1e-3)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let small = args.has("small");
+    args.finish()?;
+
+    let ds = correlated(CorrelatedSpec::figure1(if small { 0.1 } else { 1.0 }), seed);
+    let mut design = ds.design.clone();
+    design.normalize_cols((ds.n() as f64).sqrt());
+    let ratios = skglm::estimators::path::geometric_grid(min_ratio, points);
+    let opts = SolverOpts::default().with_tol(1e-7);
+    let path = match penalty.as_str() {
+        "l1" => skglm::estimators::path::lasso_path(&design, &ds.y, Some(&ds.beta_true), &ratios, &opts),
+        "mcp" => skglm::estimators::path::mcp_path(&design, &ds.y, Some(&ds.beta_true), &ratios, 3.0, &opts),
+        "scad" => skglm::estimators::path::scad_path(&design, &ds.y, Some(&ds.beta_true), &ratios, 3.7, &opts),
+        "l05" => skglm::estimators::path::lq_path(&design, &ds.y, Some(&ds.beta_true), &ratios, 0.5, &opts),
+        other => bail!("unknown penalty {other:?}"),
+    };
+    println!("penalty {}: {} points in {:.2}s", path.penalty_name, path.points.len(), path.total_time);
+    println!("lambda_ratio  support  est_err    pred_mse   exact");
+    for p in &path.points {
+        println!(
+            "{:<12.4e}  {:<7}  {:<9.3e}  {:<9.3e}  {}",
+            p.lambda_ratio,
+            p.support_size,
+            p.estimation_error.unwrap_or(f64::NAN),
+            p.prediction_mse.unwrap_or(f64::NAN),
+            p.recovery.as_ref().map(|r| r.exact).unwrap_or(false)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &mut Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("exp needs a name: {ALL_EXPERIMENTS:?} or all"))?;
+    let scale = if args.has("full") { Scale::Full } else { Scale::Smoke };
+    args.finish()?;
+    let outputs = run_experiment(&name, scale)?;
+    for p in outputs {
+        println!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &mut Args) -> Result<()> {
+    use skglm::coordinator::{service::EstimatorSpec, SolveService};
+    use std::sync::Arc;
+    let workers = args.get_usize("workers", 4)?;
+    let n_lambdas = args.get_usize("lambdas", 8)?;
+    args.finish()?;
+
+    let ds = Arc::new(correlated(CorrelatedSpec::figure1(0.2), 42));
+    let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+    let mut svc = SolveService::start(workers);
+    println!("fit service up with {workers} workers; submitting {n_lambdas} jobs");
+    for k in 0..n_lambdas {
+        let lam = lam_max / (10.0 * (k + 1) as f64);
+        svc.submit(Arc::clone(&ds), EstimatorSpec::Lasso { lambda: lam }, SolverOpts::default());
+    }
+    let mut outcomes = svc.collect(n_lambdas);
+    outcomes.sort_by_key(|o| o.id);
+    println!("id  lambda-slot  support  epochs  wall_s");
+    for o in &outcomes {
+        println!(
+            "{:<3} {:<12?} {:<8} {:<7} {:.3}",
+            o.id,
+            o.spec,
+            o.result.support().len(),
+            o.result.n_epochs,
+            o.wall_time
+        );
+    }
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_cv(args: &mut Args) -> Result<()> {
+    let folds = args.get_usize("folds", 5)?;
+    let points = args.get_usize("points", 15)?;
+    let workers = args.get_usize("workers", 4)?;
+    let min_ratio = args.get_f64("min-ratio", 1e-3)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let ds = load_dataset(args)?;
+    args.finish()?;
+    let ratios = skglm::estimators::path::geometric_grid(min_ratio, points);
+    let t0 = std::time::Instant::now();
+    let cv = skglm::estimators::lasso_cv(
+        &ds,
+        &ratios,
+        folds,
+        &skglm::solver::SolverOpts::default().with_tol(1e-8),
+        seed,
+        workers,
+    );
+    println!("{folds}-fold CV over {points} lambdas on {} ({:.2}s):", ds.name, t0.elapsed().as_secs_f64());
+    println!("lambda_ratio   cv_mse");
+    for (r, m) in cv.lambda_ratios.iter().zip(cv.cv_mse.iter()) {
+        let mark = if (r - cv.lambda_ratios[cv.best_index]).abs() < 1e-15 { "  <-- best" } else { "" };
+        println!("{r:<12.4e}  {m:.6e}{mark}");
+    }
+    println!(
+        "best lambda {:.4e}; refit support size {}",
+        cv.best_lambda,
+        cv.beta.iter().filter(|&&b| b != 0.0).count()
+    );
+    Ok(())
+}
+
+fn cmd_synth(args: &mut Args) -> Result<()> {
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("synth needs --out <file.svm>"))?;
+    let ds = load_dataset(args)?;
+    args.finish()?;
+    let x = match &ds.design {
+        skglm::linalg::Design::Sparse(s) => s.clone(),
+        skglm::linalg::Design::Dense(m) => {
+            // densify via triplets (fig1-style synthetic exports)
+            let mut trips = Vec::new();
+            for j in 0..m.ncols() {
+                for (i, &v) in m.col(j).iter().enumerate() {
+                    if v != 0.0 {
+                        trips.push((i, j, v));
+                    }
+                }
+            }
+            skglm::linalg::CscMatrix::from_triplets(m.nrows(), m.ncols(), &trips)
+        }
+    };
+    let data = skglm::data::libsvm::LibsvmData { x, y: ds.y.clone() };
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&out)?);
+    skglm::data::libsvm::write_libsvm(&data, &mut f)?;
+    use std::io::Write;
+    f.flush()?;
+    println!("wrote {} (n={}, p={}) in libsvm format", out, ds.n(), ds.p());
+    Ok(())
+}
+
+fn cmd_info(args: &mut Args) -> Result<()> {
+    args.finish()?;
+    println!("skglm-rs — NeurIPS 2022 'Beyond L1' reproduction\n");
+    println!("{}", skglm::bench::capability::capability_table().text());
+    match skglm::runtime::PjrtRuntime::cpu() {
+        Ok(rt) => println!("PJRT runtime: ok (platform {})", rt.platform()),
+        Err(e) => println!("PJRT runtime: unavailable ({e})"),
+    }
+    let artifacts = skglm::runtime::client::artifacts_dir();
+    let count = std::fs::read_dir(&artifacts)
+        .map(|d| d.filter_map(|e| e.ok()).filter(|e| e.path().extension().map(|x| x == "txt").unwrap_or(false)).count())
+        .unwrap_or(0);
+    println!("artifacts dir : {} ({count} HLO artifacts)", artifacts.display());
+    Ok(())
+}

@@ -1,0 +1,329 @@
+//! Optimality metrics: duality gaps for the convex problems (the y-axis of
+//! Figures 2, 3, 6, 7, 8) and the generic stationarity measure
+//! `max_j dist(−∇_j f, ∂g_j)` used for the non-convex ones (Figure 5).
+//!
+//! Duality-gap conventions follow Massias et al. (2018): for the Lasso
+//! `P(β) = ‖y−Xβ‖²/2n + λ‖β‖₁`, the dual point is the rescaled residual
+//! `θ = r / max(nλ, ‖Xᵀr‖_∞)` and
+//! `D(θ) = ‖y‖²/2n − nλ²/2 · ‖θ − y/(nλ)‖²`. The elastic net reduces to a
+//! Lasso gap on the augmented design `[X; √(nλ(1−ρ))·I]` computed without
+//! materialising the augmentation.
+
+use crate::linalg::Design;
+
+/// Lasso duality gap at `beta` (residual `r = y − Xβ` supplied to avoid a
+/// matvec when the caller maintains it; note the *sign*: `y − Xβ`).
+pub fn lasso_gap(design: &Design, y: &[f64], beta: &[f64], r: &[f64], lambda: f64) -> f64 {
+    let n = design.nrows() as f64;
+    let primal =
+        crate::linalg::sq_nrm2(r) / (2.0 * n) + lambda * crate::linalg::norm1(beta);
+    // dual feasible point: θ = r / max(nλ, ‖Xᵀr‖∞)
+    let mut xtr = vec![0.0; design.ncols()];
+    design.matvec_t(r, &mut xtr);
+    let scale = (n * lambda).max(crate::linalg::norm_inf(&xtr));
+    if scale == 0.0 {
+        return primal; // degenerate: y == Xβ and λ may be 0
+    }
+    // D(θ) = ‖y‖²/(2n) − nλ²/2 ‖θ − y/(nλ)‖²
+    let nl = n * lambda;
+    let mut dev = 0.0;
+    for (&ri, &yi) in r.iter().zip(y.iter()) {
+        let d = ri / scale - yi / nl;
+        dev += d * d;
+    }
+    let dual = crate::linalg::sq_nrm2(y) / (2.0 * n) - nl * lambda / 2.0 * dev;
+    (primal - dual).max(0.0)
+}
+
+/// Elastic-net duality gap via the augmented-Lasso reduction:
+/// `P(β) = ‖y−Xβ‖²/2n + λρ‖β‖₁ + λ(1−ρ)‖β‖²/2` equals the Lasso primal
+/// with design `[X; √(nλ(1−ρ))·I]`, target `[y; 0]` and penalty `λρ‖·‖₁`.
+pub fn enet_gap(
+    design: &Design,
+    y: &[f64],
+    beta: &[f64],
+    r: &[f64],
+    lambda: f64,
+    rho: f64,
+) -> f64 {
+    if rho >= 1.0 {
+        return lasso_gap(design, y, beta, r, lambda);
+    }
+    let n = design.nrows() as f64;
+    let l1 = lambda * rho;
+    let aug = (n * lambda * (1.0 - rho)).sqrt(); // √(nλ(1−ρ))
+    // augmented residual r_aug = [r; −aug·β]
+    let r_aug_sq = crate::linalg::sq_nrm2(r) + aug * aug * crate::linalg::sq_nrm2(beta);
+    let primal = r_aug_sq / (2.0 * n) + l1 * crate::linalg::norm1(beta);
+    // Xᵀ_aug r_aug = Xᵀ r − aug²·β
+    let mut xtr = vec![0.0; design.ncols()];
+    design.matvec_t(r, &mut xtr);
+    for (g, &b) in xtr.iter_mut().zip(beta.iter()) {
+        *g -= aug * aug * b;
+    }
+    let scale = (n * l1).max(crate::linalg::norm_inf(&xtr));
+    if scale == 0.0 {
+        return primal;
+    }
+    let nl = n * l1;
+    // ‖θ − y_aug/(nλρ)‖² with θ = r_aug/scale, y_aug = [y; 0]
+    let mut dev = 0.0;
+    for (&ri, &yi) in r.iter().zip(y.iter()) {
+        let d = ri / scale - yi / nl;
+        dev += d * d;
+    }
+    for &b in beta.iter() {
+        let d = -aug * b / scale;
+        dev += d * d;
+    }
+    let dual = crate::linalg::sq_nrm2(y) / (2.0 * n) - nl * l1 / 2.0 * dev;
+    (primal - dual).max(0.0)
+}
+
+/// Sparse-logistic duality gap:
+/// `P(β) = (1/n)Σ log(1+e^{−y_i x_iᵀβ}) + λ‖β‖₁`;
+/// dual `D(θ) = −(1/n)Σ [θ_i n log(θ_i n) + (1−θ_i n)log(1−θ_i n)]` over
+/// feasible `‖Xᵀ(θ⊙y)‖∞ ≤ λ` — we rescale the natural residual point.
+pub fn logistic_gap(design: &Design, y: &[f64], beta: &[f64], xw: &[f64], lambda: f64) -> f64 {
+    let n = design.nrows() as f64;
+    let mut primal = 0.0;
+    for (&s, &yi) in xw.iter().zip(y.iter()) {
+        let v = -yi * s;
+        primal += if v > 33.0 { v } else { v.exp().ln_1p() };
+    }
+    primal = primal / n + lambda * crate::linalg::norm1(beta);
+    // natural dual point: w_i = σ(−y_i xw_i)/n, dual var θ_i = y_i w_i
+    let mut theta: Vec<f64> = xw
+        .iter()
+        .zip(y.iter())
+        .map(|(&s, &yi)| {
+            let sig = 1.0 / (1.0 + (yi * s).exp());
+            yi * sig / n
+        })
+        .collect();
+    let mut xt = vec![0.0; design.ncols()];
+    design.matvec_t(&theta, &mut xt);
+    let scale = (crate::linalg::norm_inf(&xt) / lambda).max(1.0);
+    for t in theta.iter_mut() {
+        *t /= scale;
+    }
+    // D(θ) = −(1/n) Σ h(n y_i θ_i), h(u) = u ln u + (1−u) ln(1−u)
+    let mut dual = 0.0;
+    for (&t, &yi) in theta.iter().zip(y.iter()) {
+        let u = (n * yi * t).clamp(1e-12, 1.0 - 1e-12);
+        dual -= u * u.ln() + (1.0 - u) * (1.0 - u).ln();
+    }
+    dual /= n;
+    (primal - dual).max(0.0)
+}
+
+/// Generic stationarity: `max_j dist(−∇_j f(β), ∂g_j(β_j))` — the paper's
+/// Figure-5 metric and the solver's stopping criterion.
+pub fn stationarity<D: crate::datafit::Datafit, P: crate::penalty::Penalty>(
+    design: &Design,
+    y: &[f64],
+    datafit: &D,
+    penalty: &P,
+    beta: &[f64],
+    state: &[f64],
+) -> f64 {
+    let mut grad = vec![0.0; design.ncols()];
+    datafit.grad_full(design, y, state, beta, &mut grad);
+    let lipschitz = datafit.lipschitz();
+    grad.iter()
+        .enumerate()
+        .map(|(j, &g)| {
+            if lipschitz[j] == 0.0 {
+                0.0
+            } else {
+                penalty.subdiff_distance(beta[j], g, j)
+            }
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Support-recovery statistics against a ground truth (Figure 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SupportRecovery {
+    pub true_positives: usize,
+    pub false_positives: usize,
+    pub false_negatives: usize,
+    pub f1: f64,
+    /// exact support recovery
+    pub exact: bool,
+}
+
+pub fn support_recovery(beta: &[f64], beta_true: &[f64], tol: f64) -> SupportRecovery {
+    assert_eq!(beta.len(), beta_true.len());
+    let (mut tp, mut fp, mut fne) = (0usize, 0usize, 0usize);
+    for (&b, &bt) in beta.iter().zip(beta_true.iter()) {
+        let est = b.abs() > tol;
+        let tru = bt != 0.0;
+        match (est, tru) {
+            (true, true) => tp += 1,
+            (true, false) => fp += 1,
+            (false, true) => fne += 1,
+            _ => {}
+        }
+    }
+    let f1 = if 2 * tp + fp + fne == 0 {
+        1.0
+    } else {
+        2.0 * tp as f64 / (2 * tp + fp + fne) as f64
+    };
+    SupportRecovery { true_positives: tp, false_positives: fp, false_negatives: fne, f1, exact: fp == 0 && fne == 0 }
+}
+
+/// Prediction mean-squared error ‖Xβ − Xβ*‖²/n (Figure 1's bottom panel).
+pub fn prediction_mse(design: &Design, beta: &[f64], beta_true: &[f64]) -> f64 {
+    let n = design.nrows();
+    let mut a = vec![0.0; n];
+    let mut b = vec![0.0; n];
+    design.matvec(beta, &mut a);
+    design.matvec(beta_true, &mut b);
+    a.iter().zip(b.iter()).map(|(x, y)| (x - y) * (x - y)).sum::<f64>() / n as f64
+}
+
+/// Estimation error ‖β − β*‖₂ (Figure 1's top panel).
+pub fn estimation_error(beta: &[f64], beta_true: &[f64]) -> f64 {
+    beta.iter()
+        .zip(beta_true.iter())
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{correlated, CorrelatedSpec};
+    use crate::datafit::{Datafit, Quadratic};
+    use crate::penalty::L1;
+    use crate::solver::{solve, SolverOpts};
+
+    fn lambda_max(design: &Design, y: &[f64]) -> f64 {
+        let n = design.nrows() as f64;
+        let mut xty = vec![0.0; design.ncols()];
+        design.matvec_t(y, &mut xty);
+        crate::linalg::norm_inf(&xty) / n
+    }
+
+    fn residual(design: &Design, y: &[f64], beta: &[f64]) -> Vec<f64> {
+        let mut xb = vec![0.0; design.nrows()];
+        design.matvec(beta, &mut xb);
+        y.iter().zip(xb.iter()).map(|(a, b)| a - b).collect()
+    }
+
+    #[test]
+    fn lasso_gap_positive_and_zero_at_optimum() {
+        let ds = correlated(CorrelatedSpec { n: 60, p: 100, rho: 0.5, nnz: 6, snr: 10.0 }, 0);
+        let lam = lambda_max(&ds.design, &ds.y) / 10.0;
+        // random point: gap > 0
+        let beta0 = vec![0.01; 100];
+        let r0 = residual(&ds.design, &ds.y, &beta0);
+        assert!(lasso_gap(&ds.design, &ds.y, &beta0, &r0, lam) > 0.0);
+        // optimum: gap ~ 0
+        let mut f = Quadratic::new();
+        let res = solve(&ds.design, &ds.y, &mut f, &L1::new(lam), &SolverOpts::default().with_tol(1e-12), None, None);
+        let r = residual(&ds.design, &ds.y, &res.beta);
+        let gap = lasso_gap(&ds.design, &ds.y, &res.beta, &r, lam);
+        assert!(gap < 1e-10, "gap {gap}");
+    }
+
+    #[test]
+    fn gap_bounds_suboptimality() {
+        // P(β) − P* <= gap for any β
+        let ds = correlated(CorrelatedSpec { n: 50, p: 60, rho: 0.4, nnz: 5, snr: 10.0 }, 1);
+        let lam = lambda_max(&ds.design, &ds.y) / 5.0;
+        let mut f = Quadratic::new();
+        let res = solve(&ds.design, &ds.y, &mut f, &L1::new(lam), &SolverOpts::default().with_tol(1e-13), None, None);
+        let p_star = res.objective;
+        let beta = vec![0.05; 60];
+        let r = residual(&ds.design, &ds.y, &beta);
+        let n = 50.0;
+        let primal = crate::linalg::sq_nrm2(&r) / (2.0 * n) + lam * crate::linalg::norm1(&beta);
+        let gap = lasso_gap(&ds.design, &ds.y, &beta, &r, lam);
+        assert!(gap + 1e-12 >= primal - p_star, "gap {gap} < subopt {}", primal - p_star);
+    }
+
+    #[test]
+    fn enet_gap_zero_at_optimum_and_matches_lasso_at_rho_1() {
+        let ds = correlated(CorrelatedSpec { n: 50, p: 80, rho: 0.5, nnz: 6, snr: 10.0 }, 2);
+        let lam = lambda_max(&ds.design, &ds.y) / 10.0;
+        let beta = vec![0.02; 80];
+        let r = residual(&ds.design, &ds.y, &beta);
+        let g1 = enet_gap(&ds.design, &ds.y, &beta, &r, lam, 1.0);
+        let g2 = lasso_gap(&ds.design, &ds.y, &beta, &r, lam);
+        assert!((g1 - g2).abs() < 1e-12);
+        // enet optimum via solver
+        let rho = 0.5;
+        let mut f = Quadratic::new();
+        let res = solve(
+            &ds.design,
+            &ds.y,
+            &mut f,
+            &crate::penalty::L1L2::new(lam, rho),
+            &SolverOpts::default().with_tol(1e-12),
+            None,
+            None,
+        );
+        let r = residual(&ds.design, &ds.y, &res.beta);
+        let gap = enet_gap(&ds.design, &ds.y, &res.beta, &r, lam, rho);
+        assert!(gap < 1e-10, "gap {gap}");
+    }
+
+    #[test]
+    fn logistic_gap_zero_at_optimum() {
+        let ds = correlated(CorrelatedSpec { n: 80, p: 40, rho: 0.3, nnz: 4, snr: 10.0 }, 3);
+        let yb: Vec<f64> = ds.y.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+        // lambda_max for logistic: ||X^T y||_inf / (2n)
+        let mut xty = vec![0.0; 40];
+        ds.design.matvec_t(&yb, &mut xty);
+        let lam = crate::linalg::norm_inf(&xty) / (2.0 * 80.0) / 5.0;
+        let mut f = crate::datafit::Logistic::new();
+        let res = solve(&ds.design, &yb, &mut f, &L1::new(lam), &SolverOpts::default().with_tol(1e-12), None, None);
+        let mut xw = vec![0.0; 80];
+        ds.design.matvec(&res.beta, &mut xw);
+        let gap = logistic_gap(&ds.design, &yb, &res.beta, &xw, lam);
+        assert!(gap.abs() < 1e-8, "gap {gap}");
+    }
+
+    #[test]
+    fn stationarity_zero_at_optimum_positive_elsewhere() {
+        let ds = correlated(CorrelatedSpec { n: 60, p: 90, rho: 0.5, nnz: 6, snr: 8.0 }, 4);
+        let lam = lambda_max(&ds.design, &ds.y) / 10.0;
+        let pen = L1::new(lam);
+        let mut f = Quadratic::new();
+        f.init(&ds.design, &ds.y);
+        let beta0 = vec![0.5; 90];
+        let s0 = f.init_state(&ds.design, &ds.y, &beta0);
+        assert!(stationarity(&ds.design, &ds.y, &f, &pen, &beta0, &s0) > 0.0);
+        let mut f2 = Quadratic::new();
+        let res = solve(&ds.design, &ds.y, &mut f2, &pen, &SolverOpts::default().with_tol(1e-12), None, None);
+        let s = f.init_state(&ds.design, &ds.y, &res.beta);
+        assert!(stationarity(&ds.design, &ds.y, &f, &pen, &res.beta, &s) < 1e-10);
+    }
+
+    #[test]
+    fn support_recovery_metrics() {
+        let bt = vec![1.0, 0.0, -1.0, 0.0];
+        let exact = support_recovery(&[0.9, 0.0, -1.2, 0.0], &bt, 1e-9);
+        assert!(exact.exact);
+        assert_eq!(exact.f1, 1.0);
+        let missed = support_recovery(&[0.9, 0.0, 0.0, 0.0], &bt, 1e-9);
+        assert_eq!(missed.false_negatives, 1);
+        assert!(!missed.exact);
+        let extra = support_recovery(&[0.9, 0.5, -1.0, 0.0], &bt, 1e-9);
+        assert_eq!(extra.false_positives, 1);
+    }
+
+    #[test]
+    fn estimation_and_prediction_errors_zero_at_truth() {
+        let ds = correlated(CorrelatedSpec { n: 30, p: 20, rho: 0.2, nnz: 3, snr: 5.0 }, 5);
+        assert_eq!(estimation_error(&ds.beta_true, &ds.beta_true), 0.0);
+        assert_eq!(prediction_mse(&ds.design, &ds.beta_true, &ds.beta_true), 0.0);
+        let other = vec![0.0; 20];
+        assert!(estimation_error(&other, &ds.beta_true) > 0.0);
+        assert!(prediction_mse(&ds.design, &other, &ds.beta_true) > 0.0);
+    }
+}

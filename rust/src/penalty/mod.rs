@@ -1,0 +1,129 @@
+//! Separable penalties `g(β) = Σ_j g_j(β_j)` of Problem (1) — convex and
+//! non-convex.
+//!
+//! A penalty exposes exactly the information the paper's algorithm needs:
+//! its value, its proximal operator (Assumption: computable exactly), the
+//! distance from `−∇_j f` to the Fréchet subdifferential `∂g_j(β_j)`
+//! (the working-set score of Eq. 2), and generalized-support membership
+//! (Definition 4). Penalties for which `score^∂` is uninformative (ℓ_q,
+//! q<1 — Appendix C, Example 1) opt into the fixed-point-violation score
+//! `score^cd` (Eq. 24) via [`Penalty::use_cd_score`].
+
+pub mod block;
+pub mod box_ind;
+pub mod l1;
+pub mod l1_l2;
+pub mod lq;
+pub mod mcp;
+pub mod scad;
+pub mod weighted_l1;
+
+pub use block::{BlockL21, BlockMcp, BlockPenalty, BlockScad};
+pub use box_ind::BoxIndicator;
+pub use l1::L1;
+pub use l1_l2::L1L2;
+pub use lq::Lq;
+pub use mcp::Mcp;
+pub use scad::Scad;
+pub use weighted_l1::WeightedL1;
+
+/// A separable penalty term.
+pub trait Penalty: Clone + Send + Sync {
+    /// `g_j(β_j)`. Must be lower-bounded (Assumption 2); indicator
+    /// penalties return 0 inside and `f64::INFINITY` outside.
+    fn value(&self, beta_j: f64, j: usize) -> f64;
+
+    /// `prox_{step · g_j}(v) = argmin_x ½(x − v)² + step·g_j(x)`.
+    ///
+    /// The CD update (Algorithm 3) calls this with `step = 1/L_j`. For the
+    /// non-convex penalties the closed forms are valid in their
+    /// α-semi-convex regime (MCP: γ > step; SCAD: γ > 1 + step), which the
+    /// constructors and [`Penalty::validate_step`] enforce.
+    fn prox(&self, v: f64, step: f64, j: usize) -> f64;
+
+    /// `dist(−grad_j, ∂g_j(β_j))` — the score of Eq. (2). `grad_j` is
+    /// `∇_j f(β)`.
+    fn subdiff_distance(&self, beta_j: f64, grad_j: f64, j: usize) -> f64;
+
+    /// Is `∂g_j` a singleton at `beta_j` (generalized support,
+    /// Definition 4)?
+    fn in_gsupp(&self, beta_j: f64) -> bool;
+
+    /// Whether this penalty is convex (screening/duality shortcuts apply).
+    fn is_convex(&self) -> bool;
+
+    /// Appendix-C penalties (ℓ_q) return true: the solver scores features
+    /// by the fixed-point violation `|β_j − prox_{g_j/L_j}(β_j − ∇_j f/L_j)|`
+    /// instead of the subdifferential distance.
+    fn use_cd_score(&self) -> bool {
+        false
+    }
+
+    /// Panic if `step = 1/L_j` lies outside the penalty's validity regime
+    /// (constructors can't check this without the datafit).
+    fn validate_step(&self, _step: f64) {}
+
+    fn name(&self) -> &'static str;
+
+    /// `Σ_j g_j(β_j)`.
+    fn value_sum(&self, beta: &[f64]) -> f64 {
+        beta.iter().enumerate().map(|(j, &b)| self.value(b, j)).sum()
+    }
+}
+
+/// Soft-thresholding `ST(v, t) = sign(v)·max(|v| − t, 0)` — shared by
+/// several prox implementations.
+#[inline]
+pub fn soft_threshold(v: f64, t: f64) -> f64 {
+    if v > t {
+        v - t
+    } else if v < -t {
+        v + t
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_helpers {
+    use super::Penalty;
+
+    /// Brute-force check that `prox(v, step)` minimises
+    /// `½(x−v)² + step·g(x)` against a dense grid of candidates —
+    /// the ground-truth oracle every penalty's prox test uses.
+    pub fn assert_prox_is_minimizer<P: Penalty>(pen: &P, v: f64, step: f64, tol: f64) {
+        let x_star = pen.prox(v, step, 0);
+        let obj = |x: f64| 0.5 * (x - v) * (x - v) + step * pen.value(x, 0);
+        let o_star = obj(x_star);
+        assert!(
+            o_star.is_finite(),
+            "{}: prox({v}, {step}) = {x_star} has non-finite objective",
+            pen.name()
+        );
+        let lim = 2.0 * v.abs() + 2.0;
+        let mut x = -lim;
+        while x <= lim {
+            let o = obj(x);
+            assert!(
+                o_star <= o + tol,
+                "{}: prox({v},{step})={x_star} (obj {o_star}) beaten by x={x} (obj {o})",
+                pen.name()
+            );
+            x += lim / 2000.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(1.0, 1.0), 0.0);
+    }
+}

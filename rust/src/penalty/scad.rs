@@ -1,0 +1,174 @@
+//! SCAD penalty (Fan & Li 2001; grouped with MCP in the paper as the
+//! α-semi-convex non-convex class, valid for γ L_j > 1 + ... — here the
+//! prox closed form requires `γ > 1 + step`).
+//!
+//! ```text
+//! SCAD_{λ,γ}(x) = λ|x|                          if |x| ≤ λ
+//!               = (2γλ|x| − x² − λ²)/(2(γ−1))   if λ < |x| ≤ γλ
+//!               = λ²(γ+1)/2                     if |x| > γλ
+//! ```
+
+use super::{soft_threshold, Penalty};
+
+#[derive(Clone, Debug)]
+pub struct Scad {
+    pub lambda: f64,
+    pub gamma: f64,
+}
+
+impl Scad {
+    pub fn new(lambda: f64, gamma: f64) -> Self {
+        assert!(lambda >= 0.0);
+        assert!(gamma > 2.0, "SCAD needs gamma > 2 (literature default 3.7)");
+        Self { lambda, gamma }
+    }
+}
+
+impl Penalty for Scad {
+    #[inline]
+    fn value(&self, beta_j: f64, _j: usize) -> f64 {
+        let (l, g) = (self.lambda, self.gamma);
+        let a = beta_j.abs();
+        if a <= l {
+            l * a
+        } else if a <= g * l {
+            (2.0 * g * l * a - a * a - l * l) / (2.0 * (g - 1.0))
+        } else {
+            l * l * (g + 1.0) / 2.0
+        }
+    }
+
+    /// Three-region prox; requires `γ > 1 + step`.
+    #[inline]
+    fn prox(&self, v: f64, step: f64, _j: usize) -> f64 {
+        let (l, g) = (self.lambda, self.gamma);
+        debug_assert!(
+            g > 1.0 + step,
+            "SCAD prox outside semi-convex regime: gamma={g} <= 1 + step={step}"
+        );
+        let a = v.abs();
+        if a <= l * (1.0 + step) {
+            soft_threshold(v, step * l)
+        } else if a <= g * l {
+            ((g - 1.0) * v - v.signum() * step * g * l) / (g - 1.0 - step)
+        } else {
+            v
+        }
+    }
+
+    #[inline]
+    fn subdiff_distance(&self, beta_j: f64, grad_j: f64, _j: usize) -> f64 {
+        let (l, g) = (self.lambda, self.gamma);
+        let a = beta_j.abs();
+        if beta_j == 0.0 {
+            (grad_j.abs() - l).max(0.0)
+        } else if a <= l {
+            (grad_j + l * beta_j.signum()).abs()
+        } else if a <= g * l {
+            (grad_j + beta_j.signum() * (g * l - a) / (g - 1.0)).abs()
+        } else {
+            grad_j.abs()
+        }
+    }
+
+    #[inline]
+    fn in_gsupp(&self, beta_j: f64) -> bool {
+        beta_j != 0.0
+    }
+
+    fn is_convex(&self) -> bool {
+        false
+    }
+
+    fn validate_step(&self, step: f64) {
+        assert!(
+            self.gamma > 1.0 + step,
+            "SCAD with gamma={} is not alpha-semi-convex for step {step}; \
+             normalise columns or increase gamma",
+            self.gamma
+        );
+    }
+
+    fn name(&self) -> &'static str {
+        "scad"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::penalty::test_helpers::assert_prox_is_minimizer;
+
+    #[test]
+    fn value_regions_and_continuity() {
+        let p = Scad::new(1.0, 3.7);
+        assert_eq!(p.value(0.0, 0), 0.0);
+        assert_eq!(p.value(0.5, 0), 0.5);
+        // continuity at |x| = λ and |x| = γλ
+        for &knee in &[1.0, 3.7] {
+            let lo = p.value(knee - 1e-9, 0);
+            let hi = p.value(knee + 1e-9, 0);
+            assert!((lo - hi).abs() < 1e-7, "jump at {knee}");
+        }
+        // constant tail
+        assert_eq!(p.value(10.0, 0), p.value(-50.0, 0));
+        assert!((p.value(10.0, 0) - 4.7 / 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn prox_is_identity_for_large_inputs() {
+        let p = Scad::new(1.0, 3.7);
+        assert_eq!(p.prox(5.0, 1.0, 0), 5.0);
+        assert_eq!(p.prox(-5.0, 1.0, 0), -5.0);
+    }
+
+    #[test]
+    fn prox_soft_thresholds_small_inputs() {
+        let p = Scad::new(1.0, 3.7);
+        assert_eq!(p.prox(1.5, 1.0, 0), 0.5);
+        assert_eq!(p.prox(0.9, 1.0, 0), 0.0);
+    }
+
+    #[test]
+    fn prox_continuous_at_region_boundaries() {
+        let p = Scad::new(1.0, 3.7);
+        let step = 0.9;
+        for &v in &[1.0 * (1.0 + step), 3.7] {
+            let lo = p.prox(v - 1e-9, step, 0);
+            let hi = p.prox(v + 1e-9, step, 0);
+            assert!((lo - hi).abs() < 1e-6, "jump at {v}: {lo} vs {hi}");
+        }
+    }
+
+    #[test]
+    fn prox_minimizes_objective_in_semiconvex_regime() {
+        let p = Scad::new(0.8, 3.7);
+        for &v in &[-6.0, -2.0, -0.5, 0.0, 0.7, 1.8, 3.0, 8.0] {
+            for &step in &[0.4, 1.0, 2.0] {
+                assert_prox_is_minimizer(&p, v, step, 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn subdiff_distance_zero_at_prox_fixed_points() {
+        let p = Scad::new(1.0, 3.7);
+        let step = 0.5;
+        for &v in &[-4.0, -1.2, 0.3, 2.2, 6.0] {
+            let beta = p.prox(v, step, 0);
+            // prox optimality: (v − β)/step ∈ ∂g(β), i.e. β is a critical
+            // point of f + g when ∇f(β) = (β − v)/step
+            let grad = (beta - v) / step;
+            assert!(
+                p.subdiff_distance(beta, grad, 0) < 1e-10,
+                "v={v}, beta={beta}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "gamma > 2")]
+    fn constructor_rejects_small_gamma() {
+        Scad::new(1.0, 1.5);
+    }
+}

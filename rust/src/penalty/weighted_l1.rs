@@ -1,0 +1,90 @@
+//! Weighted ℓ1 penalty `g_j(x) = λ w_j |x|` with `w_j ≥ 0` (possibly 0) —
+//! the inner penalty of the iteratively-reweighted-ℓ1 MCP baseline
+//! (Candès et al. 2008; paper §3.2: "this approach requires solving
+//! weighted Lassos with some 0 weights", which skglm's generic design —
+//! and ours — handles natively).
+
+use super::{soft_threshold, Penalty};
+
+#[derive(Clone, Debug)]
+pub struct WeightedL1 {
+    pub lambda: f64,
+    pub weights: Vec<f64>,
+}
+
+impl WeightedL1 {
+    pub fn new(lambda: f64, weights: Vec<f64>) -> Self {
+        assert!(lambda >= 0.0);
+        assert!(weights.iter().all(|&w| w >= 0.0), "weights must be non-negative");
+        Self { lambda, weights }
+    }
+}
+
+impl Penalty for WeightedL1 {
+    #[inline]
+    fn value(&self, beta_j: f64, j: usize) -> f64 {
+        self.lambda * self.weights[j] * beta_j.abs()
+    }
+
+    #[inline]
+    fn prox(&self, v: f64, step: f64, j: usize) -> f64 {
+        soft_threshold(v, step * self.lambda * self.weights[j])
+    }
+
+    #[inline]
+    fn subdiff_distance(&self, beta_j: f64, grad_j: f64, j: usize) -> f64 {
+        let lw = self.lambda * self.weights[j];
+        if beta_j == 0.0 {
+            (grad_j.abs() - lw).max(0.0)
+        } else {
+            (grad_j + lw * beta_j.signum()).abs()
+        }
+    }
+
+    #[inline]
+    fn in_gsupp(&self, beta_j: f64) -> bool {
+        beta_j != 0.0
+    }
+
+    fn is_convex(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str {
+        "weighted_l1"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_weight_features_are_unpenalized() {
+        let p = WeightedL1::new(1.0, vec![0.0, 1.0]);
+        // weight 0: prox is identity, any nonzero is in the "support", and
+        // optimality demands grad = 0
+        assert_eq!(p.prox(0.3, 1.0, 0), 0.3);
+        assert_eq!(p.subdiff_distance(0.0, 0.4, 0), 0.4);
+        // weight 1: classic lasso behaviour
+        assert_eq!(p.prox(0.3, 1.0, 1), 0.0);
+        assert_eq!(p.subdiff_distance(0.0, 0.4, 1), 0.0);
+    }
+
+    #[test]
+    fn matches_plain_l1_with_unit_weights() {
+        let w = WeightedL1::new(0.9, vec![1.0; 4]);
+        let l1 = crate::penalty::L1::new(0.9);
+        for &v in &[-2.0, 0.1, 3.0] {
+            assert_eq!(w.prox(v, 0.7, 2), l1.prox(v, 0.7, 2));
+            assert_eq!(w.value(v, 3), l1.value(v, 3));
+            assert_eq!(w.subdiff_distance(v, 0.2, 1), l1.subdiff_distance(v, 0.2, 1));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn rejects_negative_weights() {
+        WeightedL1::new(1.0, vec![-0.1]);
+    }
+}

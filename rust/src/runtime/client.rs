@@ -1,0 +1,155 @@
+//! PJRT CPU client + artifact loading.
+//!
+//! Pattern from /opt/xla-example/load_hlo.rs: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. One compiled executable per artifact.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Directory holding `*.hlo.txt` artifacts (override with
+/// `SKGLM_ARTIFACTS`).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("SKGLM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Path of a named artifact at a given (n, p) shape — the naming
+/// convention `aot.py` writes: `<op>_n{n}_p{p}.hlo.txt`.
+pub fn artifact_path(op: &str, n: usize, p: usize) -> PathBuf {
+    artifacts_dir().join(format!("{op}_n{n}_p{p}.hlo.txt"))
+}
+
+/// A compiled executable with its declared shape.
+pub struct Artifact {
+    pub op: String,
+    pub n: usize,
+    pub p: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute on f32 input buffers; returns the flat f32 outputs of the
+    /// (1-tuple) result.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .context("PJRT execution failed")?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute an artifact whose result is an N-tuple (e.g. the fused
+    /// score kernels return `(grad, score)`); returns one f32 vector per
+    /// tuple element.
+    pub fn run_tuple(&self, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .context("PJRT execution failed")?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts.into_iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+
+    /// Execute on device-resident buffers (no host→device copy for inputs
+    /// already uploaded — the scoring engine keeps the design on device).
+    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<f32>> {
+        let result = self
+            .exe
+            .execute_b(inputs)
+            .context("PJRT execution failed")?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Wraps the PJRT CPU client; compiles artifacts on demand.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+    }
+
+    /// Cheap handle clone (the underlying client is reference-counted).
+    pub fn clone_handle(&self) -> Self {
+        Self { client: self.client.clone() }
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload f32 host data to the default device (used by the scoring
+    /// engine to keep the design matrix resident across calls).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?)
+    }
+
+    /// Load + compile `<op>_n{n}_p{p}.hlo.txt`.
+    pub fn load(&self, op: &str, n: usize, p: usize) -> Result<Artifact> {
+        let path = artifact_path(op, n, p);
+        self.load_path(&path, op, n, p)
+    }
+
+    /// Load + compile an explicit path.
+    pub fn load_path(&self, path: &Path, op: &str, n: usize, p: usize) -> Result<Artifact> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Artifact { op: op.to_string(), n, p, exe })
+    }
+
+    /// Does the artifact file exist (cheap pre-check before compiling)?
+    pub fn available(op: &str, n: usize, p: usize) -> bool {
+        artifact_path(op, n, p).exists()
+    }
+}
+
+/// Build an f32 literal of the given shape from f64 data (row-major).
+pub fn literal_from_f64(data: &[f64], shape: &[usize]) -> Result<xla::Literal> {
+    let f32s: Vec<f32> = data.iter().map(|&v| v as f32).collect();
+    let lit = xla::Literal::vec1(&f32s);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_path_convention() {
+        std::env::remove_var("SKGLM_ARTIFACTS");
+        assert_eq!(
+            artifact_path("xt_r", 100, 200),
+            PathBuf::from("artifacts/xt_r_n100_p200.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let lit = literal_from_f64(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO **text** — see DESIGN.md and /opt/xla-example/README.md for why
+//! text, not serialized protos) and serves them to the solver as a
+//! [`crate::solver::GradEngine`].
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only place the solve path touches XLA, and it is entirely optional —
+//! every solver falls back to the native Rust path when no artifact
+//! matches the problem shape.
+
+pub mod client;
+pub mod engine;
+
+pub use client::{artifact_path, Artifact, PjrtRuntime};
+pub use engine::PjrtGradEngine;

@@ -1,0 +1,270 @@
+//! Anderson extrapolation (paper Algorithm 4, Bertrand & Massias 2021).
+//!
+//! Keeps the last M+1 working-set iterates β^{(k−M)}, …, β^{(k)}; forms the
+//! difference matrix `U = (β^{(1)}−β^{(0)}, …, β^{(M)}−β^{(M−1)})`, solves
+//! the M×M normal system `(UᵀU) z = 1` (Tikhonov-regularised — UᵀU is
+//! singular at convergence), normalises `c = z / 1ᵀz`, and proposes
+//! `β_extr = Σ_k c_k β^{(k)}`. Cost O(M²·|ws| + M³) per proposal, as the
+//! paper annotates. The *inner solver* owns the objective guard that makes
+//! this safe for non-convex problems.
+
+/// Fixed-capacity iterate buffer + extrapolation solve.
+#[derive(Clone, Debug)]
+pub struct Anderson {
+    m: usize,
+    /// stored iterates, oldest first; at most m+1
+    iterates: Vec<Vec<f64>>,
+}
+
+impl Anderson {
+    pub fn new(m: usize) -> Self {
+        assert!(m >= 2, "Anderson needs M >= 2");
+        Self { m, iterates: Vec::with_capacity(m + 1) }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Reset the buffer (on working-set change or rejected proposal).
+    pub fn clear(&mut self) {
+        self.iterates.clear();
+    }
+
+    /// Record an iterate. Returns true when the buffer holds M+1 iterates
+    /// and an extrapolation can be attempted.
+    pub fn push(&mut self, x: &[f64]) -> bool {
+        if self.iterates.len() == self.m + 1 {
+            self.iterates.remove(0);
+        }
+        self.iterates.push(x.to_vec());
+        self.iterates.len() == self.m + 1
+    }
+
+    /// Solve for the extrapolated point. Returns None if the buffer is not
+    /// full or the normal system is too ill-conditioned to trust.
+    pub fn extrapolate(&self) -> Option<Vec<f64>> {
+        let c = self.coefficients()?;
+        Some(self.combine(&c))
+    }
+
+    /// The extrapolation weights `c` (length M, summing to 1) over the
+    /// last M stored iterates — exposed so callers can combine *other*
+    /// affine-in-β quantities (e.g. the residual state) at O(n·M) instead
+    /// of replaying O(|ws|·n) column updates.
+    pub fn coefficients(&self) -> Option<Vec<f64>> {
+        if self.iterates.len() != self.m + 1 {
+            return None;
+        }
+        let m = self.m;
+        let dim = self.iterates[0].len();
+        // Gram matrix G = UᵀU where U[:,k] = x_{k+1} − x_k
+        let mut g = vec![0.0; m * m];
+        for a in 0..m {
+            for b in a..m {
+                let mut s = 0.0;
+                for i in 0..dim {
+                    let ua = self.iterates[a + 1][i] - self.iterates[a][i];
+                    let ub = self.iterates[b + 1][i] - self.iterates[b][i];
+                    s += ua * ub;
+                }
+                g[a * m + b] = s;
+                g[b * m + a] = s;
+            }
+        }
+        // Tikhonov: G += 1e-12 · trace(G) · I (Scieur et al. 2016 style)
+        let trace: f64 = (0..m).map(|k| g[k * m + k]).sum();
+        if trace == 0.0 {
+            return None; // iterates identical: already converged
+        }
+        let reg = 1e-12 * trace;
+        for k in 0..m {
+            g[k * m + k] += reg;
+        }
+        // solve G z = 1 by Gaussian elimination with partial pivoting
+        let mut z = vec![1.0; m];
+        if !solve_in_place(&mut g, &mut z, m) {
+            return None;
+        }
+        let sum: f64 = z.iter().sum();
+        if sum.abs() < 1e-300 || !sum.is_finite() {
+            return None;
+        }
+        for zk in z.iter_mut() {
+            *zk /= sum;
+        }
+        if z.iter().any(|v| !v.is_finite()) {
+            return None;
+        }
+        Some(z)
+    }
+
+    /// `Σ c_k x_{k+1}` over the stored iterates.
+    pub fn combine(&self, c: &[f64]) -> Vec<f64> {
+        assert_eq!(c.len(), self.m);
+        let dim = self.iterates[0].len();
+        let mut out = vec![0.0; dim];
+        for (k, &ck) in c.iter().enumerate() {
+            for (o, &xi) in out.iter_mut().zip(self.iterates[k + 1].iter()) {
+                *o += ck * xi;
+            }
+        }
+        out
+    }
+
+    /// Combine an external per-iterate series (e.g. state snapshots) with
+    /// the same weights: `Σ c_k series[k+1]`. `series` must have M+1
+    /// entries aligned with the pushes.
+    pub fn combine_series(&self, c: &[f64], series: &[Vec<f64>]) -> Vec<f64> {
+        assert_eq!(c.len(), self.m);
+        assert_eq!(series.len(), self.m + 1);
+        let dim = series[0].len();
+        let mut out = vec![0.0; dim];
+        for (k, &ck) in c.iter().enumerate() {
+            for (o, &xi) in out.iter_mut().zip(series[k + 1].iter()) {
+                *o += ck * xi;
+            }
+        }
+        out
+    }
+}
+
+/// In-place dense solve of `A x = b` (row-major m×m), partial pivoting.
+/// Returns false if A is numerically singular.
+fn solve_in_place(a: &mut [f64], b: &mut [f64], m: usize) -> bool {
+    for col in 0..m {
+        // pivot
+        let mut piv = col;
+        let mut best = a[col * m + col].abs();
+        for r in col + 1..m {
+            let v = a[r * m + col].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-300 {
+            return false;
+        }
+        if piv != col {
+            for k in 0..m {
+                a.swap(col * m + k, piv * m + k);
+            }
+            b.swap(col, piv);
+        }
+        let d = a[col * m + col];
+        for r in col + 1..m {
+            let factor = a[r * m + col] / d;
+            if factor != 0.0 {
+                for k in col..m {
+                    a[r * m + k] -= factor * a[col * m + k];
+                }
+                b[r] -= factor * b[col];
+            }
+        }
+    }
+    for col in (0..m).rev() {
+        let mut s = b[col];
+        for k in col + 1..m {
+            s -= a[col * m + k] * b[k];
+        }
+        b[col] = s / a[col * m + col];
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn needs_full_buffer() {
+        let mut an = Anderson::new(3);
+        assert!(!an.push(&[1.0, 2.0]));
+        assert!(an.extrapolate().is_none());
+        assert!(!an.push(&[1.5, 2.5]));
+        assert!(!an.push(&[1.75, 2.75]));
+        assert!(an.push(&[1.875, 2.875]));
+        assert!(an.extrapolate().is_some());
+    }
+
+    #[test]
+    fn exact_for_linear_fixed_point_iteration() {
+        // x_{k+1} = T x_k + b with spectral radius < 1: Anderson with
+        // M >= dim recovers the fixed point exactly from M+1 iterates.
+        let t = [[0.6, 0.2], [0.1, 0.5]];
+        let b = [1.0, -0.5];
+        let step = |x: [f64; 2]| {
+            [
+                t[0][0] * x[0] + t[0][1] * x[1] + b[0],
+                t[1][0] * x[0] + t[1][1] * x[1] + b[1],
+            ]
+        };
+        // true fixed point: (I−T) x* = b
+        let det = (1.0 - t[0][0]) * (1.0 - t[1][1]) - t[0][1] * t[1][0];
+        let xs = [
+            ((1.0 - t[1][1]) * b[0] + t[0][1] * b[1]) / det,
+            (t[1][0] * b[0] + (1.0 - t[0][0]) * b[1]) / det,
+        ];
+        let mut an = Anderson::new(3);
+        let mut x = [0.0, 0.0];
+        an.push(&x);
+        for _ in 0..3 {
+            x = step(x);
+            an.push(&x);
+        }
+        let extr = an.extrapolate().unwrap();
+        assert!((extr[0] - xs[0]).abs() < 1e-8, "{extr:?} vs {xs:?}");
+        assert!((extr[1] - xs[1]).abs() < 1e-8);
+    }
+
+    #[test]
+    fn beats_plain_iteration_on_ill_conditioned_system() {
+        // slow scalar contraction: x_{k+1} = 0.999 x_k, fixed point 0
+        let mut an = Anderson::new(5);
+        let mut x = vec![1.0, -2.0, 0.5];
+        an.push(&x);
+        for _ in 0..5 {
+            for v in x.iter_mut() {
+                *v *= 0.999;
+            }
+            an.push(&x);
+        }
+        let extr = an.extrapolate().unwrap();
+        let plain_err: f64 = x.iter().map(|v| v.abs()).fold(0.0, f64::max);
+        let extr_err: f64 = extr.iter().map(|v| v.abs()).fold(0.0, f64::max);
+        assert!(
+            extr_err < plain_err * 1e-3,
+            "extrapolation ({extr_err}) should crush plain iteration ({plain_err})"
+        );
+    }
+
+    #[test]
+    fn converged_buffer_returns_none() {
+        let mut an = Anderson::new(2);
+        for _ in 0..3 {
+            an.push(&[1.0, 1.0]);
+        }
+        assert!(an.extrapolate().is_none());
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut an = Anderson::new(2);
+        for i in 0..3 {
+            an.push(&[i as f64]);
+        }
+        an.clear();
+        assert!(an.extrapolate().is_none());
+    }
+
+    #[test]
+    fn solver_handles_permuted_systems() {
+        // A requiring pivoting: [[0, 1], [1, 0]]
+        let mut a = vec![0.0, 1.0, 1.0, 0.0];
+        let mut b = vec![2.0, 3.0];
+        assert!(solve_in_place(&mut a, &mut b, 2));
+        assert!((b[0] - 3.0).abs() < 1e-14);
+        assert!((b[1] - 2.0).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,234 @@
+//! ADMM for the Lasso / elastic net (Boyd et al. 2011, §6.4) — the
+//! Figure-7 comparator. As the paper's §E.2 notes, ADMM needs a p×p
+//! linear solve per β-update; we cache one dense Cholesky factorisation of
+//! `XᵀX/n + (ρ + λ(1−ρ_enet))·I`, which is why this baseline is only run
+//! on the moderate-p synthetic dataset of Figure 7.
+
+use crate::linalg::{Design, DenseMatrix};
+use crate::penalty::soft_threshold;
+use crate::solver::HistoryPoint;
+use std::time::Instant;
+
+/// Dense Cholesky factorisation (lower triangular, in place).
+pub struct Cholesky {
+    l: Vec<f64>,
+    n: usize,
+}
+
+impl Cholesky {
+    /// Factor a symmetric positive-definite matrix (row-major n×n).
+    pub fn factor(a: &[f64], n: usize) -> Option<Self> {
+        assert_eq!(a.len(), n * n);
+        let mut l = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[i * n + j];
+                for k in 0..j {
+                    s -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return None;
+                    }
+                    l[i * n + i] = s.sqrt();
+                } else {
+                    l[i * n + j] = s / l[j * n + j];
+                }
+            }
+        }
+        Some(Self { l, n })
+    }
+
+    /// Solve `A x = b` via forward/back substitution.
+    pub fn solve(&self, b: &[f64], x: &mut [f64]) {
+        let n = self.n;
+        // L z = b
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l[i * n + k] * x[k];
+            }
+            x[i] = s / self.l[i * n + i];
+        }
+        // Lᵀ x = z
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in i + 1..n {
+                s -= self.l[k * n + i] * x[k];
+            }
+            x[i] = s / self.l[i * n + i];
+        }
+    }
+}
+
+/// ADMM result.
+#[derive(Clone, Debug)]
+pub struct AdmmResult {
+    pub beta: Vec<f64>,
+    pub objective: f64,
+    pub iters: usize,
+    pub history: Vec<HistoryPoint>,
+}
+
+/// ADMM for `min ‖y−Xβ‖²/2n + λρ‖β‖₁ + λ(1−ρ)‖β‖²/2` (ρ=1 → Lasso).
+/// `rho_admm` is the augmented-Lagrangian parameter.
+pub fn solve_admm(
+    design: &Design,
+    y: &[f64],
+    lambda: f64,
+    l1_ratio: f64,
+    rho_admm: f64,
+    max_iter: usize,
+    tol: f64,
+) -> AdmmResult {
+    let start = Instant::now();
+    let n = design.nrows();
+    let p = design.ncols();
+    let nf = n as f64;
+    let dense = match design {
+        Design::Dense(m) => m.clone(),
+        Design::Sparse(s) => s.to_dense(), // Figure-7 scale only
+    };
+    // A = XᵀX/n + (ρ_admm + λ(1−ρ))·I   (factored once — ADMM's big cost)
+    let l2 = lambda * (1.0 - l1_ratio);
+    let mut a = vec![0.0; p * p];
+    for i in 0..p {
+        for j in i..p {
+            let v = crate::linalg::dot(dense.col(i), dense.col(j)) / nf;
+            a[i * p + j] = v;
+            a[j * p + i] = v;
+        }
+        a[i * p + i] += rho_admm + l2;
+    }
+    let chol = Cholesky::factor(&a, p).expect("ADMM system must be SPD");
+    // Xᵀy/n
+    let mut xty = vec![0.0; p];
+    design.matvec_t(y, &mut xty);
+    for v in xty.iter_mut() {
+        *v /= nf;
+    }
+
+    let mut beta = vec![0.0; p];
+    let mut z = vec![0.0; p];
+    let mut u = vec![0.0; p];
+    let mut rhs = vec![0.0; p];
+    let mut history = Vec::new();
+    let mut iters = 0;
+
+    for it in 1..=max_iter {
+        iters = it;
+        // β-update: (XᵀX/n + (ρ+l2) I) β = Xᵀy/n + ρ(z − u)
+        for j in 0..p {
+            rhs[j] = xty[j] + rho_admm * (z[j] - u[j]);
+        }
+        chol.solve(&rhs, &mut beta);
+        // z-update: soft threshold
+        let mut r_norm = 0.0f64;
+        let mut s_norm = 0.0f64;
+        for j in 0..p {
+            let z_old = z[j];
+            z[j] = soft_threshold(beta[j] + u[j], lambda * l1_ratio / rho_admm);
+            u[j] += beta[j] - z[j];
+            r_norm += (beta[j] - z[j]) * (beta[j] - z[j]);
+            s_norm += (z[j] - z_old) * (z[j] - z_old);
+        }
+        if it % 5 == 0 {
+            // objective + gap at the feasible iterate z
+            let mut xb = vec![0.0; n];
+            design.matvec(&z, &mut xb);
+            let r: Vec<f64> = y.iter().zip(xb.iter()).map(|(a, b)| a - b).collect();
+            let obj = crate::linalg::sq_nrm2(&r) / (2.0 * nf)
+                + lambda * l1_ratio * crate::linalg::norm1(&z)
+                + 0.5 * l2 * crate::linalg::sq_nrm2(&z);
+            let gap = crate::metrics::enet_gap(design, y, &z, &r, lambda, l1_ratio);
+            history.push(HistoryPoint {
+                t: start.elapsed().as_secs_f64(),
+                objective: obj,
+                kkt: gap,
+                ws_size: p,
+            });
+            if r_norm.sqrt() < tol && s_norm.sqrt() < tol {
+                break;
+            }
+        }
+    }
+    let mut xb = vec![0.0; n];
+    design.matvec(&z, &mut xb);
+    let r: Vec<f64> = y.iter().zip(xb.iter()).map(|(a, b)| a - b).collect();
+    let objective = crate::linalg::sq_nrm2(&r) / (2.0 * nf)
+        + lambda * l1_ratio * crate::linalg::norm1(&z)
+        + 0.5 * l2 * crate::linalg::sq_nrm2(&z);
+    AdmmResult { beta: z, objective, iters, history }
+}
+
+/// Convenience: build a dense design from rows (tests).
+pub fn dense_from_rows(rows: &[Vec<f64>]) -> Design {
+    Design::Dense(DenseMatrix::from_rows(rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{correlated, CorrelatedSpec};
+    use crate::datafit::Quadratic;
+    use crate::penalty::{L1L2, L1};
+    use crate::solver::{solve, SolverOpts};
+
+    #[test]
+    fn cholesky_round_trip() {
+        // A = Mᵀ M + I is SPD
+        let m = [1.0, 2.0, 0.5, -1.0];
+        let mut a = [0.0; 4];
+        for i in 0..2 {
+            for j in 0..2 {
+                a[i * 2 + j] = m[i] * m[j] + m[i + 2] * m[j + 2] + if i == j { 1.0 } else { 0.0 };
+            }
+        }
+        let ch = Cholesky::factor(&a, 2).unwrap();
+        let b = [1.0, -2.0];
+        let mut x = [0.0; 2];
+        ch.solve(&b, &mut x);
+        // verify A x = b
+        for i in 0..2 {
+            let got = a[i * 2] * x[0] + a[i * 2 + 1] * x[1];
+            assert!((got - b[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = [1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, −1
+        assert!(Cholesky::factor(&a, 2).is_none());
+    }
+
+    #[test]
+    fn admm_matches_cd_on_lasso() {
+        let ds = correlated(CorrelatedSpec { n: 60, p: 40, rho: 0.4, nnz: 5, snr: 10.0 }, 0);
+        let mut xty = vec![0.0; 40];
+        ds.design.matvec_t(&ds.y, &mut xty);
+        let lam = crate::linalg::norm_inf(&xty) / 60.0 / 10.0;
+        let admm = solve_admm(&ds.design, &ds.y, lam, 1.0, 1.0, 5000, 1e-10);
+        let mut f = Quadratic::new();
+        let cd = solve(&ds.design, &ds.y, &mut f, &L1::new(lam), &SolverOpts::default().with_tol(1e-12), None, None);
+        assert!(
+            (admm.objective - cd.objective).abs() < 1e-7,
+            "admm {} vs cd {}",
+            admm.objective,
+            cd.objective
+        );
+    }
+
+    #[test]
+    fn admm_matches_cd_on_enet() {
+        let ds = correlated(CorrelatedSpec { n: 50, p: 30, rho: 0.3, nnz: 4, snr: 10.0 }, 1);
+        let mut xty = vec![0.0; 30];
+        ds.design.matvec_t(&ds.y, &mut xty);
+        let lam = crate::linalg::norm_inf(&xty) / 50.0 / 5.0;
+        let admm = solve_admm(&ds.design, &ds.y, lam, 0.5, 1.0, 5000, 1e-10);
+        let mut f = Quadratic::new();
+        let cd = solve(
+            &ds.design, &ds.y, &mut f, &L1L2::new(lam, 0.5), &SolverOpts::default().with_tol(1e-12), None, None,
+        );
+        assert!((admm.objective - cd.objective).abs() < 1e-7);
+    }
+}

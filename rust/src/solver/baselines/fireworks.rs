@@ -1,0 +1,147 @@
+//! Fireworks-like working-set solver (Rakotomamonjy et al. 2022).
+//!
+//! The paper's §2.4 critique: fireworks ranks features by
+//! `dist(−∇_j f(β), ∂g_j(0))` — the subdifferential **at 0**, not at the
+//! current point — "a coarse information". It also ships no acceleration.
+//! This baseline implements exactly that: WS scored at 0, plain CD inner
+//! solver; the Figure-5 benches quantify the cost of the coarser score.
+
+use crate::datafit::Datafit;
+use crate::linalg::Design;
+use crate::penalty::Penalty;
+use crate::solver::inner::inner_solver;
+use crate::solver::{FitResult, HistoryPoint, SolverOpts};
+use std::time::Instant;
+
+/// Working-set solve with the at-zero score rule and no Anderson.
+pub fn solve_fireworks<D: Datafit, P: Penalty>(
+    design: &Design,
+    y: &[f64],
+    datafit: &mut D,
+    penalty: &P,
+    opts: &SolverOpts,
+) -> FitResult {
+    let start = Instant::now();
+    let p = design.ncols();
+    datafit.init(design, y);
+    let mut beta = vec![0.0; p];
+    let mut state = datafit.init_state(design, y, &beta);
+    let mut grad = vec![0.0; p];
+    let mut scores = vec![0.0; p];
+    let mut result = FitResult {
+        beta: Vec::new(),
+        objective: f64::NAN,
+        kkt: f64::NAN,
+        n_outer: 0,
+        n_epochs: 0,
+        converged: false,
+        history: Vec::new(),
+        accepted_extrapolations: 0,
+        rejected_extrapolations: 0,
+    };
+    let mut ws_size = opts.ws_start.min(p).max(1);
+
+    for outer in 1..=opts.max_outer {
+        result.n_outer = outer;
+        datafit.grad_full(design, y, &state, &beta, &mut grad);
+        let lipschitz = datafit.lipschitz();
+        // true stationarity for stopping/history (same metric as skglm so
+        // curves are comparable) ...
+        let mut kkt_max = 0.0f64;
+        for j in 0..p {
+            let s = if lipschitz[j] == 0.0 {
+                0.0
+            } else {
+                penalty.subdiff_distance(beta[j], grad[j], j)
+            };
+            kkt_max = kkt_max.max(s);
+            // ... but the *working-set score* is evaluated at 0 — the
+            // fireworks rule the paper criticises:
+            scores[j] = if lipschitz[j] == 0.0 {
+                0.0
+            } else {
+                penalty.subdiff_distance(0.0, grad[j], j)
+            };
+        }
+        let objective =
+            datafit.value(y, &beta, &state) + penalty.value_sum(&beta);
+        result.history.push(HistoryPoint {
+            t: start.elapsed().as_secs_f64(),
+            objective,
+            kkt: kkt_max,
+            ws_size: ws_size.min(p),
+        });
+        if kkt_max <= opts.tol {
+            result.converged = true;
+            break;
+        }
+        let nnz = beta.iter().filter(|&&b| b != 0.0).count();
+        ws_size = ws_size.max(2 * nnz).min(p);
+        // retain the current support
+        for j in 0..p {
+            if beta[j] != 0.0 {
+                scores[j] = f64::INFINITY;
+            }
+        }
+        let mut idx: Vec<usize> = (0..p).collect();
+        if ws_size < p {
+            idx.select_nth_unstable_by(ws_size - 1, |&a, &b| {
+                scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            idx.truncate(ws_size);
+        }
+        idx.sort_unstable();
+        let inner_tol = (opts.inner_tol_ratio * kkt_max).max(0.1 * opts.tol);
+        let stats = inner_solver(
+            design, y, datafit, penalty, &mut beta, &mut state, &idx, opts.max_epochs,
+            inner_tol, 0, // no acceleration in fireworks
+        );
+        result.n_epochs += stats.epochs;
+    }
+
+    let objective = datafit.value(y, &beta, &state) + penalty.value_sum(&beta);
+    result.kkt = crate::metrics::stationarity(design, y, datafit, penalty, &beta, &state);
+    result.converged = result.converged || result.kkt <= opts.tol;
+    result.objective = objective;
+    result.beta = beta;
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{correlated, CorrelatedSpec};
+    use crate::datafit::Quadratic;
+    use crate::penalty::{Mcp, L1};
+    use crate::solver::{solve, SolverOpts};
+
+    #[test]
+    fn reaches_lasso_optimum() {
+        let ds = correlated(CorrelatedSpec { n: 80, p: 120, rho: 0.5, nnz: 8, snr: 10.0 }, 0);
+        let mut xty = vec![0.0; 120];
+        ds.design.matvec_t(&ds.y, &mut xty);
+        let lam = crate::linalg::norm_inf(&xty) / 80.0 / 20.0;
+        let pen = L1::new(lam);
+        let mut f1 = Quadratic::new();
+        let fw = solve_fireworks(&ds.design, &ds.y, &mut f1, &pen, &SolverOpts::default().with_tol(1e-10));
+        let mut f2 = Quadratic::new();
+        let sk = solve(&ds.design, &ds.y, &mut f2, &pen, &SolverOpts::default().with_tol(1e-10), None, None);
+        assert!(fw.converged);
+        assert!((fw.objective - sk.objective).abs() < 1e-8);
+    }
+
+    #[test]
+    fn handles_mcp() {
+        let ds = correlated(CorrelatedSpec { n: 100, p: 150, rho: 0.4, nnz: 10, snr: 8.0 }, 1);
+        let mut design = ds.design.clone();
+        design.normalize_cols((100.0f64).sqrt());
+        let mut xty = vec![0.0; 150];
+        design.matvec_t(&ds.y, &mut xty);
+        let lam = crate::linalg::norm_inf(&xty) / 100.0 / 10.0;
+        let mut f = Quadratic::new();
+        let fw = solve_fireworks(
+            &design, &ds.y, &mut f, &Mcp::new(lam, 3.0), &SolverOpts::default().with_tol(1e-8),
+        );
+        assert!(fw.converged, "kkt {}", fw.kkt);
+    }
+}

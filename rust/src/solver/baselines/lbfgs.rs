@@ -1,0 +1,226 @@
+//! L-BFGS (Liu & Nocedal 1989) on the squared-hinge SVM primal — the
+//! Figure-9 comparator ("l-BFGS" curve):
+//!
+//! ```text
+//! min_β  ½‖β‖² + C Σ_i max(0, 1 − y_i x_iᵀβ)²
+//! ```
+//!
+//! (The plain hinge is non-smooth; liblinear's L2-loss variant is the
+//! standard smooth surrogate an L-BFGS baseline optimises.) Two-loop
+//! recursion with Armijo backtracking.
+
+use crate::linalg::Design;
+use crate::solver::HistoryPoint;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Squared-hinge primal objective and gradient.
+/// `design` is the primal X (n×d), labels ±1.
+pub fn sq_hinge_objective(design: &Design, y: &[f64], c: f64, beta: &[f64]) -> f64 {
+    let n = design.nrows();
+    let mut xb = vec![0.0; n];
+    design.matvec(beta, &mut xb);
+    let mut loss = 0.0;
+    for i in 0..n {
+        let m = 1.0 - y[i] * xb[i];
+        if m > 0.0 {
+            loss += m * m;
+        }
+    }
+    0.5 * crate::linalg::sq_nrm2(beta) + c * loss
+}
+
+fn sq_hinge_grad(design: &Design, y: &[f64], c: f64, beta: &[f64], grad: &mut [f64]) {
+    let n = design.nrows();
+    let mut xb = vec![0.0; n];
+    design.matvec(beta, &mut xb);
+    // dL/d(xb_i) = −2C y_i max(0, 1 − y_i xb_i)
+    let mut w = vec![0.0; n];
+    for i in 0..n {
+        let m = 1.0 - y[i] * xb[i];
+        w[i] = if m > 0.0 { -2.0 * c * y[i] * m } else { 0.0 };
+    }
+    design.matvec_t(&w, grad);
+    for (g, &b) in grad.iter_mut().zip(beta.iter()) {
+        *g += b;
+    }
+}
+
+/// L-BFGS result.
+#[derive(Clone, Debug)]
+pub struct LbfgsResult {
+    pub beta: Vec<f64>,
+    pub objective: f64,
+    pub iters: usize,
+    pub history: Vec<HistoryPoint>,
+}
+
+/// Minimise the squared-hinge primal with memory-`m` L-BFGS.
+pub fn solve_lbfgs_svm(
+    design: &Design,
+    y: &[f64],
+    c: f64,
+    m: usize,
+    max_iter: usize,
+    tol: f64,
+) -> LbfgsResult {
+    let start = Instant::now();
+    let d = design.ncols();
+    let mut beta = vec![0.0; d];
+    let mut grad = vec![0.0; d];
+    sq_hinge_grad(design, y, c, &beta, &mut grad);
+    let mut obj = sq_hinge_objective(design, y, c, &beta);
+
+    // (s, y, rho) memory
+    let mut mem: VecDeque<(Vec<f64>, Vec<f64>, f64)> = VecDeque::with_capacity(m);
+    let mut history = Vec::new();
+    let mut iters = 0;
+
+    for it in 1..=max_iter {
+        iters = it;
+        // ---- two-loop recursion: q = H_k grad ----
+        let mut q = grad.clone();
+        let mut alphas = Vec::with_capacity(mem.len());
+        for (s, yk, rho) in mem.iter().rev() {
+            let alpha = rho * crate::linalg::dot(s, &q);
+            crate::linalg::axpy(-alpha, yk, &mut q);
+            alphas.push(alpha);
+        }
+        // initial scaling γ = sᵀy/yᵀy
+        if let Some((s, yk, _)) = mem.back() {
+            let gamma = crate::linalg::dot(s, yk) / crate::linalg::sq_nrm2(yk).max(1e-300);
+            for v in q.iter_mut() {
+                *v *= gamma;
+            }
+        }
+        for ((s, yk, rho), &alpha) in mem.iter().zip(alphas.iter().rev()) {
+            let b = rho * crate::linalg::dot(yk, &q);
+            crate::linalg::axpy(alpha - b, s, &mut q);
+        }
+        // descent direction
+        for v in q.iter_mut() {
+            *v = -*v;
+        }
+        let dir_dot_grad = crate::linalg::dot(&q, &grad);
+        let (dir, dg) = if dir_dot_grad < 0.0 {
+            (q, dir_dot_grad)
+        } else {
+            // safeguard: fall back to steepest descent
+            let g = grad.iter().map(|v| -v).collect::<Vec<_>>();
+            let dg = -crate::linalg::sq_nrm2(&grad);
+            (g, dg)
+        };
+
+        // ---- Armijo backtracking ----
+        let mut step = 1.0f64;
+        let mut new_beta;
+        let mut new_obj;
+        loop {
+            new_beta = beta.clone();
+            crate::linalg::axpy(step, &dir, &mut new_beta);
+            new_obj = sq_hinge_objective(design, y, c, &new_beta);
+            if new_obj <= obj + 1e-4 * step * dg || step < 1e-16 {
+                break;
+            }
+            step *= 0.5;
+        }
+
+        let mut new_grad = vec![0.0; d];
+        sq_hinge_grad(design, y, c, &new_beta, &mut new_grad);
+        // memory update
+        let s: Vec<f64> = new_beta.iter().zip(beta.iter()).map(|(a, b)| a - b).collect();
+        let yk: Vec<f64> = new_grad.iter().zip(grad.iter()).map(|(a, b)| a - b).collect();
+        let sy = crate::linalg::dot(&s, &yk);
+        if sy > 1e-12 {
+            if mem.len() == m {
+                mem.pop_front();
+            }
+            mem.push_back((s, yk, 1.0 / sy));
+        }
+        beta = new_beta;
+        grad = new_grad;
+        obj = new_obj;
+
+        let gnorm = crate::linalg::norm_inf(&grad);
+        if it % 5 == 0 || gnorm <= tol {
+            history.push(HistoryPoint {
+                t: start.elapsed().as_secs_f64(),
+                objective: obj,
+                kkt: gnorm,
+                ws_size: d,
+            });
+        }
+        if gnorm <= tol {
+            break;
+        }
+    }
+    LbfgsResult { beta, objective: obj, iters, history }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{correlated, CorrelatedSpec};
+
+    fn svm_problem() -> (Design, Vec<f64>) {
+        let ds = correlated(CorrelatedSpec { n: 120, p: 20, rho: 0.3, nnz: 5, snr: 10.0 }, 0);
+        let y: Vec<f64> = ds.y.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+        (ds.design, y)
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let (d, y) = svm_problem();
+        let beta: Vec<f64> = (0..20).map(|j| 0.01 * (j as f64 - 10.0)).collect();
+        let mut g = vec![0.0; 20];
+        sq_hinge_grad(&d, &y, 1.0, &beta, &mut g);
+        let eps = 1e-6;
+        for j in [0usize, 7, 19] {
+            let mut bp = beta.clone();
+            bp[j] += eps;
+            let mut bm = beta.clone();
+            bm[j] -= eps;
+            let fd = (sq_hinge_objective(&d, &y, 1.0, &bp)
+                - sq_hinge_objective(&d, &y, 1.0, &bm))
+                / (2.0 * eps);
+            assert!((fd - g[j]).abs() < 1e-4, "j={j}: fd={fd} an={}", g[j]);
+        }
+    }
+
+    #[test]
+    fn converges_to_stationary_point() {
+        // squared hinge is C¹ but only piecewise C², so L-BFGS grinds at
+        // very tight tolerances; 1e-5 on ‖∇‖∞ is the realistic target
+        let (d, y) = svm_problem();
+        let res = solve_lbfgs_svm(&d, &y, 1.0, 10, 2000, 1e-5);
+        assert!(
+            res.history.last().unwrap().kkt <= 1e-5,
+            "grad norm {}",
+            res.history.last().unwrap().kkt
+        );
+    }
+
+    #[test]
+    fn objective_decreases_monotonically() {
+        let (d, y) = svm_problem();
+        let res = solve_lbfgs_svm(&d, &y, 10.0, 10, 200, 1e-10);
+        for w in res.history.windows(2) {
+            assert!(w[1].objective <= w[0].objective + 1e-10);
+        }
+    }
+
+    #[test]
+    fn separable_data_gets_classified() {
+        let (d, y) = svm_problem();
+        let res = solve_lbfgs_svm(&d, &y, 1.0, 10, 500, 1e-8);
+        let mut xb = vec![0.0; d.nrows()];
+        d.matvec(&res.beta, &mut xb);
+        let acc = xb
+            .iter()
+            .zip(y.iter())
+            .filter(|(s, yi)| (s.signum() - **yi).abs() < 1e-12)
+            .count() as f64
+            / y.len() as f64;
+        assert!(acc > 0.8, "train accuracy {acc}");
+    }
+}

@@ -1,0 +1,21 @@
+//! Baseline solvers — every competitor curve in the paper's figures.
+//!
+//! | paper figure | baseline | module |
+//! |---|---|---|
+//! | Figs 2,3,6 | scikit-learn-style full cyclic CD | [`full_cd`] |
+//! | Figs 2 | celer-like dual-extrapolation working set | [`celer`] |
+//! | Figs 2 | blitz/fireworks-like WS (score at 0) | [`fireworks`] |
+//! | Fig 5 | iterative reweighted ℓ1 (Candès et al. 2008) | [`irls`] |
+//! | Fig 7 | ADMM (Boyd et al. 2011) | [`admm`] |
+//! | Fig 8 | glmnet-like strong-rules path solver | [`strong_rules`] |
+//! | Fig 9 | L-BFGS on the (squared-hinge) SVM primal | [`lbfgs`] |
+//! | — | ISTA / FISTA proximal gradient | [`pgd`] |
+
+pub mod admm;
+pub mod celer;
+pub mod fireworks;
+pub mod full_cd;
+pub mod irls;
+pub mod lbfgs;
+pub mod pgd;
+pub mod strong_rules;

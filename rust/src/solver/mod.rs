@@ -1,0 +1,15 @@
+//! Solvers: the paper's Algorithm 1 (working sets) / Algorithm 2
+//! (Anderson-accelerated inner CD) / Algorithm 3 (CD epoch) / Algorithm 4
+//! (Anderson extrapolation), the multitask block variant, and every
+//! baseline the evaluation figures compare against.
+
+pub mod anderson;
+pub mod baselines;
+pub mod cd;
+pub mod inner;
+pub mod multitask;
+pub mod screening;
+pub mod skglm;
+
+pub use skglm::{solve, FitResult, GradEngine, HistoryPoint, SolverOpts};
+pub use multitask::{solve_multitask, MultiTaskFit};

@@ -1,0 +1,345 @@
+//! Multitask (block) solver — Algorithm 1/2 lifted to rows of
+//! `W ∈ R^{p×T}` for the M/EEG inverse problem (paper §3.2, Appendix D).
+//!
+//! One "coordinate" is a row `W_{j,:}`; the block CD update is
+//! `W_{j,:} ← prox_{g_j/L_j}(W_{j,:} − ∇_{j,:} f / L_j)` with the radial
+//! prox of Proposition 18. Working sets and the Anderson-with-guard
+//! acceleration carry over verbatim (the iterate buffer stores the
+//! flattened working-set rows).
+
+use super::anderson::Anderson;
+use super::skglm::{HistoryPoint, SolverOpts};
+use crate::datafit::multitask::QuadraticMultiTask;
+use crate::linalg::Design;
+use crate::penalty::BlockPenalty;
+use std::time::Instant;
+
+/// Multitask fit outcome. `w` is row-major: `w[j*T + t]`.
+#[derive(Clone, Debug)]
+pub struct MultiTaskFit {
+    pub w: Vec<f64>,
+    pub n_tasks: usize,
+    pub objective: f64,
+    pub kkt: f64,
+    pub converged: bool,
+    pub n_outer: usize,
+    pub n_epochs: usize,
+    pub history: Vec<HistoryPoint>,
+}
+
+impl MultiTaskFit {
+    /// Rows with a nonzero entry.
+    pub fn row_support(&self) -> Vec<usize> {
+        let t = self.n_tasks;
+        (0..self.w.len() / t)
+            .filter(|&j| self.w[j * t..(j + 1) * t].iter().any(|&v| v != 0.0))
+            .collect()
+    }
+}
+
+fn objective<B: BlockPenalty>(
+    datafit: &QuadraticMultiTask,
+    penalty: &B,
+    w: &[f64],
+    state: &[f64],
+    n_tasks: usize,
+) -> f64 {
+    let mut g = 0.0;
+    for j in 0..w.len() / n_tasks {
+        g += penalty.value(&w[j * n_tasks..(j + 1) * n_tasks]);
+    }
+    datafit.value(state) + g
+}
+
+/// One block-CD epoch over `ws`. Returns max scaled row move.
+fn block_cd_epoch<B: BlockPenalty>(
+    design: &Design,
+    datafit: &QuadraticMultiTask,
+    penalty: &B,
+    w: &mut [f64],
+    state: &mut [f64],
+    ws: &[usize],
+    grad_buf: &mut [f64],
+    delta_buf: &mut [f64],
+) -> f64 {
+    let t = datafit.n_tasks();
+    let lipschitz = datafit.lipschitz();
+    let mut max_move = 0.0f64;
+    for &j in ws {
+        let lj = lipschitz[j];
+        if lj == 0.0 {
+            continue;
+        }
+        datafit.grad_row(design, state, j, grad_buf);
+        let row = &mut w[j * t..(j + 1) * t];
+        let mut changed = false;
+        for k in 0..t {
+            delta_buf[k] = row[k]; // stash old
+            row[k] -= grad_buf[k] / lj;
+        }
+        penalty.prox(row, 1.0 / lj);
+        for k in 0..t {
+            let d = row[k] - delta_buf[k];
+            delta_buf[k] = d;
+            if d != 0.0 {
+                changed = true;
+                max_move = max_move.max(lj * d.abs());
+            }
+        }
+        if changed {
+            datafit.update_state(design, j, delta_buf, state);
+        }
+    }
+    max_move
+}
+
+/// Max block score over a set of rows.
+fn score_rows<B: BlockPenalty>(
+    design: &Design,
+    datafit: &QuadraticMultiTask,
+    penalty: &B,
+    w: &[f64],
+    state: &[f64],
+    rows: &[usize],
+    grad_buf: &mut [f64],
+    out: Option<&mut [f64]>,
+) -> f64 {
+    let t = datafit.n_tasks();
+    let mut kkt = 0.0f64;
+    let mut out = out;
+    for (k, &j) in rows.iter().enumerate() {
+        let s = if datafit.lipschitz()[j] == 0.0 {
+            0.0
+        } else {
+            datafit.grad_row(design, state, j, grad_buf);
+            penalty.subdiff_distance(&w[j * t..(j + 1) * t], grad_buf)
+        };
+        if let Some(o) = out.as_deref_mut() {
+            o[k] = s;
+        }
+        kkt = kkt.max(s);
+    }
+    kkt
+}
+
+/// Solve the multitask problem. `y` is task-major (`y[t*n + i]`).
+pub fn solve_multitask<B: BlockPenalty>(
+    design: &Design,
+    y: &[f64],
+    n_tasks: usize,
+    penalty: &B,
+    opts: &SolverOpts,
+) -> MultiTaskFit {
+    let start = Instant::now();
+    let p = design.ncols();
+    let mut datafit = QuadraticMultiTask::new();
+    datafit.init(design, n_tasks);
+
+    let mut w = vec![0.0; p * n_tasks];
+    let mut state = datafit.init_state(design, y, &w);
+    let mut grad_buf = vec![0.0; n_tasks];
+    let mut delta_buf = vec![0.0; n_tasks];
+    let mut scores = vec![0.0; p];
+    let all_rows: Vec<usize> = (0..p).collect();
+
+    let mut fit = MultiTaskFit {
+        w: Vec::new(),
+        n_tasks,
+        objective: f64::NAN,
+        kkt: f64::NAN,
+        converged: false,
+        n_outer: 0,
+        n_epochs: 0,
+        history: Vec::new(),
+    };
+    let mut ws_size = opts.ws_start.min(p).max(1);
+
+    for outer in 1..=opts.max_outer {
+        fit.n_outer = outer;
+        let kkt = score_rows(
+            design, &datafit, penalty, &w, &state, &all_rows, &mut grad_buf, Some(&mut scores),
+        );
+        fit.history.push(HistoryPoint {
+            t: start.elapsed().as_secs_f64(),
+            objective: objective(&datafit, penalty, &w, &state, n_tasks),
+            kkt,
+            ws_size: if opts.use_ws { ws_size.min(p) } else { p },
+        });
+        if kkt <= opts.tol {
+            fit.converged = true;
+            break;
+        }
+
+        let ws: Vec<usize> = if opts.use_ws {
+            let gsupp = (0..p)
+                .filter(|&j| penalty.in_gsupp(&w[j * n_tasks..(j + 1) * n_tasks]))
+                .count();
+            ws_size = ws_size.max(2 * gsupp).min(p);
+            let mut idx: Vec<usize> = (0..p).collect();
+            for j in 0..p {
+                if penalty.in_gsupp(&w[j * n_tasks..(j + 1) * n_tasks]) {
+                    scores[j] = f64::INFINITY;
+                }
+            }
+            if ws_size < p {
+                idx.select_nth_unstable_by(ws_size - 1, |&a, &b| {
+                    scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                idx.truncate(ws_size);
+            }
+            idx.sort_unstable();
+            idx
+        } else {
+            all_rows.clone()
+        };
+
+        // inner: block CD + guarded Anderson on flattened ws rows
+        let inner_tol = (opts.inner_tol_ratio * kkt).max(0.1 * opts.tol);
+        let mut accel =
+            if opts.anderson_m >= 2 { Some(Anderson::new(opts.anderson_m)) } else { None };
+        let mut flat = vec![0.0; ws.len() * n_tasks];
+        let gather = |w: &[f64], flat: &mut [f64]| {
+            for (k, &j) in ws.iter().enumerate() {
+                flat[k * n_tasks..(k + 1) * n_tasks]
+                    .copy_from_slice(&w[j * n_tasks..(j + 1) * n_tasks]);
+            }
+        };
+        if let Some(acc) = accel.as_mut() {
+            gather(&w, &mut flat);
+            acc.push(&flat);
+        }
+        for epoch in 1..=opts.max_epochs {
+            fit.n_epochs += 1;
+            block_cd_epoch(
+                design, &datafit, penalty, &mut w, &mut state, &ws, &mut grad_buf,
+                &mut delta_buf,
+            );
+            if let Some(acc) = accel.as_mut() {
+                gather(&w, &mut flat);
+                let full = acc.push(&flat);
+                if full && epoch % acc.m() == 0 {
+                    if let Some(extr) = acc.extrapolate() {
+                        // objective guard
+                        let cur_obj = objective(&datafit, penalty, &w, &state, n_tasks);
+                        let mut w_try = w.clone();
+                        for (k, &j) in ws.iter().enumerate() {
+                            w_try[j * n_tasks..(j + 1) * n_tasks]
+                                .copy_from_slice(&extr[k * n_tasks..(k + 1) * n_tasks]);
+                        }
+                        let state_try = datafit.init_state(design, y, &w_try);
+                        let try_obj =
+                            objective(&datafit, penalty, &w_try, &state_try, n_tasks);
+                        if try_obj < cur_obj {
+                            w = w_try;
+                            state = state_try;
+                            acc.clear();
+                            gather(&w, &mut flat);
+                            acc.push(&flat);
+                        }
+                    }
+                }
+            }
+            if epoch % 10 == 0 {
+                let s = score_rows(
+                    design, &datafit, penalty, &w, &state, &ws, &mut grad_buf, None,
+                );
+                if s <= inner_tol {
+                    break;
+                }
+            }
+        }
+    }
+
+    fit.kkt =
+        score_rows(design, &datafit, penalty, &w, &state, &all_rows, &mut grad_buf, None);
+    fit.converged = fit.converged || fit.kkt <= opts.tol;
+    fit.objective = objective(&datafit, penalty, &w, &state, n_tasks);
+    fit.w = w;
+    fit
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::meeg::{simulate, MeegSpec};
+    use crate::penalty::{BlockL21, BlockMcp};
+
+    fn meeg_to_problem(
+        pb: &crate::data::meeg::MeegProblem,
+    ) -> (Design, Vec<f64>, usize) {
+        let n = pb.gain.nrows();
+        let t = pb.measurements.ncols();
+        let mut y = vec![0.0; n * t];
+        for tt in 0..t {
+            for i in 0..n {
+                y[tt * n + i] = pb.measurements.get(i, tt);
+            }
+        }
+        (Design::Dense(pb.gain.clone()), y, t)
+    }
+
+    fn block_lambda_max(design: &Design, y: &[f64], n_tasks: usize) -> f64 {
+        // max_j ||X_jᵀ Y||_2 / n
+        let n = design.nrows();
+        let mut best = 0.0f64;
+        for j in 0..design.ncols() {
+            let mut s = 0.0;
+            for t in 0..n_tasks {
+                let d = design.col_dot(j, &y[t * n..(t + 1) * n]);
+                s += d * d;
+            }
+            best = best.max(s.sqrt() / n as f64);
+        }
+        best
+    }
+
+    #[test]
+    fn l21_converges_and_is_row_sparse() {
+        let pb = simulate(MeegSpec { n_sensors: 40, n_sources: 120, n_times: 8, ..Default::default() }, 0);
+        let (design, y, t) = meeg_to_problem(&pb);
+        let lam = block_lambda_max(&design, &y, t) / 3.0;
+        let fit = solve_multitask(
+            &design,
+            &y,
+            t,
+            &BlockL21::new(lam),
+            &SolverOpts::default().with_tol(1e-8),
+        );
+        assert!(fit.converged, "kkt {}", fit.kkt);
+        let sup = fit.row_support();
+        assert!(!sup.is_empty());
+        assert!(sup.len() < 60, "row support {} should be small", sup.len());
+    }
+
+    #[test]
+    fn block_mcp_converges() {
+        let pb = simulate(MeegSpec { n_sensors: 40, n_sources: 120, n_times: 8, ..Default::default() }, 1);
+        let (design, y, t) = meeg_to_problem(&pb);
+        let lam = block_lambda_max(&design, &y, t) / 3.0;
+        let fit = solve_multitask(
+            &design,
+            &y,
+            t,
+            &BlockMcp::new(lam, 100.0),
+            &SolverOpts::default().with_tol(1e-7),
+        );
+        assert!(fit.converged, "kkt {}", fit.kkt);
+    }
+
+    #[test]
+    fn ws_and_full_reach_same_objective_l21() {
+        let pb = simulate(MeegSpec { n_sensors: 30, n_sources: 80, n_times: 5, ..Default::default() }, 2);
+        let (design, y, t) = meeg_to_problem(&pb);
+        let lam = block_lambda_max(&design, &y, t) / 4.0;
+        let pen = BlockL21::new(lam);
+        let a = solve_multitask(&design, &y, t, &pen, &SolverOpts::default().with_tol(1e-10));
+        let b = solve_multitask(
+            &design,
+            &y,
+            t,
+            &pen,
+            &SolverOpts::default().with_tol(1e-10).without_ws(),
+        );
+        assert!((a.objective - b.objective).abs() < 1e-8, "{} vs {}", a.objective, b.objective);
+    }
+}

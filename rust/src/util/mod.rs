@@ -1,0 +1,7 @@
+//! Dependency-free utilities standing in for crates that are unavailable
+//! in this offline environment (`rand`, `proptest`, `serde_json`).
+
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,134 @@
+//! Minimal property-based testing driver (proptest is not available in
+//! this offline environment).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each; on failure it performs a simple greedy
+//! shrink (if a shrinker is supplied) and reports the minimal
+//! counter-example together with the case seed so the failure replays
+//! deterministically.
+
+use super::rng::Rng;
+
+/// Run a property over `cases` random inputs.
+///
+/// Panics with the failing input's `Debug` representation and its case
+/// index, which together with `seed` makes the failure reproducible.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Rng::seed_from_u64(seed.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but with a shrinker: on failure, repeatedly tries the
+/// candidates produced by `shrink` and recurses into the first one that
+/// still fails, reporting the minimal failing input found.
+pub fn check_shrink<T, G, P, S>(
+    seed: u64,
+    cases: usize,
+    mut gen: G,
+    mut prop: P,
+    mut shrink: S,
+) where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    S: FnMut(&T) -> Vec<T>,
+{
+    for case in 0..cases {
+        let mut rng = Rng::seed_from_u64(seed.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // Greedy shrink loop.
+            let mut best = input.clone();
+            let mut best_msg = first_msg;
+            let mut improved = true;
+            let mut budget = 200usize;
+            while improved && budget > 0 {
+                improved = false;
+                for cand in shrink(&best) {
+                    budget = budget.saturating_sub(1);
+                    if let Err(msg) = prop(&cand) {
+                        best = cand;
+                        best_msg = msg;
+                        improved = true;
+                        break;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  minimal input: {best:?}\n  {best_msg}"
+            );
+        }
+    }
+}
+
+/// Helper: assert two floats are close (absolute + relative tolerance).
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("|{a} - {b}| = {} > {tol} * {scale}", (a - b).abs()))
+    }
+}
+
+/// Helper: assert a predicate with a formatted message on failure.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(0, 100, |r| r.uniform(), |&u| ensure((0.0..1.0).contains(&u), "out of range"));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(0, 100, |r| r.below(10), |&n| ensure(n < 5, format!("{n} >= 5")));
+    }
+
+    #[test]
+    fn shrinker_minimises() {
+        let result = std::panic::catch_unwind(|| {
+            check_shrink(
+                0,
+                50,
+                |r| r.below(1000) + 10,
+                |&n| ensure(n < 10, format!("{n} >= 10")),
+                |&n| if n > 10 { vec![n / 2, n - 1] } else { vec![] },
+            );
+        });
+        let err = *result.unwrap_err().downcast::<String>().unwrap();
+        // greedy shrink should land exactly on the boundary value 10
+        assert!(err.contains("minimal input: 10"), "{err}");
+    }
+
+    #[test]
+    fn close_tolerates_scale() {
+        assert!(close(1e6, 1e6 + 0.5, 1e-6).is_ok());
+        assert!(close(1.0, 1.1, 1e-6).is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! Integration: the PJRT runtime path — load AOT artifacts, execute them,
+//! and verify they agree with the native Rust path end to end.
+//!
+//! Requires `make artifacts` (skips gracefully when artifacts are absent,
+//! so `cargo test` stays green on a fresh checkout).
+
+use skglm::data::{correlated, CorrelatedSpec};
+use skglm::datafit::{Datafit, Quadratic};
+use skglm::linalg::Design;
+use skglm::penalty::L1;
+use skglm::runtime::{PjrtGradEngine, PjrtRuntime};
+use skglm::solver::{solve, GradEngine, SolverOpts};
+
+const N: usize = 200;
+const P: usize = 400;
+
+fn have_artifacts() -> bool {
+    PjrtRuntime::available("xt_r", N, P)
+}
+
+fn test_problem() -> skglm::data::Dataset {
+    correlated(CorrelatedSpec { n: N, p: P, rho: 0.5, nnz: 20, snr: 8.0 }, 1234)
+}
+
+#[test]
+fn pjrt_grad_matches_native_grad() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let ds = test_problem();
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    let mut engine = PjrtGradEngine::for_design(&rt, &ds.design).expect("engine");
+
+    let mut datafit = Quadratic::new();
+    datafit.init(&ds.design, &ds.y);
+    let beta: Vec<f64> = (0..P).map(|j| if j % 17 == 0 { 0.5 } else { 0.0 }).collect();
+    let state = datafit.init_state(&ds.design, &ds.y, &beta);
+
+    let mut native = vec![0.0; P];
+    datafit.grad_full(&ds.design, &ds.y, &state, &beta, &mut native);
+    let mut via_pjrt = vec![0.0; P];
+    assert!(engine.grad_full(&ds.design, &ds.y, &state, &beta, &mut via_pjrt));
+    assert_eq!(engine.calls, 1);
+
+    let scale = native.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    for j in 0..P {
+        assert!(
+            (native[j] - via_pjrt[j]).abs() <= 1e-5 * scale,
+            "grad[{j}]: native {} vs pjrt {}",
+            native[j],
+            via_pjrt[j]
+        );
+    }
+}
+
+#[test]
+fn solver_with_pjrt_engine_reaches_same_optimum() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let ds = test_problem();
+    let lam = skglm::estimators::Lasso::lambda_max(&ds.design, &ds.y) / 20.0;
+    let pen = L1::new(lam);
+    // f32 scoring: stay above the engine's precision floor
+    let opts = SolverOpts::default().with_tol(PjrtGradEngine::MIN_TOL);
+
+    let mut f_native = Quadratic::new();
+    let native = solve(&ds.design, &ds.y, &mut f_native, &pen, &opts, None, None);
+
+    let rt = PjrtRuntime::cpu().unwrap();
+    let mut engine = PjrtGradEngine::for_design(&rt, &ds.design).unwrap();
+    let mut f_pjrt = Quadratic::new();
+    let via_pjrt = solve(
+        &ds.design,
+        &ds.y,
+        &mut f_pjrt,
+        &pen,
+        &opts,
+        Some(&mut engine as &mut dyn GradEngine),
+        None,
+    );
+    assert!(engine.calls > 0, "engine must actually serve scoring passes");
+    assert!(via_pjrt.converged, "kkt {}", via_pjrt.kkt);
+    assert!(
+        (native.objective - via_pjrt.objective).abs() <= 1e-8 * native.objective.abs().max(1.0),
+        "objectives diverge: native {} vs pjrt {}",
+        native.objective,
+        via_pjrt.objective
+    );
+    assert_eq!(native.support(), via_pjrt.support());
+}
+
+#[test]
+fn engine_rejects_mismatched_shapes() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let ds = test_problem();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let mut engine = PjrtGradEngine::for_design(&rt, &ds.design).unwrap();
+    // wrong-shape problem: engine must decline, not crash
+    let other = correlated(CorrelatedSpec { n: 50, p: 60, rho: 0.3, nnz: 5, snr: 5.0 }, 5);
+    let mut out = vec![0.0; 60];
+    let state = vec![0.0; 50];
+    assert!(!engine.grad_full(&other.design, &other.y, &state, &[], &mut out));
+}
+
+#[test]
+fn engine_refuses_sparse_designs() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let sparse: Design =
+        skglm::linalg::CscMatrix::from_triplets(N, P, &[(0, 0, 1.0)]).into();
+    assert!(PjrtGradEngine::for_design(&rt, &sparse).is_err());
+}
+
+#[test]
+fn fused_score_artifact_matches_native_scores() {
+    if !PjrtRuntime::available("score_l1", N, P) {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let ds = test_problem();
+    let dense = match &ds.design {
+        Design::Dense(m) => m,
+        _ => unreachable!(),
+    };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let artifact = rt.load("score_l1", N, P).expect("load fused score artifact");
+
+    let mut datafit = Quadratic::new();
+    datafit.init(&ds.design, &ds.y);
+    let beta: Vec<f64> = (0..P).map(|j| if j % 23 == 0 { -0.3 } else { 0.0 }).collect();
+    let state = datafit.init_state(&ds.design, &ds.y, &beta);
+    let lam = 0.05f64;
+
+    // native scores
+    let mut grad = vec![0.0; P];
+    datafit.grad_full(&ds.design, &ds.y, &state, &beta, &mut grad);
+    let pen = L1::new(lam);
+    use skglm::penalty::Penalty;
+    let native_scores: Vec<f64> =
+        (0..P).map(|j| pen.subdiff_distance(beta[j], grad[j], j)).collect();
+
+    // fused artifact: inputs xt[p,n], r[n], beta[p], lam[1] → (grad, score)
+    let xt = skglm::runtime::client::literal_from_f64(dense.raw(), &[P, N]).unwrap();
+    let r = skglm::runtime::client::literal_from_f64(&state, &[N]).unwrap();
+    let b = skglm::runtime::client::literal_from_f64(&beta, &[P]).unwrap();
+    let l = skglm::runtime::client::literal_from_f64(&[lam], &[1]).unwrap();
+    let result = artifact.run_tuple(&[xt, r, b, l]).expect("execute");
+    assert_eq!(result.len(), 2, "fused kernel returns (grad, score)");
+    let scores = &result[1];
+    let scale = native_scores.iter().fold(1.0f64, |m, v| m.max(*v));
+    for j in 0..P {
+        assert!(
+            (native_scores[j] - scores[j] as f64).abs() <= 2e-5 * scale,
+            "score[{j}]: native {} vs fused {}",
+            native_scores[j],
+            scores[j]
+        );
+    }
+    // grad part too
+    for j in 0..P {
+        assert!((grad[j] - result[0][j] as f64).abs() <= 2e-5 * scale);
+    }
+}

@@ -1,0 +1,213 @@
+//! Cross-solver integration: every algorithm that optimises the same
+//! convex objective must land on the same optimum; non-convex solvers
+//! must reach genuine critical points; Proposition-10-style support
+//! identification must hold on well-conditioned designs.
+
+use skglm::data::{correlated, paper_dataset_small, CorrelatedSpec};
+use skglm::datafit::{Datafit, Logistic, Quadratic};
+use skglm::estimators::linear::quadratic_lambda_max;
+use skglm::estimators::{ElasticNet, Lasso, LinearSvc, McpRegressor};
+use skglm::linalg::Design;
+use skglm::metrics::{lasso_gap, stationarity, support_recovery};
+use skglm::penalty::{Mcp, Penalty, L1};
+use skglm::solver::baselines::{
+    admm::solve_admm, celer::solve_celer, fireworks::solve_fireworks, irls::solve_irls_mcp,
+    pgd::solve_pgd, strong_rules::solve_strong_rules_enet,
+};
+use skglm::solver::{solve, SolverOpts};
+
+fn residual(design: &Design, y: &[f64], beta: &[f64]) -> Vec<f64> {
+    let mut xb = vec![0.0; design.nrows()];
+    design.matvec(beta, &mut xb);
+    y.iter().zip(xb.iter()).map(|(a, b)| a - b).collect()
+}
+
+/// Six Lasso solvers, one optimum.
+#[test]
+fn all_lasso_solvers_agree_on_the_optimum() {
+    let ds = correlated(CorrelatedSpec { n: 120, p: 200, rho: 0.5, nnz: 10, snr: 10.0 }, 77);
+    let lam = quadratic_lambda_max(&ds.design, &ds.y) / 25.0;
+    let pen = L1::new(lam);
+    let tol = 1e-11;
+
+    let mut objs: Vec<(&str, f64)> = Vec::new();
+
+    let mut f = Quadratic::new();
+    let skglm_fit =
+        solve(&ds.design, &ds.y, &mut f, &pen, &SolverOpts::default().with_tol(tol), None, None);
+    objs.push(("skglm", skglm_fit.objective));
+
+    let mut f = Quadratic::new();
+    let mut opts = SolverOpts::default().with_tol(tol).without_ws().without_acceleration();
+    opts.max_epochs = 100_000;
+    objs.push(("full_cd", solve(&ds.design, &ds.y, &mut f, &pen, &opts, None, None).objective));
+
+    objs.push(("celer_like", solve_celer(&ds.design, &ds.y, lam, &SolverOpts::default().with_tol(tol)).objective));
+
+    let mut f = Quadratic::new();
+    objs.push((
+        "fireworks",
+        solve_fireworks(&ds.design, &ds.y, &mut f, &pen, &SolverOpts::default().with_tol(tol)).objective,
+    ));
+
+    let mut f = Quadratic::new();
+    objs.push(("fista", solve_pgd(&ds.design, &ds.y, &mut f, &pen, 200_000, tol, true).objective));
+
+    objs.push(("admm", solve_admm(&ds.design, &ds.y, lam, 1.0, 1.0, 20_000, 1e-12).objective));
+
+    let reference = objs[0].1;
+    for (name, obj) in &objs {
+        assert!(
+            (obj - reference).abs() < 1e-7 * reference.abs().max(1.0),
+            "{name} objective {obj} != skglm {reference}"
+        );
+    }
+    // and the skglm point satisfies the duality certificate
+    let r = residual(&ds.design, &ds.y, &skglm_fit.beta);
+    assert!(lasso_gap(&ds.design, &ds.y, &skglm_fit.beta, &r, lam) < 1e-9);
+}
+
+#[test]
+fn enet_solvers_agree() {
+    let ds = correlated(CorrelatedSpec { n: 90, p: 140, rho: 0.5, nnz: 8, snr: 10.0 }, 78);
+    let rho = 0.5;
+    let lam = quadratic_lambda_max(&ds.design, &ds.y) / rho / 30.0;
+    let a = ElasticNet::new(lam, rho).with_tol(1e-11).fit(&ds.design, &ds.y);
+    let b = solve_strong_rules_enet(&ds.design, &ds.y, lam, rho, 25, 20_000, 1e-11);
+    let c = solve_admm(&ds.design, &ds.y, lam, rho, 1.0, 20_000, 1e-12);
+    assert!((a.objective - b.objective).abs() < 1e-7);
+    assert!((a.objective - c.objective).abs() < 1e-7);
+}
+
+/// Proposition 10 in practice: after convergence on a well-conditioned
+/// problem, the generalized support matches the (identifiable) truth and
+/// the KKT residual certifies a critical point.
+#[test]
+fn mcp_support_identification_and_criticality() {
+    let ds = correlated(CorrelatedSpec { n: 300, p: 600, rho: 0.3, nnz: 15, snr: 20.0 }, 79);
+    let lam_ref = quadratic_lambda_max(&ds.design, &ds.y);
+    let (fit, scales) = McpRegressor::new(lam_ref / 15.0, 3.0)
+        .with_tol(1e-10)
+        .fit(&ds.design, &ds.y);
+    assert!(fit.converged, "kkt {}", fit.kkt);
+    // support identification: exact recovery at this SNR
+    let beta_orig: Vec<f64> =
+        fit.beta.iter().zip(scales.iter()).map(|(b, s)| b * s).collect();
+    let rec = support_recovery(&beta_orig, &ds.beta_true, 1e-8);
+    assert!(rec.exact, "tp={} fp={} fn={}", rec.true_positives, rec.false_positives, rec.false_negatives);
+    // near-unbiasedness: MCP coefficient magnitudes ≈ truth (within noise)
+    for (j, &bt) in ds.beta_true.iter().enumerate() {
+        if bt != 0.0 {
+            assert!(
+                (beta_orig[j] - bt).abs() < 0.2,
+                "coef {j}: {} vs {}",
+                beta_orig[j],
+                bt
+            );
+        }
+    }
+}
+
+#[test]
+fn irls_and_skglm_mcp_reach_critical_points_of_same_objective() {
+    let ds = correlated(CorrelatedSpec { n: 150, p: 250, rho: 0.4, nnz: 12, snr: 10.0 }, 80);
+    let mut design = ds.design.clone();
+    design.normalize_cols((150.0f64).sqrt());
+    let lam = quadratic_lambda_max(&design, &ds.y) / 12.0;
+    let gamma = 3.0;
+    let pen = Mcp::new(lam, gamma);
+
+    let mut f = Quadratic::new();
+    let sk = solve(&design, &ds.y, &mut f, &pen, &SolverOpts::default().with_tol(1e-10), None, None);
+    let ir = solve_irls_mcp(&design, &ds.y, lam, gamma, 30, &SolverOpts::default().with_tol(1e-10));
+
+    let mut fq = Quadratic::new();
+    fq.init(&design, &ds.y);
+    for (name, beta) in [("skglm", &sk.beta), ("irls", &ir.beta)] {
+        let state = fq.init_state(&design, &ds.y, beta);
+        let s = stationarity(&design, &ds.y, &fq, &pen, beta, &state);
+        assert!(s < 1e-6, "{name} stationarity {s}");
+    }
+}
+
+#[test]
+fn logistic_lasso_full_and_ws_agree_on_sparse_data() {
+    let ds = paper_dataset_small("real-sim", 81).unwrap();
+    let lam =
+        skglm::estimators::SparseLogisticRegression::lambda_max(&ds.design, &ds.y) / 5.0;
+    let pen = L1::new(lam);
+    let mut f1 = Logistic::new();
+    let a = solve(&ds.design, &ds.y, &mut f1, &pen, &SolverOpts::default().with_tol(1e-9), None, None);
+    let mut f2 = Logistic::new();
+    let mut opts = SolverOpts::default().with_tol(1e-9).without_ws();
+    opts.max_epochs = 100_000;
+    let b = solve(&ds.design, &ds.y, &mut f2, &pen, &opts, None, None);
+    assert!(a.converged && b.converged);
+    assert!((a.objective - b.objective).abs() < 1e-8);
+}
+
+/// Dual SVM: weak duality sanity — primal squared-hinge objective at the
+/// recovered coefficients upper-bounds the negated dual optimum trend, and
+/// the dual point is box-feasible with complementary slackness structure.
+#[test]
+fn svm_dual_structure() {
+    let ds = correlated(CorrelatedSpec { n: 150, p: 12, rho: 0.3, nnz: 6, snr: 10.0 }, 82);
+    let y: Vec<f64> = ds.y.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+    let x = match &ds.design {
+        Design::Dense(m) => m.clone(),
+        _ => unreachable!(),
+    };
+    let c = 1.0;
+    let fit = LinearSvc::new(c).with_tol(1e-9).fit_dense(&x, &y);
+    assert!(fit.alpha.converged);
+    // complementary slackness: margin violations ⇒ α at C; safe points ⇒ α at 0
+    let scores = LinearSvc::decision_function(&x, &fit.primal_coef);
+    for i in 0..y.len() {
+        let margin = y[i] * scores[i];
+        let a = fit.alpha.beta[i];
+        if margin > 1.0 + 1e-6 {
+            assert!(a < 1e-7, "sample {i}: margin {margin} but alpha {a}");
+        }
+        if margin < 1.0 - 1e-6 {
+            assert!((a - c).abs() < 1e-7, "sample {i}: margin {margin} but alpha {a}");
+        }
+    }
+}
+
+/// Warm-started path vs cold solves: identical optima at every λ.
+#[test]
+fn path_warm_starts_match_cold_solves() {
+    let ds = correlated(CorrelatedSpec { n: 80, p: 120, rho: 0.5, nnz: 8, snr: 10.0 }, 83);
+    let ratios = skglm::estimators::path::geometric_grid(0.05, 6);
+    let opts = SolverOpts::default().with_tol(1e-11);
+    let path = skglm::estimators::path::lasso_path(&ds.design, &ds.y, None, &ratios, &opts);
+    let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+    for pt in &path.points {
+        let cold = Lasso::new(lam_max * pt.lambda_ratio).with_tol(1e-11).fit(&ds.design, &ds.y);
+        assert!(
+            (pt.objective - cold.objective).abs() < 1e-9,
+            "λratio {}: warm {} vs cold {}",
+            pt.lambda_ratio,
+            pt.objective,
+            cold.objective
+        );
+    }
+}
+
+/// The generalized support concept (Definition 4) unifies: for the box
+/// penalty, gsupp = free variables, and the solver's working set finds it.
+#[test]
+fn gsupp_counts_free_dual_variables() {
+    let ds = correlated(CorrelatedSpec { n: 60, p: 8, rho: 0.2, nnz: 4, snr: 5.0 }, 84);
+    let y: Vec<f64> = ds.y.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+    let x = match &ds.design {
+        Design::Dense(m) => m.clone(),
+        _ => unreachable!(),
+    };
+    let fit = LinearSvc::new(0.5).with_tol(1e-9).fit_dense(&x, &y);
+    let pen = skglm::penalty::BoxIndicator::new(0.5);
+    let free = fit.alpha.beta.iter().filter(|&&a| pen.in_gsupp(a)).count();
+    let bound = fit.alpha.beta.iter().filter(|&&a| !pen.in_gsupp(a)).count();
+    assert_eq!(free + bound, 60);
+    assert!(free > 0, "some margin points expected");
+}

@@ -1,0 +1,349 @@
+//! Property-based tests (in-tree quickcheck driver — proptest is
+//! unavailable offline) on the coordinator/solver invariants:
+//! prox optimality, score–KKT equivalence, CD descent, working-set
+//! monotone growth, Anderson safety, gap soundness.
+
+use skglm::data::{correlated, CorrelatedSpec};
+use skglm::datafit::{Datafit, Quadratic};
+use skglm::linalg::Design;
+use skglm::penalty::{soft_threshold, L1L2, Lq, Mcp, Penalty, Scad, L1};
+use skglm::solver::{solve, SolverOpts};
+use skglm::util::quickcheck::{check, close, ensure};
+use skglm::util::rng::Rng;
+
+const CASES: usize = 60;
+
+/// Random (v, step) prox probe for each penalty family; property:
+/// prox output beats a cloud of random candidates on the prox objective.
+#[test]
+fn prop_prox_minimizes_objective_all_penalties() {
+    #[derive(Debug, Clone)]
+    struct Probe {
+        v: f64,
+        step: f64,
+        lam: f64,
+        gamma: f64,
+        candidates: Vec<f64>,
+    }
+    check(
+        1,
+        CASES,
+        |rng: &mut Rng| Probe {
+            v: rng.uniform_range(-6.0, 6.0),
+            step: rng.uniform_range(0.05, 1.5),
+            lam: rng.uniform_range(0.01, 2.0),
+            gamma: rng.uniform_range(2.5, 8.0),
+            candidates: (0..200).map(|_| rng.uniform_range(-12.0, 12.0)).collect(),
+        },
+        |pr| {
+            let pens: Vec<(String, Box<dyn Fn(f64, f64) -> f64>, Box<dyn Fn(f64) -> f64>)> = vec![
+                {
+                    let p = L1::new(pr.lam);
+                    let p2 = p.clone();
+                    ("l1".into(), Box::new(move |v, s| p.prox(v, s, 0)), Box::new(move |x| p2.value(x, 0)))
+                },
+                {
+                    let p = L1L2::new(pr.lam, 0.5);
+                    let p2 = p.clone();
+                    ("enet".into(), Box::new(move |v, s| p.prox(v, s, 0)), Box::new(move |x| p2.value(x, 0)))
+                },
+                {
+                    let p = Mcp::new(pr.lam, pr.gamma);
+                    let p2 = p.clone();
+                    ("mcp".into(), Box::new(move |v, s| p.prox(v, s, 0)), Box::new(move |x| p2.value(x, 0)))
+                },
+                {
+                    let p = Scad::new(pr.lam, pr.gamma.max(3.0));
+                    let p2 = p.clone();
+                    ("scad".into(), Box::new(move |v, s| p.prox(v, s, 0)), Box::new(move |x| p2.value(x, 0)))
+                },
+                {
+                    let p = Lq::half(pr.lam);
+                    let p2 = p.clone();
+                    ("l05".into(), Box::new(move |v, s| p.prox(v, s, 0)), Box::new(move |x| p2.value(x, 0)))
+                },
+            ];
+            for (name, prox, value) in &pens {
+                let x = prox(pr.v, pr.step);
+                let obj = |z: f64| 0.5 * (z - pr.v) * (z - pr.v) + pr.step * value(z);
+                let ox = obj(x);
+                for &c in &pr.candidates {
+                    ensure(
+                        ox <= obj(c) + 1e-7,
+                        format!("{name}: prox({}, {}) = {x} beaten by {c}", pr.v, pr.step),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// score^∂ == 0  ⟺  the prox fixed-point equation holds (KKT), for the
+/// α-semi-convex penalties.
+#[test]
+fn prop_score_zero_iff_prox_fixed_point() {
+    #[derive(Debug, Clone)]
+    struct Probe {
+        beta: f64,
+        grad: f64,
+        lam: f64,
+        step: f64,
+    }
+    check(
+        2,
+        CASES,
+        |rng: &mut Rng| Probe {
+            beta: if rng.bernoulli(0.4) { 0.0 } else { rng.uniform_range(-4.0, 4.0) },
+            grad: rng.uniform_range(-3.0, 3.0),
+            lam: rng.uniform_range(0.05, 1.5),
+            step: rng.uniform_range(0.1, 1.0),
+        },
+        |pr| {
+            let pens: Vec<Box<dyn Fn() -> (f64, f64)>> = vec![
+                {
+                    let p = L1::new(pr.lam);
+                    let (b, g, s) = (pr.beta, pr.grad, pr.step);
+                    Box::new(move || {
+                        (p.subdiff_distance(b, g, 0), (b - p.prox(b - s * g, s, 0)).abs())
+                    })
+                },
+                {
+                    let p = Mcp::new(pr.lam, 3.0);
+                    let (b, g, s) = (pr.beta, pr.grad, pr.step);
+                    Box::new(move || {
+                        (p.subdiff_distance(b, g, 0), (b - p.prox(b - s * g, s, 0)).abs())
+                    })
+                },
+            ];
+            for f in &pens {
+                let (score, fp_violation) = f();
+                if score < 1e-12 {
+                    ensure(
+                        fp_violation < 1e-9,
+                        format!("score 0 but fixed-point violation {fp_violation}"),
+                    )?;
+                }
+                if fp_violation < 1e-12 {
+                    ensure(
+                        score < 1e-9,
+                        format!("fixed point but score {score}"),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Soft-threshold algebra: shrinkage, sign preservation, 1-Lipschitz.
+#[test]
+fn prop_soft_threshold_algebra() {
+    check(
+        3,
+        200,
+        |rng: &mut Rng| (rng.uniform_range(-10.0, 10.0), rng.uniform_range(-10.0, 10.0), rng.uniform_range(0.0, 5.0)),
+        |&(a, b, t)| {
+            let sa = soft_threshold(a, t);
+            let sb = soft_threshold(b, t);
+            ensure(sa.abs() <= a.abs() + 1e-15, "shrinks magnitude")?;
+            ensure(sa == 0.0 || sa.signum() == a.signum(), "preserves sign")?;
+            ensure((sa - sb).abs() <= (a - b).abs() + 1e-12, "1-Lipschitz")?;
+            Ok(())
+        },
+    );
+}
+
+/// Full solve invariants on random Lasso instances: monotone history,
+/// working sets grow, gap bounds hold, extrapolation never hurts.
+#[test]
+fn prop_solver_invariants_random_lasso() {
+    #[derive(Debug, Clone)]
+    struct Instance {
+        seed: u64,
+        n: usize,
+        p: usize,
+        lam_div: f64,
+    }
+    check(
+        4,
+        12,
+        |rng: &mut Rng| Instance {
+            seed: rng.next_u64(),
+            n: 30 + rng.below(60),
+            p: 20 + rng.below(120),
+            lam_div: 2.0 + rng.uniform() * 40.0,
+        },
+        |inst| {
+            let ds = correlated(
+                CorrelatedSpec {
+                    n: inst.n,
+                    p: inst.p,
+                    rho: 0.4,
+                    nnz: (inst.p / 10).max(1),
+                    snr: 8.0,
+                },
+                inst.seed,
+            );
+            let lam =
+                skglm::estimators::linear::quadratic_lambda_max(&ds.design, &ds.y) / inst.lam_div;
+            let mut f = Quadratic::new();
+            let res = solve(
+                &ds.design,
+                &ds.y,
+                &mut f,
+                &L1::new(lam),
+                &SolverOpts::default().with_tol(1e-9),
+                None,
+                None,
+            );
+            ensure(res.converged, format!("did not converge: kkt {}", res.kkt))?;
+            // objective decreases along history
+            for w in res.history.windows(2) {
+                ensure(
+                    w[1].objective <= w[0].objective + 1e-10,
+                    format!("objective rose {} -> {}", w[0].objective, w[1].objective),
+                )?;
+                ensure(w[1].ws_size >= w[0].ws_size, "working set shrank")?;
+            }
+            // duality-gap certificate at the solution
+            let mut xb = vec![0.0; ds.n()];
+            ds.design.matvec(&res.beta, &mut xb);
+            let r: Vec<f64> =
+                ds.y.iter().zip(xb.iter()).map(|(a, b)| a - b).collect();
+            let gap = skglm::metrics::lasso_gap(&ds.design, &ds.y, &res.beta, &r, lam);
+            ensure(gap <= 1e-6, format!("gap {gap} too large at optimum"))?;
+            // KKT certificate coordinatewise
+            let mut fq = Quadratic::new();
+            fq.init(&ds.design, &ds.y);
+            let state = fq.init_state(&ds.design, &ds.y, &res.beta);
+            let pen = L1::new(lam);
+            let s = skglm::metrics::stationarity(&ds.design, &ds.y, &fq, &pen, &res.beta, &state);
+            ensure(s <= 1e-8, format!("stationarity {s}"))?;
+            Ok(())
+        },
+    );
+}
+
+/// MCP objective from skglm is never worse than plain CD from the same
+/// start (both reach critical points; skglm's must be at least as good
+/// because it contains CD as a special case and only accepts descent).
+#[test]
+fn prop_anderson_guard_never_worsens_mcp() {
+    check(
+        5,
+        8,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let ds = correlated(
+                CorrelatedSpec { n: 80, p: 120, rho: 0.4, nnz: 10, snr: 8.0 },
+                seed,
+            );
+            let mut design = ds.design.clone();
+            design.normalize_cols((80.0f64).sqrt());
+            let lam =
+                skglm::estimators::linear::quadratic_lambda_max(&design, &ds.y) / 8.0;
+            let pen = Mcp::new(lam, 3.0);
+            let run = |m: usize| {
+                let mut f = Quadratic::new();
+                let mut opts = SolverOpts::default().with_tol(1e-9).without_ws();
+                opts.anderson_m = m;
+                opts.max_epochs = 50_000;
+                solve(&design, &ds.y, &mut f, &pen, &opts, None, None)
+            };
+            let plain = run(0);
+            let accel = run(5);
+            // same deterministic path + guard ⇒ acceleration can only help
+            close(accel.objective, plain.objective, 1e-6).or_else(|_| {
+                ensure(
+                    accel.objective < plain.objective,
+                    format!("accel {} worse than plain {}", accel.objective, plain.objective),
+                )
+            })
+        },
+    );
+}
+
+/// Sparse == dense solve on the same matrix.
+#[test]
+fn prop_sparse_dense_equivalence() {
+    check(
+        6,
+        10,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let (n, p) = (40, 60);
+            let mut rows = Vec::new();
+            let mut trips = Vec::new();
+            for i in 0..n {
+                let mut row = vec![0.0; p];
+                for j in 0..p {
+                    if rng.bernoulli(0.15) {
+                        let v = rng.normal();
+                        row[j] = v;
+                        trips.push((i, j, v));
+                    }
+                }
+                rows.push(row);
+            }
+            let dense: Design = skglm::linalg::DenseMatrix::from_rows(&rows).into();
+            let sparse: Design = skglm::linalg::CscMatrix::from_triplets(n, p, &trips).into();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let lam = skglm::estimators::linear::quadratic_lambda_max(&dense, &y) / 10.0;
+            let pen = L1::new(lam);
+            let mut f1 = Quadratic::new();
+            let a = solve(&dense, &y, &mut f1, &pen, &SolverOpts::default().with_tol(1e-11), None, None);
+            let mut f2 = Quadratic::new();
+            let b = solve(&sparse, &y, &mut f2, &pen, &SolverOpts::default().with_tol(1e-11), None, None);
+            close(a.objective, b.objective, 1e-9)?;
+            for (x, z) in a.beta.iter().zip(b.beta.iter()) {
+                close(*x, *z, 1e-7)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// λ ↦ support size is (weakly) monotone along warm-started paths and the
+/// objective is monotone in λ.
+#[test]
+fn prop_path_monotonicity() {
+    check(
+        7,
+        8,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let ds = correlated(
+                CorrelatedSpec { n: 60, p: 100, rho: 0.4, nnz: 8, snr: 10.0 },
+                seed,
+            );
+            let ratios = skglm::estimators::path::geometric_grid(0.02, 8);
+            let path = skglm::estimators::path::lasso_path(
+                &ds.design,
+                &ds.y,
+                None,
+                &ratios,
+                &SolverOpts::default().with_tol(1e-10),
+            );
+            // datafit part of the objective decreases as λ decreases
+            let mut f = Quadratic::new();
+            f.init(&ds.design, &ds.y);
+            let datafit_vals: Vec<f64> = path
+                .points
+                .iter()
+                .map(|pt| {
+                    let state = f.init_state(&ds.design, &ds.y, &pt.beta);
+                    f.value(&ds.y, &pt.beta, &state)
+                })
+                .collect();
+            for w in datafit_vals.windows(2) {
+                ensure(
+                    w[1] <= w[0] + 1e-9,
+                    format!("datafit rose along path: {} -> {}", w[0], w[1]),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
