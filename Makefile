@@ -1,0 +1,25 @@
+# Convenience targets; everything is plain cargo underneath.
+
+.PHONY: build test ci bench artifacts clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q --workspace
+
+ci:
+	./scripts/ci.sh
+
+# Cold-vs-warm path-scheduler comparison (results/pathsched/)
+bench:
+	cargo bench --bench path_sched
+
+# AOT-lower the Pallas kernels to HLO text artifacts (needs jax; see
+# README.md §PJRT). Safe to skip: the solver falls back to native Rust.
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+clean:
+	cargo clean
+	rm -rf results

@@ -7,7 +7,7 @@ Rust runtime (`runtime::client::artifact_path`) resolves.
 HLO **text** is the interchange format, NOT ``lowered.serialize()``:
 the image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos
 (64-bit instruction ids, ``proto.id() <= INT_MAX``); the text parser
-reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+reassigns ids and round-trips cleanly. See ARCHITECTURE.md §PJRT.
 
 Usage: ``python -m compile.aot [--out-dir ../artifacts] [--check]``.
 """

@@ -14,12 +14,12 @@ features. On TPU this is a matvec streamed through VMEM:
   first n-step and accumulated across the rest ("revisiting" grid
   semantics).
 
-Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's numba
+Hardware adaptation (ARCHITECTURE.md §Hardware-Adaptation): the paper's numba
 CPU kernels become BlockSpec-scheduled VMEM tiles; block sizes target MXU
 alignment (multiples of 128) with graceful fallback for small test shapes.
 
 interpret=True ALWAYS — real-TPU lowering emits a Mosaic custom-call that
-the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+the CPU PJRT plugin cannot execute (see ARCHITECTURE.md §PJRT).
 """
 
 import functools
@@ -78,7 +78,7 @@ def xt_r(xt, r, *, block_p: int = 128, block_n: int = 512):
 def vmem_bytes(block_p: int, block_n: int) -> int:
     """VMEM footprint of one grid step (f32): Xᵀ tile + r slice + out block.
 
-    Used by DESIGN.md §Perf to check the schedule fits the ~16 MiB/core
+    Used by EXPERIMENTS.md §Perf to check the schedule fits the ~16 MiB/core
     VMEM budget on real TPUs.
     """
     return 4 * (block_p * block_n + block_n + block_p)

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from .kernels import matvec, prox, score
 
-# Kernel schedules (EXPERIMENTS.md §Perf / DESIGN.md §Hardware-Adaptation):
+# Kernel schedules (EXPERIMENTS.md §Perf / ARCHITECTURE.md §Hardware-Adaptation):
 #   - "tpu": (128, 512) tiles — MXU-aligned, 262 KiB/step VMEM, the layout
 #     a real TPU deployment streams HBM→VMEM with. This is what the kernel
 #     is *written for*.

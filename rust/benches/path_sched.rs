@@ -1,0 +1,33 @@
+//! Bench: cold-fit-per-λ vs warm-started path scheduling (the coordinator
+//! tentpole) on the Figure-1 dataset.
+//!
+//! `cargo bench --bench path_sched [-- --full]` — smoke scale by default;
+//! `--full` runs the EXPERIMENTS.md configuration (n = 1000, p = 2000,
+//! 30 path points). Prints the epoch/wall-time comparison and writes the
+//! markdown table under `results/pathsched/`.
+
+use skglm::bench::figures::Scale;
+use skglm::bench::path_bench::run_pathsched;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Smoke };
+    eprintln!("[path_sched] scale = {scale:?}");
+    let t0 = std::time::Instant::now();
+    match run_pathsched(scale) {
+        Ok(paths) => {
+            for p in &paths {
+                println!("wrote {}", p.display());
+                if p.extension().map(|e| e == "md").unwrap_or(false) {
+                    println!("\n== {} ==", p.display());
+                    println!("{}", std::fs::read_to_string(p).unwrap_or_default());
+                }
+            }
+            println!("[path_sched] done in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("pathsched failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

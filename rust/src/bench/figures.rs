@@ -509,7 +509,8 @@ pub fn run_fig8(scale: Scale) -> Result<Vec<PathBuf>> {
 
 /// Dual SVM: suboptimality vs time for C ∈ {0.1, 1, 10}; CD, skglm (dual)
 /// and L-BFGS on the squared-hinge primal (each solver's suboptimality is
-/// measured against its own problem's reference optimum — see DESIGN.md).
+/// measured against its own problem's reference optimum — see
+/// ARCHITECTURE.md §Substitutions).
 pub fn run_fig9(scale: Scale) -> Result<Vec<PathBuf>> {
     let ds = scale.dataset("real-sim", 23).expect("real-sim stand-in");
     let x = match &ds.design {
@@ -603,7 +604,7 @@ pub fn run_table1() -> Result<Vec<PathBuf>> {
 }
 
 /// Table 2: characteristics of the synthetic stand-ins (paper values in
-/// comments in DESIGN.md §Substitutions).
+/// ARCHITECTURE.md §Substitutions).
 pub fn run_table2(scale: Scale) -> Result<Vec<PathBuf>> {
     let mut t = Table::new(&["dataset", "n_samples", "n_features", "density"]);
     for name in ["rcv1", "news20", "finance", "kdda", "url", "real-sim"] {
@@ -638,6 +639,7 @@ pub fn run_experiment(name: &str, scale: Scale) -> Result<Vec<PathBuf>> {
         "fig10" => run_fig10(scale),
         "table1" => run_table1(),
         "table2" => run_table2(scale),
+        "pathsched" => crate::bench::path_bench::run_pathsched(scale),
         "all" => {
             let mut out = Vec::new();
             for exp in ALL_EXPERIMENTS {
@@ -652,7 +654,7 @@ pub fn run_experiment(name: &str, scale: Scale) -> Result<Vec<PathBuf>> {
 
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table1",
-    "table2",
+    "table2", "pathsched",
 ];
 
 #[cfg(test)]

@@ -5,6 +5,7 @@
 pub mod capability;
 pub mod figures;
 pub mod harness;
+pub mod path_bench;
 pub mod report;
 
 pub use harness::{black_box_curve, budget_schedule, BenchPoint, SolverCurve};

@@ -1,0 +1,144 @@
+//! Bench scenario `pathsched`: per-λ cold fits vs the warm-started path
+//! scheduler on the Figure-1 dataset.
+//!
+//! The cold strategy is what the old closed-enum fit service did — every
+//! λ an independent fit from β = 0. The warm strategy is the coordinator
+//! tentpole: one [`crate::coordinator::FitScheduler`] path job sweeping
+//! the same grid with warm-started coefficients, persistent working-set
+//! size and a per-λ gap-safe screening pass. Both run on **one** worker,
+//! so the measured win is algorithmic, not parallelism. Output lands in
+//! `results/pathsched/` (see EXPERIMENTS.md §pathsched).
+
+use crate::bench::figures::Scale;
+use crate::bench::report::write_markdown;
+use crate::coordinator::{specs, FitScheduler, JobEvent};
+use crate::data::{correlated, CorrelatedSpec};
+use crate::estimators::path::geometric_grid;
+use crate::solver::{ContinuationState, SolverOpts};
+use crate::util::table::Table;
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Outcome of one cold-vs-warm comparison.
+pub struct PathSchedComparison {
+    pub points: usize,
+    pub cold_epochs: usize,
+    pub warm_epochs: usize,
+    pub cold_time: f64,
+    pub warm_time: f64,
+    /// total features certified inactive across the warm sweep
+    pub warm_screened: usize,
+}
+
+impl PathSchedComparison {
+    /// CD-epoch speedup of warm path scheduling over cold per-λ fits.
+    pub fn epoch_speedup(&self) -> f64 {
+        self.cold_epochs as f64 / self.warm_epochs.max(1) as f64
+    }
+}
+
+/// Run the comparison on the Figure-1 dataset at `scale_frac` of the
+/// paper's (n = 1000, p = 2000) size, over a geometric grid of `points`
+/// λ ratios down to `min_ratio`.
+pub fn compare_cold_vs_warm(
+    scale_frac: f64,
+    points: usize,
+    min_ratio: f64,
+    tol: f64,
+    seed: u64,
+) -> PathSchedComparison {
+    let ds = Arc::new(correlated(CorrelatedSpec::figure1(scale_frac), seed));
+    let ratios = geometric_grid(min_ratio, points);
+    let opts = SolverOpts::default().with_tol(tol);
+    let spec = specs::lasso(1.0);
+    let lambda_max = spec.lambda_max(&ds.design, &ds.y);
+
+    // cold: every λ an independent fit from zero (fresh state per point)
+    let t0 = Instant::now();
+    let mut cold_epochs = 0;
+    for &ratio in &ratios {
+        let point_spec = spec.at_lambda(lambda_max * ratio);
+        let mut state = ContinuationState::default();
+        let fit = point_spec.solve(&ds.design, &ds.y, &opts, &mut state, None, None);
+        cold_epochs += fit.n_epochs;
+    }
+    let cold_time = t0.elapsed().as_secs_f64();
+
+    // warm: one scheduler path job on one worker, streamed per-λ
+    let mut sched = FitScheduler::start(1);
+    let t1 = Instant::now();
+    sched.submit_path(Arc::clone(&ds), specs::lasso(1.0), ratios.clone(), opts);
+    let mut warm_epochs = 0;
+    let mut warm_screened = 0;
+    loop {
+        match sched.events.recv().expect("scheduler died") {
+            JobEvent::PathPoint(p) => {
+                warm_epochs += p.epochs;
+                warm_screened += p.n_screened;
+            }
+            JobEvent::PathDone(_) => break,
+            JobEvent::FitDone(_) => {}
+        }
+    }
+    let warm_time = t1.elapsed().as_secs_f64();
+    sched.shutdown();
+
+    PathSchedComparison {
+        points,
+        cold_epochs,
+        warm_epochs,
+        cold_time,
+        warm_time,
+        warm_screened,
+    }
+}
+
+/// Experiment runner (`skglm exp pathsched [--full]`): writes the
+/// comparison table under `results/pathsched/`.
+pub fn run_pathsched(scale: Scale) -> Result<Vec<PathBuf>> {
+    let (frac, points, tol) = match scale {
+        Scale::Smoke => (0.12, 10, 1e-6),
+        Scale::Full => (1.0, 30, 1e-8),
+    };
+    let c = compare_cold_vs_warm(frac, points, 1e-2, tol, 42);
+    let mut t = Table::new(&["strategy", "points", "cd_epochs", "screened", "wall_s", "epoch_speedup"]);
+    t.row(vec![
+        "cold fit per λ".to_string(),
+        c.points.to_string(),
+        c.cold_epochs.to_string(),
+        "0".to_string(),
+        format!("{:.3}", c.cold_time),
+        "1.00x".to_string(),
+    ]);
+    t.row(vec![
+        "warm path scheduler".to_string(),
+        c.points.to_string(),
+        c.warm_epochs.to_string(),
+        c.warm_screened.to_string(),
+        format!("{:.3}", c.warm_time),
+        format!("{:.2}x", c.epoch_speedup()),
+    ]);
+    eprintln!("[pathsched] cold {} epochs / {:.3}s  vs  warm {} epochs / {:.3}s ({:.2}x)",
+        c.cold_epochs, c.cold_time, c.warm_epochs, c.warm_time, c.epoch_speedup());
+    Ok(vec![write_markdown("pathsched", "fig1_cold_vs_warm", &t)?])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warm_path_scheduling_beats_cold_fits() {
+        let c = compare_cold_vs_warm(0.08, 8, 2e-2, 1e-6, 7);
+        assert_eq!(c.points, 8);
+        assert!(c.cold_epochs > 0 && c.warm_epochs > 0);
+        assert!(
+            c.warm_epochs < c.cold_epochs,
+            "warm ({}) should need fewer CD epochs than cold ({})",
+            c.warm_epochs,
+            c.cold_epochs
+        );
+    }
+}

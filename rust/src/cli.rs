@@ -133,6 +133,53 @@ mod tests {
     }
 
     #[test]
+    fn key_equals_value_keeps_later_equals_signs() {
+        // regression: `--out=a=b.svm` must split on the FIRST '='
+        let mut a = parse("synth --out=a=b.svm");
+        assert_eq!(a.get("out").as_deref(), Some("a=b.svm"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn key_equals_value_mixes_with_space_form() {
+        let mut a = parse("solve --tol=1e-6 --lambda 0.5 --seed=7");
+        assert_eq!(a.get_f64("tol", 0.0).unwrap(), 1e-6);
+        assert_eq!(a.get_f64("lambda", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_usize("seed", 0).unwrap(), 7);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn repeated_flag_last_wins() {
+        let mut a = parse("solve --tol 1e-4 --tol=1e-8");
+        assert_eq!(a.get_f64("tol", 0.0).unwrap(), 1e-8);
+    }
+
+    #[test]
+    fn unknown_switch_rejected_even_with_known_flags_consumed() {
+        // regression: switches (no value) must also be caught by finish()
+        let mut a = parse("path --points 5 --vrebose");
+        assert_eq!(a.get_usize("points", 0).unwrap(), 5);
+        let err = a.finish().unwrap_err();
+        assert!(format!("{err}").contains("vrebose"), "typo named in: {err}");
+    }
+
+    #[test]
+    fn unknown_key_equals_value_rejected() {
+        let mut a = parse("path --poinst=5");
+        let _ = a.get_usize("points", 20);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn switch_before_flag_is_not_eaten_as_value() {
+        let mut a = parse("solve --verbose --tol 1e-3");
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_f64("tol", 0.0).unwrap(), 1e-3);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
     fn defaults_apply() {
         let mut a = parse("solve");
         assert_eq!(a.get_or("dataset", "rcv1"), "rcv1");

@@ -1,0 +1,238 @@
+//! Shared per-dataset state for the fit scheduler: normalized designs,
+//! Gram diagonals (column squared norms) and warm-start coefficients,
+//! keyed by (dataset identity, datafit/penalty family) and shared across
+//! jobs through the existing `Arc<Dataset>` plumbing.
+//!
+//! Dataset identity is the `Arc` allocation (`Arc::as_ptr`): jobs that
+//! share a dataset must share the same `Arc<Dataset>` — exactly how the
+//! service has always been used (a λ sweep clones the `Arc`, not the
+//! design). Every design entry **pins its dataset** (holds the `Arc`),
+//! so an address can never be reused by a new dataset while its key is
+//! live, and the coefficient maps are only touched after `design_entry`
+//! has pinned the same `Arc` — stale hits by pointer reuse are thereby
+//! impossible. The flip side: entries live for the scheduler's lifetime
+//! (a λ-sweep service working a bounded dataset set, not an unbounded
+//! stream; drop the scheduler to release them).
+
+use crate::data::Dataset;
+use crate::linalg::Design;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Cached design state for one (dataset, normalization) pair. Holds the
+/// dataset `Arc`, pinning the allocation its cache key points at.
+pub struct DesignEntry {
+    owner: Arc<Dataset>,
+    /// √n-normalized copy of the design (None ⇒ use the original).
+    normalized: Option<Arc<Design>>,
+    /// Gram diagonal `‖X_j‖²` of the (possibly normalized) design.
+    pub col_sq_norms: Arc<Vec<f64>>,
+    /// Column scales applied by normalization (β_orig = scale ⊙ β).
+    pub scales: Option<Arc<Vec<f64>>>,
+}
+
+impl DesignEntry {
+    /// The design jobs should solve on (normalized copy when the spec's
+    /// convention asks for it, the dataset's own otherwise).
+    pub fn design(&self) -> &Design {
+        match &self.normalized {
+            Some(d) => d,
+            None => &self.owner.design,
+        }
+    }
+}
+
+struct CoefEntry {
+    lambda: f64,
+    beta: Vec<f64>,
+}
+
+/// Hit/miss counters (observability; `skglm serve` prints them).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub design_hits: usize,
+    pub design_misses: usize,
+    pub coef_hits: usize,
+    pub coef_misses: usize,
+}
+
+type CoefKey = (usize, bool, &'static str, &'static str);
+
+/// The scheduler's shared cache. All methods take `&self`; internal
+/// locking is per-map and never held across a solve.
+#[derive(Default)]
+pub struct DatasetCache {
+    designs: Mutex<HashMap<(usize, bool), Arc<DesignEntry>>>,
+    coefs: Mutex<HashMap<CoefKey, CoefEntry>>,
+    design_hits: AtomicUsize,
+    design_misses: AtomicUsize,
+    coef_hits: AtomicUsize,
+    coef_misses: AtomicUsize,
+}
+
+impl DatasetCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Identity of a shared dataset (the `Arc` allocation).
+    pub fn dataset_key(dataset: &Arc<Dataset>) -> usize {
+        Arc::as_ptr(dataset) as usize
+    }
+
+    /// Design + Gram-diagonal entry for (dataset, normalization),
+    /// computed once and shared by every job on the dataset. The √n
+    /// normalization copy — a full O(nnz) design clone — happens at most
+    /// once per dataset instead of once per MCP/SCAD job.
+    pub fn design_entry(&self, dataset: &Arc<Dataset>, normalize: bool) -> Arc<DesignEntry> {
+        let key = (Self::dataset_key(dataset), normalize);
+        {
+            let map = self.designs.lock().unwrap();
+            if let Some(entry) = map.get(&key) {
+                self.design_hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(entry);
+            }
+        }
+        // Compute outside the lock; a racing job may compute the same
+        // entry, in which case the first insert wins (identical content).
+        let entry = if normalize {
+            let mut d = dataset.design.clone();
+            let scales = d.normalize_cols((dataset.n() as f64).sqrt());
+            let norms = d.col_sq_norms();
+            Arc::new(DesignEntry {
+                owner: Arc::clone(dataset),
+                normalized: Some(Arc::new(d)),
+                col_sq_norms: Arc::new(norms),
+                scales: Some(Arc::new(scales)),
+            })
+        } else {
+            Arc::new(DesignEntry {
+                owner: Arc::clone(dataset),
+                normalized: None,
+                col_sq_norms: Arc::new(dataset.design.col_sq_norms()),
+                scales: None,
+            })
+        };
+        self.design_misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.designs.lock().unwrap();
+        Arc::clone(map.entry(key).or_insert(entry))
+    }
+
+    /// Most recent solution stored for (dataset, normalization, datafit,
+    /// penalty family), with the λ it was solved at. Only convex specs
+    /// should consume this (any warm start reaches the same optimum).
+    pub fn warm_coef(
+        &self,
+        dataset: &Arc<Dataset>,
+        normalize: bool,
+        datafit: &'static str,
+        family: &'static str,
+    ) -> Option<(f64, Vec<f64>)> {
+        let key = (Self::dataset_key(dataset), normalize, datafit, family);
+        let map = self.coefs.lock().unwrap();
+        match map.get(&key) {
+            Some(entry) => {
+                self.coef_hits.fetch_add(1, Ordering::Relaxed);
+                Some((entry.lambda, entry.beta.clone()))
+            }
+            None => {
+                self.coef_misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Store the latest solution for the key (overwrites).
+    pub fn store_coef(
+        &self,
+        dataset: &Arc<Dataset>,
+        normalize: bool,
+        datafit: &'static str,
+        family: &'static str,
+        lambda: f64,
+        beta: &[f64],
+    ) {
+        let key = (Self::dataset_key(dataset), normalize, datafit, family);
+        let mut map = self.coefs.lock().unwrap();
+        map.insert(key, CoefEntry { lambda, beta: beta.to_vec() });
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            design_hits: self.design_hits.load(Ordering::Relaxed),
+            design_misses: self.design_misses.load(Ordering::Relaxed),
+            coef_hits: self.coef_hits.load(Ordering::Relaxed),
+            coef_misses: self.coef_misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{correlated, CorrelatedSpec};
+
+    fn ds() -> Arc<Dataset> {
+        Arc::new(correlated(CorrelatedSpec { n: 30, p: 40, rho: 0.3, nnz: 4, snr: 10.0 }, 2))
+    }
+
+    #[test]
+    fn design_entry_computed_once() {
+        let cache = DatasetCache::new();
+        let d = ds();
+        let a = cache.design_entry(&d, false);
+        let b = cache.design_entry(&d, false);
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = cache.stats();
+        assert_eq!(s.design_misses, 1);
+        assert_eq!(s.design_hits, 1);
+        // unnormalized entry exposes the original design
+        assert!(std::ptr::eq(a.design(), &d.design));
+    }
+
+    #[test]
+    fn design_entry_pins_its_dataset() {
+        let cache = DatasetCache::new();
+        let d = ds();
+        let weak = Arc::downgrade(&d);
+        let entry = cache.design_entry(&d, false);
+        drop(d);
+        // the entry holds the Arc, so the keyed address cannot be
+        // reallocated to a different dataset while the cache is alive
+        assert!(weak.upgrade().is_some());
+        assert_eq!(entry.design().ncols(), 40);
+    }
+
+    #[test]
+    fn normalized_entry_has_unit_sqrt_n_columns() {
+        let cache = DatasetCache::new();
+        let d = ds();
+        let e = cache.design_entry(&d, true);
+        let n = d.n() as f64;
+        for (&sq, &scale) in e.col_sq_norms.iter().zip(e.scales.as_ref().unwrap().iter()) {
+            if scale != 1.0 {
+                assert!((sq - n).abs() < 1e-8, "normalized col sq norm {sq} != n {n}");
+            }
+        }
+        // distinct from the unnormalized entry
+        let raw = cache.design_entry(&d, false);
+        assert!(!Arc::ptr_eq(&e, &raw));
+    }
+
+    #[test]
+    fn coef_roundtrip_and_stats() {
+        let cache = DatasetCache::new();
+        let d = ds();
+        assert!(cache.warm_coef(&d, false, "quadratic", "l1").is_none());
+        cache.store_coef(&d, false, "quadratic", "l1", 0.2, &[1.0, 0.0]);
+        let (lam, beta) = cache.warm_coef(&d, false, "quadratic", "l1").unwrap();
+        assert_eq!(lam, 0.2);
+        assert_eq!(beta, vec![1.0, 0.0]);
+        // different family is a different key
+        assert!(cache.warm_coef(&d, false, "quadratic", "mcp").is_none());
+        let s = cache.stats();
+        assert_eq!(s.coef_hits, 1);
+        assert_eq!(s.coef_misses, 2);
+    }
+}

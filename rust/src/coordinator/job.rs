@@ -1,0 +1,303 @@
+//! Trait-based fit specifications — the open replacement for the old
+//! closed `EstimatorSpec` enum.
+//!
+//! A [`FitSpec`] is *any* datafit × penalty combination the solver layer
+//! supports, packaged with the conventions the scheduler needs to run it
+//! well: its λ_max rule (path grids), whether the paper's √n column
+//! normalization applies (MCP/SCAD/ℓ_q), whether the objective is convex
+//! (safe coefficient-cache reuse), and whether gap-safe screening is
+//! sound for it (quadratic × ℓ1). [`GlmSpec`] is the generic
+//! implementation — one monomorphized `solve` call behind a trait object
+//! — and [`specs`] provides constructors for the paper's model zoo.
+
+use crate::datafit::{Datafit, Logistic, Quadratic};
+use crate::estimators::linear::quadratic_lambda_max;
+use crate::linalg::Design;
+use crate::penalty::{L1L2, Lq, Mcp, Penalty, Scad, L1};
+use crate::solver::{solve_continued, ContinuationState, FitResult, SolverOpts};
+use std::sync::Arc;
+
+/// An executable fit specification: everything the scheduler needs to run
+/// one (datafit, penalty, λ) problem on a worker, including along a
+/// warm-started path.
+pub trait FitSpec: Send + Sync {
+    /// Human-readable tag used in streamed results (e.g. `quadratic/mcp`).
+    fn label(&self) -> String;
+
+    /// The datafit's [`Datafit::name`] (coefficient-cache key part).
+    fn datafit_name(&self) -> &'static str;
+
+    /// Penalty-family tag (coefficient-cache key part), e.g. `"l1"`.
+    fn family(&self) -> &'static str;
+
+    /// Current regularization strength.
+    fn lambda(&self) -> f64;
+
+    /// Convex objective? Controls warm-start reuse across jobs: for
+    /// convex problems any starting point converges to the same optimum,
+    /// so cached coefficients are safe to reuse; non-convex fits always
+    /// cold-start (the critical point reached depends on the init).
+    fn is_convex(&self) -> bool;
+
+    /// Whether the paper's √n column-normalization convention applies
+    /// (MCP / SCAD / ℓ_q); the scheduler then solves on the cached
+    /// normalized design.
+    fn normalize_design(&self) -> bool;
+
+    /// Smallest λ whose solution is all-zero (anchors path grids).
+    fn lambda_max(&self, design: &Design, y: &[f64]) -> f64;
+
+    /// The same specification at a different λ (path sweeps).
+    fn at_lambda(&self, lambda: f64) -> Box<dyn FitSpec>;
+
+    /// Gap-safe screening is sound for this spec (convex quadratic × ℓ1).
+    fn supports_gap_screening(&self) -> bool {
+        false
+    }
+
+    /// Solve on `design`/`y`, warm-starting from `state` and updating it
+    /// with the outcome. `col_sq_norms` is the cached Gram diagonal
+    /// (skips the per-fit O(nnz) recomputation); `frozen` marks features
+    /// certified inactive at this λ (excluded from scoring and the
+    /// working set).
+    fn solve(
+        &self,
+        design: &Design,
+        y: &[f64],
+        opts: &SolverOpts,
+        state: &mut ContinuationState,
+        col_sq_norms: Option<&[f64]>,
+        frozen: Option<&[bool]>,
+    ) -> FitResult;
+}
+
+/// Closure type producing the penalty at a given λ (path sweeps).
+pub type MakePenalty<P> = Arc<dyn Fn(f64) -> P + Send + Sync>;
+/// Closure type computing λ_max for the datafit.
+pub type LambdaMax = Arc<dyn Fn(&Design, &[f64]) -> f64 + Send + Sync>;
+
+/// Generic [`FitSpec`]: any [`Datafit`] × [`Penalty`] the solver layer
+/// accepts, monomorphized once behind the trait object.
+pub struct GlmSpec<D: Datafit + 'static, P: Penalty + 'static> {
+    datafit: D,
+    penalty: P,
+    family: &'static str,
+    lambda: f64,
+    normalize: bool,
+    make: MakePenalty<P>,
+    lambda_max: LambdaMax,
+}
+
+impl<D: Datafit + 'static, P: Penalty + 'static> GlmSpec<D, P> {
+    /// Build a spec from its parts. `make(λ)` must construct the penalty
+    /// at strength λ; `lambda_max` anchors path grids for the datafit.
+    pub fn new(
+        datafit: D,
+        family: &'static str,
+        lambda: f64,
+        normalize: bool,
+        make: MakePenalty<P>,
+        lambda_max: LambdaMax,
+    ) -> Self {
+        let penalty = make(lambda);
+        Self { datafit, penalty, family, lambda, normalize, make, lambda_max }
+    }
+
+    /// Box into a trait object (scheduler job form).
+    pub fn boxed(self) -> Box<dyn FitSpec> {
+        Box::new(self)
+    }
+}
+
+impl<D: Datafit + 'static, P: Penalty + 'static> FitSpec for GlmSpec<D, P> {
+    fn label(&self) -> String {
+        format!("{}/{}", self.datafit.name(), self.family)
+    }
+
+    fn datafit_name(&self) -> &'static str {
+        self.datafit.name()
+    }
+
+    fn family(&self) -> &'static str {
+        self.family
+    }
+
+    fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn is_convex(&self) -> bool {
+        self.penalty.is_convex()
+    }
+
+    fn normalize_design(&self) -> bool {
+        self.normalize
+    }
+
+    fn lambda_max(&self, design: &Design, y: &[f64]) -> f64 {
+        (self.lambda_max)(design, y)
+    }
+
+    fn at_lambda(&self, lambda: f64) -> Box<dyn FitSpec> {
+        Box::new(GlmSpec {
+            datafit: self.datafit.clone(),
+            penalty: (self.make)(lambda),
+            family: self.family,
+            lambda,
+            normalize: self.normalize,
+            make: Arc::clone(&self.make),
+            lambda_max: Arc::clone(&self.lambda_max),
+        })
+    }
+
+    fn supports_gap_screening(&self) -> bool {
+        self.datafit_name() == "quadratic" && self.family == "l1"
+    }
+
+    fn solve(
+        &self,
+        design: &Design,
+        y: &[f64],
+        opts: &SolverOpts,
+        state: &mut ContinuationState,
+        col_sq_norms: Option<&[f64]>,
+        frozen: Option<&[bool]>,
+    ) -> FitResult {
+        let mut datafit = self.datafit.clone();
+        solve_continued(
+            design,
+            y,
+            &mut datafit,
+            &self.penalty,
+            opts,
+            None,
+            state,
+            frozen,
+            col_sq_norms,
+        )
+    }
+}
+
+/// Constructors for the paper's model zoo. Anything not listed here can
+/// be built directly with [`GlmSpec::new`] — the point of the trait-based
+/// job layer is that the scheduler does not enumerate models.
+pub mod specs {
+    use super::*;
+
+    fn quad_lambda_max() -> LambdaMax {
+        Arc::new(|d: &Design, y: &[f64]| quadratic_lambda_max(d, y))
+    }
+
+    /// Lasso: quadratic × ℓ1.
+    pub fn lasso(lambda: f64) -> Box<dyn FitSpec> {
+        let make: MakePenalty<L1> = Arc::new(L1::new);
+        GlmSpec::new(Quadratic::new(), "l1", lambda, false, make, quad_lambda_max()).boxed()
+    }
+
+    /// Elastic net: quadratic × (ρ‖·‖₁ + (1−ρ)‖·‖²/2).
+    pub fn elastic_net(lambda: f64, l1_ratio: f64) -> Box<dyn FitSpec> {
+        let make: MakePenalty<L1L2> = Arc::new(move |l| L1L2::new(l, l1_ratio));
+        let lmax: LambdaMax = Arc::new(move |d: &Design, y: &[f64]| {
+            quadratic_lambda_max(d, y) / l1_ratio.max(1e-12)
+        });
+        GlmSpec::new(Quadratic::new(), "l1l2", lambda, false, make, lmax).boxed()
+    }
+
+    /// MCP regression (paper √n normalization convention).
+    pub fn mcp(lambda: f64, gamma: f64) -> Box<dyn FitSpec> {
+        let make: MakePenalty<Mcp> = Arc::new(move |l| Mcp::new(l, gamma));
+        GlmSpec::new(Quadratic::new(), "mcp", lambda, true, make, quad_lambda_max()).boxed()
+    }
+
+    /// SCAD regression (paper √n normalization convention).
+    pub fn scad(lambda: f64, gamma: f64) -> Box<dyn FitSpec> {
+        let make: MakePenalty<Scad> = Arc::new(move |l| Scad::new(l, gamma));
+        GlmSpec::new(Quadratic::new(), "scad", lambda, true, make, quad_lambda_max()).boxed()
+    }
+
+    /// ℓ_q (q < 1) regression, `score^cd` scoring (paper Appendix C).
+    pub fn lq(lambda: f64, q: f64) -> Box<dyn FitSpec> {
+        let make: MakePenalty<Lq> = Arc::new(move |l| Lq::new(l, q));
+        GlmSpec::new(Quadratic::new(), "lq", lambda, true, make, quad_lambda_max()).boxed()
+    }
+
+    /// ℓ1-regularised logistic regression (labels ±1).
+    pub fn logistic_l1(lambda: f64) -> Box<dyn FitSpec> {
+        let make: MakePenalty<L1> = Arc::new(L1::new);
+        let lmax: LambdaMax = Arc::new(|d: &Design, y: &[f64]| {
+            let n = d.nrows() as f64;
+            let mut xty = vec![0.0; d.ncols()];
+            d.matvec_t(y, &mut xty);
+            crate::linalg::norm_inf(&xty) / (2.0 * n)
+        });
+        GlmSpec::new(Logistic::new(), "l1", lambda, false, make, lmax).boxed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{correlated, CorrelatedSpec};
+
+    #[test]
+    fn spec_metadata_matches_conventions() {
+        let l = specs::lasso(0.1);
+        assert!(l.is_convex());
+        assert!(!l.normalize_design());
+        assert!(l.supports_gap_screening());
+        assert_eq!(l.family(), "l1");
+        assert_eq!(l.datafit_name(), "quadratic");
+
+        let m = specs::mcp(0.1, 3.0);
+        assert!(!m.is_convex());
+        assert!(m.normalize_design());
+        assert!(!m.supports_gap_screening());
+
+        let e = specs::elastic_net(0.1, 0.5);
+        assert!(e.is_convex());
+        assert!(!e.supports_gap_screening());
+    }
+
+    #[test]
+    fn at_lambda_rebuilds_penalty() {
+        let l = specs::lasso(0.1);
+        let l2 = l.at_lambda(0.05);
+        assert_eq!(l2.lambda(), 0.05);
+        assert_eq!(l2.label(), l.label());
+    }
+
+    #[test]
+    fn spec_solve_matches_estimator_api() {
+        let ds = correlated(CorrelatedSpec { n: 60, p: 90, rho: 0.4, nnz: 6, snr: 10.0 }, 5);
+        let lam = quadratic_lambda_max(&ds.design, &ds.y) / 10.0;
+        let spec = specs::lasso(lam);
+        let mut state = ContinuationState::default();
+        let fit = spec.solve(
+            &ds.design,
+            &ds.y,
+            &SolverOpts::default().with_tol(1e-10),
+            &mut state,
+            None,
+            None,
+        );
+        let reference =
+            crate::estimators::Lasso::new(lam).with_tol(1e-10).fit(&ds.design, &ds.y);
+        assert!((fit.objective - reference.objective).abs() < 1e-10);
+        assert!(state.beta.is_some());
+        assert!(state.ws_size.is_some());
+    }
+
+    #[test]
+    fn cached_gram_diagonal_gives_identical_fit() {
+        let ds = correlated(CorrelatedSpec { n: 50, p: 70, rho: 0.3, nnz: 5, snr: 10.0 }, 8);
+        let lam = quadratic_lambda_max(&ds.design, &ds.y) / 8.0;
+        let spec = specs::lasso(lam);
+        let norms = ds.design.col_sq_norms();
+        let mut s1 = ContinuationState::default();
+        let mut s2 = ContinuationState::default();
+        let opts = SolverOpts::default().with_tol(1e-10);
+        let a = spec.solve(&ds.design, &ds.y, &opts, &mut s1, None, None);
+        let b = spec.solve(&ds.design, &ds.y, &opts, &mut s2, Some(&norms), None);
+        assert_eq!(a.beta, b.beta);
+    }
+}

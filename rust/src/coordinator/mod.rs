@@ -1,15 +1,30 @@
 //! Coordinator: the process-level runtime around the solver library.
 //!
-//! The paper's contribution is the solver, so L3's coordination layer is
-//! deliberately thin (per the session architecture note): a std-thread
-//! worker pool ([`pool`]) used to parallelise experiment sweeps, and a
-//! fit service ([`service`]) that owns a job queue, executes fits on
-//! worker threads and streams results back — the shape a model-serving
-//! deployment of the library would take (tokio is unavailable offline;
-//! the service is a compact std::sync::mpsc equivalent).
+//! Three pieces:
+//!
+//! - [`pool`] — a std-thread worker pool used to parallelise experiment
+//!   sweeps (input-order results);
+//! - [`job`] — the trait-based fit abstraction ([`FitSpec`]): any
+//!   datafit × penalty combination the solver layer supports, packaged
+//!   with its path/normalization/screening conventions;
+//! - [`scheduler`] — the path-aware fit scheduler ([`FitScheduler`]):
+//!   a job queue executing single fits and warm-started λ-path sweeps on
+//!   worker threads, streaming results back in completion order, with a
+//!   per-dataset design/Gram/coefficient cache ([`cache`]) shared across
+//!   jobs via `Arc<Dataset>`.
+//!
+//! This is the long-running-process shape of the library (a model-fitting
+//! microservice); tokio is unavailable offline, so it is a compact
+//! std::sync::mpsc equivalent.
 
+pub mod cache;
+pub mod job;
 pub mod pool;
-pub mod service;
+pub mod scheduler;
 
+pub use cache::{CacheStats, DatasetCache};
+pub use job::{specs, FitSpec, GlmSpec};
 pub use pool::run_parallel;
-pub use service::{FitJob, FitOutcome, SolveService};
+pub use scheduler::{
+    FitOutcome, FitScheduler, Job, JobEvent, PathPointOutcome, PathSummary,
+};

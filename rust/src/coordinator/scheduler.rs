@@ -1,0 +1,461 @@
+//! Path-aware fit scheduler: a leader/worker queue over trait-based
+//! [`FitSpec`] jobs with completion-order result streaming.
+//!
+//! Replaces the old closed-enum `SolveService`. Two job shapes:
+//!
+//! - [`Job::Fit`] — one (spec, λ) solve. Convex specs warm-start from the
+//!   coefficient cache when a previous job solved the same
+//!   (dataset, datafit, family).
+//! - [`Job::Path`] — a whole λ grid swept **on one worker** with
+//!   warm-started coefficients and persistent working-set size between
+//!   points ([`crate::solver::ContinuationState`]), plus a per-λ gap-safe
+//!   screening pass for specs that support it. Each solved point streams
+//!   back immediately as [`JobEvent::PathPoint`] — callers see the path
+//!   fill in completion order rather than waiting for the sweep.
+//!
+//! Results stream back over a channel in completion order, every event
+//! tagged with its job id; jobs from different callers interleave freely.
+//! Built on std::sync::mpsc since tokio is unavailable offline.
+
+use super::cache::DatasetCache;
+use super::job::FitSpec;
+use crate::data::Dataset;
+use crate::estimators::path::PathPoint;
+use crate::metrics::{estimation_error, prediction_mse, support_recovery};
+use crate::solver::screening::solve_lasso_screened_warm;
+use crate::solver::{ContinuationState, FitResult, SolverOpts};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A schedulable unit of work.
+pub enum Job {
+    /// One fit at a fixed λ.
+    Fit { dataset: Arc<Dataset>, spec: Box<dyn FitSpec>, opts: SolverOpts },
+    /// A warm-started sweep over `ratios · λ_max` (sorted descending
+    /// internally — warm starts flow from high λ to low).
+    Path { dataset: Arc<Dataset>, spec: Box<dyn FitSpec>, ratios: Vec<f64>, opts: SolverOpts },
+}
+
+/// A completed single fit.
+pub struct FitOutcome {
+    pub job_id: u64,
+    pub label: String,
+    pub lambda: f64,
+    pub result: FitResult,
+    pub wall_time: f64,
+    /// true when the coefficient cache seeded the solve
+    pub warm_started: bool,
+}
+
+/// One solved point of a path job, streamed as soon as it finishes.
+pub struct PathPointOutcome {
+    pub job_id: u64,
+    /// position in the (descending) ratio grid
+    pub index: usize,
+    pub point: PathPoint,
+    pub epochs: usize,
+    /// features certified inactive by the gap-safe pass at this λ
+    pub n_screened: usize,
+    pub wall_time: f64,
+}
+
+/// Terminal event of a path job.
+pub struct PathSummary {
+    pub job_id: u64,
+    pub label: String,
+    pub n_points: usize,
+    pub total_epochs: usize,
+    pub total_time: f64,
+}
+
+/// Everything the scheduler streams back, tagged with its job id.
+pub enum JobEvent {
+    FitDone(FitOutcome),
+    PathPoint(PathPointOutcome),
+    PathDone(PathSummary),
+}
+
+impl JobEvent {
+    pub fn job_id(&self) -> u64 {
+        match self {
+            JobEvent::FitDone(o) => o.job_id,
+            JobEvent::PathPoint(o) => o.job_id,
+            JobEvent::PathDone(s) => s.job_id,
+        }
+    }
+}
+
+enum Msg {
+    Job(u64, Job),
+    Shutdown,
+}
+
+/// The scheduler: submit jobs, stream events, shut down cleanly.
+pub struct FitScheduler {
+    tx: Sender<Msg>,
+    /// Completion-order event stream.
+    pub events: Receiver<JobEvent>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: u64,
+    cache: Arc<DatasetCache>,
+}
+
+impl FitScheduler {
+    /// Spawn `n_workers` solver threads (at least one).
+    pub fn start(n_workers: usize) -> Self {
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (ev_tx, ev_rx) = channel::<JobEvent>();
+        let cache = Arc::new(DatasetCache::new());
+        let workers = (0..n_workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let ev_tx = ev_tx.clone();
+                let cache = Arc::clone(&cache);
+                std::thread::spawn(move || loop {
+                    let msg = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match msg {
+                        Ok(Msg::Job(id, job)) => run_job(id, job, &cache, &ev_tx),
+                        Ok(Msg::Shutdown) | Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        Self { tx, events: ev_rx, workers, next_id: 0, cache }
+    }
+
+    /// Submit any [`Job`]; returns its id.
+    pub fn submit(&mut self, job: Job) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.tx.send(Msg::Job(id, job)).expect("scheduler is down");
+        id
+    }
+
+    /// Submit a single fit.
+    pub fn submit_fit(
+        &mut self,
+        dataset: Arc<Dataset>,
+        spec: Box<dyn FitSpec>,
+        opts: SolverOpts,
+    ) -> u64 {
+        self.submit(Job::Fit { dataset, spec, opts })
+    }
+
+    /// Submit a warm-started path sweep (one worker, streamed points).
+    pub fn submit_path(
+        &mut self,
+        dataset: Arc<Dataset>,
+        spec: Box<dyn FitSpec>,
+        ratios: Vec<f64>,
+        opts: SolverOpts,
+    ) -> u64 {
+        self.submit(Job::Path { dataset, spec, ratios, opts })
+    }
+
+    /// Block until `count` events arrive (any kind, completion order).
+    pub fn collect_events(&self, count: usize) -> Vec<JobEvent> {
+        (0..count).map(|_| self.events.recv().expect("worker died")).collect()
+    }
+
+    /// Block until `count` single-fit outcomes arrive. Panics if a path
+    /// event interleaves — use [`FitScheduler::collect_events`] for mixed
+    /// workloads.
+    pub fn collect_fits(&self, count: usize) -> Vec<FitOutcome> {
+        self.collect_events(count)
+            .into_iter()
+            .map(|e| match e {
+                JobEvent::FitDone(o) => o,
+                other => panic!(
+                    "collect_fits saw a path event (job {}); use collect_events",
+                    other.job_id()
+                ),
+            })
+            .collect()
+    }
+
+    /// The shared dataset/coefficient cache (stats, tests).
+    pub fn cache(&self) -> &DatasetCache {
+        &self.cache
+    }
+
+    /// Graceful shutdown: queued jobs finish, then workers exit. Safe to
+    /// call with jobs in flight even when their events are never read —
+    /// workers ignore send failures on a dropped receiver.
+    pub fn shutdown(self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn run_job(id: u64, job: Job, cache: &DatasetCache, out: &Sender<JobEvent>) {
+    match job {
+        Job::Fit { dataset, spec, opts } => run_fit(id, &dataset, spec, &opts, cache, out),
+        Job::Path { dataset, spec, ratios, opts } => {
+            run_path(id, &dataset, spec, ratios, &opts, cache, out)
+        }
+    }
+}
+
+fn run_fit(
+    id: u64,
+    dataset: &Arc<Dataset>,
+    spec: Box<dyn FitSpec>,
+    opts: &SolverOpts,
+    cache: &DatasetCache,
+    out: &Sender<JobEvent>,
+) {
+    let t0 = Instant::now();
+    let normalize = spec.normalize_design();
+    let entry = cache.design_entry(dataset, normalize);
+    let design = entry.design();
+    let mut state = ContinuationState::default();
+    let mut warm_started = false;
+    if spec.is_convex() {
+        if let Some((_lambda, beta)) =
+            cache.warm_coef(dataset, normalize, spec.datafit_name(), spec.family())
+        {
+            state.beta = Some(beta);
+            warm_started = true;
+        }
+    }
+    let result =
+        spec.solve(design, &dataset.y, opts, &mut state, Some(&entry.col_sq_norms), None);
+    if spec.is_convex() {
+        cache.store_coef(
+            dataset,
+            normalize,
+            spec.datafit_name(),
+            spec.family(),
+            spec.lambda(),
+            &result.beta,
+        );
+    }
+    let _ = out.send(JobEvent::FitDone(FitOutcome {
+        job_id: id,
+        label: spec.label(),
+        lambda: spec.lambda(),
+        result,
+        wall_time: t0.elapsed().as_secs_f64(),
+        warm_started,
+    }));
+}
+
+fn run_path(
+    id: u64,
+    dataset: &Arc<Dataset>,
+    spec: Box<dyn FitSpec>,
+    mut ratios: Vec<f64>,
+    opts: &SolverOpts,
+    cache: &DatasetCache,
+    out: &Sender<JobEvent>,
+) {
+    let t0 = Instant::now();
+    let normalize = spec.normalize_design();
+    let entry = cache.design_entry(dataset, normalize);
+    let design = entry.design();
+    let y = &dataset.y;
+    let lambda_max = spec.lambda_max(design, y);
+    // warm starts flow from high λ (sparse) to low λ (dense)
+    ratios.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+    let beta_true =
+        if dataset.beta_true.is_empty() { None } else { Some(dataset.beta_true.as_slice()) };
+    let mut state = ContinuationState::default();
+    let mut total_epochs = 0;
+    // screening support is λ-independent; decide once for the sweep
+    let gap_screened = spec.supports_gap_screening();
+
+    for (index, &ratio) in ratios.iter().enumerate() {
+        let pt0 = Instant::now();
+        let lambda = lambda_max * ratio;
+
+        // Gap-safe screening runs *inside* the solve for specs that
+        // support it (quadratic × ℓ1): the mask is rebuilt per λ — a λᵢ
+        // certificate is invalid at λᵢ₊₁ < λᵢ — and tightens as the gap
+        // shrinks. What persists between points is the ContinuationState
+        // (warm β + working-set size).
+        let (result, n_screened) = if gap_screened {
+            solve_lasso_screened_warm(
+                design,
+                y,
+                lambda,
+                opts,
+                &mut state,
+                Some(&entry.col_sq_norms),
+            )
+        } else {
+            let point_spec = spec.at_lambda(lambda);
+            let r = point_spec.solve(design, y, opts, &mut state, Some(&entry.col_sq_norms), None);
+            (r, 0)
+        };
+        total_epochs += result.n_epochs;
+
+        // Metrics vs. ground truth are computed in ORIGINAL coordinates:
+        // for normalized specs the solve ran on X·diag(s), so the
+        // original-design coefficients are s ⊙ β and the prediction uses
+        // the dataset's own design.
+        let support_size = result.support().len();
+        let (recovery, est, pred) = match beta_true {
+            None => (None, None, None),
+            Some(bt) => {
+                let rescaled: Option<Vec<f64>> = entry.scales.as_ref().map(|scales| {
+                    result.beta.iter().zip(scales.iter()).map(|(b, s)| b * s).collect()
+                });
+                let metric_beta: &[f64] = rescaled.as_deref().unwrap_or(&result.beta);
+                let metric_design: &crate::linalg::Design =
+                    if rescaled.is_some() { &dataset.design } else { design };
+                (
+                    Some(support_recovery(metric_beta, bt, 1e-8)),
+                    Some(estimation_error(metric_beta, bt)),
+                    Some(prediction_mse(metric_design, metric_beta, bt)),
+                )
+            }
+        };
+        let point = PathPoint {
+            lambda,
+            lambda_ratio: ratio,
+            objective: result.objective,
+            support_size,
+            recovery,
+            estimation_error: est,
+            prediction_mse: pred,
+            beta: result.beta,
+        };
+        let _ = out.send(JobEvent::PathPoint(PathPointOutcome {
+            job_id: id,
+            index,
+            point,
+            epochs: result.n_epochs,
+            n_screened,
+            wall_time: pt0.elapsed().as_secs_f64(),
+        }));
+    }
+
+    // seed future single fits on this dataset with the densest solution
+    if spec.is_convex() {
+        if let Some(beta) = &state.beta {
+            cache.store_coef(
+                dataset,
+                normalize,
+                spec.datafit_name(),
+                spec.family(),
+                lambda_max * ratios.last().copied().unwrap_or(1.0),
+                beta,
+            );
+        }
+    }
+    let _ = out.send(JobEvent::PathDone(PathSummary {
+        job_id: id,
+        label: spec.label(),
+        n_points: ratios.len(),
+        total_epochs,
+        total_time: t0.elapsed().as_secs_f64(),
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::specs;
+    use crate::data::{correlated, CorrelatedSpec};
+    use crate::estimators::linear::quadratic_lambda_max;
+    use crate::estimators::Lasso;
+
+    fn dataset(seed: u64) -> Arc<Dataset> {
+        Arc::new(correlated(
+            CorrelatedSpec { n: 60, p: 80, rho: 0.4, nnz: 5, snr: 10.0 },
+            seed,
+        ))
+    }
+
+    #[test]
+    fn sweep_over_lambda_completes() {
+        let ds = dataset(0);
+        let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+        let mut sched = FitScheduler::start(2);
+        for k in 1..=6 {
+            sched.submit_fit(
+                Arc::clone(&ds),
+                specs::lasso(lam_max / (2.0 * k as f64)),
+                SolverOpts::default(),
+            );
+        }
+        let mut outcomes = sched.collect_fits(6);
+        sched.shutdown();
+        assert_eq!(outcomes.len(), 6);
+        outcomes.sort_by_key(|o| o.job_id);
+        // smaller lambda (later ids) -> larger support
+        let first = outcomes.first().unwrap().result.support().len();
+        let last = outcomes.last().unwrap().result.support().len();
+        assert!(last >= first);
+        for o in &outcomes {
+            assert!(o.result.converged);
+            assert!(o.wall_time >= 0.0);
+        }
+    }
+
+    #[test]
+    fn mixed_trait_jobs() {
+        let ds = dataset(1);
+        let lam = quadratic_lambda_max(&ds.design, &ds.y) / 10.0;
+        let mut sched = FitScheduler::start(2);
+        sched.submit_fit(Arc::clone(&ds), specs::lasso(lam), SolverOpts::default());
+        sched.submit_fit(Arc::clone(&ds), specs::elastic_net(lam, 0.5), SolverOpts::default());
+        sched.submit_fit(Arc::clone(&ds), specs::mcp(lam, 3.0), SolverOpts::default());
+        let outcomes = sched.collect_fits(3);
+        sched.shutdown();
+        assert_eq!(outcomes.len(), 3);
+        let labels: Vec<String> = outcomes.iter().map(|o| o.label.clone()).collect();
+        for l in ["quadratic/l1", "quadratic/l1l2", "quadratic/mcp"] {
+            assert!(labels.iter().any(|x| x == l), "missing {l} in {labels:?}");
+        }
+    }
+
+    #[test]
+    fn coefficient_cache_warm_starts_second_convex_fit() {
+        let ds = dataset(2);
+        let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+        let mut sched = FitScheduler::start(1);
+        let opts = SolverOpts::default().with_tol(1e-10);
+        sched.submit_fit(Arc::clone(&ds), specs::lasso(lam_max / 5.0), opts.clone());
+        let first = sched.collect_fits(1);
+        assert!(!first[0].warm_started);
+        sched.submit_fit(Arc::clone(&ds), specs::lasso(lam_max / 7.0), opts.clone());
+        let second = sched.collect_fits(1);
+        assert!(second[0].warm_started, "second lasso fit should reuse cached coefficients");
+        // warm start must not change the optimum
+        let reference = Lasso::new(lam_max / 7.0).with_tol(1e-10).fit(&ds.design, &ds.y);
+        assert!((second[0].result.objective - reference.objective).abs() < 1e-8);
+        let stats = sched.cache().stats();
+        assert!(stats.design_hits >= 1);
+        assert_eq!(stats.coef_hits, 1);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn non_convex_fits_never_reuse_coefficients() {
+        let ds = dataset(3);
+        let lam = quadratic_lambda_max(&ds.design, &ds.y) / 8.0;
+        let mut sched = FitScheduler::start(1);
+        sched.submit_fit(Arc::clone(&ds), specs::mcp(lam, 3.0), SolverOpts::default());
+        sched.submit_fit(Arc::clone(&ds), specs::mcp(lam / 2.0, 3.0), SolverOpts::default());
+        let outcomes = sched.collect_fits(2);
+        sched.shutdown();
+        assert!(outcomes.iter().all(|o| !o.warm_started));
+    }
+
+    #[test]
+    fn shutdown_without_jobs() {
+        let sched = FitScheduler::start(3);
+        sched.shutdown(); // must not hang
+    }
+}

@@ -31,6 +31,17 @@ pub trait Datafit: Clone + Send + Sync {
     /// for this (design, target) pair. Must be called before solving.
     fn init(&mut self, design: &Design, y: &[f64]);
 
+    /// Like [`Datafit::init`], reusing a precomputed Gram diagonal
+    /// (`‖X_j‖²` per column) when the implementation can. The default
+    /// ignores the hint and calls [`Datafit::init`]; `Quadratic`
+    /// overrides it (its Lipschitz constants are exactly `‖X_j‖²/n`), so
+    /// the coordinator's per-dataset cache skips the O(nnz) column-norm
+    /// recomputation on every job sharing a design.
+    fn init_cached(&mut self, design: &Design, y: &[f64], col_sq_norms: Option<&[f64]>) {
+        let _ = col_sq_norms;
+        self.init(design, y);
+    }
+
     /// Per-coordinate Lipschitz constants `L_j` (length p). Valid after
     /// [`Datafit::init`].
     fn lipschitz(&self) -> &[f64];

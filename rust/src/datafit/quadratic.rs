@@ -26,6 +26,19 @@ impl Datafit for Quadratic {
         self.lipschitz = design.col_sq_norms().iter().map(|s| s / n).collect();
     }
 
+    fn init_cached(&mut self, design: &Design, y: &[f64], col_sq_norms: Option<&[f64]>) {
+        match col_sq_norms {
+            Some(norms) => {
+                assert_eq!(design.nrows(), y.len());
+                assert_eq!(norms.len(), design.ncols());
+                let n = design.nrows() as f64;
+                self.inv_n = 1.0 / n;
+                self.lipschitz = norms.iter().map(|s| s / n).collect();
+            }
+            None => self.init(design, y),
+        }
+    }
+
     fn lipschitz(&self) -> &[f64] {
         &self.lipschitz
     }

@@ -38,6 +38,20 @@ macro_rules! common_builder {
 }
 
 /// Lasso: `min ‖y−Xβ‖²/2n + λ‖β‖₁`.
+///
+/// # Examples
+///
+/// ```
+/// use skglm::data::{correlated, CorrelatedSpec};
+/// use skglm::estimators::Lasso;
+///
+/// let ds = correlated(CorrelatedSpec { n: 60, p: 80, rho: 0.4, nnz: 5, snr: 10.0 }, 0);
+/// let lam = Lasso::lambda_max(&ds.design, &ds.y) / 10.0;
+/// let fit = Lasso::new(lam).with_tol(1e-8).fit(&ds.design, &ds.y);
+/// assert!(fit.converged);
+/// assert!(!fit.support().is_empty());
+/// assert!(fit.support().len() < 80, "solution is sparse");
+/// ```
 #[derive(Clone, Debug)]
 pub struct Lasso {
     pub lambda: f64,
@@ -83,6 +97,18 @@ impl Lasso {
 }
 
 /// Elastic net: `min ‖y−Xβ‖²/2n + λ(ρ‖β‖₁ + (1−ρ)‖β‖²/2)`.
+///
+/// # Examples
+///
+/// ```
+/// use skglm::data::{correlated, CorrelatedSpec};
+/// use skglm::estimators::ElasticNet;
+///
+/// let ds = correlated(CorrelatedSpec { n: 60, p: 80, rho: 0.4, nnz: 5, snr: 10.0 }, 1);
+/// let lam = ElasticNet::lambda_max(&ds.design, &ds.y, 0.5) / 10.0;
+/// let fit = ElasticNet::new(lam, 0.5).with_tol(1e-8).fit(&ds.design, &ds.y);
+/// assert!(fit.converged);
+/// ```
 #[derive(Clone, Debug)]
 pub struct ElasticNet {
     pub lambda: f64,
@@ -119,6 +145,21 @@ impl ElasticNet {
 /// MCP regression (paper §3.2): columns are normalised to ‖X_j‖ = √n when
 /// `normalize = true` (the paper's convention, which also guarantees the
 /// α-semi-convex regime γL_j = γ > 1).
+///
+/// # Examples
+///
+/// ```
+/// use skglm::data::{correlated, CorrelatedSpec};
+/// use skglm::estimators::{Lasso, McpRegressor};
+///
+/// let ds = correlated(CorrelatedSpec { n: 80, p: 100, rho: 0.4, nnz: 6, snr: 10.0 }, 2);
+/// let lam = Lasso::lambda_max(&ds.design, &ds.y) / 10.0;
+/// // fit returns the result plus the column scales applied by the √n
+/// // normalization: β on the original design is scale ⊙ β
+/// let (fit, scales) = McpRegressor::new(lam, 3.0).with_tol(1e-8).fit(&ds.design, &ds.y);
+/// assert!(fit.converged);
+/// assert_eq!(scales.len(), 100);
+/// ```
 #[derive(Clone, Debug)]
 pub struct McpRegressor {
     pub lambda: f64,
@@ -192,6 +233,21 @@ impl ScadRegressor {
 }
 
 /// ℓ1-regularised logistic regression, labels ±1.
+///
+/// # Examples
+///
+/// ```
+/// use skglm::data::{correlated, CorrelatedSpec};
+/// use skglm::estimators::SparseLogisticRegression;
+///
+/// let ds = correlated(CorrelatedSpec { n: 60, p: 40, rho: 0.3, nnz: 4, snr: 10.0 }, 3);
+/// let labels: Vec<f64> = ds.y.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+/// let lam = SparseLogisticRegression::lambda_max(&ds.design, &labels) / 10.0;
+/// let fit = SparseLogisticRegression::new(lam).with_tol(1e-6).fit(&ds.design, &labels);
+/// assert!(fit.converged);
+/// let proba = SparseLogisticRegression::predict_proba(&ds.design, &fit.beta);
+/// assert!(proba.iter().all(|p| (0.0..=1.0).contains(p)));
+/// ```
 #[derive(Clone, Debug)]
 pub struct SparseLogisticRegression {
     pub lambda: f64,

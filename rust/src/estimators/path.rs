@@ -93,6 +93,16 @@ where
 }
 
 /// Geometric grid of `count` ratios from 1 down to `min_ratio`.
+///
+/// # Examples
+///
+/// ```
+/// let grid = skglm::estimators::path::geometric_grid(0.01, 5);
+/// assert_eq!(grid.len(), 5);
+/// assert!((grid[0] - 1.0).abs() < 1e-12);
+/// assert!((grid[4] - 0.01).abs() < 1e-12);
+/// assert!(grid.windows(2).all(|w| w[1] < w[0]), "descending");
+/// ```
 pub fn geometric_grid(min_ratio: f64, count: usize) -> Vec<f64> {
     assert!(count >= 2);
     assert!(min_ratio > 0.0 && min_ratio < 1.0);

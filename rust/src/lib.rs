@@ -6,7 +6,7 @@
 //! generalized linear models with convex *and* non-convex separable
 //! penalties.
 //!
-//! Architecture (see DESIGN.md):
+//! Architecture (see ARCHITECTURE.md):
 //! - **L3 (this crate)** — the full solver framework: datafits, penalties,
 //!   Algorithms 1–4, baselines, datasets, the benchopt-like harness, the
 //!   PJRT runtime and the CLI. Python never runs on the solve path.

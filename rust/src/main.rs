@@ -2,9 +2,9 @@
 //!
 //! ```text
 //! skglm solve   --dataset rcv1 --penalty l1 --lambda-ratio 0.01 [--engine pjrt]
-//! skglm path    --dataset fig1 --penalty mcp --points 20
-//! skglm exp     <fig1..fig10|table1|table2|all> [--full]
-//! skglm serve   --jobs 8            # demo of the fit service
+//! skglm path    --penalty mcp --points 20   # warm-started sweep via the scheduler
+//! skglm exp     <fig1..fig10|table1|table2|pathsched|all> [--full]
+//! skglm serve   --workers 4         # demo of the path-aware fit scheduler
 //! skglm info                        # capability table + runtime probe
 //! ```
 
@@ -50,9 +50,10 @@ const USAGE: &str = "usage:
   skglm solve --dataset <name|libsvm-path> --penalty <l1|enet|mcp|scad|l05> \\
               --lambda-ratio 0.1 [--gamma 3.0] [--rho 0.5] [--tol 1e-8] \\
               [--engine native|pjrt] [--no-ws] [--no-accel] [--seed 42] [--small]
-  skglm path  --penalty <l1|mcp|scad|l05> [--points 20] [--min-ratio 1e-3]
+  skglm path  --penalty <l1|mcp|scad|l05> [--points 20] [--min-ratio 1e-3] \\
+              [--gamma 3.0] [--small] [--seed 42]
   skglm cv    --dataset <name> [--folds 5] [--points 15] [--workers 4] [--small]
-  skglm exp   <fig1..fig10|table1|table2|all> [--full]
+  skglm exp   <fig1..fig10|table1|table2|pathsched|all> [--full]
   skglm serve [--workers 4] [--lambdas 8]
   skglm synth --dataset <rcv1|news20|...|fig1> --out <file.svm> [--small]
   skglm info";
@@ -155,37 +156,54 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
 }
 
 fn cmd_path(args: &mut Args) -> Result<()> {
+    use skglm::coordinator::{specs, FitScheduler, JobEvent};
+    use std::sync::Arc;
     let penalty = args.get_or("penalty", "l1");
     let points = args.get_usize("points", 20)?;
     let min_ratio = args.get_f64("min-ratio", 1e-3)?;
+    let gamma = args.get_f64("gamma", if penalty == "scad" { 3.7 } else { 3.0 })?;
     let seed = args.get_usize("seed", 42)? as u64;
     let small = args.has("small");
     args.finish()?;
 
-    let ds = correlated(CorrelatedSpec::figure1(if small { 0.1 } else { 1.0 }), seed);
-    let mut design = ds.design.clone();
-    design.normalize_cols((ds.n() as f64).sqrt());
-    let ratios = skglm::estimators::path::geometric_grid(min_ratio, points);
-    let opts = SolverOpts::default().with_tol(1e-7);
-    let path = match penalty.as_str() {
-        "l1" => skglm::estimators::path::lasso_path(&design, &ds.y, Some(&ds.beta_true), &ratios, &opts),
-        "mcp" => skglm::estimators::path::mcp_path(&design, &ds.y, Some(&ds.beta_true), &ratios, 3.0, &opts),
-        "scad" => skglm::estimators::path::scad_path(&design, &ds.y, Some(&ds.beta_true), &ratios, 3.7, &opts),
-        "l05" => skglm::estimators::path::lq_path(&design, &ds.y, Some(&ds.beta_true), &ratios, 0.5, &opts),
+    let ds = Arc::new(correlated(CorrelatedSpec::figure1(if small { 0.1 } else { 1.0 }), seed));
+    // λ is a placeholder: the path job anchors the grid at its own λ_max
+    let spec = match penalty.as_str() {
+        "l1" => specs::lasso(1.0),
+        "mcp" => specs::mcp(1.0, gamma),
+        "scad" => specs::scad(1.0, gamma),
+        "l05" => specs::lq(1.0, 0.5),
         other => bail!("unknown penalty {other:?}"),
     };
-    println!("penalty {}: {} points in {:.2}s", path.penalty_name, path.points.len(), path.total_time);
-    println!("lambda_ratio  support  est_err    pred_mse   exact");
-    for p in &path.points {
-        println!(
-            "{:<12.4e}  {:<7}  {:<9.3e}  {:<9.3e}  {}",
-            p.lambda_ratio,
-            p.support_size,
-            p.estimation_error.unwrap_or(f64::NAN),
-            p.prediction_mse.unwrap_or(f64::NAN),
-            p.recovery.as_ref().map(|r| r.exact).unwrap_or(false)
-        );
+    let ratios = skglm::estimators::path::geometric_grid(min_ratio, points);
+    let mut sched = FitScheduler::start(1);
+    let job = sched.submit_path(Arc::clone(&ds), spec, ratios, SolverOpts::default().with_tol(1e-7));
+    println!("penalty {penalty}: streaming {points} warm-started path points (job {job})");
+    println!("lambda_ratio  support  est_err    pred_mse   exact  epochs  screened");
+    loop {
+        match sched.events.recv() {
+            Ok(JobEvent::PathPoint(p)) => println!(
+                "{:<12.4e}  {:<7}  {:<9.3e}  {:<9.3e}  {:<5}  {:<6}  {}",
+                p.point.lambda_ratio,
+                p.point.support_size,
+                p.point.estimation_error.unwrap_or(f64::NAN),
+                p.point.prediction_mse.unwrap_or(f64::NAN),
+                p.point.recovery.as_ref().map(|r| r.exact).unwrap_or(false),
+                p.epochs,
+                p.n_screened
+            ),
+            Ok(JobEvent::PathDone(s)) => {
+                println!(
+                    "{}: {} points in {:.2}s ({} CD epochs total)",
+                    s.label, s.n_points, s.total_time, s.total_epochs
+                );
+                break;
+            }
+            Ok(JobEvent::FitDone(_)) => {}
+            Err(_) => bail!("scheduler died"),
+        }
     }
+    sched.shutdown();
     Ok(())
 }
 
@@ -205,7 +223,7 @@ fn cmd_exp(args: &mut Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &mut Args) -> Result<()> {
-    use skglm::coordinator::{service::EstimatorSpec, SolveService};
+    use skglm::coordinator::{specs, FitScheduler, JobEvent};
     use std::sync::Arc;
     let workers = args.get_usize("workers", 4)?;
     let n_lambdas = args.get_usize("lambdas", 8)?;
@@ -213,26 +231,64 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
 
     let ds = Arc::new(correlated(CorrelatedSpec::figure1(0.2), 42));
     let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
-    let mut svc = SolveService::start(workers);
-    println!("fit service up with {workers} workers; submitting {n_lambdas} jobs");
+    let mut sched = FitScheduler::start(workers);
+    println!("fit scheduler up with {workers} workers; mixed single-fit + path workload");
+
+    // single fits across the model zoo (trait-based specs, shared Arc dataset)
+    let mut expected = 0usize;
     for k in 0..n_lambdas {
         let lam = lam_max / (10.0 * (k + 1) as f64);
-        svc.submit(Arc::clone(&ds), EstimatorSpec::Lasso { lambda: lam }, SolverOpts::default());
+        sched.submit_fit(Arc::clone(&ds), specs::lasso(lam), SolverOpts::default());
+        expected += 1;
     }
-    let mut outcomes = svc.collect(n_lambdas);
-    outcomes.sort_by_key(|o| o.id);
-    println!("id  lambda-slot  support  epochs  wall_s");
-    for o in &outcomes {
-        println!(
-            "{:<3} {:<12?} {:<8} {:<7} {:.3}",
-            o.id,
-            o.spec,
-            o.result.support().len(),
-            o.result.n_epochs,
-            o.wall_time
-        );
+    sched.submit_fit(Arc::clone(&ds), specs::elastic_net(lam_max / 20.0, 0.5), SolverOpts::default());
+    sched.submit_fit(Arc::clone(&ds), specs::mcp(lam_max / 20.0, 3.0), SolverOpts::default());
+    expected += 2;
+    // one warm-started path sweep, streamed per-λ
+    let path_points = 8;
+    let ratios = skglm::estimators::path::geometric_grid(1e-2, path_points);
+    sched.submit_path(Arc::clone(&ds), specs::lasso(1.0), ratios, SolverOpts::default().with_tol(1e-7));
+    expected += path_points + 1;
+
+    println!("{:<24} {:<4} {:<8} {:<7} wall_s", "event", "job", "support", "epochs");
+    for _ in 0..expected {
+        match sched.events.recv() {
+            Ok(JobEvent::FitDone(o)) => {
+                let tag = format!("fit {}", o.label);
+                let warm = if o.warm_started { "  (warm)" } else { "" };
+                println!(
+                    "{:<24} {:<4} {:<8} {:<7} {:.3}{}",
+                    tag,
+                    o.job_id,
+                    o.result.support().len(),
+                    o.result.n_epochs,
+                    o.wall_time,
+                    warm
+                );
+            }
+            Ok(JobEvent::PathPoint(p)) => {
+                let tag = format!("path point #{}", p.index);
+                println!(
+                    "{:<24} {:<4} {:<8} {:<7} {:.3}",
+                    tag, p.job_id, p.point.support_size, p.epochs, p.wall_time
+                );
+            }
+            Ok(JobEvent::PathDone(s)) => {
+                let tag = format!("path done ({} pts)", s.n_points);
+                println!(
+                    "{:<24} {:<4} {:<8} {:<7} {:.3}",
+                    tag, s.job_id, "-", s.total_epochs, s.total_time
+                );
+            }
+            Err(_) => bail!("scheduler died"),
+        }
     }
-    svc.shutdown();
+    let stats = sched.cache().stats();
+    println!(
+        "cache: designs {} hit / {} miss, coefficients {} hit / {} miss",
+        stats.design_hits, stats.design_misses, stats.coef_hits, stats.coef_misses
+    );
+    sched.shutdown();
     Ok(())
 }
 

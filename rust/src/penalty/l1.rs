@@ -2,6 +2,21 @@
 
 use super::{soft_threshold, Penalty};
 
+/// The Lasso penalty `λ‖β‖₁`; its prox is soft-thresholding.
+///
+/// # Examples
+///
+/// ```
+/// use skglm::penalty::{Penalty, L1};
+///
+/// let pen = L1::new(0.5);
+/// // prox_{step·g}(v) = ST(v, step·λ)
+/// assert_eq!(pen.prox(2.0, 1.0, 0), 1.5);
+/// assert_eq!(pen.prox(-0.3, 1.0, 0), 0.0);
+/// // at β=0 the subdifferential is [−λ, λ]: optimal while |∇_j f| ≤ λ
+/// assert_eq!(pen.subdiff_distance(0.0, 0.4, 0), 0.0);
+/// assert!(pen.is_convex());
+/// ```
 #[derive(Clone, Debug)]
 pub struct L1 {
     pub lambda: f64,

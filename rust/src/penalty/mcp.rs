@@ -13,6 +13,24 @@
 
 use super::Penalty;
 
+/// The MCP penalty; its prox is the firm threshold, which — unlike
+/// soft-thresholding — leaves large coefficients unshrunk (the paper's
+/// unbiasedness story).
+///
+/// # Examples
+///
+/// ```
+/// use skglm::penalty::{Mcp, Penalty};
+///
+/// let pen = Mcp::new(1.0, 3.0); // λ = 1, γ = 3
+/// // small inputs are thresholded to zero like the Lasso…
+/// assert_eq!(pen.prox(0.8, 1.0, 0), 0.0);
+/// // …but inputs beyond γλ pass through unshrunk (no bias)
+/// assert_eq!(pen.prox(5.0, 1.0, 0), 5.0);
+/// // the penalty saturates at γλ²/2
+/// assert_eq!(pen.value(100.0, 0), 1.5);
+/// assert!(!pen.is_convex());
+/// ```
 #[derive(Clone, Debug)]
 pub struct Mcp {
     pub lambda: f64,

@@ -10,6 +10,21 @@
 
 use super::{soft_threshold, Penalty};
 
+/// The SCAD penalty (three-region prox, unbiased for large coefficients).
+///
+/// # Examples
+///
+/// ```
+/// use skglm::penalty::{Penalty, Scad};
+///
+/// let pen = Scad::new(1.0, 3.7); // λ = 1, γ = 3.7 (literature default)
+/// // the penalty is λ|x| near zero and saturates at λ²(γ+1)/2
+/// assert_eq!(pen.value(0.5, 0), 0.5);
+/// assert_eq!(pen.value(10.0, 0), 2.35);
+/// // coefficients beyond γλ are not shrunk at all
+/// assert_eq!(pen.prox(9.0, 1.0, 0), 9.0);
+/// assert!(!pen.is_convex());
+/// ```
 #[derive(Clone, Debug)]
 pub struct Scad {
     pub lambda: f64,

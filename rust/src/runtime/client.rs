@@ -1,6 +1,6 @@
 //! PJRT CPU client + artifact loading.
 //!
-//! Pattern from /opt/xla-example/load_hlo.rs: `PjRtClient::cpu()` →
+//! Pattern from the `xla` crate's HLO-loading example: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `client.compile` → `execute`. One compiled executable per artifact.
 

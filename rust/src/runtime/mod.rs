@@ -1,15 +1,35 @@
 //! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
-//! (HLO **text** — see DESIGN.md and /opt/xla-example/README.md for why
-//! text, not serialized protos) and serves them to the solver as a
+//! (HLO **text** — see ARCHITECTURE.md §PJRT for why text, not serialized
+//! protos) and serves them to the solver as a
 //! [`crate::solver::GradEngine`].
 //!
 //! Python runs once at build time (`make artifacts`); this module is the
 //! only place the solve path touches XLA, and it is entirely optional —
 //! every solver falls back to the native Rust path when no artifact
 //! matches the problem shape.
+//!
+//! The real engine links against the `xla` crate, which cannot be fetched
+//! in this offline environment, so it is gated behind the `pjrt` cargo
+//! feature (see README.md §PJRT). Without the feature an API-compatible
+//! stub is compiled instead: [`PjrtRuntime::cpu`] reports the engine as
+//! unavailable and every caller takes its native fallback branch.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use self::stub as client;
+#[cfg(not(feature = "pjrt"))]
+pub use self::stub as engine;
+
+#[cfg(feature = "pjrt")]
 pub use client::{artifact_path, Artifact, PjrtRuntime};
+#[cfg(feature = "pjrt")]
 pub use engine::PjrtGradEngine;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{artifact_path, Artifact, PjrtGradEngine, PjrtRuntime};

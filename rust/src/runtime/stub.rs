@@ -1,0 +1,119 @@
+//! API-compatible stand-in for the PJRT runtime, compiled when the `pjrt`
+//! cargo feature is off (the default in offline builds — the real client
+//! in `client.rs`/`engine.rs` links against the `xla` crate, which cannot
+//! be fetched without a registry).
+//!
+//! Every entry point either reports the engine as unavailable
+//! ([`PjrtRuntime::cpu`] errors, [`PjrtRuntime::available`] is `false`)
+//! or declines the request ([`PjrtGradEngine::grad_full`] returns
+//! `false`), so callers — `skglm solve --engine pjrt`, the micro-kernel
+//! bench, the end-to-end example — take their native fallback branches
+//! without any `cfg` churn at the call sites.
+
+use crate::linalg::Design;
+use crate::solver::GradEngine;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// Directory holding `*.hlo.txt` artifacts (override with
+/// `SKGLM_ARTIFACTS`). Kept in the stub so `skglm info` can report it.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("SKGLM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Path of a named artifact at a given (n, p) shape — the naming
+/// convention `aot.py` writes: `<op>_n{n}_p{p}.hlo.txt`.
+pub fn artifact_path(op: &str, n: usize, p: usize) -> PathBuf {
+    artifacts_dir().join(format!("{op}_n{n}_p{p}.hlo.txt"))
+}
+
+/// Placeholder for a compiled executable; never constructible without the
+/// `pjrt` feature.
+pub struct Artifact {
+    pub op: String,
+    pub n: usize,
+    pub p: usize,
+}
+
+/// Stub PJRT client handle.
+pub struct PjrtRuntime {}
+
+impl PjrtRuntime {
+    /// Always fails: the binary was built without the `pjrt` feature.
+    pub fn cpu() -> Result<Self> {
+        bail!("built without the `pjrt` cargo feature (see README.md §PJRT)")
+    }
+
+    /// Mirrors the real handle-clone API.
+    pub fn clone_handle(&self) -> Self {
+        PjrtRuntime {}
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Artifacts can never be served without the engine.
+    pub fn available(_op: &str, _n: usize, _p: usize) -> bool {
+        false
+    }
+}
+
+/// Stub scoring engine; [`GradEngine::grad_full`] always declines so the
+/// solver recomputes natively.
+pub struct PjrtGradEngine {
+    /// number of gradient calls served (always 0 in the stub)
+    pub calls: usize,
+}
+
+impl PjrtGradEngine {
+    /// Tolerances tighter than this should not rely on f32 scoring
+    /// (kept for API parity with the real engine).
+    pub const MIN_TOL: f64 = 1e-6;
+
+    /// Always fails: no runtime exists to build an engine from.
+    pub fn for_design(_runtime: &PjrtRuntime, _design: &Design) -> Result<Self> {
+        bail!("built without the `pjrt` cargo feature (see README.md §PJRT)")
+    }
+}
+
+impl GradEngine for PjrtGradEngine {
+    fn grad_full(
+        &mut self,
+        _design: &Design,
+        _y: &[f64],
+        _state: &[f64],
+        _beta: &[f64],
+        _out: &mut [f64],
+    ) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(PjrtRuntime::cpu().is_err());
+        assert!(!PjrtRuntime::available("xt_r", 100, 200));
+        let e = PjrtRuntime::cpu().unwrap_err();
+        assert!(format!("{e}").contains("pjrt"));
+    }
+
+    #[test]
+    fn artifact_path_convention() {
+        std::env::remove_var("SKGLM_ARTIFACTS");
+        assert_eq!(
+            artifact_path("xt_r", 100, 200),
+            PathBuf::from("artifacts/xt_r_n100_p200.hlo.txt")
+        );
+    }
+}

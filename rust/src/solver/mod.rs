@@ -11,5 +11,8 @@ pub mod multitask;
 pub mod screening;
 pub mod skglm;
 
-pub use skglm::{solve, FitResult, GradEngine, HistoryPoint, SolverOpts};
+pub use skglm::{
+    solve, solve_continued, solve_prepared, ContinuationState, FitResult, GradEngine,
+    HistoryPoint, SolverOpts,
+};
 pub use multitask::{solve_multitask, MultiTaskFit};

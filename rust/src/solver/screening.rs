@@ -71,6 +71,28 @@ pub fn solve_lasso_screened(
     lambda: f64,
     opts: &crate::solver::SolverOpts,
 ) -> (crate::solver::FitResult, usize) {
+    let mut state = crate::solver::ContinuationState::default();
+    solve_lasso_screened_warm(design, y, lambda, opts, &mut state, None)
+}
+
+/// [`solve_lasso_screened`] with path continuation: warm β and working-set
+/// size come from (and go back into) `continuation`, and the cached Gram
+/// diagonal skips the per-fit column-norm pass. The screening mask is
+/// rebuilt for **this** λ — certificates are λ-specific, so masks never
+/// carry across path points — and grows monotonically within the solve as
+/// the duality gap shrinks (at a warm start the gap between neighbouring
+/// λs is far too large to certify anything; near convergence it certifies
+/// most inactive features). A newly certified feature still holding a
+/// nonzero warm value is zeroed — with the residual updated — so the
+/// restricted problem stays consistent with the certificate.
+pub fn solve_lasso_screened_warm(
+    design: &Design,
+    y: &[f64],
+    lambda: f64,
+    opts: &crate::solver::SolverOpts,
+    continuation: &mut crate::solver::ContinuationState,
+    col_sq_norms: Option<&[f64]>,
+) -> (crate::solver::FitResult, usize) {
     use crate::datafit::{Datafit, Quadratic};
     use crate::penalty::{Penalty, L1};
     use crate::solver::inner::inner_solver;
@@ -78,11 +100,15 @@ pub fn solve_lasso_screened(
     let p = design.ncols();
     let n = design.nrows() as f64;
     let mut datafit = Quadratic::new();
-    datafit.init(design, y);
+    datafit.init_cached(design, y, col_sq_norms);
     let penalty = L1::new(lambda);
-    let col_norms: Vec<f64> = design.col_sq_norms().iter().map(|s| s.sqrt()).collect();
+    let col_norms: Vec<f64> = match col_sq_norms {
+        Some(sq) => sq.iter().map(|s| s.sqrt()).collect(),
+        None => design.col_sq_norms().iter().map(|s| s.sqrt()).collect(),
+    };
 
-    let mut beta = vec![0.0; p];
+    let mut beta = continuation.beta.clone().unwrap_or_else(|| vec![0.0; p]);
+    assert_eq!(beta.len(), p);
     let mut state = datafit.init_state(design, y, &beta); // Xβ − y
     let mut xtr = vec![0.0; p];
     let mut screened: Option<Vec<bool>> = None;
@@ -98,7 +124,7 @@ pub fn solve_lasso_screened(
         accepted_extrapolations: 0,
         rejected_extrapolations: 0,
     };
-    let mut ws_size = opts.ws_start.min(p).max(1);
+    let mut ws_size = continuation.ws_size.unwrap_or(opts.ws_start).min(p).max(1);
 
     for outer in 1..=opts.max_outer {
         result.n_outer = outer;
@@ -106,10 +132,27 @@ pub fn solve_lasso_screened(
         for v in xtr.iter_mut() {
             *v = -*v; // Xᵀr with r = y − Xβ
         }
-        let r: Vec<f64> = state.iter().map(|&s| -s).collect();
+        let mut r: Vec<f64> = state.iter().map(|&s| -s).collect();
         let sc = gap_safe_screen_lasso(
             design, y, &beta, &r, &xtr, lambda, &col_norms, screened.as_deref(),
         );
+        // newly certified features still holding a (warm-start) value are
+        // frozen AT ZERO; the residual moves, so refresh r and Xᵀr
+        let mut moved = false;
+        for j in 0..p {
+            if sc.screened[j] && beta[j] != 0.0 {
+                datafit.update_state(design, j, -beta[j], &mut state);
+                beta[j] = 0.0;
+                moved = true;
+            }
+        }
+        if moved {
+            design.matvec_t(&state, &mut xtr);
+            for v in xtr.iter_mut() {
+                *v = -*v;
+            }
+            r = state.iter().map(|&s| -s).collect();
+        }
         // KKT over the survivors only (screened features are certified)
         let mut kkt_max = 0.0f64;
         let mut scores = vec![0.0; p];
@@ -169,6 +212,8 @@ pub fn solve_lasso_screened(
     result.objective =
         crate::linalg::sq_nrm2(&r) / (2.0 * n) + lambda * crate::linalg::norm1(&beta);
     result.beta = beta;
+    continuation.beta = Some(result.beta.clone());
+    continuation.ws_size = Some(ws_size);
     let n_screened = screened.map(|s| s.iter().filter(|&&x| x).count()).unwrap_or(0);
     (result, n_screened)
 }

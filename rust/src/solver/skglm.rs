@@ -129,6 +129,27 @@ impl FitResult {
     }
 }
 
+/// Cross-solve state carried along a regularization path: the previous
+/// solution (warm start) and the working-set size it converged with, so
+/// the next λ resumes from a realistic set size instead of re-growing
+/// from `ws_start`. Produced/consumed by [`solve_continued`] and the
+/// coordinator's path jobs.
+#[derive(Clone, Debug, Default)]
+pub struct ContinuationState {
+    /// previous solution (β warm start); `None` = cold start
+    pub beta: Option<Vec<f64>>,
+    /// working-set size the previous solve ended with
+    pub ws_size: Option<usize>,
+}
+
+impl ContinuationState {
+    /// Record the outcome of a solve as the warm state for the next one.
+    pub fn update_from(&mut self, result: &FitResult) {
+        self.beta = Some(result.beta.clone());
+        self.ws_size = result.history.last().map(|h| h.ws_size);
+    }
+}
+
 /// Run Algorithm 1. `beta0` warm-starts (regularization paths).
 #[allow(clippy::too_many_arguments)]
 pub fn solve<D: Datafit, P: Penalty>(
@@ -137,12 +158,70 @@ pub fn solve<D: Datafit, P: Penalty>(
     datafit: &mut D,
     penalty: &P,
     opts: &SolverOpts,
+    engine: Option<&mut dyn GradEngine>,
+    beta0: Option<&[f64]>,
+) -> FitResult {
+    datafit.init(design, y);
+    solve_prepared(design, y, datafit, penalty, opts, engine, beta0, None, None)
+}
+
+/// Run Algorithm 1 threading a [`ContinuationState`] through: warm-starts
+/// from `state`, then updates it with the outcome — the entry point path
+/// sweeps use so working-set growth persists between λ points.
+/// `col_sq_norms` is an optional cached Gram diagonal
+/// ([`Datafit::init_cached`]).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_continued<D: Datafit, P: Penalty>(
+    design: &Design,
+    y: &[f64],
+    datafit: &mut D,
+    penalty: &P,
+    opts: &SolverOpts,
+    engine: Option<&mut dyn GradEngine>,
+    state: &mut ContinuationState,
+    frozen: Option<&[bool]>,
+    col_sq_norms: Option<&[f64]>,
+) -> FitResult {
+    datafit.init_cached(design, y, col_sq_norms);
+    let result = solve_prepared(
+        design,
+        y,
+        datafit,
+        penalty,
+        opts,
+        engine,
+        state.beta.as_deref(),
+        state.ws_size,
+        frozen,
+    );
+    state.update_from(&result);
+    result
+}
+
+/// Algorithm 1 on an already-initialized datafit ([`Datafit::init`] — or
+/// [`Datafit::init_cached`] with cached Gram diagonals — must have run).
+///
+/// `ws0` seeds the working-set size (path continuation); `frozen` marks
+/// features certified inactive at this λ (e.g. by a gap-safe screening
+/// pass) — they are excluded from scoring, the working set and the final
+/// KKT metric, shrinking every O(n·p) pass. Warm starts must be zero on
+/// frozen coordinates (callers holding a certificate must zero them
+/// first, as `screening::solve_lasso_screened_warm` does internally).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_prepared<D: Datafit, P: Penalty>(
+    design: &Design,
+    y: &[f64],
+    datafit: &mut D,
+    penalty: &P,
+    opts: &SolverOpts,
     mut engine: Option<&mut dyn GradEngine>,
     beta0: Option<&[f64]>,
+    ws0: Option<usize>,
+    frozen: Option<&[bool]>,
 ) -> FitResult {
     let start = Instant::now();
     let p = design.ncols();
-    datafit.init(design, y);
+    let is_frozen = |j: usize| frozen.map(|m| m[j]).unwrap_or(false);
 
     // non-convex validity (Assumption 6): largest CD step is 1/min L_j>0
     let min_l = datafit
@@ -178,8 +257,8 @@ pub fn solve<D: Datafit, P: Penalty>(
         rejected_extrapolations: 0,
     };
 
-    let mut ws_size = opts.ws_start.min(p).max(1);
-    let all_features: Vec<usize> = (0..p).collect();
+    let mut ws_size = ws0.unwrap_or(opts.ws_start).min(p).max(1);
+    let all_features: Vec<usize> = (0..p).filter(|&j| !is_frozen(j)).collect();
 
     for outer in 1..=opts.max_outer {
         result.n_outer = outer;
@@ -195,6 +274,11 @@ pub fn solve<D: Datafit, P: Penalty>(
         let lipschitz = datafit.lipschitz();
         let mut kkt_max = 0.0f64;
         for j in 0..p {
+            if is_frozen(j) {
+                // certified inactive at this λ: out of scoring and ws
+                scores[j] = f64::NEG_INFINITY;
+                continue;
+            }
             let s = if lipschitz[j] == 0.0 {
                 0.0
             } else if penalty.use_cd_score() {
@@ -234,6 +318,11 @@ pub fn solve<D: Datafit, P: Penalty>(
         } else {
             all_features.clone()
         };
+        if ws.is_empty() {
+            // every remaining feature is frozen/converged
+            result.converged = true;
+            break;
+        }
 
         // ---- inner solve (Algorithm 2) ----
         let inner_tol = (opts.inner_tol_ratio * kkt_max).max(0.1 * opts.tol);
@@ -259,7 +348,7 @@ pub fn solve<D: Datafit, P: Penalty>(
     let lipschitz = datafit.lipschitz();
     result.kkt = (0..p)
         .map(|j| {
-            if lipschitz[j] == 0.0 {
+            if lipschitz[j] == 0.0 || is_frozen(j) {
                 0.0
             } else {
                 coordinate_score(design, y, datafit, penalty, &beta, &state, j)
@@ -273,7 +362,8 @@ pub fn solve<D: Datafit, P: Penalty>(
 }
 
 /// Take the `k` highest-scoring features, always retaining the current
-/// generalized support (their scores are lifted to +∞ first). `scores` is
+/// generalized support (their scores are lifted to +∞ first). Features
+/// scored `-∞` (frozen by screening) are never selected. `scores` is
 /// clobbered. Returned set is sorted ascending (cyclic CD sweeps in
 /// index order).
 fn select_working_set<P: Penalty>(
@@ -296,6 +386,7 @@ fn select_working_set<P: Penalty>(
         });
         idx.truncate(k);
     }
+    idx.retain(|&j| scores[j] > f64::NEG_INFINITY);
     idx.sort_unstable();
     idx
 }
@@ -441,6 +532,76 @@ mod tests {
         for w in res.history.windows(2) {
             assert!(w[1].t >= w[0].t);
             assert!(w[1].objective <= w[0].objective + 1e-12);
+        }
+    }
+
+    #[test]
+    fn warm_start_via_continuation_state_threads_ws_size() {
+        let ds = correlated(CorrelatedSpec { n: 80, p: 120, rho: 0.4, nnz: 6, snr: 10.0 }, 17);
+        let lam = lambda_max(&ds.design, &ds.y) / 10.0;
+        let pen = L1::new(lam);
+        let mut state = ContinuationState::default();
+        let mut f = Quadratic::new();
+        let first = solve_continued(
+            &ds.design, &ds.y, &mut f, &pen, &SolverOpts::default().with_tol(1e-10), None,
+            &mut state, None, None,
+        );
+        assert!(first.converged);
+        assert_eq!(state.beta.as_deref(), Some(&first.beta[..]));
+        assert!(state.ws_size.is_some());
+        // continuing at a smaller λ from the stored state reaches the
+        // same optimum as a cold solve, in no more epochs
+        let pen2 = L1::new(lam / 2.0);
+        let mut f2 = Quadratic::new();
+        let warm = solve_continued(
+            &ds.design, &ds.y, &mut f2, &pen2, &SolverOpts::default().with_tol(1e-10), None,
+            &mut state, None, None,
+        );
+        let mut f3 = Quadratic::new();
+        let cold = solve(
+            &ds.design, &ds.y, &mut f3, &pen2, &SolverOpts::default().with_tol(1e-10), None, None,
+        );
+        assert!((warm.objective - cold.objective).abs() < 1e-9);
+        assert!(warm.n_epochs <= cold.n_epochs);
+    }
+
+    #[test]
+    fn frozen_features_are_excluded_without_changing_the_optimum() {
+        let ds = correlated(CorrelatedSpec { n: 80, p: 120, rho: 0.4, nnz: 6, snr: 10.0 }, 21);
+        let lam = lambda_max(&ds.design, &ds.y) / 5.0;
+        let pen = L1::new(lam);
+        let mut f = Quadratic::new();
+        let exact = solve(
+            &ds.design, &ds.y, &mut f, &pen, &SolverOpts::default().with_tol(1e-12), None, None,
+        );
+        // freeze features that are zero at the optimum with a strict
+        // subgradient margin (what a gap-safe certificate guarantees)
+        let state = f.init_state(&ds.design, &ds.y, &exact.beta);
+        let mut grad = vec![0.0; ds.p()];
+        f.grad_full(&ds.design, &ds.y, &state, &exact.beta, &mut grad);
+        let frozen: Vec<bool> = (0..ds.p())
+            .map(|j| exact.beta[j] == 0.0 && grad[j].abs() < 0.9 * lam)
+            .collect();
+        assert!(frozen.iter().any(|&x| x), "margin features must exist");
+        let mut f2 = Quadratic::new();
+        f2.init(&ds.design, &ds.y);
+        let res = solve_prepared(
+            &ds.design,
+            &ds.y,
+            &mut f2,
+            &pen,
+            &SolverOpts::default().with_tol(1e-12),
+            None,
+            None,
+            None,
+            Some(&frozen),
+        );
+        assert!(res.converged);
+        assert!((res.objective - exact.objective).abs() < 1e-10);
+        for (j, &fz) in frozen.iter().enumerate() {
+            if fz {
+                assert_eq!(res.beta[j], 0.0, "frozen feature {j} moved");
+            }
         }
     }
 

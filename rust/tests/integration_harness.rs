@@ -130,20 +130,20 @@ fn table1_and_fig10_emit() {
 }
 
 #[test]
-fn coordinator_service_parallel_path_sweep_matches_serial() {
-    use skglm::coordinator::{service::EstimatorSpec, SolveService};
+fn coordinator_scheduler_parallel_sweep_matches_serial() {
+    use skglm::coordinator::{specs, FitScheduler};
     use std::sync::Arc;
     let ds = Arc::new(correlated(CorrelatedSpec { n: 60, p: 90, rho: 0.4, nnz: 6, snr: 10.0 }, 23));
     let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
     let lambdas: Vec<f64> = (1..=5).map(|k| lam_max / (4.0 * k as f64)).collect();
 
-    let mut svc = SolveService::start(3);
+    let mut sched = FitScheduler::start(3);
     for &lam in &lambdas {
-        svc.submit(Arc::clone(&ds), EstimatorSpec::Lasso { lambda: lam }, SolverOpts::default().with_tol(1e-10));
+        sched.submit_fit(Arc::clone(&ds), specs::lasso(lam), SolverOpts::default().with_tol(1e-10));
     }
-    let mut outcomes = svc.collect(lambdas.len());
-    svc.shutdown();
-    outcomes.sort_by_key(|o| o.id);
+    let mut outcomes = sched.collect_fits(lambdas.len());
+    sched.shutdown();
+    outcomes.sort_by_key(|o| o.job_id);
 
     for (k, o) in outcomes.iter().enumerate() {
         let serial = skglm::estimators::Lasso::new(lambdas[k]).with_tol(1e-10).fit(&ds.design, &ds.y);

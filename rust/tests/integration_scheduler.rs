@@ -1,0 +1,226 @@
+//! Integration: the path-aware fit scheduler — completion-order
+//! streaming, warm-start continuity along λ paths (with gap-safe
+//! screening active), cache sharing across jobs, and clean shutdown with
+//! jobs in flight.
+
+use skglm::coordinator::{specs, FitScheduler, Job, JobEvent};
+use skglm::data::{correlated, CorrelatedSpec, Dataset};
+use skglm::estimators::linear::quadratic_lambda_max;
+use skglm::estimators::path::geometric_grid;
+use skglm::solver::SolverOpts;
+use std::sync::Arc;
+
+fn dataset(seed: u64) -> Arc<Dataset> {
+    Arc::new(correlated(CorrelatedSpec { n: 80, p: 120, rho: 0.5, nnz: 8, snr: 10.0 }, seed))
+}
+
+#[test]
+fn path_job_streams_every_point_then_done() {
+    let ds = dataset(11);
+    let ratios = geometric_grid(1e-2, 7);
+    let mut sched = FitScheduler::start(1);
+    let job = sched.submit_path(
+        Arc::clone(&ds),
+        specs::lasso(1.0),
+        ratios.clone(),
+        SolverOpts::default().with_tol(1e-8),
+    );
+    let events = sched.collect_events(ratios.len() + 1);
+    sched.shutdown();
+
+    let mut seen_indices = Vec::new();
+    let mut done = false;
+    for (k, e) in events.iter().enumerate() {
+        assert_eq!(e.job_id(), job, "every event tagged with the path job id");
+        match e {
+            JobEvent::PathPoint(p) => {
+                assert!(!done, "no points after PathDone");
+                seen_indices.push(p.index);
+                assert!(p.point.lambda_ratio <= 1.0 + 1e-12);
+            }
+            JobEvent::PathDone(s) => {
+                assert_eq!(k, events.len() - 1, "PathDone is the terminal event");
+                assert_eq!(s.n_points, ratios.len());
+                done = true;
+            }
+            JobEvent::FitDone(_) => panic!("unexpected single-fit event"),
+        }
+    }
+    assert!(done);
+    // points stream in sweep order (one worker, descending λ)
+    assert_eq!(seen_indices, (0..ratios.len()).collect::<Vec<_>>());
+}
+
+#[test]
+fn warm_path_matches_cold_fits_and_costs_fewer_epochs() {
+    // Warm-start continuity: at every λᵢ₊₁ the warm-started (and
+    // gap-safe-screened) solution must reach the same optimum as a cold
+    // fit — never worse — while spending fewer CD epochs overall.
+    let ds = dataset(12);
+    let ratios = geometric_grid(5e-3, 9);
+    let tol = 1e-9;
+    let mut sched = FitScheduler::start(1);
+    sched.submit_path(
+        Arc::clone(&ds),
+        specs::lasso(1.0),
+        ratios.clone(),
+        SolverOpts::default().with_tol(tol),
+    );
+    let events = sched.collect_events(ratios.len() + 1);
+    sched.shutdown();
+
+    let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+    let mut warm_epochs = 0;
+    let mut cold_epochs = 0;
+    let mut screened_total = 0;
+    for e in &events {
+        if let JobEvent::PathPoint(p) = e {
+            let cold = skglm::estimators::Lasso::new(p.point.lambda)
+                .with_tol(tol)
+                .fit(&ds.design, &ds.y);
+            assert!(
+                p.point.objective <= cold.objective + 1e-8,
+                "warm objective {} worse than cold {} at ratio {}",
+                p.point.objective,
+                cold.objective,
+                p.point.lambda_ratio
+            );
+            assert!((p.point.lambda - lam_max * p.point.lambda_ratio).abs() < 1e-12);
+            warm_epochs += p.epochs;
+            cold_epochs += cold.n_epochs;
+            screened_total += p.n_screened;
+        }
+    }
+    assert!(
+        warm_epochs < cold_epochs,
+        "warm path ({warm_epochs} epochs) should beat cold fits ({cold_epochs} epochs)"
+    );
+    assert!(screened_total > 0, "gap-safe screening should certify features on a lasso path");
+}
+
+#[test]
+fn nonconvex_path_converges_at_every_point() {
+    let ds = dataset(13);
+    let ratios = geometric_grid(5e-2, 6);
+    let mut sched = FitScheduler::start(1);
+    sched.submit_path(
+        Arc::clone(&ds),
+        specs::mcp(1.0, 3.0),
+        ratios.clone(),
+        SolverOpts::default().with_tol(1e-7),
+    );
+    let events = sched.collect_events(ratios.len() + 1);
+    sched.shutdown();
+    let points: Vec<_> = events
+        .iter()
+        .filter_map(|e| match e {
+            JobEvent::PathPoint(p) => Some(p),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(points.len(), ratios.len());
+    // support grows (weakly) as λ decreases on the normalized design
+    assert!(points.last().unwrap().point.support_size >= points[0].point.support_size);
+}
+
+#[test]
+fn mixed_fit_and_path_jobs_interleave_with_correct_tags() {
+    let ds = dataset(14);
+    let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+    let ratios = geometric_grid(1e-2, 5);
+    let mut sched = FitScheduler::start(3);
+    let path_id = sched.submit_path(
+        Arc::clone(&ds),
+        specs::lasso(1.0),
+        ratios.clone(),
+        SolverOpts::default().with_tol(1e-8),
+    );
+    let fit_ids: Vec<u64> = (1..=4)
+        .map(|k| {
+            sched.submit_fit(
+                Arc::clone(&ds),
+                specs::elastic_net(lam_max / (5.0 * k as f64), 0.7),
+                SolverOpts::default(),
+            )
+        })
+        .collect();
+    let events = sched.collect_events(ratios.len() + 1 + fit_ids.len());
+    sched.shutdown();
+
+    let mut fit_seen = 0;
+    let mut path_points = 0;
+    let mut path_done = 0;
+    for e in &events {
+        match e {
+            JobEvent::FitDone(o) => {
+                assert!(fit_ids.contains(&o.job_id));
+                assert_eq!(o.label, "quadratic/l1l2");
+                fit_seen += 1;
+            }
+            JobEvent::PathPoint(p) => {
+                assert_eq!(p.job_id, path_id);
+                path_points += 1;
+            }
+            JobEvent::PathDone(s) => {
+                assert_eq!(s.job_id, path_id);
+                path_done += 1;
+            }
+        }
+    }
+    assert_eq!(fit_seen, fit_ids.len());
+    assert_eq!(path_points, ratios.len());
+    assert_eq!(path_done, 1);
+}
+
+#[test]
+fn shutdown_with_jobs_in_flight_does_not_hang_or_panic() {
+    let ds = dataset(15);
+    let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+    let mut sched = FitScheduler::start(2);
+    for k in 1..=6 {
+        sched.submit_fit(
+            Arc::clone(&ds),
+            specs::lasso(lam_max / (3.0 * k as f64)),
+            SolverOpts::default(),
+        );
+    }
+    sched.submit_path(
+        Arc::clone(&ds),
+        specs::lasso(1.0),
+        geometric_grid(1e-2, 6),
+        SolverOpts::default(),
+    );
+    // never read a single event: workers must drain the queue and exit,
+    // ignoring sends into the dropped receiver
+    sched.shutdown();
+}
+
+#[test]
+fn generic_job_enum_roundtrip() {
+    // the open Job enum is part of the public API (custom schedulers);
+    // logistic needs ±1 labels, so binarize the synthetic targets
+    let raw = dataset(16);
+    let labels: Vec<f64> = raw.y.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+    let ds = Arc::new(Dataset {
+        name: "logit".to_string(),
+        design: raw.design.clone(),
+        y: labels,
+        beta_true: Vec::new(),
+    });
+    let lam = skglm::estimators::SparseLogisticRegression::lambda_max(&ds.design, &ds.y) / 6.0;
+    let mut sched = FitScheduler::start(1);
+    let id = sched.submit(Job::Fit {
+        dataset: Arc::clone(&ds),
+        spec: specs::logistic_l1(lam),
+        opts: SolverOpts::default().with_tol(1e-6),
+    });
+    let events = sched.collect_events(1);
+    sched.shutdown();
+    match &events[0] {
+        JobEvent::FitDone(o) => {
+            assert_eq!(o.job_id, id);
+            assert_eq!(o.label, "logistic/l1");
+        }
+        _ => panic!("expected a fit event"),
+    }
+}
