@@ -1,0 +1,23 @@
+//! Bench target for the kernel engine: serial vs blocked vs parallel
+//! O(n·p) passes on the same grid as `skglm exp kernels` (smoke scale by
+//! default; pass `--full` for the fig1-scale grid). Results also land in
+//! `results/kernels/BENCH_kernels.json`.
+
+use skglm::bench::figures::Scale;
+use skglm::bench::kernel_bench::run_kernels;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Smoke };
+    match run_kernels(scale) {
+        Ok(paths) => {
+            for p in paths {
+                println!("wrote {}", p.display());
+            }
+        }
+        Err(e) => {
+            eprintln!("kernel bench failed: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}

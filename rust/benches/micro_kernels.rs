@@ -5,6 +5,7 @@
 //! (native vs PJRT artifact when available), Anderson extrapolation,
 //! prox throughput. These are the §Perf numbers in EXPERIMENTS.md.
 
+use skglm::bench::kernel_bench::time_it;
 use skglm::data::{correlated, paper_dataset_small, sparse, CorrelatedSpec, SparseSpec};
 use skglm::datafit::{Datafit, Quadratic};
 use skglm::linalg::Design;
@@ -12,23 +13,6 @@ use skglm::penalty::{Mcp, L1};
 use skglm::solver::anderson::Anderson;
 use skglm::solver::cd::cd_epoch;
 use std::hint::black_box;
-use std::time::Instant;
-
-/// median-of-`reps` wall time of `f`, after `warmup` runs.
-fn time_it<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> f64 {
-    for _ in 0..warmup {
-        f();
-    }
-    let mut times: Vec<f64> = (0..reps)
-        .map(|_| {
-            let t0 = Instant::now();
-            f();
-            t0.elapsed().as_secs_f64()
-        })
-        .collect();
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    times[reps / 2]
-}
 
 fn row(name: &str, secs: f64, work_items: f64) {
     println!(
@@ -142,6 +126,65 @@ fn bench_anderson() {
     }
 }
 
+fn bench_panel_xtr() {
+    // the blocked 8-column panel Xᵀr vs the naive per-column dot, plus the
+    // parallel variant at the full thread budget (fig1-scale dense design)
+    let ds = correlated(CorrelatedSpec { n: 1000, p: 2000, rho: 0.5, nnz: 100, snr: 8.0 }, 4);
+    let work = (ds.n() * ds.p()) as f64;
+    let r: Vec<f64> = (0..ds.n()).map(|i| (i as f64).sin()).collect();
+    let mut out = vec![0.0; ds.p()];
+
+    let naive = match &ds.design {
+        Design::Dense(m) => time_it(3, 9, || {
+            m.matvec_t(&r, &mut out);
+            black_box(&out);
+        }),
+        Design::Sparse(_) => unreachable!("correlated designs are dense"),
+    };
+    row("xtr naive per-column 1000x2000", naive, work);
+
+    let blocked = time_it(3, 9, || {
+        ds.design.matvec_t_threads(&r, &mut out, 1);
+        black_box(&out);
+    });
+    row("xtr blocked panel    1000x2000", blocked, work);
+
+    let budget = skglm::linalg::parallel::thread_budget();
+    let parallel = time_it(3, 9, || {
+        ds.design.matvec_t_threads(&r, &mut out, budget);
+        black_box(&out);
+    });
+    row(
+        &format!("xtr parallel x{budget}      1000x2000"),
+        parallel,
+        work,
+    );
+}
+
+fn bench_sparse_col_dot() {
+    // single-column sparse dot: the innermost CD primitive, and the unit
+    // of work the nnz-balanced chunking distributes
+    let ds = sparse(
+        "bench",
+        SparseSpec { n: 5000, p: 50_000, density: 1e-3, support_frac: 0.001, snr: 5.0, binary: false },
+        5,
+    );
+    let m = match &ds.design {
+        Design::Sparse(m) => m,
+        Design::Dense(_) => unreachable!(),
+    };
+    let r: Vec<f64> = (0..ds.n()).map(|i| (i as f64).cos()).collect();
+    let nnz = m.nnz();
+    let secs = time_it(3, 9, || {
+        let mut acc = 0.0;
+        for j in 0..m.ncols() {
+            acc += m.col_dot(j, &r);
+        }
+        black_box(acc);
+    });
+    row(&format!("sparse col_dot sweep ({nnz} nnz)"), secs, nnz as f64);
+}
+
 fn bench_sparse_matvec_t() {
     let ds = sparse(
         "bench",
@@ -165,6 +208,8 @@ fn main() {
     bench_cd_epoch_mcp();
     bench_scoring_pass(200, 400);
     bench_scoring_pass(1000, 2000);
+    bench_panel_xtr();
     bench_anderson();
     bench_sparse_matvec_t();
+    bench_sparse_col_dot();
 }

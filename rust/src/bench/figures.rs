@@ -640,6 +640,7 @@ pub fn run_experiment(name: &str, scale: Scale) -> Result<Vec<PathBuf>> {
         "table1" => run_table1(),
         "table2" => run_table2(scale),
         "pathsched" => crate::bench::path_bench::run_pathsched(scale),
+        "kernels" => crate::bench::kernel_bench::run_kernels(scale),
         "all" => {
             let mut out = Vec::new();
             for exp in ALL_EXPERIMENTS {
@@ -654,7 +655,7 @@ pub fn run_experiment(name: &str, scale: Scale) -> Result<Vec<PathBuf>> {
 
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table1",
-    "table2", "pathsched",
+    "table2", "pathsched", "kernels",
 ];
 
 #[cfg(test)]
@@ -662,6 +663,7 @@ mod tests {
     use super::*;
 
     fn with_tmp_results<F: FnOnce()>(f: F) {
+        let _guard = crate::bench::report::results_env_lock();
         let tmp = std::env::temp_dir().join(format!("skglm_fig_{}", std::process::id()));
         std::env::set_var("SKGLM_RESULTS", &tmp);
         f();

@@ -1,0 +1,319 @@
+//! Bench scenario `kernels`: the kernel engine measured serial vs blocked
+//! vs parallel across n×p / density / thread-count grids.
+//!
+//! Variants per workload:
+//! - `serial`  — the naive per-column reference (`DenseMatrix::matvec_t` /
+//!   `CscMatrix::matvec_t`), what every pass ran before ISSUE 2;
+//! - `blocked` — the panel/balanced kernel on one thread
+//!   (`Design::matvec_t_threads(.., 1)`): the pure cache-blocking win;
+//! - `parallel-T` — the same kernel on T threads;
+//! - `policy`  — `Design::matvec_t` as the solver calls it: the global
+//!   [`crate::linalg::KernelPolicy`] picks the thread count, falling back
+//!   to serial below the work threshold (what "no regression at smoke
+//!   scale" means — tiny passes must not pay dispatch overhead).
+//!
+//! Results land in `results/kernels/` and — the perf-trajectory anchor —
+//! `BENCH_kernels.json` at the repo root (skipped when `SKGLM_RESULTS`
+//! redirects outputs, e.g. under `cargo test`).
+
+use crate::bench::figures::Scale;
+use crate::bench::report::{ensure_dir, results_dir, write_markdown};
+use crate::data::{correlated, sparse, CorrelatedSpec, SparseSpec};
+use crate::linalg::parallel::{thread_budget, KernelPolicy, SERIAL_WORK_THRESHOLD};
+use crate::linalg::Design;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use anyhow::Result;
+use std::hint::black_box;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// One timed kernel invocation.
+#[derive(Clone, Debug)]
+pub struct KernelBenchRow {
+    /// kernel family: `xtr_dense`, `xtr_sparse`, `col_sq_norms_dense`
+    pub kernel: String,
+    /// workload shape, e.g. `1000x2000` or `5000x50000@1e-3`
+    pub shape: String,
+    /// `serial` | `blocked` | `parallel-T` | `policy`
+    pub variant: String,
+    /// threads actually used
+    pub threads: usize,
+    /// median wall time
+    pub micros: f64,
+    /// stored entries touched per second, in millions
+    pub mitems_per_s: f64,
+    /// serial median time / this variant's median time
+    pub speedup_vs_serial: f64,
+}
+
+/// median-of-`reps` wall time of `f`, after `warmup` runs. Shared with
+/// `benches/micro_kernels.rs` so all §Perf numbers use one timing rule.
+pub fn time_it<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[reps / 2]
+}
+
+/// Thread counts to sweep: powers of two up to the budget, plus the
+/// budget itself.
+fn thread_grid() -> Vec<usize> {
+    let budget = thread_budget();
+    let mut grid = Vec::new();
+    let mut t = 2usize;
+    while t < budget {
+        grid.push(t);
+        t *= 2;
+    }
+    if budget >= 2 {
+        grid.push(budget);
+    }
+    grid.dedup();
+    grid
+}
+
+/// Benchmark one design's `Xᵀr` under every variant.
+fn bench_xtr(
+    kernel: &str,
+    shape: &str,
+    design: &Design,
+    warmup: usize,
+    reps: usize,
+    rows: &mut Vec<KernelBenchRow>,
+) {
+    let n = design.nrows();
+    let p = design.ncols();
+    let work = design.stored_entries() as f64;
+    let r: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).cos()).collect();
+    let mut out = vec![0.0; p];
+
+    let serial_secs = time_it(warmup, reps, || {
+        match design {
+            Design::Dense(m) => m.matvec_t(&r, &mut out),
+            Design::Sparse(m) => m.matvec_t(&r, &mut out),
+        }
+        black_box(&out);
+    });
+    let mut push = |variant: String, threads: usize, secs: f64| {
+        rows.push(KernelBenchRow {
+            kernel: kernel.to_string(),
+            shape: shape.to_string(),
+            variant,
+            threads,
+            micros: secs * 1e6,
+            mitems_per_s: work / secs / 1e6,
+            speedup_vs_serial: serial_secs / secs,
+        });
+    };
+    push("serial".to_string(), 1, serial_secs);
+
+    let blocked_secs = time_it(warmup, reps, || {
+        design.matvec_t_threads(&r, &mut out, 1);
+        black_box(&out);
+    });
+    push("blocked".to_string(), 1, blocked_secs);
+
+    for t in thread_grid() {
+        let secs = time_it(warmup, reps, || {
+            design.matvec_t_threads(&r, &mut out, t);
+            black_box(&out);
+        });
+        push(format!("parallel-{t}"), t, secs);
+    }
+
+    let policy_threads = KernelPolicy::global().threads_for(design.stored_entries());
+    let policy_secs = time_it(warmup, reps, || {
+        design.matvec_t(&r, &mut out);
+        black_box(&out);
+    });
+    push("policy".to_string(), policy_threads, policy_secs);
+}
+
+/// Benchmark `col_sq_norms` (Gram-diagonal precompute) on one design.
+fn bench_col_norms(
+    shape: &str,
+    design: &Design,
+    warmup: usize,
+    reps: usize,
+    rows: &mut Vec<KernelBenchRow>,
+) {
+    let p = design.ncols();
+    let work = design.stored_entries() as f64;
+    let mut out = vec![0.0; p];
+    let serial_secs = time_it(warmup, reps, || {
+        design.col_sq_norms_threads(&mut out, 1);
+        black_box(&out);
+    });
+    rows.push(KernelBenchRow {
+        kernel: "col_sq_norms_dense".to_string(),
+        shape: shape.to_string(),
+        variant: "serial".to_string(),
+        threads: 1,
+        micros: serial_secs * 1e6,
+        mitems_per_s: work / serial_secs / 1e6,
+        speedup_vs_serial: 1.0,
+    });
+    for t in thread_grid() {
+        let secs = time_it(warmup, reps, || {
+            design.col_sq_norms_threads(&mut out, t);
+            black_box(&out);
+        });
+        rows.push(KernelBenchRow {
+            kernel: "col_sq_norms_dense".to_string(),
+            shape: shape.to_string(),
+            variant: format!("parallel-{t}"),
+            threads: t,
+            micros: secs * 1e6,
+            mitems_per_s: work / secs / 1e6,
+            speedup_vs_serial: serial_secs / secs,
+        });
+    }
+}
+
+/// Run the kernel-engine grid and persist `BENCH_kernels.json`.
+pub fn run_kernels(scale: Scale) -> Result<Vec<PathBuf>> {
+    let (dense_shapes, sparse_shapes, warmup, reps): (
+        Vec<(usize, usize)>,
+        Vec<(usize, usize, f64)>,
+        usize,
+        usize,
+    ) = match scale {
+        // smoke: below the serial threshold so the policy fallback engages
+        Scale::Smoke => (vec![(100, 200)], vec![(1000, 4000, 1e-3)], 2, 5),
+        // full: fig1 scale (1000×2000) + a larger panel-bound shape,
+        // sparse at two densities
+        Scale::Full => (
+            vec![(1000, 2000), (2000, 4000)],
+            vec![(5000, 50_000, 1e-3), (5000, 50_000, 1e-2)],
+            3,
+            9,
+        ),
+    };
+
+    let mut rows: Vec<KernelBenchRow> = Vec::new();
+    for &(n, p) in &dense_shapes {
+        let ds = correlated(
+            CorrelatedSpec { n, p, rho: 0.5, nnz: (p / 20).max(1), snr: 8.0 },
+            42,
+        );
+        let shape = format!("{n}x{p}");
+        bench_xtr("xtr_dense", &shape, &ds.design, warmup, reps, &mut rows);
+        if (n, p) == dense_shapes[0] {
+            bench_col_norms(&shape, &ds.design, warmup, reps, &mut rows);
+        }
+    }
+    for &(n, p, density) in &sparse_shapes {
+        let ds = sparse(
+            "kernels",
+            SparseSpec { n, p, density, support_frac: 0.001, snr: 5.0, binary: false },
+            7,
+        );
+        let shape = format!("{n}x{p}@{density:e}");
+        bench_xtr("xtr_sparse", &shape, &ds.design, warmup, reps, &mut rows);
+    }
+
+    // ---- report ----
+    let mut t = Table::new(&[
+        "kernel", "shape", "variant", "threads", "median_us", "Mitem_per_s", "speedup_vs_serial",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.kernel.clone(),
+            r.shape.clone(),
+            r.variant.clone(),
+            r.threads.to_string(),
+            format!("{:.1}", r.micros),
+            format!("{:.1}", r.mitems_per_s),
+            format!("{:.2}x", r.speedup_vs_serial),
+        ]);
+    }
+    let md = write_markdown("kernels", "kernel_engine", &t)?;
+
+    let jrows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj()
+                .with("kernel", r.kernel.as_str())
+                .with("shape", r.shape.as_str())
+                .with("variant", r.variant.as_str())
+                .with("threads", r.threads)
+                .with("median_us", r.micros)
+                .with("mitems_per_s", r.mitems_per_s)
+                .with("speedup_vs_serial", r.speedup_vs_serial)
+        })
+        .collect();
+    let json = Json::obj()
+        .with("bench", "kernels")
+        .with(
+            "scale",
+            match scale {
+                Scale::Smoke => "smoke",
+                Scale::Full => "full",
+            },
+        )
+        .with("thread_budget", thread_budget())
+        .with("serial_work_threshold", SERIAL_WORK_THRESHOLD)
+        .with("rows", Json::Arr(jrows));
+
+    let dir = results_dir().join("kernels");
+    ensure_dir(&dir)?;
+    let json_path = dir.join("BENCH_kernels.json");
+    std::fs::write(&json_path, json.render())?;
+    let mut outputs = vec![json_path, md];
+    // the repo-root trajectory file (skipped when results are redirected,
+    // e.g. by tests)
+    if std::env::var_os("SKGLM_RESULTS").is_none() {
+        let root = PathBuf::from("BENCH_kernels.json");
+        std::fs::write(&root, json.render())?;
+        outputs.push(root);
+    }
+
+    // headline: best parallel speedup of the dense scoring pass
+    if let Some(best) = rows
+        .iter()
+        .filter(|r| r.kernel == "xtr_dense" && r.variant.starts_with("parallel"))
+        .max_by(|a, b| a.speedup_vs_serial.partial_cmp(&b.speedup_vs_serial).unwrap())
+    {
+        eprintln!(
+            "[kernels] dense scoring pass {}: {} = {:.2}x over serial ({} threads, budget {})",
+            best.shape,
+            best.variant,
+            best.speedup_vs_serial,
+            best.threads,
+            thread_budget()
+        );
+    }
+    Ok(outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_grid_runs_and_persists_json() {
+        let _guard = crate::bench::report::results_env_lock();
+        let tmp = std::env::temp_dir().join(format!("skglm_kernels_{}", std::process::id()));
+        std::env::set_var("SKGLM_RESULTS", &tmp);
+        let out = run_kernels(Scale::Smoke).unwrap();
+        assert!(!out.is_empty());
+        for p in &out {
+            assert!(p.exists(), "{}", p.display());
+        }
+        let raw = std::fs::read_to_string(&out[0]).unwrap();
+        assert!(raw.contains("\"bench\":\"kernels\""));
+        assert!(raw.contains("xtr_dense"));
+        assert!(raw.contains("xtr_sparse"));
+        std::env::remove_var("SKGLM_RESULTS");
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

@@ -18,6 +18,14 @@ pub fn ensure_dir(p: &Path) -> Result<()> {
     std::fs::create_dir_all(p).with_context(|| format!("creating {}", p.display()))
 }
 
+/// Serialises tests that mutate `SKGLM_RESULTS`: env vars are process
+/// globals, so concurrent test threads redirecting results would race.
+#[cfg(test)]
+pub(crate) fn results_env_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Persist a family of solver curves for one (figure, dataset, λ) cell:
 /// a CSV with one row per point plus a JSON file with the raw curves.
 pub fn write_curves(
@@ -96,6 +104,7 @@ mod tests {
 
     #[test]
     fn writes_csv_and_json() {
+        let _guard = results_env_lock();
         let tmp = std::env::temp_dir().join(format!("skglm_report_{}", std::process::id()));
         std::env::set_var("SKGLM_RESULTS", &tmp);
         let path = write_curves("figX", "toy", "lmax/10", &[curve()]).unwrap();

@@ -77,6 +77,28 @@ impl Args {
         self.switches.contains(key)
     }
 
+    /// Consume the global `--threads N` knob (the kernel-engine + worker
+    /// thread budget; overrides `SKGLM_THREADS`). Returns the override if
+    /// present; errors on zero or non-integer values.
+    pub fn take_threads(&mut self) -> anyhow::Result<Option<usize>> {
+        if self.has("threads") {
+            // parsed as a value-less switch: the count is missing
+            anyhow::bail!("--threads needs a value (e.g. --threads 4)");
+        }
+        match self.get("threads") {
+            None => Ok(None),
+            Some(v) => {
+                let n: usize = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--threads expects a positive integer, got {v:?}"))?;
+                if n == 0 {
+                    anyhow::bail!("--threads must be >= 1");
+                }
+                Ok(Some(n))
+            }
+        }
+    }
+
     /// Error on unconsumed flags (call after all gets).
     pub fn finish(&self) -> anyhow::Result<()> {
         let unknown: Vec<&String> = self
@@ -177,6 +199,25 @@ mod tests {
         assert!(a.has("verbose"));
         assert_eq!(a.get_f64("tol", 0.0).unwrap(), 1e-3);
         assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn threads_flag_parses_and_validates() {
+        let mut a = parse("solve --threads 4");
+        assert_eq!(a.take_threads().unwrap(), Some(4));
+        assert!(a.finish().is_ok());
+        let mut b = parse("solve");
+        assert_eq!(b.take_threads().unwrap(), None);
+        let mut c = parse("solve --threads 0");
+        assert!(c.take_threads().is_err());
+        let mut d = parse("solve --threads lots");
+        assert!(d.take_threads().is_err());
+        // value forgotten: --threads parses as a switch and must error,
+        // not silently fall back to full parallelism
+        let mut e = parse("cv --threads --small");
+        assert!(e.take_threads().is_err());
+        let mut f = parse("solve --small --threads");
+        assert!(f.take_threads().is_err());
     }
 
     #[test]

@@ -19,6 +19,11 @@ where
     if threads == 1 {
         return jobs.into_iter().map(|j| j()).collect();
     }
+    // register against the kernel-engine budget for the batch's lifetime:
+    // each job's kernels then get `budget / threads` threads, so job-level
+    // × kernel-level parallelism (e.g. `skglm cv --workers N`) never
+    // oversubscribes the machine
+    let _kernel_budget = crate::linalg::parallel::register_solver_workers(threads);
     let next = AtomicUsize::new(0);
     let jobs: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
     let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
@@ -42,9 +47,11 @@ where
         .collect()
 }
 
-/// Number of worker threads to use by default.
+/// Number of worker threads to use by default: the kernel engine's global
+/// thread budget (`--threads` > `SKGLM_THREADS` > hardware parallelism),
+/// so job-level and kernel-level parallelism read one consistent number.
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    crate::linalg::parallel::thread_budget()
 }
 
 #[cfg(test)]

@@ -21,8 +21,9 @@ use super::cache::DatasetCache;
 use super::job::FitSpec;
 use crate::data::Dataset;
 use crate::estimators::path::PathPoint;
+use crate::linalg::parallel::{register_solver_workers, SolverWorkersGuard};
 use crate::metrics::{estimation_error, prediction_mse, support_recovery};
-use crate::solver::screening::solve_lasso_screened_warm;
+use crate::solver::screening::{solve_lasso_screened_warm_with, ScreenWorkspace};
 use crate::solver::{ContinuationState, FitResult, SolverOpts};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -100,6 +101,11 @@ pub struct FitScheduler {
     workers: Vec<JoinHandle<()>>,
     next_id: u64,
     cache: Arc<DatasetCache>,
+    /// Registers the worker count against the kernel-engine thread budget
+    /// for the scheduler's lifetime: each job's kernels then get
+    /// `budget / workers` threads, so kernel × worker parallelism never
+    /// oversubscribes the machine. Released on shutdown/drop.
+    _kernel_budget: SolverWorkersGuard,
 }
 
 impl FitScheduler {
@@ -126,7 +132,8 @@ impl FitScheduler {
                 })
             })
             .collect();
-        Self { tx, events: ev_rx, workers, next_id: 0, cache }
+        let _kernel_budget = register_solver_workers(n_workers.max(1));
+        Self { tx, events: ev_rx, workers, next_id: 0, cache, _kernel_budget }
     }
 
     /// Submit any [`Job`]; returns its id.
@@ -273,6 +280,9 @@ fn run_path(
     let mut total_epochs = 0;
     // screening support is λ-independent; decide once for the sweep
     let gap_screened = spec.supports_gap_screening();
+    // one scratch workspace for the whole sweep (buffer-reuse satellite):
+    // xtr / residual / mask / score buffers live across λ points
+    let mut screen_work = ScreenWorkspace::new();
 
     for (index, &ratio) in ratios.iter().enumerate() {
         let pt0 = Instant::now();
@@ -284,13 +294,14 @@ fn run_path(
         // shrinks. What persists between points is the ContinuationState
         // (warm β + working-set size).
         let (result, n_screened) = if gap_screened {
-            solve_lasso_screened_warm(
+            solve_lasso_screened_warm_with(
                 design,
                 y,
                 lambda,
                 opts,
                 &mut state,
                 Some(&entry.col_sq_norms),
+                &mut screen_work,
             )
         } else {
             let point_spec = spec.at_lambda(lambda);

@@ -58,10 +58,12 @@ pub trait Datafit: Clone + Send + Sync {
     /// `∇_j f(β)` given the current state.
     fn grad_j(&self, design: &Design, y: &[f64], state: &[f64], beta: &[f64], j: usize) -> f64;
 
-    /// Full gradient (the working-set scoring pass). Default loops over
-    /// coordinates; implementations override with a fused pass when one
-    /// exists (dense quadratic routes through `Xᵀr`, optionally via PJRT at
-    /// the solver level).
+    /// Full gradient (the working-set scoring pass). The default computes
+    /// per-coordinate gradients, parallelised over column ranges on the
+    /// kernel engine; implementations override with a fused pass when one
+    /// exists (the residual/score datafits route through `Xᵀr`, which is
+    /// itself blocked + parallel, optionally via PJRT at the solver
+    /// level).
     fn grad_full(
         &self,
         design: &Design,
@@ -70,9 +72,16 @@ pub trait Datafit: Clone + Send + Sync {
         beta: &[f64],
         out: &mut [f64],
     ) {
-        for j in 0..design.ncols() {
-            out[j] = self.grad_j(design, y, state, beta, j);
-        }
+        use crate::linalg::parallel::{self, KernelPolicy};
+        let p = design.ncols();
+        assert_eq!(out.len(), p);
+        let threads = KernelPolicy::global().threads_for(design.stored_entries());
+        let ranges = parallel::even_chunks(p, parallel::chunk_count(threads));
+        parallel::par_slices(out, &ranges, threads, |_, cols, sub| {
+            for (o, j) in sub.iter_mut().zip(cols) {
+                *o = self.grad_j(design, y, state, beta, j);
+            }
+        });
     }
 
     /// Human-readable name (reports).

@@ -7,6 +7,11 @@
 //! manually unrolled variants exist because rustc does not always unroll
 //! reductions profitably on its own (measured in `benches/micro_kernels.rs`).
 
+/// Panel width of the blocked `Xᵀr` micro-kernel: 8 f64 accumulators fit
+/// comfortably in vector registers while multiplying the reuse of each
+/// loaded residual element by 8.
+pub const PANEL: usize = 8;
+
 /// Dense matrix, column-major (Fortran order), `n` rows × `p` columns.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DenseMatrix {
@@ -92,13 +97,88 @@ impl DenseMatrix {
         }
     }
 
-    /// `Xᵀ r` into `out` (length p). `r` has length n.
+    /// `Xᵀ r` into `out` (length p). `r` has length n. Serial per-column
+    /// reference; the kernel engine's blocked/parallel variant is
+    /// [`DenseMatrix::matvec_t_panel`] (routed via `Design::matvec_t`).
     pub fn matvec_t(&self, r: &[f64], out: &mut [f64]) {
         assert_eq!(r.len(), self.n);
         assert_eq!(out.len(), self.p);
         for j in 0..self.p {
             out[j] = dot(self.col(j), r);
         }
+    }
+
+    /// Blocked `Xᵀ r` over the column range `cols`: writes
+    /// `out[k] = X[:, cols.start + k]ᵀ r`. Columns are processed
+    /// [`PANEL`] at a time so every loaded element of `r` is reused across
+    /// the panel — the cache win over per-column [`dot`] (measured in
+    /// `benches/micro_kernels.rs`). Panel membership is determined by the
+    /// absolute column index when `cols.start` is PANEL-aligned (the
+    /// kernel engine aligns its chunks), so results are independent of
+    /// how the column space was split across threads.
+    pub fn matvec_t_panel(&self, r: &[f64], cols: std::ops::Range<usize>, out: &mut [f64]) {
+        assert_eq!(r.len(), self.n);
+        assert!(cols.end <= self.p);
+        assert_eq!(out.len(), cols.end - cols.start);
+        let n = self.n;
+        let mut j = cols.start;
+        let mut o = 0usize;
+        while j + PANEL <= cols.end {
+            let c0 = self.col(j);
+            let c1 = self.col(j + 1);
+            let c2 = self.col(j + 2);
+            let c3 = self.col(j + 3);
+            let c4 = self.col(j + 4);
+            let c5 = self.col(j + 5);
+            let c6 = self.col(j + 6);
+            let c7 = self.col(j + 7);
+            let mut acc = [0.0f64; PANEL];
+            for i in 0..n {
+                let ri = r[i];
+                acc[0] += c0[i] * ri;
+                acc[1] += c1[i] * ri;
+                acc[2] += c2[i] * ri;
+                acc[3] += c3[i] * ri;
+                acc[4] += c4[i] * ri;
+                acc[5] += c5[i] * ri;
+                acc[6] += c6[i] * ri;
+                acc[7] += c7[i] * ri;
+            }
+            out[o..o + PANEL].copy_from_slice(&acc);
+            j += PANEL;
+            o += PANEL;
+        }
+        while j < cols.end {
+            out[o] = dot(self.col(j), r);
+            j += 1;
+            o += 1;
+        }
+    }
+
+    /// Scale every column `j` by `scales[j]`, parallelised over the
+    /// kernel pool (each task owns a disjoint column range of the
+    /// column-major backing store).
+    pub fn scale_cols(&mut self, scales: &[f64], threads: usize) {
+        assert_eq!(scales.len(), self.p);
+        if self.n == 0 || self.p == 0 {
+            return;
+        }
+        let n = self.n;
+        let col_ranges =
+            super::parallel::even_chunks(self.p, super::parallel::chunk_count(threads));
+        let data_ranges: Vec<std::ops::Range<usize>> =
+            col_ranges.iter().map(|r| r.start * n..r.end * n).collect();
+        super::parallel::par_slices(&mut self.data, &data_ranges, threads, |k, _, sub| {
+            let cols = col_ranges[k].clone();
+            for (c, col) in sub.chunks_mut(n).enumerate() {
+                let s = scales[cols.start + c];
+                if s != 1.0 {
+                    for v in col {
+                        *v *= s;
+                    }
+                }
+            }
+        });
     }
 
     /// Squared ℓ2 norms of all columns.
@@ -222,6 +302,43 @@ mod tests {
         assert!((nrm2(&x) - 5.0).abs() < 1e-15);
         assert_eq!(norm_inf(&x), 4.0);
         assert_eq!(norm1(&x), 7.0);
+    }
+
+    #[test]
+    fn panel_matches_per_column_dot_across_remainders() {
+        // shapes straddling the panel width, incl. empty and one column
+        for (n, p) in [(0usize, 0usize), (3, 0), (0, 5), (4, 1), (5, 7), (6, 8), (7, 9), (3, 17)] {
+            let data: Vec<f64> = (0..n * p).map(|k| ((k * 37 % 19) as f64) - 9.0).collect();
+            let m = DenseMatrix::from_col_major(n, p, data);
+            let r: Vec<f64> = (0..n).map(|i| (i as f64) * 0.25 - 1.0).collect();
+            let mut reference = vec![0.0; p];
+            m.matvec_t(&r, &mut reference);
+            let mut panel = vec![0.0; p];
+            m.matvec_t_panel(&r, 0..p, &mut panel);
+            for j in 0..p {
+                assert!((panel[j] - reference[j]).abs() < 1e-12, "n={n} p={p} j={j}");
+            }
+            // and over a sub-range
+            if p >= 3 {
+                let mut sub = vec![0.0; p - 2];
+                m.matvec_t_panel(&r, 1..p - 1, &mut sub);
+                for (k, j) in (1..p - 1).enumerate() {
+                    assert!((sub[k] - reference[j]).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scale_cols_matches_scalar_loop() {
+        let mut a = DenseMatrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let mut b = a.clone();
+        let scales = [2.0, 1.0, -0.5];
+        a.scale_cols(&scales, 4);
+        for (j, &s) in scales.iter().enumerate() {
+            b.scale_col(j, s);
+        }
+        assert_eq!(a, b);
     }
 
     #[test]

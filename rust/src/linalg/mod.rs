@@ -1,10 +1,14 @@
 //! Linear-algebra substrate: dense column-major and CSC sparse matrices,
-//! plus the [`Design`] abstraction the solvers are generic over.
+//! the [`Design`] abstraction the solvers are generic over, and the
+//! kernel engine ([`parallel`]) that runs the O(n·p) column passes
+//! blocked and multi-threaded under a global thread budget.
 
 pub mod dense;
 pub mod design;
+pub mod parallel;
 pub mod sparse;
 
 pub use dense::{axpy, dot, norm1, norm_inf, nrm2, sq_nrm2, DenseMatrix};
 pub use design::Design;
+pub use parallel::KernelPolicy;
 pub use sparse::CscMatrix;

@@ -1,0 +1,566 @@
+//! Kernel engine: a persistent worker pool + thread-budget policy for the
+//! O(n·p) column passes (`Xᵀr` scoring, screening, Gram/norm precompute).
+//!
+//! Design (ISSUE 2 tentpole):
+//! - **Persistent, lazily-spawned pool.** The scoring pass runs every
+//!   outer iteration, so per-call thread spawning is unaffordable. Workers
+//!   are spawned once on first parallel use and then block on a shared
+//!   job queue; a job is a `Fn(task_index)` closure executed over
+//!   `0..n_tasks` with dynamic (atomic counter) task claiming. The
+//!   submitting thread always participates, so the pool can never
+//!   deadlock a caller.
+//! - **Column-range tasks.** Consumers split their column space into
+//!   contiguous ranges — [`even_chunks`] (dense, panel-aligned via
+//!   [`even_chunks_aligned`]) or [`balanced_chunks`] (CSC, nnz-balanced so
+//!   a few dense columns don't serialise the pass) — and each task writes
+//!   a disjoint slice of the output ([`par_slices`]).
+//! - **[`KernelPolicy`]**: serial below [`SERIAL_WORK_THRESHOLD`] stored
+//!   entries (small problems lose more to dispatch than they gain), and a
+//!   global thread budget shared with the coordinator's solver workers:
+//!   when the scheduler runs W concurrent jobs, each job's kernels get
+//!   `budget / W` threads so kernel × worker parallelism never
+//!   oversubscribes the machine.
+//!
+//! The budget resolves, in priority order: [`set_thread_budget`] (the CLI
+//! `--threads` knob) > the `SKGLM_THREADS` env var > hardware parallelism.
+//!
+//! Float semantics: every output element is computed by exactly one task
+//! with a summation order that depends only on the matrix shape (panel
+//! boundaries are alignment-fixed), so results are independent of the
+//! thread count.
+
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+// ------------------------------------------------------- thread budget --
+
+/// Resolved global thread budget; 0 = not yet resolved.
+static BUDGET: AtomicUsize = AtomicUsize::new(0);
+/// Solver worker threads currently registered by the fit scheduler.
+static SOLVER_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// The global thread budget (`--threads` > `SKGLM_THREADS` > hardware).
+pub fn thread_budget() -> usize {
+    let b = BUDGET.load(Ordering::Relaxed);
+    if b != 0 {
+        return b;
+    }
+    let resolved = env_thread_budget().unwrap_or_else(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    });
+    // Racy first-resolution is fine: every racer computes the same value,
+    // and an interleaved `set_thread_budget` wins either way.
+    let _ = BUDGET.compare_exchange(0, resolved, Ordering::Relaxed, Ordering::Relaxed);
+    BUDGET.load(Ordering::Relaxed).max(1)
+}
+
+/// The `SKGLM_THREADS` override, if set to a positive integer.
+pub fn env_thread_budget() -> Option<usize> {
+    std::env::var("SKGLM_THREADS").ok().and_then(|v| v.parse::<usize>().ok()).filter(|&n| n >= 1)
+}
+
+/// Set the global thread budget (CLI `--threads`). Takes effect for every
+/// subsequent policy decision; the worker pool itself is sized once at
+/// first parallel use.
+pub fn set_thread_budget(n: usize) {
+    BUDGET.store(n.max(1), Ordering::Relaxed);
+}
+
+/// RAII registration of `n` concurrent solver workers against the kernel
+/// budget (held by the coordinator's [`crate::coordinator::FitScheduler`]).
+/// While registered, kernel calls get `budget / n` threads each.
+pub struct SolverWorkersGuard {
+    n: usize,
+}
+
+/// Register `n` solver worker threads; the guard releases them on drop.
+pub fn register_solver_workers(n: usize) -> SolverWorkersGuard {
+    SOLVER_WORKERS.fetch_add(n, Ordering::Relaxed);
+    SolverWorkersGuard { n }
+}
+
+/// Currently registered solver workers (0 when no scheduler is running).
+pub fn solver_workers() -> usize {
+    SOLVER_WORKERS.load(Ordering::Relaxed)
+}
+
+impl Drop for SolverWorkersGuard {
+    fn drop(&mut self) {
+        SOLVER_WORKERS.fetch_sub(self.n, Ordering::Relaxed);
+    }
+}
+
+// -------------------------------------------------------------- policy --
+
+/// Below this many stored entries a kernel runs serially: pool dispatch
+/// costs a few µs, which dominates passes smaller than ~a L2 cache.
+pub const SERIAL_WORK_THRESHOLD: usize = 1 << 15;
+
+/// Decides how many threads a kernel invocation gets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelPolicy {
+    /// Threads available to this kernel call.
+    pub threads: usize,
+    /// Work (stored entries) below which the call stays serial.
+    pub serial_threshold: usize,
+}
+
+/// Per-job kernel threads on a `budget` shared by `jobs` concurrent
+/// solver workers: `budget / jobs`, floored at 1. Guarantees
+/// `kernel threads × jobs ≤ budget` whenever `jobs ≤ budget`.
+pub fn divide_budget(budget: usize, jobs: usize) -> usize {
+    (budget / jobs.max(1)).max(1)
+}
+
+impl KernelPolicy {
+    /// The process-wide policy: the thread budget divided by the number of
+    /// concurrently registered solver workers (no oversubscription when
+    /// `serve`/`path` fan out jobs).
+    pub fn global() -> Self {
+        Self {
+            threads: divide_budget(thread_budget(), solver_workers()),
+            serial_threshold: SERIAL_WORK_THRESHOLD,
+        }
+    }
+
+    /// A policy with an explicit thread count (benches, tests).
+    pub fn with_threads(threads: usize) -> Self {
+        Self { threads: threads.max(1), serial_threshold: SERIAL_WORK_THRESHOLD }
+    }
+
+    /// Threads to use for a pass over `work` stored entries.
+    pub fn threads_for(&self, work: usize) -> usize {
+        if self.threads <= 1 || work < self.serial_threshold {
+            1
+        } else {
+            self.threads
+        }
+    }
+}
+
+// ------------------------------------------------------------ chunking --
+
+/// Tasks per parallel call: a few per thread so a slow chunk (NUMA, page
+/// faults, skewed columns) is absorbed by dynamic claiming.
+pub fn chunk_count(threads: usize) -> usize {
+    if threads <= 1 {
+        1
+    } else {
+        threads * 4
+    }
+}
+
+/// Split `0..n` into at most `chunks` contiguous, near-equal ranges.
+pub fn even_chunks(n: usize, chunks: usize) -> Vec<Range<usize>> {
+    even_chunks_aligned(n, chunks, 1)
+}
+
+/// Like [`even_chunks`], but every boundary (except `n` itself) is a
+/// multiple of `align`. Dense `Xᵀr` uses `align = PANEL` so panel
+/// membership of a column — and hence its summation order — depends only
+/// on the matrix shape, never on the thread count.
+pub fn even_chunks_aligned(n: usize, chunks: usize, align: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let align = align.max(1);
+    let chunks = chunks.clamp(1, n);
+    let mut out = Vec::with_capacity(chunks);
+    let mut start = 0usize;
+    for k in 1..=chunks {
+        let end = if k == chunks { n } else { (n * k / chunks / align * align).min(n) };
+        if end > start {
+            out.push(start..end);
+            start = end;
+        }
+    }
+    out
+}
+
+/// nnz-balanced column ranges: `cum` is a non-decreasing cumulative-weight
+/// array of length `p + 1` (CSC `indptr`); returns at most `chunks`
+/// contiguous ranges of `0..p` with roughly equal total weight, so a few
+/// dense columns don't serialise a sparse pass.
+pub fn balanced_chunks(cum: &[usize], chunks: usize) -> Vec<Range<usize>> {
+    let p = cum.len().saturating_sub(1);
+    if p == 0 {
+        return Vec::new();
+    }
+    let chunks = chunks.clamp(1, p);
+    let total = cum[p] - cum[0];
+    if total == 0 {
+        return even_chunks(p, chunks);
+    }
+    let mut out = Vec::with_capacity(chunks);
+    let mut start = 0usize;
+    for k in 1..=chunks {
+        if start >= p {
+            break;
+        }
+        let end = if k == chunks {
+            p
+        } else {
+            let target = cum[0] + total * k / chunks;
+            let bound = match cum.binary_search(&target) {
+                Ok(i) => i,
+                Err(i) => i,
+            };
+            bound.clamp(start + 1, p)
+        };
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+// ---------------------------------------------------------------- pool --
+
+type Task = dyn Fn(usize) + Sync;
+
+/// One in-flight parallel call. `task` is a lifetime-erased pointer to the
+/// caller's closure; soundness rests on `run_tasks` not returning until
+/// every helper has finished (the `remaining`/`done` handshake below).
+struct Job {
+    task: *const Task,
+    next: AtomicUsize,
+    n_tasks: usize,
+    panicked: AtomicBool,
+    /// Helpers that have not yet finished this job.
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+// SAFETY: `task` points at a `Sync` closure that outlives the job (the
+// submitting thread blocks until `remaining == 0`); all other fields are
+// thread-safe primitives.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    available: Condvar,
+    workers: usize,
+}
+
+fn execute(job: &Job) {
+    // SAFETY: the submitting thread keeps the closure alive until the
+    // completion handshake; see `Job`.
+    let task = unsafe { &*job.task };
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n_tasks {
+            break;
+        }
+        IN_KERNEL_TASK.with(|c| c.set(true));
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(i)));
+        IN_KERNEL_TASK.with(|c| c.set(false));
+        if outcome.is_err() {
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        execute(&job);
+        let mut left = job.remaining.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            job.done.notify_all();
+        }
+    }
+}
+
+fn pool() -> &'static Arc<PoolShared> {
+    static POOL: OnceLock<Arc<PoolShared>> = OnceLock::new();
+    POOL.get_or_init(|| {
+        // Size once: enough helpers for the largest budget we may see.
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let workers = thread_budget().max(hw).saturating_sub(1).clamp(1, 64);
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            workers,
+        });
+        for _ in 0..workers {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("skglm-kernel".to_string())
+                .spawn(move || worker_loop(sh))
+                .expect("spawning kernel worker");
+        }
+        shared
+    })
+}
+
+std::thread_local! {
+    /// Set while this thread executes a kernel task: nested parallel calls
+    /// degrade to serial instead of waiting on a queue they occupy.
+    static IN_KERNEL_TASK: std::cell::Cell<bool> = std::cell::Cell::new(false);
+}
+
+/// Run `f(i)` for every `i in 0..n_tasks` on up to `threads` threads
+/// (the calling thread participates; `threads - 1` pool workers help).
+/// Returns after **all** tasks completed. Panics in tasks are surfaced as
+/// a panic here. `threads <= 1` runs inline with zero dispatch cost.
+pub fn run_tasks<F: Fn(usize) + Sync>(threads: usize, n_tasks: usize, f: F) {
+    if n_tasks == 0 {
+        return;
+    }
+    let nested = IN_KERNEL_TASK.with(|c| c.get());
+    let threads = threads.max(1).min(n_tasks);
+    if threads == 1 || nested {
+        for i in 0..n_tasks {
+            f(i);
+        }
+        return;
+    }
+    let shared = pool();
+    let helpers = (threads - 1).min(shared.workers);
+    if helpers == 0 {
+        for i in 0..n_tasks {
+            f(i);
+        }
+        return;
+    }
+
+    let task_ref: &(dyn Fn(usize) + Sync) = &f;
+    // SAFETY: erase the borrow's lifetime; `task` is only dereferenced
+    // while this frame is blocked in the completion wait below.
+    let task: *const Task = unsafe { std::mem::transmute(task_ref) };
+    let job = Arc::new(Job {
+        task,
+        next: AtomicUsize::new(0),
+        n_tasks,
+        panicked: AtomicBool::new(false),
+        remaining: Mutex::new(helpers),
+        done: Condvar::new(),
+    });
+    {
+        let mut q = shared.queue.lock().unwrap();
+        for _ in 0..helpers {
+            q.push_back(Arc::clone(&job));
+        }
+    }
+    shared.available.notify_all();
+
+    execute(&job);
+
+    let mut left = job.remaining.lock().unwrap();
+    while *left > 0 {
+        left = job.done.wait(left).unwrap();
+    }
+    drop(left);
+    if job.panicked.load(Ordering::Relaxed) {
+        panic!("a kernel-engine task panicked");
+    }
+}
+
+/// Raw-pointer wrapper so disjoint output sub-slices can cross threads.
+struct SendMutPtr<T>(*mut T);
+// SAFETY: only used to rebuild disjoint sub-slices (validated by
+// `par_slices`), each touched by exactly one task.
+unsafe impl<T: Send> Send for SendMutPtr<T> {}
+unsafe impl<T: Send> Sync for SendMutPtr<T> {}
+
+/// Run `f(chunk_index, range, &mut out[range])` for every range, in
+/// parallel on up to `threads` threads. `ranges` must be ascending,
+/// pairwise disjoint and within `out` (checked).
+pub fn par_slices<T, F>(out: &mut [T], ranges: &[Range<usize>], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, Range<usize>, &mut [T]) + Sync,
+{
+    let mut prev_end = 0usize;
+    for r in ranges {
+        assert!(
+            r.start >= prev_end && r.start <= r.end && r.end <= out.len(),
+            "par_slices: ranges must be ascending, disjoint and in bounds"
+        );
+        prev_end = r.end;
+    }
+    let base = SendMutPtr(out.as_mut_ptr());
+    run_tasks(threads, ranges.len(), |k| {
+        let r = ranges[k].clone();
+        // SAFETY: ranges are validated disjoint above, so every task gets
+        // exclusive access to its sub-slice.
+        let sub = unsafe { std::slice::from_raw_parts_mut(base.0.add(r.start), r.end - r.start) };
+        f(k, r, sub);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_chunks_cover_exactly() {
+        for n in [0usize, 1, 2, 7, 8, 9, 100, 101] {
+            for chunks in [1usize, 2, 3, 8, 200] {
+                let rs = even_chunks(n, chunks);
+                let mut pos = 0;
+                for r in &rs {
+                    assert_eq!(r.start, pos, "gap at {pos} (n={n}, chunks={chunks})");
+                    assert!(r.end > r.start);
+                    pos = r.end;
+                }
+                assert_eq!(pos, n, "n={n}, chunks={chunks}");
+            }
+        }
+    }
+
+    #[test]
+    fn aligned_chunks_have_aligned_boundaries() {
+        for n in [5usize, 8, 17, 64, 100] {
+            for chunks in [2usize, 3, 7] {
+                let rs = even_chunks_aligned(n, chunks, 8);
+                let mut pos = 0;
+                for r in &rs {
+                    assert_eq!(r.start, pos);
+                    assert!(r.start % 8 == 0, "unaligned start {}", r.start);
+                    pos = r.end;
+                }
+                assert_eq!(pos, n);
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_chunks_cover_and_balance() {
+        // skewed "indptr": one huge column among many small ones
+        let mut cum = vec![0usize];
+        for j in 0..40 {
+            let w = if j == 3 { 1000 } else { 10 };
+            cum.push(cum.last().unwrap() + w);
+        }
+        let rs = balanced_chunks(&cum, 4);
+        let mut pos = 0;
+        for r in &rs {
+            assert_eq!(r.start, pos);
+            assert!(r.end > r.start);
+            pos = r.end;
+        }
+        assert_eq!(pos, 40);
+        // the heavy column's chunk should not also carry most small ones:
+        // every chunk except the heavy one stays light
+        let total = *cum.last().unwrap();
+        for r in &rs {
+            let w = cum[r.end] - cum[r.start];
+            assert!(
+                w <= 1000 + total / 2,
+                "chunk {r:?} weight {w} badly balanced"
+            );
+        }
+    }
+
+    #[test]
+    fn balanced_chunks_all_empty_columns() {
+        let cum = vec![0usize; 11]; // 10 empty columns
+        let rs = balanced_chunks(&cum, 3);
+        let covered: usize = rs.iter().map(|r| r.end - r.start).sum();
+        assert_eq!(covered, 10);
+    }
+
+    #[test]
+    fn run_tasks_visits_every_index_once() {
+        let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        run_tasks(4, hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn run_tasks_serial_path() {
+        let hits: Vec<AtomicUsize> = (0..5).map(|_| AtomicUsize::new(0)).collect();
+        run_tasks(1, 5, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn nested_calls_degrade_to_serial_and_complete() {
+        let total = AtomicUsize::new(0);
+        run_tasks(4, 8, |_| {
+            run_tasks(4, 8, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn par_slices_writes_disjoint_ranges() {
+        let mut out = vec![0usize; 100];
+        let ranges = even_chunks(100, 7);
+        par_slices(&mut out, &ranges, 4, |_, r, sub| {
+            for (o, i) in sub.iter_mut().zip(r) {
+                *o = i + 1;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i + 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn par_slices_rejects_overlap() {
+        let mut out = vec![0.0f64; 10];
+        par_slices(&mut out, &[0..6, 5..10], 2, |_, _, _| {});
+    }
+
+    #[test]
+    fn task_panic_propagates() {
+        let res = std::panic::catch_unwind(|| {
+            run_tasks(4, 16, |i| {
+                if i == 7 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(res.is_err(), "panic in a task must surface to the caller");
+    }
+
+    #[test]
+    fn policy_serial_below_threshold() {
+        let p = KernelPolicy { threads: 8, serial_threshold: 1000 };
+        assert_eq!(p.threads_for(999), 1);
+        assert_eq!(p.threads_for(1000), 8);
+        let s = KernelPolicy::with_threads(1);
+        assert_eq!(s.threads_for(usize::MAX), 1);
+    }
+
+    #[test]
+    fn budget_division_never_oversubscribes() {
+        // pure math (the globals it feeds from are exercised end-to-end in
+        // tests/integration_kernels.rs, which owns the process globals)
+        assert_eq!(divide_budget(8, 4), 2);
+        assert_eq!(divide_budget(8, 6), 1);
+        assert_eq!(divide_budget(8, 0), 8, "no registered workers = whole budget");
+        assert_eq!(divide_budget(1, 5), 1);
+        for budget in 1..=16usize {
+            for jobs in 1..=16usize {
+                let t = divide_budget(budget, jobs);
+                assert!(t >= 1);
+                if jobs <= budget {
+                    assert!(t * jobs <= budget, "oversubscribed: {t}×{jobs} > {budget}");
+                }
+            }
+        }
+    }
+}

@@ -159,6 +159,50 @@ impl CscMatrix {
         }
     }
 
+    /// `Xᵀ r` restricted to the column range `cols`: writes
+    /// `out[k] = X[:, cols.start + k]ᵀ r`. The kernel engine calls this on
+    /// nnz-balanced ranges ([`crate::linalg::parallel::balanced_chunks`]).
+    pub fn matvec_t_range(&self, r: &[f64], cols: std::ops::Range<usize>, out: &mut [f64]) {
+        assert!(cols.end <= self.p);
+        assert_eq!(out.len(), cols.end - cols.start);
+        for (o, j) in out.iter_mut().zip(cols) {
+            *o = self.col_dot(j, r);
+        }
+    }
+
+    /// Column pointers (nnz-balanced chunking in the kernel engine).
+    #[inline]
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+
+    /// Scale every column `j` by `scales[j]`, parallelised over the
+    /// kernel pool on nnz-balanced column ranges.
+    pub fn scale_cols(&mut self, scales: &[f64], threads: usize) {
+        assert_eq!(scales.len(), self.p);
+        if self.p == 0 || self.data.is_empty() {
+            return;
+        }
+        let col_ranges = super::parallel::balanced_chunks(
+            &self.indptr,
+            super::parallel::chunk_count(threads),
+        );
+        let data_ranges: Vec<std::ops::Range<usize>> =
+            col_ranges.iter().map(|r| self.indptr[r.start]..self.indptr[r.end]).collect();
+        let indptr = &self.indptr;
+        super::parallel::par_slices(&mut self.data, &data_ranges, threads, |k, dr, sub| {
+            for j in col_ranges[k].clone() {
+                let s = scales[j];
+                if s != 1.0 {
+                    let (a, b) = (indptr[j] - dr.start, indptr[j + 1] - dr.start);
+                    for v in &mut sub[a..b] {
+                        *v *= s;
+                    }
+                }
+            }
+        });
+    }
+
     /// Squared ℓ2 norms of all columns.
     pub fn col_sq_norms(&self) -> Vec<f64> {
         (0..self.p)
@@ -268,6 +312,31 @@ mod tests {
     fn col_sq_norms_match_dense() {
         let m = small();
         assert_eq!(m.col_sq_norms(), vec![17.0, 9.0, 29.0]);
+    }
+
+    #[test]
+    fn matvec_t_range_matches_full() {
+        let m = small();
+        let r = [1.0, 2.0, 3.0];
+        let mut full = vec![0.0; 3];
+        m.matvec_t(&r, &mut full);
+        let mut sub = vec![0.0; 2];
+        m.matvec_t_range(&r, 1..3, &mut sub);
+        assert_eq!(sub, &full[1..3]);
+        let mut empty: Vec<f64> = vec![];
+        m.matvec_t_range(&r, 2..2, &mut empty);
+    }
+
+    #[test]
+    fn scale_cols_matches_scalar_loop() {
+        let mut a = small();
+        let mut b = small();
+        let scales = [0.5, 1.0, -2.0];
+        a.scale_cols(&scales, 4);
+        for (j, &s) in scales.iter().enumerate() {
+            b.scale_col(j, s);
+        }
+        assert_eq!(a, b);
     }
 
     #[test]

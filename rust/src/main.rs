@@ -30,6 +30,12 @@ fn main() {
 }
 
 fn dispatch(args: &mut Args) -> Result<()> {
+    // global thread budget: --threads > SKGLM_THREADS > hardware; shared
+    // by the kernel engine and every worker pool (see ARCHITECTURE.md
+    // §Kernel engine)
+    if let Some(t) = args.take_threads()? {
+        skglm::linalg::parallel::set_thread_budget(t);
+    }
     match args.subcommand() {
         Some("solve") => cmd_solve(args),
         Some("path") => cmd_path(args),
@@ -53,10 +59,13 @@ const USAGE: &str = "usage:
   skglm path  --penalty <l1|mcp|scad|l05> [--points 20] [--min-ratio 1e-3] \\
               [--gamma 3.0] [--small] [--seed 42]
   skglm cv    --dataset <name> [--folds 5] [--points 15] [--workers 4] [--small]
-  skglm exp   <fig1..fig10|table1|table2|pathsched|all> [--full]
+  skglm exp   <fig1..fig10|table1|table2|pathsched|kernels|all> [--full]
   skglm serve [--workers 4] [--lambdas 8]
   skglm synth --dataset <rcv1|news20|...|fig1> --out <file.svm> [--small]
-  skglm info";
+  skglm info
+
+  every subcommand accepts --threads N (kernel + worker thread budget;
+  overrides the SKGLM_THREADS env var; defaults to hardware parallelism)";
 
 fn load_dataset(args: &mut Args) -> Result<Dataset> {
     let name = args.get_or("dataset", "rcv1");

@@ -63,7 +63,36 @@ pub fn coordinate_score<D: Datafit, P: Penalty>(
     }
 }
 
-/// Max score over the working set.
+/// Fill `scores[k]` with the working-set score of `ws[k]`. The O(|ws|·n)
+/// stationarity pass, parallelised over the kernel engine (each score is
+/// an independent column dot).
+#[allow(clippy::too_many_arguments)]
+pub fn coordinate_scores_into<D: Datafit, P: Penalty>(
+    design: &Design,
+    y: &[f64],
+    datafit: &D,
+    penalty: &P,
+    beta: &[f64],
+    state: &[f64],
+    ws: &[usize],
+    scores: &mut [f64],
+) {
+    use crate::linalg::parallel::{self, KernelPolicy};
+    assert_eq!(ws.len(), scores.len());
+    // work ≈ average column cost × |ws|
+    let p = design.ncols().max(1);
+    let work = design.stored_entries() / p * ws.len();
+    let threads = KernelPolicy::global().threads_for(work);
+    let ranges = parallel::even_chunks(ws.len(), parallel::chunk_count(threads));
+    parallel::par_slices(scores, &ranges, threads, |_, rng, sub| {
+        for (o, &j) in sub.iter_mut().zip(ws[rng].iter()) {
+            *o = coordinate_score(design, y, datafit, penalty, beta, state, j);
+        }
+    });
+}
+
+/// Max score over the working set (allocates a scratch score buffer; only
+/// runs on the move-bound-gated checks, never every epoch).
 fn ws_score_max<D: Datafit, P: Penalty>(
     design: &Design,
     y: &[f64],
@@ -73,9 +102,9 @@ fn ws_score_max<D: Datafit, P: Penalty>(
     state: &[f64],
     ws: &[usize],
 ) -> f64 {
-    ws.iter()
-        .map(|&j| coordinate_score(design, y, datafit, penalty, beta, state, j))
-        .fold(0.0, f64::max)
+    let mut scores = vec![0.0; ws.len()];
+    coordinate_scores_into(design, y, datafit, penalty, beta, state, ws, &mut scores);
+    scores.iter().fold(0.0f64, |m, &s| m.max(s))
 }
 
 /// Algorithm 2. Mutates `beta`/`state` in place; `anderson_m = 0` disables

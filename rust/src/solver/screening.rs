@@ -42,24 +42,81 @@ pub fn gap_safe_screen_lasso(
     col_norms: &[f64],
     prev: Option<&[bool]>,
 ) -> ScreenResult {
+    let mut screened = vec![false; design.ncols()];
+    if let Some(prev) = prev {
+        screened.copy_from_slice(prev);
+    }
+    let (n_screened, gap) = gap_safe_screen_lasso_update(
+        design, y, beta, r, xtr, lambda, col_norms, &mut screened,
+    );
+    ScreenResult { screened, n_screened, gap }
+}
+
+/// Buffer-reusing core of [`gap_safe_screen_lasso`]: updates the monotone
+/// `screened` mask in place (a screened feature stays screened) and
+/// returns `(total screened, duality gap)`. Callers sweeping a λ grid
+/// reset the mask between λ points — certificates are λ-specific.
+#[allow(clippy::too_many_arguments)]
+pub fn gap_safe_screen_lasso_update(
+    design: &Design,
+    y: &[f64],
+    beta: &[f64],
+    r: &[f64],
+    xtr: &[f64],
+    lambda: f64,
+    col_norms: &[f64],
+    screened: &mut [bool],
+) -> (usize, f64) {
     let n = design.nrows() as f64;
     let p = design.ncols();
+    assert_eq!(screened.len(), p);
     let gap = crate::metrics::lasso_gap(design, y, beta, r, lambda);
     // dual point θ = r / max(nλ, ‖Xᵀr‖∞); radius √(2G)/ (λ√n)
     let scale = (n * lambda).max(crate::linalg::norm_inf(xtr));
     let radius = (2.0 * gap).sqrt() / (lambda * n.sqrt());
-    let mut screened = vec![false; p];
     let mut count = 0;
     for j in 0..p {
-        let carried = prev.map(|s| s[j]).unwrap_or(false);
-        let test = carried
-            || (xtr[j] / scale).abs() + col_norms[j] * radius < 1.0;
+        let test = screened[j] || (xtr[j] / scale).abs() + col_norms[j] * radius < 1.0;
         screened[j] = test;
         if test {
             count += 1;
         }
     }
-    ScreenResult { screened, n_screened: count, gap }
+    (count, gap)
+}
+
+/// Reusable buffers for the screened path solver: the per-λ loop of a path
+/// job allocates these once per sweep instead of once per solve (and per
+/// outer pass for the mask/scores) — the allocation-churn satellite of
+/// ISSUE 2.
+#[derive(Clone, Debug, Default)]
+pub struct ScreenWorkspace {
+    xtr: Vec<f64>,
+    r: Vec<f64>,
+    scores: Vec<f64>,
+    col_norms: Vec<f64>,
+    screened: Vec<bool>,
+}
+
+impl ScreenWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size (or re-size) every buffer for an (n, p) problem and clear the
+    /// λ-specific screening mask.
+    fn reset(&mut self, n: usize, p: usize) {
+        self.xtr.clear();
+        self.xtr.resize(p, 0.0);
+        self.scores.clear();
+        self.scores.resize(p, 0.0);
+        self.col_norms.clear();
+        self.col_norms.resize(p, 0.0);
+        self.screened.clear();
+        self.screened.resize(p, false);
+        self.r.clear();
+        self.r.resize(n, 0.0);
+    }
 }
 
 /// Lasso solve with dynamic gap-safe screening layered on the working-set
@@ -93,25 +150,51 @@ pub fn solve_lasso_screened_warm(
     continuation: &mut crate::solver::ContinuationState,
     col_sq_norms: Option<&[f64]>,
 ) -> (crate::solver::FitResult, usize) {
+    let mut work = ScreenWorkspace::new();
+    solve_lasso_screened_warm_with(design, y, lambda, opts, continuation, col_sq_norms, &mut work)
+}
+
+/// [`solve_lasso_screened_warm`] with caller-owned scratch buffers: the
+/// path scheduler's per-λ loop keeps one [`ScreenWorkspace`] for the whole
+/// sweep, so no per-solve `Xᵀr` / residual / mask / score allocations
+/// survive on the hot path.
+pub fn solve_lasso_screened_warm_with(
+    design: &Design,
+    y: &[f64],
+    lambda: f64,
+    opts: &crate::solver::SolverOpts,
+    continuation: &mut crate::solver::ContinuationState,
+    col_sq_norms: Option<&[f64]>,
+    work: &mut ScreenWorkspace,
+) -> (crate::solver::FitResult, usize) {
     use crate::datafit::{Datafit, Quadratic};
     use crate::penalty::{Penalty, L1};
     use crate::solver::inner::inner_solver;
 
     let p = design.ncols();
     let n = design.nrows() as f64;
+    work.reset(design.nrows(), p);
     let mut datafit = Quadratic::new();
     datafit.init_cached(design, y, col_sq_norms);
     let penalty = L1::new(lambda);
-    let col_norms: Vec<f64> = match col_sq_norms {
-        Some(sq) => sq.iter().map(|s| s.sqrt()).collect(),
-        None => design.col_sq_norms().iter().map(|s| s.sqrt()).collect(),
-    };
+    match col_sq_norms {
+        Some(sq) => {
+            assert_eq!(sq.len(), p, "cached col_sq_norms does not match the design");
+            for (o, s) in work.col_norms.iter_mut().zip(sq.iter()) {
+                *o = s.sqrt();
+            }
+        }
+        None => {
+            design.col_sq_norms_into(&mut work.col_norms);
+            for v in work.col_norms.iter_mut() {
+                *v = v.sqrt();
+            }
+        }
+    }
 
     let mut beta = continuation.beta.clone().unwrap_or_else(|| vec![0.0; p]);
     assert_eq!(beta.len(), p);
     let mut state = datafit.init_state(design, y, &beta); // Xβ − y
-    let mut xtr = vec![0.0; p];
-    let mut screened: Option<Vec<bool>> = None;
     let start = std::time::Instant::now();
     let mut result = crate::solver::FitResult {
         beta: Vec::new(),
@@ -125,54 +208,65 @@ pub fn solve_lasso_screened_warm(
         rejected_extrapolations: 0,
     };
     let mut ws_size = continuation.ws_size.unwrap_or(opts.ws_start).min(p).max(1);
+    let mut n_screened = 0usize;
 
     for outer in 1..=opts.max_outer {
         result.n_outer = outer;
-        design.matvec_t(&state, &mut xtr);
-        for v in xtr.iter_mut() {
+        design.matvec_t(&state, &mut work.xtr);
+        for v in work.xtr.iter_mut() {
             *v = -*v; // Xᵀr with r = y − Xβ
         }
-        let mut r: Vec<f64> = state.iter().map(|&s| -s).collect();
-        let sc = gap_safe_screen_lasso(
-            design, y, &beta, &r, &xtr, lambda, &col_norms, screened.as_deref(),
+        for (ri, &s) in work.r.iter_mut().zip(state.iter()) {
+            *ri = -s;
+        }
+        let (count, _gap) = gap_safe_screen_lasso_update(
+            design,
+            y,
+            &beta,
+            &work.r,
+            &work.xtr,
+            lambda,
+            &work.col_norms,
+            &mut work.screened,
         );
+        n_screened = count;
         // newly certified features still holding a (warm-start) value are
         // frozen AT ZERO; the residual moves, so refresh r and Xᵀr
         let mut moved = false;
         for j in 0..p {
-            if sc.screened[j] && beta[j] != 0.0 {
+            if work.screened[j] && beta[j] != 0.0 {
                 datafit.update_state(design, j, -beta[j], &mut state);
                 beta[j] = 0.0;
                 moved = true;
             }
         }
         if moved {
-            design.matvec_t(&state, &mut xtr);
-            for v in xtr.iter_mut() {
+            design.matvec_t(&state, &mut work.xtr);
+            for v in work.xtr.iter_mut() {
                 *v = -*v;
             }
-            r = state.iter().map(|&s| -s).collect();
+            for (ri, &s) in work.r.iter_mut().zip(state.iter()) {
+                *ri = -s;
+            }
         }
         // KKT over the survivors only (screened features are certified)
         let mut kkt_max = 0.0f64;
-        let mut scores = vec![0.0; p];
         for j in 0..p {
-            if sc.screened[j] || col_norms[j] == 0.0 {
-                scores[j] = f64::NEG_INFINITY;
+            if work.screened[j] || work.col_norms[j] == 0.0 {
+                work.scores[j] = f64::NEG_INFINITY;
                 continue;
             }
-            let s = penalty.subdiff_distance(beta[j], -xtr[j] / n, j);
-            scores[j] = s;
+            let s = penalty.subdiff_distance(beta[j], -work.xtr[j] / n, j);
+            work.scores[j] = s;
             kkt_max = kkt_max.max(s);
         }
         result.history.push(crate::solver::HistoryPoint {
             t: start.elapsed().as_secs_f64(),
-            objective: crate::linalg::sq_nrm2(&r) / (2.0 * n)
+            objective: crate::linalg::sq_nrm2(&work.r) / (2.0 * n)
                 + lambda * crate::linalg::norm1(&beta),
             kkt: kkt_max,
-            ws_size: p - sc.n_screened,
+            ws_size: p - count,
         });
-        screened = Some(sc.screened);
         if kkt_max <= opts.tol {
             result.converged = true;
             break;
@@ -182,17 +276,18 @@ pub fn solve_lasso_screened_warm(
         ws_size = ws_size.max(2 * nnz).min(p);
         for j in 0..p {
             if beta[j] != 0.0 {
-                scores[j] = f64::INFINITY;
+                work.scores[j] = f64::INFINITY;
             }
         }
         let mut idx: Vec<usize> = (0..p).collect();
         if ws_size < p {
+            let scores = &work.scores;
             idx.select_nth_unstable_by(ws_size - 1, |&a, &b| {
                 scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
             });
             idx.truncate(ws_size);
         }
-        idx.retain(|&j| scores[j] > f64::NEG_INFINITY);
+        idx.retain(|&j| work.scores[j] > f64::NEG_INFINITY);
         idx.sort_unstable();
         if idx.is_empty() {
             result.converged = true;
@@ -207,14 +302,15 @@ pub fn solve_lasso_screened_warm(
         result.accepted_extrapolations += stats.accepted_extrapolations;
     }
 
-    let r: Vec<f64> = state.iter().map(|&s| -s).collect();
-    result.kkt = crate::metrics::lasso_gap(design, y, &beta, &r, lambda);
+    for (ri, &s) in work.r.iter_mut().zip(state.iter()) {
+        *ri = -s;
+    }
+    result.kkt = crate::metrics::lasso_gap(design, y, &beta, &work.r, lambda);
     result.objective =
-        crate::linalg::sq_nrm2(&r) / (2.0 * n) + lambda * crate::linalg::norm1(&beta);
+        crate::linalg::sq_nrm2(&work.r) / (2.0 * n) + lambda * crate::linalg::norm1(&beta);
     result.beta = beta;
     continuation.beta = Some(result.beta.clone());
     continuation.ws_size = Some(ws_size);
-    let n_screened = screened.map(|s| s.iter().filter(|&&x| x).count()).unwrap_or(0);
     (result, n_screened)
 }
 
@@ -271,6 +367,38 @@ mod tests {
             plain.objective
         );
         assert!(n_screened > 0, "should have certified some features away");
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh_solves() {
+        // one ScreenWorkspace across a descending λ sweep (what the path
+        // scheduler does) must reproduce the fresh-buffer results exactly
+        let (d, y) = problem();
+        let lam_max = quadratic_lambda_max(&d, &y);
+        let opts = SolverOpts::default().with_tol(1e-9);
+        let sq = d.col_sq_norms();
+
+        let mut shared = ScreenWorkspace::new();
+        let mut cont_a = crate::solver::ContinuationState::default();
+        let mut cont_b = crate::solver::ContinuationState::default();
+        for div in [2.0, 5.0, 20.0] {
+            let lam = lam_max / div;
+            let (fit_a, scr_a) = solve_lasso_screened_warm_with(
+                &d, &y, lam, &opts, &mut cont_a, Some(&sq), &mut shared,
+            );
+            let (fit_b, scr_b) =
+                solve_lasso_screened_warm(&d, &y, lam, &opts, &mut cont_b, Some(&sq));
+            assert_eq!(scr_a, scr_b, "screen counts diverged at λ_max/{div}");
+            assert!(
+                (fit_a.objective - fit_b.objective).abs() < 1e-12,
+                "objectives diverged at λ_max/{div}: {} vs {}",
+                fit_a.objective,
+                fit_b.objective
+            );
+            for (a, b) in fit_a.beta.iter().zip(fit_b.beta.iter()) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! it through an optional [`GradEngine`] (PJRT) and falls back to the
 //! native datafit path.
 
-use super::inner::{coordinate_score, inner_solver};
+use super::inner::inner_solver;
 use crate::datafit::Datafit;
 use crate::linalg::Design;
 use crate::penalty::Penalty;
@@ -343,18 +343,22 @@ pub fn solve_prepared<D: Datafit, P: Penalty>(
         result.rejected_extrapolations += stats.rejected_extrapolations;
     }
 
-    // final metrics
-    datafit.grad_full(design, y, &state, &beta, &mut grad);
-    let lipschitz = datafit.lipschitz();
-    result.kkt = (0..p)
-        .map(|j| {
-            if lipschitz[j] == 0.0 || is_frozen(j) {
-                0.0
-            } else {
-                coordinate_score(design, y, datafit, penalty, &beta, &state, j)
-            }
-        })
-        .fold(0.0, f64::max);
+    // final metrics: the O(n·p) KKT check runs on the kernel engine
+    // (frozen features are already excluded from `all_features`;
+    // `coordinate_score` returns 0 for empty columns and computes its own
+    // per-coordinate gradients — no full-gradient pass needed here)
+    let mut final_scores = vec![0.0; all_features.len()];
+    super::inner::coordinate_scores_into(
+        design,
+        y,
+        datafit,
+        penalty,
+        &beta,
+        &state,
+        &all_features,
+        &mut final_scores,
+    );
+    result.kkt = final_scores.iter().fold(0.0f64, |m, &s| m.max(s));
     result.converged = result.converged || result.kkt <= opts.tol;
     result.objective = super::cd::objective(datafit, penalty, y, &beta, &state);
     result.beta = beta;

@@ -1,0 +1,193 @@
+//! Kernel-engine integration: thread-count invariance of full solves, the
+//! scheduler/kernel thread-budget sharing rule, and end-to-end agreement
+//! of the routed O(n·p) passes with their serial references.
+//!
+//! Budget-mutating checks live in ONE test function: the budget is a
+//! process-global and `cargo test` runs test functions concurrently.
+
+use skglm::coordinator::{specs, FitScheduler, JobEvent};
+use skglm::data::{correlated, CorrelatedSpec};
+use skglm::datafit::Quadratic;
+use skglm::estimators::linear::quadratic_lambda_max;
+use skglm::linalg::parallel::{self, KernelPolicy};
+use skglm::penalty::{Mcp, L1};
+use skglm::solver::{solve, SolverOpts};
+use std::sync::Arc;
+
+/// Problem big enough (n·p = 120 000 stored entries) that the policy
+/// engages the parallel path at thread budgets > 1.
+fn big_problem() -> skglm::data::Dataset {
+    correlated(CorrelatedSpec { n: 300, p: 400, rho: 0.5, nnz: 20, snr: 8.0 }, 11)
+}
+
+#[test]
+fn budget_rules_and_thread_invariance() {
+    let saved = parallel::thread_budget();
+
+    // --- oversubscription rule: kernel threads × workers ≤ budget ---
+    parallel::set_thread_budget(8);
+    {
+        let sched = FitScheduler::start(4);
+        assert_eq!(
+            KernelPolicy::global().threads,
+            2,
+            "4 workers on a budget of 8 must leave 2 kernel threads each"
+        );
+        {
+            // a second scheduler stacks: 4 + 2 workers > budget → 1 thread
+            let sched2 = FitScheduler::start(2);
+            assert_eq!(KernelPolicy::global().threads, 1);
+            sched2.shutdown();
+        }
+        sched.shutdown();
+    }
+    assert_eq!(
+        KernelPolicy::global().threads,
+        8,
+        "shutdown must release the workers' budget share"
+    );
+
+    // --- full solves are invariant to the thread budget ---
+    let ds = big_problem();
+    let lam = quadratic_lambda_max(&ds.design, &ds.y) / 10.0;
+    let run_lasso = |budget: usize| {
+        parallel::set_thread_budget(budget);
+        let mut f = Quadratic::new();
+        solve(
+            &ds.design,
+            &ds.y,
+            &mut f,
+            &L1::new(lam),
+            &SolverOpts::default().with_tol(1e-10),
+            None,
+            None,
+        )
+    };
+    let serial = run_lasso(1);
+    let parallel_fit = run_lasso(4);
+    assert!(serial.converged && parallel_fit.converged);
+    assert!(
+        (serial.objective - parallel_fit.objective).abs() < 1e-12,
+        "objectives diverged: {} vs {}",
+        serial.objective,
+        parallel_fit.objective
+    );
+    for (a, b) in serial.beta.iter().zip(parallel_fit.beta.iter()) {
+        assert!((a - b).abs() < 1e-12, "beta diverged: {a} vs {b}");
+    }
+
+    // same for a non-convex penalty on a normalised design
+    let run_mcp = |budget: usize| {
+        parallel::set_thread_budget(budget);
+        let mut design = ds.design.clone();
+        design.normalize_cols((ds.n() as f64).sqrt());
+        let lam = quadratic_lambda_max(&design, &ds.y) / 10.0;
+        let mut f = Quadratic::new();
+        solve(
+            &design,
+            &ds.y,
+            &mut f,
+            &Mcp::new(lam, 3.0),
+            &SolverOpts::default().with_tol(1e-9),
+            None,
+            None,
+        )
+    };
+    let mcp_serial = run_mcp(1);
+    let mcp_parallel = run_mcp(4);
+    assert!(
+        (mcp_serial.objective - mcp_parallel.objective).abs() < 1e-12,
+        "MCP objectives diverged: {} vs {}",
+        mcp_serial.objective,
+        mcp_parallel.objective
+    );
+    for (a, b) in mcp_serial.beta.iter().zip(mcp_parallel.beta.iter()) {
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    // --- scheduler path job under a multi-thread budget matches the
+    //     single-threaded reference sweep ---
+    parallel::set_thread_budget(4);
+    let shared = Arc::new(big_problem());
+    let ratios = vec![0.5, 0.2, 0.08];
+    let opts = SolverOpts::default().with_tol(1e-9);
+    let mut sched = FitScheduler::start(2);
+    sched.submit_path(Arc::clone(&shared), specs::lasso(1.0), ratios.clone(), opts.clone());
+    let mut par_points: Vec<(usize, f64, usize)> = Vec::new();
+    loop {
+        match sched.events.recv().expect("scheduler died") {
+            JobEvent::PathPoint(p) => {
+                par_points.push((p.index, p.point.objective, p.point.support_size));
+            }
+            JobEvent::PathDone(_) => break,
+            JobEvent::FitDone(_) => {}
+        }
+    }
+    sched.shutdown();
+
+    parallel::set_thread_budget(1);
+    let mut sched = FitScheduler::start(1);
+    sched.submit_path(Arc::clone(&shared), specs::lasso(1.0), ratios, opts);
+    let mut ser_points: Vec<(usize, f64, usize)> = Vec::new();
+    loop {
+        match sched.events.recv().expect("scheduler died") {
+            JobEvent::PathPoint(p) => {
+                ser_points.push((p.index, p.point.objective, p.point.support_size));
+            }
+            JobEvent::PathDone(_) => break,
+            JobEvent::FitDone(_) => {}
+        }
+    }
+    sched.shutdown();
+
+    par_points.sort_by_key(|x| x.0);
+    ser_points.sort_by_key(|x| x.0);
+    assert_eq!(par_points.len(), ser_points.len());
+    for (a, b) in par_points.iter().zip(ser_points.iter()) {
+        assert_eq!(a.2, b.2, "support sizes diverged at path index {}", a.0);
+        assert!(
+            (a.1 - b.1).abs() < 1e-12,
+            "path objectives diverged at index {}: {} vs {}",
+            a.0,
+            a.1,
+            b.1
+        );
+    }
+
+    parallel::set_thread_budget(saved);
+}
+
+#[test]
+fn routed_passes_match_serial_references_end_to_end() {
+    // exercised with explicit thread counts — no global state touched
+    let ds = big_problem();
+    let d = &ds.design;
+    let r: Vec<f64> = (0..ds.n()).map(|i| (i as f64 * 0.31).sin()).collect();
+
+    let mut reference = vec![0.0; ds.p()];
+    match d {
+        skglm::linalg::Design::Dense(m) => m.matvec_t(&r, &mut reference),
+        skglm::linalg::Design::Sparse(m) => m.matvec_t(&r, &mut reference),
+    }
+    for threads in [1usize, 2, 3, 8] {
+        let mut out = vec![0.0; ds.p()];
+        d.matvec_t_threads(&r, &mut out, threads);
+        for j in 0..ds.p() {
+            assert!(
+                (out[j] - reference[j]).abs() < 1e-12,
+                "threads={threads} j={j}: {} vs {}",
+                out[j],
+                reference[j]
+            );
+        }
+        let mut norms = vec![0.0; ds.p()];
+        d.col_sq_norms_threads(&mut norms, threads);
+        let serial_norms = match d {
+            skglm::linalg::Design::Dense(m) => m.col_sq_norms(),
+            skglm::linalg::Design::Sparse(m) => m.col_sq_norms(),
+        };
+        for j in 0..ds.p() {
+            assert!((norms[j] - serial_norms[j]).abs() < 1e-12);
+        }
+    }
+}

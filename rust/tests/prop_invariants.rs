@@ -347,3 +347,123 @@ fn prop_path_monotonicity() {
         },
     );
 }
+
+/// Kernel-engine equivalence (ISSUE 2): the blocked/parallel `Xᵀr`,
+/// subset `Xᵀr` and column-norm kernels agree with the serial per-column
+/// reference to 1e-12 on random dense AND sparse designs, including
+/// remainder shapes (n, p not multiples of the 8-column panel) and the
+/// empty / one-column edge cases.
+#[test]
+fn prop_kernel_engine_matches_serial_reference() {
+    #[derive(Debug, Clone)]
+    struct Probe {
+        n: usize,
+        p: usize,
+        dense: bool,
+        threads: usize,
+        seed: u64,
+    }
+    check(
+        11,
+        40,
+        |rng: &mut Rng| Probe {
+            // 0 and 1 included: empty designs and single columns
+            n: rng.below(40),
+            p: rng.below(45),
+            dense: rng.bernoulli(0.5),
+            threads: 1 + rng.below(5),
+            seed: rng.next_u64(),
+        },
+        |pr| {
+            let mut rng = Rng::seed_from_u64(pr.seed);
+            let design: Design = if pr.dense {
+                let data: Vec<f64> = (0..pr.n * pr.p).map(|_| rng.normal()).collect();
+                skglm::linalg::DenseMatrix::from_col_major(pr.n, pr.p, data).into()
+            } else {
+                let mut trips = Vec::new();
+                for j in 0..pr.p {
+                    for i in 0..pr.n {
+                        if rng.bernoulli(0.3) {
+                            trips.push((i, j, rng.normal()));
+                        }
+                    }
+                }
+                skglm::linalg::CscMatrix::from_triplets(pr.n, pr.p, &trips).into()
+            };
+            let r: Vec<f64> = (0..pr.n).map(|_| rng.normal()).collect();
+
+            // serial per-column reference
+            let reference: Vec<f64> =
+                (0..pr.p).map(|j| design.col_dot(j, &r)).collect();
+
+            // blocked (1 thread) and parallel variants
+            for threads in [1usize, pr.threads] {
+                let mut out = vec![0.0; pr.p];
+                design.matvec_t_threads(&r, &mut out, threads);
+                for j in 0..pr.p {
+                    close(out[j], reference[j], 1e-12)?;
+                }
+            }
+
+            // subset pass over a random working set (with repeats allowed)
+            let ws: Vec<usize> =
+                (0..pr.p.min(13)).map(|_| rng.below(pr.p.max(1))).collect();
+            if pr.p > 0 {
+                let mut out = vec![0.0; ws.len()];
+                design.matvec_t_subset(&r, &ws, &mut out);
+                for (k, &j) in ws.iter().enumerate() {
+                    close(out[k], reference[j], 1e-12)?;
+                }
+            }
+
+            // column norms
+            let mut norms = vec![0.0; pr.p];
+            design.col_sq_norms_threads(&mut norms, pr.threads);
+            for j in 0..pr.p {
+                let expect: f64 = match &design {
+                    Design::Dense(m) => m.col(j).iter().map(|v| v * v).sum(),
+                    Design::Sparse(m) => {
+                        let (_, vals) = m.col(j);
+                        vals.iter().map(|v| v * v).sum()
+                    }
+                };
+                close(norms[j], expect, 1e-12)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Parallel `normalize_cols` preserves the serial semantics: returned
+/// scales match and every nonzero column lands on the target norm.
+#[test]
+fn prop_parallel_normalize_cols_hits_target() {
+    check(
+        13,
+        20,
+        |rng: &mut Rng| (1 + rng.below(30), 1 + rng.below(35), rng.next_u64()),
+        |&(n, p, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            // a zero column when p allows it (edge case: left untouched)
+            let zero_col = if p > 1 { Some(p - 1) } else { None };
+            let data: Vec<f64> = (0..n * p)
+                .map(|k| if Some(k / n) == zero_col { 0.0 } else { rng.normal() })
+                .collect();
+            let mut design: Design =
+                skglm::linalg::DenseMatrix::from_col_major(n, p, data).into();
+            let target = (n as f64).sqrt();
+            let scales = design.normalize_cols(target);
+            ensure(scales.len() == p, "scales length")?;
+            let norms = design.col_sq_norms();
+            for j in 0..p {
+                if Some(j) == zero_col {
+                    close(scales[j], 1.0, 1e-12)?;
+                    close(norms[j], 0.0, 1e-12)?;
+                } else {
+                    close(norms[j], target * target, 1e-9)?;
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -13,6 +13,12 @@ cargo clippy --workspace --all-targets -- -D warnings
 echo "==> cargo test -q"
 cargo test -q --workspace
 
+echo "==> cargo bench --no-run (benches are compile-gated)"
+cargo bench --no-run --workspace
+
+echo "==> kernel bench smoke (writes BENCH_kernels.json)"
+cargo run --release -p skglm --bin skglm -- exp kernels
+
 echo "==> cargo doc --no-deps"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace
 
