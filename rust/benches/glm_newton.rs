@@ -1,0 +1,23 @@
+//! Bench target for the prox-Newton GLM subsystem: prox-Newton vs OWL-QN
+//! on ℓ1-Poisson/probit, same grid as `skglm exp glms` (smoke scale by
+//! default; pass `--full` for the full n/p grid). Results also land in
+//! `results/glms/BENCH_glms.json`.
+
+use skglm::bench::figures::Scale;
+use skglm::bench::glm_bench::run_glms;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Smoke };
+    match run_glms(scale) {
+        Ok(paths) => {
+            for p in paths {
+                println!("wrote {}", p.display());
+            }
+        }
+        Err(e) => {
+            eprintln!("glm bench failed: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -641,6 +641,7 @@ pub fn run_experiment(name: &str, scale: Scale) -> Result<Vec<PathBuf>> {
         "table2" => run_table2(scale),
         "pathsched" => crate::bench::path_bench::run_pathsched(scale),
         "kernels" => crate::bench::kernel_bench::run_kernels(scale),
+        "glms" => crate::bench::glm_bench::run_glms(scale),
         "all" => {
             let mut out = Vec::new();
             for exp in ALL_EXPERIMENTS {
@@ -655,7 +656,7 @@ pub fn run_experiment(name: &str, scale: Scale) -> Result<Vec<PathBuf>> {
 
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table1",
-    "table2", "pathsched", "kernels",
+    "table2", "pathsched", "kernels", "glms",
 ];
 
 #[cfg(test)]

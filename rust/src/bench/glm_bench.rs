@@ -1,0 +1,249 @@
+//! Bench scenario `glms`: the prox-Newton GLM subsystem measured against
+//! the OWL-QN (orthant-wise L-BFGS) baseline on ℓ1-Poisson and ℓ1-probit
+//! problems across n/p/density grids.
+//!
+//! Per workload × λ the runner records, for each solver, the wall time to
+//! its own stopping criterion, the final objective, and the relative
+//! objective gap to the best of the two — the acceptance bar is
+//! `rel_gap ≤ 1e-6` on every grid point (both solvers target the same
+//! convex optimum). Results land in `results/glms/` and — the
+//! perf-trajectory anchor — `BENCH_glms.json` at the repo root (skipped
+//! when `SKGLM_RESULTS` redirects outputs, e.g. under `cargo test`).
+
+use crate::bench::figures::Scale;
+use crate::bench::kernel_bench::time_it;
+use crate::bench::report::{ensure_dir, results_dir, write_markdown};
+use crate::data::{
+    poisson_correlated, probit_correlated, sparse, with_poisson_targets, with_probit_targets,
+    CorrelatedSpec, Dataset, SparseSpec,
+};
+use crate::datafit::{Datafit, Poisson, Probit};
+use crate::penalty::L1;
+use crate::solver::baselines::owlqn::solve_owlqn;
+use crate::solver::{glm_lambda_max, solve_prox_newton, SolverOpts};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// One solved (workload, λ, solver) grid point.
+#[derive(Clone, Debug)]
+pub struct GlmBenchRow {
+    /// `poisson` | `probit`
+    pub model: String,
+    /// workload shape, e.g. `200x400`
+    pub shape: String,
+    /// λ / λ_max
+    pub lambda_ratio: f64,
+    /// `prox_newton` | `owlqn`
+    pub solver: String,
+    /// median wall time (ms)
+    pub millis: f64,
+    pub objective: f64,
+    /// (objective − best objective across solvers) / |best|
+    pub rel_gap: f64,
+    pub support_size: usize,
+    /// outer iterations (prox-Newton) or L-BFGS iterations
+    pub iters: usize,
+}
+
+fn run_model<D: Datafit + Default>(
+    model: &str,
+    shape: &str,
+    ds: &Dataset,
+    lam_ratios: &[f64],
+    warmup: usize,
+    reps: usize,
+    rows: &mut Vec<GlmBenchRow>,
+) {
+    let shape = shape.to_string();
+    let lam_max = glm_lambda_max(&D::default(), &ds.design, &ds.y);
+    for &ratio in lam_ratios {
+        let lam = lam_max * ratio;
+        let opts = SolverOpts::default().with_tol(1e-9);
+
+        let mut pn_res = None;
+        let pn_secs = time_it(warmup, reps, || {
+            let mut f = D::default();
+            pn_res =
+                Some(solve_prox_newton(&ds.design, &ds.y, &mut f, &L1::new(lam), &opts, None));
+        });
+        let pn = pn_res.expect("timed at least once");
+
+        let mut owl_res = None;
+        let owl_secs = time_it(warmup, reps, || {
+            let mut f = D::default();
+            owl_res = Some(solve_owlqn(&ds.design, &ds.y, &mut f, lam, 10, 5000, 1e-9));
+        });
+        let owl = owl_res.expect("timed at least once");
+
+        let best = pn.objective.min(owl.objective);
+        let denom = best.abs().max(1e-12);
+        rows.push(GlmBenchRow {
+            model: model.to_string(),
+            shape: shape.clone(),
+            lambda_ratio: ratio,
+            solver: "prox_newton".to_string(),
+            millis: pn_secs * 1e3,
+            objective: pn.objective,
+            rel_gap: (pn.objective - best) / denom,
+            support_size: pn.support().len(),
+            iters: pn.n_outer,
+        });
+        rows.push(GlmBenchRow {
+            model: model.to_string(),
+            shape: shape.clone(),
+            lambda_ratio: ratio,
+            solver: "owlqn".to_string(),
+            millis: owl_secs * 1e3,
+            objective: owl.objective,
+            rel_gap: (owl.objective - best) / denom,
+            support_size: owl.beta.iter().filter(|&&b| b != 0.0).count(),
+            iters: owl.iters,
+        });
+    }
+}
+
+/// Run the GLM grid and persist `BENCH_glms.json`.
+pub fn run_glms(scale: Scale) -> Result<Vec<PathBuf>> {
+    // dense n×p grid + sparse (n, p, density) grid + λ-ratio grid
+    #[allow(clippy::type_complexity)]
+    let (dense_shapes, sparse_shapes, lam_ratios, warmup, reps): (
+        Vec<(usize, usize)>,
+        Vec<(usize, usize, f64)>,
+        Vec<f64>,
+        usize,
+        usize,
+    ) = match scale {
+        Scale::Smoke => (vec![(100, 200)], vec![(300, 1000, 5e-3)], vec![0.1], 1, 3),
+        Scale::Full => (
+            vec![(200, 400), (500, 2000), (1000, 4000)],
+            vec![(2000, 20_000, 1e-3), (2000, 20_000, 1e-2)],
+            vec![0.1, 0.02],
+            2,
+            5,
+        ),
+    };
+
+    let mut rows: Vec<GlmBenchRow> = Vec::new();
+    for &(n, p) in &dense_shapes {
+        let spec = CorrelatedSpec { n, p, rho: 0.4, nnz: (p / 40).max(2), snr: 0.0 };
+        let shape = format!("{n}x{p}");
+        let pois = poisson_correlated(spec, 42);
+        run_model::<Poisson>("poisson", &shape, &pois, &lam_ratios, warmup, reps, &mut rows);
+        let prob = probit_correlated(spec, 42);
+        run_model::<Probit>("probit", &shape, &prob, &lam_ratios, warmup, reps, &mut rows);
+    }
+    for &(n, p, density) in &sparse_shapes {
+        let spec = SparseSpec { n, p, density, support_frac: 0.005, snr: 5.0, binary: false };
+        let shape = format!("{n}x{p}@{density:e}");
+        let base = sparse("glms", spec, 7);
+        let pois = with_poisson_targets(base.clone(), 7);
+        run_model::<Poisson>("poisson", &shape, &pois, &lam_ratios, warmup, reps, &mut rows);
+        let prob = with_probit_targets(base, 7);
+        run_model::<Probit>("probit", &shape, &prob, &lam_ratios, warmup, reps, &mut rows);
+    }
+
+    // ---- report ----
+    let mut t = Table::new(&[
+        "model", "shape", "lambda_ratio", "solver", "median_ms", "objective", "rel_gap",
+        "support", "iters",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.model.clone(),
+            r.shape.clone(),
+            format!("{:.3}", r.lambda_ratio),
+            r.solver.clone(),
+            format!("{:.2}", r.millis),
+            format!("{:.9e}", r.objective),
+            format!("{:.2e}", r.rel_gap),
+            r.support_size.to_string(),
+            r.iters.to_string(),
+        ]);
+    }
+    let md = write_markdown("glms", "prox_newton_vs_owlqn", &t)?;
+
+    let jrows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj()
+                .with("model", r.model.as_str())
+                .with("shape", r.shape.as_str())
+                .with("lambda_ratio", r.lambda_ratio)
+                .with("solver", r.solver.as_str())
+                .with("median_ms", r.millis)
+                .with("objective", r.objective)
+                .with("rel_gap", r.rel_gap)
+                .with("support", r.support_size)
+                .with("iters", r.iters)
+        })
+        .collect();
+    let json = Json::obj()
+        .with("bench", "glms")
+        .with(
+            "scale",
+            match scale {
+                Scale::Smoke => "smoke",
+                Scale::Full => "full",
+            },
+        )
+        .with("agreement_bar", 1e-6)
+        .with("rows", Json::Arr(jrows));
+
+    let dir = results_dir().join("glms");
+    ensure_dir(&dir)?;
+    let json_path = dir.join("BENCH_glms.json");
+    std::fs::write(&json_path, json.render())?;
+    let mut outputs = vec![json_path, md];
+    if std::env::var_os("SKGLM_RESULTS").is_none() {
+        let root = PathBuf::from("BENCH_glms.json");
+        std::fs::write(&root, json.render())?;
+        outputs.push(root);
+    }
+
+    // headline: worst cross-solver objective gap + speedup
+    let worst_gap = rows.iter().map(|r| r.rel_gap).fold(0.0f64, f64::max);
+    eprintln!("[glms] worst cross-solver relative objective gap: {worst_gap:.2e} (bar 1e-6)");
+    for model in ["poisson", "probit"] {
+        let (mut pn_ms, mut owl_ms) = (0.0, 0.0);
+        for r in rows.iter().filter(|r| r.model == model) {
+            match r.solver.as_str() {
+                "prox_newton" => pn_ms += r.millis,
+                _ => owl_ms += r.millis,
+            }
+        }
+        if pn_ms > 0.0 {
+            eprintln!(
+                "[glms] {model}: prox-Newton {pn_ms:.1}ms total vs OWL-QN {owl_ms:.1}ms ({:.2}x)",
+                owl_ms / pn_ms
+            );
+        }
+    }
+    Ok(outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_grid_runs_meets_agreement_bar_and_persists_json() {
+        let _guard = crate::bench::report::results_env_lock();
+        let tmp = std::env::temp_dir().join(format!("skglm_glms_{}", std::process::id()));
+        std::env::set_var("SKGLM_RESULTS", &tmp);
+        let out = run_glms(Scale::Smoke).unwrap();
+        assert!(!out.is_empty());
+        for p in &out {
+            assert!(p.exists(), "{}", p.display());
+        }
+        let raw = std::fs::read_to_string(&out[0]).unwrap();
+        assert!(raw.contains("\"bench\":\"glms\""));
+        assert!(raw.contains("poisson"));
+        assert!(raw.contains("probit"));
+        assert!(raw.contains("prox_newton"));
+        assert!(raw.contains("owlqn"));
+        std::env::remove_var("SKGLM_RESULTS");
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

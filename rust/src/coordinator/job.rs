@@ -10,12 +10,27 @@
 //! implementation — one monomorphized `solve` call behind a trait object
 //! — and [`specs`] provides constructors for the paper's model zoo.
 
-use crate::datafit::{Datafit, Logistic, Quadratic};
+use crate::datafit::{Datafit, Logistic, Poisson, Probit, Quadratic};
 use crate::estimators::linear::quadratic_lambda_max;
 use crate::linalg::Design;
 use crate::penalty::{L1L2, Lq, Mcp, Penalty, Scad, L1};
-use crate::solver::{solve_continued, ContinuationState, FitResult, SolverOpts};
+use crate::solver::{
+    glm_lambda_max, solve_continued, solve_prox_newton_continued, ContinuationState, FitResult,
+    SolverOpts,
+};
 use std::sync::Arc;
+
+/// Which outer solver drives a [`GlmSpec`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverTopology {
+    /// Direct working-set CD (Algorithm 1) — requires precomputable
+    /// per-coordinate Lipschitz constants.
+    DirectCd,
+    /// Prox-Newton outer × CD inner ([`crate::solver::prox_newton`]) —
+    /// curvature-adaptive; the only valid topology for datafits with
+    /// unbounded curvature (Poisson).
+    ProxNewton,
+}
 
 /// An executable fit specification: everything the scheduler needs to run
 /// one (datafit, penalty, λ) problem on a worker, including along a
@@ -84,6 +99,7 @@ pub struct GlmSpec<D: Datafit + 'static, P: Penalty + 'static> {
     family: &'static str,
     lambda: f64,
     normalize: bool,
+    topology: SolverTopology,
     make: MakePenalty<P>,
     lambda_max: LambdaMax,
 }
@@ -100,7 +116,23 @@ impl<D: Datafit + 'static, P: Penalty + 'static> GlmSpec<D, P> {
         lambda_max: LambdaMax,
     ) -> Self {
         let penalty = make(lambda);
-        Self { datafit, penalty, family, lambda, normalize, make, lambda_max }
+        Self {
+            datafit,
+            penalty,
+            family,
+            lambda,
+            normalize,
+            topology: SolverTopology::DirectCd,
+            make,
+            lambda_max,
+        }
+    }
+
+    /// Route this spec through the prox-Newton outer solver (the datafit
+    /// must implement the raw-curvature protocol).
+    pub fn with_prox_newton(mut self) -> Self {
+        self.topology = SolverTopology::ProxNewton;
+        self
     }
 
     /// Box into a trait object (scheduler job form).
@@ -145,13 +177,19 @@ impl<D: Datafit + 'static, P: Penalty + 'static> FitSpec for GlmSpec<D, P> {
             family: self.family,
             lambda,
             normalize: self.normalize,
+            topology: self.topology,
             make: Arc::clone(&self.make),
             lambda_max: Arc::clone(&self.lambda_max),
         })
     }
 
     fn supports_gap_screening(&self) -> bool {
-        self.datafit_name() == "quadratic" && self.family == "l1"
+        // the screened-lasso fast path IS a direct-CD solve: a quadratic
+        // × ℓ1 spec explicitly routed to prox-Newton must not be hijacked
+        // by it, or topology comparisons silently measure direct CD
+        self.topology == SolverTopology::DirectCd
+            && self.datafit_name() == "quadratic"
+            && self.family == "l1"
     }
 
     fn solve(
@@ -164,17 +202,31 @@ impl<D: Datafit + 'static, P: Penalty + 'static> FitSpec for GlmSpec<D, P> {
         frozen: Option<&[bool]>,
     ) -> FitResult {
         let mut datafit = self.datafit.clone();
-        solve_continued(
-            design,
-            y,
-            &mut datafit,
-            &self.penalty,
-            opts,
-            None,
-            state,
-            frozen,
-            col_sq_norms,
-        )
+        match self.topology {
+            SolverTopology::DirectCd => solve_continued(
+                design,
+                y,
+                &mut datafit,
+                &self.penalty,
+                opts,
+                None,
+                state,
+                frozen,
+                col_sq_norms,
+            ),
+            // prox-Newton has no screening support: `frozen` certificates
+            // only ever come from specs with `supports_gap_screening()`,
+            // which no prox-Newton spec reports
+            SolverTopology::ProxNewton => solve_prox_newton_continued(
+                design,
+                y,
+                &mut datafit,
+                &self.penalty,
+                opts,
+                state,
+                col_sq_norms,
+            ),
+        }
     }
 }
 
@@ -232,6 +284,29 @@ pub mod specs {
         });
         GlmSpec::new(Logistic::new(), "l1", lambda, false, make, lmax).boxed()
     }
+
+    /// ℓ1-regularised **Poisson** regression (count targets, `exp` link).
+    /// Unbounded curvature ⇒ routed through the prox-Newton topology.
+    pub fn poisson_l1(lambda: f64) -> Box<dyn FitSpec> {
+        let make: MakePenalty<L1> = Arc::new(L1::new);
+        let lmax: LambdaMax =
+            Arc::new(|d: &Design, y: &[f64]| glm_lambda_max(&Poisson::new(), d, y));
+        GlmSpec::new(Poisson::new(), "l1", lambda, false, make, lmax)
+            .with_prox_newton()
+            .boxed()
+    }
+
+    /// ℓ1-regularised **probit** regression (labels ±1), prox-Newton
+    /// topology (its bounded curvature also admits direct CD; Newton is
+    /// the faster default for well-conditioned problems).
+    pub fn probit_l1(lambda: f64) -> Box<dyn FitSpec> {
+        let make: MakePenalty<L1> = Arc::new(L1::new);
+        let lmax: LambdaMax =
+            Arc::new(|d: &Design, y: &[f64]| glm_lambda_max(&Probit::new(), d, y));
+        GlmSpec::new(Probit::new(), "l1", lambda, false, make, lmax)
+            .with_prox_newton()
+            .boxed()
+    }
 }
 
 #[cfg(test)]
@@ -256,6 +331,51 @@ mod tests {
         let e = specs::elastic_net(0.1, 0.5);
         assert!(e.is_convex());
         assert!(!e.supports_gap_screening());
+
+        let po = specs::poisson_l1(0.1);
+        assert!(po.is_convex());
+        assert!(!po.normalize_design());
+        assert!(!po.supports_gap_screening());
+        assert_eq!(po.datafit_name(), "poisson");
+
+        let pr = specs::probit_l1(0.1);
+        assert_eq!(pr.datafit_name(), "probit");
+        assert!(!pr.supports_gap_screening());
+    }
+
+    #[test]
+    fn prox_newton_topology_disables_gap_screening() {
+        // regression: the screened-lasso fast path is a direct-CD solve;
+        // it must not hijack a quadratic×ℓ1 spec routed to prox-Newton
+        let make: MakePenalty<L1> = Arc::new(L1::new);
+        let lmax: LambdaMax = Arc::new(|d: &Design, y: &[f64]| quadratic_lambda_max(d, y));
+        let spec =
+            GlmSpec::new(Quadratic::new(), "l1", 0.1, false, make, lmax).with_prox_newton();
+        assert!(!spec.supports_gap_screening());
+        assert!(spec.at_lambda(0.05).as_ref().label().contains("quadratic"));
+        assert!(!spec.at_lambda(0.05).supports_gap_screening(), "topology lost by at_lambda");
+    }
+
+    #[test]
+    fn poisson_spec_solves_through_the_trait_object() {
+        let ds = crate::data::poisson_correlated(
+            CorrelatedSpec { n: 80, p: 60, rho: 0.4, nnz: 5, snr: 0.0 },
+            3,
+        );
+        let lam_max = specs::poisson_l1(1.0).lambda_max(&ds.design, &ds.y);
+        let spec = specs::poisson_l1(lam_max / 10.0);
+        let mut state = ContinuationState::default();
+        let fit = spec.solve(
+            &ds.design,
+            &ds.y,
+            &SolverOpts::default().with_tol(1e-8),
+            &mut state,
+            None,
+            None,
+        );
+        assert!(fit.converged, "kkt = {}", fit.kkt);
+        assert!(!fit.support().is_empty());
+        assert!(state.beta.is_some());
     }
 
     #[test]

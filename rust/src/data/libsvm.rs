@@ -41,7 +41,10 @@ pub fn parse_reader<R: BufRead>(reader: R, min_features: usize) -> Result<Libsvm
             .with_context(|| format!("line {}: bad label {label:?}", lineno + 1))?;
         let row = y.len();
         y.push(label);
-        let mut prev_idx = 0usize;
+        // real exporters (e.g. hash-bucketed featurizers) emit pairs out
+        // of order, so collect and sort per row; a *duplicate* index is
+        // still a genuine data error (ambiguous value) and is rejected
+        let mut pairs: Vec<(usize, f64)> = Vec::new();
         for tok in parts {
             let (idx, val) = tok
                 .split_once(':')
@@ -52,13 +55,18 @@ pub fn parse_reader<R: BufRead>(reader: R, min_features: usize) -> Result<Libsvm
             if idx == 0 {
                 bail!("line {}: libsvm indices are 1-based, got 0", lineno + 1);
             }
-            if idx <= prev_idx {
-                bail!("line {}: indices not strictly increasing", lineno + 1);
-            }
-            prev_idx = idx;
             let val: f64 = val
                 .parse()
                 .with_context(|| format!("line {}: bad value {val:?}", lineno + 1))?;
+            pairs.push((idx, val));
+        }
+        pairs.sort_unstable_by_key(|&(idx, _)| idx);
+        for w in pairs.windows(2) {
+            if w[0].0 == w[1].0 {
+                bail!("line {}: duplicate feature index {}", lineno + 1, w[0].0);
+            }
+        }
+        for (idx, val) in pairs {
             p = p.max(idx);
             if val != 0.0 {
                 triplets.push((row, idx - 1, val));
@@ -135,8 +143,23 @@ mod tests {
     }
 
     #[test]
-    fn rejects_unsorted_indices() {
-        assert!(parse_reader(Cursor::new("1 3:1 2:1\n"), 0).is_err());
+    fn accepts_out_of_order_indices() {
+        // real exported files carry unsorted rows; values must land on
+        // the right columns after the per-row sort
+        let d = parse_reader(Cursor::new("1 3:1.5 1:0.5\n-1 2:2.0 1:1.0\n"), 0).unwrap();
+        assert_eq!(d.x.ncols(), 3);
+        assert_eq!(d.x.col_dot(0, &[1.0, 0.0]), 0.5);
+        assert_eq!(d.x.col_dot(2, &[1.0, 0.0]), 1.5);
+        assert_eq!(d.x.col_dot(0, &[0.0, 1.0]), 1.0);
+        assert_eq!(d.x.col_dot(1, &[0.0, 1.0]), 2.0);
+    }
+
+    #[test]
+    fn rejects_duplicate_indices() {
+        let err = parse_reader(Cursor::new("1 2:1 2:3\n"), 0).unwrap_err();
+        assert!(format!("{err}").contains("duplicate feature index 2"), "{err}");
+        // duplicates are caught even when they arrive out of order
+        assert!(parse_reader(Cursor::new("1 3:1 1:2 3:4\n"), 0).is_err());
     }
 
     #[test]

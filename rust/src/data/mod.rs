@@ -5,4 +5,7 @@ pub mod libsvm;
 pub mod meeg;
 pub mod synthetic;
 
-pub use synthetic::{correlated, paper_dataset, paper_dataset_small, sparse, CorrelatedSpec, Dataset, SparseSpec};
+pub use synthetic::{
+    correlated, paper_dataset, paper_dataset_small, poisson_correlated, probit_correlated,
+    sparse, with_poisson_targets, with_probit_targets, CorrelatedSpec, Dataset, SparseSpec,
+};

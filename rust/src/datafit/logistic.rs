@@ -105,6 +105,25 @@ impl Datafit for Logistic {
     fn name(&self) -> &'static str {
         "logistic"
     }
+
+    fn supports_prox_newton(&self) -> bool {
+        true
+    }
+
+    /// `F_i(s) = log(1+exp(−y_i s))/n` ⇒ `F_i' = −y_i σ(−y_i s)/n`.
+    fn raw_grad(&self, y: &[f64], state: &[f64], out: &mut [f64]) {
+        for ((o, &xw), &yi) in out.iter_mut().zip(state.iter()).zip(y.iter()) {
+            *o = -yi * sigmoid(-yi * xw) * self.inv_n;
+        }
+    }
+
+    /// `F_i'' = σ(s)(1−σ(s))/n` (independent of the label sign).
+    fn raw_hessian(&self, _y: &[f64], state: &[f64], out: &mut [f64]) {
+        for (o, &xw) in out.iter_mut().zip(state.iter()) {
+            let s = sigmoid(xw);
+            *o = s * (1.0 - s) * self.inv_n;
+        }
+    }
 }
 
 #[cfg(test)]

@@ -15,11 +15,15 @@
 pub mod huber;
 pub mod logistic;
 pub mod multitask;
+pub mod poisson;
+pub mod probit;
 pub mod quadratic;
 pub mod svc;
 
 pub use huber::Huber;
 pub use logistic::Logistic;
+pub use poisson::Poisson;
+pub use probit::Probit;
 pub use quadratic::Quadratic;
 pub use svc::QuadraticSvc;
 
@@ -102,5 +106,40 @@ pub trait Datafit: Clone + Send + Sync {
     /// upper bound is fine. Default: Σ_j L_j (loose but safe).
     fn global_lipschitz(&self, _design: &Design) -> f64 {
         self.lipschitz().iter().sum()
+    }
+
+    // ---- raw (per-sample) curvature: the prox-Newton protocol ----------
+    //
+    // Writing `f(β) = F(Xβ)` with separable `F(s) = Σ_i F_i(s_i)`, the
+    // outer prox-Newton solver (`crate::solver::prox_newton`) needs the
+    // per-sample derivatives `F_i'` and `F_i''` at the current scores to
+    // assemble its working-set quadratic subproblem. Datafits with
+    // precomputable coordinate Lipschitz bounds don't need these to run
+    // the direct-CD path; datafits with *unbounded* curvature (Poisson)
+    // can ONLY run through prox-Newton, which is why the protocol lives
+    // on the trait rather than on a separate one — a fit spec picks the
+    // solver topology per model (see `coordinator::job::SolverTopology`).
+
+    /// Whether [`Datafit::raw_grad`]/[`Datafit::raw_hessian`] are
+    /// implemented (i.e. the prox-Newton solver can drive this datafit).
+    fn supports_prox_newton(&self) -> bool {
+        false
+    }
+
+    /// Per-sample gradient `out[i] = ∂F/∂s_i` at the current state (which
+    /// must determine the scores `s = Xβ`). Includes any `1/n` factor so
+    /// that `Xᵀ·raw_grad = ∇f(β)`.
+    fn raw_grad(&self, y: &[f64], state: &[f64], out: &mut [f64]) {
+        let _ = (y, state, out);
+        unimplemented!("datafit {:?} does not implement raw_grad (prox-Newton)", self.name());
+    }
+
+    /// Per-sample curvature `out[i] = ∂²F/∂s_i²` at the current state,
+    /// same normalization as [`Datafit::raw_grad`]. Implementations must
+    /// return nonnegative values (clamped away from pathological zeros
+    /// where needed — probit does).
+    fn raw_hessian(&self, y: &[f64], state: &[f64], out: &mut [f64]) {
+        let _ = (y, state, out);
+        unimplemented!("datafit {:?} does not implement raw_hessian (prox-Newton)", self.name());
     }
 }

@@ -1,0 +1,223 @@
+//! Poisson datafit `f(β) = (1/n) Σ_i [exp((Xβ)_i) − y_i (Xβ)_i]` — the
+//! negative Poisson log-likelihood with `exp` inverse link (the constant
+//! `Σ log y_i!` term is dropped), for count targets `y_i ≥ 0`.
+//!
+//! The per-sample curvature `exp(s_i)/n` is **unbounded** in β, so no
+//! precomputable coordinate Lipschitz constant exists and the direct-CD
+//! solver cannot drive this datafit — it is the motivating workload for
+//! the prox-Newton outer solver ([`crate::solver::prox_newton`]), which
+//! rebuilds the curvature at every outer iteration. The `lipschitz()`
+//! values reported here are the *local* bounds at β = 0 (`‖X_j‖²/n`),
+//! kept only so diagnostics and λ-grid code paths that expect the field
+//! don't break; they are not a valid global majorization.
+//!
+//! State = `Xβ` (the linear predictor / raw scores).
+
+use super::Datafit;
+use crate::linalg::Design;
+
+#[derive(Clone, Debug, Default)]
+pub struct Poisson {
+    lipschitz: Vec<f64>,
+    inv_n: f64,
+}
+
+impl Poisson {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Overflow guard on the linear predictor: `exp(700)` is the f64 edge;
+/// beyond ~30 the line search has already rejected the step on any sane
+/// problem, but a diverging trial must yield a large *finite* objective
+/// so the backtracking comparison stays ordered.
+#[inline]
+fn safe_exp(s: f64) -> f64 {
+    s.min(700.0).exp()
+}
+
+impl Datafit for Poisson {
+    fn init(&mut self, design: &Design, y: &[f64]) {
+        assert_eq!(design.nrows(), y.len());
+        for &yi in y {
+            assert!(
+                yi >= 0.0 && yi.fract() == 0.0,
+                "poisson targets must be nonnegative counts, got {yi}"
+            );
+        }
+        let n = design.nrows() as f64;
+        self.inv_n = 1.0 / n;
+        // local curvature at β = 0: exp(0) = 1 ⇒ L_j = ‖X_j‖²/n. NOT a
+        // global bound (see module docs) — prox-Newton never uses it.
+        self.lipschitz = design.col_sq_norms().iter().map(|s| s / n).collect();
+    }
+
+    fn lipschitz(&self) -> &[f64] {
+        &self.lipschitz
+    }
+
+    /// State = Xβ.
+    fn init_state(&self, design: &Design, _y: &[f64], beta: &[f64]) -> Vec<f64> {
+        let mut xw = vec![0.0; design.nrows()];
+        design.matvec(beta, &mut xw);
+        xw
+    }
+
+    #[inline]
+    fn update_state(&self, design: &Design, j: usize, delta: f64, state: &mut [f64]) {
+        design.col_axpy(j, delta, state);
+    }
+
+    fn value(&self, y: &[f64], _beta: &[f64], state: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for (&xw, &yi) in state.iter().zip(y.iter()) {
+            s += safe_exp(xw) - yi * xw;
+        }
+        s * self.inv_n
+    }
+
+    #[inline]
+    fn grad_j(&self, design: &Design, y: &[f64], state: &[f64], _beta: &[f64], j: usize) -> f64 {
+        let inv_n = self.inv_n;
+        design.col_dot_map(j, state, |i, xw_i| (safe_exp(xw_i) - y[i]) * inv_n)
+    }
+
+    fn grad_full(
+        &self,
+        design: &Design,
+        y: &[f64],
+        state: &[f64],
+        _beta: &[f64],
+        out: &mut [f64],
+    ) {
+        // fused pass: materialise the raw gradient once (O(n)), then Xᵀw
+        let mut w = vec![0.0; state.len()];
+        self.raw_grad(y, state, &mut w);
+        design.matvec_t(&w, out);
+    }
+
+    fn name(&self) -> &'static str {
+        "poisson"
+    }
+
+    fn supports_prox_newton(&self) -> bool {
+        true
+    }
+
+    /// `F_i'(s) = (exp(s) − y_i)/n`.
+    fn raw_grad(&self, y: &[f64], state: &[f64], out: &mut [f64]) {
+        for ((o, &xw), &yi) in out.iter_mut().zip(state.iter()).zip(y.iter()) {
+            *o = (safe_exp(xw) - yi) * self.inv_n;
+        }
+    }
+
+    /// `F_i''(s) = exp(s)/n` — the unbounded curvature.
+    fn raw_hessian(&self, _y: &[f64], state: &[f64], out: &mut [f64]) {
+        for (o, &xw) in out.iter_mut().zip(state.iter()) {
+            *o = safe_exp(xw) * self.inv_n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMatrix;
+
+    fn setup() -> (Design, Vec<f64>, Poisson) {
+        let x = DenseMatrix::from_rows(&[
+            vec![0.5, 1.0],
+            vec![-0.8, 0.3],
+            vec![0.2, -0.6],
+            vec![1.1, 0.4],
+        ]);
+        let y = vec![2.0, 0.0, 1.0, 3.0];
+        let d: Design = x.into();
+        let mut f = Poisson::new();
+        f.init(&d, &y);
+        (d, y, f)
+    }
+
+    #[test]
+    fn value_at_zero_is_one_minus_mean_times_zero() {
+        // f(0) = (1/n) Σ (1 − 0) = 1
+        let (d, y, f) = setup();
+        let beta = vec![0.0, 0.0];
+        let state = f.init_state(&d, &y, &beta);
+        assert!((f.value(&y, &beta, &state) - 1.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let (d, y, f) = setup();
+        let beta = vec![0.3, -0.4];
+        let state = f.init_state(&d, &y, &beta);
+        let eps = 1e-6;
+        for j in 0..2 {
+            let mut bp = beta.clone();
+            bp[j] += eps;
+            let sp = f.init_state(&d, &y, &bp);
+            let mut bm = beta.clone();
+            bm[j] -= eps;
+            let sm = f.init_state(&d, &y, &bm);
+            let fd = (f.value(&y, &bp, &sp) - f.value(&y, &bm, &sm)) / (2.0 * eps);
+            let an = f.grad_j(&d, &y, &state, &beta, j);
+            assert!((fd - an).abs() < 1e-6, "j={j}: fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn raw_grad_assembles_full_gradient() {
+        let (d, y, f) = setup();
+        let beta = vec![0.3, -0.4];
+        let state = f.init_state(&d, &y, &beta);
+        let mut w = vec![0.0; 4];
+        f.raw_grad(&y, &state, &mut w);
+        let mut g = vec![0.0; 2];
+        d.matvec_t(&w, &mut g);
+        for j in 0..2 {
+            let gj = f.grad_j(&d, &y, &state, &beta, j);
+            assert!((g[j] - gj).abs() < 1e-12, "j={j}: {} vs {gj}", g[j]);
+        }
+    }
+
+    #[test]
+    fn raw_hessian_matches_grad_finite_differences() {
+        let (d, y, f) = setup();
+        let beta = vec![0.2, 0.1];
+        let state = f.init_state(&d, &y, &beta);
+        let eps = 1e-6;
+        let mut h = vec![0.0; 4];
+        f.raw_hessian(&y, &state, &mut h);
+        // F'' at s_i by central differences of raw_grad
+        for i in 0..4 {
+            let mut sp = state.clone();
+            sp[i] += eps;
+            let mut sm = state.clone();
+            sm[i] -= eps;
+            let mut wp = vec![0.0; 4];
+            let mut wm = vec![0.0; 4];
+            f.raw_grad(&y, &sp, &mut wp);
+            f.raw_grad(&y, &sm, &mut wm);
+            let fd = (wp[i] - wm[i]) / (2.0 * eps);
+            assert!((fd - h[i]).abs() < 1e-6, "i={i}: fd={fd} an={}", h[i]);
+        }
+    }
+
+    #[test]
+    fn diverging_scores_stay_finite() {
+        let (d, y, f) = setup();
+        let state = vec![800.0, 800.0, 800.0, 800.0];
+        let v = f.value(&y, &vec![0.0; 2], &state);
+        assert!(v.is_finite(), "overflow guard failed: {v}");
+    }
+
+    #[test]
+    #[should_panic(expected = "nonnegative counts")]
+    fn rejects_negative_targets() {
+        let x = DenseMatrix::from_rows(&[vec![1.0]]);
+        let mut f = Poisson::new();
+        f.init(&x.into(), &[-1.0]);
+    }
+}

@@ -1,0 +1,308 @@
+//! Probit datafit `f(β) = −(1/n) Σ_i log Φ(y_i (Xβ)_i)` with labels
+//! y ∈ {−1, +1} — probit regression, the Gaussian-link sibling of
+//! logistic regression.
+//!
+//! Unlike Poisson, the probit curvature is globally bounded by 1 (the
+//! inverse-Mills-ratio identity `λ(z)(z + λ(z)) ∈ (0, 1)`), so both the
+//! direct-CD solver (with `L_j = ‖X_j‖²/n`) and the prox-Newton solver
+//! can drive it — the agreement between the two topologies is one of the
+//! GLM integration tests.
+//!
+//! No `erf` in `std`: [`normal_cdf`] uses the non-alternating Taylor
+//! series of `erf` for small arguments and the Laplace continued
+//! fraction of `erfc` for the tail — both accurate to ~1e-15, and the
+//! continued fraction keeps the inverse Mills ratio `φ(z)/Φ(z)` stable
+//! down to z ≈ −37 (beyond which its asymptote `−z` takes over).
+//!
+//! State = `Xβ`.
+
+use super::Datafit;
+use crate::linalg::Design;
+
+#[derive(Clone, Debug, Default)]
+pub struct Probit {
+    lipschitz: Vec<f64>,
+    inv_n: f64,
+}
+
+impl Probit {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+const FRAC_1_SQRT_2PI: f64 = 0.398_942_280_401_432_7; // 1/√(2π)
+
+/// Standard normal density φ(z).
+#[inline]
+pub fn normal_pdf(z: f64) -> f64 {
+    FRAC_1_SQRT_2PI * (-0.5 * z * z).exp()
+}
+
+/// erf(x) for |x| ≤ 3 via the non-alternating series
+/// `erf(x) = (2x/√π) e^{−x²} Σ_{k≥0} (2x²)^k / (2k+1)!!` — all terms
+/// positive, no cancellation.
+fn erf_series(x: f64) -> f64 {
+    let two_x2 = 2.0 * x * x;
+    let mut term = 1.0f64;
+    let mut sum = 1.0f64;
+    let mut k = 1.0f64;
+    while term > 1e-18 * sum {
+        term *= two_x2 / (2.0 * k + 1.0);
+        sum += term;
+        k += 1.0;
+        if k > 300.0 {
+            break;
+        }
+    }
+    2.0 * x * (-x * x).exp() * sum / std::f64::consts::PI.sqrt()
+}
+
+/// erfc(x) for x ≥ 3 via the Laplace continued fraction
+/// `erfc(x) = e^{−x²}/√π · 1/(x + (1/2)/(x + 1/(x + (3/2)/(x + …))))`.
+fn erfc_cf(x: f64) -> f64 {
+    // 100 bottom-up levels: comfortably past double-precision convergence
+    // at the slowest point of the switch (x ≈ 3)
+    let mut f = 0.0f64;
+    for k in (1..=100).rev() {
+        f = (k as f64 / 2.0) / (x + f);
+    }
+    (-x * x).exp() / (std::f64::consts::PI.sqrt() * (x + f))
+}
+
+/// Standard normal CDF Φ(z), accurate over the whole double range
+/// (underflows to 0 below z ≈ −37.5, where [`mills_ratio`] switches to
+/// its asymptote).
+pub fn normal_cdf(z: f64) -> f64 {
+    let x = z / std::f64::consts::SQRT_2;
+    if x.abs() <= 3.0 {
+        0.5 * (1.0 + erf_series(x))
+    } else if x > 0.0 {
+        1.0 - 0.5 * erfc_cf(x)
+    } else {
+        0.5 * erfc_cf(-x)
+    }
+}
+
+/// log Φ(z), finite for all finite z (asymptotic expansion in the far
+/// left tail where Φ underflows).
+pub fn log_normal_cdf(z: f64) -> f64 {
+    if z < -36.0 {
+        // log Φ(z) ≈ −z²/2 − log(−z√(2π)) + log(1 − 1/z²)
+        -0.5 * z * z - (-z * (2.0 * std::f64::consts::PI).sqrt()).ln() + (-1.0 / (z * z)).ln_1p()
+    } else {
+        normal_cdf(z).ln()
+    }
+}
+
+/// Inverse Mills ratio `λ(z) = φ(z)/Φ(z)` — the probit per-sample
+/// gradient magnitude. Stable in the far left tail via the asymptote
+/// `λ(z) → −z · (1 + 1/z² + …)⁻¹ ≈ −z − 1/z`.
+pub fn mills_ratio(z: f64) -> f64 {
+    if z < -36.0 {
+        -z - 1.0 / z
+    } else {
+        normal_pdf(z) / normal_cdf(z)
+    }
+}
+
+impl Datafit for Probit {
+    fn init(&mut self, design: &Design, y: &[f64]) {
+        assert_eq!(design.nrows(), y.len());
+        for &yi in y {
+            assert!(yi == 1.0 || yi == -1.0, "probit labels must be ±1, got {yi}");
+        }
+        let n = design.nrows() as f64;
+        self.inv_n = 1.0 / n;
+        // curvature λ(z)(z+λ(z)) < 1 globally ⇒ L_j = ‖X_j‖²/n is a valid
+        // (if loose) coordinate bound — probit runs on either topology
+        self.lipschitz = design.col_sq_norms().iter().map(|s| s / n).collect();
+    }
+
+    fn lipschitz(&self) -> &[f64] {
+        &self.lipschitz
+    }
+
+    /// State = Xβ.
+    fn init_state(&self, design: &Design, _y: &[f64], beta: &[f64]) -> Vec<f64> {
+        let mut xw = vec![0.0; design.nrows()];
+        design.matvec(beta, &mut xw);
+        xw
+    }
+
+    #[inline]
+    fn update_state(&self, design: &Design, j: usize, delta: f64, state: &mut [f64]) {
+        design.col_axpy(j, delta, state);
+    }
+
+    fn value(&self, y: &[f64], _beta: &[f64], state: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for (&xw, &yi) in state.iter().zip(y.iter()) {
+            s -= log_normal_cdf(yi * xw);
+        }
+        s * self.inv_n
+    }
+
+    #[inline]
+    fn grad_j(&self, design: &Design, y: &[f64], state: &[f64], _beta: &[f64], j: usize) -> f64 {
+        let inv_n = self.inv_n;
+        design.col_dot_map(j, state, |i, xw_i| -y[i] * mills_ratio(y[i] * xw_i) * inv_n)
+    }
+
+    fn grad_full(
+        &self,
+        design: &Design,
+        y: &[f64],
+        state: &[f64],
+        _beta: &[f64],
+        out: &mut [f64],
+    ) {
+        let mut w = vec![0.0; state.len()];
+        self.raw_grad(y, state, &mut w);
+        design.matvec_t(&w, out);
+    }
+
+    fn name(&self) -> &'static str {
+        "probit"
+    }
+
+    fn supports_prox_newton(&self) -> bool {
+        true
+    }
+
+    /// `F_i'(s) = −y_i λ(y_i s)/n`.
+    fn raw_grad(&self, y: &[f64], state: &[f64], out: &mut [f64]) {
+        for ((o, &xw), &yi) in out.iter_mut().zip(state.iter()).zip(y.iter()) {
+            *o = -yi * mills_ratio(yi * xw) * self.inv_n;
+        }
+    }
+
+    /// `F_i''(s) = λ(z)(z + λ(z))/n` with `z = y_i s` — in `(0, 1/n)`,
+    /// clamped away from 0 so the Newton subproblem stays well-posed on
+    /// confidently-classified samples.
+    fn raw_hessian(&self, y: &[f64], state: &[f64], out: &mut [f64]) {
+        for ((o, &xw), &yi) in out.iter_mut().zip(state.iter()).zip(y.iter()) {
+            let z = yi * xw;
+            let lam = mills_ratio(z);
+            *o = (lam * (z + lam)).clamp(1e-10, 1.0) * self.inv_n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMatrix;
+
+    #[test]
+    fn normal_cdf_reference_values() {
+        // Φ(0) = 0.5, Φ(1.96) ≈ 0.9750021, symmetry, tails
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-15);
+        assert!((normal_cdf(1.96) - 0.975_002_104_851_780_4).abs() < 1e-12);
+        for &z in &[0.1, 0.7, 1.5, 2.9, 3.3, 5.0, 8.0] {
+            assert!((normal_cdf(z) + normal_cdf(-z) - 1.0).abs() < 1e-14, "symmetry at {z}");
+        }
+        // Φ(−5) ≈ 2.866516e-7 (known value, relative check in the tail)
+        let phi5 = normal_cdf(-5.0);
+        assert!((phi5 - 2.866_515_718_791_94e-7).abs() / phi5 < 1e-10, "Φ(−5) = {phi5}");
+    }
+
+    #[test]
+    fn mills_ratio_tail_is_stable_and_monotone() {
+        // λ(z) > −z for all z, and λ(z) ≈ −z − 1/z in the far tail
+        for &z in &[-50.0, -40.0, -36.5, -35.0, -20.0, -10.0, -5.0, 0.0, 5.0] {
+            let l = mills_ratio(z);
+            assert!(l.is_finite() && l > 0.0, "λ({z}) = {l}");
+            assert!(l > -z - 1e-9, "λ({z}) = {l} below its lower bound");
+        }
+        // continuity across the asymptote switch at z = −36
+        let a = mills_ratio(-36.0 - 1e-9);
+        let b = mills_ratio(-36.0 + 1e-9);
+        assert!((a - b).abs() / a < 1e-5, "λ discontinuous at switch: {a} vs {b}");
+    }
+
+    fn setup() -> (Design, Vec<f64>, Probit) {
+        let x = DenseMatrix::from_rows(&[
+            vec![1.0, 2.0],
+            vec![-3.0, 1.0],
+            vec![0.5, -1.0],
+            vec![2.0, 0.3],
+        ]);
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let d: Design = x.into();
+        let mut f = Probit::new();
+        f.init(&d, &y);
+        (d, y, f)
+    }
+
+    #[test]
+    fn value_at_zero_is_log2() {
+        // −log Φ(0) = log 2 per sample
+        let (d, y, f) = setup();
+        let beta = vec![0.0, 0.0];
+        let state = f.init_state(&d, &y, &beta);
+        assert!((f.value(&y, &beta, &state) - (2.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let (d, y, f) = setup();
+        let beta = vec![0.4, -0.2];
+        let state = f.init_state(&d, &y, &beta);
+        let eps = 1e-6;
+        for j in 0..2 {
+            let mut bp = beta.clone();
+            bp[j] += eps;
+            let sp = f.init_state(&d, &y, &bp);
+            let mut bm = beta.clone();
+            bm[j] -= eps;
+            let sm = f.init_state(&d, &y, &bm);
+            let fd = (f.value(&y, &bp, &sp) - f.value(&y, &bm, &sm)) / (2.0 * eps);
+            let an = f.grad_j(&d, &y, &state, &beta, j);
+            assert!((fd - an).abs() < 1e-6, "j={j}: fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn raw_hessian_matches_grad_finite_differences() {
+        let (d, y, f) = setup();
+        let beta = vec![0.4, -0.2];
+        let state = f.init_state(&d, &y, &beta);
+        let eps = 1e-6;
+        let mut h = vec![0.0; 4];
+        f.raw_hessian(&y, &state, &mut h);
+        for i in 0..4 {
+            let mut sp = state.clone();
+            sp[i] += eps;
+            let mut sm = state.clone();
+            sm[i] -= eps;
+            let mut wp = vec![0.0; 4];
+            let mut wm = vec![0.0; 4];
+            f.raw_grad(&y, &sp, &mut wp);
+            f.raw_grad(&y, &sm, &mut wm);
+            let fd = (wp[i] - wm[i]) / (2.0 * eps);
+            assert!((fd - h[i]).abs() < 1e-6, "i={i}: fd={fd} an={}", h[i]);
+        }
+    }
+
+    #[test]
+    fn curvature_is_bounded_by_one_over_n() {
+        let (d, y, f) = setup();
+        // extreme scores in both directions
+        let state = vec![30.0, -30.0, 100.0, -100.0];
+        let mut h = vec![0.0; 4];
+        f.raw_hessian(&y, &state, &mut h);
+        for (i, &hi) in h.iter().enumerate() {
+            assert!(hi > 0.0 && hi <= 0.25 + 1e-12, "h[{i}] = {hi} out of (0, 1/n]");
+        }
+        let _ = d;
+    }
+
+    #[test]
+    #[should_panic(expected = "labels must be ±1")]
+    fn rejects_regression_targets() {
+        let x = DenseMatrix::from_rows(&[vec![1.0]]);
+        let mut f = Probit::new();
+        f.init(&x.into(), &[0.5]);
+    }
+}

@@ -85,6 +85,27 @@ impl Datafit for Quadratic {
         "quadratic"
     }
 
+    fn supports_prox_newton(&self) -> bool {
+        true
+    }
+
+    /// `F_i(s) = (s − y_i)²/2n`; the state already stores `s − y`, so the
+    /// raw gradient is the scaled residual.
+    fn raw_grad(&self, _y: &[f64], state: &[f64], out: &mut [f64]) {
+        for (o, &r) in out.iter_mut().zip(state.iter()) {
+            *o = r * self.inv_n;
+        }
+    }
+
+    /// Constant curvature `1/n`: prox-Newton's first subproblem is the
+    /// full problem, so it converges in one outer iteration.
+    fn raw_hessian(&self, _y: &[f64], state: &[f64], out: &mut [f64]) {
+        let _ = state;
+        for o in out.iter_mut() {
+            *o = self.inv_n;
+        }
+    }
+
     /// ‖X‖₂²/n via a few power iterations (tight, unlike the Σ L_j default).
     fn global_lipschitz(&self, design: &Design) -> f64 {
         let (n, p) = (design.nrows(), design.ncols());

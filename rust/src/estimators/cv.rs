@@ -12,10 +12,16 @@ use crate::util::rng::Rng;
 #[derive(Clone, Debug)]
 pub struct CvResult {
     pub lambda_ratios: Vec<f64>,
-    /// mean validation MSE per λ (folds averaged)
+    /// mean validation MSE per λ-ratio (folds averaged)
     pub cv_mse: Vec<f64>,
     pub best_index: usize,
     pub best_lambda: f64,
+    /// full-data λ_max (anchors `best_lambda` and the refit)
+    pub lambda_max: f64,
+    /// per-fold λ_max computed on that fold's TRAINING rows only — the
+    /// anchor each fold's grid actually used (leakage guard; exposed so
+    /// reports/tests can see the training-only anchoring)
+    pub fold_lambda_max: Vec<f64>,
     /// coefficients refit on the full data at the winning λ
     pub beta: Vec<f64>,
 }
@@ -55,6 +61,12 @@ fn take_rows(design: &Design, rows: &[usize]) -> Design {
 
 /// K-fold CV over a geometric λ grid for the Lasso. `threads` bounds the
 /// worker pool (folds run concurrently; λ is warm-started within a fold).
+///
+/// The grid lives in **ratio space**: each fold anchors
+/// `λ = ratio · λ_max(train fold)` at its *own training rows'* λ_max —
+/// anchoring at the full-data λ_max would leak the fold's validation rows
+/// into its model-selection grid and bias the chosen λ. The winning ratio
+/// is then rescaled by the full-data λ_max for the final refit.
 pub fn lasso_cv(
     dataset: &Dataset,
     lambda_ratios: &[f64],
@@ -82,7 +94,7 @@ pub fn lasso_cv(
             let val_rows = val_rows.clone();
             let ratios = lambda_ratios.to_vec();
             let opts = opts.clone();
-            move || -> Vec<f64> {
+            move || -> (f64, Vec<f64>) {
                 let mut in_val = vec![false; n];
                 for &i in &val_rows {
                     in_val[i] = true;
@@ -93,10 +105,14 @@ pub fn lasso_cv(
                 let x_val = take_rows(&dataset.design, &val_rows);
                 let y_val: Vec<f64> = val_rows.iter().map(|&i| dataset.y[i]).collect();
 
+                // leakage guard: the fold's grid is anchored at the λ_max
+                // of its TRAINING rows, never the full data's
+                let fold_lam_max =
+                    super::linear::quadratic_lambda_max(&x_train, &y_train);
                 let mut warm: Option<Vec<f64>> = None;
                 let mut mses = Vec::with_capacity(ratios.len());
                 for &ratio in &ratios {
-                    let mut est = super::linear::Lasso::new(lam_max * ratio)
+                    let mut est = super::linear::Lasso::new(fold_lam_max * ratio)
                         .with_solver(opts.clone());
                     if let Some(w) = &warm {
                         est = est.warm_start(w.clone());
@@ -113,24 +129,26 @@ pub fn lasso_cv(
                         / y_val.len() as f64;
                     mses.push(mse);
                 }
-                mses
+                (fold_lam_max, mses)
             }
         })
         .collect();
 
     let per_fold = run_parallel(jobs, threads);
+    let fold_lambda_max: Vec<f64> = per_fold.iter().map(|(lm, _)| *lm).collect();
     let mut cv_mse = vec![0.0; lambda_ratios.len()];
-    for fold in &per_fold {
+    for (_, fold) in &per_fold {
         for (acc, &m) in cv_mse.iter_mut().zip(fold.iter()) {
             *acc += m / k_folds as f64;
         }
     }
+    // NaN-last selection: a divergent fold must not panic the report
     let best_index = cv_mse
         .iter()
         .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .unwrap()
-        .0;
+        .min_by(|a, b| crate::util::order::nan_last(*a.1, *b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
     let best_lambda = lam_max * lambda_ratios[best_index];
     let beta = super::linear::Lasso::new(best_lambda)
         .with_solver(opts.clone())
@@ -141,6 +159,8 @@ pub fn lasso_cv(
         cv_mse,
         best_index,
         best_lambda,
+        lambda_max: lam_max,
+        fold_lambda_max,
         beta,
     }
 }
@@ -174,6 +194,44 @@ mod tests {
         let cv = lasso_cv(&ds, &ratios, 3, &SolverOpts::default().with_tol(1e-6), 1, 2);
         assert!(cv.cv_mse.iter().all(|m| m.is_finite()));
         assert!(cv.best_lambda > 0.0);
+    }
+
+    #[test]
+    fn per_fold_lambda_max_differs_from_full_data_on_a_skewed_split() {
+        // plant one huge-leverage row: whichever fold holds it out for
+        // validation must see a training λ_max well below the full-data
+        // λ_max — under the old (leaky) grid that fold's λs were anchored
+        // too high
+        let mut ds = correlated(CorrelatedSpec { n: 40, p: 10, rho: 0.2, nnz: 3, snr: 8.0 }, 3);
+        ds.y[0] *= 50.0;
+        let ratios = geometric_grid(1e-2, 6);
+        let cv = lasso_cv(&ds, &ratios, 4, &SolverOpts::default().with_tol(1e-8), 0, 1);
+        assert_eq!(cv.fold_lambda_max.len(), 4);
+        assert!(
+            cv.fold_lambda_max.iter().any(|&lm| (lm - cv.lambda_max).abs() > 1e-8 * cv.lambda_max),
+            "per-fold λ_max {:?} all equal full-data λ_max {} — grid still leaks validation rows",
+            cv.fold_lambda_max,
+            cv.lambda_max
+        );
+        // the fold holding the leverage row out for validation anchors
+        // far below the folds training on it
+        let lo = cv.fold_lambda_max.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = cv.fold_lambda_max.iter().cloned().fold(0.0f64, f64::max);
+        assert!(hi / lo > 1.2, "skewed split should spread fold anchors: {:?}", cv.fold_lambda_max);
+    }
+
+    #[test]
+    fn nan_fold_mse_does_not_panic_best_index() {
+        // regression for the partial_cmp().unwrap() panic: feed the
+        // selector a NaN-contaminated mse vector directly
+        let mse = [f64::NAN, 0.5, 0.2, f64::NAN];
+        let best = mse
+            .iter()
+            .enumerate()
+            .min_by(|a, b| crate::util::order::nan_last(*a.1, *b.1))
+            .map(|(i, _)| i)
+            .unwrap();
+        assert_eq!(best, 2);
     }
 
     #[test]

@@ -29,19 +29,23 @@ pub struct PathResult {
 }
 
 impl PathResult {
-    /// λ-ratio of the point with the best estimation error.
+    /// λ-ratio of the point with the best estimation error. NaN metrics
+    /// (divergent non-convex fits) sort last instead of panicking; a
+    /// point is returned only when at least one finite metric exists.
     pub fn best_estimation(&self) -> Option<&PathPoint> {
         self.points
             .iter()
-            .filter(|p| p.estimation_error.is_some())
-            .min_by(|a, b| a.estimation_error.partial_cmp(&b.estimation_error).unwrap())
+            .filter(|p| p.estimation_error.map(|e| !e.is_nan()).unwrap_or(false))
+            .min_by(|a, b| {
+                crate::util::order::nan_last_opt(a.estimation_error, b.estimation_error)
+            })
     }
 
     pub fn best_prediction(&self) -> Option<&PathPoint> {
         self.points
             .iter()
-            .filter(|p| p.prediction_mse.is_some())
-            .min_by(|a, b| a.prediction_mse.partial_cmp(&b.prediction_mse).unwrap())
+            .filter(|p| p.prediction_mse.map(|e| !e.is_nan()).unwrap_or(false))
+            .min_by(|a, b| crate::util::order::nan_last_opt(a.prediction_mse, b.prediction_mse))
     }
 
     /// Does any point on the path recover the support exactly?
@@ -211,6 +215,43 @@ mod tests {
             path.points.last().unwrap().support_size >= path.points[1].support_size,
             "support grows along the path"
         );
+    }
+
+    #[test]
+    fn best_point_selectors_survive_nan_objectives() {
+        // regression: a single divergent (NaN-metric) point used to panic
+        // best_estimation/best_prediction via partial_cmp().unwrap()
+        let mk = |est: f64, pred: f64, ratio: f64| PathPoint {
+            lambda: ratio,
+            lambda_ratio: ratio,
+            beta: vec![0.0],
+            objective: est,
+            support_size: 0,
+            recovery: None,
+            estimation_error: Some(est),
+            prediction_mse: Some(pred),
+        };
+        let path = PathResult {
+            penalty_name: "mcp".into(),
+            points: vec![
+                mk(3.0, 5.0, 1.0),
+                mk(f64::NAN, f64::NAN, 0.5), // divergent fit
+                mk(1.0, 2.0, 0.25),
+            ],
+            total_time: 0.0,
+        };
+        let be = path.best_estimation().expect("finite point exists");
+        assert_eq!(be.lambda_ratio, 0.25);
+        let bp = path.best_prediction().expect("finite point exists");
+        assert_eq!(bp.lambda_ratio, 0.25);
+        // all-NaN path: no best point, still no panic
+        let all_nan = PathResult {
+            penalty_name: "mcp".into(),
+            points: vec![mk(f64::NAN, f64::NAN, 1.0)],
+            total_time: 0.0,
+        };
+        assert!(all_nan.best_estimation().is_none());
+        assert!(all_nan.best_prediction().is_none());
     }
 
     #[test]

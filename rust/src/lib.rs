@@ -41,7 +41,7 @@ pub mod util;
 /// Convenient glob-import surface.
 pub mod prelude {
     pub use crate::data::{CorrelatedSpec, Dataset, SparseSpec};
-    pub use crate::datafit::{Datafit, Logistic, Quadratic, QuadraticSvc};
+    pub use crate::datafit::{Datafit, Logistic, Poisson, Probit, Quadratic, QuadraticSvc};
     pub use crate::estimators::{ElasticNet, Lasso, LinearSvc, McpRegressor, ScadRegressor};
     pub use crate::linalg::{CscMatrix, DenseMatrix, Design};
     pub use crate::penalty::{

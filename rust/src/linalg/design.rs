@@ -87,6 +87,33 @@ impl Design {
         }
     }
 
+    /// Weighted squared column norm `Σ_i w_i X_ij²` over the stored
+    /// entries of column j — the prox-Newton subproblem's per-coordinate
+    /// Lipschitz constant (w = per-sample Hessian diagonal). Only the
+    /// working-set columns are touched per outer iteration, so this stays
+    /// a column kernel rather than a full-design pass.
+    #[inline]
+    pub fn col_weighted_sq_norm(&self, j: usize, w: &[f64]) -> f64 {
+        match self {
+            Design::Dense(m) => {
+                let col = m.col(j);
+                let mut s = 0.0;
+                for (i, &x) in col.iter().enumerate() {
+                    s += w[i] * x * x;
+                }
+                s
+            }
+            Design::Sparse(m) => {
+                let (rows, vals) = m.col(j);
+                let mut s = 0.0;
+                for (&i, &v) in rows.iter().zip(vals.iter()) {
+                    s += w[i as usize] * v * v;
+                }
+                s
+            }
+        }
+    }
+
     /// `X β`.
     pub fn matvec(&self, beta: &[f64], out: &mut [f64]) {
         match self {
@@ -291,6 +318,22 @@ mod tests {
         s.matvec_t(&r, &mut os);
         assert_eq!(od, os);
         assert_eq!(d.col_sq_norms(), s.col_sq_norms());
+    }
+
+    #[test]
+    fn weighted_col_norms_agree_and_match_unweighted() {
+        let (d, s) = pair();
+        let w = [0.5, 2.0, 1.5];
+        for j in 0..3 {
+            assert!(
+                (d.col_weighted_sq_norm(j, &w) - s.col_weighted_sq_norm(j, &w)).abs() < 1e-14,
+                "dense/sparse disagree on column {j}"
+            );
+        }
+        let ones = [1.0, 1.0, 1.0];
+        for (j, &nsq) in d.col_sq_norms().iter().enumerate() {
+            assert!((d.col_weighted_sq_norm(j, &ones) - nsq).abs() < 1e-14);
+        }
     }
 
     #[test]

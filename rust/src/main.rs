@@ -54,31 +54,41 @@ fn dispatch(args: &mut Args) -> Result<()> {
 
 const USAGE: &str = "usage:
   skglm solve --dataset <name|libsvm-path> --penalty <l1|enet|mcp|scad|l05> \\
-              --lambda-ratio 0.1 [--gamma 3.0] [--rho 0.5] [--tol 1e-8] \\
+              [--datafit quadratic|poisson|probit] --lambda-ratio 0.1 \\
+              [--gamma 3.0] [--rho 0.5] [--tol 1e-8] \\
               [--engine native|pjrt] [--no-ws] [--no-accel] [--seed 42] [--small]
-  skglm path  --penalty <l1|mcp|scad|l05> [--points 20] [--min-ratio 1e-3] \\
-              [--gamma 3.0] [--small] [--seed 42]
+  skglm path  --penalty <l1|mcp|scad|l05> [--datafit quadratic|poisson|probit] \\
+              [--points 20] [--min-ratio 1e-3] [--gamma 3.0] [--small] [--seed 42]
   skglm cv    --dataset <name> [--folds 5] [--points 15] [--workers 4] [--small]
-  skglm exp   <fig1..fig10|table1|table2|pathsched|kernels|all> [--full]
+  skglm exp   <fig1..fig10|table1|table2|pathsched|kernels|glms|all> [--full]
   skglm serve [--workers 4] [--lambdas 8]
   skglm synth --dataset <rcv1|news20|...|fig1> --out <file.svm> [--small]
   skglm info
 
-  every subcommand accepts --threads N (kernel + worker thread budget;
-  overrides the SKGLM_THREADS env var; defaults to hardware parallelism)";
+  --datafit poisson|probit routes the fit through the prox-Newton outer
+  solver (curvature-adaptive GLMs; penalty must be l1). every subcommand
+  accepts --threads N (kernel + worker thread budget; overrides the
+  SKGLM_THREADS env var; defaults to hardware parallelism)";
+
+/// Load `name` as a libsvm file when it names one on disk.
+fn try_load_libsvm(name: &str) -> Option<Result<Dataset>> {
+    if !std::path::Path::new(name).exists() {
+        return None;
+    }
+    Some(skglm::data::libsvm::parse_file(name).map(|parsed| Dataset {
+        name: name.to_string(),
+        design: parsed.x.into(),
+        y: parsed.y,
+        beta_true: Vec::new(),
+    }))
+}
 
 fn load_dataset(args: &mut Args) -> Result<Dataset> {
     let name = args.get_or("dataset", "rcv1");
     let seed = args.get_usize("seed", 42)? as u64;
     let small = args.has("small");
-    if std::path::Path::new(&name).exists() {
-        let parsed = skglm::data::libsvm::parse_file(&name)?;
-        return Ok(Dataset {
-            name,
-            design: parsed.x.into(),
-            y: parsed.y,
-            beta_true: Vec::new(),
-        });
+    if let Some(parsed) = try_load_libsvm(&name) {
+        return parsed;
     }
     if name == "fig1" {
         return Ok(correlated(CorrelatedSpec::figure1(if small { 0.1 } else { 1.0 }), seed));
@@ -100,7 +110,104 @@ fn print_fit(res: &FitResult, n: usize) {
     }
 }
 
+/// Build the GLM workload for `--datafit poisson|probit`: a libsvm file
+/// when one is named (targets validated here, not by library asserts),
+/// else the correlated synthetic generator with model-consistent targets
+/// (dataset name `synthetic`, the default).
+fn load_glm_dataset(args: &mut Args, datafit: &str) -> Result<Dataset> {
+    let name = args.get_or("dataset", "synthetic");
+    let seed = args.get_usize("seed", 42)? as u64;
+    let small = args.has("small");
+    if let Some(parsed) = try_load_libsvm(&name) {
+        let ds = parsed?;
+        match datafit {
+            "poisson" => {
+                if let Some(bad) = ds.y.iter().find(|&&v| v < 0.0 || v.fract() != 0.0) {
+                    bail!(
+                        "{name}: poisson targets must be nonnegative counts, found {bad}"
+                    );
+                }
+            }
+            _ => {
+                if let Some(bad) = ds.y.iter().find(|&&v| v != 1.0 && v != -1.0) {
+                    bail!("{name}: probit labels must be ±1, found {bad}");
+                }
+            }
+        }
+        return Ok(ds);
+    }
+    if name != "synthetic" {
+        bail!("unknown dataset {name:?} (not a file; --datafit {datafit} takes a libsvm path or the default synthetic workload)");
+    }
+    let spec = CorrelatedSpec::figure1(if small { 0.1 } else { 0.5 });
+    Ok(match datafit {
+        "poisson" => skglm::data::poisson_correlated(spec, seed),
+        _ => skglm::data::probit_correlated(spec, seed),
+    })
+}
+
+/// λ_max + prox-Newton solve for one GLM datafit type.
+fn run_glm_fit<D: skglm::datafit::Datafit + Default>(
+    ds: &Dataset,
+    ratio: f64,
+    opts: &SolverOpts,
+) -> (f64, FitResult) {
+    let mut f = D::default();
+    let lam_max = skglm::solver::glm_lambda_max(&f, &ds.design, &ds.y);
+    let r = skglm::solver::solve_prox_newton(
+        &ds.design,
+        &ds.y,
+        &mut f,
+        &L1::new(lam_max * ratio),
+        opts,
+        None,
+    );
+    (lam_max, r)
+}
+
+/// One prox-Newton fit (`solve --datafit poisson|probit`).
+fn cmd_solve_glm(args: &mut Args, datafit: &str) -> Result<()> {
+    if !matches!(datafit, "poisson" | "probit") {
+        bail!("unknown datafit {datafit:?} (quadratic|poisson|probit)");
+    }
+    let penalty = args.get_or("penalty", "l1");
+    if penalty != "l1" {
+        bail!("--datafit {datafit} supports --penalty l1 only (got {penalty:?})");
+    }
+    let ratio = args.get_f64("lambda-ratio", 0.1)?;
+    let tol = args.get_f64("tol", 1e-8)?;
+    let mut opts = SolverOpts::default().with_tol(tol);
+    if args.has("no-ws") {
+        opts.use_ws = false;
+    }
+    if args.has("no-accel") {
+        opts.anderson_m = 0;
+    }
+    opts.verbose = args.has("verbose");
+    let ds = load_glm_dataset(args, datafit)?;
+    args.finish()?;
+
+    let (lam_max, res) = match datafit {
+        "poisson" => run_glm_fit::<skglm::datafit::Poisson>(&ds, ratio, &opts),
+        _ => run_glm_fit::<skglm::datafit::Probit>(&ds, ratio, &opts),
+    };
+    println!(
+        "dataset {} (n={}, p={}), datafit {datafit}, lambda = {:.3e} (ratio {ratio})",
+        ds.name,
+        ds.n(),
+        ds.p(),
+        lam_max * ratio
+    );
+    println!("solver         : prox-newton (outer Newton x inner CD)");
+    print_fit(&res, ds.n());
+    Ok(())
+}
+
 fn cmd_solve(args: &mut Args) -> Result<()> {
+    let datafit = args.get_or("datafit", "quadratic");
+    if datafit != "quadratic" {
+        return cmd_solve_glm(args, &datafit);
+    }
     let ds = load_dataset(args)?;
     let penalty = args.get_or("penalty", "l1");
     let ratio = args.get_f64("lambda-ratio", 0.1)?;
@@ -167,6 +274,7 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
 fn cmd_path(args: &mut Args) -> Result<()> {
     use skglm::coordinator::{specs, FitScheduler, JobEvent};
     use std::sync::Arc;
+    let datafit = args.get_or("datafit", "quadratic");
     let penalty = args.get_or("penalty", "l1");
     let points = args.get_usize("points", 20)?;
     let min_ratio = args.get_f64("min-ratio", 1e-3)?;
@@ -175,19 +283,46 @@ fn cmd_path(args: &mut Args) -> Result<()> {
     let small = args.has("small");
     args.finish()?;
 
-    let ds = Arc::new(correlated(CorrelatedSpec::figure1(if small { 0.1 } else { 1.0 }), seed));
-    // λ is a placeholder: the path job anchors the grid at its own λ_max
-    let spec = match penalty.as_str() {
-        "l1" => specs::lasso(1.0),
-        "mcp" => specs::mcp(1.0, gamma),
-        "scad" => specs::scad(1.0, gamma),
-        "l05" => specs::lq(1.0, 0.5),
-        other => bail!("unknown penalty {other:?}"),
+    // λ is a placeholder everywhere below: the path job anchors the grid
+    // at its own λ_max
+    let (ds, spec) = match datafit.as_str() {
+        "quadratic" => {
+            let ds =
+                Arc::new(correlated(CorrelatedSpec::figure1(if small { 0.1 } else { 1.0 }), seed));
+            let spec = match penalty.as_str() {
+                "l1" => specs::lasso(1.0),
+                "mcp" => specs::mcp(1.0, gamma),
+                "scad" => specs::scad(1.0, gamma),
+                "l05" => specs::lq(1.0, 0.5),
+                other => bail!("unknown penalty {other:?}"),
+            };
+            (ds, spec)
+        }
+        glm @ ("poisson" | "probit") => {
+            if penalty != "l1" {
+                bail!("--datafit {glm} supports --penalty l1 only (got {penalty:?})");
+            }
+            let spec_cfg = CorrelatedSpec::figure1(if small { 0.1 } else { 0.5 });
+            if glm == "poisson" {
+                (
+                    Arc::new(skglm::data::poisson_correlated(spec_cfg, seed)),
+                    specs::poisson_l1(1.0),
+                )
+            } else {
+                (
+                    Arc::new(skglm::data::probit_correlated(spec_cfg, seed)),
+                    specs::probit_l1(1.0),
+                )
+            }
+        }
+        other => bail!("unknown datafit {other:?} (quadratic|poisson|probit)"),
     };
     let ratios = skglm::estimators::path::geometric_grid(min_ratio, points);
     let mut sched = FitScheduler::start(1);
     let job = sched.submit_path(Arc::clone(&ds), spec, ratios, SolverOpts::default().with_tol(1e-7));
-    println!("penalty {penalty}: streaming {points} warm-started path points (job {job})");
+    println!(
+        "datafit {datafit} / penalty {penalty}: streaming {points} warm-started path points (job {job})"
+    );
     println!("lambda_ratio  support  est_err    pred_mse   exact  epochs  screened");
     loop {
         match sched.events.recv() {
@@ -252,6 +387,14 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     }
     sched.submit_fit(Arc::clone(&ds), specs::elastic_net(lam_max / 20.0, 0.5), SolverOpts::default());
     sched.submit_fit(Arc::clone(&ds), specs::mcp(lam_max / 20.0, 3.0), SolverOpts::default());
+    expected += 2;
+    // prox-Newton GLM jobs share the queue with the CD jobs
+    let pois = Arc::new(skglm::data::poisson_correlated(CorrelatedSpec::figure1(0.2), 42));
+    let pois_lmax = specs::poisson_l1(1.0).lambda_max(&pois.design, &pois.y);
+    sched.submit_fit(Arc::clone(&pois), specs::poisson_l1(pois_lmax / 10.0), SolverOpts::default());
+    let prob = Arc::new(skglm::data::probit_correlated(CorrelatedSpec::figure1(0.2), 42));
+    let prob_lmax = specs::probit_l1(1.0).lambda_max(&prob.design, &prob.y);
+    sched.submit_fit(Arc::clone(&prob), specs::probit_l1(prob_lmax / 10.0), SolverOpts::default());
     expected += 2;
     // one warm-started path sweep, streamed per-λ
     let path_points = 8;

@@ -9,6 +9,7 @@
 //! | Fig 7 | ADMM (Boyd et al. 2011) | [`admm`] |
 //! | Fig 8 | glmnet-like strong-rules path solver | [`strong_rules`] |
 //! | Fig 9 | L-BFGS on the (squared-hinge) SVM primal | [`lbfgs`] |
+//! | exp glms | OWL-QN (orthant-wise L-BFGS, ℓ1 GLMs) | [`owlqn`] |
 //! | — | ISTA / FISTA proximal gradient | [`pgd`] |
 
 pub mod admm;
@@ -17,5 +18,6 @@ pub mod fireworks;
 pub mod full_cd;
 pub mod irls;
 pub mod lbfgs;
+pub mod owlqn;
 pub mod pgd;
 pub mod strong_rules;

@@ -1,13 +1,16 @@
 //! Solvers: the paper's Algorithm 1 (working sets) / Algorithm 2
 //! (Anderson-accelerated inner CD) / Algorithm 3 (CD epoch) / Algorithm 4
-//! (Anderson extrapolation), the multitask block variant, and every
-//! baseline the evaluation figures compare against.
+//! (Anderson extrapolation), the prox-Newton outer solver for datafits
+//! without precomputable Lipschitz bounds (Poisson/probit), the multitask
+//! block variant, and every baseline the evaluation figures compare
+//! against.
 
 pub mod anderson;
 pub mod baselines;
 pub mod cd;
 pub mod inner;
 pub mod multitask;
+pub mod prox_newton;
 pub mod screening;
 pub mod skglm;
 
@@ -16,3 +19,6 @@ pub use skglm::{
     HistoryPoint, SolverOpts,
 };
 pub use multitask::{solve_multitask, MultiTaskFit};
+pub use prox_newton::{
+    glm_lambda_max, solve_prox_newton, solve_prox_newton_continued, solve_prox_newton_prepared,
+};

@@ -370,7 +370,7 @@ pub fn solve_prepared<D: Datafit, P: Penalty>(
 /// scored `-∞` (frozen by screening) are never selected. `scores` is
 /// clobbered. Returned set is sorted ascending (cyclic CD sweeps in
 /// index order).
-fn select_working_set<P: Penalty>(
+pub(crate) fn select_working_set<P: Penalty>(
     scores: &mut [f64],
     beta: &[f64],
     penalty: &P,

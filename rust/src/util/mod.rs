@@ -2,6 +2,7 @@
 //! in this offline environment (`rand`, `proptest`, `serde_json`).
 
 pub mod json;
+pub mod order;
 pub mod quickcheck;
 pub mod rng;
 pub mod table;

@@ -1,0 +1,59 @@
+//! NaN-last total ordering for objective/error comparisons.
+//!
+//! Path reports and CV selection compare per-λ objectives with
+//! `min_by`; a single NaN (a divergent non-convex fit) used to panic the
+//! whole report through `partial_cmp(..).unwrap()`. [`nan_last`] orders
+//! every NaN *after* every real number, so min-selection silently skips
+//! divergent points while still returning one if nothing else exists.
+
+use std::cmp::Ordering;
+
+/// Total order on f64 with all NaNs greater than all non-NaNs (and equal
+/// to each other): `min_by(nan_last)` picks the smallest real value.
+#[inline]
+pub fn nan_last(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => a.partial_cmp(&b).expect("both non-NaN"),
+    }
+}
+
+/// [`nan_last`] lifted to `Option<f64>`, with `None` ordered like NaN
+/// (last) — the shape `PathPoint`'s optional metrics compare in.
+#[inline]
+pub fn nan_last_opt(a: Option<f64>, b: Option<f64>) -> Ordering {
+    nan_last(a.unwrap_or(f64::NAN), b.unwrap_or(f64::NAN))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reals_order_normally() {
+        assert_eq!(nan_last(1.0, 2.0), Ordering::Less);
+        assert_eq!(nan_last(2.0, 1.0), Ordering::Greater);
+        assert_eq!(nan_last(1.0, 1.0), Ordering::Equal);
+        assert_eq!(nan_last(f64::NEG_INFINITY, f64::INFINITY), Ordering::Less);
+    }
+
+    #[test]
+    fn nans_sort_last() {
+        assert_eq!(nan_last(f64::NAN, 1.0), Ordering::Greater);
+        assert_eq!(nan_last(1.0, f64::NAN), Ordering::Less);
+        assert_eq!(nan_last(f64::NAN, f64::NAN), Ordering::Equal);
+        // min_by over a NaN-contaminated slice picks the real minimum
+        let xs = [f64::NAN, 3.0, 1.0, f64::NAN, 2.0];
+        let m = xs.iter().cloned().min_by(|a, b| nan_last(*a, *b)).unwrap();
+        assert_eq!(m, 1.0);
+    }
+
+    #[test]
+    fn options_order_none_last() {
+        assert_eq!(nan_last_opt(Some(1.0), None), Ordering::Less);
+        assert_eq!(nan_last_opt(None, Some(1.0)), Ordering::Greater);
+        assert_eq!(nan_last_opt(None, None), Ordering::Equal);
+    }
+}

@@ -115,6 +115,34 @@ impl Rng {
     pub fn bernoulli(&mut self, p: f64) -> bool {
         self.uniform() < p
     }
+
+    /// Poisson(λ) count. Knuth's product-of-uniforms method for small λ;
+    /// a clamped normal approximation for λ ≥ 30 (where it is accurate to
+    /// well under the sampling noise of any dataset we generate).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        assert!(lambda >= 0.0 && lambda.is_finite(), "poisson rate must be finite ≥ 0");
+        if lambda == 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0f64;
+            loop {
+                p *= self.uniform();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        }
+        let v = lambda + lambda.sqrt() * self.normal();
+        if v <= 0.0 {
+            0
+        } else {
+            v.round() as u64
+        }
+    }
 }
 
 #[cfg(test)]
@@ -186,6 +214,20 @@ mod tests {
             assert!(i < 100);
             assert!(seen.insert(i), "duplicate index {i}");
         }
+    }
+
+    #[test]
+    fn poisson_moments() {
+        let mut r = Rng::seed_from_u64(29);
+        for &lam in &[0.5, 3.0, 12.0, 50.0] {
+            let n = 50_000;
+            let xs: Vec<f64> = (0..n).map(|_| r.poisson(lam) as f64).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+            assert!((mean - lam).abs() < 0.05 * lam.max(1.0), "λ={lam}: mean {mean}");
+            assert!((var - lam).abs() < 0.1 * lam.max(1.0), "λ={lam}: var {var}");
+        }
+        assert_eq!(r.poisson(0.0), 0);
     }
 
     #[test]

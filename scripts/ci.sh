@@ -19,6 +19,9 @@ cargo bench --no-run --workspace
 echo "==> kernel bench smoke (writes BENCH_kernels.json)"
 cargo run --release -p skglm --bin skglm -- exp kernels
 
+echo "==> glm bench smoke (writes BENCH_glms.json)"
+cargo run --release -p skglm --bin skglm -- exp glms
+
 echo "==> cargo doc --no-deps"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace
 
