@@ -1,0 +1,24 @@
+//! Bench target for the block-coordinate group engine: block CD vs scalar
+//! CD on the ungrouped ℓ1 relaxation vs the proximal-gradient baseline,
+//! same grid as `skglm exp groups` (smoke scale by default; pass `--full`
+//! for the full group-size/density grid). Results also land in
+//! `results/groups/BENCH_groups.json`.
+
+use skglm::bench::figures::Scale;
+use skglm::bench::group_bench::run_groups;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Smoke };
+    match run_groups(scale) {
+        Ok(paths) => {
+            for p in paths {
+                println!("wrote {}", p.display());
+            }
+        }
+        Err(e) => {
+            eprintln!("group bench failed: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}

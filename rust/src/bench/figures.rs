@@ -642,6 +642,7 @@ pub fn run_experiment(name: &str, scale: Scale) -> Result<Vec<PathBuf>> {
         "pathsched" => crate::bench::path_bench::run_pathsched(scale),
         "kernels" => crate::bench::kernel_bench::run_kernels(scale),
         "glms" => crate::bench::glm_bench::run_glms(scale),
+        "groups" => crate::bench::group_bench::run_groups(scale),
         "all" => {
             let mut out = Vec::new();
             for exp in ALL_EXPERIMENTS {
@@ -656,7 +657,7 @@ pub fn run_experiment(name: &str, scale: Scale) -> Result<Vec<PathBuf>> {
 
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table1",
-    "table2", "pathsched", "kernels", "glms",
+    "table2", "pathsched", "kernels", "glms", "groups",
 ];
 
 #[cfg(test)]

@@ -1,0 +1,342 @@
+//! Bench scenario `groups`: the block-coordinate engine on group-sparse
+//! workloads, measured against (a) scalar CD on the *ungrouped* ℓ1
+//! relaxation of the same data and (b) the full-gradient proximal
+//! baseline (FISTA with the block prox), across group-size × active-density
+//! grids.
+//!
+//! Per workload × λ the runner records wall time to each solver's own
+//! stopping criterion, the final objective, group-support F1 against the
+//! planted groups, and — for the two solvers minimising the *same* convex
+//! group objective (block CD vs prox gradient) — the relative objective
+//! gap, with acceptance bar `rel_gap ≤ 1e-6` on every grid point. Results
+//! land in `results/groups/` and — the perf-trajectory anchor —
+//! `BENCH_groups.json` at the repo root (skipped when `SKGLM_RESULTS`
+//! redirects outputs, e.g. under `cargo test`).
+
+use crate::bench::figures::Scale;
+use crate::bench::kernel_bench::time_it;
+use crate::bench::report::{ensure_dir, results_dir, write_markdown};
+use crate::data::{grouped_correlated, GroupedSpec};
+use crate::estimators::group_lambda_max;
+use crate::estimators::linear::quadratic_lambda_max;
+use crate::penalty::{GroupLasso, GroupMcp, L1};
+use crate::solver::baselines::group_pgd::solve_group_pgd;
+use crate::solver::partition::BlockPartition;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// One solved (workload, λ, solver) grid point.
+#[derive(Clone, Debug)]
+pub struct GroupBenchRow {
+    /// workload shape, e.g. `200x400/g8@0.1`
+    pub shape: String,
+    pub lambda_ratio: f64,
+    /// `block_cd` | `block_cd_mcp` | `scalar_cd_l1` | `prox_grad`
+    pub solver: String,
+    pub millis: f64,
+    pub objective: f64,
+    /// (objective − best) / |best| across the solvers sharing the convex
+    /// group objective; NaN for solvers on a different objective
+    pub rel_gap: f64,
+    /// F1 of recovered groups vs planted groups
+    pub group_f1: f64,
+    pub iters: usize,
+}
+
+fn group_f1(recovered: &[usize], planted: &[usize]) -> f64 {
+    if recovered.is_empty() && planted.is_empty() {
+        return 1.0;
+    }
+    let tp = recovered.iter().filter(|g| planted.contains(g)).count() as f64;
+    let prec = if recovered.is_empty() { 0.0 } else { tp / recovered.len() as f64 };
+    let rec = if planted.is_empty() { 0.0 } else { tp / planted.len() as f64 };
+    if prec + rec == 0.0 {
+        0.0
+    } else {
+        2.0 * prec * rec / (prec + rec)
+    }
+}
+
+/// Groups whose planted coefficients are nonzero.
+fn planted_groups(beta_true: &[f64], part: &BlockPartition) -> Vec<usize> {
+    (0..part.n_blocks())
+        .filter(|&b| part.coords(b).iter().any(|&j| beta_true[j] != 0.0))
+        .collect()
+}
+
+/// Scalar support → group support (a group counts when any member is
+/// active) for the ungrouped ℓ1 baseline.
+fn scalar_to_groups(beta: &[f64], part: &BlockPartition) -> Vec<usize> {
+    (0..part.n_blocks())
+        .filter(|&b| part.coords(b).iter().any(|&j| beta[j] != 0.0))
+        .collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_workload(
+    shape: &str,
+    ds: &crate::data::Dataset,
+    part: &Arc<BlockPartition>,
+    lam_ratios: &[f64],
+    warmup: usize,
+    reps: usize,
+    gamma: f64,
+    rows: &mut Vec<GroupBenchRow>,
+) {
+    let planted = planted_groups(&ds.beta_true, part);
+    let lam_max = group_lambda_max(&ds.design, &ds.y, part, None);
+    let l1_lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+    for &ratio in lam_ratios {
+        let lam = lam_max * ratio;
+        let opts = crate::solver::SolverOpts::default().with_tol(1e-9);
+
+        // block CD on the convex group Lasso
+        let mut cd_res = None;
+        let cd_secs = time_it(warmup, reps, || {
+            cd_res = Some(
+                crate::estimators::group::group_lasso(lam, Arc::clone(part))
+                    .with_tol(1e-9)
+                    .fit(&ds.design, &ds.y),
+            );
+        });
+        let cd = cd_res.expect("timed at least once");
+
+        // prox-gradient on the same objective
+        let mut pgd_res = None;
+        let pgd_secs = time_it(warmup, reps, || {
+            pgd_res = Some(solve_group_pgd(
+                &ds.design,
+                &ds.y,
+                part,
+                &GroupLasso::new(lam),
+                100_000,
+                1e-10,
+                true,
+            ));
+        });
+        let pgd = pgd_res.expect("timed at least once");
+
+        // scalar CD on the ungrouped ℓ1 relaxation (its own objective)
+        let mut l1_res = None;
+        let l1_secs = time_it(warmup, reps, || {
+            let mut f = crate::datafit::Quadratic::new();
+            l1_res = Some(crate::solver::solve(
+                &ds.design,
+                &ds.y,
+                &mut f,
+                &L1::new(l1_lam_max * ratio),
+                &opts,
+                None,
+                None,
+            ));
+        });
+        let l1 = l1_res.expect("timed at least once");
+
+        // non-convex group MCP through the same engine (its own objective)
+        let mut mcp_res = None;
+        let mcp_secs = time_it(warmup, reps, || {
+            mcp_res = Some(
+                crate::estimators::group::GroupEstimator::from_parts(
+                    GroupMcp::new(lam, gamma),
+                    Arc::clone(part),
+                    opts.clone(),
+                )
+                .fit(&ds.design, &ds.y),
+            );
+        });
+        let mcp = mcp_res.expect("timed at least once");
+
+        let best = cd.result.objective.min(pgd.objective);
+        let denom = best.abs().max(1e-12);
+        rows.push(GroupBenchRow {
+            shape: shape.to_string(),
+            lambda_ratio: ratio,
+            solver: "block_cd".into(),
+            millis: cd_secs * 1e3,
+            objective: cd.result.objective,
+            rel_gap: (cd.result.objective - best) / denom,
+            group_f1: group_f1(&cd.group_support(), &planted),
+            iters: cd.result.n_epochs,
+        });
+        rows.push(GroupBenchRow {
+            shape: shape.to_string(),
+            lambda_ratio: ratio,
+            solver: "prox_grad".into(),
+            millis: pgd_secs * 1e3,
+            objective: pgd.objective,
+            rel_gap: (pgd.objective - best) / denom,
+            group_f1: group_f1(&scalar_to_groups(&pgd.v, part), &planted),
+            iters: pgd.iters,
+        });
+        rows.push(GroupBenchRow {
+            shape: shape.to_string(),
+            lambda_ratio: ratio,
+            solver: "scalar_cd_l1".into(),
+            millis: l1_secs * 1e3,
+            objective: l1.objective,
+            rel_gap: f64::NAN,
+            group_f1: group_f1(&scalar_to_groups(&l1.beta, part), &planted),
+            iters: l1.n_epochs,
+        });
+        rows.push(GroupBenchRow {
+            shape: shape.to_string(),
+            lambda_ratio: ratio,
+            solver: "block_cd_mcp".into(),
+            millis: mcp_secs * 1e3,
+            objective: mcp.result.objective,
+            rel_gap: f64::NAN,
+            group_f1: group_f1(&mcp.group_support(), &planted),
+            iters: mcp.result.n_epochs,
+        });
+    }
+}
+
+/// Run the group grid and persist `BENCH_groups.json`.
+pub fn run_groups(scale: Scale) -> Result<Vec<PathBuf>> {
+    // (n, p, group_size, active fraction of groups) × λ-ratio grid
+    #[allow(clippy::type_complexity)]
+    let (shapes, lam_ratios, warmup, reps): (Vec<(usize, usize, usize, f64)>, Vec<f64>, usize, usize) =
+        match scale {
+            Scale::Smoke => (vec![(80, 160, 8, 0.1)], vec![0.2], 1, 3),
+            Scale::Full => (
+                vec![
+                    (400, 1600, 5, 0.05),
+                    (400, 1600, 20, 0.05),
+                    (400, 1600, 20, 0.2),
+                    (1000, 4000, 40, 0.05),
+                ],
+                vec![0.2, 0.05],
+                2,
+                5,
+            ),
+        };
+
+    let mut rows: Vec<GroupBenchRow> = Vec::new();
+    for &(n, p, group_size, active_frac) in &shapes {
+        let n_groups = p / group_size;
+        let active = ((n_groups as f64) * active_frac).round().max(1.0) as usize;
+        let (ds, part) = grouped_correlated(
+            GroupedSpec { n, p, group_size, active_groups: active, rho: 0.5, snr: 8.0 },
+            42,
+        );
+        let shape = format!("{n}x{p}/g{group_size}@{active_frac}");
+        // MCP semi-convexity: γ > 1/min L_b ≈ 1/group_size (AR(1) columns
+        // have ‖X_j‖² ≈ n), so γ = 3 is comfortably valid
+        run_workload(&shape, &ds, &part, &lam_ratios, warmup, reps, 3.0, &mut rows);
+    }
+
+    // ---- report ----
+    let mut t = Table::new(&[
+        "shape", "lambda_ratio", "solver", "median_ms", "objective", "rel_gap", "group_f1",
+        "iters",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.shape.clone(),
+            format!("{:.3}", r.lambda_ratio),
+            r.solver.clone(),
+            format!("{:.2}", r.millis),
+            format!("{:.9e}", r.objective),
+            if r.rel_gap.is_nan() { "-".into() } else { format!("{:.2e}", r.rel_gap) },
+            format!("{:.3}", r.group_f1),
+            r.iters.to_string(),
+        ]);
+    }
+    let md = write_markdown("groups", "block_cd_vs_baselines", &t)?;
+
+    let jrows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj()
+                .with("shape", r.shape.as_str())
+                .with("lambda_ratio", r.lambda_ratio)
+                .with("solver", r.solver.as_str())
+                .with("median_ms", r.millis)
+                .with("objective", r.objective)
+                .with("rel_gap", if r.rel_gap.is_nan() { -1.0 } else { r.rel_gap })
+                .with("group_f1", r.group_f1)
+                .with("iters", r.iters)
+        })
+        .collect();
+    let json = Json::obj()
+        .with("bench", "groups")
+        .with(
+            "scale",
+            match scale {
+                Scale::Smoke => "smoke",
+                Scale::Full => "full",
+            },
+        )
+        .with("agreement_bar", 1e-6)
+        .with("rows", Json::Arr(jrows));
+
+    let dir = results_dir().join("groups");
+    ensure_dir(&dir)?;
+    let json_path = dir.join("BENCH_groups.json");
+    std::fs::write(&json_path, json.render())?;
+    let mut outputs = vec![json_path, md];
+    if std::env::var_os("SKGLM_RESULTS").is_none() {
+        let root = PathBuf::from("BENCH_groups.json");
+        std::fs::write(&root, json.render())?;
+        outputs.push(root);
+    }
+
+    // headline: convex agreement + speedup vs the prox-gradient baseline
+    let worst_gap = rows
+        .iter()
+        .filter(|r| !r.rel_gap.is_nan())
+        .map(|r| r.rel_gap)
+        .fold(0.0f64, f64::max);
+    eprintln!("[groups] worst block-CD/prox-grad relative objective gap: {worst_gap:.2e} (bar 1e-6)");
+    let (mut cd_ms, mut pgd_ms) = (0.0, 0.0);
+    for r in &rows {
+        match r.solver.as_str() {
+            "block_cd" => cd_ms += r.millis,
+            "prox_grad" => pgd_ms += r.millis,
+            _ => {}
+        }
+    }
+    if cd_ms > 0.0 {
+        eprintln!(
+            "[groups] block CD {cd_ms:.1}ms total vs prox gradient {pgd_ms:.1}ms ({:.2}x)",
+            pgd_ms / cd_ms
+        );
+    }
+    Ok(outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_grid_runs_meets_agreement_bar_and_persists_json() {
+        let _guard = crate::bench::report::results_env_lock();
+        let tmp = std::env::temp_dir().join(format!("skglm_groups_{}", std::process::id()));
+        std::env::set_var("SKGLM_RESULTS", &tmp);
+        let out = run_groups(Scale::Smoke).unwrap();
+        assert!(!out.is_empty());
+        for p in &out {
+            assert!(p.exists(), "{}", p.display());
+        }
+        let raw = std::fs::read_to_string(&out[0]).unwrap();
+        assert!(raw.contains("\"bench\":\"groups\""));
+        assert!(raw.contains("block_cd"));
+        assert!(raw.contains("prox_grad"));
+        assert!(raw.contains("scalar_cd_l1"));
+        std::env::remove_var("SKGLM_RESULTS");
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn group_f1_edge_cases() {
+        assert_eq!(group_f1(&[], &[]), 1.0);
+        assert_eq!(group_f1(&[1, 2], &[1, 2]), 1.0);
+        assert_eq!(group_f1(&[1], &[2]), 0.0);
+        let f1 = group_f1(&[1, 2, 3], &[1, 2]);
+        assert!(f1 > 0.7 && f1 < 1.0);
+    }
+}

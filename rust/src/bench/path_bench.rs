@@ -80,6 +80,9 @@ pub fn compare_cold_vs_warm(
             }
             JobEvent::PathDone(_) => break,
             JobEvent::FitDone(_) => {}
+            JobEvent::Failed { job_id, message } => {
+                panic!("path job {job_id} failed: {message}")
+            }
         }
     }
     let warm_time = t1.elapsed().as_secs_f64();

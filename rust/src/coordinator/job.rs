@@ -10,13 +10,18 @@
 //! implementation — one monomorphized `solve` call behind a trait object
 //! — and [`specs`] provides constructors for the paper's model zoo.
 
-use crate::datafit::{Datafit, Logistic, Poisson, Probit, Quadratic};
+use crate::datafit::{Datafit, GroupedQuadratic, Logistic, Poisson, Probit, Quadratic};
+use crate::datafit::multitask::QuadraticMultiTask;
 use crate::estimators::linear::quadratic_lambda_max;
 use crate::linalg::Design;
-use crate::penalty::{L1L2, Lq, Mcp, Penalty, Scad, L1};
+use crate::penalty::{
+    BlockPenalty, GroupLasso, GroupMcp, GroupScad, WeightedGroupLasso, L1L2, Lq, Mcp, Penalty,
+    Scad, L1,
+};
 use crate::solver::{
-    glm_lambda_max, solve_continued, solve_prox_newton_continued, ContinuationState, FitResult,
-    SolverOpts,
+    block_lambda_max_for, glm_lambda_max, solve_blocks_continued, solve_continued,
+    solve_prox_newton_continued, BlockDatafit, BlockPartition, ContinuationState, FitResult,
+    GroupScreenCfg, SolverOpts,
 };
 use std::sync::Arc;
 
@@ -230,6 +235,177 @@ impl<D: Datafit + 'static, P: Penalty + 'static> FitSpec for GlmSpec<D, P> {
     }
 }
 
+/// Closure type producing a block penalty at a given λ (path sweeps).
+pub type MakeBlockPenalty<B> = Arc<dyn Fn(f64) -> B + Send + Sync>;
+
+/// Generic block-problem [`FitSpec`]: any [`BlockDatafit`] ×
+/// [`BlockPenalty`] over a [`BlockPartition`] — group penalties and
+/// multitask fits become first-class scheduler jobs (warm `Job::Path`
+/// sweeps, dataset/coefficient cache, CV) through this one
+/// monomorphization, exactly as [`GlmSpec`] does for scalar models.
+pub struct BlockSpec<D: BlockDatafit + 'static, B: BlockPenalty + 'static> {
+    datafit: D,
+    penalty: B,
+    part: Arc<BlockPartition>,
+    family: &'static str,
+    lambda: f64,
+    make: MakeBlockPenalty<B>,
+    /// per-block dual-norm weights (λ_max grids / screening radii);
+    /// `None` = all ones
+    weights: Option<Arc<Vec<f64>>>,
+    /// enable the per-block gap-safe screening hook inside solves —
+    /// sound only for the grouped quadratic × (weighted) ℓ2,1 case
+    gap_screen: bool,
+}
+
+impl<D: BlockDatafit + 'static, B: BlockPenalty + 'static> BlockSpec<D, B> {
+    pub fn new(
+        datafit: D,
+        part: Arc<BlockPartition>,
+        family: &'static str,
+        lambda: f64,
+        make: MakeBlockPenalty<B>,
+    ) -> Self {
+        let penalty = make(lambda);
+        Self { datafit, penalty, part, family, lambda, make, weights: None, gap_screen: false }
+    }
+
+    /// Attach per-block dual-norm weights (weighted group Lasso).
+    pub fn with_weights(mut self, weights: Vec<f64>) -> Self {
+        assert_eq!(weights.len(), self.part.n_blocks());
+        self.weights = Some(Arc::new(weights));
+        self
+    }
+
+    /// Enable gap-safe block screening (grouped quadratic × convex ℓ2,1
+    /// penalties only — asserted at solve time).
+    pub fn with_gap_screening(mut self) -> Self {
+        self.gap_screen = true;
+        self
+    }
+
+    pub fn boxed(self) -> Box<dyn FitSpec> {
+        Box::new(self)
+    }
+}
+
+impl<D: BlockDatafit + 'static, B: BlockPenalty + 'static> FitSpec for BlockSpec<D, B> {
+    fn label(&self) -> String {
+        format!("{}/{}", self.datafit.name(), self.family)
+    }
+
+    fn datafit_name(&self) -> &'static str {
+        self.datafit.name()
+    }
+
+    fn family(&self) -> &'static str {
+        self.family
+    }
+
+    fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn is_convex(&self) -> bool {
+        self.penalty.is_convex()
+    }
+
+    fn normalize_design(&self) -> bool {
+        // block specs solve on the raw design: the grouped Lipschitz
+        // bounds already absorb column-scale heterogeneity, and the
+        // multitask M/EEG convention keeps the leadfield unscaled
+        false
+    }
+
+    fn lambda_max(&self, design: &Design, y: &[f64]) -> f64 {
+        let mut datafit = self.datafit.clone();
+        let weights = self.weights.as_deref().map(|w| &w[..]);
+        block_lambda_max_for(design, y, &mut datafit, &self.part, weights)
+    }
+
+    fn at_lambda(&self, lambda: f64) -> Box<dyn FitSpec> {
+        Box::new(BlockSpec {
+            datafit: self.datafit.clone(),
+            penalty: (self.make)(lambda),
+            part: Arc::clone(&self.part),
+            family: self.family,
+            lambda,
+            make: Arc::clone(&self.make),
+            weights: self.weights.clone(),
+            gap_screen: self.gap_screen,
+        })
+    }
+
+    // the scalar screened-lasso fast path must never hijack a block spec:
+    // block screening runs *inside* solve() via GroupScreenCfg instead
+    fn supports_gap_screening(&self) -> bool {
+        false
+    }
+
+    fn solve(
+        &self,
+        design: &Design,
+        y: &[f64],
+        opts: &SolverOpts,
+        state: &mut ContinuationState,
+        col_sq_norms: Option<&[f64]>,
+        _frozen: Option<&[bool]>,
+    ) -> FitResult {
+        let mut datafit = self.datafit.clone();
+        let screen = if self.gap_screen && self.penalty.is_convex() {
+            // the sphere test assumes the grouped quadratic's residual
+            // state and column-partition — reject misuse loudly instead
+            // of certifying wrong zeros on another datafit
+            assert_eq!(
+                self.datafit.name(),
+                "grouped_quadratic",
+                "gap-safe block screening is only sound for the grouped quadratic datafit"
+            );
+            let weights: Vec<f64> = match &self.weights {
+                Some(w) => w.as_ref().clone(),
+                None => vec![1.0; self.part.n_blocks()],
+            };
+            let grouped_sq = match col_sq_norms {
+                Some(sq) => crate::linalg::group_reduce_sq(
+                    sq,
+                    self.part.flat_indices(),
+                    self.part.offsets(),
+                ),
+                None => design.group_sq_norms(self.part.flat_indices(), self.part.offsets()),
+            };
+            Some(GroupScreenCfg {
+                lambda: self.lambda,
+                weights,
+                block_frob: grouped_sq.iter().map(|s| s.sqrt()).collect(),
+            })
+        } else {
+            None
+        };
+        let result = solve_blocks_continued(
+            design,
+            y,
+            &self.part,
+            &mut datafit,
+            &self.penalty,
+            opts,
+            state,
+            col_sq_norms,
+            screen,
+        );
+        FitResult {
+            beta: result.v,
+            objective: result.objective,
+            kkt: result.kkt,
+            n_outer: result.n_outer,
+            n_epochs: result.n_epochs,
+            converged: result.converged,
+            history: result.history,
+            accepted_extrapolations: result.accepted_extrapolations,
+            rejected_extrapolations: result.rejected_extrapolations,
+        }
+    }
+}
+
 /// Constructors for the paper's model zoo. Anything not listed here can
 /// be built directly with [`GlmSpec::new`] — the point of the trait-based
 /// job layer is that the scheduler does not enumerate models.
@@ -307,6 +483,70 @@ pub mod specs {
             .with_prox_newton()
             .boxed()
     }
+
+    /// Group Lasso over `part` (unweighted), gap-safe block screening on.
+    pub fn group_lasso(lambda: f64, part: Arc<BlockPartition>) -> Box<dyn FitSpec> {
+        let make: MakeBlockPenalty<GroupLasso> = Arc::new(GroupLasso::new);
+        BlockSpec::new(GroupedQuadratic::new(Arc::clone(&part)), part, "group_lasso", lambda, make)
+            .with_gap_screening()
+            .boxed()
+    }
+
+    /// √|b|-weighted group Lasso over `part`, gap-safe block screening on.
+    pub fn weighted_group_lasso(lambda: f64, part: Arc<BlockPartition>) -> Box<dyn FitSpec> {
+        let weights: Vec<f64> =
+            (0..part.n_blocks()).map(|b| (part.block_len(b) as f64).sqrt()).collect();
+        let w = weights.clone();
+        let make: MakeBlockPenalty<WeightedGroupLasso> =
+            Arc::new(move |l| WeightedGroupLasso::new(l, w.clone()));
+        BlockSpec::new(
+            GroupedQuadratic::new(Arc::clone(&part)),
+            part,
+            "weighted_group_lasso",
+            lambda,
+            make,
+        )
+        .with_weights(weights)
+        .with_gap_screening()
+        .boxed()
+    }
+
+    /// Group MCP over `part` (non-convex — no screening, no warm-start
+    /// reuse across jobs).
+    pub fn group_mcp(lambda: f64, gamma: f64, part: Arc<BlockPartition>) -> Box<dyn FitSpec> {
+        let make: MakeBlockPenalty<GroupMcp> = Arc::new(move |l| GroupMcp::new(l, gamma));
+        BlockSpec::new(GroupedQuadratic::new(Arc::clone(&part)), part, "group_mcp", lambda, make)
+            .boxed()
+    }
+
+    /// Group SCAD over `part`.
+    pub fn group_scad(lambda: f64, gamma: f64, part: Arc<BlockPartition>) -> Box<dyn FitSpec> {
+        let make: MakeBlockPenalty<GroupScad> = Arc::new(move |l| GroupScad::new(l, gamma));
+        BlockSpec::new(GroupedQuadratic::new(Arc::clone(&part)), part, "group_scad", lambda, make)
+            .boxed()
+    }
+
+    /// Multitask Lasso (ℓ2,1 on rows of `W ∈ R^{p×T}`) as a schedulable
+    /// spec: the dataset's `y` must be task-major of length `n·T`.
+    pub fn multitask_l21(lambda: f64, p: usize, n_tasks: usize) -> Box<dyn FitSpec> {
+        let part = Arc::new(BlockPartition::uniform(p, n_tasks));
+        let make: MakeBlockPenalty<crate::penalty::BlockL21> =
+            Arc::new(crate::penalty::BlockL21::new);
+        BlockSpec::new(QuadraticMultiTask::new(n_tasks), part, "l21", lambda, make).boxed()
+    }
+
+    /// Multitask block-MCP spec (non-convex rows).
+    pub fn multitask_mcp(
+        lambda: f64,
+        gamma: f64,
+        p: usize,
+        n_tasks: usize,
+    ) -> Box<dyn FitSpec> {
+        let part = Arc::new(BlockPartition::uniform(p, n_tasks));
+        let make: MakeBlockPenalty<crate::penalty::BlockMcp> =
+            Arc::new(move |l| crate::penalty::BlockMcp::new(l, gamma));
+        BlockSpec::new(QuadraticMultiTask::new(n_tasks), part, "block_mcp", lambda, make).boxed()
+    }
 }
 
 #[cfg(test)]
@@ -376,6 +616,56 @@ mod tests {
         assert!(fit.converged, "kkt = {}", fit.kkt);
         assert!(!fit.support().is_empty());
         assert!(state.beta.is_some());
+    }
+
+    #[test]
+    fn block_spec_metadata_and_solve_match_direct_engine() {
+        use crate::data::{grouped_correlated, GroupedSpec};
+        let (ds, part) = grouped_correlated(
+            GroupedSpec { n: 70, p: 40, group_size: 5, active_groups: 2, rho: 0.3, snr: 8.0 },
+            2,
+        );
+        let spec = specs::group_lasso(1.0, Arc::clone(&part));
+        assert!(spec.is_convex());
+        assert!(!spec.normalize_design());
+        assert!(
+            !spec.supports_gap_screening(),
+            "block specs must not route through the scalar screened fast path"
+        );
+        assert_eq!(spec.family(), "group_lasso");
+        assert_eq!(spec.datafit_name(), "grouped_quadratic");
+        assert_eq!(spec.label(), "grouped_quadratic/group_lasso");
+
+        let lam_max = spec.lambda_max(&ds.design, &ds.y);
+        let direct_lmax =
+            crate::estimators::group_lambda_max(&ds.design, &ds.y, &part, None);
+        assert!((lam_max - direct_lmax).abs() < 1e-14);
+
+        let at = spec.at_lambda(lam_max / 4.0);
+        assert_eq!(at.lambda(), lam_max / 4.0);
+        let mut state = ContinuationState::default();
+        let fit = at.solve(
+            &ds.design,
+            &ds.y,
+            &SolverOpts::default().with_tol(1e-10),
+            &mut state,
+            None,
+            None,
+        );
+        assert!(fit.converged, "kkt {}", fit.kkt);
+        let direct = crate::estimators::group::group_lasso(lam_max / 4.0, Arc::clone(&part))
+            .with_tol(1e-10)
+            .fit(&ds.design, &ds.y);
+        assert!((fit.objective - direct.result.objective).abs() < 1e-9);
+
+        let mcp = specs::group_mcp(0.1, 3.0, Arc::clone(&part));
+        assert!(!mcp.is_convex());
+        assert!(!mcp.supports_gap_screening());
+
+        let mt = specs::multitask_l21(0.1, 12, 3);
+        assert!(mt.is_convex());
+        assert_eq!(mt.datafit_name(), "quadratic_multitask");
+        assert_eq!(mt.family(), "l21");
     }
 
     #[test]

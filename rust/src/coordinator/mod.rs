@@ -23,7 +23,7 @@ pub mod pool;
 pub mod scheduler;
 
 pub use cache::{CacheStats, DatasetCache};
-pub use job::{specs, FitSpec, GlmSpec, SolverTopology};
+pub use job::{specs, BlockSpec, FitSpec, GlmSpec, SolverTopology};
 pub use pool::run_parallel;
 pub use scheduler::{
     FitOutcome, FitScheduler, Job, JobEvent, PathPointOutcome, PathSummary,

@@ -5,7 +5,12 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Run all jobs, at most `threads` at a time; preserves input order in the
-/// output. Panics in jobs propagate.
+/// output.
+///
+/// A panicking job no longer kills its worker mid-batch: panics are
+/// caught per job so the *other* jobs still complete, then the first
+/// panic is re-raised with its job index and original message attached —
+/// one divergent fit cannot silently swallow a CV fold batch.
 pub fn run_parallel<T, F>(jobs: Vec<F>, threads: usize) -> Vec<T>
 where
     T: Send,
@@ -27,6 +32,7 @@ where
     let next = AtomicUsize::new(0);
     let jobs: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
     let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let failures: Mutex<Vec<(usize, String)>> = Mutex::new(Vec::new());
 
     std::thread::scope(|scope| {
         for _ in 0..threads {
@@ -36,11 +42,22 @@ where
                     break;
                 }
                 let job = jobs[i].lock().unwrap().take().expect("job taken twice");
-                let out = job();
-                *results[i].lock().unwrap() = Some(out);
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)) {
+                    Ok(out) => *results[i].lock().unwrap() = Some(out),
+                    Err(payload) => {
+                        let msg = super::scheduler::panic_message(payload);
+                        failures.lock().unwrap().push((i, msg));
+                    }
+                }
             });
         }
     });
+    let mut failures = failures.into_inner().unwrap();
+    if !failures.is_empty() {
+        failures.sort_by_key(|(i, _)| *i);
+        let (i, msg) = &failures[0];
+        panic!("pool job {i} panicked ({} of {n} jobs failed): {msg}", failures.len());
+    }
     results
         .into_iter()
         .map(|m| m.into_inner().unwrap().expect("job did not complete"))
@@ -81,5 +98,33 @@ mod tests {
     fn more_threads_than_jobs() {
         let jobs: Vec<_> = (0..3).map(|i| move || i).collect();
         assert_eq!(run_parallel(jobs, 64), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn panicking_job_reports_index_and_message_after_batch() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static COMPLETED: AtomicUsize = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..6)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 2 {
+                        panic!("fold diverged");
+                    }
+                    COMPLETED.fetch_add(1, Ordering::SeqCst);
+                    i
+                }) as Box<dyn FnOnce() -> usize + Send>
+            })
+            .collect();
+        let err =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_parallel(jobs, 3)))
+                .unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "?".into());
+        assert!(msg.contains("pool job 2"), "index lost: {msg}");
+        assert!(msg.contains("fold diverged"), "original message lost: {msg}");
+        // the other five jobs ran to completion despite the panic
+        assert_eq!(COMPLETED.load(Ordering::SeqCst), 5);
     }
 }

@@ -76,6 +76,17 @@ pub enum JobEvent {
     FitDone(FitOutcome),
     PathPoint(PathPointOutcome),
     PathDone(PathSummary),
+    /// The job's solve panicked on its worker. The worker caught the
+    /// panic and keeps serving the queue — one divergent fit cannot take
+    /// down a mixed batch — and the original panic message is preserved
+    /// here instead of being lost to a dead thread.
+    ///
+    /// `Failed` is the job's **terminal** event: a path job that fails
+    /// mid-sweep emits its points so far, then `Failed`, and **no**
+    /// `PathDone` — consumers must count job-terminal events
+    /// (`FitDone`/`PathDone`/`Failed`), not a fixed per-point total, or
+    /// they will block forever on a failed sweep (see `skglm serve`).
+    Failed { job_id: u64, message: String },
 }
 
 impl JobEvent {
@@ -84,7 +95,21 @@ impl JobEvent {
             JobEvent::FitDone(o) => o.job_id,
             JobEvent::PathPoint(o) => o.job_id,
             JobEvent::PathDone(s) => s.job_id,
+            JobEvent::Failed { job_id, .. } => *job_id,
         }
+    }
+}
+
+/// Best-effort extraction of a panic payload's message (`&str` and
+/// `String` payloads cover `panic!`/`assert!`/`expect`). Shared with the
+/// experiment pool ([`crate::coordinator::pool::run_parallel`]).
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -126,7 +151,23 @@ impl FitScheduler {
                         guard.recv()
                     };
                     match msg {
-                        Ok(Msg::Job(id, job)) => run_job(id, job, &cache, &ev_tx),
+                        Ok(Msg::Job(id, job)) => {
+                            // a panicking solve (divergent fit, violated
+                            // penalty regime, ...) is surfaced as a Failed
+                            // event; the worker survives to run the rest
+                            // of the batch
+                            let res = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| {
+                                    run_job(id, job, &cache, &ev_tx)
+                                }),
+                            );
+                            if let Err(payload) = res {
+                                let _ = ev_tx.send(JobEvent::Failed {
+                                    job_id: id,
+                                    message: panic_message(payload),
+                                });
+                            }
+                        }
                         Ok(Msg::Shutdown) | Err(_) => break,
                     }
                 })
@@ -166,18 +207,28 @@ impl FitScheduler {
     }
 
     /// Block until `count` events arrive (any kind, completion order).
+    ///
+    /// Counting caveat: a path job that fails mid-sweep emits fewer
+    /// events than `n_points + 1` (its terminal event is
+    /// [`JobEvent::Failed`]) — size an expected count only from jobs you
+    /// know cannot fail, or drain `self.events` with a terminal-event
+    /// loop instead.
     pub fn collect_events(&self, count: usize) -> Vec<JobEvent> {
         (0..count).map(|_| self.events.recv().expect("worker died")).collect()
     }
 
     /// Block until `count` single-fit outcomes arrive. Panics if a path
-    /// event interleaves — use [`FitScheduler::collect_events`] for mixed
-    /// workloads.
+    /// event interleaves (use [`FitScheduler::collect_events`] for mixed
+    /// workloads) or a job failed — the failure's original panic message
+    /// is included.
     pub fn collect_fits(&self, count: usize) -> Vec<FitOutcome> {
         self.collect_events(count)
             .into_iter()
             .map(|e| match e {
                 JobEvent::FitDone(o) => o,
+                JobEvent::Failed { job_id, message } => {
+                    panic!("job {job_id} failed on its worker: {message}")
+                }
                 other => panic!(
                     "collect_fits saw a path event (job {}); use collect_events",
                     other.job_id()
@@ -468,5 +519,77 @@ mod tests {
     fn shutdown_without_jobs() {
         let sched = FitScheduler::start(3);
         sched.shutdown(); // must not hang
+    }
+
+    /// A spec whose solve panics — stands in for a divergent fit.
+    struct PanicSpec;
+    impl crate::coordinator::job::FitSpec for PanicSpec {
+        fn label(&self) -> String {
+            "panic/test".into()
+        }
+        fn datafit_name(&self) -> &'static str {
+            "panic"
+        }
+        fn family(&self) -> &'static str {
+            "test"
+        }
+        fn lambda(&self) -> f64 {
+            0.1
+        }
+        fn is_convex(&self) -> bool {
+            false // keep it away from the coefficient cache
+        }
+        fn normalize_design(&self) -> bool {
+            false
+        }
+        fn lambda_max(&self, _d: &crate::linalg::Design, _y: &[f64]) -> f64 {
+            1.0
+        }
+        fn at_lambda(&self, _l: f64) -> Box<dyn crate::coordinator::job::FitSpec> {
+            Box::new(PanicSpec)
+        }
+        fn solve(
+            &self,
+            _design: &crate::linalg::Design,
+            _y: &[f64],
+            _opts: &SolverOpts,
+            _state: &mut ContinuationState,
+            _col_sq_norms: Option<&[f64]>,
+            _frozen: Option<&[bool]>,
+        ) -> crate::solver::FitResult {
+            panic!("synthetic divergence: step outside the valid regime");
+        }
+    }
+
+    #[test]
+    fn worker_panic_surfaces_as_failed_event_and_batch_survives() {
+        let ds = dataset(5);
+        let lam = quadratic_lambda_max(&ds.design, &ds.y) / 10.0;
+        let mut sched = FitScheduler::start(1); // one worker: it must survive
+        let bad = sched.submit_fit(Arc::clone(&ds), Box::new(PanicSpec), SolverOpts::default());
+        let good = sched.submit_fit(Arc::clone(&ds), specs::lasso(lam), SolverOpts::default());
+        let events = sched.collect_events(2);
+        let mut saw_failed = false;
+        let mut saw_done = false;
+        for e in events {
+            match e {
+                JobEvent::Failed { job_id, message } => {
+                    assert_eq!(job_id, bad);
+                    assert!(
+                        message.contains("synthetic divergence"),
+                        "original panic message lost: {message:?}"
+                    );
+                    saw_failed = true;
+                }
+                JobEvent::FitDone(o) => {
+                    assert_eq!(o.job_id, good);
+                    assert!(o.result.converged);
+                    saw_done = true;
+                }
+                _ => panic!("unexpected event"),
+            }
+        }
+        assert!(saw_failed && saw_done, "one divergent fit must not take down the batch");
+        sched.shutdown();
     }
 }

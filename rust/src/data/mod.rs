@@ -6,6 +6,7 @@ pub mod meeg;
 pub mod synthetic;
 
 pub use synthetic::{
-    correlated, paper_dataset, paper_dataset_small, poisson_correlated, probit_correlated,
-    sparse, with_poisson_targets, with_probit_targets, CorrelatedSpec, Dataset, SparseSpec,
+    correlated, grouped_correlated, paper_dataset, paper_dataset_small, poisson_correlated,
+    probit_correlated, sparse, with_poisson_targets, with_probit_targets, CorrelatedSpec,
+    Dataset, GroupedSpec, SparseSpec,
 };

@@ -12,6 +12,7 @@
 //! This mirrors skglm's `Datafit` protocol (`initialize` /
 //! `gradient_scalar` / `value`) adapted to Rust ownership.
 
+pub mod grouped;
 pub mod huber;
 pub mod logistic;
 pub mod multitask;
@@ -20,8 +21,10 @@ pub mod probit;
 pub mod quadratic;
 pub mod svc;
 
+pub use grouped::GroupedQuadratic;
 pub use huber::Huber;
 pub use logistic::Logistic;
+pub use multitask::QuadraticMultiTask;
 pub use poisson::Poisson;
 pub use probit::Probit;
 pub use quadratic::Quadratic;

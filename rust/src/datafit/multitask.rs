@@ -1,11 +1,15 @@
 //! Multitask quadratic datafit `f(W) = ‖Y − XW‖²_F / (2n)` for
 //! `W ∈ R^{p×T}` — the M/EEG inverse problem loss (paper §3.2, Figure 4).
 //!
-//! Operated on by the block coordinate-descent solver
-//! ([`crate::solver::multitask`]): one "coordinate" is a row `W_{j,:}`,
-//! the state is the residual `R = XW − Y` (n × T, column-major by task).
+//! Implements [`BlockDatafit`] for the shared block-coordinate engine
+//! ([`crate::solver::block_cd`]): one block is a row `W_{j,:}` (the
+//! uniform partition `BlockPartition::uniform(p, T)` over the row-major
+//! flattened `w[j*T + t]`), the state is the residual `R = XW − Y`
+//! (n × T, task-major: `state[t*n + i]`).
 
 use crate::linalg::Design;
+use crate::solver::block_cd::BlockDatafit;
+use crate::solver::partition::BlockPartition;
 
 #[derive(Clone, Debug, Default)]
 pub struct QuadraticMultiTask {
@@ -15,39 +19,57 @@ pub struct QuadraticMultiTask {
 }
 
 impl QuadraticMultiTask {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn init(&mut self, design: &Design, n_tasks: usize) {
-        let n = design.nrows() as f64;
-        self.inv_n = 1.0 / n;
-        self.n_tasks = n_tasks;
-        self.lipschitz = design.col_sq_norms().iter().map(|s| s / n).collect();
-    }
-
-    pub fn lipschitz(&self) -> &[f64] {
-        &self.lipschitz
+    /// A multitask datafit for `n_tasks` response columns.
+    pub fn new(n_tasks: usize) -> Self {
+        assert!(n_tasks >= 1);
+        Self { lipschitz: Vec::new(), inv_n: 0.0, n_tasks }
     }
 
     pub fn n_tasks(&self) -> usize {
         self.n_tasks
     }
 
+    /// Gradient block `∇_{j,:} f = X[:,j]ᵀ R / n` into `out` (length T).
+    pub fn grad_row(&self, design: &Design, state: &[f64], j: usize, out: &mut [f64]) {
+        let n = design.nrows();
+        for (t, g) in out.iter_mut().enumerate() {
+            *g = self.inv_n * design.col_dot(j, &state[t * n..(t + 1) * n]);
+        }
+    }
+}
+
+impl BlockDatafit for QuadraticMultiTask {
+    fn init_cached(&mut self, design: &Design, y: &[f64], col_sq_norms: Option<&[f64]>) {
+        let n = design.nrows() as f64;
+        assert_eq!(y.len(), design.nrows() * self.n_tasks, "y must be task-major n·T");
+        self.inv_n = 1.0 / n;
+        self.lipschitz = match col_sq_norms {
+            Some(sq) => {
+                assert_eq!(sq.len(), design.ncols());
+                sq.iter().map(|s| s / n).collect()
+            }
+            None => design.col_sq_norms().iter().map(|s| s / n).collect(),
+        };
+    }
+
+    fn block_lipschitz(&self) -> &[f64] {
+        &self.lipschitz
+    }
+
     /// Residual R = XW − Y, stored task-major: `state[t*n + i]`.
-    /// `w` is row-major by coefficient row: `w[j*T + t]`.
-    pub fn init_state(&self, design: &Design, y: &[f64], w: &[f64]) -> Vec<f64> {
+    /// `v` is row-major by coefficient row: `v[j*T + t]`.
+    fn init_state(&self, design: &Design, y: &[f64], v: &[f64]) -> Vec<f64> {
         let n = design.nrows();
         let p = design.ncols();
         let t_count = self.n_tasks;
         assert_eq!(y.len(), n * t_count);
-        assert_eq!(w.len(), p * t_count);
+        assert_eq!(v.len(), p * t_count);
         let mut state = vec![0.0; n * t_count];
         let mut beta_t = vec![0.0; p];
         let mut xb = vec![0.0; n];
         for t in 0..t_count {
             for j in 0..p {
-                beta_t[j] = w[j * t_count + t];
+                beta_t[j] = v[j * t_count + t];
             }
             design.matvec(&beta_t, &mut xb);
             for i in 0..n {
@@ -58,25 +80,58 @@ impl QuadraticMultiTask {
     }
 
     /// After `W_{j,:} += delta` (length T): `R[:, t] += delta_t · X[:, j]`.
-    pub fn update_state(&self, design: &Design, j: usize, delta: &[f64], state: &mut [f64]) {
+    fn update_state(&self, design: &Design, b: usize, delta: &[f64], state: &mut [f64]) {
         let n = design.nrows();
         for (t, &d) in delta.iter().enumerate() {
             if d != 0.0 {
-                design.col_axpy(j, d, &mut state[t * n..(t + 1) * n]);
+                design.col_axpy(b, d, &mut state[t * n..(t + 1) * n]);
             }
         }
     }
 
-    pub fn value(&self, state: &[f64]) -> f64 {
+    fn value(&self, _y: &[f64], _v: &[f64], state: &[f64]) -> f64 {
         0.5 * self.inv_n * crate::linalg::sq_nrm2(state)
     }
 
-    /// Gradient block `∇_{j,:} f = X[:,j]ᵀ R / n` into `out` (length T).
-    pub fn grad_row(&self, design: &Design, state: &[f64], j: usize, out: &mut [f64]) {
+    fn grad_block(
+        &self,
+        design: &Design,
+        _y: &[f64],
+        state: &[f64],
+        _v: &[f64],
+        b: usize,
+        out: &mut [f64],
+    ) {
+        self.grad_row(design, state, b, out);
+    }
+
+    /// Fused scoring pass: one kernel-engine `Xᵀ R[:,t]` per task instead
+    /// of p·T column dots, scattered into the row-major packed gradient.
+    fn grad_all(
+        &self,
+        design: &Design,
+        _y: &[f64],
+        state: &[f64],
+        _v: &[f64],
+        part: &BlockPartition,
+        out: &mut [f64],
+    ) {
         let n = design.nrows();
-        for (t, g) in out.iter_mut().enumerate() {
-            *g = self.inv_n * design.col_dot(j, &state[t * n..(t + 1) * n]);
+        let p = design.ncols();
+        let t_count = self.n_tasks;
+        debug_assert_eq!(part.n_blocks(), p);
+        debug_assert_eq!(out.len(), p * t_count);
+        let mut xtr = vec![0.0; p];
+        for t in 0..t_count {
+            design.matvec_t(&state[t * n..(t + 1) * n], &mut xtr);
+            for j in 0..p {
+                out[j * t_count + t] = self.inv_n * xtr[j];
+            }
         }
+    }
+
+    fn name(&self) -> &'static str {
+        "quadratic_multitask"
     }
 }
 
@@ -90,8 +145,8 @@ mod tests {
         // Y: 3 samples × 2 tasks, task-major
         let y = vec![1.0, 0.0, -1.0, 0.5, 0.5, 0.0];
         let d: Design = x.into();
-        let mut f = QuadraticMultiTask::new();
-        f.init(&d, 2);
+        let mut f = QuadraticMultiTask::new(2);
+        f.init(&d, &y);
         (d, y, f)
     }
 
@@ -137,8 +192,25 @@ mod tests {
             let mut wm = w.clone();
             wm[t] -= eps;
             let sm = f.init_state(&d, &y, &wm);
-            let fd = (f.value(&sp) - f.value(&sm)) / (2.0 * eps);
+            let fd = (f.value(&y, &wp, &sp) - f.value(&y, &wm, &sm)) / (2.0 * eps);
             assert!((fd - g[t]).abs() < 1e-6, "t={t}");
+        }
+    }
+
+    #[test]
+    fn fused_grad_all_matches_per_block() {
+        let (d, y, f) = setup();
+        let part = BlockPartition::uniform(2, 2);
+        let w = vec![0.2, -0.1, 0.4, 0.3];
+        let state = f.init_state(&d, &y, &w);
+        let mut fused = vec![0.0; 4];
+        f.grad_all(&d, &y, &state, &w, &part, &mut fused);
+        let mut per_block = vec![0.0; 4];
+        for b in 0..2 {
+            f.grad_block(&d, &y, &state, &w, b, &mut per_block[b * 2..(b + 1) * 2]);
+        }
+        for (a, b) in fused.iter().zip(per_block.iter()) {
+            assert!((a - b).abs() < 1e-14, "{a} vs {b}");
         }
     }
 }

@@ -165,6 +165,112 @@ pub fn lasso_cv(
     }
 }
 
+/// K-fold CV for the **group Lasso** over a geometric λ grid — the same
+/// leakage-guarded protocol as [`lasso_cv`] (per-fold training-rows-only
+/// λ_max anchors, warm-started within-fold sweeps, NaN-last winner
+/// selection), with solves running on the block-coordinate engine.
+pub fn group_lasso_cv(
+    dataset: &Dataset,
+    part: &std::sync::Arc<crate::solver::BlockPartition>,
+    lambda_ratios: &[f64],
+    k_folds: usize,
+    opts: &SolverOpts,
+    seed: u64,
+    threads: usize,
+) -> CvResult {
+    use crate::penalty::GroupLasso;
+    use crate::solver::{solve_blocks_continued, ContinuationState};
+    assert!(k_folds >= 2);
+    let n = dataset.n();
+    assert!(n >= 2 * k_folds, "need at least 2 samples per fold");
+    let lam_max = super::group::group_lambda_max(&dataset.design, &dataset.y, part, None);
+
+    let mut order: Vec<usize> = (0..n).collect();
+    Rng::seed_from_u64(seed).shuffle(&mut order);
+    let folds: Vec<Vec<usize>> = (0..k_folds)
+        .map(|k| order.iter().skip(k).step_by(k_folds).cloned().collect())
+        .collect();
+
+    let jobs: Vec<_> = folds
+        .iter()
+        .map(|val_rows| {
+            let val_rows = val_rows.clone();
+            let ratios = lambda_ratios.to_vec();
+            let opts = opts.clone();
+            let part = std::sync::Arc::clone(part);
+            move || -> (f64, Vec<f64>) {
+                let mut in_val = vec![false; n];
+                for &i in &val_rows {
+                    in_val[i] = true;
+                }
+                let train_rows: Vec<usize> = (0..n).filter(|&i| !in_val[i]).collect();
+                let x_train = take_rows(&dataset.design, &train_rows);
+                let y_train: Vec<f64> = train_rows.iter().map(|&i| dataset.y[i]).collect();
+                let x_val = take_rows(&dataset.design, &val_rows);
+                let y_val: Vec<f64> = val_rows.iter().map(|&i| dataset.y[i]).collect();
+
+                let fold_lam_max =
+                    super::group::group_lambda_max(&x_train, &y_train, &part, None);
+                // warm-started within-fold sweep through the block engine
+                let mut state = ContinuationState::default();
+                let mut datafit =
+                    crate::datafit::GroupedQuadratic::new(std::sync::Arc::clone(&part));
+                let mut mses = Vec::with_capacity(ratios.len());
+                for &ratio in &ratios {
+                    let pen = GroupLasso::new(fold_lam_max * ratio);
+                    let fit = solve_blocks_continued(
+                        &x_train, &y_train, &part, &mut datafit, &pen, &opts, &mut state,
+                        None, None,
+                    );
+                    let mut pred = vec![0.0; y_val.len()];
+                    x_val.matvec(&fit.v, &mut pred);
+                    let mse = pred
+                        .iter()
+                        .zip(y_val.iter())
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum::<f64>()
+                        / y_val.len() as f64;
+                    mses.push(mse);
+                }
+                (fold_lam_max, mses)
+            }
+        })
+        .collect();
+
+    let per_fold = run_parallel(jobs, threads);
+    let fold_lambda_max: Vec<f64> = per_fold.iter().map(|(lm, _)| *lm).collect();
+    let mut cv_mse = vec![0.0; lambda_ratios.len()];
+    for (_, fold) in &per_fold {
+        for (acc, &m) in cv_mse.iter_mut().zip(fold.iter()) {
+            *acc += m / k_folds as f64;
+        }
+    }
+    let best_index = cv_mse
+        .iter()
+        .enumerate()
+        .min_by(|a, b| crate::util::order::nan_last(*a.1, *b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    let best_lambda = lam_max * lambda_ratios[best_index];
+    // refit with the SAME solver configuration the folds used — not just
+    // the tolerance — so the reported coefficients come from the solver
+    // that actually selected λ
+    let beta = super::group::group_lasso(best_lambda, std::sync::Arc::clone(part))
+        .with_opts(opts.clone())
+        .fit(&dataset.design, &dataset.y)
+        .result
+        .v;
+    CvResult {
+        lambda_ratios: lambda_ratios.to_vec(),
+        cv_mse,
+        best_index,
+        best_lambda,
+        lambda_max: lam_max,
+        fold_lambda_max,
+        beta,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,6 +338,39 @@ mod tests {
             .map(|(i, _)| i)
             .unwrap();
         assert_eq!(best, 2);
+    }
+
+    #[test]
+    fn group_cv_picks_an_interior_lambda_and_recovers_groups() {
+        let (ds, part) = crate::data::grouped_correlated(
+            crate::data::GroupedSpec {
+                n: 120,
+                p: 48,
+                group_size: 4,
+                active_groups: 3,
+                rho: 0.3,
+                snr: 10.0,
+            },
+            5,
+        );
+        let ratios = geometric_grid(1e-3, 8);
+        let cv = group_lasso_cv(
+            &ds,
+            &part,
+            &ratios,
+            4,
+            &SolverOpts::default().with_tol(1e-8),
+            0,
+            2,
+        );
+        assert_eq!(cv.cv_mse.len(), 8);
+        assert!(cv.best_index > 0, "cv chose the null model");
+        assert!(cv.cv_mse[cv.best_index] < cv.cv_mse[0]);
+        // refit recovers the planted groups
+        let rec = crate::metrics::support_recovery(&cv.beta, &ds.beta_true, 1e-8);
+        assert_eq!(rec.false_negatives, 0, "cv-selected model misses true features");
+        // per-fold anchors are training-only (leakage guard inherited)
+        assert_eq!(cv.fold_lambda_max.len(), 4);
     }
 
     #[test]

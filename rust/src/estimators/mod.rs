@@ -3,12 +3,14 @@
 //! column: a new model is one datafit + one penalty).
 
 pub mod cv;
+pub mod group;
 pub mod linear;
 pub mod multitask;
 pub mod path;
 pub mod svc;
 
-pub use cv::{lasso_cv, CvResult};
+pub use cv::{group_lasso_cv, lasso_cv, CvResult};
+pub use group::{group_lambda_max, GroupEstimator, GroupFit};
 pub use linear::{ElasticNet, Lasso, McpRegressor, ScadRegressor, SparseLogisticRegression};
 pub use multitask::{BlockMcpRegressor, MultiTaskLasso};
 pub use path::{lasso_path, mcp_path, scad_path, PathPoint, PathResult};

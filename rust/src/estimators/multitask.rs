@@ -46,6 +46,16 @@ pub fn unflatten_coef(w: &[f64], n_tasks: usize) -> DenseMatrix {
     m
 }
 
+/// Pick the fit with the smallest objective, ordering NaNs (divergent
+/// non-convex fits) last — the multitask analogue of `PathResult`'s
+/// NaN-safe best-point selectors. Returns `None` only when every
+/// objective is NaN.
+pub fn best_fit(fits: &[MultiTaskFit]) -> Option<&MultiTaskFit> {
+    fits.iter()
+        .filter(|f| !f.objective.is_nan())
+        .min_by(|a, b| crate::util::order::nan_last(a.objective, b.objective))
+}
+
 /// Multitask Lasso: `min ‖Y−XW‖²_F/2n + λ Σ_j ‖W_{j,:}‖₂`.
 #[derive(Clone, Debug)]
 pub struct MultiTaskLasso {
@@ -125,6 +135,26 @@ mod tests {
         // just below lambda_max: at least one active row
         let fit2 = MultiTaskLasso::new(lam * 0.9).fit(&design, &y, 5);
         assert!(!fit2.row_support().is_empty());
+    }
+
+    #[test]
+    fn best_fit_orders_nan_objectives_last() {
+        let mk = |obj: f64| MultiTaskFit {
+            w: vec![0.0],
+            n_tasks: 1,
+            objective: obj,
+            kkt: 0.0,
+            converged: obj.is_finite(),
+            n_outer: 1,
+            n_epochs: 1,
+            history: Vec::new(),
+        };
+        // a divergent (NaN) block-MCP fit must not panic or win selection
+        let fits = [mk(f64::NAN), mk(3.0), mk(1.0), mk(f64::NAN)];
+        let best = best_fit(&fits).expect("finite fit exists");
+        assert_eq!(best.objective, 1.0);
+        let all_nan = [mk(f64::NAN)];
+        assert!(best_fit(&all_nan).is_none());
     }
 
     #[test]

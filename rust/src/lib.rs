@@ -40,12 +40,15 @@ pub mod util;
 
 /// Convenient glob-import surface.
 pub mod prelude {
-    pub use crate::data::{CorrelatedSpec, Dataset, SparseSpec};
-    pub use crate::datafit::{Datafit, Logistic, Poisson, Probit, Quadratic, QuadraticSvc};
+    pub use crate::data::{CorrelatedSpec, Dataset, GroupedSpec, SparseSpec};
+    pub use crate::datafit::{
+        Datafit, GroupedQuadratic, Logistic, Poisson, Probit, Quadratic, QuadraticSvc,
+    };
     pub use crate::estimators::{ElasticNet, Lasso, LinearSvc, McpRegressor, ScadRegressor};
     pub use crate::linalg::{CscMatrix, DenseMatrix, Design};
     pub use crate::penalty::{
-        BlockL21, BlockMcp, BlockScad, BoxIndicator, L1L2, Lq, Mcp, Penalty, Scad, WeightedL1, L1,
+        BlockL21, BlockMcp, BlockPenalty, BlockScad, BoxIndicator, GroupLasso, GroupMcp,
+        GroupScad, WeightedGroupLasso, L1L2, Lq, Mcp, Penalty, Scad, WeightedL1, L1,
     };
-    pub use crate::solver::{solve, FitResult, SolverOpts};
+    pub use crate::solver::{solve, solve_blocks, BlockPartition, FitResult, SolverOpts};
 }

@@ -178,6 +178,33 @@ impl Design {
         });
     }
 
+    /// `Xᵀr` gathered in block-partition order: `out[k] = X[:, cols[k]]ᵀ r`
+    /// where `cols` is a partition's flattened column order
+    /// (`BlockPartition::flat_indices`). When the partition keeps the
+    /// natural column order (scalar / contiguous groups / multitask rows)
+    /// this *is* `matvec_t` — the blocked panel / nnz-balanced CSC kernel
+    /// of the kernel engine; scattered groups route through the
+    /// nnz-balanced subset kernel. This is the grouped scoring pass's
+    /// O(n·p) hot spot.
+    pub fn matvec_t_groups(&self, r: &[f64], cols: &[usize], out: &mut [f64]) {
+        if cols.len() == self.ncols() && cols.iter().enumerate().all(|(k, &j)| k == j) {
+            self.matvec_t(r, out);
+        } else {
+            self.matvec_t_subset(r, cols, out);
+        }
+    }
+
+    /// Per-group squared Frobenius norms `‖X_b‖_F² = Σ_{j∈b} ‖X_j‖²`:
+    /// the grouped block-Lipschitz bounds and the gap-safe block-screening
+    /// radii. `cols`/`offsets` are a partition's flattened column order
+    /// and block boundaries; the column-norm pass runs on the kernel
+    /// engine, the per-group reduction is O(p).
+    pub fn group_sq_norms(&self, cols: &[usize], offsets: &[usize]) -> Vec<f64> {
+        let mut sq = vec![0.0; self.ncols()];
+        self.col_sq_norms_into(&mut sq);
+        group_reduce_sq(&sq, cols, offsets)
+    }
+
     /// Estimated stored entries touched by a pass over `ws`.
     fn subset_work(&self, ws: &[usize]) -> usize {
         match self {
@@ -272,6 +299,16 @@ impl Design {
     }
 }
 
+/// Reduce per-column squared norms to per-group sums given a partition's
+/// flattened column order and block boundaries (shared by
+/// [`Design::group_sq_norms`] and callers holding a cached Gram diagonal).
+pub fn group_reduce_sq(col_sq: &[f64], cols: &[usize], offsets: &[usize]) -> Vec<f64> {
+    offsets
+        .windows(2)
+        .map(|w| cols[w[0]..w[1]].iter().map(|&j| col_sq[j]).sum())
+        .collect()
+}
+
 impl From<DenseMatrix> for Design {
     fn from(m: DenseMatrix) -> Self {
         Design::Dense(m)
@@ -363,5 +400,40 @@ mod tests {
         let (d, s) = pair();
         assert_eq!(d.stored_entries(), 9);
         assert_eq!(s.stored_entries(), 5);
+    }
+
+    #[test]
+    fn grouped_matvec_t_matches_full_and_permuted() {
+        let (d, s) = pair();
+        let r = [1.0, -1.0, 2.0];
+        let mut full = vec![0.0; 3];
+        d.matvec_t(&r, &mut full);
+        // identity order fast path
+        let mut out = vec![0.0; 3];
+        d.matvec_t_groups(&r, &[0, 1, 2], &mut out);
+        assert_eq!(out, full);
+        // scattered partition order gathers the same dots
+        let mut perm = vec![0.0; 3];
+        for dd in [&d, &s] {
+            dd.matvec_t_groups(&r, &[2, 0, 1], &mut perm);
+            assert_eq!(perm, vec![full[2], full[0], full[1]]);
+        }
+    }
+
+    #[test]
+    fn group_sq_norms_sum_column_norms() {
+        let (d, s) = pair();
+        let sq = d.col_sq_norms();
+        // groups {0,2} and {1}
+        let cols = [0usize, 2, 1];
+        let offsets = [0usize, 2, 3];
+        for dd in [&d, &s] {
+            let g = dd.group_sq_norms(&cols, &offsets);
+            assert!((g[0] - (sq[0] + sq[2])).abs() < 1e-14);
+            assert!((g[1] - sq[1]).abs() < 1e-14);
+        }
+        let reduced = group_reduce_sq(&sq, &cols, &offsets);
+        assert_eq!(reduced.len(), 2);
+        assert!((reduced[0] - (sq[0] + sq[2])).abs() < 1e-14);
     }
 }

@@ -9,6 +9,6 @@ pub mod parallel;
 pub mod sparse;
 
 pub use dense::{axpy, dot, norm1, norm_inf, nrm2, sq_nrm2, DenseMatrix};
-pub use design::Design;
+pub use design::{group_reduce_sq, Design};
 pub use parallel::KernelPolicy;
 pub use sparse::CscMatrix;

@@ -53,22 +53,26 @@ fn dispatch(args: &mut Args) -> Result<()> {
 }
 
 const USAGE: &str = "usage:
-  skglm solve --dataset <name|libsvm-path> --penalty <l1|enet|mcp|scad|l05> \\
+  skglm solve --dataset <name|libsvm-path> \\
+              --penalty <l1|enet|mcp|scad|l05|group_lasso|group_mcp|group_scad> \\
               [--datafit quadratic|poisson|probit] --lambda-ratio 0.1 \\
-              [--gamma 3.0] [--rho 0.5] [--tol 1e-8] \\
+              [--gamma 3.0] [--rho 0.5] [--groups 10] [--tol 1e-8] \\
               [--engine native|pjrt] [--no-ws] [--no-accel] [--seed 42] [--small]
-  skglm path  --penalty <l1|mcp|scad|l05> [--datafit quadratic|poisson|probit] \\
+  skglm path  --penalty <l1|mcp|scad|l05|group_lasso|group_mcp|group_scad> \\
+              [--datafit quadratic|poisson|probit] [--groups 10] \\
               [--points 20] [--min-ratio 1e-3] [--gamma 3.0] [--small] [--seed 42]
   skglm cv    --dataset <name> [--folds 5] [--points 15] [--workers 4] [--small]
-  skglm exp   <fig1..fig10|table1|table2|pathsched|kernels|glms|all> [--full]
+  skglm exp   <fig1..fig10|table1|table2|pathsched|kernels|glms|groups|all> [--full]
   skglm serve [--workers 4] [--lambdas 8]
   skglm synth --dataset <rcv1|news20|...|fig1> --out <file.svm> [--small]
   skglm info
 
   --datafit poisson|probit routes the fit through the prox-Newton outer
-  solver (curvature-adaptive GLMs; penalty must be l1). every subcommand
-  accepts --threads N (kernel + worker thread budget; overrides the
-  SKGLM_THREADS env var; defaults to hardware parallelism)";
+  solver (curvature-adaptive GLMs; penalty must be l1). the group_*
+  penalties run on the block-coordinate engine over contiguous feature
+  groups of --groups <size> features each. every subcommand accepts
+  --threads N (kernel + worker thread budget; overrides the SKGLM_THREADS
+  env var; defaults to hardware parallelism)";
 
 /// Load `name` as a libsvm file when it names one on disk.
 fn try_load_libsvm(name: &str) -> Option<Result<Dataset>> {
@@ -203,10 +207,89 @@ fn cmd_solve_glm(args: &mut Args, datafit: &str) -> Result<()> {
     Ok(())
 }
 
+/// One block-engine fit (`solve --penalty group_lasso|group_mcp|group_scad`).
+fn cmd_solve_group(args: &mut Args, penalty: &str) -> Result<()> {
+    use skglm::penalty::{GroupMcp, GroupScad};
+    use skglm::solver::BlockPartition;
+    use std::sync::Arc;
+    let ratio = args.get_f64("lambda-ratio", 0.1)?;
+    let gamma = args.get_f64("gamma", if penalty == "group_scad" { 3.7 } else { 3.0 })?;
+    let group_size = args.get_usize("groups", 10)?;
+    let tol = args.get_f64("tol", 1e-8)?;
+    let mut opts = SolverOpts::default().with_tol(tol);
+    if args.has("no-ws") {
+        opts.use_ws = false;
+    }
+    if args.has("no-accel") {
+        opts.anderson_m = 0;
+    }
+    opts.verbose = args.has("verbose");
+    let mut ds = load_dataset(args)?;
+    args.finish()?;
+    if group_size == 0 || group_size > ds.p() {
+        bail!("--groups must be in 1..={} (got {group_size})", ds.p());
+    }
+    // non-convex group penalties follow the paper's √n column
+    // normalization (keeps every block step inside the MCP/SCAD
+    // semi-convex regime on heterogeneous designs)
+    if penalty != "group_lasso" {
+        ds.design.normalize_cols((ds.n() as f64).sqrt());
+    }
+
+    let part = Arc::new(BlockPartition::contiguous_equal(ds.p(), group_size));
+    let lam_max = skglm::estimators::group_lambda_max(&ds.design, &ds.y, &part, None);
+    let lam = lam_max * ratio;
+    println!(
+        "dataset {} (n={}, p={}, {} groups of <= {group_size}), penalty {penalty}, lambda = {:.3e} (ratio {ratio})",
+        ds.name,
+        ds.n(),
+        ds.p(),
+        part.n_blocks(),
+        lam
+    );
+    println!("solver         : block-coordinate engine (shared outer loop)");
+    let fit = match penalty {
+        // the convex constructor enables gap-safe block screening, so the
+        // "screened blocks" line below reports the real certificate count
+        "group_lasso" => skglm::estimators::group::group_lasso(lam, Arc::clone(&part))
+            .with_opts(opts)
+            .fit(&ds.design, &ds.y),
+        "group_mcp" => skglm::estimators::group::GroupEstimator::from_parts(
+            GroupMcp::new(lam, gamma),
+            Arc::clone(&part),
+            opts,
+        )
+        .fit(&ds.design, &ds.y),
+        "group_scad" => skglm::estimators::group::GroupEstimator::from_parts(
+            GroupScad::new(lam, gamma),
+            Arc::clone(&part),
+            opts,
+        )
+        .fit(&ds.design, &ds.y),
+        other => bail!("unknown group penalty {other:?}"),
+    };
+    let r = &fit.result;
+    println!("converged      : {}", r.converged);
+    println!("objective      : {:.10e}", r.objective);
+    println!("kkt violation  : {:.3e}", r.kkt);
+    println!("group support  : {} / {}", fit.group_support().len(), part.n_blocks());
+    println!("outer iters    : {}", r.n_outer);
+    println!("cd epochs      : {}", r.n_epochs);
+    println!("screened blocks: {}", r.n_screened);
+    if let Some(h) = r.history.last() {
+        println!("solve time     : {:.3}s  (n={})", h.t, ds.n());
+    }
+    Ok(())
+}
+
 fn cmd_solve(args: &mut Args) -> Result<()> {
     let datafit = args.get_or("datafit", "quadratic");
     if datafit != "quadratic" {
         return cmd_solve_glm(args, &datafit);
+    }
+    let pen_name = args.get_or("penalty", "l1");
+    if pen_name.starts_with("group_") {
+        return cmd_solve_group(args, &pen_name);
     }
     let ds = load_dataset(args)?;
     let penalty = args.get_or("penalty", "l1");
@@ -278,7 +361,8 @@ fn cmd_path(args: &mut Args) -> Result<()> {
     let penalty = args.get_or("penalty", "l1");
     let points = args.get_usize("points", 20)?;
     let min_ratio = args.get_f64("min-ratio", 1e-3)?;
-    let gamma = args.get_f64("gamma", if penalty == "scad" { 3.7 } else { 3.0 })?;
+    let gamma = args.get_f64("gamma", if penalty.ends_with("scad") { 3.7 } else { 3.0 })?;
+    let group_size = args.get_usize("groups", 10)?;
     let seed = args.get_usize("seed", 42)? as u64;
     let small = args.has("small");
     args.finish()?;
@@ -286,6 +370,31 @@ fn cmd_path(args: &mut Args) -> Result<()> {
     // λ is a placeholder everywhere below: the path job anchors the grid
     // at its own λ_max
     let (ds, spec) = match datafit.as_str() {
+        "quadratic" if penalty.starts_with("group_") => {
+            // group-sparse synthetic workload + block-engine path specs
+            let scale = if small { 0.1 } else { 1.0 };
+            let p = ((2000.0 * scale) as usize).max(8);
+            let n = ((1000.0 * scale) as usize).max(8);
+            let gs = group_size.clamp(1, p);
+            let (gds, part) = skglm::data::grouped_correlated(
+                skglm::data::GroupedSpec {
+                    n,
+                    p,
+                    group_size: gs,
+                    active_groups: (p / gs / 10).max(1),
+                    rho: 0.6,
+                    snr: 5.0,
+                },
+                seed,
+            );
+            let spec = match penalty.as_str() {
+                "group_lasso" => specs::group_lasso(1.0, part),
+                "group_mcp" => specs::group_mcp(1.0, gamma, part),
+                "group_scad" => specs::group_scad(1.0, gamma, part),
+                other => bail!("unknown group penalty {other:?}"),
+            };
+            (Arc::new(gds), spec)
+        }
         "quadratic" => {
             let ds =
                 Arc::new(correlated(CorrelatedSpec::figure1(if small { 0.1 } else { 1.0 }), seed));
@@ -344,6 +453,9 @@ fn cmd_path(args: &mut Args) -> Result<()> {
                 break;
             }
             Ok(JobEvent::FitDone(_)) => {}
+            Ok(JobEvent::Failed { job_id, message }) => {
+                bail!("path job {job_id} failed on its worker: {message}")
+            }
             Err(_) => bail!("scheduler died"),
         }
     }
@@ -379,15 +491,15 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     println!("fit scheduler up with {workers} workers; mixed single-fit + path workload");
 
     // single fits across the model zoo (trait-based specs, shared Arc dataset)
-    let mut expected = 0usize;
+    let mut jobs = 0usize;
     for k in 0..n_lambdas {
         let lam = lam_max / (10.0 * (k + 1) as f64);
         sched.submit_fit(Arc::clone(&ds), specs::lasso(lam), SolverOpts::default());
-        expected += 1;
+        jobs += 1;
     }
     sched.submit_fit(Arc::clone(&ds), specs::elastic_net(lam_max / 20.0, 0.5), SolverOpts::default());
     sched.submit_fit(Arc::clone(&ds), specs::mcp(lam_max / 20.0, 3.0), SolverOpts::default());
-    expected += 2;
+    jobs += 2;
     // prox-Newton GLM jobs share the queue with the CD jobs
     let pois = Arc::new(skglm::data::poisson_correlated(CorrelatedSpec::figure1(0.2), 42));
     let pois_lmax = specs::poisson_l1(1.0).lambda_max(&pois.design, &pois.y);
@@ -395,15 +507,19 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     let prob = Arc::new(skglm::data::probit_correlated(CorrelatedSpec::figure1(0.2), 42));
     let prob_lmax = specs::probit_l1(1.0).lambda_max(&prob.design, &prob.y);
     sched.submit_fit(Arc::clone(&prob), specs::probit_l1(prob_lmax / 10.0), SolverOpts::default());
-    expected += 2;
+    jobs += 2;
     // one warm-started path sweep, streamed per-λ
     let path_points = 8;
     let ratios = skglm::estimators::path::geometric_grid(1e-2, path_points);
     sched.submit_path(Arc::clone(&ds), specs::lasso(1.0), ratios, SolverOpts::default().with_tol(1e-7));
-    expected += path_points + 1;
+    jobs += 1;
 
     println!("{:<24} {:<4} {:<8} {:<7} wall_s", "event", "job", "support", "epochs");
-    for _ in 0..expected {
+    // count TERMINAL events (FitDone / PathDone / Failed) rather than a
+    // fixed total: a path job that fails mid-sweep emits fewer points
+    // than planned, and a fixed count would hang on recv forever
+    let mut remaining = jobs;
+    while remaining > 0 {
         match sched.events.recv() {
             Ok(JobEvent::FitDone(o)) => {
                 let tag = format!("fit {}", o.label);
@@ -417,6 +533,7 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
                     o.wall_time,
                     warm
                 );
+                remaining -= 1;
             }
             Ok(JobEvent::PathPoint(p)) => {
                 let tag = format!("path point #{}", p.index);
@@ -431,6 +548,11 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
                     "{:<24} {:<4} {:<8} {:<7} {:.3}",
                     tag, s.job_id, "-", s.total_epochs, s.total_time
                 );
+                remaining -= 1;
+            }
+            Ok(JobEvent::Failed { job_id, message }) => {
+                println!("{:<24} {:<4} {message}", "job FAILED", job_id);
+                remaining -= 1;
             }
             Err(_) => bail!("scheduler died"),
         }

@@ -1,62 +1,92 @@
-//! Block (row-wise) penalties for the multitask setting (paper Appendix D):
-//! `g(W) = Σ_j φ(‖W_{j,:}‖)` with φ an even 1-D penalty. By Proposition 18,
+//! Block-separable penalties `g(v) = Σ_b φ_b(‖v_b‖)` (paper Appendix D)
+//! — one trait for the multitask rows *and* the single-task feature
+//! groups, consumed by the shared block-coordinate engine
+//! ([`crate::solver::block_cd`]). By Proposition 18,
 //!
 //! ```text
 //! prox_{φ(‖·‖)}(x) = prox_φ(‖x‖) · x / ‖x‖ ,
 //! ```
 //!
-//! so each block penalty delegates to its scalar counterpart on the row
-//! norm. Block-ℓ2,1 is the convex baseline of Figure 4; block-MCP and
-//! block-SCAD are the non-convex penalties that recover both auditory
-//! sources.
+//! so each block penalty delegates to its scalar counterpart on the block
+//! norm. Block-ℓ2,1 is the convex baseline (multitask Lasso / group
+//! Lasso — Figure 4); block-MCP and block-SCAD are the non-convex
+//! variants that undo the group-amplitude bias. [`WeightedGroupLasso`]
+//! carries per-block weights (`√|b|` by convention) through the block
+//! index every method receives.
 
 use super::{Mcp, Penalty, Scad};
+use crate::solver::partition::BlockPartition;
 
-/// A row-separable penalty on `W ∈ R^{p×T}`.
+/// A block-separable penalty on the packed coefficient vector: block `b`
+/// (its values gathered into a slice) is penalised by `φ_b(‖·‖₂)`. The
+/// block index threads per-block parameters (weights) through; penalties
+/// without per-block state ignore it.
 pub trait BlockPenalty: Clone + Send + Sync {
-    /// `φ(‖row‖)`.
-    fn value(&self, row: &[f64]) -> f64;
+    /// `φ_b(‖block‖)`.
+    fn value(&self, block: &[f64], b: usize) -> f64;
 
-    /// In-place `row ← prox_{step·φ(‖·‖)}(row)`.
-    fn prox(&self, row: &mut [f64], step: f64);
+    /// In-place `block ← prox_{step·φ_b(‖·‖)}(block)`.
+    fn prox(&self, block: &mut [f64], step: f64, b: usize);
 
-    /// `dist(−∇_{j,:} f, ∂g_j(row))` for the working-set score.
-    fn subdiff_distance(&self, row: &[f64], grad_row: &[f64]) -> f64;
+    /// `dist(−∇_b f, ∂g_b(block))` for the working-set score.
+    fn subdiff_distance(&self, block: &[f64], grad_block: &[f64], b: usize) -> f64;
 
-    /// Generalized support membership for the row.
-    fn in_gsupp(&self, row: &[f64]) -> bool {
-        row.iter().any(|&v| v != 0.0)
+    /// Generalized support membership for the block.
+    fn in_gsupp(&self, block: &[f64]) -> bool {
+        block.iter().any(|&v| v != 0.0)
     }
 
     fn is_convex(&self) -> bool;
 
+    /// Per-block weight in the dual norm `max_b ‖X_bᵀθ‖/w_b` (λ_max
+    /// grids, gap-safe block screening). 1 unless the penalty is weighted.
+    fn block_weight(&self, _b: usize) -> f64 {
+        1.0
+    }
+
+    /// Panic if `step = 1/L_b` lies outside the penalty's validity regime
+    /// (non-convex semi-convexity, Assumption 6).
+    fn validate_step(&self, _step: f64) {}
+
     fn name(&self) -> &'static str;
+
+    /// `Σ_b φ_b(‖v_b‖)` over a whole partition.
+    fn value_sum(&self, v: &[f64], part: &BlockPartition) -> f64 {
+        let mut buf = vec![0.0; part.max_block_len()];
+        (0..part.n_blocks())
+            .map(|b| {
+                let sub = &mut buf[..part.block_len(b)];
+                part.gather(b, v, sub);
+                self.value(sub, b)
+            })
+            .sum()
+    }
 }
 
 #[inline]
-fn row_norm(row: &[f64]) -> f64 {
-    crate::linalg::nrm2(row)
+fn block_norm(block: &[f64]) -> f64 {
+    crate::linalg::nrm2(block)
 }
 
 /// Apply Proposition 18 given the scalar prox of φ.
 #[inline]
-fn radial_prox(row: &mut [f64], step: f64, scalar_prox: impl Fn(f64, f64) -> f64) {
-    let t = row_norm(row);
+fn radial_prox(block: &mut [f64], step: f64, scalar_prox: impl Fn(f64, f64) -> f64) {
+    let t = block_norm(block);
     if t == 0.0 {
         return;
     }
     let scale = scalar_prox(t, step) / t;
-    for v in row.iter_mut() {
+    for v in block.iter_mut() {
         *v *= scale;
     }
 }
 
-/// ‖grad + dir_scale · row/‖row‖‖ — distance for a differentiable-radial φ.
+/// ‖grad + dir_scale · block/‖block‖‖ — distance for a differentiable-radial φ.
 #[inline]
-fn radial_dist(row: &[f64], grad_row: &[f64], dir_scale: f64) -> f64 {
-    let t = row_norm(row);
+fn radial_dist(block: &[f64], grad_block: &[f64], dir_scale: f64) -> f64 {
+    let t = block_norm(block);
     let mut s = 0.0;
-    for (&g, &r) in grad_row.iter().zip(row.iter()) {
+    for (&g, &r) in grad_block.iter().zip(block.iter()) {
         let d = g + dir_scale * r / t;
         s += d * d;
     }
@@ -65,11 +95,15 @@ fn radial_dist(row: &[f64], grad_row: &[f64], dir_scale: f64) -> f64 {
 
 // ---------------------------------------------------------------- ℓ2,1 --
 
-/// `g(W) = λ Σ_j ‖W_{j,:}‖` — multitask Lasso / group penalty.
+/// `g(v) = λ Σ_b ‖v_b‖` — multitask Lasso rows / unweighted group Lasso.
 #[derive(Clone, Debug)]
 pub struct BlockL21 {
     pub lambda: f64,
 }
+
+/// Single-task feature-group reading of [`BlockL21`]: the (unweighted)
+/// group Lasso penalty. Same mathematics, clearer call sites.
+pub type GroupLasso = BlockL21;
 
 impl BlockL21 {
     pub fn new(lambda: f64) -> Self {
@@ -79,28 +113,28 @@ impl BlockL21 {
 }
 
 impl BlockPenalty for BlockL21 {
-    fn value(&self, row: &[f64]) -> f64 {
-        self.lambda * row_norm(row)
+    fn value(&self, block: &[f64], _b: usize) -> f64 {
+        self.lambda * block_norm(block)
     }
 
-    fn prox(&self, row: &mut [f64], step: f64) {
-        let t = row_norm(row);
+    fn prox(&self, block: &mut [f64], step: f64, _b: usize) {
+        let t = block_norm(block);
         if t == 0.0 {
             return;
         }
         let scale = (1.0 - step * self.lambda / t).max(0.0);
-        for v in row.iter_mut() {
+        for v in block.iter_mut() {
             *v *= scale;
         }
     }
 
-    fn subdiff_distance(&self, row: &[f64], grad_row: &[f64]) -> f64 {
-        let t = row_norm(row);
+    fn subdiff_distance(&self, block: &[f64], grad_block: &[f64], _b: usize) -> f64 {
+        let t = block_norm(block);
         if t == 0.0 {
             // ∂ at 0 = λ·unit ball: dist = max(0, ‖grad‖ − λ)
-            (row_norm(grad_row) - self.lambda).max(0.0)
+            (block_norm(grad_block) - self.lambda).max(0.0)
         } else {
-            radial_dist(row, grad_row, self.lambda)
+            radial_dist(block, grad_block, self.lambda)
         }
     }
 
@@ -113,13 +147,85 @@ impl BlockPenalty for BlockL21 {
     }
 }
 
+// ------------------------------------------------- weighted group Lasso --
+
+/// `g(β) = λ Σ_b w_b ‖β_b‖` — the weighted group Lasso (`w_b = √|b|` by
+/// the yaglm/standard convention, so large groups are not favoured).
+#[derive(Clone, Debug)]
+pub struct WeightedGroupLasso {
+    pub lambda: f64,
+    weights: std::sync::Arc<Vec<f64>>,
+}
+
+impl WeightedGroupLasso {
+    /// Explicit per-block weights (must be positive, one per block).
+    pub fn new(lambda: f64, weights: Vec<f64>) -> Self {
+        assert!(lambda >= 0.0);
+        assert!(!weights.is_empty());
+        assert!(weights.iter().all(|&w| w > 0.0), "block weights must be positive");
+        Self { lambda, weights: std::sync::Arc::new(weights) }
+    }
+
+    /// The standard `w_b = √|b|` weighting for a partition.
+    pub fn sqrt_sizes(lambda: f64, part: &BlockPartition) -> Self {
+        let w = (0..part.n_blocks()).map(|b| (part.block_len(b) as f64).sqrt()).collect();
+        Self::new(lambda, w)
+    }
+
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+}
+
+impl BlockPenalty for WeightedGroupLasso {
+    fn value(&self, block: &[f64], b: usize) -> f64 {
+        self.lambda * self.weights[b] * block_norm(block)
+    }
+
+    fn prox(&self, block: &mut [f64], step: f64, b: usize) {
+        let t = block_norm(block);
+        if t == 0.0 {
+            return;
+        }
+        let scale = (1.0 - step * self.lambda * self.weights[b] / t).max(0.0);
+        for v in block.iter_mut() {
+            *v *= scale;
+        }
+    }
+
+    fn subdiff_distance(&self, block: &[f64], grad_block: &[f64], b: usize) -> f64 {
+        let lam = self.lambda * self.weights[b];
+        let t = block_norm(block);
+        if t == 0.0 {
+            (block_norm(grad_block) - lam).max(0.0)
+        } else {
+            radial_dist(block, grad_block, lam)
+        }
+    }
+
+    fn is_convex(&self) -> bool {
+        true
+    }
+
+    fn block_weight(&self, b: usize) -> f64 {
+        self.weights[b]
+    }
+
+    fn name(&self) -> &'static str {
+        "weighted_group_lasso"
+    }
+}
+
 // ------------------------------------------------------------ block MCP --
 
-/// `g(W) = Σ_j MCP_{λ,γ}(‖W_{j,:}‖)`.
+/// `g(v) = Σ_b MCP_{λ,γ}(‖v_b‖)`.
 #[derive(Clone, Debug)]
 pub struct BlockMcp {
     inner: Mcp,
 }
+
+/// Single-task feature-group reading of [`BlockMcp`] (group MCP).
+pub type GroupMcp = BlockMcp;
 
 impl BlockMcp {
     pub fn new(lambda: f64, gamma: f64) -> Self {
@@ -128,29 +234,33 @@ impl BlockMcp {
 }
 
 impl BlockPenalty for BlockMcp {
-    fn value(&self, row: &[f64]) -> f64 {
-        self.inner.value(row_norm(row), 0)
+    fn value(&self, block: &[f64], _b: usize) -> f64 {
+        self.inner.value(block_norm(block), 0)
     }
 
-    fn prox(&self, row: &mut [f64], step: f64) {
-        radial_prox(row, step, |t, s| self.inner.prox(t, s, 0));
+    fn prox(&self, block: &mut [f64], step: f64, _b: usize) {
+        radial_prox(block, step, |t, s| self.inner.prox(t, s, 0));
     }
 
-    fn subdiff_distance(&self, row: &[f64], grad_row: &[f64]) -> f64 {
+    fn subdiff_distance(&self, block: &[f64], grad_block: &[f64], _b: usize) -> f64 {
         let (lam, gam) = (self.inner.lambda, self.inner.gamma);
-        let t = row_norm(row);
+        let t = block_norm(block);
         if t == 0.0 {
-            (row_norm(grad_row) - lam).max(0.0)
+            (block_norm(grad_block) - lam).max(0.0)
         } else if t < gam * lam {
             // MCP'(t) = λ − t/γ
-            radial_dist(row, grad_row, lam - t / gam)
+            radial_dist(block, grad_block, lam - t / gam)
         } else {
-            row_norm(grad_row)
+            block_norm(grad_block)
         }
     }
 
     fn is_convex(&self) -> bool {
         false
+    }
+
+    fn validate_step(&self, step: f64) {
+        self.inner.validate_step(step);
     }
 
     fn name(&self) -> &'static str {
@@ -160,11 +270,14 @@ impl BlockPenalty for BlockMcp {
 
 // ----------------------------------------------------------- block SCAD --
 
-/// `g(W) = Σ_j SCAD_{λ,γ}(‖W_{j,:}‖)`.
+/// `g(v) = Σ_b SCAD_{λ,γ}(‖v_b‖)`.
 #[derive(Clone, Debug)]
 pub struct BlockScad {
     inner: Scad,
 }
+
+/// Single-task feature-group reading of [`BlockScad`] (group SCAD).
+pub type GroupScad = BlockScad;
 
 impl BlockScad {
     pub fn new(lambda: f64, gamma: f64) -> Self {
@@ -173,30 +286,34 @@ impl BlockScad {
 }
 
 impl BlockPenalty for BlockScad {
-    fn value(&self, row: &[f64]) -> f64 {
-        self.inner.value(row_norm(row), 0)
+    fn value(&self, block: &[f64], _b: usize) -> f64 {
+        self.inner.value(block_norm(block), 0)
     }
 
-    fn prox(&self, row: &mut [f64], step: f64) {
-        radial_prox(row, step, |t, s| self.inner.prox(t, s, 0));
+    fn prox(&self, block: &mut [f64], step: f64, _b: usize) {
+        radial_prox(block, step, |t, s| self.inner.prox(t, s, 0));
     }
 
-    fn subdiff_distance(&self, row: &[f64], grad_row: &[f64]) -> f64 {
+    fn subdiff_distance(&self, block: &[f64], grad_block: &[f64], _b: usize) -> f64 {
         let (lam, gam) = (self.inner.lambda, self.inner.gamma);
-        let t = row_norm(row);
+        let t = block_norm(block);
         if t == 0.0 {
-            (row_norm(grad_row) - lam).max(0.0)
+            (block_norm(grad_block) - lam).max(0.0)
         } else if t <= lam {
-            radial_dist(row, grad_row, lam)
+            radial_dist(block, grad_block, lam)
         } else if t <= gam * lam {
-            radial_dist(row, grad_row, (gam * lam - t) / (gam - 1.0))
+            radial_dist(block, grad_block, (gam * lam - t) / (gam - 1.0))
         } else {
-            row_norm(grad_row)
+            block_norm(grad_block)
         }
     }
 
     fn is_convex(&self) -> bool {
         false
+    }
+
+    fn validate_step(&self, step: f64) {
+        self.inner.validate_step(step);
     }
 
     fn name(&self) -> &'static str {
@@ -212,11 +329,11 @@ mod tests {
     /// ½‖x−v‖² + step φ(‖x‖) over a polar grid.
     fn assert_block_prox_minimizes<B: BlockPenalty>(pen: &B, v: &[f64; 2], step: f64, tol: f64) {
         let mut x_star = *v;
-        pen.prox(&mut x_star, step);
+        pen.prox(&mut x_star, step, 0);
         let obj = |x: &[f64; 2]| {
             let d0 = x[0] - v[0];
             let d1 = x[1] - v[1];
-            0.5 * (d0 * d0 + d1 * d1) + step * pen.value(x)
+            0.5 * (d0 * d0 + d1 * d1) + step * pen.value(x, 0)
         };
         let o_star = obj(&x_star);
         let vmax = (v[0] * v[0] + v[1] * v[1]).sqrt() * 2.0 + 2.0;
@@ -240,12 +357,12 @@ mod tests {
     fn l21_prox_is_group_soft_threshold() {
         let p = BlockL21::new(1.0);
         let mut row = [3.0, 4.0]; // norm 5
-        p.prox(&mut row, 1.0);
+        p.prox(&mut row, 1.0, 0);
         // scale (1 - 1/5) = 0.8
         assert!((row[0] - 2.4).abs() < 1e-14);
         assert!((row[1] - 3.2).abs() < 1e-14);
         let mut small = [0.3, 0.4];
-        p.prox(&mut small, 1.0);
+        p.prox(&mut small, 1.0, 0);
         assert_eq!(small, [0.0, 0.0]);
     }
 
@@ -256,18 +373,24 @@ mod tests {
         assert_block_prox_minimizes(&BlockMcp::new(0.8, 3.0), &[4.0, 1.0], 1.0, 1e-3);
         assert_block_prox_minimizes(&BlockScad::new(0.8, 3.7), &[1.5, -0.7], 1.0, 1e-3);
         assert_block_prox_minimizes(&BlockScad::new(0.8, 3.7), &[4.0, 1.0], 1.0, 1e-3);
+        assert_block_prox_minimizes(
+            &WeightedGroupLasso::new(0.8, vec![1.3]),
+            &[1.5, -0.7],
+            1.0,
+            1e-3,
+        );
     }
 
     #[test]
     fn block_mcp_is_unbiased_for_large_rows() {
         let p = BlockMcp::new(1.0, 3.0);
         let mut row = [10.0, 0.0];
-        p.prox(&mut row, 1.0);
+        p.prox(&mut row, 1.0, 0);
         assert_eq!(row, [10.0, 0.0], "large rows must pass through un-shrunk");
         // while l21 shrinks them (the Figure-4 amplitude bias)
         let l21 = BlockL21::new(1.0);
         let mut row2 = [10.0, 0.0];
-        l21.prox(&mut row2, 1.0);
+        l21.prox(&mut row2, 1.0, 0);
         assert!(row2[0] < 10.0);
     }
 
@@ -275,11 +398,11 @@ mod tests {
     fn subdiff_distance_zero_at_block_kkt() {
         let p = BlockL21::new(1.0);
         // row 0, small gradient: inside the ball
-        assert_eq!(p.subdiff_distance(&[0.0, 0.0], &[0.3, 0.4]), 0.0);
+        assert_eq!(p.subdiff_distance(&[0.0, 0.0], &[0.3, 0.4], 0), 0.0);
         // row != 0: grad must be −λ row/‖row‖
         let row = [3.0, 4.0];
         let grad = [-0.6, -0.8];
-        assert!(p.subdiff_distance(&row, &grad) < 1e-14);
+        assert!(p.subdiff_distance(&row, &grad, 0) < 1e-14);
     }
 
     #[test]
@@ -287,5 +410,46 @@ mod tests {
         let p = BlockMcp::new(1.0, 3.0);
         assert!(!p.in_gsupp(&[0.0, 0.0]));
         assert!(p.in_gsupp(&[0.0, 0.1]));
+    }
+
+    #[test]
+    fn weighted_group_lasso_scales_per_block() {
+        let part = BlockPartition::contiguous(&[4, 1]);
+        let p = WeightedGroupLasso::sqrt_sizes(1.0, &part);
+        assert_eq!(p.weights(), &[2.0, 1.0]);
+        assert_eq!(p.block_weight(0), 2.0);
+        // block 0 (weight 2): prox threshold is 2λ
+        let mut b0 = [1.5, 0.0, 0.0, 0.0];
+        p.prox(&mut b0, 1.0, 0);
+        assert_eq!(b0, [0.0; 4], "norm 1.5 < weight 2 must vanish");
+        // block 1 (weight 1): same input survives
+        let mut b1 = [1.5];
+        p.prox(&mut b1, 1.0, 1);
+        assert!((b1[0] - 0.5).abs() < 1e-14);
+        // value and subdiff honour the weight
+        assert!((p.value(&[0.0, 3.0, 0.0, 4.0], 0) - 10.0).abs() < 1e-14);
+        assert_eq!(p.subdiff_distance(&[0.0; 4], &[0.0, 1.9, 0.0, 0.0], 0), 0.0);
+        assert!(p.subdiff_distance(&[0.0], &[1.9], 1) > 0.0);
+    }
+
+    #[test]
+    fn trivial_partition_block_prox_equals_scalar_prox() {
+        // a size-1 block reduces every block penalty to its scalar twin
+        use crate::penalty::{soft_threshold, Penalty};
+        for &v in &[-2.5, -0.4, 0.0, 0.7, 3.0] {
+            for &step in &[0.5, 1.0, 2.0] {
+                let mut b = [v];
+                BlockL21::new(1.0).prox(&mut b, step, 0);
+                assert!((b[0] - soft_threshold(v, step)).abs() < 1e-14);
+                let mut m = [v];
+                BlockMcp::new(0.8, 3.0).prox(&mut m, step, 0);
+                let scalar = Mcp::new(0.8, 3.0).prox(v, step, 0);
+                assert!((m[0] - scalar).abs() < 1e-14, "mcp {v} {step}: {} vs {scalar}", m[0]);
+                let mut s = [v];
+                BlockScad::new(0.8, 3.7).prox(&mut s, step, 0);
+                let scalar = Scad::new(0.8, 3.7).prox(v, step, 0);
+                assert!((s[0] - scalar).abs() < 1e-14, "scad {v} {step}: {} vs {scalar}", s[0]);
+            }
+        }
     }
 }

@@ -18,7 +18,10 @@ pub mod mcp;
 pub mod scad;
 pub mod weighted_l1;
 
-pub use block::{BlockL21, BlockMcp, BlockPenalty, BlockScad};
+pub use block::{
+    BlockL21, BlockMcp, BlockPenalty, BlockScad, GroupLasso, GroupMcp, GroupScad,
+    WeightedGroupLasso,
+};
 pub use box_ind::BoxIndicator;
 pub use l1::L1;
 pub use l1_l2::L1L2;

@@ -16,6 +16,7 @@ pub mod admm;
 pub mod celer;
 pub mod fireworks;
 pub mod full_cd;
+pub mod group_pgd;
 pub mod irls;
 pub mod lbfgs;
 pub mod owlqn;

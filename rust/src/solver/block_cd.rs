@@ -1,0 +1,695 @@
+//! The shared block-coordinate engine: Algorithm 1/2 generic over a
+//! [`BlockPartition`] — one "coordinate" is a block `v_b`, the CD update is
+//! `v_b ← prox_{g_b/L_b}(v_b − ∇_b f / L_b)` with the radial prox of
+//! Proposition 18, and working sets, the guarded Anderson acceleration
+//! (on packed working-set block vectors, with affine state snapshots) and
+//! gap-safe screening per block carry over from the scalar solver.
+//!
+//! Instantiations:
+//! - **groups**: [`crate::datafit::GroupedQuadratic`] × group penalties
+//!   (group Lasso / weighted / group MCP / group SCAD);
+//! - **multitask**: [`crate::datafit::multitask::QuadraticMultiTask`] ×
+//!   row penalties — `solve_multitask` is now a thin wrapper here;
+//! - **scalar**: the trivial partition reproduces scalar CD exactly
+//!   (property-tested against `solve_lasso`-family solves to 1e-12).
+//!
+//! The outer loop itself lives in [`crate::solver::outer`] — this module
+//! only implements the [`BlockCoords`] contract (scoring, screening,
+//! inner solve) for block problems.
+
+use super::anderson::Anderson;
+use super::inner::InnerStats;
+use super::outer::{solve_outer, BlockCoords};
+use super::partition::BlockPartition;
+use super::skglm::{ContinuationState, HistoryPoint, SolverOpts};
+use crate::linalg::Design;
+use crate::penalty::BlockPenalty;
+
+/// Forced stationarity evaluation at least every this many epochs, even
+/// while the cheap move bound stays large (mirrors the scalar inner
+/// solver's gating).
+const FORCE_CHECK_EVERY: usize = 50;
+
+/// A smooth datafit viewed through a block partition: per-**block**
+/// Lipschitz bounds, block gradients, and a state vector maintained
+/// across block moves — the block analogue of [`crate::datafit::Datafit`].
+pub trait BlockDatafit: Clone + Send + Sync {
+    /// Precompute per-block Lipschitz bounds for this (design, target)
+    /// pair. Must be called before solving. `col_sq_norms` is the cached
+    /// Gram diagonal when the scheduler has one (skips the O(nnz) pass).
+    fn init_cached(&mut self, design: &Design, y: &[f64], col_sq_norms: Option<&[f64]>);
+
+    fn init(&mut self, design: &Design, y: &[f64]) {
+        self.init_cached(design, y, None);
+    }
+
+    /// Per-block Lipschitz bounds `L_b` (length `n_blocks`). Valid after
+    /// [`BlockDatafit::init_cached`]. Any upper bound on the spectral
+    /// norm of the block Hessian is sound (the grouped quadratic uses the
+    /// Frobenius bound `Σ_{j∈b} ‖X_j‖²/n`).
+    fn block_lipschitz(&self) -> &[f64];
+
+    /// Build the solver-maintained state for packed coefficients `v`.
+    fn init_state(&self, design: &Design, y: &[f64], v: &[f64]) -> Vec<f64>;
+
+    /// Maintain the state after `v_b += delta` (`delta` in block order).
+    fn update_state(&self, design: &Design, b: usize, delta: &[f64], state: &mut [f64]);
+
+    /// Datafit value at the current point.
+    fn value(&self, y: &[f64], v: &[f64], state: &[f64]) -> f64;
+
+    /// `∇_b f(v)` into `out[..block_len(b)]`.
+    fn grad_block(
+        &self,
+        design: &Design,
+        y: &[f64],
+        state: &[f64],
+        v: &[f64],
+        b: usize,
+        out: &mut [f64],
+    );
+
+    /// Full gradient in **packed** (partition) order — the O(n·p) scoring
+    /// pass. Implementations override with a fused kernel-engine pass
+    /// (grouped quadratic → [`Design::matvec_t_groups`]); the default
+    /// walks blocks.
+    fn grad_all(
+        &self,
+        design: &Design,
+        y: &[f64],
+        state: &[f64],
+        v: &[f64],
+        part: &BlockPartition,
+        out: &mut [f64],
+    ) {
+        for b in 0..part.n_blocks() {
+            let rng = part.packed_range(b);
+            self.grad_block(design, y, state, v, b, &mut out[rng]);
+        }
+    }
+
+    /// Whether the state is affine in `v` (all built-in block datafits:
+    /// residuals). Enables the snapshot-combine Anderson path.
+    fn state_is_affine(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Gap-safe screening configuration for convex group-ℓ2,1 problems on the
+/// grouped **quadratic** datafit (state = Xβ − y). Per block `b` the
+/// sphere test is `‖X_bᵀθ‖ + ‖X_b‖_F · √(2G)/(λ√n) < w_b` with the dual
+/// point `θ = r / max(nλ, max_b ‖X_bᵀr‖/w_b)` — the block analogue of
+/// `gap_safe_screen_lasso_update`. Unsound for non-convex penalties and
+/// non-residual states; callers only enable it where it applies.
+#[derive(Clone, Debug)]
+pub struct GroupScreenCfg {
+    pub lambda: f64,
+    /// per-block dual-norm weights (`penalty.block_weight`)
+    pub weights: Vec<f64>,
+    /// per-block Frobenius norms `‖X_b‖_F` ([`Design::group_sq_norms`])
+    pub block_frob: Vec<f64>,
+}
+
+/// Outcome of a block-coordinate solve. `v` is the packed coefficient
+/// vector in natural coordinate order (β, or row-major flattened `W`).
+#[derive(Clone, Debug)]
+pub struct BlockFitResult {
+    pub v: Vec<f64>,
+    pub objective: f64,
+    /// final max per-block optimality violation
+    pub kkt: f64,
+    pub n_outer: usize,
+    pub n_epochs: usize,
+    pub converged: bool,
+    pub history: Vec<HistoryPoint>,
+    pub accepted_extrapolations: usize,
+    pub rejected_extrapolations: usize,
+    /// blocks certified inactive by the gap-safe pass (0 when disabled)
+    pub n_screened: usize,
+}
+
+impl BlockFitResult {
+    /// Blocks with any finite nonzero coordinate (NaN/∞ entries from a
+    /// divergent non-convex fit do **not** count as support).
+    pub fn block_support(&self, part: &BlockPartition) -> Vec<usize> {
+        (0..part.n_blocks())
+            .filter(|&b| {
+                part.coords(b).iter().any(|&j| self.v[j] != 0.0 && self.v[j].is_finite())
+            })
+            .collect()
+    }
+}
+
+/// The [`BlockCoords`] instantiation for block-CD problems: owns the
+/// iterate, state and every scratch buffer; drives block epochs and the
+/// packed-vector Anderson acceleration.
+pub struct BlockCdCoords<'a, D: BlockDatafit, B: BlockPenalty> {
+    design: &'a Design,
+    y: &'a [f64],
+    datafit: &'a D,
+    penalty: &'a B,
+    part: &'a BlockPartition,
+    v: Vec<f64>,
+    state: Vec<f64>,
+    /// packed gradient (partition order), shared between the screening
+    /// hook and the scoring pass within one outer iteration
+    grad: Vec<f64>,
+    grad_fresh: bool,
+    frozen: Vec<bool>,
+    gsupp: Vec<bool>,
+    /// scratch: old block values / proposed values / gradient-then-delta
+    buf_old: Vec<f64>,
+    buf_new: Vec<f64>,
+    buf_grad: Vec<f64>,
+    screen_cfg: Option<GroupScreenCfg>,
+    screen_r: Vec<f64>,
+    /// per-block ‖X_bᵀr‖ scratch (screening hook; allocated once)
+    screen_xtbr: Vec<f64>,
+    n_screened: usize,
+}
+
+impl<'a, D: BlockDatafit, B: BlockPenalty> BlockCdCoords<'a, D, B> {
+    /// Build the coords for an already-initialized datafit. `v0`
+    /// warm-starts; `frozen` marks blocks certified inactive by the
+    /// caller (e.g. a previous screening pass at the same λ).
+    pub fn new(
+        design: &'a Design,
+        y: &'a [f64],
+        datafit: &'a D,
+        penalty: &'a B,
+        part: &'a BlockPartition,
+        v0: Option<&[f64]>,
+        frozen: Option<&[bool]>,
+    ) -> Self {
+        let dim = part.dim();
+        let nb = part.n_blocks();
+        let v = match v0 {
+            Some(w) => {
+                assert_eq!(w.len(), dim);
+                w.to_vec()
+            }
+            None => vec![0.0; dim],
+        };
+        let state = datafit.init_state(design, y, &v);
+        let frozen = match frozen {
+            Some(f) => {
+                assert_eq!(f.len(), nb);
+                f.to_vec()
+            }
+            None => vec![false; nb],
+        };
+        let mb = part.max_block_len();
+        Self {
+            design,
+            y,
+            datafit,
+            penalty,
+            part,
+            v,
+            state,
+            grad: vec![0.0; dim],
+            grad_fresh: false,
+            frozen,
+            gsupp: vec![false; nb],
+            buf_old: vec![0.0; mb],
+            buf_new: vec![0.0; mb],
+            buf_grad: vec![0.0; mb],
+            screen_cfg: None,
+            screen_r: Vec::new(),
+            screen_xtbr: Vec::new(),
+            n_screened: 0,
+        }
+    }
+
+    /// Enable the per-block gap-safe screening hook (convex group-ℓ2,1 on
+    /// the grouped quadratic datafit only — see [`GroupScreenCfg`]).
+    pub fn with_gap_screening(mut self, cfg: GroupScreenCfg) -> Self {
+        assert!(self.penalty.is_convex(), "gap-safe screening needs a convex penalty");
+        assert_eq!(cfg.weights.len(), self.part.n_blocks());
+        assert_eq!(cfg.block_frob.len(), self.part.n_blocks());
+        self.screen_r = vec![0.0; self.state.len()];
+        self.screen_xtbr = vec![0.0; self.part.n_blocks()];
+        self.screen_cfg = Some(cfg);
+        self
+    }
+
+    /// Consume the coords, returning `(v, n_screened)`.
+    pub fn into_parts(self) -> (Vec<f64>, usize) {
+        (self.v, self.n_screened)
+    }
+
+    fn refresh_grad(&mut self) {
+        if !self.grad_fresh {
+            self.datafit
+                .grad_all(self.design, self.y, &self.state, &self.v, self.part, &mut self.grad);
+            self.grad_fresh = true;
+        }
+    }
+
+    /// One cyclic block-CD epoch over `ws` (reversed when `rev`). Returns
+    /// the max scaled move `max_b L_b·‖Δv_b‖_∞`.
+    fn block_epoch(&mut self, ws: &[usize], rev: bool) -> f64 {
+        let mut max_move = 0.0f64;
+        if rev {
+            for &b in ws.iter().rev() {
+                max_move = max_move.max(self.sweep_block(b));
+            }
+        } else {
+            for &b in ws {
+                max_move = max_move.max(self.sweep_block(b));
+            }
+        }
+        max_move
+    }
+
+    /// The block-CD update `v_b ← prox_{g_b/L_b}(v_b − ∇_b f/L_b)`.
+    /// Returns the scaled move `L_b·‖Δv_b‖_∞` (0 when nothing changed).
+    fn sweep_block(&mut self, b: usize) -> f64 {
+        let lb = self.datafit.block_lipschitz()[b];
+        if lb == 0.0 {
+            return 0.0;
+        }
+        let len = self.part.block_len(b);
+        let old = &mut self.buf_old[..len];
+        self.part.gather(b, &self.v, old);
+        let grad = &mut self.buf_grad[..len];
+        self.datafit.grad_block(self.design, self.y, &self.state, &self.v, b, grad);
+        let new = &mut self.buf_new[..len];
+        for k in 0..len {
+            new[k] = old[k] - grad[k] / lb;
+        }
+        self.penalty.prox(new, 1.0 / lb, b);
+        // reuse the gradient buffer for the delta
+        let mut changed = false;
+        let mut max_abs = 0.0f64;
+        for k in 0..len {
+            let d = new[k] - old[k];
+            grad[k] = d;
+            if d != 0.0 {
+                changed = true;
+                max_abs = max_abs.max(d.abs());
+            }
+        }
+        if changed {
+            let new = &self.buf_new[..len];
+            self.part.scatter(b, new, &mut self.v);
+            let delta = &self.buf_grad[..len];
+            self.datafit.update_state(self.design, b, delta, &mut self.state);
+        }
+        lb * max_abs
+    }
+
+    /// Max per-block score over `ws` (the gated stationarity check).
+    fn ws_score_max(&mut self, ws: &[usize]) -> f64 {
+        let lipschitz = self.datafit.block_lipschitz();
+        let mut kkt = 0.0f64;
+        for &b in ws {
+            if lipschitz[b] == 0.0 {
+                continue;
+            }
+            let len = self.part.block_len(b);
+            let grad = &mut self.buf_grad[..len];
+            self.datafit.grad_block(self.design, self.y, &self.state, &self.v, b, grad);
+            let vb = &mut self.buf_old[..len];
+            self.part.gather(b, &self.v, vb);
+            kkt = kkt.max(self.penalty.subdiff_distance(vb, grad, b));
+        }
+        kkt
+    }
+
+    /// Gather the `ws` blocks of `v` into the packed Anderson vector.
+    fn gather_ws(&self, ws: &[usize], out: &mut [f64]) {
+        let mut k = 0;
+        for &b in ws {
+            for &j in self.part.coords(b) {
+                out[k] = self.v[j];
+                k += 1;
+            }
+        }
+    }
+
+    /// Penalty value restricted to `ws` at the packed candidate `cand`.
+    fn ws_penalty_value(&mut self, ws: &[usize], cand: Option<&[f64]>) -> f64 {
+        let mut g = 0.0;
+        let mut k = 0usize;
+        for &b in ws {
+            let len = self.part.block_len(b);
+            let vb = &mut self.buf_old[..len];
+            match cand {
+                Some(c) => vb.copy_from_slice(&c[k..k + len]),
+                None => self.part.gather(b, &self.v, vb),
+            }
+            g += self.penalty.value(vb, b);
+            k += len;
+        }
+        if !g.is_finite() && cand.is_none() {
+            // current iterate must stay in-domain
+            return f64::INFINITY;
+        }
+        g
+    }
+
+    /// Non-affine fallback: build the trial state by replaying block
+    /// updates from the current iterate to the extrapolated one.
+    fn replay_state(&mut self, ws: &[usize], extr: &[f64]) -> Vec<f64> {
+        let mut trial = self.state.clone();
+        let mut k = 0usize;
+        for &b in ws {
+            let len = self.part.block_len(b);
+            let delta = &mut self.buf_grad[..len];
+            let mut any = false;
+            for (d, &j) in delta.iter_mut().zip(self.part.coords(b).iter()) {
+                *d = extr[k] - self.v[j];
+                if *d != 0.0 {
+                    any = true;
+                }
+                k += 1;
+            }
+            if any {
+                self.datafit.update_state(self.design, b, delta, &mut trial);
+            }
+        }
+        trial
+    }
+
+    /// Objective guard: commit `extr` iff it strictly decreases the
+    /// working-set-restricted objective.
+    fn try_accept(&mut self, ws: &[usize], extr: &[f64], trial_state: &[f64]) -> bool {
+        let g_ext = self.ws_penalty_value(ws, Some(extr));
+        if !g_ext.is_finite() {
+            return false;
+        }
+        let f_cur = self.datafit.value(self.y, &self.v, &self.state);
+        let g_cur = self.ws_penalty_value(ws, None);
+        let f_ext = self.datafit.value(self.y, &self.v, trial_state);
+        if f_ext + g_ext < f_cur + g_cur {
+            let mut k = 0usize;
+            for &b in ws {
+                for &j in self.part.coords(b) {
+                    self.v[j] = extr[k];
+                    k += 1;
+                }
+            }
+            self.state.copy_from_slice(trial_state);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl<D: BlockDatafit, B: BlockPenalty> BlockCoords for BlockCdCoords<'_, D, B> {
+    fn n_blocks(&self) -> usize {
+        self.part.n_blocks()
+    }
+
+    fn screen(&mut self) {
+        // take the cfg out (and restore it below) so its buffers can be
+        // read while &mut self methods run — no per-iteration deep clone
+        let Some(cfg) = self.screen_cfg.take() else { return };
+        self.refresh_grad();
+        let n = self.design.nrows() as f64;
+        let nl = n * cfg.lambda;
+        // r = y − Xβ = −state (grouped quadratic residual convention)
+        for (ri, &s) in self.screen_r.iter_mut().zip(self.state.iter()) {
+            *ri = -s;
+        }
+        // ‖X_bᵀr‖ = n·‖g_b‖ (the packed gradient is −Xᵀr/n)
+        let nb = self.part.n_blocks();
+        let mut scale = nl;
+        for b in 0..nb {
+            let g = &self.grad[self.part.packed_range(b)];
+            let x = n * crate::linalg::nrm2(g);
+            self.screen_xtbr[b] = x;
+            scale = scale.max(x / cfg.weights[b]);
+        }
+        let primal = self.objective();
+        let mut dev = 0.0;
+        for (&ri, &yi) in self.screen_r.iter().zip(self.y.iter()) {
+            let d = ri / scale - yi / nl;
+            dev += d * d;
+        }
+        let dual = crate::linalg::sq_nrm2(self.y) / (2.0 * n) - nl * cfg.lambda / 2.0 * dev;
+        let gap = (primal - dual).max(0.0);
+        let radius = (2.0 * gap).sqrt() / (cfg.lambda * n.sqrt());
+        let mut moved = false;
+        for b in 0..nb {
+            if self.frozen[b] {
+                continue;
+            }
+            if self.screen_xtbr[b] / scale + cfg.block_frob[b] * radius < cfg.weights[b] {
+                self.frozen[b] = true;
+                // a newly certified block still holding a warm value is
+                // frozen AT ZERO; the state moves with it
+                let len = self.part.block_len(b);
+                let delta = &mut self.buf_grad[..len];
+                let mut any = false;
+                for (d, &j) in delta.iter_mut().zip(self.part.coords(b).iter()) {
+                    *d = -self.v[j];
+                    if *d != 0.0 {
+                        any = true;
+                    }
+                    self.v[j] = 0.0;
+                }
+                if any {
+                    self.datafit.update_state(self.design, b, delta, &mut self.state);
+                    moved = true;
+                }
+            }
+        }
+        if moved {
+            self.grad_fresh = false;
+        }
+        self.n_screened = self.frozen.iter().filter(|&&f| f).count();
+        self.screen_cfg = Some(cfg);
+    }
+
+    fn score_pass(&mut self, scores: &mut [f64]) -> f64 {
+        self.refresh_grad();
+        let lipschitz = self.datafit.block_lipschitz();
+        let mut kkt_max = 0.0f64;
+        for b in 0..self.part.n_blocks() {
+            let len = self.part.block_len(b);
+            let vb = &mut self.buf_old[..len];
+            self.part.gather(b, &self.v, vb);
+            self.gsupp[b] = self.penalty.in_gsupp(vb);
+            if self.frozen[b] {
+                scores[b] = f64::NEG_INFINITY;
+                continue;
+            }
+            let s = if lipschitz[b] == 0.0 {
+                0.0
+            } else {
+                let g = &self.grad[self.part.packed_range(b)];
+                self.penalty.subdiff_distance(vb, g, b)
+            };
+            scores[b] = s;
+            kkt_max = kkt_max.max(s);
+        }
+        kkt_max
+    }
+
+    fn objective(&self) -> f64 {
+        self.datafit.value(self.y, &self.v, &self.state)
+            + self.penalty.value_sum(&self.v, self.part)
+    }
+
+    fn in_gsupp(&self, b: usize) -> bool {
+        self.gsupp[b]
+    }
+
+    fn inner_solve(&mut self, ws: &[usize], inner_tol: f64, opts: &SolverOpts) -> InnerStats {
+        // v is about to move: the cached packed gradient goes stale
+        self.grad_fresh = false;
+        let mut stats = InnerStats::default();
+        let affine = self.datafit.state_is_affine();
+        let mut accel =
+            if opts.anderson_m >= 2 { Some(Anderson::new(opts.anderson_m)) } else { None };
+        let ws_dim: usize = ws.iter().map(|&b| self.part.block_len(b)).sum();
+        let mut ws_v = vec![0.0; ws_dim];
+        let mut state_snaps: Vec<Vec<f64>> = Vec::new();
+        let snap_cap = opts.anderson_m + 1;
+        let push_snap = |snaps: &mut Vec<Vec<f64>>, state: &[f64]| {
+            if snaps.len() == snap_cap {
+                snaps.remove(0);
+            }
+            snaps.push(state.to_vec());
+        };
+
+        if let Some(acc) = accel.as_mut() {
+            self.gather_ws(ws, &mut ws_v);
+            acc.push(&ws_v);
+            if affine {
+                push_snap(&mut state_snaps, &self.state);
+            }
+        }
+
+        let mut epochs_since_check = 0usize;
+        for epoch in 1..=opts.max_epochs {
+            stats.epochs = epoch;
+            // alternate sweep direction (Proposition 13 hypothesis 3)
+            let max_move = self.block_epoch(ws, epoch % 2 == 0);
+
+            if let Some(acc) = accel.as_mut() {
+                self.gather_ws(ws, &mut ws_v);
+                let full = acc.push(&ws_v);
+                if affine {
+                    push_snap(&mut state_snaps, &self.state);
+                }
+                if full && epoch % acc.m() == 0 {
+                    if let Some(c) = acc.coefficients() {
+                        let extr = acc.combine(&c);
+                        let trial_state = if affine {
+                            acc.combine_series(&c, &state_snaps)
+                        } else {
+                            self.replay_state(ws, &extr)
+                        };
+                        if self.try_accept(ws, &extr, &trial_state) {
+                            stats.accepted_extrapolations += 1;
+                            acc.clear();
+                            state_snaps.clear();
+                            self.gather_ws(ws, &mut ws_v);
+                            acc.push(&ws_v);
+                            if affine {
+                                push_snap(&mut state_snaps, &self.state);
+                            }
+                        } else {
+                            stats.rejected_extrapolations += 1;
+                        }
+                    }
+                }
+            }
+
+            // cheap move bound gates the O(|ws|·n) stationarity evaluation
+            epochs_since_check += 1;
+            let due = max_move <= inner_tol
+                || epochs_since_check >= FORCE_CHECK_EVERY
+                || epoch == opts.max_epochs;
+            if due {
+                epochs_since_check = 0;
+                stats.score_checks += 1;
+                let score = self.ws_score_max(ws);
+                stats.ws_score = score;
+                if score <= inner_tol {
+                    return stats;
+                }
+            }
+        }
+        // no post-loop recompute: on epoch == max_epochs the forced due
+        // check above already evaluated (and recorded) the final ws score
+        stats
+    }
+
+    fn final_kkt(&mut self) -> f64 {
+        // frozen blocks are certified inactive: excluded from the metric
+        let active: Vec<usize> =
+            (0..self.part.n_blocks()).filter(|&b| !self.frozen[b]).collect();
+        self.ws_score_max(&active)
+    }
+
+    fn label(&self) -> &'static str {
+        "block-cd"
+    }
+}
+
+/// Solve a block-separable problem through the shared engine. The datafit
+/// must already be constructed for `part` (e.g. `GroupedQuadratic::new`);
+/// `init_cached` is called here.
+pub fn solve_blocks<D: BlockDatafit, B: BlockPenalty>(
+    design: &Design,
+    y: &[f64],
+    part: &BlockPartition,
+    datafit: &mut D,
+    penalty: &B,
+    opts: &SolverOpts,
+    v0: Option<&[f64]>,
+) -> BlockFitResult {
+    let mut state = ContinuationState { beta: v0.map(|v| v.to_vec()), ws_size: None };
+    solve_blocks_continued(design, y, part, datafit, penalty, opts, &mut state, None, None)
+}
+
+/// [`solve_blocks`] threading a [`ContinuationState`] (warm packed
+/// coefficients + working-set size) — the entry point block path sweeps
+/// use. `screen` enables the per-block gap-safe hook where it is sound
+/// (convex group-ℓ2,1 × grouped quadratic).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_blocks_continued<D: BlockDatafit, B: BlockPenalty>(
+    design: &Design,
+    y: &[f64],
+    part: &BlockPartition,
+    datafit: &mut D,
+    penalty: &B,
+    opts: &SolverOpts,
+    continuation: &mut ContinuationState,
+    col_sq_norms: Option<&[f64]>,
+    screen: Option<GroupScreenCfg>,
+) -> BlockFitResult {
+    datafit.init_cached(design, y, col_sq_norms);
+
+    // non-convex validity (Assumption 6): largest block step is 1/min L_b
+    let min_l = datafit
+        .block_lipschitz()
+        .iter()
+        .cloned()
+        .filter(|&l| l > 0.0)
+        .fold(f64::INFINITY, f64::min);
+    if min_l.is_finite() {
+        penalty.validate_step(1.0 / min_l);
+    }
+
+    let mut coords = BlockCdCoords::new(
+        design,
+        y,
+        datafit,
+        penalty,
+        part,
+        continuation.beta.as_deref(),
+        None,
+    );
+    if let Some(cfg) = screen {
+        coords = coords.with_gap_screening(cfg);
+    }
+    let out = solve_outer(&mut coords, opts, continuation.ws_size);
+    let (v, n_screened) = coords.into_parts();
+    let result = BlockFitResult {
+        v,
+        objective: out.objective,
+        kkt: out.kkt,
+        n_outer: out.n_outer,
+        n_epochs: out.n_epochs,
+        converged: out.converged,
+        history: out.history,
+        accepted_extrapolations: out.accepted_extrapolations,
+        rejected_extrapolations: out.rejected_extrapolations,
+        n_screened,
+    };
+    continuation.beta = Some(result.v.clone());
+    continuation.ws_size = Some(out.ws_size);
+    result
+}
+
+/// Smallest λ whose solution is all-zero for a block problem:
+/// `max_b ‖∇_b f(0)‖₂ / w_b` (`w_b = penalty.block_weight`, 1 when
+/// unweighted). `weights` is optional per-block dual-norm weights.
+pub fn block_lambda_max_for<D: BlockDatafit>(
+    design: &Design,
+    y: &[f64],
+    datafit: &mut D,
+    part: &BlockPartition,
+    weights: Option<&[f64]>,
+) -> f64 {
+    datafit.init(design, y);
+    let v0 = vec![0.0; part.dim()];
+    let state = datafit.init_state(design, y, &v0);
+    let mut grad = vec![0.0; part.dim()];
+    datafit.grad_all(design, y, &state, &v0, part, &mut grad);
+    let mut best = 0.0f64;
+    for b in 0..part.n_blocks() {
+        let g = &grad[part.packed_range(b)];
+        let w = weights.map(|w| w[b]).unwrap_or(1.0);
+        best = best.max(crate::linalg::nrm2(g) / w);
+    }
+    best
+}

@@ -1,15 +1,20 @@
 //! Solvers: the paper's Algorithm 1 (working sets) / Algorithm 2
 //! (Anderson-accelerated inner CD) / Algorithm 3 (CD epoch) / Algorithm 4
-//! (Anderson extrapolation), the prox-Newton outer solver for datafits
-//! without precomputable Lipschitz bounds (Poisson/probit), the multitask
-//! block variant, and every baseline the evaluation figures compare
-//! against.
+//! (Anderson extrapolation), all hosted on **one** generic
+//! block-coordinate outer loop ([`outer`]) instantiated by the scalar
+//! solver, the screened-Lasso fast path, and the grouped/multitask block
+//! engine ([`block_cd`]); plus the prox-Newton outer solver for datafits
+//! without precomputable Lipschitz bounds (Poisson/probit) and every
+//! baseline the evaluation figures compare against.
 
 pub mod anderson;
 pub mod baselines;
+pub mod block_cd;
 pub mod cd;
 pub mod inner;
 pub mod multitask;
+pub mod outer;
+pub mod partition;
 pub mod prox_newton;
 pub mod screening;
 pub mod skglm;
@@ -18,7 +23,13 @@ pub use skglm::{
     solve, solve_continued, solve_prepared, ContinuationState, FitResult, GradEngine,
     HistoryPoint, SolverOpts,
 };
+pub use block_cd::{
+    block_lambda_max_for, solve_blocks, solve_blocks_continued, BlockDatafit, BlockFitResult,
+    GroupScreenCfg,
+};
 pub use multitask::{solve_multitask, MultiTaskFit};
+pub use outer::{solve_outer, BlockCoords, OuterOutcome};
+pub use partition::BlockPartition;
 pub use prox_newton::{
     glm_lambda_max, solve_prox_newton, solve_prox_newton_continued, solve_prox_newton_prepared,
 };

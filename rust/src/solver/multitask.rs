@@ -1,18 +1,20 @@
-//! Multitask (block) solver — Algorithm 1/2 lifted to rows of
+//! Multitask (block) solves — Algorithm 1/2 lifted to rows of
 //! `W ∈ R^{p×T}` for the M/EEG inverse problem (paper §3.2, Appendix D).
 //!
-//! One "coordinate" is a row `W_{j,:}`; the block CD update is
-//! `W_{j,:} ← prox_{g_j/L_j}(W_{j,:} − ∇_{j,:} f / L_j)` with the radial
-//! prox of Proposition 18. Working sets and the Anderson-with-guard
-//! acceleration carry over verbatim (the iterate buffer stores the
-//! flattened working-set rows).
+//! Since the block-coordinate refactor this module contains **no solver
+//! loop of its own**: `solve_multitask` instantiates the shared engine
+//! ([`crate::solver::block_cd`]) with the uniform row partition
+//! `BlockPartition::uniform(p, T)` and the [`QuadraticMultiTask`]
+//! datafit, so working sets, the guarded Anderson acceleration (now with
+//! affine state snapshots instead of full state replays) and the
+//! convergence history are exactly the scalar solver's, block-lifted.
 
-use super::anderson::Anderson;
+use super::block_cd::{solve_blocks, BlockFitResult};
+use super::partition::BlockPartition;
 use super::skglm::{HistoryPoint, SolverOpts};
 use crate::datafit::multitask::QuadraticMultiTask;
 use crate::linalg::Design;
 use crate::penalty::BlockPenalty;
-use std::time::Instant;
 
 /// Multitask fit outcome. `w` is row-major: `w[j*T + t]`.
 #[derive(Clone, Debug)]
@@ -28,101 +30,29 @@ pub struct MultiTaskFit {
 }
 
 impl MultiTaskFit {
-    /// Rows with a nonzero entry.
+    /// Rows with a **finite** nonzero entry. A divergent non-convex fit
+    /// (NaN/∞ coefficients) contributes no support rows instead of
+    /// poisoning downstream selection — the same NaN-last treatment as
+    /// `PathResult`'s best-point selectors.
     pub fn row_support(&self) -> Vec<usize> {
         let t = self.n_tasks;
         (0..self.w.len() / t)
-            .filter(|&j| self.w[j * t..(j + 1) * t].iter().any(|&v| v != 0.0))
+            .filter(|&j| {
+                self.w[j * t..(j + 1) * t].iter().any(|&v| v != 0.0 && v.is_finite())
+            })
             .collect()
     }
-}
 
-fn objective<B: BlockPenalty>(
-    datafit: &QuadraticMultiTask,
-    penalty: &B,
-    w: &[f64],
-    state: &[f64],
-    n_tasks: usize,
-) -> f64 {
-    let mut g = 0.0;
-    for j in 0..w.len() / n_tasks {
-        g += penalty.value(&w[j * n_tasks..(j + 1) * n_tasks]);
+    /// Whether the reported objective is a real number (false for a
+    /// divergent fit — callers comparing objectives should order with
+    /// [`crate::util::order::nan_last`]).
+    pub fn objective_is_finite(&self) -> bool {
+        self.objective.is_finite()
     }
-    datafit.value(state) + g
 }
 
-/// One block-CD epoch over `ws`. Returns max scaled row move.
-fn block_cd_epoch<B: BlockPenalty>(
-    design: &Design,
-    datafit: &QuadraticMultiTask,
-    penalty: &B,
-    w: &mut [f64],
-    state: &mut [f64],
-    ws: &[usize],
-    grad_buf: &mut [f64],
-    delta_buf: &mut [f64],
-) -> f64 {
-    let t = datafit.n_tasks();
-    let lipschitz = datafit.lipschitz();
-    let mut max_move = 0.0f64;
-    for &j in ws {
-        let lj = lipschitz[j];
-        if lj == 0.0 {
-            continue;
-        }
-        datafit.grad_row(design, state, j, grad_buf);
-        let row = &mut w[j * t..(j + 1) * t];
-        let mut changed = false;
-        for k in 0..t {
-            delta_buf[k] = row[k]; // stash old
-            row[k] -= grad_buf[k] / lj;
-        }
-        penalty.prox(row, 1.0 / lj);
-        for k in 0..t {
-            let d = row[k] - delta_buf[k];
-            delta_buf[k] = d;
-            if d != 0.0 {
-                changed = true;
-                max_move = max_move.max(lj * d.abs());
-            }
-        }
-        if changed {
-            datafit.update_state(design, j, delta_buf, state);
-        }
-    }
-    max_move
-}
-
-/// Max block score over a set of rows.
-fn score_rows<B: BlockPenalty>(
-    design: &Design,
-    datafit: &QuadraticMultiTask,
-    penalty: &B,
-    w: &[f64],
-    state: &[f64],
-    rows: &[usize],
-    grad_buf: &mut [f64],
-    out: Option<&mut [f64]>,
-) -> f64 {
-    let t = datafit.n_tasks();
-    let mut kkt = 0.0f64;
-    let mut out = out;
-    for (k, &j) in rows.iter().enumerate() {
-        let s = if datafit.lipschitz()[j] == 0.0 {
-            0.0
-        } else {
-            datafit.grad_row(design, state, j, grad_buf);
-            penalty.subdiff_distance(&w[j * t..(j + 1) * t], grad_buf)
-        };
-        if let Some(o) = out.as_deref_mut() {
-            o[k] = s;
-        }
-        kkt = kkt.max(s);
-    }
-    kkt
-}
-
-/// Solve the multitask problem. `y` is task-major (`y[t*n + i]`).
+/// Solve the multitask problem through the shared block engine. `y` is
+/// task-major (`y[t*n + i]`).
 pub fn solve_multitask<B: BlockPenalty>(
     design: &Design,
     y: &[f64],
@@ -130,132 +60,24 @@ pub fn solve_multitask<B: BlockPenalty>(
     penalty: &B,
     opts: &SolverOpts,
 ) -> MultiTaskFit {
-    let start = Instant::now();
-    let p = design.ncols();
-    let mut datafit = QuadraticMultiTask::new();
-    datafit.init(design, n_tasks);
+    let part = BlockPartition::uniform(design.ncols(), n_tasks);
+    let mut datafit = QuadraticMultiTask::new(n_tasks);
+    let result = solve_blocks(design, y, &part, &mut datafit, penalty, opts, None);
+    multitask_fit_from(result, n_tasks)
+}
 
-    let mut w = vec![0.0; p * n_tasks];
-    let mut state = datafit.init_state(design, y, &w);
-    let mut grad_buf = vec![0.0; n_tasks];
-    let mut delta_buf = vec![0.0; n_tasks];
-    let mut scores = vec![0.0; p];
-    let all_rows: Vec<usize> = (0..p).collect();
-
-    let mut fit = MultiTaskFit {
-        w: Vec::new(),
+/// Repackage a [`BlockFitResult`] as the multitask-facing fit type.
+pub fn multitask_fit_from(result: BlockFitResult, n_tasks: usize) -> MultiTaskFit {
+    MultiTaskFit {
+        w: result.v,
         n_tasks,
-        objective: f64::NAN,
-        kkt: f64::NAN,
-        converged: false,
-        n_outer: 0,
-        n_epochs: 0,
-        history: Vec::new(),
-    };
-    let mut ws_size = opts.ws_start.min(p).max(1);
-
-    for outer in 1..=opts.max_outer {
-        fit.n_outer = outer;
-        let kkt = score_rows(
-            design, &datafit, penalty, &w, &state, &all_rows, &mut grad_buf, Some(&mut scores),
-        );
-        fit.history.push(HistoryPoint {
-            t: start.elapsed().as_secs_f64(),
-            objective: objective(&datafit, penalty, &w, &state, n_tasks),
-            kkt,
-            ws_size: if opts.use_ws { ws_size.min(p) } else { p },
-        });
-        if kkt <= opts.tol {
-            fit.converged = true;
-            break;
-        }
-
-        let ws: Vec<usize> = if opts.use_ws {
-            let gsupp = (0..p)
-                .filter(|&j| penalty.in_gsupp(&w[j * n_tasks..(j + 1) * n_tasks]))
-                .count();
-            ws_size = ws_size.max(2 * gsupp).min(p);
-            let mut idx: Vec<usize> = (0..p).collect();
-            for j in 0..p {
-                if penalty.in_gsupp(&w[j * n_tasks..(j + 1) * n_tasks]) {
-                    scores[j] = f64::INFINITY;
-                }
-            }
-            if ws_size < p {
-                idx.select_nth_unstable_by(ws_size - 1, |&a, &b| {
-                    scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
-                });
-                idx.truncate(ws_size);
-            }
-            idx.sort_unstable();
-            idx
-        } else {
-            all_rows.clone()
-        };
-
-        // inner: block CD + guarded Anderson on flattened ws rows
-        let inner_tol = (opts.inner_tol_ratio * kkt).max(0.1 * opts.tol);
-        let mut accel =
-            if opts.anderson_m >= 2 { Some(Anderson::new(opts.anderson_m)) } else { None };
-        let mut flat = vec![0.0; ws.len() * n_tasks];
-        let gather = |w: &[f64], flat: &mut [f64]| {
-            for (k, &j) in ws.iter().enumerate() {
-                flat[k * n_tasks..(k + 1) * n_tasks]
-                    .copy_from_slice(&w[j * n_tasks..(j + 1) * n_tasks]);
-            }
-        };
-        if let Some(acc) = accel.as_mut() {
-            gather(&w, &mut flat);
-            acc.push(&flat);
-        }
-        for epoch in 1..=opts.max_epochs {
-            fit.n_epochs += 1;
-            block_cd_epoch(
-                design, &datafit, penalty, &mut w, &mut state, &ws, &mut grad_buf,
-                &mut delta_buf,
-            );
-            if let Some(acc) = accel.as_mut() {
-                gather(&w, &mut flat);
-                let full = acc.push(&flat);
-                if full && epoch % acc.m() == 0 {
-                    if let Some(extr) = acc.extrapolate() {
-                        // objective guard
-                        let cur_obj = objective(&datafit, penalty, &w, &state, n_tasks);
-                        let mut w_try = w.clone();
-                        for (k, &j) in ws.iter().enumerate() {
-                            w_try[j * n_tasks..(j + 1) * n_tasks]
-                                .copy_from_slice(&extr[k * n_tasks..(k + 1) * n_tasks]);
-                        }
-                        let state_try = datafit.init_state(design, y, &w_try);
-                        let try_obj =
-                            objective(&datafit, penalty, &w_try, &state_try, n_tasks);
-                        if try_obj < cur_obj {
-                            w = w_try;
-                            state = state_try;
-                            acc.clear();
-                            gather(&w, &mut flat);
-                            acc.push(&flat);
-                        }
-                    }
-                }
-            }
-            if epoch % 10 == 0 {
-                let s = score_rows(
-                    design, &datafit, penalty, &w, &state, &ws, &mut grad_buf, None,
-                );
-                if s <= inner_tol {
-                    break;
-                }
-            }
-        }
+        objective: result.objective,
+        kkt: result.kkt,
+        converged: result.converged,
+        n_outer: result.n_outer,
+        n_epochs: result.n_epochs,
+        history: result.history,
     }
-
-    fit.kkt =
-        score_rows(design, &datafit, penalty, &w, &state, &all_rows, &mut grad_buf, None);
-    fit.converged = fit.converged || fit.kkt <= opts.tol;
-    fit.objective = objective(&datafit, penalty, &w, &state, n_tasks);
-    fit.w = w;
-    fit
 }
 
 #[cfg(test)]
@@ -341,5 +163,23 @@ mod tests {
             &SolverOpts::default().with_tol(1e-10).without_ws(),
         );
         assert!((a.objective - b.objective).abs() < 1e-8, "{} vs {}", a.objective, b.objective);
+    }
+
+    #[test]
+    fn row_support_ignores_non_finite_rows() {
+        // satellite regression: a divergent block fit (NaN row) must not
+        // count toward the support nor panic selection
+        let fit = MultiTaskFit {
+            w: vec![0.0, 0.0, f64::NAN, f64::NAN, 1.0, 0.0, 0.0, f64::INFINITY],
+            n_tasks: 2,
+            objective: f64::NAN,
+            kkt: f64::NAN,
+            converged: false,
+            n_outer: 1,
+            n_epochs: 1,
+            history: Vec::new(),
+        };
+        assert_eq!(fit.row_support(), vec![2], "only the finite nonzero row counts");
+        assert!(!fit.objective_is_finite());
     }
 }

@@ -30,7 +30,7 @@
 //! curvature adaptivity.
 
 use super::inner::inner_solver;
-use super::skglm::select_working_set;
+use super::outer::select_working_set;
 use super::{ContinuationState, FitResult, HistoryPoint, SolverOpts};
 use crate::datafit::Datafit;
 use crate::linalg::Design;
@@ -227,7 +227,7 @@ pub fn solve_prox_newton_prepared<D: Datafit, P: Penalty>(
         let gsupp_count = beta.iter().filter(|&&b| penalty.in_gsupp(b)).count();
         let ws: Vec<usize> = if opts.use_ws {
             ws_size = ws_size.max(2 * gsupp_count).min(p);
-            select_working_set(&mut scores, &beta, penalty, ws_size)
+            select_working_set(&mut scores, ws_size, |j| penalty.in_gsupp(beta[j]))
         } else {
             (0..p).collect()
         };

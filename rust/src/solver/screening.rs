@@ -87,13 +87,11 @@ pub fn gap_safe_screen_lasso_update(
 
 /// Reusable buffers for the screened path solver: the per-λ loop of a path
 /// job allocates these once per sweep instead of once per solve (and per
-/// outer pass for the mask/scores) — the allocation-churn satellite of
-/// ISSUE 2.
+/// outer pass for the mask) — the allocation-churn satellite of ISSUE 2.
 #[derive(Clone, Debug, Default)]
 pub struct ScreenWorkspace {
     xtr: Vec<f64>,
     r: Vec<f64>,
-    scores: Vec<f64>,
     col_norms: Vec<f64>,
     screened: Vec<bool>,
 }
@@ -108,8 +106,6 @@ impl ScreenWorkspace {
     fn reset(&mut self, n: usize, p: usize) {
         self.xtr.clear();
         self.xtr.resize(p, 0.0);
-        self.scores.clear();
-        self.scores.resize(p, 0.0);
         self.col_norms.clear();
         self.col_norms.resize(p, 0.0);
         self.screened.clear();
@@ -168,15 +164,12 @@ pub fn solve_lasso_screened_warm_with(
     work: &mut ScreenWorkspace,
 ) -> (crate::solver::FitResult, usize) {
     use crate::datafit::{Datafit, Quadratic};
-    use crate::penalty::{Penalty, L1};
-    use crate::solver::inner::inner_solver;
+    use crate::solver::outer::solve_outer;
 
     let p = design.ncols();
-    let n = design.nrows() as f64;
     work.reset(design.nrows(), p);
     let mut datafit = Quadratic::new();
     datafit.init_cached(design, y, col_sq_norms);
-    let penalty = L1::new(lambda);
     match col_sq_norms {
         Some(sq) => {
             assert_eq!(sq.len(), p, "cached col_sq_norms does not match the design");
@@ -192,126 +185,171 @@ pub fn solve_lasso_screened_warm_with(
         }
     }
 
-    let mut beta = continuation.beta.clone().unwrap_or_else(|| vec![0.0; p]);
+    let beta = continuation.beta.clone().unwrap_or_else(|| vec![0.0; p]);
     assert_eq!(beta.len(), p);
-    let mut state = datafit.init_state(design, y, &beta); // Xβ − y
-    let start = std::time::Instant::now();
-    let mut result = crate::solver::FitResult {
-        beta: Vec::new(),
-        objective: f64::NAN,
-        kkt: f64::NAN,
-        n_outer: 0,
-        n_epochs: 0,
-        converged: false,
-        history: Vec::new(),
-        accepted_extrapolations: 0,
-        rejected_extrapolations: 0,
+    let state = datafit.init_state(design, y, &beta); // Xβ − y
+    let mut coords = ScreenedLassoCoords {
+        design,
+        y,
+        datafit,
+        penalty: crate::penalty::L1::new(lambda),
+        lambda,
+        beta,
+        state,
+        work,
+        xtr_fresh: false,
+        n_screened: 0,
     };
-    let mut ws_size = continuation.ws_size.unwrap_or(opts.ws_start).min(p).max(1);
-    let mut n_screened = 0usize;
+    let out = solve_outer(&mut coords, opts, continuation.ws_size);
+    let result = crate::solver::FitResult {
+        beta: coords.beta,
+        objective: out.objective,
+        kkt: out.kkt,
+        n_outer: out.n_outer,
+        n_epochs: out.n_epochs,
+        converged: out.converged,
+        history: out.history,
+        accepted_extrapolations: out.accepted_extrapolations,
+        rejected_extrapolations: out.rejected_extrapolations,
+    };
+    continuation.beta = Some(result.beta.clone());
+    continuation.ws_size = Some(out.ws_size);
+    (result, coords.n_screened)
+}
 
-    for outer in 1..=opts.max_outer {
-        result.n_outer = outer;
-        design.matvec_t(&state, &mut work.xtr);
-        for v in work.xtr.iter_mut() {
+/// The screened-Lasso [`crate::solver::outer::BlockCoords`]
+/// instantiation: the shared outer loop
+/// with the gap-safe sphere test as its per-iteration screening hook. The
+/// `Xᵀr` pass computed for screening is reused by the scoring pass (one
+/// O(n·p) kernel per outer iteration, as before the refactor); the final
+/// optimality metric is the Lasso duality gap.
+struct ScreenedLassoCoords<'a, 'w> {
+    design: &'a Design,
+    y: &'a [f64],
+    datafit: crate::datafit::Quadratic,
+    penalty: crate::penalty::L1,
+    lambda: f64,
+    beta: Vec<f64>,
+    /// Xβ − y (the quadratic datafit state)
+    state: Vec<f64>,
+    work: &'w mut ScreenWorkspace,
+    /// work.xtr/work.r match the current state (screen → score reuse)
+    xtr_fresh: bool,
+    n_screened: usize,
+}
+
+impl ScreenedLassoCoords<'_, '_> {
+    fn refresh_xtr(&mut self) {
+        if self.xtr_fresh {
+            return;
+        }
+        self.design.matvec_t(&self.state, &mut self.work.xtr);
+        for v in self.work.xtr.iter_mut() {
             *v = -*v; // Xᵀr with r = y − Xβ
         }
-        for (ri, &s) in work.r.iter_mut().zip(state.iter()) {
+        for (ri, &s) in self.work.r.iter_mut().zip(self.state.iter()) {
             *ri = -s;
         }
+        self.xtr_fresh = true;
+    }
+}
+
+impl crate::solver::outer::BlockCoords for ScreenedLassoCoords<'_, '_> {
+    fn n_blocks(&self) -> usize {
+        self.design.ncols()
+    }
+
+    fn screen(&mut self) {
+        use crate::datafit::Datafit;
+        self.refresh_xtr();
         let (count, _gap) = gap_safe_screen_lasso_update(
-            design,
-            y,
-            &beta,
-            &work.r,
-            &work.xtr,
-            lambda,
-            &work.col_norms,
-            &mut work.screened,
+            self.design,
+            self.y,
+            &self.beta,
+            &self.work.r,
+            &self.work.xtr,
+            self.lambda,
+            &self.work.col_norms,
+            &mut self.work.screened,
         );
-        n_screened = count;
+        self.n_screened = count;
         // newly certified features still holding a (warm-start) value are
         // frozen AT ZERO; the residual moves, so refresh r and Xᵀr
         let mut moved = false;
-        for j in 0..p {
-            if work.screened[j] && beta[j] != 0.0 {
-                datafit.update_state(design, j, -beta[j], &mut state);
-                beta[j] = 0.0;
+        for j in 0..self.beta.len() {
+            if self.work.screened[j] && self.beta[j] != 0.0 {
+                self.datafit.update_state(self.design, j, -self.beta[j], &mut self.state);
+                self.beta[j] = 0.0;
                 moved = true;
             }
         }
         if moved {
-            design.matvec_t(&state, &mut work.xtr);
-            for v in work.xtr.iter_mut() {
-                *v = -*v;
-            }
-            for (ri, &s) in work.r.iter_mut().zip(state.iter()) {
-                *ri = -s;
-            }
+            self.xtr_fresh = false;
+            self.refresh_xtr();
         }
-        // KKT over the survivors only (screened features are certified)
-        let mut kkt_max = 0.0f64;
-        for j in 0..p {
-            if work.screened[j] || work.col_norms[j] == 0.0 {
-                work.scores[j] = f64::NEG_INFINITY;
-                continue;
-            }
-            let s = penalty.subdiff_distance(beta[j], -work.xtr[j] / n, j);
-            work.scores[j] = s;
-            kkt_max = kkt_max.max(s);
-        }
-        result.history.push(crate::solver::HistoryPoint {
-            t: start.elapsed().as_secs_f64(),
-            objective: crate::linalg::sq_nrm2(&work.r) / (2.0 * n)
-                + lambda * crate::linalg::norm1(&beta),
-            kkt: kkt_max,
-            ws_size: p - count,
-        });
-        if kkt_max <= opts.tol {
-            result.converged = true;
-            break;
-        }
-        // working set among survivors
-        let nnz = beta.iter().filter(|&&b| b != 0.0).count();
-        ws_size = ws_size.max(2 * nnz).min(p);
-        for j in 0..p {
-            if beta[j] != 0.0 {
-                work.scores[j] = f64::INFINITY;
-            }
-        }
-        let mut idx: Vec<usize> = (0..p).collect();
-        if ws_size < p {
-            let scores = &work.scores;
-            idx.select_nth_unstable_by(ws_size - 1, |&a, &b| {
-                scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
-            });
-            idx.truncate(ws_size);
-        }
-        idx.retain(|&j| work.scores[j] > f64::NEG_INFINITY);
-        idx.sort_unstable();
-        if idx.is_empty() {
-            result.converged = true;
-            break;
-        }
-        let inner_tol = (opts.inner_tol_ratio * kkt_max).max(0.1 * opts.tol);
-        let stats = inner_solver(
-            design, y, &datafit, &penalty, &mut beta, &mut state, &idx, opts.max_epochs,
-            inner_tol, opts.anderson_m,
-        );
-        result.n_epochs += stats.epochs;
-        result.accepted_extrapolations += stats.accepted_extrapolations;
     }
 
-    for (ri, &s) in work.r.iter_mut().zip(state.iter()) {
-        *ri = -s;
+    fn score_pass(&mut self, scores: &mut [f64]) -> f64 {
+        use crate::penalty::Penalty;
+        self.refresh_xtr();
+        let n = self.design.nrows() as f64;
+        // KKT over the survivors only (screened features are certified)
+        let mut kkt_max = 0.0f64;
+        for (j, out) in scores.iter_mut().enumerate() {
+            if self.work.screened[j] || self.work.col_norms[j] == 0.0 {
+                *out = f64::NEG_INFINITY;
+                continue;
+            }
+            let s = self.penalty.subdiff_distance(self.beta[j], -self.work.xtr[j] / n, j);
+            *out = s;
+            kkt_max = kkt_max.max(s);
+        }
+        kkt_max
     }
-    result.kkt = crate::metrics::lasso_gap(design, y, &beta, &work.r, lambda);
-    result.objective =
-        crate::linalg::sq_nrm2(&work.r) / (2.0 * n) + lambda * crate::linalg::norm1(&beta);
-    result.beta = beta;
-    continuation.beta = Some(result.beta.clone());
-    continuation.ws_size = Some(ws_size);
-    (result, n_screened)
+
+    fn objective(&self) -> f64 {
+        let n = self.design.nrows() as f64;
+        crate::linalg::sq_nrm2(&self.state) / (2.0 * n)
+            + self.lambda * crate::linalg::norm1(&self.beta)
+    }
+
+    fn in_gsupp(&self, j: usize) -> bool {
+        self.beta[j] != 0.0
+    }
+
+    fn inner_solve(
+        &mut self,
+        ws: &[usize],
+        inner_tol: f64,
+        opts: &crate::solver::SolverOpts,
+    ) -> crate::solver::inner::InnerStats {
+        self.xtr_fresh = false;
+        crate::solver::inner::inner_solver(
+            self.design,
+            self.y,
+            &self.datafit,
+            &self.penalty,
+            &mut self.beta,
+            &mut self.state,
+            ws,
+            opts.max_epochs,
+            inner_tol,
+            opts.anderson_m,
+        )
+    }
+
+    fn final_kkt(&mut self) -> f64 {
+        // the duality gap is the exact certificate reported for screened
+        // solves (and what path callers threshold against)
+        for (ri, &s) in self.work.r.iter_mut().zip(self.state.iter()) {
+            *ri = -s;
+        }
+        crate::metrics::lasso_gap(self.design, self.y, &self.beta, &self.work.r, self.lambda)
+    }
+
+    fn label(&self) -> &'static str {
+        "screened-lasso"
+    }
 }
 
 #[cfg(test)]

@@ -1,6 +1,8 @@
-//! The skglm working-set solver (paper Algorithm 1).
+//! The skglm working-set solver (paper Algorithm 1) — the **scalar**
+//! instantiation of the shared block-coordinate core.
 //!
-//! Outer loop:
+//! Outer loop (owned by [`crate::solver::outer::solve_outer`], shared with
+//! the grouped/multitask block engine and the screened Lasso fast path):
 //! 1. score every feature by its optimality violation
 //!    `score_j = dist(−∇_j f(β), ∂g_j(β_j))` (Eq. 2; `score^cd` of Eq. 24
 //!    for penalties that request it),
@@ -11,16 +13,17 @@
 //! 4. run the Anderson-accelerated inner solver (Algorithm 2) on the
 //!    restricted problem.
 //!
-//! The full-gradient scoring pass (step 1) is the only O(n·p) operation —
-//! it is the hot spot the L1 Pallas kernel implements; the solver routes
+//! This module contributes the scalar [`BlockCoords`] implementation: the
+//! fused full-gradient scoring pass (step 1) is the only O(n·p) operation
+//! — it is the hot spot the L1 Pallas kernel implements; the solver routes
 //! it through an optional [`GradEngine`] (PJRT) and falls back to the
 //! native datafit path.
 
-use super::inner::inner_solver;
+use super::inner::{inner_solver, InnerStats};
+use super::outer::{solve_outer, BlockCoords};
 use crate::datafit::Datafit;
 use crate::linalg::Design;
 use crate::penalty::Penalty;
-use std::time::Instant;
 
 /// Pluggable full-gradient engine (the PJRT runtime implements this for
 /// dense quadratic scoring; `None`/unsupported shapes fall back to the
@@ -214,14 +217,12 @@ pub fn solve_prepared<D: Datafit, P: Penalty>(
     datafit: &mut D,
     penalty: &P,
     opts: &SolverOpts,
-    mut engine: Option<&mut dyn GradEngine>,
+    engine: Option<&mut dyn GradEngine>,
     beta0: Option<&[f64]>,
     ws0: Option<usize>,
     frozen: Option<&[bool]>,
 ) -> FitResult {
-    let start = Instant::now();
     let p = design.ncols();
-    let is_frozen = |j: usize| frozen.map(|m| m[j]).unwrap_or(false);
 
     // non-convex validity (Assumption 6): largest CD step is 1/min L_j>0
     let min_l = datafit
@@ -234,165 +235,147 @@ pub fn solve_prepared<D: Datafit, P: Penalty>(
         penalty.validate_step(1.0 / min_l);
     }
 
-    let mut beta = match beta0 {
+    let beta = match beta0 {
         Some(b) => {
             assert_eq!(b.len(), p);
             b.to_vec()
         }
         None => vec![0.0; p],
     };
-    let mut state = datafit.init_state(design, y, &beta);
-    let mut grad = vec![0.0; p];
-    let mut scores = vec![0.0; p];
-
-    let mut result = FitResult {
-        beta: Vec::new(),
-        objective: f64::NAN,
-        kkt: f64::NAN,
-        n_outer: 0,
-        n_epochs: 0,
-        converged: false,
-        history: Vec::new(),
-        accepted_extrapolations: 0,
-        rejected_extrapolations: 0,
-    };
-
-    let mut ws_size = ws0.unwrap_or(opts.ws_start).min(p).max(1);
+    let state = datafit.init_state(design, y, &beta);
+    let is_frozen = |j: usize| frozen.map(|m| m[j]).unwrap_or(false);
     let all_features: Vec<usize> = (0..p).filter(|&j| !is_frozen(j)).collect();
+    let mut coords = ScalarCoords {
+        design,
+        y,
+        datafit: &*datafit,
+        penalty,
+        engine,
+        beta,
+        state,
+        grad: vec![0.0; p],
+        frozen,
+        all_features,
+    };
+    let out = solve_outer(&mut coords, opts, ws0);
+    FitResult {
+        beta: coords.beta,
+        objective: out.objective,
+        kkt: out.kkt,
+        n_outer: out.n_outer,
+        n_epochs: out.n_epochs,
+        converged: out.converged,
+        history: out.history,
+        accepted_extrapolations: out.accepted_extrapolations,
+        rejected_extrapolations: out.rejected_extrapolations,
+    }
+}
 
-    for outer in 1..=opts.max_outer {
-        result.n_outer = outer;
+/// The scalar [`BlockCoords`] instantiation (p blocks of size 1): the
+/// fused PJRT-routable scoring pass, per-coordinate scores (`score^∂` or
+/// `score^cd`), and delegation to the scalar inner solver — exactly
+/// Algorithm 1's per-iteration work, with the control flow owned by
+/// [`solve_outer`].
+struct ScalarCoords<'a, 'e, D: Datafit, P: Penalty> {
+    design: &'a Design,
+    y: &'a [f64],
+    datafit: &'a D,
+    penalty: &'a P,
+    engine: Option<&'e mut dyn GradEngine>,
+    beta: Vec<f64>,
+    state: Vec<f64>,
+    grad: Vec<f64>,
+    /// features certified inactive at this λ (screening certificate)
+    frozen: Option<&'a [bool]>,
+    /// the non-frozen features (final KKT pass / no-ws ablation)
+    all_features: Vec<usize>,
+}
 
-        // ---- scoring pass (the O(np) hot spot; PJRT-routable) ----
-        let native = match engine.as_deref_mut() {
-            Some(e) => !e.grad_full(design, y, &state, &beta, &mut grad),
+impl<D: Datafit, P: Penalty> BlockCoords for ScalarCoords<'_, '_, D, P> {
+    fn n_blocks(&self) -> usize {
+        self.design.ncols()
+    }
+
+    fn score_pass(&mut self, scores: &mut [f64]) -> f64 {
+        // the O(np) hot spot; PJRT-routable
+        let native = match self.engine.as_deref_mut() {
+            Some(e) => {
+                !e.grad_full(self.design, self.y, &self.state, &self.beta, &mut self.grad)
+            }
             None => true,
         };
         if native {
-            datafit.grad_full(design, y, &state, &beta, &mut grad);
+            self.datafit.grad_full(self.design, self.y, &self.state, &self.beta, &mut self.grad);
         }
-        let lipschitz = datafit.lipschitz();
+        let lipschitz = self.datafit.lipschitz();
+        let is_frozen = |j: usize| self.frozen.map(|m| m[j]).unwrap_or(false);
         let mut kkt_max = 0.0f64;
-        for j in 0..p {
+        for (j, out) in scores.iter_mut().enumerate() {
             if is_frozen(j) {
                 // certified inactive at this λ: out of scoring and ws
-                scores[j] = f64::NEG_INFINITY;
+                *out = f64::NEG_INFINITY;
                 continue;
             }
             let s = if lipschitz[j] == 0.0 {
                 0.0
-            } else if penalty.use_cd_score() {
-                (beta[j]
-                    - penalty.prox(beta[j] - grad[j] / lipschitz[j], 1.0 / lipschitz[j], j))
+            } else if self.penalty.use_cd_score() {
+                (self.beta[j]
+                    - self.penalty.prox(
+                        self.beta[j] - self.grad[j] / lipschitz[j],
+                        1.0 / lipschitz[j],
+                        j,
+                    ))
                 .abs()
             } else {
-                penalty.subdiff_distance(beta[j], grad[j], j)
+                self.penalty.subdiff_distance(self.beta[j], self.grad[j], j)
             };
-            scores[j] = s;
+            *out = s;
             kkt_max = kkt_max.max(s);
         }
+        kkt_max
+    }
 
-        let objective = super::cd::objective(datafit, penalty, y, &beta, &state);
-        result.history.push(HistoryPoint {
-            t: start.elapsed().as_secs_f64(),
-            objective,
-            kkt: kkt_max,
-            ws_size: if opts.use_ws { ws_size.min(p) } else { p },
-        });
-        if opts.verbose {
-            eprintln!(
-                "[skglm] outer {outer:3}  obj {objective:.6e}  kkt {kkt_max:.3e}  ws {}",
-                if opts.use_ws { ws_size.min(p) } else { p }
-            );
-        }
-        if kkt_max <= opts.tol {
-            result.converged = true;
-            break;
-        }
+    fn objective(&self) -> f64 {
+        super::cd::objective(self.datafit, self.penalty, self.y, &self.beta, &self.state)
+    }
 
-        // ---- working-set selection ----
-        let gsupp_count = beta.iter().filter(|&&b| penalty.in_gsupp(b)).count();
-        let ws: Vec<usize> = if opts.use_ws {
-            ws_size = ws_size.max(2 * gsupp_count).min(p);
-            select_working_set(&mut scores, &beta, penalty, ws_size)
-        } else {
-            all_features.clone()
-        };
-        if ws.is_empty() {
-            // every remaining feature is frozen/converged
-            result.converged = true;
-            break;
-        }
+    fn in_gsupp(&self, j: usize) -> bool {
+        self.penalty.in_gsupp(self.beta[j])
+    }
 
-        // ---- inner solve (Algorithm 2) ----
-        let inner_tol = (opts.inner_tol_ratio * kkt_max).max(0.1 * opts.tol);
-        let stats = inner_solver(
-            design,
-            y,
-            datafit,
-            penalty,
-            &mut beta,
-            &mut state,
-            &ws,
+    fn inner_solve(&mut self, ws: &[usize], inner_tol: f64, opts: &SolverOpts) -> InnerStats {
+        inner_solver(
+            self.design,
+            self.y,
+            self.datafit,
+            self.penalty,
+            &mut self.beta,
+            &mut self.state,
+            ws,
             opts.max_epochs,
             inner_tol,
             opts.anderson_m,
+        )
+    }
+
+    fn final_kkt(&mut self) -> f64 {
+        // the O(n·p) KKT check runs on the kernel engine (frozen features
+        // are already excluded from `all_features`; `coordinate_score`
+        // returns 0 for empty columns and computes its own per-coordinate
+        // gradients — no full-gradient pass needed here)
+        let mut final_scores = vec![0.0; self.all_features.len()];
+        super::inner::coordinate_scores_into(
+            self.design,
+            self.y,
+            self.datafit,
+            self.penalty,
+            &self.beta,
+            &self.state,
+            &self.all_features,
+            &mut final_scores,
         );
-        result.n_epochs += stats.epochs;
-        result.accepted_extrapolations += stats.accepted_extrapolations;
-        result.rejected_extrapolations += stats.rejected_extrapolations;
+        final_scores.iter().fold(0.0f64, |m, &s| m.max(s))
     }
-
-    // final metrics: the O(n·p) KKT check runs on the kernel engine
-    // (frozen features are already excluded from `all_features`;
-    // `coordinate_score` returns 0 for empty columns and computes its own
-    // per-coordinate gradients — no full-gradient pass needed here)
-    let mut final_scores = vec![0.0; all_features.len()];
-    super::inner::coordinate_scores_into(
-        design,
-        y,
-        datafit,
-        penalty,
-        &beta,
-        &state,
-        &all_features,
-        &mut final_scores,
-    );
-    result.kkt = final_scores.iter().fold(0.0f64, |m, &s| m.max(s));
-    result.converged = result.converged || result.kkt <= opts.tol;
-    result.objective = super::cd::objective(datafit, penalty, y, &beta, &state);
-    result.beta = beta;
-    result
-}
-
-/// Take the `k` highest-scoring features, always retaining the current
-/// generalized support (their scores are lifted to +∞ first). Features
-/// scored `-∞` (frozen by screening) are never selected. `scores` is
-/// clobbered. Returned set is sorted ascending (cyclic CD sweeps in
-/// index order).
-pub(crate) fn select_working_set<P: Penalty>(
-    scores: &mut [f64],
-    beta: &[f64],
-    penalty: &P,
-    k: usize,
-) -> Vec<usize> {
-    let p = scores.len();
-    for j in 0..p {
-        if penalty.in_gsupp(beta[j]) {
-            scores[j] = f64::INFINITY;
-        }
-    }
-    let k = k.min(p);
-    let mut idx: Vec<usize> = (0..p).collect();
-    if k < p {
-        idx.select_nth_unstable_by(k - 1, |&a, &b| {
-            scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
-        });
-        idx.truncate(k);
-    }
-    idx.retain(|&j| scores[j] > f64::NEG_INFINITY);
-    idx.sort_unstable();
-    idx
 }
 
 #[cfg(test)]
@@ -609,13 +592,4 @@ mod tests {
         }
     }
 
-    #[test]
-    fn working_set_selection_keeps_support_and_top_scores() {
-        let pen = L1::new(1.0);
-        let beta = vec![0.0, 2.0, 0.0, 0.0, -1.0];
-        let mut scores = vec![0.5, 0.0, 3.0, 0.1, 0.0];
-        let ws = select_working_set(&mut scores, &beta, &pen, 3);
-        // support {1, 4} forced in; top remaining score is feature 2
-        assert_eq!(ws, vec![1, 2, 4]);
-    }
 }

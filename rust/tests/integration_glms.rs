@@ -42,6 +42,9 @@ fn poisson_path_streams_through_the_scheduler() {
                 done = true;
             }
             JobEvent::FitDone(_) => panic!("unexpected fit event"),
+            JobEvent::Failed { job_id, message } => {
+                panic!("path job {job_id} failed: {message}")
+            }
         }
     }
     sched.shutdown();

@@ -1,0 +1,215 @@
+//! Integration: group penalties and multitask fits as first-class
+//! scheduler jobs — warm path sweeps through the block-coordinate engine,
+//! multitask-via-scheduler vs direct-solve equivalence, and gap-safe
+//! block screening soundness end-to-end.
+
+use skglm::coordinator::{specs, FitScheduler, JobEvent};
+use skglm::data::{grouped_correlated, Dataset, GroupedSpec};
+use skglm::estimators::group_lambda_max;
+use skglm::estimators::path::geometric_grid;
+use skglm::solver::{solve_multitask, SolverOpts};
+use std::sync::Arc;
+
+#[test]
+fn group_lasso_path_streams_through_the_scheduler_with_screening() {
+    let (ds, part) = grouped_correlated(
+        GroupedSpec { n: 100, p: 80, group_size: 8, active_groups: 2, rho: 0.5, snr: 8.0 },
+        3,
+    );
+    let ds = Arc::new(ds);
+    let ratios = geometric_grid(1e-2, 6);
+    let mut sched = FitScheduler::start(1);
+    let job = sched.submit_path(
+        Arc::clone(&ds),
+        specs::group_lasso(1.0, Arc::clone(&part)),
+        ratios.clone(),
+        SolverOpts::default().with_tol(1e-9),
+    );
+    let events = sched.collect_events(ratios.len() + 1);
+    sched.shutdown();
+
+    let mut points = Vec::new();
+    for e in events {
+        match e {
+            JobEvent::PathPoint(p) => {
+                assert_eq!(p.job_id, job);
+                points.push(p);
+            }
+            JobEvent::PathDone(s) => assert_eq!(s.n_points, ratios.len()),
+            JobEvent::Failed { job_id, message } => {
+                panic!("group path job {job_id} failed: {message}")
+            }
+            JobEvent::FitDone(_) => panic!("unexpected fit event"),
+        }
+    }
+    assert_eq!(points.len(), ratios.len());
+    points.sort_by_key(|p| p.index);
+    // λ_max anchors the grid: the first point is (near-)empty, support
+    // grows down the path, and every point matches a direct solve
+    assert_eq!(points[0].point.support_size, 0, "support empty at lambda_max");
+    assert!(points.last().unwrap().point.support_size >= points[0].point.support_size);
+    for p in &points {
+        let direct = skglm::estimators::group::group_lasso(p.point.lambda, Arc::clone(&part))
+            .with_tol(1e-9)
+            .fit(&ds.design, &ds.y);
+        assert!(
+            p.point.objective <= direct.result.objective + 1e-7,
+            "warm path point worse than direct solve at ratio {}: {} vs {}",
+            p.point.lambda_ratio,
+            p.point.objective,
+            direct.result.objective
+        );
+    }
+}
+
+#[test]
+fn group_screening_certifies_blocks_without_changing_the_optimum() {
+    use skglm::penalty::GroupLasso;
+    use skglm::solver::solve_blocks;
+    let (ds, part) = grouped_correlated(
+        GroupedSpec { n: 120, p: 90, group_size: 6, active_groups: 2, rho: 0.4, snr: 10.0 },
+        7,
+    );
+    let lam = group_lambda_max(&ds.design, &ds.y, &part, None) / 3.0;
+    // screened spec solve vs a raw UNSCREENED engine solve (the
+    // estimator constructor screens too, so go through solve_blocks)
+    let spec = specs::group_lasso(lam, Arc::clone(&part));
+    let mut state = skglm::solver::ContinuationState::default();
+    let screened = spec.solve(
+        &ds.design,
+        &ds.y,
+        &SolverOpts::default().with_tol(1e-10),
+        &mut state,
+        None,
+        None,
+    );
+    let mut datafit = skglm::datafit::GroupedQuadratic::new(Arc::clone(&part));
+    let plain = solve_blocks(
+        &ds.design,
+        &ds.y,
+        &part,
+        &mut datafit,
+        &GroupLasso::new(lam),
+        &SolverOpts::default().with_tol(1e-10),
+        None,
+    );
+    assert_eq!(plain.n_screened, 0, "raw solve_blocks must not screen");
+    assert!(
+        (screened.objective - plain.objective).abs() < 1e-9,
+        "screened {} vs plain {}",
+        screened.objective,
+        plain.objective
+    );
+    for (a, b) in screened.beta.iter().zip(plain.v.iter()) {
+        assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+    }
+}
+
+fn multitask_dataset(seed: u64) -> (Arc<Dataset>, usize) {
+    let pb = skglm::data::meeg::simulate(
+        skglm::data::meeg::MeegSpec { n_sensors: 30, n_sources: 70, n_times: 6, ..Default::default() },
+        seed,
+    );
+    let t = pb.measurements.ncols();
+    let y = skglm::estimators::multitask::flatten_tasks(&pb.measurements);
+    let ds = Dataset {
+        name: format!("meeg-{seed}"),
+        design: skglm::linalg::Design::Dense(pb.gain.clone()),
+        y,
+        beta_true: Vec::new(),
+    };
+    (Arc::new(ds), t)
+}
+
+#[test]
+fn multitask_via_scheduler_equals_direct_solve() {
+    let (ds, t) = multitask_dataset(11);
+    let lam =
+        skglm::estimators::multitask::block_lambda_max(&ds.design, &ds.y, t) / 4.0;
+    let opts = SolverOpts::default().with_tol(1e-9);
+
+    let direct =
+        solve_multitask(&ds.design, &ds.y, t, &skglm::penalty::BlockL21::new(lam), &opts);
+
+    let mut sched = FitScheduler::start(1);
+    sched.submit_fit(
+        Arc::clone(&ds),
+        specs::multitask_l21(lam, ds.design.ncols(), t),
+        opts.clone(),
+    );
+    let outcomes = sched.collect_fits(1);
+    sched.shutdown();
+    let via_sched = &outcomes[0].result;
+
+    assert!(via_sched.converged && direct.converged);
+    assert!(
+        (via_sched.objective - direct.objective).abs() < 1e-12,
+        "scheduler {} vs direct {}",
+        via_sched.objective,
+        direct.objective
+    );
+    assert_eq!(via_sched.beta.len(), direct.w.len());
+    for (a, b) in via_sched.beta.iter().zip(direct.w.iter()) {
+        assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+    }
+    assert_eq!(outcomes[0].label, "quadratic_multitask/l21");
+}
+
+#[test]
+fn multitask_path_sweeps_warm_through_the_scheduler() {
+    let (ds, t) = multitask_dataset(13);
+    let ratios = geometric_grid(5e-2, 5);
+    let mut sched = FitScheduler::start(1);
+    sched.submit_path(
+        Arc::clone(&ds),
+        specs::multitask_l21(1.0, ds.design.ncols(), t),
+        ratios.clone(),
+        SolverOpts::default().with_tol(1e-8),
+    );
+    let events = sched.collect_events(ratios.len() + 1);
+    sched.shutdown();
+    let mut n_points = 0;
+    let mut last_support = 0;
+    for e in &events {
+        match e {
+            JobEvent::PathPoint(p) => {
+                n_points += 1;
+                last_support = p.point.support_size;
+            }
+            JobEvent::PathDone(_) => {}
+            JobEvent::Failed { job_id, message } => {
+                panic!("multitask path job {job_id} failed: {message}")
+            }
+            JobEvent::FitDone(_) => panic!("unexpected fit event"),
+        }
+    }
+    assert_eq!(n_points, ratios.len());
+    assert!(last_support > 0, "densest λ point should have active rows");
+}
+
+#[test]
+fn group_mcp_spec_is_sparser_than_group_lasso_at_same_lambda() {
+    let (ds, part) = grouped_correlated(
+        GroupedSpec { n: 150, p: 100, group_size: 10, active_groups: 2, rho: 0.5, snr: 8.0 },
+        17,
+    );
+    let lam = group_lambda_max(&ds.design, &ds.y, &part, None) / 6.0;
+    let opts = SolverOpts::default().with_tol(1e-8);
+    let lasso = skglm::estimators::group::group_lasso(lam, Arc::clone(&part))
+        .with_tol(1e-8)
+        .fit(&ds.design, &ds.y);
+    // γ > 1/min L_b: AR(1) columns have ‖X_j‖² ≈ n so L_b ≈ group size
+    let mcp = skglm::estimators::group::GroupEstimator::from_parts(
+        skglm::penalty::GroupMcp::new(lam, 3.0),
+        Arc::clone(&part),
+        opts,
+    )
+    .fit(&ds.design, &ds.y);
+    assert!(mcp.result.converged, "kkt {}", mcp.result.kkt);
+    assert!(
+        mcp.group_support().len() <= lasso.group_support().len(),
+        "group MCP ({}) should be at least as group-sparse as group Lasso ({})",
+        mcp.group_support().len(),
+        lasso.group_support().len()
+    );
+}

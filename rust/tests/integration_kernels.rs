@@ -121,6 +121,9 @@ fn budget_rules_and_thread_invariance() {
             }
             JobEvent::PathDone(_) => break,
             JobEvent::FitDone(_) => {}
+            JobEvent::Failed { job_id, message } => {
+                panic!("path job {job_id} failed: {message}")
+            }
         }
     }
     sched.shutdown();
@@ -136,6 +139,9 @@ fn budget_rules_and_thread_invariance() {
             }
             JobEvent::PathDone(_) => break,
             JobEvent::FitDone(_) => {}
+            JobEvent::Failed { job_id, message } => {
+                panic!("path job {job_id} failed: {message}")
+            }
         }
     }
     sched.shutdown();

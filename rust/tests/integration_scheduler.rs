@@ -44,6 +44,9 @@ fn path_job_streams_every_point_then_done() {
                 done = true;
             }
             JobEvent::FitDone(_) => panic!("unexpected single-fit event"),
+            JobEvent::Failed { job_id, message } => {
+                panic!("path job {job_id} failed: {message}")
+            }
         }
     }
     assert!(done);
@@ -164,6 +167,9 @@ fn mixed_fit_and_path_jobs_interleave_with_correct_tags() {
             JobEvent::PathDone(s) => {
                 assert_eq!(s.job_id, path_id);
                 path_done += 1;
+            }
+            JobEvent::Failed { job_id, message } => {
+                panic!("job {job_id} failed: {message}")
             }
         }
     }

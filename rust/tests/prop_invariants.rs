@@ -467,3 +467,112 @@ fn prop_parallel_normalize_cols_hits_target() {
         },
     );
 }
+
+/// ISSUE-4 tentpole property: the shared block-coordinate engine with the
+/// trivial partition (all blocks of size 1) IS the scalar working-set
+/// solver — coefficients and objective agree to 1e-12 on random Lasso and
+/// MCP problems (MCP through the group-MCP block penalty).
+#[test]
+fn prop_block_engine_trivial_partition_matches_scalar() {
+    use skglm::penalty::{GroupLasso, GroupMcp};
+    use skglm::solver::{solve_blocks, BlockPartition};
+    check(
+        17,
+        12,
+        |rng: &mut Rng| {
+            (
+                20 + rng.below(30),          // n
+                10 + rng.below(40),          // p
+                0.05 + 0.3 * rng.uniform(),  // λ ratio
+                rng.next_u64(),
+            )
+        },
+        |&(n, p, ratio, seed)| {
+            let ds = correlated(
+                CorrelatedSpec { n, p, rho: 0.4, nnz: (p / 5).max(1), snr: 8.0 },
+                seed,
+            );
+            let lam_max = skglm::estimators::linear::quadratic_lambda_max(&ds.design, &ds.y);
+            let lam = lam_max * ratio;
+            // solve an order tighter than the 1e-12 comparison bar so the
+            // two engines' optima gaps don't eat the whole tolerance
+            let opts = SolverOpts::default().with_tol(1e-14);
+            let part = BlockPartition::scalar(p);
+
+            // --- Lasso ---
+            let mut f = Quadratic::new();
+            let scalar = solve(&ds.design, &ds.y, &mut f, &L1::new(lam), &opts, None, None);
+            let mut gq = skglm::datafit::GroupedQuadratic::new(std::sync::Arc::new(
+                BlockPartition::scalar(p),
+            ));
+            let block = solve_blocks(
+                &ds.design, &ds.y, &part, &mut gq, &GroupLasso::new(lam), &opts, None,
+            );
+            close(scalar.objective, block.objective, 1e-12)?;
+            for (j, (a, b)) in scalar.beta.iter().zip(block.v.iter()).enumerate() {
+                ensure(
+                    (a - b).abs() <= 1e-12 * (1.0 + a.abs()),
+                    format!("lasso beta[{j}]: scalar {a} vs block {b}"),
+                )?;
+            }
+
+            // --- MCP (normalized design, the paper convention) ---
+            let mut design = ds.design.clone();
+            design.normalize_cols((n as f64).sqrt());
+            let lam = skglm::estimators::linear::quadratic_lambda_max(&design, &ds.y) * ratio;
+            let gamma = 3.0;
+            let mut f2 = Quadratic::new();
+            let scalar = solve(
+                &design, &ds.y, &mut f2, &Mcp::new(lam, gamma), &opts, None, None,
+            );
+            let mut gq2 = skglm::datafit::GroupedQuadratic::new(std::sync::Arc::new(
+                BlockPartition::scalar(p),
+            ));
+            let block = solve_blocks(
+                &design, &ds.y, &part, &mut gq2, &GroupMcp::new(lam, gamma), &opts, None,
+            );
+            close(scalar.objective, block.objective, 1e-12)?;
+            for (j, (a, b)) in scalar.beta.iter().zip(block.v.iter()).enumerate() {
+                ensure(
+                    (a - b).abs() <= 1e-12 * (1.0 + a.abs()),
+                    format!("mcp beta[{j}]: scalar {a} vs block {b}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Group prox with the trivial partition equals the scalar prox for every
+/// (penalty, v, step) probe — the pointwise half of the equivalence.
+#[test]
+fn prop_group_prox_trivial_partition_equals_scalar_prox() {
+    use skglm::penalty::{BlockPenalty, GroupLasso, GroupMcp, GroupScad, WeightedGroupLasso};
+    check(
+        19,
+        CASES,
+        |rng: &mut Rng| {
+            (
+                rng.uniform_range(-6.0, 6.0),
+                rng.uniform_range(0.05, 1.5),
+                rng.uniform_range(0.01, 2.0),
+                rng.uniform_range(4.0 /* > 1 + max step: SCAD regime */, 8.0),
+            )
+        },
+        |&(v, step, lam, gamma)| {
+            let mut b = [v];
+            GroupLasso::new(lam).prox(&mut b, step, 0);
+            close(b[0], soft_threshold(v, step * lam), 1e-13)?;
+            let mut b = [v];
+            WeightedGroupLasso::new(lam, vec![1.0]).prox(&mut b, step, 0);
+            close(b[0], soft_threshold(v, step * lam), 1e-13)?;
+            let mut b = [v];
+            GroupMcp::new(lam, gamma).prox(&mut b, step, 0);
+            close(b[0], Mcp::new(lam, gamma).prox(v, step, 0), 1e-13)?;
+            let mut b = [v];
+            GroupScad::new(lam, gamma).prox(&mut b, step, 0);
+            close(b[0], Scad::new(lam, gamma).prox(v, step, 0), 1e-13)?;
+            Ok(())
+        },
+    );
+}

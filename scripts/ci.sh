@@ -22,6 +22,9 @@ cargo run --release -p skglm --bin skglm -- exp kernels
 echo "==> glm bench smoke (writes BENCH_glms.json)"
 cargo run --release -p skglm --bin skglm -- exp glms
 
+echo "==> group bench smoke (writes BENCH_groups.json)"
+cargo run --release -p skglm --bin skglm -- exp groups
+
 echo "==> cargo doc --no-deps"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace
 
