@@ -1,0 +1,23 @@
+//! Bench target for the Gram-domain inner engine: residual vs Gram vs
+//! auto dispatch on the same grid as `skglm exp gram` (smoke scale by
+//! default; pass `--full` for the large grid). Results also land in
+//! `results/gram/BENCH_gram.json`.
+
+use skglm::bench::figures::Scale;
+use skglm::bench::gram_bench::run_gram;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Smoke };
+    match run_gram(scale) {
+        Ok(paths) => {
+            for p in paths {
+                println!("wrote {}", p.display());
+            }
+        }
+        Err(e) => {
+            eprintln!("gram bench failed: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}

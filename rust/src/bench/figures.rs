@@ -643,6 +643,13 @@ pub fn run_experiment(name: &str, scale: Scale) -> Result<Vec<PathBuf>> {
         "kernels" => crate::bench::kernel_bench::run_kernels(scale),
         "glms" => crate::bench::glm_bench::run_glms(scale),
         "groups" => crate::bench::group_bench::run_groups(scale),
+        "gram" => crate::bench::gram_bench::run_gram(scale),
+        // roll-up of every repo-root BENCH_*.json into BENCH_SUMMARY.json
+        // (not part of `all`: it summarises whatever trajectory points
+        // exist, it doesn't produce new ones)
+        "summary" => {
+            crate::bench::report::write_bench_summary(std::path::Path::new(".")).map(|p| vec![p])
+        }
         "all" => {
             let mut out = Vec::new();
             for exp in ALL_EXPERIMENTS {
@@ -657,7 +664,7 @@ pub fn run_experiment(name: &str, scale: Scale) -> Result<Vec<PathBuf>> {
 
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table1",
-    "table2", "pathsched", "kernels", "glms", "groups",
+    "table2", "pathsched", "kernels", "glms", "groups", "gram",
 ];
 
 #[cfg(test)]

@@ -5,6 +5,7 @@
 pub mod capability;
 pub mod figures;
 pub mod glm_bench;
+pub mod gram_bench;
 pub mod group_bench;
 pub mod harness;
 pub mod kernel_bench;

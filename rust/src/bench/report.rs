@@ -58,6 +58,86 @@ pub fn write_curves(
     Ok(csv_path)
 }
 
+/// Roll every repo-root `BENCH_*.json` trajectory point up into one
+/// `BENCH_SUMMARY.json` in `dir` (keyed by the bench name, contents
+/// embedded verbatim) so the perf trajectory is trackable as a single
+/// artifact. `skglm exp summary` and CI call this after the bench smokes.
+pub fn write_bench_summary(dir: &Path) -> Result<PathBuf> {
+    let mut entries: Vec<(String, String)> = Vec::new();
+    for e in std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        let e = e?;
+        let name = e.file_name().to_string_lossy().to_string();
+        let stem = match name.strip_prefix("BENCH_").and_then(|s| s.strip_suffix(".json")) {
+            Some(s) => s,
+            None => continue,
+        };
+        if stem == "SUMMARY" {
+            continue;
+        }
+        let raw = std::fs::read_to_string(e.path())?;
+        let trimmed = raw.trim();
+        // only embed balanced JSON — a corrupt/truncated file (killed
+        // mid-write) must not poison the whole summary
+        if balanced_json(trimmed) {
+            entries.push((stem.to_string(), trimmed.to_string()));
+        }
+    }
+    entries.sort();
+    let mut benches = Json::obj();
+    let names: Vec<Json> = entries.iter().map(|(k, _)| Json::Str(k.clone())).collect();
+    for (k, v) in entries {
+        benches = benches.with(&k, Json::Raw(v));
+    }
+    let json = Json::obj()
+        .with("summary", "roll-up of repo-root BENCH_*.json perf-trajectory points")
+        .with("included", Json::Arr(names))
+        .with("benches", benches);
+    let path = dir.join("BENCH_SUMMARY.json");
+    std::fs::write(&path, json.render())?;
+    Ok(path)
+}
+
+/// Cheap embeddability check for [`write_bench_summary`] (no JSON parser
+/// offline): the text must start like a JSON container, every `{`/`[`
+/// must close in order, strings/escapes must terminate, and nothing may
+/// trail the closing bracket. Catches truncated writes; not a validator.
+fn balanced_json(s: &str) -> bool {
+    if !(s.starts_with('{') || s.starts_with('[')) {
+        return false;
+    }
+    let mut depth: Vec<char> = Vec::new();
+    let mut in_string = false;
+    let mut escaped = false;
+    for (i, c) in s.char_indices() {
+        if in_string {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_string = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_string = true,
+            '{' => depth.push('}'),
+            '[' => depth.push(']'),
+            '}' | ']' => {
+                if depth.pop() != Some(c) {
+                    return false;
+                }
+                if depth.is_empty() {
+                    // nothing but whitespace may follow the closing bracket
+                    return s[i + 1..].trim().is_empty();
+                }
+            }
+            _ => {}
+        }
+    }
+    false // ran out of input with open containers or an open string
+}
+
 /// Write a standalone markdown table.
 pub fn write_markdown(figure: &str, name: &str, table: &Table) -> Result<PathBuf> {
     let dir = results_dir().join(figure);
@@ -115,6 +195,39 @@ mod tests {
         assert!(json_path.exists());
         std::env::remove_var("SKGLM_RESULTS");
         let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn bench_summary_rolls_up_root_trajectory_files() {
+        let tmp = std::env::temp_dir().join(format!("skglm_summary_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("BENCH_alpha.json"), r#"{"bench":"alpha","x":1.0}"#).unwrap();
+        std::fs::write(tmp.join("BENCH_beta.json"), r#"{"bench":"beta"}"#).unwrap();
+        std::fs::write(tmp.join("BENCH_bad.json"), "not json").unwrap();
+        // killed mid-write: starts like JSON but is truncated
+        std::fs::write(tmp.join("BENCH_cut.json"), r#"{"bench":"cut","rows":["#).unwrap();
+        std::fs::write(tmp.join("unrelated.txt"), "x").unwrap();
+        let path = write_bench_summary(&tmp).unwrap();
+        let raw = std::fs::read_to_string(&path).unwrap();
+        assert!(raw.contains(r#""alpha":{"bench":"alpha","x":1.0}"#), "{raw}");
+        assert!(raw.contains(r#""beta""#));
+        assert!(!raw.contains("not json"), "corrupt file embedded: {raw}");
+        assert!(!raw.contains(r#""cut""#), "truncated file embedded: {raw}");
+        // idempotent: a second run must not swallow its own output
+        let again = std::fs::read_to_string(write_bench_summary(&tmp).unwrap()).unwrap();
+        assert!(!again.contains("SUMMARY\":"), "summary embedded itself");
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn balanced_json_accepts_real_and_rejects_truncated() {
+        assert!(balanced_json(r#"{"a":[1,{"b":"}"}]}"#));
+        assert!(balanced_json("[1,2,3]"));
+        assert!(!balanced_json(r#"{"a":[1,2"#), "truncated");
+        assert!(!balanced_json(r#"{"a":1}]"#), "mismatched close");
+        assert!(!balanced_json(r#"{"a":1} extra"#), "trailing garbage");
+        assert!(!balanced_json(r#"{"a":"unterminated}"#), "open string");
+        assert!(!balanced_json("plain text"));
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Shared per-dataset state for the fit scheduler: normalized designs,
-//! Gram diagonals (column squared norms) and warm-start coefficients,
-//! keyed by (dataset identity, datafit/penalty family) and shared across
-//! jobs through the existing `Arc<Dataset>` plumbing.
+//! Gram diagonals (column squared norms), **working-set Gram block
+//! stores** and warm-start coefficients, keyed by (dataset identity,
+//! datafit/penalty family) and shared across jobs through the existing
+//! `Arc<Dataset>` plumbing.
 //!
 //! Dataset identity is the `Arc` allocation (`Arc::as_ptr`): jobs that
 //! share a dataset must share the same `Arc<Dataset>` — exactly how the
@@ -10,15 +11,26 @@
 //! so an address can never be reused by a new dataset while its key is
 //! live, and the coefficient maps are only touched after `design_entry`
 //! has pinned the same `Arc` — stale hits by pointer reuse are thereby
-//! impossible. The flip side: entries live for the scheduler's lifetime
-//! (a λ-sweep service working a bounded dataset set, not an unbounded
-//! stream; drop the scheduler to release them).
+//! impossible.
+//!
+//! The cache is **byte-budgeted** (ISSUE 5 satellite): coefficients,
+//! owned design copies and Gram blocks are accounted, and when the total
+//! exceeds the budget the least-recently-used entries are evicted
+//! (counted in [`CacheStats::evictions`]). Eviction only drops the
+//! cache's `Arc` — jobs holding an entry keep it alive; they just stop
+//! sharing with future jobs. The budget resolves `SKGLM_CACHE_BYTES` >
+//! [`DEFAULT_CACHE_BUDGET`], or [`DatasetCache::with_budget`].
 
 use crate::data::Dataset;
+use crate::linalg::gram::GramCache;
 use crate::linalg::Design;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Default cache byte budget (1 GiB), overridable with the
+/// `SKGLM_CACHE_BYTES` env var or [`DatasetCache::with_budget`].
+pub const DEFAULT_CACHE_BUDGET: usize = 1 << 30;
 
 /// Cached design state for one (dataset, normalization) pair. Holds the
 /// dataset `Arc`, pinning the allocation its cache key points at.
@@ -30,6 +42,11 @@ pub struct DesignEntry {
     pub col_sq_norms: Arc<Vec<f64>>,
     /// Column scales applied by normalization (β_orig = scale ⊙ β).
     pub scales: Option<Arc<Vec<f64>>>,
+    /// Byte-budgeted working-set Gram block store for this design: the
+    /// Gram inner engine's blocks persist here across λ points of a path
+    /// sweep and across every job (CV folds, repeated fits) sharing the
+    /// entry.
+    pub gram: Arc<GramCache>,
 }
 
 impl DesignEntry {
@@ -41,39 +58,91 @@ impl DesignEntry {
             None => &self.owner.design,
         }
     }
+
+    /// Bytes this entry contributes to the cache budget: owned data only
+    /// (the unnormalized design belongs to the dataset, not the cache),
+    /// including the live Gram store.
+    fn bytes(&self) -> usize {
+        let mut b = self.col_sq_norms.len() * 8;
+        if let Some(d) = &self.normalized {
+            // ~12 bytes/stored entry covers CSC value + row index
+            b += d.stored_entries() * 12;
+        }
+        if let Some(s) = &self.scales {
+            b += s.len() * 8;
+        }
+        b + self.gram.bytes()
+    }
+}
+
+struct DesignSlot {
+    entry: Arc<DesignEntry>,
+    last_used: u64,
 }
 
 struct CoefEntry {
     lambda: f64,
     beta: Vec<f64>,
+    last_used: u64,
 }
 
-/// Hit/miss counters (observability; `skglm serve` prints them).
+impl CoefEntry {
+    fn bytes(&self) -> usize {
+        self.beta.len() * 8 + 64
+    }
+}
+
+/// Hit/miss/eviction counters (observability; `skglm serve` prints them).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub design_hits: usize,
     pub design_misses: usize,
     pub coef_hits: usize,
     pub coef_misses: usize,
+    /// entries dropped by byte-budget LRU eviction
+    pub evictions: usize,
 }
 
 type CoefKey = (usize, bool, &'static str, &'static str);
 
 /// The scheduler's shared cache. All methods take `&self`; internal
 /// locking is per-map and never held across a solve.
-#[derive(Default)]
 pub struct DatasetCache {
-    designs: Mutex<HashMap<(usize, bool), Arc<DesignEntry>>>,
+    designs: Mutex<HashMap<(usize, bool), DesignSlot>>,
     coefs: Mutex<HashMap<CoefKey, CoefEntry>>,
     design_hits: AtomicUsize,
     design_misses: AtomicUsize,
     coef_hits: AtomicUsize,
     coef_misses: AtomicUsize,
+    evictions: AtomicUsize,
+    tick: AtomicU64,
+    budget_bytes: usize,
+}
+
+impl Default for DatasetCache {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl DatasetCache {
     pub fn new() -> Self {
-        Self::default()
+        Self::with_budget(crate::util::env_byte_budget("SKGLM_CACHE_BYTES", DEFAULT_CACHE_BUDGET))
+    }
+
+    /// Cache with an explicit byte budget (tests, embedders).
+    pub fn with_budget(budget_bytes: usize) -> Self {
+        Self {
+            designs: Mutex::new(HashMap::new()),
+            coefs: Mutex::new(HashMap::new()),
+            design_hits: AtomicUsize::new(0),
+            design_misses: AtomicUsize::new(0),
+            coef_hits: AtomicUsize::new(0),
+            coef_misses: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
+            tick: AtomicU64::new(0),
+            budget_bytes: budget_bytes.max(1),
+        }
     }
 
     /// Identity of a shared dataset (the `Arc` allocation).
@@ -81,17 +150,22 @@ impl DatasetCache {
         Arc::as_ptr(dataset) as usize
     }
 
-    /// Design + Gram-diagonal entry for (dataset, normalization),
-    /// computed once and shared by every job on the dataset. The √n
-    /// normalization copy — a full O(nnz) design clone — happens at most
-    /// once per dataset instead of once per MCP/SCAD job.
+    fn touch(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Design + Gram-diagonal + Gram-block entry for (dataset,
+    /// normalization), computed once and shared by every job on the
+    /// dataset. The √n normalization copy — a full O(nnz) design clone —
+    /// happens at most once per dataset instead of once per MCP/SCAD job.
     pub fn design_entry(&self, dataset: &Arc<Dataset>, normalize: bool) -> Arc<DesignEntry> {
         let key = (Self::dataset_key(dataset), normalize);
         {
-            let map = self.designs.lock().unwrap();
-            if let Some(entry) = map.get(&key) {
+            let mut map = self.designs.lock().unwrap();
+            if let Some(slot) = map.get_mut(&key) {
+                slot.last_used = self.touch();
                 self.design_hits.fetch_add(1, Ordering::Relaxed);
-                return Arc::clone(entry);
+                return Arc::clone(&slot.entry);
             }
         }
         // Compute outside the lock; a racing job may compute the same
@@ -105,6 +179,7 @@ impl DatasetCache {
                 normalized: Some(Arc::new(d)),
                 col_sq_norms: Arc::new(norms),
                 scales: Some(Arc::new(scales)),
+                gram: Arc::new(GramCache::with_default_budget()),
             })
         } else {
             Arc::new(DesignEntry {
@@ -112,11 +187,20 @@ impl DatasetCache {
                 normalized: None,
                 col_sq_norms: Arc::new(dataset.design.col_sq_norms()),
                 scales: None,
+                gram: Arc::new(GramCache::with_default_budget()),
             })
         };
         self.design_misses.fetch_add(1, Ordering::Relaxed);
-        let mut map = self.designs.lock().unwrap();
-        Arc::clone(map.entry(key).or_insert(entry))
+        let out = {
+            let mut map = self.designs.lock().unwrap();
+            let slot = map
+                .entry(key)
+                .or_insert_with(|| DesignSlot { entry, last_used: 0 });
+            slot.last_used = self.touch();
+            Arc::clone(&slot.entry)
+        };
+        self.enforce_budget(Some(key), None);
+        out
     }
 
     /// Most recent solution stored for (dataset, normalization, datafit,
@@ -130,9 +214,10 @@ impl DatasetCache {
         family: &'static str,
     ) -> Option<(f64, Vec<f64>)> {
         let key = (Self::dataset_key(dataset), normalize, datafit, family);
-        let map = self.coefs.lock().unwrap();
-        match map.get(&key) {
+        let mut map = self.coefs.lock().unwrap();
+        match map.get_mut(&key) {
             Some(entry) => {
+                entry.last_used = self.touch();
                 self.coef_hits.fetch_add(1, Ordering::Relaxed);
                 Some((entry.lambda, entry.beta.clone()))
             }
@@ -154,8 +239,95 @@ impl DatasetCache {
         beta: &[f64],
     ) {
         let key = (Self::dataset_key(dataset), normalize, datafit, family);
+        {
+            let mut map = self.coefs.lock().unwrap();
+            let last_used = self.touch();
+            map.insert(key, CoefEntry { lambda, beta: beta.to_vec(), last_used });
+        }
+        self.enforce_budget(None, Some(key));
+    }
+
+    /// Current accounted bytes (designs + coefficients + Gram blocks).
+    pub fn bytes(&self) -> usize {
+        let d: usize = self.designs.lock().unwrap().values().map(|s| s.entry.bytes()).sum();
+        let c: usize = self.coefs.lock().unwrap().values().map(|e| e.bytes()).sum();
+        d + c
+    }
+
+    /// Re-run budget enforcement with no protected entry. The scheduler
+    /// calls this after every job: Gram stores grow **during** solves, so
+    /// waiting for the next insert would leave the budget unenforced for
+    /// the whole lifetime of a quiet serve workload.
+    pub fn enforce_budget_now(&self) {
+        self.enforce_budget(None, None);
+    }
+
+    /// Remove an entry iff its `last_used` still matches the observed
+    /// tick — a concurrent touch between victim selection and removal
+    /// promotes the entry to MRU, and evicting it then would thrash the
+    /// very reuse the cache exists for.
+    fn remove_design_if_untouched(&self, key: (usize, bool), seen: u64) -> bool {
+        let mut map = self.designs.lock().unwrap();
+        match map.get(&key) {
+            Some(slot) if slot.last_used == seen => {
+                map.remove(&key);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn remove_coef_if_untouched(&self, key: CoefKey, seen: u64) -> bool {
         let mut map = self.coefs.lock().unwrap();
-        map.insert(key, CoefEntry { lambda, beta: beta.to_vec() });
+        match map.get(&key) {
+            Some(entry) if entry.last_used == seen => {
+                map.remove(&key);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// LRU eviction until the accounted bytes fit the budget. The entry
+    /// just touched (`keep_*`) is never evicted — the cache must always
+    /// be able to serve the request that grew it.
+    fn enforce_budget(&self, keep_design: Option<(usize, bool)>, keep_coef: Option<CoefKey>) {
+        loop {
+            if self.bytes() <= self.budget_bytes {
+                return;
+            }
+            // oldest evictable entry across both maps
+            let oldest_design = {
+                let map = self.designs.lock().unwrap();
+                map.iter()
+                    .filter(|(k, _)| Some(**k) != keep_design)
+                    .min_by_key(|(_, s)| s.last_used)
+                    .map(|(k, s)| (*k, s.last_used))
+            };
+            let oldest_coef = {
+                let map = self.coefs.lock().unwrap();
+                map.iter()
+                    .filter(|(k, _)| Some(**k) != keep_coef)
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, e)| (*k, e.last_used))
+            };
+            // removal is tick-guarded: if a concurrent caller touched the
+            // victim meanwhile we just loop and pick a new one
+            let evicted = match (oldest_design, oldest_coef) {
+                (Some((dk, dt)), Some((_, ct))) if dt <= ct => {
+                    self.remove_design_if_untouched(dk, dt)
+                }
+                (_, Some((ck, ct))) => self.remove_coef_if_untouched(ck, ct),
+                (Some((dk, dt)), None) => self.remove_design_if_untouched(dk, dt),
+                (None, None) => false,
+            };
+            if !evicted && oldest_design.is_none() && oldest_coef.is_none() {
+                return; // nothing evictable (only protected entries left)
+            }
+            if evicted {
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -164,6 +336,7 @@ impl DatasetCache {
             design_misses: self.design_misses.load(Ordering::Relaxed),
             coef_hits: self.coef_hits.load(Ordering::Relaxed),
             coef_misses: self.coef_misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
         }
     }
 }
@@ -187,6 +360,7 @@ mod tests {
         let s = cache.stats();
         assert_eq!(s.design_misses, 1);
         assert_eq!(s.design_hits, 1);
+        assert_eq!(s.evictions, 0);
         // unnormalized entry exposes the original design
         assert!(std::ptr::eq(a.design(), &d.design));
     }
@@ -234,5 +408,81 @@ mod tests {
         let s = cache.stats();
         assert_eq!(s.coef_hits, 1);
         assert_eq!(s.coef_misses, 2);
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_and_counts() {
+        // budget sized so ONE normalized entry fits but two don't
+        // (normalized copy ≈ 30·40·12 bytes plus norms/scales)
+        let cache = DatasetCache::with_budget(20_000);
+        let d1 = ds();
+        let d2 = Arc::new(correlated(
+            CorrelatedSpec { n: 30, p: 40, rho: 0.3, nnz: 4, snr: 10.0 },
+            3,
+        ));
+        let _e1 = cache.design_entry(&d1, true);
+        assert_eq!(cache.stats().evictions, 0);
+        let _e2 = cache.design_entry(&d2, true);
+        let s = cache.stats();
+        assert!(s.evictions >= 1, "second entry must evict the LRU first one");
+        assert!(cache.bytes() <= 20_000, "cache over budget: {} bytes", cache.bytes());
+        // d1 was evicted: asking again recomputes (miss, not hit)
+        let misses_before = cache.stats().design_misses;
+        let _e1_again = cache.design_entry(&d1, true);
+        assert_eq!(cache.stats().design_misses, misses_before + 1);
+    }
+
+    #[test]
+    fn coefficients_participate_in_the_budget() {
+        let cache = DatasetCache::with_budget(2_000);
+        let d = ds();
+        // several large coefficient entries under different families
+        cache.store_coef(&d, false, "quadratic", "l1", 0.1, &vec![1.0; 100]);
+        cache.store_coef(&d, false, "quadratic", "mcp", 0.1, &vec![1.0; 100]);
+        cache.store_coef(&d, false, "quadratic", "scad", 0.1, &vec![1.0; 100]);
+        let s = cache.stats();
+        assert!(s.evictions >= 1, "coef entries must be evicted under budget pressure");
+        assert!(cache.bytes() <= 2_000);
+        // the most recently stored family survives
+        assert!(cache.warm_coef(&d, false, "quadratic", "scad").is_some());
+    }
+
+    #[test]
+    fn most_recent_entry_is_never_evicted_even_when_oversized() {
+        // a budget no entry can fit: the just-inserted one must survive
+        let cache = DatasetCache::with_budget(1);
+        let d = ds();
+        let e = cache.design_entry(&d, true);
+        assert_eq!(e.design().ncols(), 40);
+        let map_len = cache.designs.lock().unwrap().len();
+        assert_eq!(map_len, 1, "the entry that grew the cache must be served");
+    }
+
+    #[test]
+    fn enforce_budget_now_accounts_gram_growth_between_inserts() {
+        // the bare entry fits the budget; its Gram store growing during a
+        // "solve" pushes it over, and enforce_budget_now (what the
+        // scheduler calls after each job) must evict
+        let cache = DatasetCache::with_budget(6_000);
+        let d = ds();
+        let entry = cache.design_entry(&d, false);
+        assert_eq!(cache.stats().evictions, 0);
+        let ws: Vec<usize> = (0..40).collect();
+        let mut gw = Vec::new();
+        entry.gram.ensure_gather(entry.design(), &ws, &mut gw);
+        assert!(cache.bytes() > 6_000, "gram growth must be accounted: {}", cache.bytes());
+        cache.enforce_budget_now();
+        assert!(cache.stats().evictions >= 1);
+        assert!(cache.bytes() <= 6_000);
+    }
+
+    #[test]
+    fn design_entry_carries_a_shared_gram_store() {
+        let cache = DatasetCache::new();
+        let d = ds();
+        let a = cache.design_entry(&d, false);
+        let b = cache.design_entry(&d, false);
+        assert!(Arc::ptr_eq(&a.gram, &b.gram), "jobs must share one Gram store");
+        assert_eq!(a.gram.n_slots(), 0);
     }
 }

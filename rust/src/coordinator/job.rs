@@ -402,6 +402,7 @@ impl<D: BlockDatafit + 'static, B: BlockPenalty + 'static> FitSpec for BlockSpec
             history: result.history,
             accepted_extrapolations: result.accepted_extrapolations,
             rejected_extrapolations: result.rejected_extrapolations,
+            profile: result.profile,
         }
     }
 }

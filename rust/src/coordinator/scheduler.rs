@@ -277,6 +277,9 @@ fn run_fit(
     let entry = cache.design_entry(dataset, normalize);
     let design = entry.design();
     let mut state = ContinuationState::default();
+    // hand the solve the per-design Gram store: blocks assembled by this
+    // job are reused by every later job on the same (dataset, norm) entry
+    state.gram = Some(Arc::clone(&entry.gram));
     let mut warm_started = false;
     if spec.is_convex() {
         if let Some((_lambda, beta)) =
@@ -306,6 +309,9 @@ fn run_fit(
         wall_time: t0.elapsed().as_secs_f64(),
         warm_started,
     }));
+    // Gram blocks grew *during* the solve; re-check the byte budget now
+    // rather than waiting for the next cache insert
+    cache.enforce_budget_now();
 }
 
 fn run_path(
@@ -328,6 +334,9 @@ fn run_path(
     let beta_true =
         if dataset.beta_true.is_empty() { None } else { Some(dataset.beta_true.as_slice()) };
     let mut state = ContinuationState::default();
+    // one Gram store for the whole sweep AND for sibling jobs: blocks
+    // computed at λᵢ are exactly reusable at λᵢ₊₁ (incremental growth)
+    state.gram = Some(Arc::clone(&entry.gram));
     let mut total_epochs = 0;
     // screening support is λ-independent; decide once for the sweep
     let gap_screened = spec.supports_gap_screening();
@@ -422,6 +431,9 @@ fn run_path(
         total_epochs,
         total_time: t0.elapsed().as_secs_f64(),
     }));
+    // the sweep's Gram blocks count against the cache budget; enforce it
+    // at job completion (stores grow during solves, not at insert time)
+    cache.enforce_budget_now();
 }
 
 #[cfg(test)]

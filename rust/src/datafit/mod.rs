@@ -111,6 +111,18 @@ pub trait Datafit: Clone + Send + Sync {
         self.lipschitz().iter().sum()
     }
 
+    /// Gram-engine opt-in: return `Some(c)` iff this datafit is an exact
+    /// residual quadratic, i.e. its state is `s = Xβ − y` maintained by
+    /// `s += δ·X_j`, its gradient is `∇_j f = c · X_jᵀ s` and its value is
+    /// `(c/2)·‖s‖²`. Under that contract the inner loop's working-set
+    /// gradient can be maintained in the Gram domain
+    /// ([`crate::solver::gram`]) at O(|ws|) per coordinate. Anything that
+    /// deviates (weights, nonlinear links, dual states) must return `None`
+    /// — the Gram recursion would silently drift otherwise.
+    fn residual_quadratic_scale(&self) -> Option<f64> {
+        None
+    }
+
     // ---- raw (per-sample) curvature: the prox-Newton protocol ----------
     //
     // Writing `f(β) = F(Xβ)` with separable `F(s) = Σ_i F_i(s_i)`, the

@@ -85,6 +85,12 @@ impl Datafit for Quadratic {
         "quadratic"
     }
 
+    /// Exact residual quadratic: `∇_j f = X_jᵀ(Xβ − y)/n` — the Gram
+    /// inner engine's contract holds with `c = 1/n`.
+    fn residual_quadratic_scale(&self) -> Option<f64> {
+        Some(self.inv_n)
+    }
+
     fn supports_prox_newton(&self) -> bool {
         true
     }

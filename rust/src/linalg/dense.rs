@@ -155,6 +155,49 @@ impl DenseMatrix {
         }
     }
 
+    /// Gathered blocked dots: `out[k] = X[:, cols[k]]ᵀ r` for an
+    /// **arbitrary** (not necessarily contiguous) column list. Columns are
+    /// processed [`PANEL`] at a time so every loaded element of `r` is
+    /// reused across the panel — the working-set Gram assembly kernel
+    /// (`r` is itself a design column there). Each panel's summation
+    /// order depends only on the position inside `cols`, so splitting
+    /// `cols` across threads at PANEL-aligned boundaries keeps results
+    /// thread-count independent.
+    pub fn gather_dots_panel(&self, r: &[f64], cols: &[usize], out: &mut [f64]) {
+        assert_eq!(r.len(), self.n);
+        assert_eq!(out.len(), cols.len());
+        let n = self.n;
+        let mut k = 0usize;
+        while k + PANEL <= cols.len() {
+            let c0 = self.col(cols[k]);
+            let c1 = self.col(cols[k + 1]);
+            let c2 = self.col(cols[k + 2]);
+            let c3 = self.col(cols[k + 3]);
+            let c4 = self.col(cols[k + 4]);
+            let c5 = self.col(cols[k + 5]);
+            let c6 = self.col(cols[k + 6]);
+            let c7 = self.col(cols[k + 7]);
+            let mut acc = [0.0f64; PANEL];
+            for i in 0..n {
+                let ri = r[i];
+                acc[0] += c0[i] * ri;
+                acc[1] += c1[i] * ri;
+                acc[2] += c2[i] * ri;
+                acc[3] += c3[i] * ri;
+                acc[4] += c4[i] * ri;
+                acc[5] += c5[i] * ri;
+                acc[6] += c6[i] * ri;
+                acc[7] += c7[i] * ri;
+            }
+            out[k..k + PANEL].copy_from_slice(&acc);
+            k += PANEL;
+        }
+        while k < cols.len() {
+            out[k] = dot(self.col(cols[k]), r);
+            k += 1;
+        }
+    }
+
     /// Scale every column `j` by `scales[j]`, parallelised over the
     /// kernel pool (each task owns a disjoint column range of the
     /// column-major backing store).
@@ -325,6 +368,24 @@ mod tests {
                 for (k, j) in (1..p - 1).enumerate() {
                     assert!((sub[k] - reference[j]).abs() < 1e-12);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_dots_panel_matches_per_column_dot() {
+        for p in [0usize, 1, 7, 8, 9, 19] {
+            let n = 5;
+            let data: Vec<f64> = (0..n * p).map(|k| ((k * 13 % 11) as f64) - 5.0).collect();
+            let m = DenseMatrix::from_col_major(n, p, data);
+            let r: Vec<f64> = (0..n).map(|i| (i as f64) * 0.5 - 1.0).collect();
+            // scattered, repeated column list
+            let cols: Vec<usize> = (0..p).rev().chain(0..p.min(3)).collect();
+            let mut out = vec![0.0; cols.len()];
+            m.gather_dots_panel(&r, &cols, &mut out);
+            for (k, &j) in cols.iter().enumerate() {
+                let expect = dot(m.col(j), &r);
+                assert!((out[k] - expect).abs() < 1e-12, "p={p} k={k}");
             }
         }
     }

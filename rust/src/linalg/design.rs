@@ -162,7 +162,7 @@ impl Design {
     /// `ws` when the restricted pass is big enough.
     pub fn matvec_t_subset(&self, r: &[f64], ws: &[usize], out: &mut [f64]) {
         assert_eq!(ws.len(), out.len());
-        let work = self.subset_work(ws);
+        let work = self.subset_stored_entries(ws);
         let threads = KernelPolicy::global().threads_for(work);
         if threads == 1 {
             for (o, &j) in out.iter_mut().zip(ws.iter()) {
@@ -205,13 +205,17 @@ impl Design {
         group_reduce_sq(&sq, cols, offsets)
     }
 
-    /// Estimated stored entries touched by a pass over `ws`.
-    fn subset_work(&self, ws: &[usize]) -> usize {
+    /// Stored entries touched by one pass over the columns of `ws`
+    /// (`n·|ws|` dense, Σ nnz sparse) — the work unit of the kernel
+    /// policy and of the inner-engine cost model (a residual CD epoch is
+    /// two such passes; see `solver::gram`).
+    pub fn subset_stored_entries(&self, ws: &[usize]) -> usize {
         match self {
             Design::Dense(m) => m.nrows() * ws.len(),
             Design::Sparse(m) => ws.iter().map(|&j| m.col_nnz(j)).sum(),
         }
     }
+
 
     /// Chunk `0..ws.len()`: even for dense, nnz-balanced for CSC.
     fn subset_chunks(&self, ws: &[usize], threads: usize) -> Vec<std::ops::Range<usize>> {

@@ -1,0 +1,532 @@
+//! Working-set Gram store: the linear-algebra substrate of the Gram-domain
+//! inner engine (ISSUE 5 tentpole).
+//!
+//! For quadratic datafits the inner loop's per-coordinate gradient over a
+//! working set `ws` can be maintained from `G_ws = X_wsᵀ X_ws` in O(|ws|)
+//! per update instead of two O(n) column passes. [`GramStore`] holds those
+//! blocks **incrementally**: every column ever admitted gets a slot, the
+//! lower triangle over all slots is kept complete, and admitting a new
+//! column computes only its row against the existing slots — when the
+//! outer loop doubles the working set, only the new rows/columns are
+//! assembled, and blocks computed at one λ of a path sweep are exactly
+//! reusable at the next.
+//!
+//! Kernels (on the PR 2 kernel engine):
+//! - dense: a blocked 8-column gather-dot micro-kernel
+//!   ([`DenseMatrix::gather_dots_panel`]) over slot chunks;
+//! - sparse: CSC column-pair dots — a sorted merge join for short rows
+//!   ([`CscMatrix::col_pair_dot`]), a scatter-then-dot pass (densify the
+//!   new column once, then one `col_dot` per slot) for long ones.
+//!
+//! [`GramCache`] wraps a store in a `Mutex` with a **byte budget**: when
+//! admitting a working set would exceed it, slots outside the requested
+//! set are evicted (a pure repack — surviving pairs are never recomputed)
+//! and the eviction is counted. Shared via `Arc` by the coordinator's
+//! [`crate::coordinator::cache::DesignEntry`] so path sweeps and CV folds
+//! reuse blocks across λ and across jobs.
+
+use super::design::Design;
+use super::parallel::{self, KernelPolicy};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Below this many existing slots a sparse row is filled by pairwise
+/// merge-join dots; above it the new column is densified once and each
+/// pair becomes a plain `col_dot` (cost per pair drops from
+/// `nnz_new + nnz_slot` to `nnz_slot`).
+const SPARSE_MERGE_MAX_SLOTS: usize = 8;
+
+/// Incremental lower-triangular Gram over every column ever admitted.
+///
+/// Invariant: `rows[k]` has length `k + 1` and holds
+/// `G[k][l] = X_{cols[k]}ᵀ X_{cols[l]}` for every `l ≤ k` — the triangle
+/// is always complete, so *any* subset of slots can be gathered without
+/// recomputation.
+#[derive(Debug, Default)]
+pub struct GramStore {
+    /// slot → design column
+    cols: Vec<usize>,
+    /// design column → slot
+    slot: HashMap<usize, usize>,
+    /// complete lower triangle, `rows[k].len() == k + 1`
+    rows: Vec<Vec<f64>>,
+    /// densify scratch for sparse designs (zeroed between uses)
+    scratch: Vec<f64>,
+    /// cumulative stored-entry touches spent assembling blocks
+    assembly_flops: u64,
+    /// identity of the design the blocks belong to, recorded at first
+    /// admit: (nrows, ncols, stored entries). A store paired with a
+    /// different design would silently return wrong gradients; this
+    /// turns that into a panic (see [`GramStore::ensure`]).
+    design_shape: Option<(usize, usize, usize)>,
+}
+
+impl GramStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of admitted columns.
+    pub fn n_slots(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn contains(&self, j: usize) -> bool {
+        self.slot.contains_key(&j)
+    }
+
+    /// Columns of `ws` not yet admitted.
+    pub fn missing(&self, ws: &[usize]) -> usize {
+        ws.iter().filter(|j| !self.slot.contains_key(j)).count()
+    }
+
+    /// Cumulative assembly work (stored entries touched).
+    pub fn assembly_flops(&self) -> u64 {
+        self.assembly_flops
+    }
+
+    /// Approximate heap footprint (triangle + slot bookkeeping + scratch).
+    pub fn bytes(&self) -> usize {
+        let entries: usize = self.rows.iter().map(|r| r.len()).sum();
+        entries * 8 + self.cols.len() * 64 + self.scratch.len() * 8
+    }
+
+    /// Triangle bytes a future state with `slots` admitted columns needs.
+    fn triangle_bytes(slots: usize) -> usize {
+        slots * (slots + 1) / 2 * 8
+    }
+
+    /// Bytes [`GramStore::ensure`] would grow the store by for `ws`.
+    pub fn projected_growth_bytes(&self, ws: &[usize]) -> usize {
+        let after = self.n_slots() + self.missing(ws);
+        Self::triangle_bytes(after).saturating_sub(Self::triangle_bytes(self.n_slots()))
+    }
+
+    /// Estimated stored-entry cost of admitting the missing columns of
+    /// `ws` (the dispatcher's assembly term; exact for dense designs).
+    pub fn projected_assembly_flops(&self, design: &Design, ws: &[usize]) -> f64 {
+        let new = self.missing(ws);
+        if new == 0 {
+            return 0.0;
+        }
+        let s = self.n_slots();
+        // new rows have lengths s+1, s+2, …, s+new
+        let pairs = new * s + new * (new + 1) / 2;
+        let per_pair = match design {
+            Design::Dense(m) => m.nrows() as f64,
+            Design::Sparse(m) => (m.nnz() as f64 / m.ncols().max(1) as f64).max(1.0),
+        };
+        pairs as f64 * per_pair
+    }
+
+    /// `G[a][b]` between two slots (either order).
+    #[inline]
+    fn get(&self, a: usize, b: usize) -> f64 {
+        let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+        self.rows[hi][lo]
+    }
+
+    /// Admit every missing column of `ws`, computing only the new rows.
+    ///
+    /// Panics when `design` is not the design the existing blocks were
+    /// assembled on (shape/nnz mismatch, or a same-shape design whose
+    /// first admitted column has a different norm) — a mispaired store
+    /// must fail loudly, not converge to the wrong optimum.
+    pub fn ensure(&mut self, design: &Design, ws: &[usize]) {
+        self.check_same_design(design);
+        for &j in ws {
+            if !self.slot.contains_key(&j) {
+                self.admit(design, j);
+            }
+        }
+    }
+
+    fn check_same_design(&mut self, design: &Design) {
+        let shape = (design.nrows(), design.ncols(), design.stored_entries());
+        match self.design_shape {
+            None => self.design_shape = Some(shape),
+            Some(recorded) => {
+                assert_eq!(
+                    recorded, shape,
+                    "GramStore reused with a different design (recorded {recorded:?})"
+                );
+                // same-shape spoof guard: recomputing the first admitted
+                // slot's diagonal uses the exact summation of `admit`, so
+                // on the same design it reproduces bit-for-bit
+                if let (Some(&j0), Some(row0)) = (self.cols.first(), self.rows.first()) {
+                    let diag = match design {
+                        Design::Dense(m) => super::dense::sq_nrm2(m.col(j0)),
+                        Design::Sparse(m) => {
+                            let (_, vals) = m.col(j0);
+                            vals.iter().map(|v| v * v).sum()
+                        }
+                    };
+                    assert!(
+                        diag == row0[0],
+                        "GramStore reused with a different design: column {j0} norm² \
+                         {diag} != recorded {}",
+                        row0[0]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Compute the new slot's row against all existing slots + itself.
+    fn admit(&mut self, design: &Design, j: usize) {
+        let k = self.cols.len();
+        let mut row = vec![0.0; k + 1];
+        match design {
+            Design::Dense(m) => {
+                let r = m.col(j);
+                let threads = KernelPolicy::global().threads_for(m.nrows() * (k + 1));
+                // PANEL-aligned boundaries: a slot's panel membership (and
+                // hence its summation order) depends only on its position
+                // in the row, never on the thread count — same invariant
+                // as the kernel engine's Xᵀr pass
+                let ranges = parallel::even_chunks_aligned(
+                    k,
+                    parallel::chunk_count(threads),
+                    super::dense::PANEL,
+                );
+                let cols = &self.cols;
+                parallel::par_slices(&mut row[..k], &ranges, threads, |_, rng, sub| {
+                    m.gather_dots_panel(r, &cols[rng], sub);
+                });
+                row[k] = super::dense::sq_nrm2(r);
+                self.assembly_flops += (m.nrows() * (k + 1)) as u64;
+            }
+            Design::Sparse(m) => {
+                let (j_rows, j_vals) = m.col(j);
+                if k <= SPARSE_MERGE_MAX_SLOTS {
+                    for (l, &cl) in self.cols.iter().enumerate() {
+                        row[l] = m.col_pair_dot(j, cl);
+                        self.assembly_flops += (m.col_nnz(j) + m.col_nnz(cl)) as u64;
+                    }
+                } else {
+                    // densify the new column once, then one sparse dot per
+                    // existing slot (kernel-engine parallel)
+                    self.scratch.resize(m.nrows(), 0.0);
+                    for (&i, &v) in j_rows.iter().zip(j_vals.iter()) {
+                        self.scratch[i as usize] = v;
+                    }
+                    let work: usize = self.cols.iter().map(|&c| m.col_nnz(c)).sum();
+                    let threads = KernelPolicy::global().threads_for(work);
+                    let ranges = parallel::even_chunks(k, parallel::chunk_count(threads));
+                    let cols = &self.cols;
+                    let scratch = &self.scratch;
+                    parallel::par_slices(&mut row[..k], &ranges, threads, |_, rng, sub| {
+                        for (o, &c) in sub.iter_mut().zip(cols[rng].iter()) {
+                            *o = m.col_dot(c, scratch);
+                        }
+                    });
+                    // un-scatter (keeps the scratch all-zero between uses)
+                    for &i in j_rows {
+                        self.scratch[i as usize] = 0.0;
+                    }
+                    self.assembly_flops += (work + 2 * m.col_nnz(j)) as u64;
+                }
+                row[k] = j_vals.iter().map(|v| v * v).sum();
+                self.assembly_flops += m.col_nnz(j) as u64;
+            }
+        }
+        self.rows.push(row);
+        self.cols.push(j);
+        self.slot.insert(j, k);
+    }
+
+    /// Gather the full symmetric `|ws| × |ws|` matrix in `ws` order
+    /// (row-major; symmetric, so row `k` *is* column `k` — the contiguous
+    /// access the CD update loop wants). Every column of `ws` must be
+    /// admitted.
+    pub fn gather(&self, ws: &[usize], out: &mut Vec<f64>) {
+        let m = ws.len();
+        out.clear();
+        out.resize(m * m, 0.0);
+        let slots: Vec<usize> = ws.iter().map(|j| self.slot[j]).collect();
+        for k in 0..m {
+            for l in 0..=k {
+                let v = self.get(slots[k], slots[l]);
+                out[k * m + l] = v;
+                out[l * m + k] = v;
+            }
+        }
+    }
+
+    /// Drop every slot whose column is not in `keep`, repacking the
+    /// triangle (no pair is recomputed). Returns the number of evicted
+    /// slots.
+    pub fn compact_to(&mut self, keep: &[usize]) -> usize {
+        let keep_set: std::collections::HashSet<usize> = keep.iter().copied().collect();
+        let kept: Vec<usize> = (0..self.cols.len())
+            .filter(|k| keep_set.contains(&self.cols[*k]))
+            .collect();
+        let evicted = self.cols.len() - kept.len();
+        if evicted == 0 {
+            return 0;
+        }
+        let mut rows = Vec::with_capacity(kept.len());
+        let mut cols = Vec::with_capacity(kept.len());
+        for (new_k, &old_k) in kept.iter().enumerate() {
+            let mut row = vec![0.0; new_k + 1];
+            for (new_l, &old_l) in kept[..=new_k].iter().enumerate() {
+                row[new_l] = self.get(old_k, old_l);
+            }
+            rows.push(row);
+            cols.push(self.cols[old_k]);
+        }
+        self.rows = rows;
+        self.cols = cols;
+        self.slot = self.cols.iter().enumerate().map(|(k, &j)| (j, k)).collect();
+        evicted
+    }
+}
+
+/// Outcome of one [`GramCache::ensure_gather`] call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GramAssembly {
+    /// stored-entry touches spent on newly assembled blocks
+    pub flops: u64,
+    /// slots evicted to respect the byte budget
+    pub evicted: usize,
+}
+
+/// Default per-cache byte budget (256 MiB of Gram blocks), overridable
+/// with the `SKGLM_GRAM_BYTES` env var or [`GramCache::with_budget`].
+pub const DEFAULT_GRAM_BUDGET: usize = 256 << 20;
+
+/// Thread-safe, byte-budgeted [`GramStore`] shared across solves (one per
+/// coordinator design entry; standalone solves create their own).
+pub struct GramCache {
+    store: Mutex<GramStore>,
+    budget: usize,
+    evicted_slots: AtomicUsize,
+    /// byte footprint mirrored out of the store after every mutation, so
+    /// accounting callers (the scheduler cache's budget enforcement)
+    /// never block on the store mutex behind an in-flight assembly
+    cur_bytes: AtomicUsize,
+}
+
+impl std::fmt::Debug for GramCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.store.lock().unwrap();
+        f.debug_struct("GramCache")
+            .field("slots", &s.n_slots())
+            .field("bytes", &s.bytes())
+            .field("budget", &self.budget)
+            .finish()
+    }
+}
+
+impl Default for GramCache {
+    fn default() -> Self {
+        Self::with_default_budget()
+    }
+}
+
+impl GramCache {
+    pub fn with_budget(budget_bytes: usize) -> Self {
+        Self {
+            store: Mutex::new(GramStore::new()),
+            budget: budget_bytes.max(1),
+            evicted_slots: AtomicUsize::new(0),
+            cur_bytes: AtomicUsize::new(0),
+        }
+    }
+
+    /// [`DEFAULT_GRAM_BUDGET`], or the `SKGLM_GRAM_BYTES` override.
+    pub fn with_default_budget() -> Self {
+        Self::with_budget(crate::util::env_byte_budget("SKGLM_GRAM_BYTES", DEFAULT_GRAM_BUDGET))
+    }
+
+    /// Admit `ws` (respecting the byte budget) and gather the symmetric
+    /// `|ws| × |ws|` block in `ws` order into `out`.
+    ///
+    /// If admitting would exceed the budget, slots outside `ws` are
+    /// evicted first (pure repack). A working set whose own triangle
+    /// exceeds the budget is still served — the solve needs it — and the
+    /// next call's eviction pass shrinks the store again.
+    pub fn ensure_gather(&self, design: &Design, ws: &[usize], out: &mut Vec<f64>) -> GramAssembly {
+        let mut store = self.store.lock().unwrap();
+        let mut asm = GramAssembly::default();
+        if store.bytes() + store.projected_growth_bytes(ws) > self.budget {
+            asm.evicted = store.compact_to(ws);
+            self.evicted_slots.fetch_add(asm.evicted, Ordering::Relaxed);
+        }
+        let before = store.assembly_flops();
+        store.ensure(design, ws);
+        asm.flops = store.assembly_flops() - before;
+        store.gather(ws, out);
+        self.cur_bytes.store(store.bytes(), Ordering::Relaxed);
+        asm
+    }
+
+    /// Dispatcher estimate: stored-entry cost of the blocks `ws` still
+    /// needs.
+    pub fn projected_assembly_flops(&self, design: &Design, ws: &[usize]) -> f64 {
+        self.store.lock().unwrap().projected_assembly_flops(design, ws)
+    }
+
+    /// Current byte footprint — served from a mirrored counter, never
+    /// from the store mutex (an in-flight assembly must not stall the
+    /// scheduler cache's budget accounting).
+    pub fn bytes(&self) -> usize {
+        self.cur_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.store.lock().unwrap().n_slots()
+    }
+
+    /// Cumulative assembly work across every solve sharing this cache.
+    pub fn assembly_flops(&self) -> u64 {
+        self.store.lock().unwrap().assembly_flops()
+    }
+
+    /// Total slots evicted by budget enforcement.
+    pub fn evicted_slots(&self) -> usize {
+        self.evicted_slots.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{CscMatrix, DenseMatrix};
+
+    fn dense_design() -> Design {
+        let data: Vec<f64> = (0..7 * 12).map(|k| ((k * 31 % 17) as f64) - 8.0).collect();
+        DenseMatrix::from_col_major(7, 12, data).into()
+    }
+
+    fn sparse_design() -> Design {
+        let mut trips = Vec::new();
+        for j in 0..15 {
+            for i in 0..9 {
+                if (i * 5 + j * 3) % 4 == 0 {
+                    trips.push((i, j, ((i + 2 * j) as f64) * 0.5 - 3.0));
+                }
+            }
+        }
+        CscMatrix::from_triplets(9, 15, &trips).into()
+    }
+
+    fn reference_pair(d: &Design, a: usize, b: usize) -> f64 {
+        let n = d.nrows();
+        let mut ca = vec![0.0; n];
+        let mut cb = vec![0.0; n];
+        d.col_axpy(a, 1.0, &mut ca);
+        d.col_axpy(b, 1.0, &mut cb);
+        ca.iter().zip(cb.iter()).map(|(x, y)| x * y).sum()
+    }
+
+    #[test]
+    fn gather_matches_reference_dense_and_sparse() {
+        for d in [dense_design(), sparse_design()] {
+            let mut store = GramStore::new();
+            let ws = [3usize, 0, 7, 5];
+            store.ensure(&d, &ws);
+            let mut gw = Vec::new();
+            store.gather(&ws, &mut gw);
+            let m = ws.len();
+            for k in 0..m {
+                for l in 0..m {
+                    let expect = reference_pair(&d, ws[k], ws[l]);
+                    assert!(
+                        (gw[k * m + l] - expect).abs() < 1e-12,
+                        "G[{k}][{l}] = {} vs {expect}",
+                        gw[k * m + l]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn growth_is_incremental() {
+        let d = dense_design();
+        let mut store = GramStore::new();
+        store.ensure(&d, &[1, 4]);
+        let after_first = store.assembly_flops();
+        assert!(after_first > 0);
+        // re-ensuring the same set costs nothing
+        store.ensure(&d, &[4, 1]);
+        assert_eq!(store.assembly_flops(), after_first);
+        // doubling the set only pays for the new rows
+        store.ensure(&d, &[1, 4, 9, 2]);
+        let grown = store.assembly_flops() - after_first;
+        // new rows touch n·(3 + 4) entries; a cold rebuild of all four
+        // would touch n·(1+2+3+4)
+        assert_eq!(grown, 7 * 7);
+        assert_eq!(store.n_slots(), 4);
+        // the grown store still gathers any subset correctly
+        let mut gw = Vec::new();
+        store.gather(&[9, 1], &mut gw);
+        assert!((gw[0] - reference_pair(&d, 9, 9)).abs() < 1e-12);
+        assert!((gw[1] - reference_pair(&d, 9, 1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_merge_and_scatter_paths_agree() {
+        let d = sparse_design();
+        // small store: merge-join path
+        let mut a = GramStore::new();
+        a.ensure(&d, &[0, 2, 4]);
+        // big store first: scatter path for the late admissions
+        let mut b = GramStore::new();
+        let all: Vec<usize> = (0..15).collect();
+        b.ensure(&d, &all);
+        let mut ga = Vec::new();
+        let mut gb = Vec::new();
+        a.gather(&[0, 2, 4], &mut ga);
+        b.gather(&[0, 2, 4], &mut gb);
+        for (x, y) in ga.iter().zip(gb.iter()) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn compact_keeps_surviving_pairs_without_recompute() {
+        let d = dense_design();
+        let mut store = GramStore::new();
+        store.ensure(&d, &[0, 1, 2, 3, 4, 5]);
+        let flops = store.assembly_flops();
+        let evicted = store.compact_to(&[1, 4, 5]);
+        assert_eq!(evicted, 3);
+        assert_eq!(store.n_slots(), 3);
+        assert_eq!(store.assembly_flops(), flops, "compaction must not recompute");
+        let mut gw = Vec::new();
+        store.gather(&[5, 1], &mut gw);
+        assert!((gw[1] - reference_pair(&d, 5, 1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_budget_evicts_and_counts() {
+        let d = dense_design();
+        // budget fits only a couple of slots' triangle + bookkeeping
+        let cache = GramCache::with_budget(3 * 64 + 6 * 8);
+        let mut gw = Vec::new();
+        cache.ensure_gather(&d, &[0, 1, 2], &mut gw);
+        assert_eq!(cache.n_slots(), 3);
+        let asm = cache.ensure_gather(&d, &[8, 9, 10], &mut gw);
+        assert!(asm.evicted >= 1, "old slots must be evicted under budget pressure");
+        assert_eq!(cache.evicted_slots(), asm.evicted);
+        // the gathered block is still correct after eviction
+        assert!((gw[0] - reference_pair(&d, 8, 8)).abs() < 1e-12);
+        assert!((gw[1] - reference_pair(&d, 8, 9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn projected_assembly_matches_actual_for_dense() {
+        let d = dense_design();
+        let cache = GramCache::with_default_budget();
+        let ws = [2usize, 6, 11];
+        let projected = cache.projected_assembly_flops(&d, &ws);
+        let mut gw = Vec::new();
+        let asm = cache.ensure_gather(&d, &ws, &mut gw);
+        assert_eq!(projected, asm.flops as f64);
+        // everything admitted: nothing left to project
+        assert_eq!(cache.projected_assembly_flops(&d, &ws), 0.0);
+    }
+}

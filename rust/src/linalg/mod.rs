@@ -5,10 +5,12 @@
 
 pub mod dense;
 pub mod design;
+pub mod gram;
 pub mod parallel;
 pub mod sparse;
 
 pub use dense::{axpy, dot, norm1, norm_inf, nrm2, sq_nrm2, DenseMatrix};
 pub use design::{group_reduce_sq, Design};
+pub use gram::{GramCache, GramStore};
 pub use parallel::KernelPolicy;
 pub use sparse::CscMatrix;

@@ -137,6 +137,29 @@ impl CscMatrix {
         }
     }
 
+    /// Column-pair dot `X[:, a]ᵀ X[:, b]` by merge join over the sorted
+    /// row indices — the CSC Gram-assembly kernel for short slot lists
+    /// (cost `nnz(a) + nnz(b)`, no densification).
+    #[inline]
+    pub fn col_pair_dot(&self, a: usize, b: usize) -> f64 {
+        let (ra, va) = self.col(a);
+        let (rb, vb) = self.col(b);
+        let (mut i, mut k) = (0usize, 0usize);
+        let mut s = 0.0;
+        while i < ra.len() && k < rb.len() {
+            match ra[i].cmp(&rb[k]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => k += 1,
+                std::cmp::Ordering::Equal => {
+                    s += va[i] * vb[k];
+                    i += 1;
+                    k += 1;
+                }
+            }
+        }
+        s
+    }
+
     /// `X β` into `out`.
     pub fn matvec(&self, beta: &[f64], out: &mut [f64]) {
         assert_eq!(beta.len(), self.p);
@@ -306,6 +329,22 @@ mod tests {
         let mut r = vec![0.0; 3];
         m.col_axpy(2, 2.0, &mut r);
         assert_eq!(r, vec![4.0, 0.0, 10.0]);
+    }
+
+    #[test]
+    fn col_pair_dot_matches_dense() {
+        let m = small();
+        let d = m.to_dense();
+        for a in 0..3 {
+            for b in 0..3 {
+                let expect: f64 =
+                    (0..3).map(|i| d.get(i, a) * d.get(i, b)).sum();
+                assert!(
+                    (m.col_pair_dot(a, b) - expect).abs() < 1e-14,
+                    "pair ({a},{b})"
+                );
+            }
+        }
     }
 
     #[test]

@@ -57,12 +57,14 @@ const USAGE: &str = "usage:
               --penalty <l1|enet|mcp|scad|l05|group_lasso|group_mcp|group_scad> \\
               [--datafit quadratic|poisson|probit] --lambda-ratio 0.1 \\
               [--gamma 3.0] [--rho 0.5] [--groups 10] [--tol 1e-8] \\
+              [--inner auto|residual|gram] \\
               [--engine native|pjrt] [--no-ws] [--no-accel] [--seed 42] [--small]
   skglm path  --penalty <l1|mcp|scad|l05|group_lasso|group_mcp|group_scad> \\
               [--datafit quadratic|poisson|probit] [--groups 10] \\
+              [--inner auto|residual|gram] \\
               [--points 20] [--min-ratio 1e-3] [--gamma 3.0] [--small] [--seed 42]
   skglm cv    --dataset <name> [--folds 5] [--points 15] [--workers 4] [--small]
-  skglm exp   <fig1..fig10|table1|table2|pathsched|kernels|glms|groups|all> [--full]
+  skglm exp   <fig1..fig10|table1|table2|pathsched|kernels|glms|groups|gram|summary|all> [--full]
   skglm serve [--workers 4] [--lambdas 8]
   skglm synth --dataset <rcv1|news20|...|fig1> --out <file.svm> [--small]
   skglm info
@@ -70,9 +72,13 @@ const USAGE: &str = "usage:
   --datafit poisson|probit routes the fit through the prox-Newton outer
   solver (curvature-adaptive GLMs; penalty must be l1). the group_*
   penalties run on the block-coordinate engine over contiguous feature
-  groups of --groups <size> features each. every subcommand accepts
+  groups of --groups <size> features each. --inner picks the inner engine
+  for quadratic fits: residual CD, Gram-domain CD (O(|ws|) updates on
+  cached working-set Grams), or cost-model auto dispatch (the default;
+  non-quadratic datafits always run residual). every subcommand accepts
   --threads N (kernel + worker thread budget; overrides the SKGLM_THREADS
-  env var; defaults to hardware parallelism)";
+  env var; defaults to hardware parallelism). `exp summary` rolls every
+  repo-root BENCH_*.json into BENCH_SUMMARY.json";
 
 /// Load `name` as a libsvm file when it names one on disk.
 fn try_load_libsvm(name: &str) -> Option<Result<Dataset>> {
@@ -109,6 +115,16 @@ fn print_fit(res: &FitResult, n: usize) {
     println!("outer iters    : {}", res.n_outer);
     println!("cd epochs      : {}", res.n_epochs);
     println!("extrapolations : {} accepted / {} rejected", res.accepted_extrapolations, res.rejected_extrapolations);
+    let pr = &res.profile;
+    if pr.gram_epochs > 0 || pr.residual_epochs > 0 {
+        println!(
+            "inner engines  : {} gram / {} residual epochs ({:.2} Mflop epochs, {:.2} Mflop gram assembly)",
+            pr.gram_epochs,
+            pr.residual_epochs,
+            pr.epoch_flops / 1e6,
+            pr.gram_assembly_flops / 1e6
+        );
+    }
     if let Some(h) = res.history.last() {
         println!("solve time     : {:.3}s  (n={n})", h.t);
     }
@@ -282,7 +298,17 @@ fn cmd_solve_group(args: &mut Args, penalty: &str) -> Result<()> {
     Ok(())
 }
 
+/// Parse the `--inner auto|residual|gram` knob (the CLI's quadratic
+/// fits route adaptively by default; the engine is inert for datafits
+/// without the Gram contract).
+fn take_inner(args: &mut Args) -> Result<skglm::solver::InnerEngine> {
+    args.get_or("inner", "auto")
+        .parse::<skglm::solver::InnerEngine>()
+        .map_err(|e| anyhow::anyhow!(e))
+}
+
 fn cmd_solve(args: &mut Args) -> Result<()> {
+    let inner = take_inner(args)?;
     let datafit = args.get_or("datafit", "quadratic");
     if datafit != "quadratic" {
         return cmd_solve_glm(args, &datafit);
@@ -298,7 +324,7 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
     let rho = args.get_f64("rho", 0.5)?;
     let tol = args.get_f64("tol", 1e-8)?;
     let engine = args.get_or("engine", "native");
-    let mut opts = SolverOpts::default().with_tol(tol);
+    let mut opts = SolverOpts::default().with_tol(tol).with_inner(inner);
     if args.has("no-ws") {
         opts.use_ws = false;
     }
@@ -357,6 +383,7 @@ fn cmd_solve(args: &mut Args) -> Result<()> {
 fn cmd_path(args: &mut Args) -> Result<()> {
     use skglm::coordinator::{specs, FitScheduler, JobEvent};
     use std::sync::Arc;
+    let inner = take_inner(args)?;
     let datafit = args.get_or("datafit", "quadratic");
     let penalty = args.get_or("penalty", "l1");
     let points = args.get_usize("points", 20)?;
@@ -428,7 +455,12 @@ fn cmd_path(args: &mut Args) -> Result<()> {
     };
     let ratios = skglm::estimators::path::geometric_grid(min_ratio, points);
     let mut sched = FitScheduler::start(1);
-    let job = sched.submit_path(Arc::clone(&ds), spec, ratios, SolverOpts::default().with_tol(1e-7));
+    let job = sched.submit_path(
+        Arc::clone(&ds),
+        spec,
+        ratios,
+        SolverOpts::default().with_tol(1e-7).with_inner(inner),
+    );
     println!(
         "datafit {datafit} / penalty {penalty}: streaming {points} warm-started path points (job {job})"
     );

@@ -45,6 +45,7 @@ pub fn solve_celer(
         history: Vec::new(),
         accepted_extrapolations: 0,
         rejected_extrapolations: 0,
+        profile: Default::default(),
     };
     let mut ws_size = opts.ws_start.min(p).max(1);
 

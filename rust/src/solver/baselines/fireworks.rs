@@ -38,6 +38,7 @@ pub fn solve_fireworks<D: Datafit, P: Penalty>(
         history: Vec::new(),
         accepted_extrapolations: 0,
         rejected_extrapolations: 0,
+        profile: Default::default(),
     };
     let mut ws_size = opts.ws_start.min(p).max(1);
 

@@ -128,6 +128,8 @@ pub struct BlockFitResult {
     pub rejected_extrapolations: usize,
     /// blocks certified inactive by the gap-safe pass (0 when disabled)
     pub n_screened: usize,
+    /// per-stage wall-time attribution from the shared outer loop
+    pub profile: crate::solver::inner::InnerProfile,
 }
 
 impl BlockFitResult {
@@ -664,6 +666,7 @@ pub fn solve_blocks_continued<D: BlockDatafit, B: BlockPenalty>(
         accepted_extrapolations: out.accepted_extrapolations,
         rejected_extrapolations: out.rejected_extrapolations,
         n_screened,
+        profile: out.profile,
     };
     continuation.beta = Some(result.v.clone());
     continuation.ws_size = Some(out.ws_size);

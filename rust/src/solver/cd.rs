@@ -15,9 +15,78 @@ use crate::datafit::Datafit;
 use crate::linalg::Design;
 use crate::penalty::Penalty;
 
-/// Run one CD epoch over `ws`. Returns the largest coordinate move
-/// `max_j L_j·|Δβ_j|` (a cheap stationarity surrogate used between full
-/// score evaluations).
+/// How a CD epoch obtains per-coordinate gradients and propagates
+/// committed moves. The epoch loop itself ([`cd_epoch_core`]) is written
+/// once; the **residual** backend ([`ResidualEpoch`]) recomputes the
+/// gradient from the datafit state with two O(n) column passes per
+/// update, the **Gram** backend (`solver::gram`) maintains the packed
+/// working-set gradient at O(|ws|) per update.
+pub trait EpochState {
+    /// `∇f` at working-set position `pos` (design column `j`).
+    fn grad(&mut self, pos: usize, j: usize, beta: &[f64]) -> f64;
+
+    /// Propagate the committed move `beta[j] += delta`.
+    fn commit(&mut self, pos: usize, j: usize, delta: f64);
+}
+
+/// The residual-domain backend: gradients via [`Datafit::grad_j`]
+/// (one column dot), propagation via [`Datafit::update_state`] (one
+/// column axpy).
+pub struct ResidualEpoch<'a, D: Datafit> {
+    pub design: &'a Design,
+    pub y: &'a [f64],
+    pub datafit: &'a D,
+    pub state: &'a mut [f64],
+}
+
+impl<D: Datafit> EpochState for ResidualEpoch<'_, D> {
+    #[inline]
+    fn grad(&mut self, _pos: usize, j: usize, beta: &[f64]) -> f64 {
+        self.datafit.grad_j(self.design, self.y, self.state, beta, j)
+    }
+
+    #[inline]
+    fn commit(&mut self, _pos: usize, j: usize, delta: f64) {
+        self.datafit.update_state(self.design, j, delta, self.state);
+    }
+}
+
+/// The one cyclic-CD epoch (paper Algorithm 3), direction-generic and
+/// backend-generic — used by both the residual and Gram inner engines.
+/// `reverse = true` sweeps p→1 (Proposition 13's Anderson rate needs
+/// symmetric sweeps, so the inner solvers alternate directions). Returns
+/// the largest coordinate move `max_j L_j·|Δβ_j|` (the cheap stationarity
+/// surrogate used between full score evaluations).
+pub fn cd_epoch_core<P: Penalty, S: EpochState>(
+    penalty: &P,
+    lipschitz: &[f64],
+    beta: &mut [f64],
+    ws: &[usize],
+    reverse: bool,
+    st: &mut S,
+) -> f64 {
+    let m = ws.len();
+    let mut max_move = 0.0f64;
+    for step in 0..m {
+        let pos = if reverse { m - 1 - step } else { step };
+        let j = ws[pos];
+        let lj = lipschitz[j];
+        if lj == 0.0 {
+            continue; // empty column: g_j alone keeps β_j at its prox-fixed point
+        }
+        let old = beta[j];
+        let grad = st.grad(pos, j, beta);
+        let new = penalty.prox(old - grad / lj, 1.0 / lj, j);
+        if new != old {
+            beta[j] = new;
+            st.commit(pos, j, new - old);
+            max_move = max_move.max(lj * (new - old).abs());
+        }
+    }
+    max_move
+}
+
+/// Run one forward (1→p) residual-domain CD epoch over `ws`.
 pub fn cd_epoch<D: Datafit, P: Penalty>(
     design: &Design,
     y: &[f64],
@@ -27,29 +96,11 @@ pub fn cd_epoch<D: Datafit, P: Penalty>(
     state: &mut [f64],
     ws: &[usize],
 ) -> f64 {
-    let lipschitz = datafit.lipschitz();
-    let mut max_move = 0.0f64;
-    for &j in ws {
-        let lj = lipschitz[j];
-        if lj == 0.0 {
-            continue; // empty column: g_j alone keeps β_j at its prox-fixed point
-        }
-        let old = beta[j];
-        let grad = datafit.grad_j(design, y, state, beta, j);
-        let new = penalty.prox(old - grad / lj, 1.0 / lj, j);
-        if new != old {
-            beta[j] = new;
-            datafit.update_state(design, j, new - old, state);
-            max_move = max_move.max(lj * (new - old).abs());
-        }
-    }
-    max_move
+    let mut st = ResidualEpoch { design, y, datafit, state };
+    cd_epoch_core(penalty, datafit.lipschitz(), beta, ws, false, &mut st)
 }
 
-/// Reverse-order epoch (p→1). Proposition 13's Anderson rate is stated for
-/// symmetric sweeps (1→p then p→1), which make the fixed-point Jacobian
-/// similar to a symmetric matrix; the accelerated inner solver alternates
-/// directions.
+/// Reverse-order (p→1) residual-domain epoch.
 pub fn cd_epoch_rev<D: Datafit, P: Penalty>(
     design: &Design,
     y: &[f64],
@@ -59,23 +110,8 @@ pub fn cd_epoch_rev<D: Datafit, P: Penalty>(
     state: &mut [f64],
     ws: &[usize],
 ) -> f64 {
-    let lipschitz = datafit.lipschitz();
-    let mut max_move = 0.0f64;
-    for &j in ws.iter().rev() {
-        let lj = lipschitz[j];
-        if lj == 0.0 {
-            continue;
-        }
-        let old = beta[j];
-        let grad = datafit.grad_j(design, y, state, beta, j);
-        let new = penalty.prox(old - grad / lj, 1.0 / lj, j);
-        if new != old {
-            beta[j] = new;
-            datafit.update_state(design, j, new - old, state);
-            max_move = max_move.max(lj * (new - old).abs());
-        }
-    }
-    max_move
+    let mut st = ResidualEpoch { design, y, datafit, state };
+    cd_epoch_core(penalty, datafit.lipschitz(), beta, ws, true, &mut st)
 }
 
 /// Objective Φ(β) = f(β) + Σ g_j(β_j).

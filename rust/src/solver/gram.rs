@@ -1,0 +1,466 @@
+//! Gram-domain inner engine (ISSUE 5 tentpole): Algorithm 2 with the
+//! working-set gradient maintained from `G_ws = X_wsᵀ X_ws` instead of
+//! the residual.
+//!
+//! For an exact residual quadratic
+//! ([`crate::datafit::Datafit::residual_quadratic_scale`] = `Some(c)`,
+//! i.e. `∇f = c·Xᵀ(Xβ − y)`), a coordinate move `β_j += δ` changes the
+//! working-set gradient by `δ·c·G_ws[:, j]` — an O(|ws|) update where the
+//! residual engine pays two O(n) column passes. The whole inner solve
+//! touches the design exactly three times:
+//!
+//! 1. Gram assembly — incremental, served by the shared byte-budgeted
+//!    [`GramCache`]: only blocks never computed before (by this solve, by
+//!    earlier λ points of a path sweep, or by sibling jobs on the same
+//!    design) are assembled;
+//! 2. the entry gradient `g = c·X_wsᵀ s` (one restricted pass);
+//! 3. the exit state refresh `s += Σ Δβ_j X_j` (one restricted pass).
+//!
+//! Everything in between — epochs, the gated stationarity score, the
+//! Anderson guard — runs on O(|ws|)-sized vectors. The guard carries over
+//! from the residual engine unchanged in structure: the packed
+//! ws-gradient is **affine in β** (it is `c·X_wsᵀ X β − c·X_wsᵀ y`), so
+//! extrapolated gradients are snapshot combinations exactly like the
+//! residual snapshots of `solver::inner`, and the objective test uses the
+//! exact quadratic identity `f(b) − f(a) = ½(∇f(a) + ∇f(b))ᵀ(b − a)`
+//! restricted to the working set.
+//!
+//! [`InnerEngine`] + [`EngineDispatch`] implement the cost-model
+//! dispatcher that routes each inner solve (`skglm.rs` scalar coords and
+//! the screened-Lasso fast path both consult it): Gram wins when
+//! `assembly + |ws|²·E + 2·nnz(ws)  <  2·nnz(ws)·E`, with `E` the
+//! epochs-per-inner-solve estimate adapted from the previous inner solve.
+
+use super::anderson::Anderson;
+use super::cd::{cd_epoch_core, EpochState};
+use super::inner::InnerStats;
+use crate::linalg::gram::GramCache;
+use crate::linalg::Design;
+use crate::penalty::Penalty;
+use std::time::Instant;
+
+/// Which inner engine a solve should use for quadratic datafits.
+/// Non-quadratic datafits always run the residual engine regardless.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum InnerEngine {
+    /// Cost-model dispatch per inner solve (CLI default).
+    Auto,
+    /// Always the residual-domain engine (library default — bitwise
+    /// identical to the pre-ISSUE-5 solver).
+    #[default]
+    Residual,
+    /// Always the Gram-domain engine (equivalence tests, benches).
+    Gram,
+}
+
+impl std::str::FromStr for InnerEngine {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(InnerEngine::Auto),
+            "residual" => Ok(InnerEngine::Residual),
+            "gram" => Ok(InnerEngine::Gram),
+            other => Err(format!("unknown inner engine {other:?} (auto|residual|gram)")),
+        }
+    }
+}
+
+/// Initial epochs-per-inner-solve estimate before any inner solve has
+/// run (the paper's problems typically take O(10) accelerated epochs).
+const EPOCHS_ESTIMATE_INIT: usize = 16;
+
+/// The dispatcher's cost model: modelled flops of a Gram-engine inner
+/// solve (`assembly + |ws|²·E + 2·nnz(ws)` for the entry/exit passes)
+/// against a residual one (`2·nnz(ws)·E`).
+pub fn gram_pays_off(m: usize, nnz_ws: usize, projected_assembly: f64, epochs_est: usize) -> bool {
+    let e = epochs_est.max(1) as f64;
+    let gram = projected_assembly + (m * m) as f64 * e + 2.0 * nnz_ws as f64;
+    let residual = 2.0 * nnz_ws as f64 * e;
+    gram < residual
+}
+
+/// Per-solve dispatcher state: the requested [`InnerEngine`] plus the
+/// adaptive epoch estimate fed back from each inner solve.
+#[derive(Clone, Debug)]
+pub struct EngineDispatch {
+    requested: InnerEngine,
+    last_epochs: usize,
+}
+
+impl EngineDispatch {
+    pub fn new(requested: InnerEngine) -> Self {
+        Self { requested, last_epochs: EPOCHS_ESTIMATE_INIT }
+    }
+
+    /// Feed back the epoch count of the inner solve just run.
+    pub fn record_epochs(&mut self, epochs: usize) {
+        if epochs > 0 {
+            self.last_epochs = epochs;
+        }
+    }
+
+    /// Decide the engine for the next inner solve. `quadratic` is whether
+    /// the datafit opted into the Gram contract
+    /// ([`crate::datafit::Datafit::residual_quadratic_scale`]).
+    pub fn use_gram(
+        &self,
+        design: &Design,
+        ws: &[usize],
+        gram: Option<&GramCache>,
+        quadratic: bool,
+    ) -> bool {
+        if !quadratic || ws.is_empty() {
+            return false;
+        }
+        let gram = match gram {
+            Some(g) => g,
+            None => return false,
+        };
+        match self.requested {
+            InnerEngine::Residual => false,
+            InnerEngine::Gram => true,
+            InnerEngine::Auto => {
+                let nnz_ws = design.subset_stored_entries(ws);
+                let projected = gram.projected_assembly_flops(design, ws);
+                gram_pays_off(ws.len(), nnz_ws, projected, self.last_epochs)
+            }
+        }
+    }
+}
+
+/// Gram-domain [`EpochState`]: the packed working-set gradient `g` is
+/// updated from row `pos` of the symmetric `|ws| × |ws|` block `gw`
+/// (row-major; row = column by symmetry, so the access is contiguous).
+struct GramEpoch<'a> {
+    /// packed ws gradient, `g[k] = ∇_{ws[k]} f`
+    g: &'a mut [f64],
+    /// symmetric Gram block in ws order (unscaled `X_wsᵀX_ws`)
+    gw: &'a [f64],
+    /// the datafit's gradient scale `c` (`1/n` for `Quadratic`)
+    scale: f64,
+    m: usize,
+}
+
+impl EpochState for GramEpoch<'_> {
+    #[inline]
+    fn grad(&mut self, pos: usize, _j: usize, _beta: &[f64]) -> f64 {
+        self.g[pos]
+    }
+
+    #[inline]
+    fn commit(&mut self, pos: usize, _j: usize, delta: f64) {
+        let row = &self.gw[pos * self.m..(pos + 1) * self.m];
+        let cd = delta * self.scale;
+        for (gl, &glk) in self.g.iter_mut().zip(row.iter()) {
+            *gl += cd * glk;
+        }
+    }
+}
+
+/// Algorithm 2 in the Gram domain. Same contract as
+/// [`super::inner::inner_solver`]: mutates `beta`/`state` in place (the
+/// residual `state` is refreshed once on exit), `anderson_m = 0` disables
+/// acceleration. `scale` is the datafit's
+/// [`crate::datafit::Datafit::residual_quadratic_scale`] and `lipschitz`
+/// its per-coordinate constants.
+#[allow(clippy::too_many_arguments)]
+pub fn gram_inner_solver<P: Penalty>(
+    design: &Design,
+    lipschitz: &[f64],
+    scale: f64,
+    penalty: &P,
+    beta: &mut [f64],
+    state: &mut [f64],
+    ws: &[usize],
+    gram: &GramCache,
+    max_epochs: usize,
+    tol: f64,
+    anderson_m: usize,
+) -> InnerStats {
+    let m = ws.len();
+    let mut stats = InnerStats::default();
+    if m == 0 {
+        return stats;
+    }
+
+    // ---- 1. Gram assembly (incremental; shared cache) ----
+    let t_asm = Instant::now();
+    let mut gw = Vec::new();
+    let asm = gram.ensure_gather(design, ws, &mut gw);
+    stats.profile.gram_assembly_secs += t_asm.elapsed().as_secs_f64();
+    stats.profile.gram_assembly_flops += asm.flops as f64;
+
+    // ---- 2. entry gradient: the one restricted residual-domain pass ----
+    let nnz_ws = design.subset_stored_entries(ws);
+    let mut g = vec![0.0; m];
+    design.matvec_t_subset(state, ws, &mut g);
+    for v in g.iter_mut() {
+        *v *= scale;
+    }
+    stats.profile.epoch_flops += nnz_ws as f64;
+
+    // entry point (β₀, g₀): the exit refresh and the quadratic objective
+    // identity are both relative to it
+    let b0: Vec<f64> = ws.iter().map(|&j| beta[j]).collect();
+    let g0 = g.clone();
+
+    // f(β) − f(β₀) + Σ_ws g_j(β_j), exact for the quadratic datafit:
+    // f(b) − f(a) = ½(∇f(a) + ∇f(b))ᵀ(b − a), supported on ws
+    let rel_objective = |bw: &[f64], gv: &[f64]| -> f64 {
+        let mut df = 0.0;
+        let mut pen = 0.0;
+        for (k, &j) in ws.iter().enumerate() {
+            df += 0.5 * (gv[k] + g0[k]) * (bw[k] - b0[k]);
+            pen += penalty.value(bw[k], j);
+        }
+        df + pen
+    };
+
+    let mut accel = if anderson_m >= 2 { Some(Anderson::new(anderson_m)) } else { None };
+    let mut ws_beta = vec![0.0; m];
+    // gradient snapshots aligned with the Anderson pushes (g is affine in
+    // β, so snapshot combination is exact — same guard as the residual
+    // engine's state snapshots)
+    let mut g_snaps: Vec<Vec<f64>> = Vec::new();
+    let snap_cap = anderson_m + 1;
+    let push_snap = |snaps: &mut Vec<Vec<f64>>, g: &[f64]| {
+        if snaps.len() == snap_cap {
+            snaps.remove(0);
+        }
+        snaps.push(g.to_vec());
+    };
+
+    if let Some(acc) = accel.as_mut() {
+        for (o, &j) in ws_beta.iter_mut().zip(ws.iter()) {
+            *o = beta[j];
+        }
+        acc.push(&ws_beta);
+        push_snap(&mut g_snaps, &g);
+    }
+
+    for epoch in 1..=max_epochs {
+        stats.epochs = epoch;
+        // alternate sweep direction (Proposition 13 hypothesis 3)
+        let t_epoch = Instant::now();
+        let max_move = {
+            let mut st = GramEpoch { g: &mut g, gw: &gw, scale, m };
+            cd_epoch_core(penalty, lipschitz, beta, ws, epoch % 2 == 0, &mut st)
+        };
+        stats.profile.epoch_secs += t_epoch.elapsed().as_secs_f64();
+        stats.profile.epoch_flops += (m * m) as f64;
+        stats.profile.gram_epochs += 1;
+        let _ = max_move; // the O(|ws|) score below replaces the move gate
+
+        if let Some(acc) = accel.as_mut() {
+            let t_extr = Instant::now();
+            for (o, &j) in ws_beta.iter_mut().zip(ws.iter()) {
+                *o = beta[j];
+            }
+            let full = acc.push(&ws_beta);
+            push_snap(&mut g_snaps, &g);
+            if full && epoch % acc.m() == 0 {
+                if let Some(c) = acc.coefficients() {
+                    let extr = acc.combine(&c);
+                    let g_trial = acc.combine_series(&c, &g_snaps);
+                    let trial = rel_objective(&extr, &g_trial);
+                    let current = rel_objective(&ws_beta, &g);
+                    // same guard as the residual engine: accept iff the
+                    // (ws-restricted) objective strictly decreases and the
+                    // trial stays in the penalty's domain
+                    if trial.is_finite() && trial < current {
+                        for (k, &j) in ws.iter().enumerate() {
+                            beta[j] = extr[k];
+                        }
+                        g.copy_from_slice(&g_trial);
+                        stats.accepted_extrapolations += 1;
+                        acc.clear();
+                        g_snaps.clear();
+                        for (o, &j) in ws_beta.iter_mut().zip(ws.iter()) {
+                            *o = beta[j];
+                        }
+                        acc.push(&ws_beta);
+                        push_snap(&mut g_snaps, &g);
+                    } else {
+                        stats.rejected_extrapolations += 1;
+                    }
+                }
+            }
+            stats.profile.extrapolation_secs += t_extr.elapsed().as_secs_f64();
+        }
+
+        // stationarity from the maintained ws gradient: O(|ws|), so it
+        // runs every epoch — no move-bound gating needed (the residual
+        // engine gates because its check costs O(|ws|·n))
+        let t_score = Instant::now();
+        stats.score_checks += 1;
+        let mut score = 0.0f64;
+        for (k, &j) in ws.iter().enumerate() {
+            let lj = lipschitz[j];
+            if lj == 0.0 {
+                continue;
+            }
+            let s = if penalty.use_cd_score() {
+                (beta[j] - penalty.prox(beta[j] - g[k] / lj, 1.0 / lj, j)).abs()
+            } else {
+                penalty.subdiff_distance(beta[j], g[k], j)
+            };
+            score = score.max(s);
+        }
+        stats.ws_score = score;
+        stats.profile.score_secs += t_score.elapsed().as_secs_f64();
+        if score <= tol {
+            break;
+        }
+    }
+
+    // ---- 3. exit: refresh the residual state from the entry point ----
+    let t_exit = Instant::now();
+    for (k, &j) in ws.iter().enumerate() {
+        let delta = beta[j] - b0[k];
+        if delta != 0.0 {
+            design.col_axpy(j, delta, state);
+        }
+    }
+    stats.profile.epoch_secs += t_exit.elapsed().as_secs_f64();
+    stats.profile.epoch_flops += nnz_ws as f64;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{correlated, CorrelatedSpec};
+    use crate::datafit::{Datafit, Quadratic};
+    use crate::penalty::L1;
+    use crate::solver::inner::inner_solver;
+
+    fn lasso_problem() -> (Design, Vec<f64>, Quadratic, L1) {
+        let ds = correlated(CorrelatedSpec { n: 60, p: 40, rho: 0.5, nnz: 5, snr: 10.0 }, 42);
+        let mut f = Quadratic::new();
+        f.init(&ds.design, &ds.y);
+        let state0 = f.init_state(&ds.design, &ds.y, &vec![0.0; ds.p()]);
+        let mut grad0 = vec![0.0; ds.p()];
+        f.grad_full(&ds.design, &ds.y, &state0, &vec![0.0; ds.p()], &mut grad0);
+        let lam = grad0.iter().fold(0.0f64, |m, g| m.max(g.abs())) / 10.0;
+        (ds.design, ds.y, f, L1::new(lam))
+    }
+
+    #[test]
+    fn gram_inner_matches_residual_inner_on_a_full_ws() {
+        let (d, y, f, pen) = lasso_problem();
+        let p = d.ncols();
+        let ws: Vec<usize> = (0..p).collect();
+        let scale = f.residual_quadratic_scale().unwrap();
+
+        let mut beta_r = vec![0.0; p];
+        let mut state_r = f.init_state(&d, &y, &beta_r);
+        let sr = inner_solver(&d, &y, &f, &pen, &mut beta_r, &mut state_r, &ws, 3000, 1e-12, 5);
+
+        let gram = GramCache::with_default_budget();
+        let mut beta_g = vec![0.0; p];
+        let mut state_g = f.init_state(&d, &y, &beta_g);
+        let sg = gram_inner_solver(
+            &d, f.lipschitz(), scale, &pen, &mut beta_g, &mut state_g, &ws, &gram, 3000, 1e-12, 5,
+        );
+        assert!(sr.ws_score <= 1e-12 && sg.ws_score <= 1e-12, "{} / {}", sr.ws_score, sg.ws_score);
+        for (a, b) in beta_r.iter().zip(beta_g.iter()) {
+            assert!((a - b).abs() < 1e-10, "betas diverged: {a} vs {b}");
+        }
+        // the exit refresh leaves a consistent residual state
+        let fresh = f.init_state(&d, &y, &beta_g);
+        for (a, b) in state_g.iter().zip(fresh.iter()) {
+            assert!((a - b).abs() < 1e-9, "state drifted: {a} vs {b}");
+        }
+        assert!(sg.profile.gram_epochs > 0);
+        assert!(sg.profile.gram_assembly_flops > 0.0);
+        assert_eq!(sg.profile.residual_epochs, 0);
+    }
+
+    #[test]
+    fn gram_extrapolation_guard_holds() {
+        let (d, y, f, pen) = lasso_problem();
+        let p = d.ncols();
+        let ws: Vec<usize> = (0..p).collect();
+        let scale = f.residual_quadratic_scale().unwrap();
+        let gram = GramCache::with_default_budget();
+        let mut beta = vec![0.0; p];
+        let mut state = f.init_state(&d, &y, &beta);
+        let mut prev = f.value(&y, &beta, &state) + pen.value_sum(&beta);
+        for _ in 0..30 {
+            gram_inner_solver(
+                &d, f.lipschitz(), scale, &pen, &mut beta, &mut state, &ws, &gram, 5,
+                f64::MIN_POSITIVE, 5,
+            );
+            let cur = f.value(&y, &beta, &state) + pen.value_sum(&beta);
+            assert!(cur <= prev + 1e-10, "objective increased {prev} -> {cur}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn second_solve_reuses_assembled_blocks() {
+        let (d, y, f, pen) = lasso_problem();
+        let p = d.ncols();
+        let ws: Vec<usize> = (0..p / 2).collect();
+        let scale = f.residual_quadratic_scale().unwrap();
+        let gram = GramCache::with_default_budget();
+        let mut beta = vec![0.0; p];
+        let mut state = f.init_state(&d, &y, &beta);
+        let s1 = gram_inner_solver(
+            &d, f.lipschitz(), scale, &pen, &mut beta, &mut state, &ws, &gram, 50, 1e-10, 5,
+        );
+        assert!(s1.profile.gram_assembly_flops > 0.0);
+        // same ws again: zero new assembly
+        let s2 = gram_inner_solver(
+            &d, f.lipschitz(), scale, &pen, &mut beta, &mut state, &ws, &gram, 50, 1e-10, 5,
+        );
+        assert_eq!(s2.profile.gram_assembly_flops, 0.0);
+        // grown ws: only the new rows
+        let grown: Vec<usize> = (0..p / 2 + 4).collect();
+        let s3 = gram_inner_solver(
+            &d, f.lipschitz(), scale, &pen, &mut beta, &mut state, &grown, &gram, 50, 1e-10, 5,
+        );
+        assert!(s3.profile.gram_assembly_flops > 0.0);
+        assert!(s3.profile.gram_assembly_flops < s1.profile.gram_assembly_flops);
+    }
+
+    #[test]
+    fn dispatcher_prefers_gram_when_n_dominates_ws() {
+        // tall problem, small ws: m²·E ≪ 2·n·m·E
+        let d: Design = crate::linalg::DenseMatrix::zeros(2000, 50).into();
+        let gram = GramCache::with_default_budget();
+        let ws: Vec<usize> = (0..10).collect();
+        let disp = EngineDispatch::new(InnerEngine::Auto);
+        assert!(disp.use_gram(&d, &ws, Some(&gram), true));
+        // and never for non-quadratic datafits or when no cache exists
+        assert!(!disp.use_gram(&d, &ws, None, true));
+        assert!(!disp.use_gram(&d, &ws, Some(&gram), false));
+        // fixed choices are honoured
+        assert!(EngineDispatch::new(InnerEngine::Gram).use_gram(&d, &ws, Some(&gram), true));
+        assert!(!EngineDispatch::new(InnerEngine::Residual).use_gram(&d, &ws, Some(&gram), true));
+    }
+
+    #[test]
+    fn dispatcher_prefers_residual_on_wide_sparse_ws() {
+        // |ws|² per epoch dwarfs the sparse column passes: residual wins
+        let mut trips = Vec::new();
+        for j in 0..400usize {
+            trips.push((j % 20, j, 1.0));
+        }
+        let d: Design = crate::linalg::CscMatrix::from_triplets(20, 400, &trips).into();
+        let gram = GramCache::with_default_budget();
+        let ws: Vec<usize> = (0..300).collect();
+        let disp = EngineDispatch::new(InnerEngine::Auto);
+        // nnz(ws) = 300 (one entry per column) vs |ws|² = 90 000 per epoch
+        assert!(!disp.use_gram(&d, &ws, Some(&gram), true));
+    }
+
+    #[test]
+    fn engine_parses_from_cli_strings() {
+        assert_eq!("auto".parse::<InnerEngine>().unwrap(), InnerEngine::Auto);
+        assert_eq!("residual".parse::<InnerEngine>().unwrap(), InnerEngine::Residual);
+        assert_eq!("gram".parse::<InnerEngine>().unwrap(), InnerEngine::Gram);
+        assert!("graham".parse::<InnerEngine>().is_err());
+    }
+}

@@ -21,10 +21,59 @@ use super::cd::{cd_epoch, cd_epoch_rev};
 use crate::datafit::Datafit;
 use crate::linalg::Design;
 use crate::penalty::Penalty;
+use std::time::Instant;
 
 /// Forced stationarity evaluation at least every this many epochs, even
 /// while the cheap move bound stays large.
 const FORCE_CHECK_EVERY: usize = 50;
+
+/// Per-stage wall-time and (modelled) flop attribution of the inner
+/// solvers, accumulated up through [`super::outer::OuterOutcome`] and
+/// [`super::skglm::FitResult`] and surfaced by `exp gram` — so perf PRs
+/// can attribute time instead of guessing. Flops are stored-entry
+/// touches: a residual epoch is `2·nnz(ws)` (one dot + one axpy per
+/// coordinate), a Gram epoch is `|ws|²`, Gram assembly is the entries the
+/// store actually computed.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct InnerProfile {
+    /// seconds inside CD epochs (either engine)
+    pub epoch_secs: f64,
+    /// seconds scoring stationarity (inner checks + outer scoring passes)
+    pub score_secs: f64,
+    /// seconds proposing/guarding Anderson extrapolations
+    pub extrapolation_secs: f64,
+    /// seconds assembling working-set Gram blocks
+    pub gram_assembly_secs: f64,
+    /// modelled epoch flops (stored-entry touches)
+    pub epoch_flops: f64,
+    /// Gram-block entries computed (stored-entry touches)
+    pub gram_assembly_flops: f64,
+    /// epochs run by the residual engine
+    pub residual_epochs: usize,
+    /// epochs run by the Gram engine
+    pub gram_epochs: usize,
+}
+
+impl InnerProfile {
+    /// Accumulate another profile (outer loop / path sweeps).
+    pub fn merge(&mut self, o: &InnerProfile) {
+        self.epoch_secs += o.epoch_secs;
+        self.score_secs += o.score_secs;
+        self.extrapolation_secs += o.extrapolation_secs;
+        self.gram_assembly_secs += o.gram_assembly_secs;
+        self.epoch_flops += o.epoch_flops;
+        self.gram_assembly_flops += o.gram_assembly_flops;
+        self.residual_epochs += o.residual_epochs;
+        self.gram_epochs += o.gram_epochs;
+    }
+
+    /// Total modelled flops (epochs + Gram assembly) — the engine
+    /// comparison metric `exp gram` records even where wall time is too
+    /// noisy to measure.
+    pub fn total_flops(&self) -> f64 {
+        self.epoch_flops + self.gram_assembly_flops
+    }
+}
 
 /// Result of one inner solve.
 #[derive(Clone, Debug, Default)]
@@ -36,6 +85,8 @@ pub struct InnerStats {
     pub ws_score: f64,
     /// number of full ws stationarity evaluations performed
     pub score_checks: usize,
+    /// per-stage wall-time / flop attribution
+    pub profile: InnerProfile,
 }
 
 /// Working-set score of coordinate `j` (Eq. 2, or Eq. 24 for `score^cd`
@@ -123,6 +174,8 @@ pub fn inner_solver<D: Datafit, P: Penalty>(
     anderson_m: usize,
 ) -> InnerStats {
     let mut stats = InnerStats::default();
+    // modelled per-epoch work: one column dot + one column axpy per coord
+    let epoch_flops = 2.0 * design.subset_stored_entries(ws) as f64;
     let affine = datafit.state_is_affine();
     let mut accel = if anderson_m >= 2 { Some(Anderson::new(anderson_m)) } else { None };
     let mut ws_beta = vec![0.0; ws.len()];
@@ -150,13 +203,18 @@ pub fn inner_solver<D: Datafit, P: Penalty>(
     for epoch in 1..=max_epochs {
         stats.epochs = epoch;
         // alternate sweep direction (Proposition 13 hypothesis 3)
+        let t_epoch = Instant::now();
         let max_move = if epoch % 2 == 1 {
             cd_epoch(design, y, datafit, penalty, beta, state, ws)
         } else {
             cd_epoch_rev(design, y, datafit, penalty, beta, state, ws)
         };
+        stats.profile.epoch_secs += t_epoch.elapsed().as_secs_f64();
+        stats.profile.epoch_flops += epoch_flops;
+        stats.profile.residual_epochs += 1;
 
         if let Some(acc) = accel.as_mut() {
+            let t_extr = Instant::now();
             gather(beta, ws, &mut ws_beta);
             let full = acc.push(&ws_beta);
             if affine {
@@ -186,6 +244,7 @@ pub fn inner_solver<D: Datafit, P: Penalty>(
                     }
                 }
             }
+            stats.profile.extrapolation_secs += t_extr.elapsed().as_secs_f64();
         }
 
         // cheap move bound gates the O(|ws|·n) stationarity evaluation
@@ -196,7 +255,10 @@ pub fn inner_solver<D: Datafit, P: Penalty>(
         if due {
             epochs_since_check = 0;
             stats.score_checks += 1;
+            let t_score = Instant::now();
             let score = ws_score_max(design, y, datafit, penalty, beta, state, ws);
+            stats.profile.score_secs += t_score.elapsed().as_secs_f64();
+            stats.profile.epoch_flops += epoch_flops / 2.0; // one dot per coord
             stats.ws_score = score;
             if score <= tol {
                 return stats;
@@ -204,7 +266,10 @@ pub fn inner_solver<D: Datafit, P: Penalty>(
         }
     }
     stats.score_checks += 1;
+    let t_score = Instant::now();
     stats.ws_score = ws_score_max(design, y, datafit, penalty, beta, state, ws);
+    stats.profile.score_secs += t_score.elapsed().as_secs_f64();
+    stats.profile.epoch_flops += epoch_flops / 2.0;
     stats
 }
 

@@ -6,11 +6,17 @@
 //! engine ([`block_cd`]); plus the prox-Newton outer solver for datafits
 //! without precomputable Lipschitz bounds (Poisson/probit) and every
 //! baseline the evaluation figures compare against.
+//!
+//! Quadratic datafits have **two** interchangeable inner engines behind
+//! one cost-model dispatcher ([`gram`]): the residual engine (O(n) per
+//! coordinate) and the Gram-domain engine (O(|ws|) per coordinate on
+//! incrementally assembled, cache-persistent working-set Grams).
 
 pub mod anderson;
 pub mod baselines;
 pub mod block_cd;
 pub mod cd;
+pub mod gram;
 pub mod inner;
 pub mod multitask;
 pub mod outer;
@@ -19,6 +25,8 @@ pub mod prox_newton;
 pub mod screening;
 pub mod skglm;
 
+pub use gram::{gram_inner_solver, EngineDispatch, InnerEngine};
+pub use inner::InnerProfile;
 pub use skglm::{
     solve, solve_continued, solve_prepared, ContinuationState, FitResult, GradEngine,
     HistoryPoint, SolverOpts,

@@ -16,7 +16,7 @@
 //! What varies per instantiation — how a block is scored, proxed, frozen
 //! and swept — lives behind the trait; the control flow does not fork.
 
-use super::inner::InnerStats;
+use super::inner::{InnerProfile, InnerStats};
 use super::skglm::{HistoryPoint, SolverOpts};
 use std::time::Instant;
 
@@ -74,6 +74,9 @@ pub struct OuterOutcome {
     pub rejected_extrapolations: usize,
     /// working-set size the loop ended with (path continuation)
     pub ws_size: usize,
+    /// per-stage attribution: inner-solve profiles merged, plus the outer
+    /// scoring passes and the final KKT pass under `score_secs`
+    pub profile: InnerProfile,
 }
 
 /// Run Algorithm 1's outer loop over `coords`. `ws0` seeds the working-set
@@ -96,6 +99,7 @@ pub fn solve_outer<C: BlockCoords>(
         accepted_extrapolations: 0,
         rejected_extrapolations: 0,
         ws_size: ws0.unwrap_or(opts.ws_start).min(nb).max(1),
+        profile: InnerProfile::default(),
     };
 
     for outer in 1..=opts.max_outer {
@@ -103,7 +107,9 @@ pub fn solve_outer<C: BlockCoords>(
         coords.screen();
 
         // ---- scoring pass (the O(n·p) hot spot) ----
+        let t_score = Instant::now();
         let kkt_max = coords.score_pass(&mut scores);
+        out.profile.score_secs += t_score.elapsed().as_secs_f64();
         let objective = coords.objective();
         let shown_ws = if opts.use_ws { out.ws_size.min(nb) } else { nb };
         out.history.push(HistoryPoint {
@@ -143,9 +149,12 @@ pub fn solve_outer<C: BlockCoords>(
         out.n_epochs += stats.epochs;
         out.accepted_extrapolations += stats.accepted_extrapolations;
         out.rejected_extrapolations += stats.rejected_extrapolations;
+        out.profile.merge(&stats.profile);
     }
 
+    let t_final = Instant::now();
     out.kkt = coords.final_kkt();
+    out.profile.score_secs += t_final.elapsed().as_secs_f64();
     out.converged = out.converged || out.kkt <= opts.tol;
     out.objective = coords.objective();
     out

@@ -189,6 +189,7 @@ pub fn solve_prox_newton_prepared<D: Datafit, P: Penalty>(
         history: Vec::new(),
         accepted_extrapolations: 0,
         rejected_extrapolations: 0,
+        profile: Default::default(),
     };
 
     let mut ws_size = ws0.unwrap_or(opts.ws_start).min(p).max(1);

@@ -164,12 +164,19 @@ pub fn solve_lasso_screened_warm_with(
     work: &mut ScreenWorkspace,
 ) -> (crate::solver::FitResult, usize) {
     use crate::datafit::{Datafit, Quadratic};
+    use crate::solver::gram::{EngineDispatch, InnerEngine};
     use crate::solver::outer::solve_outer;
 
     let p = design.ncols();
     work.reset(design.nrows(), p);
     let mut datafit = Quadratic::new();
     datafit.init_cached(design, y, col_sq_norms);
+    // the sweep-shared Gram store (blocks persist across λ points; the
+    // coordinator installs its per-design cache here instead)
+    if continuation.gram.is_none() && opts.inner != InnerEngine::Residual {
+        continuation.gram =
+            Some(std::sync::Arc::new(crate::linalg::gram::GramCache::with_default_budget()));
+    }
     match col_sq_norms {
         Some(sq) => {
             assert_eq!(sq.len(), p, "cached col_sq_norms does not match the design");
@@ -199,6 +206,8 @@ pub fn solve_lasso_screened_warm_with(
         work,
         xtr_fresh: false,
         n_screened: 0,
+        gram: continuation.gram.clone(),
+        dispatch: EngineDispatch::new(opts.inner),
     };
     let out = solve_outer(&mut coords, opts, continuation.ws_size);
     let result = crate::solver::FitResult {
@@ -211,6 +220,7 @@ pub fn solve_lasso_screened_warm_with(
         history: out.history,
         accepted_extrapolations: out.accepted_extrapolations,
         rejected_extrapolations: out.rejected_extrapolations,
+        profile: out.profile,
     };
     continuation.beta = Some(result.beta.clone());
     continuation.ws_size = Some(out.ws_size);
@@ -236,6 +246,10 @@ struct ScreenedLassoCoords<'a, 'w> {
     /// work.xtr/work.r match the current state (screen → score reuse)
     xtr_fresh: bool,
     n_screened: usize,
+    /// sweep-shared working-set Gram store (inner-engine dispatch)
+    gram: Option<std::sync::Arc<crate::linalg::gram::GramCache>>,
+    /// per-inner-solve engine selection (cost model + epoch feedback)
+    dispatch: crate::solver::gram::EngineDispatch,
 }
 
 impl ScreenedLassoCoords<'_, '_> {
@@ -323,19 +337,41 @@ impl crate::solver::outer::BlockCoords for ScreenedLassoCoords<'_, '_> {
         inner_tol: f64,
         opts: &crate::solver::SolverOpts,
     ) -> crate::solver::inner::InnerStats {
+        use crate::datafit::Datafit;
         self.xtr_fresh = false;
-        crate::solver::inner::inner_solver(
-            self.design,
-            self.y,
-            &self.datafit,
-            &self.penalty,
-            &mut self.beta,
-            &mut self.state,
-            ws,
-            opts.max_epochs,
-            inner_tol,
-            opts.anderson_m,
-        )
+        let quad_scale = self.datafit.residual_quadratic_scale();
+        let use_gram =
+            self.dispatch.use_gram(self.design, ws, self.gram.as_deref(), quad_scale.is_some());
+        let stats = if use_gram {
+            crate::solver::gram::gram_inner_solver(
+                self.design,
+                self.datafit.lipschitz(),
+                quad_scale.expect("use_gram implies the Gram contract"),
+                &self.penalty,
+                &mut self.beta,
+                &mut self.state,
+                ws,
+                self.gram.as_ref().expect("use_gram implies a store"),
+                opts.max_epochs,
+                inner_tol,
+                opts.anderson_m,
+            )
+        } else {
+            crate::solver::inner::inner_solver(
+                self.design,
+                self.y,
+                &self.datafit,
+                &self.penalty,
+                &mut self.beta,
+                &mut self.state,
+                ws,
+                opts.max_epochs,
+                inner_tol,
+                opts.anderson_m,
+            )
+        };
+        self.dispatch.record_epochs(stats.epochs);
+        stats
     }
 
     fn final_kkt(&mut self) -> f64 {

@@ -19,11 +19,14 @@
 //! it through an optional [`GradEngine`] (PJRT) and falls back to the
 //! native datafit path.
 
-use super::inner::{inner_solver, InnerStats};
+use super::gram::{gram_inner_solver, EngineDispatch, InnerEngine};
+use super::inner::{inner_solver, InnerProfile, InnerStats};
 use super::outer::{solve_outer, BlockCoords};
 use crate::datafit::Datafit;
+use crate::linalg::gram::GramCache;
 use crate::linalg::Design;
 use crate::penalty::Penalty;
+use std::sync::Arc;
 
 /// Pluggable full-gradient engine (the PJRT runtime implements this for
 /// dense quadratic scoring; `None`/unsupported shapes fall back to the
@@ -62,6 +65,10 @@ pub struct SolverOpts {
     pub anderson_m: usize,
     /// inner solve stops at `max(inner_tol_ratio · kkt_max, 0.1·tol)`
     pub inner_tol_ratio: f64,
+    /// inner engine for quadratic datafits: residual CD, Gram-domain CD,
+    /// or per-inner-solve cost-model dispatch (`solver::gram`). Ignored
+    /// (residual) for datafits without the Gram contract.
+    pub inner: InnerEngine,
     pub verbose: bool,
 }
 
@@ -75,6 +82,7 @@ impl Default for SolverOpts {
             use_ws: true,
             anderson_m: 5,
             inner_tol_ratio: 0.1,
+            inner: InnerEngine::default(),
             verbose: false,
         }
     }
@@ -91,6 +99,12 @@ impl SolverOpts {
     }
     pub fn without_acceleration(mut self) -> Self {
         self.anderson_m = 0;
+        self
+    }
+    /// Select the inner engine ([`InnerEngine::Auto`] for cost-model
+    /// dispatch).
+    pub fn with_inner(mut self, inner: InnerEngine) -> Self {
+        self.inner = inner;
         self
     }
 }
@@ -119,6 +133,9 @@ pub struct FitResult {
     pub history: Vec<HistoryPoint>,
     pub accepted_extrapolations: usize,
     pub rejected_extrapolations: usize,
+    /// per-stage wall-time / flop attribution (epochs vs scoring vs
+    /// extrapolation vs Gram assembly) — see `exp gram`
+    pub profile: InnerProfile,
 }
 
 impl FitResult {
@@ -143,6 +160,10 @@ pub struct ContinuationState {
     pub beta: Option<Vec<f64>>,
     /// working-set size the previous solve ended with
     pub ws_size: Option<usize>,
+    /// shared working-set Gram store: blocks assembled at one λ are
+    /// reused at the next (and, when the coordinator installs its
+    /// per-design cache here, across jobs). Created lazily on first use.
+    pub gram: Option<Arc<GramCache>>,
 }
 
 impl ContinuationState {
@@ -165,7 +186,7 @@ pub fn solve<D: Datafit, P: Penalty>(
     beta0: Option<&[f64]>,
 ) -> FitResult {
     datafit.init(design, y);
-    solve_prepared(design, y, datafit, penalty, opts, engine, beta0, None, None)
+    solve_prepared(design, y, datafit, penalty, opts, engine, beta0, None, None, None)
 }
 
 /// Run Algorithm 1 threading a [`ContinuationState`] through: warm-starts
@@ -186,6 +207,16 @@ pub fn solve_continued<D: Datafit, P: Penalty>(
     col_sq_norms: Option<&[f64]>,
 ) -> FitResult {
     datafit.init_cached(design, y, col_sq_norms);
+    // a path sweep shares one Gram store across its λ points: install it
+    // in the continuation on first use (the coordinator pre-installs its
+    // per-design cache instead, sharing blocks across jobs too)
+    if state.gram.is_none()
+        && opts.inner != InnerEngine::Residual
+        && datafit.residual_quadratic_scale().is_some()
+    {
+        state.gram = Some(Arc::new(GramCache::with_default_budget()));
+    }
+    let gram = state.gram.clone();
     let result = solve_prepared(
         design,
         y,
@@ -196,6 +227,7 @@ pub fn solve_continued<D: Datafit, P: Penalty>(
         state.beta.as_deref(),
         state.ws_size,
         frozen,
+        gram,
     );
     state.update_from(&result);
     result
@@ -210,6 +242,9 @@ pub fn solve_continued<D: Datafit, P: Penalty>(
 /// KKT metric, shrinking every O(n·p) pass. Warm starts must be zero on
 /// frozen coordinates (callers holding a certificate must zero them
 /// first, as `screening::solve_lasso_screened_warm` does internally).
+/// `gram` is the shared working-set Gram store the inner-engine
+/// dispatcher draws on; `None` creates a solve-local one when the
+/// requested [`SolverOpts::inner`] engine may need it.
 #[allow(clippy::too_many_arguments)]
 pub fn solve_prepared<D: Datafit, P: Penalty>(
     design: &Design,
@@ -221,6 +256,7 @@ pub fn solve_prepared<D: Datafit, P: Penalty>(
     beta0: Option<&[f64]>,
     ws0: Option<usize>,
     frozen: Option<&[bool]>,
+    gram: Option<Arc<GramCache>>,
 ) -> FitResult {
     let p = design.ncols();
 
@@ -245,6 +281,17 @@ pub fn solve_prepared<D: Datafit, P: Penalty>(
     let state = datafit.init_state(design, y, &beta);
     let is_frozen = |j: usize| frozen.map(|m| m[j]).unwrap_or(false);
     let all_features: Vec<usize> = (0..p).filter(|&j| !is_frozen(j)).collect();
+    // the Gram engine needs a store: use the caller's shared one, or
+    // create a solve-local one when the engine selection may want it
+    let gram = match gram {
+        Some(g) => Some(g),
+        None if opts.inner != InnerEngine::Residual
+            && datafit.residual_quadratic_scale().is_some() =>
+        {
+            Some(Arc::new(GramCache::with_default_budget()))
+        }
+        None => None,
+    };
     let mut coords = ScalarCoords {
         design,
         y,
@@ -256,6 +303,8 @@ pub fn solve_prepared<D: Datafit, P: Penalty>(
         grad: vec![0.0; p],
         frozen,
         all_features,
+        gram,
+        dispatch: EngineDispatch::new(opts.inner),
     };
     let out = solve_outer(&mut coords, opts, ws0);
     FitResult {
@@ -268,6 +317,7 @@ pub fn solve_prepared<D: Datafit, P: Penalty>(
         history: out.history,
         accepted_extrapolations: out.accepted_extrapolations,
         rejected_extrapolations: out.rejected_extrapolations,
+        profile: out.profile,
     }
 }
 
@@ -289,6 +339,10 @@ struct ScalarCoords<'a, 'e, D: Datafit, P: Penalty> {
     frozen: Option<&'a [bool]>,
     /// the non-frozen features (final KKT pass / no-ws ablation)
     all_features: Vec<usize>,
+    /// shared working-set Gram store (None ⇒ residual engine only)
+    gram: Option<Arc<GramCache>>,
+    /// per-inner-solve engine selection (cost model + epoch feedback)
+    dispatch: EngineDispatch,
 }
 
 impl<D: Datafit, P: Penalty> BlockCoords for ScalarCoords<'_, '_, D, P> {
@@ -344,18 +398,41 @@ impl<D: Datafit, P: Penalty> BlockCoords for ScalarCoords<'_, '_, D, P> {
     }
 
     fn inner_solve(&mut self, ws: &[usize], inner_tol: f64, opts: &SolverOpts) -> InnerStats {
-        inner_solver(
-            self.design,
-            self.y,
-            self.datafit,
-            self.penalty,
-            &mut self.beta,
-            &mut self.state,
-            ws,
-            opts.max_epochs,
-            inner_tol,
-            opts.anderson_m,
-        )
+        // engine dispatch (Auto: Gram when |ws|²·E + assembly beats the
+        // residual engine's 2·nnz(ws)·E; see solver::gram)
+        let quad_scale = self.datafit.residual_quadratic_scale();
+        let use_gram =
+            self.dispatch.use_gram(self.design, ws, self.gram.as_deref(), quad_scale.is_some());
+        let stats = if use_gram {
+            gram_inner_solver(
+                self.design,
+                self.datafit.lipschitz(),
+                quad_scale.expect("use_gram implies the Gram contract"),
+                self.penalty,
+                &mut self.beta,
+                &mut self.state,
+                ws,
+                self.gram.as_ref().expect("use_gram implies a store"),
+                opts.max_epochs,
+                inner_tol,
+                opts.anderson_m,
+            )
+        } else {
+            inner_solver(
+                self.design,
+                self.y,
+                self.datafit,
+                self.penalty,
+                &mut self.beta,
+                &mut self.state,
+                ws,
+                opts.max_epochs,
+                inner_tol,
+                opts.anderson_m,
+            )
+        };
+        self.dispatch.record_epochs(stats.epochs);
+        stats
     }
 
     fn final_kkt(&mut self) -> f64 {
@@ -553,6 +630,43 @@ mod tests {
     }
 
     #[test]
+    fn gram_auto_and_residual_engines_reach_the_same_optimum() {
+        let ds = correlated(CorrelatedSpec { n: 150, p: 90, rho: 0.5, nnz: 8, snr: 10.0 }, 31);
+        let lam = lambda_max(&ds.design, &ds.y) / 15.0;
+        let pen = L1::new(lam);
+        let run = |inner: super::InnerEngine| {
+            let mut f = Quadratic::new();
+            solve(
+                &ds.design,
+                &ds.y,
+                &mut f,
+                &pen,
+                &SolverOpts::default().with_tol(1e-12).with_inner(inner),
+                None,
+                None,
+            )
+        };
+        let residual = run(super::InnerEngine::Residual);
+        let gram = run(super::InnerEngine::Gram);
+        let auto = run(super::InnerEngine::Auto);
+        assert!(residual.converged && gram.converged && auto.converged);
+        for other in [&gram, &auto] {
+            assert!((residual.objective - other.objective).abs() < 1e-12);
+            for (a, b) in residual.beta.iter().zip(other.beta.iter()) {
+                assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+            }
+        }
+        // the forced Gram run actually ran Gram epochs and assembled blocks
+        assert!(gram.profile.gram_epochs > 0);
+        assert!(gram.profile.gram_assembly_flops > 0.0);
+        assert_eq!(gram.profile.residual_epochs, 0);
+        // n ≫ |ws| here: the auto dispatcher should have picked Gram
+        assert!(auto.profile.gram_epochs > 0, "auto never engaged the Gram engine");
+        // residual stays bit-true to the pre-ISSUE-5 solver
+        assert_eq!(residual.profile.gram_epochs, 0);
+    }
+
+    #[test]
     fn frozen_features_are_excluded_without_changing_the_optimum() {
         let ds = correlated(CorrelatedSpec { n: 80, p: 120, rho: 0.4, nnz: 6, snr: 10.0 }, 21);
         let lam = lambda_max(&ds.design, &ds.y) / 5.0;
@@ -582,6 +696,7 @@ mod tests {
             None,
             None,
             Some(&frozen),
+            None,
         );
         assert!(res.converged);
         assert!((res.objective - exact.objective).abs() < 1e-10);

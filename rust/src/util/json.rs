@@ -14,6 +14,10 @@ pub enum Json {
     Arr(Vec<Json>),
     /// Insertion-ordered object (stable output for diffs/goldens).
     Obj(Vec<(String, Json)>),
+    /// Pre-rendered JSON emitted verbatim (no parser offline; the
+    /// BENCH_SUMMARY roll-up embeds whole BENCH_*.json files with it).
+    /// The caller is responsible for the content being valid JSON.
+    Raw(String),
 }
 
 impl Json {
@@ -50,6 +54,7 @@ impl Json {
 
     fn write(&self, out: &mut String) {
         match self {
+            Json::Raw(s) => out.push_str(s),
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
@@ -183,5 +188,11 @@ mod tests {
     fn non_finite_becomes_null() {
         assert_eq!(Json::Num(f64::INFINITY).render(), "null");
         assert_eq!(Json::Num(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn raw_embeds_verbatim() {
+        let j = Json::obj().with("inner", Json::Raw(r#"{"a":[1,2]}"#.to_string()));
+        assert_eq!(j.render(), r#"{"inner":{"a":[1,2]}}"#);
     }
 }

@@ -6,3 +6,15 @@ pub mod order;
 pub mod quickcheck;
 pub mod rng;
 pub mod table;
+
+/// Resolve a byte-budget env var: a positive integer wins, anything else
+/// (unset, unparseable, zero) falls back to `default`. Shared by the
+/// scheduler cache (`SKGLM_CACHE_BYTES`) and the Gram store
+/// (`SKGLM_GRAM_BYTES`).
+pub fn env_byte_budget(var: &str, default: usize) -> usize {
+    std::env::var(var)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&b| b > 0)
+        .unwrap_or(default)
+}

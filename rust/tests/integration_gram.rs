@@ -1,0 +1,195 @@
+//! ISSUE 5 integration: the Gram-domain inner engine through the full
+//! stack — scheduler warm paths match the residual engine λ-by-λ, Gram
+//! blocks persist across λ points and across jobs via the per-design
+//! cache, and the auto dispatcher never loses to both fixed engines.
+
+use skglm::coordinator::{specs, FitScheduler, JobEvent};
+use skglm::data::{correlated, CorrelatedSpec, Dataset};
+use skglm::datafit::Quadratic;
+use skglm::estimators::linear::quadratic_lambda_max;
+use skglm::estimators::path::geometric_grid;
+use skglm::penalty::L1;
+use skglm::solver::{solve, ContinuationState, InnerEngine, SolverOpts};
+use std::sync::Arc;
+
+fn dataset(seed: u64) -> Arc<Dataset> {
+    Arc::new(correlated(CorrelatedSpec { n: 120, p: 90, rho: 0.4, nnz: 7, snr: 10.0 }, seed))
+}
+
+/// Collect one path job's points, indexed by grid position.
+fn run_path_job(
+    sched: &mut FitScheduler,
+    ds: &Arc<Dataset>,
+    ratios: &[f64],
+    inner: InnerEngine,
+) -> Vec<Vec<f64>> {
+    let job = sched.submit_path(
+        Arc::clone(ds),
+        specs::lasso(1.0),
+        ratios.to_vec(),
+        SolverOpts::default().with_tol(1e-14).with_inner(inner),
+    );
+    let mut points: Vec<Option<Vec<f64>>> = vec![None; ratios.len()];
+    loop {
+        match sched.events.recv().expect("scheduler died") {
+            JobEvent::PathPoint(p) if p.job_id == job => {
+                points[p.index] = Some(p.point.beta);
+            }
+            JobEvent::PathDone(s) if s.job_id == job => break,
+            JobEvent::Failed { job_id, message } => {
+                panic!("job {job_id} failed: {message}")
+            }
+            _ => {}
+        }
+    }
+    points.into_iter().map(|p| p.expect("missing path point")).collect()
+}
+
+/// Acceptance: a warm path solve under `--inner gram` matches
+/// `--inner residual` λ-by-λ through the scheduler, at 1e-12.
+#[test]
+fn scheduler_warm_path_gram_matches_residual_lambda_by_lambda() {
+    let ds = dataset(3);
+    // min ratio 0.05 keeps the restricted designs well-conditioned, so
+    // the 1e-12 bar measures engine agreement rather than conditioning
+    let ratios = geometric_grid(5e-2, 6);
+    let mut sched = FitScheduler::start(1);
+    let residual = run_path_job(&mut sched, &ds, &ratios, InnerEngine::Residual);
+    let gram = run_path_job(&mut sched, &ds, &ratios, InnerEngine::Gram);
+    sched.shutdown();
+    for (idx, (br, bg)) in residual.iter().zip(gram.iter()).enumerate() {
+        for (j, (a, b)) in br.iter().zip(bg.iter()).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-12 * (1.0 + a.abs()),
+                "path point {idx}, beta[{j}]: residual {a} vs gram {b}"
+            );
+        }
+    }
+}
+
+/// Gram blocks live in the per-design cache entry: the first job pays the
+/// assembly, later jobs on the same dataset reuse it.
+#[test]
+fn gram_blocks_are_shared_across_jobs_through_the_design_cache() {
+    let ds = dataset(5);
+    let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+    let mut sched = FitScheduler::start(1);
+    let opts = SolverOpts::default().with_tol(1e-10).with_inner(InnerEngine::Gram);
+    sched.submit_fit(Arc::clone(&ds), specs::lasso(lam_max / 5.0), opts.clone());
+    let _ = sched.collect_events(1);
+    let entry = sched.cache().design_entry(&ds, false);
+    let after_first = entry.gram.assembly_flops();
+    assert!(after_first > 0, "first job must populate the shared Gram store");
+    assert!(entry.gram.n_slots() > 0);
+
+    // a second, nearby fit mostly re-uses the first job's blocks: its
+    // incremental assembly is strictly less than a cold rebuild of its ws
+    sched.submit_fit(Arc::clone(&ds), specs::lasso(lam_max / 6.0), opts.clone());
+    let _ = sched.collect_events(1);
+    let delta_warm = entry.gram.assembly_flops() - after_first;
+
+    let ds_cold = dataset(5); // same content, fresh Arc ⇒ fresh store
+    sched.submit_fit(Arc::clone(&ds_cold), specs::lasso(lam_max / 6.0), opts);
+    let _ = sched.collect_events(1);
+    let cold = sched.cache().design_entry(&ds_cold, false).gram.assembly_flops();
+    assert!(
+        delta_warm < cold,
+        "shared store must amortize assembly: warm delta {delta_warm} vs cold {cold}"
+    );
+    sched.shutdown();
+}
+
+/// A warm continuation outside the scheduler also keeps one store across
+/// λ points (solve_continued installs it lazily).
+#[test]
+fn continuation_state_carries_the_gram_store_across_lambdas() {
+    let ds = dataset(7);
+    let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+    let opts = SolverOpts::default().with_tol(1e-10).with_inner(InnerEngine::Gram);
+    let mut state = ContinuationState::default();
+    let mut f = Quadratic::new();
+    let a = skglm::solver::solve_continued(
+        &ds.design, &ds.y, &mut f, &L1::new(lam_max / 4.0), &opts, None, &mut state, None, None,
+    );
+    assert!(a.converged);
+    let store = state.gram.clone().expect("solve_continued must install a store");
+    let flops_first = store.assembly_flops();
+    assert!(flops_first > 0);
+    let mut f2 = Quadratic::new();
+    let b = skglm::solver::solve_continued(
+        &ds.design, &ds.y, &mut f2, &L1::new(lam_max / 5.0), &opts, None, &mut state, None, None,
+    );
+    assert!(b.converged);
+    assert!(Arc::ptr_eq(&store, state.gram.as_ref().unwrap()), "store must persist");
+    let delta = store.assembly_flops() - flops_first;
+    assert!(
+        (delta as f64) < flops_first as f64,
+        "second λ must reuse blocks: delta {delta} vs first {flops_first}"
+    );
+}
+
+/// Acceptance: the auto dispatcher never picks a path worse than BOTH
+/// fixed choices (by the recorded flop counters).
+#[test]
+fn auto_dispatch_is_never_worse_than_both_fixed_engines() {
+    for (n, p, div) in [(400usize, 80usize, 8.0f64), (80, 300, 5.0), (250, 250, 12.0)] {
+        let ds = correlated(
+            CorrelatedSpec { n, p, rho: 0.5, nnz: (p / 15).max(2), snr: 8.0 },
+            13,
+        );
+        let lam = quadratic_lambda_max(&ds.design, &ds.y) / div;
+        let run = |inner: InnerEngine| {
+            let mut f = Quadratic::new();
+            let r = solve(
+                &ds.design,
+                &ds.y,
+                &mut f,
+                &L1::new(lam),
+                &SolverOpts::default().with_tol(1e-10).with_inner(inner),
+                None,
+                None,
+            );
+            assert!(r.converged, "{n}x{p}: kkt {}", r.kkt);
+            r.profile.total_flops()
+        };
+        let residual = run(InnerEngine::Residual);
+        let gram = run(InnerEngine::Gram);
+        let auto = run(InnerEngine::Auto);
+        assert!(
+            auto <= residual.max(gram) * 1.05,
+            "{n}x{p} λ/{div}: auto {auto} worse than both residual {residual} and gram {gram}"
+        );
+    }
+}
+
+/// The screened fast path under the Gram engine stays exact: screened
+/// solve == plain residual solve on the same λ.
+#[test]
+fn screened_gram_path_matches_plain_residual_solve() {
+    let ds = dataset(9);
+    let lam = quadratic_lambda_max(&ds.design, &ds.y) / 10.0;
+    let (fit, n_screened) = skglm::solver::screening::solve_lasso_screened(
+        &ds.design,
+        &ds.y,
+        lam,
+        &SolverOpts::default().with_tol(1e-12).with_inner(InnerEngine::Gram),
+    );
+    let mut f = Quadratic::new();
+    let plain = solve(
+        &ds.design,
+        &ds.y,
+        &mut f,
+        &L1::new(lam),
+        &SolverOpts::default().with_tol(1e-12),
+        None,
+        None,
+    );
+    assert!(
+        (fit.objective - plain.objective).abs() < 1e-11,
+        "screened-gram {} vs plain {}",
+        fit.objective,
+        plain.objective
+    );
+    assert!(n_screened > 0, "screening must still certify features");
+    assert!(fit.profile.gram_epochs > 0, "the Gram engine must actually have run");
+}

@@ -543,6 +543,102 @@ fn prop_block_engine_trivial_partition_matches_scalar() {
     );
 }
 
+/// ISSUE-5 tentpole property: the Gram-domain inner engine IS the
+/// residual engine — forced `InnerEngine::Gram` solves agree with forced
+/// `InnerEngine::Residual` solves to 1e-12 on random Lasso AND (non-convex)
+/// MCP problems, over dense AND sparse designs.
+#[test]
+fn prop_gram_inner_engine_matches_residual_engine() {
+    use skglm::solver::InnerEngine;
+
+    fn to_sparse(d: &Design) -> Design {
+        match d {
+            Design::Sparse(s) => Design::Sparse(s.clone()),
+            Design::Dense(m) => {
+                let mut trips = Vec::new();
+                for j in 0..m.ncols() {
+                    for (i, &v) in m.col(j).iter().enumerate() {
+                        if v != 0.0 {
+                            trips.push((i, j, v));
+                        }
+                    }
+                }
+                skglm::linalg::CscMatrix::from_triplets(m.nrows(), m.ncols(), &trips).into()
+            }
+        }
+    }
+
+    #[derive(Debug, Clone)]
+    struct Probe {
+        n: usize,
+        p: usize,
+        ratio: f64,
+        sparse: bool,
+        mcp: bool,
+        seed: u64,
+    }
+    check(
+        23,
+        12,
+        |rng: &mut Rng| Probe {
+            n: 20 + rng.below(30),
+            p: 10 + rng.below(40),
+            ratio: 0.05 + 0.3 * rng.uniform(),
+            sparse: rng.bernoulli(0.5),
+            mcp: rng.bernoulli(0.5),
+            seed: rng.next_u64(),
+        },
+        |pr| {
+            let ds = correlated(
+                CorrelatedSpec {
+                    n: pr.n,
+                    p: pr.p,
+                    rho: 0.4,
+                    nnz: (pr.p / 5).max(1),
+                    snr: 8.0,
+                },
+                pr.seed,
+            );
+            let mut design =
+                if pr.sparse { to_sparse(&ds.design) } else { ds.design.clone() };
+            if pr.mcp {
+                // paper convention for the non-convex penalty
+                design.normalize_cols((pr.n as f64).sqrt());
+            }
+            let lam =
+                skglm::estimators::linear::quadratic_lambda_max(&design, &ds.y) * pr.ratio;
+            // solve an order tighter than the 1e-12 comparison bar
+            let run = |inner: InnerEngine| {
+                let opts = SolverOpts::default().with_tol(1e-14).with_inner(inner);
+                let mut f = Quadratic::new();
+                if pr.mcp {
+                    solve(&design, &ds.y, &mut f, &Mcp::new(lam, 3.0), &opts, None, None)
+                } else {
+                    solve(&design, &ds.y, &mut f, &L1::new(lam), &opts, None, None)
+                }
+            };
+            let residual = run(InnerEngine::Residual);
+            let gram = run(InnerEngine::Gram);
+            ensure(
+                gram.profile.gram_epochs > 0 || gram.n_epochs == 0,
+                "forced Gram run never used the Gram engine",
+            )?;
+            close(residual.objective, gram.objective, 1e-12)?;
+            for (j, (a, b)) in residual.beta.iter().zip(gram.beta.iter()).enumerate() {
+                ensure(
+                    (a - b).abs() <= 1e-12 * (1.0 + a.abs()),
+                    format!(
+                        "{}{} beta[{j}]: residual {a} vs gram {b}",
+                        if pr.sparse { "sparse " } else { "dense " },
+                        if pr.mcp { "mcp" } else { "lasso" }
+                    ),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Group prox with the trivial partition equals the scalar prox for every
 /// (penalty, v, step) probe — the pointwise half of the equivalence.
 #[test]

@@ -25,6 +25,12 @@ cargo run --release -p skglm --bin skglm -- exp glms
 echo "==> group bench smoke (writes BENCH_groups.json)"
 cargo run --release -p skglm --bin skglm -- exp groups
 
+echo "==> gram inner-engine bench smoke (writes BENCH_gram.json)"
+cargo run --release -p skglm --bin skglm -- exp gram
+
+echo "==> roll up BENCH_*.json -> BENCH_SUMMARY.json"
+cargo run --release -p skglm --bin skglm -- exp summary
+
 echo "==> cargo doc --no-deps"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace
 
