@@ -644,6 +644,10 @@ pub fn run_experiment(name: &str, scale: Scale) -> Result<Vec<PathBuf>> {
         "glms" => crate::bench::glm_bench::run_glms(scale),
         "groups" => crate::bench::group_bench::run_groups(scale),
         "gram" => crate::bench::gram_bench::run_gram(scale),
+        // the conformance corpus: Smoke = the CI smoke subset, Full = all
+        "scenarios" => {
+            crate::bench::scenario::conform(None, None, scale == Scale::Smoke)
+        }
         // roll-up of every repo-root BENCH_*.json into BENCH_SUMMARY.json
         // (not part of `all`: it summarises whatever trajectory points
         // exist, it doesn't produce new ones)
@@ -664,7 +668,7 @@ pub fn run_experiment(name: &str, scale: Scale) -> Result<Vec<PathBuf>> {
 
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table1",
-    "table2", "pathsched", "kernels", "glms", "groups", "gram",
+    "table2", "pathsched", "kernels", "glms", "groups", "gram", "scenarios",
 ];
 
 #[cfg(test)]

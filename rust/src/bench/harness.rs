@@ -26,14 +26,21 @@ pub struct SolverCurve {
 }
 
 impl SolverCurve {
-    /// Time needed to reach `target` metric (first point at or below);
-    /// None if never reached.
-    pub fn time_to(&self, target: f64) -> Option<f64> {
+    /// Earliest time at which the curve reaches `target` (metric at or
+    /// below); `None` if never reached. Points with a non-finite time or
+    /// metric are ignored — a timed-out or diverged rerun (`NaN`/`inf`)
+    /// must not report an (unreachable) finite time-to-target.
+    pub fn time_to_target(&self, target: f64) -> Option<f64> {
         self.points
             .iter()
-            .filter(|p| p.metric <= target)
+            .filter(|p| p.time.is_finite() && p.metric.is_finite() && p.metric <= target)
             .map(|p| p.time)
             .fold(None, |acc, t| Some(acc.map_or(t, |a: f64| a.min(t))))
+    }
+
+    /// Alias kept for the figure runners; see [`SolverCurve::time_to_target`].
+    pub fn time_to(&self, target: f64) -> Option<f64> {
+        self.time_to_target(target)
     }
 
     /// Best metric achieved within a time budget.
@@ -46,10 +53,17 @@ impl SolverCurve {
     }
 
     /// Sorted-by-time, cumulative-min metric (cleaned curve for tables).
+    /// Non-finite samples are dropped up front: a `NaN` time used to
+    /// panic the sort, and a `NaN`/`inf` metric would poison every later
+    /// envelope value. Empty in → empty out.
     pub fn monotone_envelope(&self) -> Vec<(f64, f64)> {
-        let mut pts: Vec<(f64, f64)> =
-            self.points.iter().map(|p| (p.time, p.metric)).collect();
-        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut pts: Vec<(f64, f64)> = self
+            .points
+            .iter()
+            .filter(|p| p.time.is_finite() && p.metric.is_finite())
+            .map(|p| (p.time, p.metric))
+            .collect();
+        pts.sort_by(|a, b| a.0.total_cmp(&b.0));
         let mut best = f64::INFINITY;
         pts.iter()
             .map(|&(t, m)| {
@@ -158,6 +172,59 @@ mod tests {
         assert_eq!(c.time_to(1e-9), None);
         assert_eq!(c.best_within(0.2), Some(0.5));
         assert_eq!(c.best_within(0.05), None);
+    }
+
+    fn curve(points: Vec<BenchPoint>) -> SolverCurve {
+        SolverCurve { solver: "s".into(), points }
+    }
+
+    fn pt(time: f64, metric: f64) -> BenchPoint {
+        BenchPoint { budget: 1, time, objective: 0.0, metric }
+    }
+
+    #[test]
+    fn envelope_of_empty_curve_is_empty() {
+        assert!(curve(vec![]).monotone_envelope().is_empty());
+    }
+
+    #[test]
+    fn envelope_of_single_point_is_that_point() {
+        assert_eq!(curve(vec![pt(0.25, 0.5)]).monotone_envelope(), vec![(0.25, 0.5)]);
+    }
+
+    #[test]
+    fn envelope_drops_non_finite_samples_instead_of_panicking() {
+        // NaN time previously panicked partial_cmp().unwrap(); a NaN/inf
+        // metric would have leaked into the cumulative minimum
+        let c = curve(vec![
+            pt(f64::NAN, 0.1),
+            pt(0.1, f64::NAN),
+            pt(0.2, f64::INFINITY),
+            pt(0.3, 0.4),
+            pt(0.4, 0.2),
+        ]);
+        let env = c.monotone_envelope();
+        assert_eq!(env, vec![(0.3, 0.4), (0.4, 0.2)]);
+    }
+
+    #[test]
+    fn time_to_target_edge_cases() {
+        // empty curve: no time
+        assert_eq!(curve(vec![]).time_to_target(1.0), None);
+        // single point at the target counts (<=, not <)
+        assert_eq!(curve(vec![pt(0.5, 1.0)]).time_to_target(1.0), Some(0.5));
+        // never reaches the target
+        assert_eq!(curve(vec![pt(0.1, 0.9), pt(0.2, 0.8)]).time_to_target(0.5), None);
+        // earliest qualifying time wins even when sampled out of order
+        let c = curve(vec![pt(0.9, 0.01), pt(0.2, 0.05), pt(0.5, 0.02)]);
+        assert_eq!(c.time_to_target(0.05), Some(0.2));
+        // a diverged rerun (NaN time) at the target must not win or poison
+        let c = curve(vec![pt(f64::NAN, 0.0), pt(0.7, 0.0)]);
+        assert_eq!(c.time_to_target(0.1), Some(0.7));
+        // NaN metric never qualifies
+        assert_eq!(curve(vec![pt(0.1, f64::NAN)]).time_to_target(1.0), None);
+        // the alias stays in sync
+        assert_eq!(c.time_to(0.1), c.time_to_target(0.1));
     }
 
     #[test]

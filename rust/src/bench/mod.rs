@@ -11,5 +11,6 @@ pub mod harness;
 pub mod kernel_bench;
 pub mod path_bench;
 pub mod report;
+pub mod scenario;
 
 pub use harness::{black_box_curve, budget_schedule, BenchPoint, SolverCurve};

@@ -1,0 +1,984 @@
+//! Declarative scenario conformance corpus + runner (`skglm conform`,
+//! `exp scenarios`).
+//!
+//! One harness certifies the full (datafit × penalty × shape × density ×
+//! seed) matrix through the **real** [`FitScheduler`] path machinery —
+//! the same warm sweeps, caches and screening the CLI and benches use —
+//! instead of per-PR ad-hoc integration tests. Each [`Scenario`] runs an
+//! A/B variant plan:
+//!
+//! - **baseline**: residual inner engine, thread budget 1, a 3-λ warm
+//!   [`Job::Path`](crate::coordinator::Job::Path) sweep;
+//! - **cold**: each λ re-solved in a fresh scheduler (no continuation,
+//!   no coefficient cache) — warm == cold λ-by-λ on the objective for
+//!   convex scenarios;
+//! - **engines**: the same warm sweep under `inner ∈ {gram, auto}`
+//!   (quadratic datafits only — the Gram contract's gate) — cross-engine
+//!   agreement ≤ 1e-10 for convex scenarios, objective agreement for
+//!   non-convex ones (engines may round to different critical points);
+//! - **threads**: the same warm sweep under thread budget 4 —
+//!   bit-identical coefficients (the PR-2 kernel-engine invariant).
+//!
+//! Per-scenario oracles additionally check the solver's own certificate
+//! (duality gap / stationarity, [`crate::solver::Certificate`]) against
+//! the scenario's declared tolerance at **every** path point — the
+//! residual is read off [`PathPointOutcome`](crate::coordinator::scheduler::PathPointOutcome),
+//! never recomputed. Results are emitted in an AgentLab-style schema
+//! (`scenario_id`, `outcome: pass|fail|skip`, `objective`, `metrics`,
+//! `violations`) to `results/scenarios/` + repo-root
+//! `BENCH_scenarios.json` (rolled into `BENCH_SUMMARY.json`).
+//!
+//! The corpus is declarative: `scenarios.jsonl` at the repo root (one
+//! JSON object per line, parsed with [`crate::util::json::Json::parse`])
+//! with [`builtin_corpus`] as the compiled-in fallback so the binary is
+//! self-contained offline. A scenario whose (datafit, penalty) pair the
+//! library does not ship reports `outcome: "skip"` instead of failing —
+//! corpora may be shared with other implementations.
+
+use crate::bench::report::{ensure_dir, results_dir};
+use crate::coordinator::{specs, FitScheduler, FitSpec, JobEvent};
+use crate::data::{
+    correlated, grouped_correlated, poisson_correlated, probit_correlated, sparse,
+    CorrelatedSpec, Dataset, GroupedSpec, SparseSpec,
+};
+use crate::linalg::parallel::{set_thread_budget, thread_budget};
+use crate::solver::{InnerEngine, SolverOpts};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// One declarative conformance task. Everything needed to build the
+/// dataset and the spec deterministically lives here — two runs of the
+/// same scenario see bit-identical inputs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// unique id (`results/scenarios/<id>.json`)
+    pub id: String,
+    /// quadratic | logistic | poisson | probit | grouped | multitask
+    pub datafit: String,
+    /// l1 | weighted_l1 | l1l2 | mcp | scad | lq | group_lasso |
+    /// weighted_group_lasso | group_mcp | group_scad | l21 | block_mcp
+    pub penalty: String,
+    pub n: usize,
+    pub p: usize,
+    /// design density; 1.0 = dense generator, < 1.0 = CSC generator
+    pub density: f64,
+    pub seed: u64,
+    /// smallest λ/λ_max of the 3-point warm grid
+    pub lambda_ratio: f64,
+    /// declared optimality tolerance (the certificate oracle's bar)
+    pub tol: f64,
+    /// MCP/SCAD shape (γ)
+    pub gamma: f64,
+    /// ℓ_q exponent (0 < q < 1)
+    pub q: f64,
+    /// features per group (grouped datafit)
+    pub group_size: usize,
+    /// number of tasks (multitask datafit)
+    pub n_tasks: usize,
+    /// member of the CI smoke subset (`skglm conform --smoke`)
+    pub smoke: bool,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            id: String::new(),
+            datafit: "quadratic".into(),
+            penalty: "l1".into(),
+            n: 80,
+            p: 120,
+            density: 1.0,
+            seed: 0,
+            lambda_ratio: 0.1,
+            tol: 1e-8,
+            gamma: 3.0,
+            q: 0.5,
+            group_size: 5,
+            n_tasks: 3,
+            smoke: false,
+        }
+    }
+}
+
+impl Scenario {
+    /// Parse one corpus line. Unknown keys fail loudly (a typoed field
+    /// silently reverting to its default would weaken the oracle it was
+    /// meant to tighten); missing optional keys take [`Scenario::default`]s.
+    pub fn from_json(j: &Json) -> std::result::Result<Scenario, String> {
+        let fields = j.fields().ok_or("scenario line is not a JSON object")?;
+        let mut s = Scenario::default();
+        let mut saw_id = false;
+        for (key, val) in fields {
+            let bad = || format!("field {key:?} has the wrong type: {}", val.render());
+            match key.as_str() {
+                "id" => {
+                    s.id = val.as_str().ok_or_else(bad)?.to_string();
+                    saw_id = true;
+                }
+                "datafit" => s.datafit = val.as_str().ok_or_else(bad)?.to_string(),
+                "penalty" => s.penalty = val.as_str().ok_or_else(bad)?.to_string(),
+                "n" => s.n = val.as_usize().ok_or_else(bad)?,
+                "p" => s.p = val.as_usize().ok_or_else(bad)?,
+                "density" => s.density = val.as_f64().ok_or_else(bad)?,
+                "seed" => s.seed = val.as_usize().ok_or_else(bad)? as u64,
+                "lambda_ratio" => s.lambda_ratio = val.as_f64().ok_or_else(bad)?,
+                "tol" => s.tol = val.as_f64().ok_or_else(bad)?,
+                "gamma" => s.gamma = val.as_f64().ok_or_else(bad)?,
+                "q" => s.q = val.as_f64().ok_or_else(bad)?,
+                "group_size" => s.group_size = val.as_usize().ok_or_else(bad)?,
+                "n_tasks" => s.n_tasks = val.as_usize().ok_or_else(bad)?,
+                "smoke" => s.smoke = val.as_bool().ok_or_else(bad)?,
+                other => return Err(format!("unknown scenario field {other:?}")),
+            }
+        }
+        if !saw_id || s.id.is_empty() {
+            return Err("scenario is missing a non-empty \"id\"".into());
+        }
+        if s.n == 0 || s.p == 0 {
+            return Err(format!("{}: n and p must be positive", s.id));
+        }
+        if !(s.lambda_ratio > 0.0 && s.lambda_ratio < 0.5) {
+            return Err(format!("{}: lambda_ratio must be in (0, 0.5)", s.id));
+        }
+        if !(s.tol > 0.0) {
+            return Err(format!("{}: tol must be positive", s.id));
+        }
+        Ok(s)
+    }
+
+    /// The corpus-line form (defaults included, so rendered corpora are
+    /// self-describing).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("id", self.id.as_str())
+            .with("datafit", self.datafit.as_str())
+            .with("penalty", self.penalty.as_str())
+            .with("n", self.n)
+            .with("p", self.p)
+            .with("density", self.density)
+            .with("seed", self.seed)
+            .with("lambda_ratio", self.lambda_ratio)
+            .with("tol", self.tol)
+            .with("gamma", self.gamma)
+            .with("q", self.q)
+            .with("group_size", self.group_size)
+            .with("n_tasks", self.n_tasks)
+            .with("smoke", self.smoke)
+    }
+}
+
+/// Parse a JSONL corpus (one scenario per non-blank line). Errors carry
+/// the 1-based line number; duplicate ids are rejected.
+pub fn parse_corpus(text: &str) -> std::result::Result<Vec<Scenario>, String> {
+    let mut out: Vec<Scenario> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        let s = Scenario::from_json(&j).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        if out.iter().any(|o| o.id == s.id) {
+            return Err(format!("line {}: duplicate scenario id {:?}", lineno + 1, s.id));
+        }
+        out.push(s);
+    }
+    Ok(out)
+}
+
+/// Render a corpus back to JSONL (the canonical `scenarios.jsonl` form).
+pub fn render_corpus(corpus: &[Scenario]) -> String {
+    let mut s = String::new();
+    for scn in corpus {
+        s.push_str(&scn.to_json().render());
+        s.push('\n');
+    }
+    s
+}
+
+/// The compiled-in corpus: ≥ 30 scenarios covering every shipped datafit
+/// (quadratic, logistic, poisson, probit, grouped, multitask) × every
+/// penalty family (ℓ1, weighted ℓ1, ℓ1+ℓ2, MCP, SCAD, ℓ_q, group Lasso,
+/// weighted group Lasso, group MCP, group SCAD, ℓ2,1, block MCP), dense
+/// and sparse designs, several shapes and seeds. `scenarios.jsonl` at the
+/// repo root mirrors this list (a test asserts the two stay in sync).
+pub fn builtin_corpus() -> Vec<Scenario> {
+    let base = Scenario::default;
+    let mut c: Vec<Scenario> = Vec::new();
+
+    // ---- quadratic: every scalar penalty, dense + sparse + shapes ----
+    c.push(Scenario { id: "quad_l1_dense_a".into(), seed: 0, smoke: true, ..base() });
+    c.push(Scenario { id: "quad_l1_dense_b".into(), n: 120, p: 80, seed: 1, lambda_ratio: 0.05, ..base() });
+    c.push(Scenario { id: "quad_l1_tall".into(), n: 300, p: 60, seed: 2, ..base() });
+    c.push(Scenario { id: "quad_l1_sparse".into(), n: 200, p: 400, density: 0.05, seed: 3, smoke: true, ..base() });
+    c.push(Scenario { id: "quad_wl1_dense".into(), penalty: "weighted_l1".into(), seed: 4, smoke: true, ..base() });
+    c.push(Scenario { id: "quad_wl1_sparse".into(), penalty: "weighted_l1".into(), n: 200, p: 400, density: 0.05, seed: 5, ..base() });
+    c.push(Scenario { id: "quad_enet_dense".into(), penalty: "l1l2".into(), seed: 6, ..base() });
+    c.push(Scenario { id: "quad_mcp_dense".into(), penalty: "mcp".into(), seed: 7, smoke: true, ..base() });
+    c.push(Scenario { id: "quad_mcp_sparse".into(), penalty: "mcp".into(), n: 200, p: 400, density: 0.05, seed: 8, ..base() });
+    c.push(Scenario { id: "quad_scad_dense".into(), penalty: "scad".into(), gamma: 3.7, seed: 9, ..base() });
+    c.push(Scenario { id: "quad_scad_wide".into(), penalty: "scad".into(), gamma: 3.7, n: 60, p: 150, seed: 10, ..base() });
+    c.push(Scenario { id: "quad_lq_half".into(), penalty: "lq".into(), q: 0.5, lambda_ratio: 0.2, seed: 11, smoke: true, ..base() });
+    c.push(Scenario { id: "quad_lq_twothirds".into(), penalty: "lq".into(), q: 0.667, lambda_ratio: 0.2, seed: 12, ..base() });
+
+    // ---- logistic (±1 labels) ----
+    c.push(Scenario { id: "logit_l1_dense_a".into(), datafit: "logistic".into(), seed: 13, smoke: true, ..base() });
+    c.push(Scenario { id: "logit_l1_dense_b".into(), datafit: "logistic".into(), n: 120, p: 60, seed: 14, ..base() });
+    c.push(Scenario { id: "logit_l1_sparse".into(), datafit: "logistic".into(), n: 200, p: 400, density: 0.05, seed: 15, ..base() });
+
+    // ---- poisson (counts, prox-Newton topology) ----
+    c.push(Scenario { id: "poisson_l1_a".into(), datafit: "poisson".into(), seed: 16, smoke: true, ..base() });
+    c.push(Scenario { id: "poisson_l1_b".into(), datafit: "poisson".into(), n: 100, p: 50, seed: 17, ..base() });
+
+    // ---- probit (±1 labels, prox-Newton topology) ----
+    c.push(Scenario { id: "probit_l1_a".into(), datafit: "probit".into(), seed: 18, smoke: true, ..base() });
+    c.push(Scenario { id: "probit_l1_b".into(), datafit: "probit".into(), n: 100, p: 50, seed: 19, ..base() });
+
+    // ---- grouped quadratic: every group penalty ----
+    let grp = |id: &str, pen: &str, seed: u64| Scenario {
+        id: id.into(),
+        datafit: "grouped".into(),
+        penalty: pen.into(),
+        n: 90,
+        p: 60,
+        group_size: 5,
+        seed,
+        ..base()
+    };
+    c.push(Scenario { smoke: true, ..grp("group_lasso_a", "group_lasso", 20) });
+    c.push(Scenario { n: 70, p: 48, group_size: 4, ..grp("group_lasso_b", "group_lasso", 21) });
+    c.push(grp("wgroup_lasso_a", "weighted_group_lasso", 22));
+    c.push(Scenario { n: 70, p: 48, group_size: 4, ..grp("wgroup_lasso_b", "weighted_group_lasso", 23) });
+    c.push(Scenario { smoke: true, ..grp("group_mcp_a", "group_mcp", 24) });
+    c.push(grp("group_mcp_b", "group_mcp", 25));
+    c.push(Scenario { gamma: 3.7, ..grp("group_scad_a", "group_scad", 26) });
+    c.push(Scenario { gamma: 3.7, n: 70, p: 48, group_size: 4, ..grp("group_scad_b", "group_scad", 27) });
+
+    // ---- multitask quadratic (task-major y, p×T coefficient rows) ----
+    let mtl = |id: &str, pen: &str, seed: u64| Scenario {
+        id: id.into(),
+        datafit: "multitask".into(),
+        penalty: pen.into(),
+        n: 60,
+        p: 40,
+        n_tasks: 3,
+        seed,
+        ..base()
+    };
+    c.push(Scenario { smoke: true, ..mtl("mtl_l21_a", "l21", 28) });
+    c.push(Scenario { n_tasks: 4, ..mtl("mtl_l21_b", "l21", 29) });
+    c.push(mtl("mtl_mcp_a", "block_mcp", 30));
+    c.push(Scenario { n_tasks: 4, ..mtl("mtl_mcp_b", "block_mcp", 31) });
+
+    debug_assert!(c.len() >= 30, "corpus shrank below the acceptance floor");
+    c
+}
+
+/// Load `scenarios.jsonl` when present, else fall back to the built-in
+/// corpus. Returns the corpus and a tag naming its source.
+pub fn load_corpus(path: Option<&str>) -> Result<(Vec<Scenario>, String)> {
+    let path = path.unwrap_or("scenarios.jsonl");
+    if Path::new(path).exists() {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let corpus = parse_corpus(&text)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))
+            .context("parsing scenario corpus")?;
+        Ok((corpus, path.to_string()))
+    } else {
+        Ok((builtin_corpus(), "builtin".to_string()))
+    }
+}
+
+// ---------------------------------------------------------------------
+// dataset + spec construction
+// ---------------------------------------------------------------------
+
+/// Rebuild the spec freshly per variant run (a `Box<dyn FitSpec>` is
+/// consumed by job submission).
+type SpecFactory = Box<dyn Fn() -> Box<dyn FitSpec>>;
+
+/// Deterministic per-feature ℓ1 weights for weighted-Lasso scenarios:
+/// strictly positive and heterogeneous (cycle 0.5 / 1.0 / 1.5).
+fn feature_weights(p: usize) -> Vec<f64> {
+    (0..p).map(|j| 0.5 + 0.5 * ((j % 3) as f64)).collect()
+}
+
+/// Multitask workload: AR(1) design, shared-row-support `W ∈ R^{p×T}`,
+/// task-major targets `y[t·n + i] = (X w_t)_i + 0.1 ε` (the
+/// [`crate::datafit::multitask::QuadraticMultiTask`] convention).
+fn multitask_dataset(n: usize, p: usize, n_tasks: usize, seed: u64) -> Dataset {
+    let base = correlated(CorrelatedSpec { n, p, rho: 0.5, nnz: 0, snr: 0.0 }, seed);
+    let mut rng = Rng::seed_from_u64(seed ^ 0x5CE1_A210_C04F_084D);
+    let active = (p / 8).max(2).min(p);
+    let mut w = vec![0.0; p * n_tasks]; // row-major p×T
+    for j in 0..active {
+        for t in 0..n_tasks {
+            w[j * n_tasks + t] = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+        }
+    }
+    let mut y = vec![0.0; n * n_tasks];
+    let mut xw = vec![0.0; n];
+    for t in 0..n_tasks {
+        let wt: Vec<f64> = (0..p).map(|j| w[j * n_tasks + t]).collect();
+        base.design.matvec(&wt, &mut xw);
+        for i in 0..n {
+            y[t * n + i] = xw[i] + 0.1 * rng.normal();
+        }
+    }
+    Dataset {
+        name: format!("mtl_{n}x{p}x{n_tasks}_s{seed}"),
+        design: base.design,
+        y,
+        beta_true: Vec::new(),
+    }
+}
+
+/// Build the scenario's dataset and spec factory. `Err` = the (datafit,
+/// penalty) pair is not one this library ships → the runner reports
+/// `outcome: "skip"`.
+fn build_task(s: &Scenario) -> std::result::Result<(Arc<Dataset>, SpecFactory), String> {
+    let dense_spec = CorrelatedSpec {
+        n: s.n,
+        p: s.p,
+        rho: 0.5,
+        nnz: (s.p / 10).max(2).min(s.p),
+        snr: 5.0,
+    };
+    let sparse_spec = |binary: bool| SparseSpec {
+        n: s.n,
+        p: s.p,
+        density: s.density,
+        support_frac: 0.05,
+        snr: 5.0,
+        binary,
+    };
+    let sparse_name = format!("scn_{}", s.id);
+
+    match s.datafit.as_str() {
+        "quadratic" => {
+            let ds = if s.density < 1.0 {
+                sparse(&sparse_name, sparse_spec(false), s.seed)
+            } else {
+                correlated(dense_spec, s.seed)
+            };
+            let fac: SpecFactory = match s.penalty.as_str() {
+                "l1" => Box::new(|| specs::lasso(1.0)),
+                "weighted_l1" => {
+                    let p = s.p;
+                    Box::new(move || specs::weighted_lasso(1.0, feature_weights(p)))
+                }
+                "l1l2" => Box::new(|| specs::elastic_net(1.0, 0.7)),
+                "mcp" => {
+                    let g = s.gamma;
+                    Box::new(move || specs::mcp(1.0, g))
+                }
+                "scad" => {
+                    let g = s.gamma;
+                    Box::new(move || specs::scad(1.0, g))
+                }
+                "lq" => {
+                    let q = s.q;
+                    Box::new(move || specs::lq(1.0, q))
+                }
+                other => return Err(format!("quadratic × {other:?} is not shipped")),
+            };
+            Ok((Arc::new(ds), fac))
+        }
+        "logistic" => {
+            if s.penalty != "l1" {
+                return Err(format!("logistic × {:?} is not shipped", s.penalty));
+            }
+            // probit_correlated's ±1 labels serve logistic too; the
+            // sparse generator has a native binary mode
+            let ds = if s.density < 1.0 {
+                sparse(&sparse_name, sparse_spec(true), s.seed)
+            } else {
+                probit_correlated(dense_spec, s.seed)
+            };
+            Ok((Arc::new(ds), Box::new(|| specs::logistic_l1(1.0))))
+        }
+        "poisson" => {
+            if s.penalty != "l1" {
+                return Err(format!("poisson × {:?} is not shipped", s.penalty));
+            }
+            let ds = poisson_correlated(
+                CorrelatedSpec { snr: 0.0, ..dense_spec },
+                s.seed,
+            );
+            Ok((Arc::new(ds), Box::new(|| specs::poisson_l1(1.0))))
+        }
+        "probit" => {
+            if s.penalty != "l1" {
+                return Err(format!("probit × {:?} is not shipped", s.penalty));
+            }
+            let ds = probit_correlated(dense_spec, s.seed);
+            Ok((Arc::new(ds), Box::new(|| specs::probit_l1(1.0))))
+        }
+        "grouped" => {
+            let gs = s.group_size.clamp(1, s.p);
+            let n_groups = s.p.div_ceil(gs);
+            let (ds, part) = grouped_correlated(
+                GroupedSpec {
+                    n: s.n,
+                    p: s.p,
+                    group_size: gs,
+                    active_groups: (n_groups / 4).max(1),
+                    rho: 0.5,
+                    snr: 8.0,
+                },
+                s.seed,
+            );
+            let fac: SpecFactory = match s.penalty.as_str() {
+                "group_lasso" => {
+                    let part = Arc::clone(&part);
+                    Box::new(move || specs::group_lasso(1.0, Arc::clone(&part)))
+                }
+                "weighted_group_lasso" => {
+                    let part = Arc::clone(&part);
+                    Box::new(move || specs::weighted_group_lasso(1.0, Arc::clone(&part)))
+                }
+                "group_mcp" => {
+                    let (part, g) = (Arc::clone(&part), s.gamma);
+                    Box::new(move || specs::group_mcp(1.0, g, Arc::clone(&part)))
+                }
+                "group_scad" => {
+                    let (part, g) = (Arc::clone(&part), s.gamma);
+                    Box::new(move || specs::group_scad(1.0, g, Arc::clone(&part)))
+                }
+                other => return Err(format!("grouped × {other:?} is not shipped")),
+            };
+            Ok((Arc::new(ds), fac))
+        }
+        "multitask" => {
+            let ds = multitask_dataset(s.n, s.p, s.n_tasks, s.seed);
+            let (p, t) = (s.p, s.n_tasks);
+            let fac: SpecFactory = match s.penalty.as_str() {
+                "l21" => Box::new(move || specs::multitask_l21(1.0, p, t)),
+                "block_mcp" => {
+                    let g = s.gamma;
+                    Box::new(move || specs::multitask_mcp(1.0, g, p, t))
+                }
+                other => return Err(format!("multitask × {other:?} is not shipped")),
+            };
+            Ok((Arc::new(ds), fac))
+        }
+        other => Err(format!("datafit {other:?} is not shipped")),
+    }
+}
+
+// ---------------------------------------------------------------------
+// variant runs
+// ---------------------------------------------------------------------
+
+/// One solved path point as the oracles see it.
+struct PointRec {
+    lambda: f64,
+    objective: f64,
+    beta: Vec<f64>,
+    kkt: f64,
+    converged: bool,
+    certificate: &'static str,
+}
+
+struct PathRun {
+    points: Vec<PointRec>,
+    total_epochs: usize,
+    wall_s: f64,
+}
+
+/// Run one warm path sweep on a **fresh** scheduler (no coefficient
+/// cache carries over between variants — every variant starts from the
+/// same cold state, so engine/thread comparisons are apples-to-apples)
+/// under an explicit kernel thread budget.
+fn run_path_variant(
+    ds: &Arc<Dataset>,
+    make_spec: &dyn Fn() -> Box<dyn FitSpec>,
+    ratios: &[f64],
+    tol: f64,
+    engine: InnerEngine,
+    threads: usize,
+) -> std::result::Result<PathRun, String> {
+    set_thread_budget(threads);
+    let opts = SolverOpts::default().with_tol(tol).with_inner(engine);
+    let mut sched = FitScheduler::start(1);
+    sched.submit_path(Arc::clone(ds), make_spec(), ratios.to_vec(), opts);
+    let drained = drain_one_path(&sched, ratios.len());
+    sched.shutdown();
+    drained
+}
+
+fn drain_one_path(
+    sched: &FitScheduler,
+    n_points: usize,
+) -> std::result::Result<PathRun, String> {
+    let mut recs: Vec<(usize, PointRec)> = Vec::with_capacity(n_points);
+    loop {
+        match sched.events.recv() {
+            Ok(JobEvent::PathPoint(p)) => {
+                recs.push((
+                    p.index,
+                    PointRec {
+                        lambda: p.point.lambda,
+                        objective: p.point.objective,
+                        beta: p.point.beta,
+                        kkt: p.kkt,
+                        converged: p.converged,
+                        certificate: p.certificate.name(),
+                    },
+                ));
+            }
+            Ok(JobEvent::PathDone(s)) => {
+                recs.sort_by_key(|(i, _)| *i);
+                if recs.len() != n_points {
+                    return Err(format!(
+                        "path emitted {} points, expected {n_points}",
+                        recs.len()
+                    ));
+                }
+                return Ok(PathRun {
+                    points: recs.into_iter().map(|(_, r)| r).collect(),
+                    total_epochs: s.total_epochs,
+                    wall_s: s.total_time,
+                });
+            }
+            Ok(JobEvent::Failed { message, .. }) => {
+                return Err(format!("solve panicked on its worker: {message}"))
+            }
+            Ok(JobEvent::FitDone(_)) => return Err("unexpected FitDone event".into()),
+            Err(_) => return Err("scheduler died".into()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// oracles + per-scenario driver
+// ---------------------------------------------------------------------
+
+/// Cross-engine agreement bar for convex scenarios (ISSUE-mandated).
+const ENGINE_TOL: f64 = 1e-10;
+/// Cross-engine objective bar for non-convex scenarios (identical update
+/// order makes engines track each other to rounding; a different
+/// critical point would blow far past this).
+const ENGINE_TOL_NONCONVEX: f64 = 1e-6;
+
+/// The AgentLab-style structured result of one scenario.
+pub struct ScenarioOutcome {
+    pub scenario_id: String,
+    /// "pass" | "fail" | "skip"
+    pub outcome: &'static str,
+    /// baseline objective at the smallest λ (NaN when skipped)
+    pub objective: f64,
+    pub metrics: Json,
+    pub violations: Vec<String>,
+}
+
+impl ScenarioOutcome {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("scenario_id", self.scenario_id.as_str())
+            .with("outcome", self.outcome)
+            .with("objective", self.objective)
+            .with("metrics", self.metrics.clone())
+            .with(
+                "violations",
+                Json::Arr(self.violations.iter().map(|v| Json::Str(v.clone())).collect()),
+            )
+    }
+}
+
+fn rel_dev(a: f64, b: f64) -> f64 {
+    (a - b).abs() / (1.0 + a.abs())
+}
+
+/// Max relative deviation between two runs over (objective, every
+/// coefficient), λ-by-λ.
+fn max_run_dev(a: &PathRun, b: &PathRun) -> f64 {
+    let mut worst = 0.0f64;
+    for (pa, pb) in a.points.iter().zip(b.points.iter()) {
+        worst = worst.max(rel_dev(pa.objective, pb.objective));
+        for (&x, &y) in pa.beta.iter().zip(pb.beta.iter()) {
+            worst = worst.max(rel_dev(x, y));
+        }
+    }
+    worst
+}
+
+fn runs_bit_identical(a: &PathRun, b: &PathRun) -> bool {
+    a.points.len() == b.points.len()
+        && a.points.iter().zip(b.points.iter()).all(|(pa, pb)| {
+            pa.objective.to_bits() == pb.objective.to_bits()
+                && pa.beta.len() == pb.beta.len()
+                && pa
+                    .beta
+                    .iter()
+                    .zip(pb.beta.iter())
+                    .all(|(x, y)| x.to_bits() == y.to_bits())
+        })
+}
+
+/// Run one scenario's full variant plan and check its oracles.
+pub fn run_scenario(s: &Scenario) -> ScenarioOutcome {
+    let (ds, make_spec) = match build_task(s) {
+        Ok(t) => t,
+        Err(reason) => {
+            return ScenarioOutcome {
+                scenario_id: s.id.clone(),
+                outcome: "skip",
+                objective: f64::NAN,
+                metrics: Json::obj().with("reason", reason),
+                violations: Vec::new(),
+            }
+        }
+    };
+    let convex = make_spec().is_convex();
+    // 3-λ geometric-ish grid from 0.5·λ_max down to the declared ratio
+    let ratios = vec![0.5, (0.5 * s.lambda_ratio).sqrt(), s.lambda_ratio];
+    let mut violations: Vec<String> = Vec::new();
+
+    // ---- baseline: residual engine, 1 thread, warm sweep ----
+    let baseline = match run_path_variant(&ds, &make_spec, &ratios, s.tol, InnerEngine::Residual, 1)
+    {
+        Ok(r) => r,
+        Err(e) => {
+            return ScenarioOutcome {
+                scenario_id: s.id.clone(),
+                outcome: "fail",
+                objective: f64::NAN,
+                metrics: Json::obj(),
+                violations: vec![format!("baseline run failed: {e}")],
+            }
+        }
+    };
+    for (i, pt) in baseline.points.iter().enumerate() {
+        if !pt.objective.is_finite() {
+            violations.push(format!("point {i}: non-finite objective {}", pt.objective));
+        }
+        if !(pt.kkt <= s.tol) {
+            violations.push(format!(
+                "point {i} (λ={:.3e}): {} {:.3e} exceeds declared tol {:.1e}",
+                pt.lambda, pt.certificate, pt.kkt, s.tol
+            ));
+        }
+        if !pt.converged {
+            violations.push(format!("point {i}: solver reports converged = false"));
+        }
+    }
+
+    // ---- warm == cold, λ-by-λ (convex scenarios: any start reaches the
+    // same optimum; non-convex fits may legitimately land on different
+    // critical points, so the oracle is convex-gated) ----
+    let mut warm_cold_dev: Option<f64> = None;
+    if convex {
+        let bar = (100.0 * s.tol).max(1e-9);
+        let mut worst = 0.0f64;
+        for (i, &r) in ratios.iter().enumerate() {
+            match run_path_variant(&ds, &make_spec, &[r], s.tol, InnerEngine::Residual, 1) {
+                Ok(cold) => {
+                    let dev = rel_dev(baseline.points[i].objective, cold.points[0].objective);
+                    worst = worst.max(dev);
+                    if !(dev <= bar) {
+                        violations.push(format!(
+                            "warm≠cold at λ-point {i}: objectives {:.12e} vs {:.12e} (rel dev {dev:.3e} > {bar:.1e})",
+                            baseline.points[i].objective, cold.points[0].objective
+                        ));
+                    }
+                }
+                Err(e) => violations.push(format!("cold run at λ-point {i} failed: {e}")),
+            }
+        }
+        warm_cold_dev = Some(worst);
+    }
+
+    // ---- cross-engine agreement (Gram contract: quadratic datafit) ----
+    let mut engine_dev: Option<f64> = None;
+    if s.datafit == "quadratic" {
+        let bar = if convex { ENGINE_TOL } else { ENGINE_TOL_NONCONVEX };
+        let mut worst = 0.0f64;
+        for engine in [InnerEngine::Gram, InnerEngine::Auto] {
+            match run_path_variant(&ds, &make_spec, &ratios, s.tol, engine, 1) {
+                Ok(run) => {
+                    for (i, pt) in run.points.iter().enumerate() {
+                        if !(pt.kkt <= s.tol) {
+                            violations.push(format!(
+                                "{engine:?} engine point {i}: {} {:.3e} exceeds tol {:.1e}",
+                                pt.certificate, pt.kkt, s.tol
+                            ));
+                        }
+                    }
+                    let dev = if convex {
+                        max_run_dev(&baseline, &run)
+                    } else {
+                        // objective-only for non-convex (see ENGINE_TOL_NONCONVEX)
+                        baseline
+                            .points
+                            .iter()
+                            .zip(run.points.iter())
+                            .map(|(a, b)| rel_dev(a.objective, b.objective))
+                            .fold(0.0, f64::max)
+                    };
+                    worst = worst.max(dev);
+                    if !(dev <= bar) {
+                        violations.push(format!(
+                            "{engine:?} engine deviates from residual: max rel dev {dev:.3e} > {bar:.1e}"
+                        ));
+                    }
+                }
+                Err(e) => violations.push(format!("{engine:?} engine run failed: {e}")),
+            }
+        }
+        engine_dev = Some(worst);
+    }
+
+    // ---- thread-count bit-invariance (residual engine; the Auto
+    // dispatcher's cost model is timing-fed, so only the explicit engine
+    // promises bitwise reproducibility) ----
+    let mut thread_bit_identical: Option<bool> = None;
+    match run_path_variant(&ds, &make_spec, &ratios, s.tol, InnerEngine::Residual, 4) {
+        Ok(t4) => {
+            let same = runs_bit_identical(&baseline, &t4);
+            thread_bit_identical = Some(same);
+            if !same {
+                violations.push(
+                    "thread budget 4 changed results bitwise vs budget 1".to_string(),
+                );
+            }
+        }
+        Err(e) => violations.push(format!("4-thread run failed: {e}")),
+    }
+
+    let final_pt = baseline.points.last().expect("baseline has points");
+    let mut metrics = Json::obj()
+        .with("datafit", s.datafit.as_str())
+        .with("penalty", s.penalty.as_str())
+        .with("convex", convex)
+        .with("tol", s.tol)
+        .with("certificate", final_pt.certificate)
+        .with("kkt_final", final_pt.kkt)
+        .with("n_points", baseline.points.len())
+        .with("total_epochs", baseline.total_epochs)
+        .with("wall_s", baseline.wall_s);
+    metrics = match engine_dev {
+        Some(d) => metrics.with("engine_max_dev", d),
+        None => metrics.with("engine_max_dev", Json::Null),
+    };
+    metrics = match thread_bit_identical {
+        Some(b) => metrics.with("thread_bit_identical", b),
+        None => metrics.with("thread_bit_identical", Json::Null),
+    };
+    metrics = match warm_cold_dev {
+        Some(d) => metrics.with("warm_cold_max_dev", d),
+        None => metrics.with("warm_cold_max_dev", Json::Null),
+    };
+
+    ScenarioOutcome {
+        scenario_id: s.id.clone(),
+        outcome: if violations.is_empty() { "pass" } else { "fail" },
+        objective: final_pt.objective,
+        metrics,
+        violations,
+    }
+}
+
+// ---------------------------------------------------------------------
+// corpus driver + result emission
+// ---------------------------------------------------------------------
+
+pub struct ConformReport {
+    pub outcomes: Vec<ScenarioOutcome>,
+    pub source: String,
+}
+
+impl ConformReport {
+    pub fn count(&self, outcome: &str) -> usize {
+        self.outcomes.iter().filter(|o| o.outcome == outcome).count()
+    }
+}
+
+/// Run the corpus (optionally filtered to ids/datafits/penalties
+/// containing `filter`, and/or to the smoke subset). Restores the
+/// caller's kernel thread budget afterwards — variant runs mutate the
+/// global budget.
+pub fn run_corpus(
+    corpus: &[Scenario],
+    filter: Option<&str>,
+    smoke_only: bool,
+    source: &str,
+) -> Result<ConformReport> {
+    let selected: Vec<&Scenario> = corpus
+        .iter()
+        .filter(|s| !smoke_only || s.smoke)
+        .filter(|s| {
+            filter
+                .map(|f| s.id.contains(f) || s.datafit.contains(f) || s.penalty.contains(f))
+                .unwrap_or(true)
+        })
+        .collect();
+    if selected.is_empty() {
+        anyhow::bail!(
+            "no scenarios selected from {source} (filter {filter:?}, smoke_only {smoke_only})"
+        );
+    }
+    let saved_budget = thread_budget();
+    let mut outcomes = Vec::with_capacity(selected.len());
+    for s in selected {
+        let o = run_scenario(s);
+        let wall = o.metrics.get("wall_s").and_then(|j| j.as_f64()).unwrap_or(0.0);
+        eprintln!("[conform] {:<22} {:<4} ({wall:.2}s)", o.scenario_id, o.outcome);
+        for v in &o.violations {
+            eprintln!("[conform]   violation: {v}");
+        }
+        outcomes.push(o);
+    }
+    set_thread_budget(saved_budget);
+    Ok(ConformReport { outcomes, source: source.to_string() })
+}
+
+/// Emit per-scenario JSON files + the `BENCH_scenarios.json` aggregate
+/// (results dir always; repo root only outside `SKGLM_RESULTS`
+/// redirection, the shared BENCH convention).
+pub fn write_report(report: &ConformReport) -> Result<Vec<PathBuf>> {
+    let dir = results_dir().join("scenarios");
+    ensure_dir(&dir)?;
+    let mut written = Vec::new();
+    for o in &report.outcomes {
+        let path = dir.join(format!("{}.json", o.scenario_id));
+        std::fs::write(&path, o.to_json().render())
+            .with_context(|| format!("writing {}", path.display()))?;
+        written.push(path);
+    }
+    let agg = Json::obj()
+        .with("experiment", "scenarios")
+        .with("source", report.source.as_str())
+        .with("total", report.outcomes.len())
+        .with("pass", report.count("pass"))
+        .with("fail", report.count("fail"))
+        .with("skip", report.count("skip"))
+        .with(
+            "scenarios",
+            Json::Arr(report.outcomes.iter().map(|o| o.to_json()).collect()),
+        );
+    let agg_path = dir.join("BENCH_scenarios.json");
+    std::fs::write(&agg_path, agg.render())
+        .with_context(|| format!("writing {}", agg_path.display()))?;
+    written.push(agg_path);
+    if std::env::var_os("SKGLM_RESULTS").is_none() {
+        let root = PathBuf::from("BENCH_scenarios.json");
+        std::fs::write(&root, agg.render())
+            .with_context(|| format!("writing {}", root.display()))?;
+        written.push(root);
+    }
+    Ok(written)
+}
+
+/// The `skglm conform` / `exp scenarios` entry point: load → run → emit →
+/// **fail** (a real error, so the CI gate trips) when any scenario fails
+/// its oracles.
+pub fn conform(corpus_path: Option<&str>, filter: Option<&str>, smoke_only: bool) -> Result<Vec<PathBuf>> {
+    let (corpus, source) = load_corpus(corpus_path)?;
+    let report = run_corpus(&corpus, filter, smoke_only, &source)?;
+    let written = write_report(&report)?;
+    let (pass, fail, skip) =
+        (report.count("pass"), report.count("fail"), report.count("skip"));
+    eprintln!(
+        "[conform] {} scenarios from {}: {pass} pass / {fail} fail / {skip} skip",
+        report.outcomes.len(),
+        report.source
+    );
+    if fail > 0 {
+        anyhow::bail!("{fail} scenario(s) failed their conformance oracles");
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: no solver runs here — [`run_scenario`] mutates the global
+    // kernel thread budget, which must not race the other unit tests in
+    // this binary. The end-to-end conform run lives in
+    // tests/integration_scenarios.rs (its own process).
+
+    #[test]
+    fn builtin_corpus_meets_the_acceptance_floor() {
+        let c = builtin_corpus();
+        assert!(c.len() >= 30, "corpus has only {} scenarios", c.len());
+        // unique ids
+        let mut ids: Vec<&str> = c.iter().map(|s| s.id.as_str()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), c.len(), "duplicate scenario ids");
+        // every shipped datafit appears
+        for df in ["quadratic", "logistic", "poisson", "probit", "grouped", "multitask"] {
+            assert!(c.iter().any(|s| s.datafit == df), "no {df} scenario");
+        }
+        // every shipped penalty family appears
+        for pen in [
+            "l1", "weighted_l1", "l1l2", "mcp", "scad", "lq", "group_lasso",
+            "weighted_group_lasso", "group_mcp", "group_scad", "l21", "block_mcp",
+        ] {
+            assert!(c.iter().any(|s| s.penalty == pen), "no {pen} scenario");
+        }
+        // the smoke subset covers every datafit (the CI gate's floor)
+        for df in ["quadratic", "logistic", "poisson", "probit", "grouped", "multitask"] {
+            assert!(c.iter().any(|s| s.smoke && s.datafit == df), "no smoke {df} scenario");
+        }
+        // both densities appear
+        assert!(c.iter().any(|s| s.density < 1.0));
+        // every scenario's (datafit, penalty) pair actually builds
+        for s in &c {
+            assert!(build_task(s).is_ok(), "{}: task does not build", s.id);
+        }
+    }
+
+    #[test]
+    fn corpus_round_trips_through_jsonl() {
+        let c = builtin_corpus();
+        let text = render_corpus(&c);
+        let parsed = parse_corpus(&text).unwrap();
+        assert_eq!(parsed, c);
+    }
+
+    #[test]
+    fn parse_rejects_bad_corpus_lines() {
+        assert!(parse_corpus("not json\n").is_err());
+        assert!(parse_corpus("[1,2]\n").is_err(), "non-object line must fail");
+        assert!(parse_corpus("{\"datafit\":\"quadratic\"}\n").is_err(), "missing id");
+        assert!(
+            parse_corpus("{\"id\":\"x\",\"frobnicate\":1}\n").is_err(),
+            "unknown field must fail loudly"
+        );
+        assert!(
+            parse_corpus("{\"id\":\"a\"}\n{\"id\":\"a\"}\n").is_err(),
+            "duplicate ids must fail"
+        );
+        assert!(
+            parse_corpus("{\"id\":\"a\",\"lambda_ratio\":0.9}\n").is_err(),
+            "ratio above the warm anchor must fail"
+        );
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields_and_blank_lines_skip() {
+        let c = parse_corpus("\n{\"id\":\"tiny\"}\n\n").unwrap();
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0], Scenario { id: "tiny".into(), ..Scenario::default() });
+    }
+
+    #[test]
+    fn unshipped_pairs_are_skips_not_failures() {
+        let s = Scenario {
+            id: "future".into(),
+            datafit: "cox".into(),
+            ..Scenario::default()
+        };
+        assert!(build_task(&s).is_err());
+        let o = run_scenario(&s);
+        assert_eq!(o.outcome, "skip");
+        assert!(o.violations.is_empty());
+        assert!(o.objective.is_nan());
+    }
+}

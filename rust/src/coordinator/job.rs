@@ -396,6 +396,7 @@ impl<D: BlockDatafit + 'static, B: BlockPenalty + 'static> FitSpec for BlockSpec
             beta: result.v,
             objective: result.objective,
             kkt: result.kkt,
+            certificate: result.certificate,
             n_outer: result.n_outer,
             n_epochs: result.n_epochs,
             converged: result.converged,
@@ -421,6 +422,33 @@ pub mod specs {
     pub fn lasso(lambda: f64) -> Box<dyn FitSpec> {
         let make: MakePenalty<L1> = Arc::new(L1::new);
         GlmSpec::new(Quadratic::new(), "l1", lambda, false, make, quad_lambda_max()).boxed()
+    }
+
+    /// Weighted Lasso: quadratic × per-feature-weighted ℓ1
+    /// (`Σ_j λ w_j |β_j|`, weights ≥ 0; `w_j = 0` leaves feature j
+    /// unpenalized). λ_max is taken over the penalized features only:
+    /// `max_{j: w_j>0} |X_jᵀy| / (n w_j)` — with any zero weight the
+    /// solution at λ_max is not identically zero (unpenalized features
+    /// stay free), matching the weighted-ℓ1 KKT conditions.
+    pub fn weighted_lasso(lambda: f64, weights: Vec<f64>) -> Box<dyn FitSpec> {
+        use crate::penalty::WeightedL1;
+        let shared = Arc::new(weights);
+        let for_make = Arc::clone(&shared);
+        let make: MakePenalty<WeightedL1> =
+            Arc::new(move |l| WeightedL1::new(l, for_make.as_ref().clone()));
+        let for_lmax = Arc::clone(&shared);
+        let lmax: LambdaMax = Arc::new(move |d: &Design, y: &[f64]| {
+            assert_eq!(for_lmax.len(), d.ncols(), "weights must match the design width");
+            let n = d.nrows() as f64;
+            let mut xty = vec![0.0; d.ncols()];
+            d.matvec_t(y, &mut xty);
+            xty.iter()
+                .zip(for_lmax.iter())
+                .filter(|(_, &w)| w > 0.0)
+                .map(|(g, &w)| g.abs() / (n * w))
+                .fold(0.0, f64::max)
+        });
+        GlmSpec::new(Quadratic::new(), "weighted_l1", lambda, false, make, lmax).boxed()
     }
 
     /// Elastic net: quadratic × (ρ‖·‖₁ + (1−ρ)‖·‖²/2).

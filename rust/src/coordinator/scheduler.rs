@@ -60,6 +60,12 @@ pub struct PathPointOutcome {
     /// features certified inactive by the gap-safe pass at this λ
     pub n_screened: usize,
     pub wall_time: f64,
+    /// the solve's final optimality violation at this λ (`certificate`
+    /// names the metric) — conformance oracles check it against the
+    /// declared tolerance instead of re-deriving KKT residuals
+    pub kkt: f64,
+    pub converged: bool,
+    pub certificate: crate::solver::Certificate,
 }
 
 /// Terminal event of a path job.
@@ -408,6 +414,9 @@ fn run_path(
             epochs: result.n_epochs,
             n_screened,
             wall_time: pt0.elapsed().as_secs_f64(),
+            kkt: result.kkt,
+            converged: result.converged,
+            certificate: result.certificate,
         }));
     }
 

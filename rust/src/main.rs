@@ -4,6 +4,7 @@
 //! skglm solve   --dataset rcv1 --penalty l1 --lambda-ratio 0.01 [--engine pjrt]
 //! skglm path    --penalty mcp --points 20   # warm-started sweep via the scheduler
 //! skglm exp     <fig1..fig10|table1|table2|pathsched|all> [--full]
+//! skglm conform [--smoke] [--filter l1]  # scenario conformance corpus
 //! skglm serve   --workers 4         # demo of the path-aware fit scheduler
 //! skglm info                        # capability table + runtime probe
 //! ```
@@ -41,6 +42,7 @@ fn dispatch(args: &mut Args) -> Result<()> {
         Some("path") => cmd_path(args),
         Some("cv") => cmd_cv(args),
         Some("exp") => cmd_exp(args),
+        Some("conform") => cmd_conform(args),
         Some("serve") => cmd_serve(args),
         Some("synth") => cmd_synth(args),
         Some("info") => cmd_info(args),
@@ -64,7 +66,8 @@ const USAGE: &str = "usage:
               [--inner auto|residual|gram] \\
               [--points 20] [--min-ratio 1e-3] [--gamma 3.0] [--small] [--seed 42]
   skglm cv    --dataset <name> [--folds 5] [--points 15] [--workers 4] [--small]
-  skglm exp   <fig1..fig10|table1|table2|pathsched|kernels|glms|groups|gram|summary|all> [--full]
+  skglm exp   <fig1..fig10|table1|table2|pathsched|kernels|glms|groups|gram|scenarios|summary|all> [--full]
+  skglm conform [--smoke] [--filter <substr>] [--corpus <scenarios.jsonl>]
   skglm serve [--workers 4] [--lambdas 8]
   skglm synth --dataset <rcv1|news20|...|fig1> --out <file.svm> [--small]
   skglm info
@@ -78,7 +81,13 @@ const USAGE: &str = "usage:
   non-quadratic datafits always run residual). every subcommand accepts
   --threads N (kernel + worker thread budget; overrides the SKGLM_THREADS
   env var; defaults to hardware parallelism). `exp summary` rolls every
-  repo-root BENCH_*.json into BENCH_SUMMARY.json";
+  repo-root BENCH_*.json into BENCH_SUMMARY.json. `conform` runs the
+  declarative scenario conformance corpus (scenarios.jsonl at the repo
+  root when present, else the built-in corpus) — every datafit × penalty
+  through the real scheduler, cross-engine / thread-count / warm-vs-cold
+  oracles per scenario — and exits non-zero when any scenario fails;
+  --smoke runs the CI gate subset, --filter selects scenarios whose
+  id/datafit/penalty contains the substring";
 
 /// Load `name` as a libsvm file when it names one on disk.
 fn try_load_libsvm(name: &str) -> Option<Result<Dataset>> {
@@ -504,6 +513,19 @@ fn cmd_exp(args: &mut Args) -> Result<()> {
     let scale = if args.has("full") { Scale::Full } else { Scale::Smoke };
     args.finish()?;
     let outputs = run_experiment(&name, scale)?;
+    for p in outputs {
+        println!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_conform(args: &mut Args) -> Result<()> {
+    let corpus = args.get("corpus");
+    let filter = args.get("filter");
+    let smoke = args.has("smoke");
+    args.finish()?;
+    let outputs =
+        skglm::bench::scenario::conform(corpus.as_deref(), filter.as_deref(), smoke)?;
     for p in outputs {
         println!("wrote {}", p.display());
     }

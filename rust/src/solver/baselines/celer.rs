@@ -39,6 +39,8 @@ pub fn solve_celer(
         beta: Vec::new(),
         objective: f64::NAN,
         kkt: f64::NAN,
+        // celer stops on (and finally reports) the Lasso duality gap
+        certificate: crate::solver::skglm::Certificate::DualityGap,
         n_outer: 0,
         n_epochs: 0,
         converged: false,

@@ -32,6 +32,7 @@ pub fn solve_fireworks<D: Datafit, P: Penalty>(
         beta: Vec::new(),
         objective: f64::NAN,
         kkt: f64::NAN,
+        certificate: crate::solver::skglm::Certificate::Stationarity,
         n_outer: 0,
         n_epochs: 0,
         converged: false,

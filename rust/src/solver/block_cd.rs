@@ -118,8 +118,11 @@ pub struct GroupScreenCfg {
 pub struct BlockFitResult {
     pub v: Vec<f64>,
     pub objective: f64,
-    /// final max per-block optimality violation
+    /// final max per-block optimality violation (`certificate` names the
+    /// metric — always block stationarity for this engine)
     pub kkt: f64,
+    /// which optimality metric `kkt` is
+    pub certificate: crate::solver::skglm::Certificate,
     pub n_outer: usize,
     pub n_epochs: usize,
     pub converged: bool,
@@ -608,7 +611,8 @@ pub fn solve_blocks<D: BlockDatafit, B: BlockPenalty>(
     opts: &SolverOpts,
     v0: Option<&[f64]>,
 ) -> BlockFitResult {
-    let mut state = ContinuationState { beta: v0.map(|v| v.to_vec()), ws_size: None };
+    let mut state =
+        ContinuationState { beta: v0.map(|v| v.to_vec()), ..ContinuationState::default() };
     solve_blocks_continued(design, y, part, datafit, penalty, opts, &mut state, None, None)
 }
 
@@ -659,6 +663,7 @@ pub fn solve_blocks_continued<D: BlockDatafit, B: BlockPenalty>(
         v,
         objective: out.objective,
         kkt: out.kkt,
+        certificate: crate::solver::skglm::Certificate::Stationarity,
         n_outer: out.n_outer,
         n_epochs: out.n_epochs,
         converged: out.converged,

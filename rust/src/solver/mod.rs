@@ -28,8 +28,8 @@ pub mod skglm;
 pub use gram::{gram_inner_solver, EngineDispatch, InnerEngine};
 pub use inner::InnerProfile;
 pub use skglm::{
-    solve, solve_continued, solve_prepared, ContinuationState, FitResult, GradEngine,
-    HistoryPoint, SolverOpts,
+    solve, solve_continued, solve_prepared, Certificate, ContinuationState, FitResult,
+    GradEngine, HistoryPoint, SolverOpts,
 };
 pub use block_cd::{
     block_lambda_max_for, solve_blocks, solve_blocks_continued, BlockDatafit, BlockFitResult,

@@ -183,6 +183,7 @@ pub fn solve_prox_newton_prepared<D: Datafit, P: Penalty>(
         beta: Vec::new(),
         objective: f64::NAN,
         kkt: f64::NAN,
+        certificate: super::skglm::Certificate::Stationarity,
         n_outer: 0,
         n_epochs: 0,
         converged: false,

@@ -214,6 +214,8 @@ pub fn solve_lasso_screened_warm_with(
         beta: coords.beta,
         objective: out.objective,
         kkt: out.kkt,
+        // ScreenedLassoCoords::final_kkt is the Lasso duality gap
+        certificate: crate::solver::skglm::Certificate::DualityGap,
         n_outer: out.n_outer,
         n_epochs: out.n_epochs,
         converged: out.converged,

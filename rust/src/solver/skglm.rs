@@ -109,6 +109,33 @@ impl SolverOpts {
     }
 }
 
+/// What a fit result's final `kkt` field measures — the optimality
+/// certificate the solver actually computed, exposed so downstream
+/// oracles (the scenario conformance runner, benchmark gates) can check
+/// `kkt ≤ tol` against the declared tolerance without re-deriving which
+/// metric a given solve path reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Certificate {
+    /// Max distance from `−∇f(β)` to `∂g(β)` over non-excluded blocks —
+    /// the working-set subdifferential metric (valid for convex and
+    /// non-convex penalties alike).
+    #[default]
+    Stationarity,
+    /// The Lasso duality gap (objective-scale): reported by the gap-safe
+    /// screened fast path and the celer baseline. Bounds suboptimality
+    /// directly.
+    DualityGap,
+}
+
+impl Certificate {
+    pub fn name(self) -> &'static str {
+        match self {
+            Certificate::Stationarity => "stationarity",
+            Certificate::DualityGap => "duality_gap",
+        }
+    }
+}
+
 /// One point of the convergence trace.
 #[derive(Clone, Debug)]
 pub struct HistoryPoint {
@@ -125,8 +152,10 @@ pub struct HistoryPoint {
 pub struct FitResult {
     pub beta: Vec<f64>,
     pub objective: f64,
-    /// final max optimality violation
+    /// final max optimality violation (see `certificate` for the metric)
     pub kkt: f64,
+    /// which optimality metric `kkt` is (stationarity vs duality gap)
+    pub certificate: Certificate,
     pub n_outer: usize,
     pub n_epochs: usize,
     pub converged: bool,
@@ -311,6 +340,7 @@ pub fn solve_prepared<D: Datafit, P: Penalty>(
         beta: coords.beta,
         objective: out.objective,
         kkt: out.kkt,
+        certificate: Certificate::Stationarity,
         n_outer: out.n_outer,
         n_epochs: out.n_epochs,
         converged: out.converged,

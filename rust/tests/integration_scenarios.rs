@@ -1,0 +1,91 @@
+//! Integration: the scenario conformance subsystem end-to-end — the CI
+//! smoke subset runs through `conform()` against a redirected results
+//! dir, and the repo-root `scenarios.jsonl` corpus is proven to stay in
+//! sync with the compiled-in fallback.
+//!
+//! The conform run lives in ONE test fn: it mutates process-global state
+//! (the kernel thread budget via each variant run, `SKGLM_RESULTS` for
+//! result redirection), so it must not race sibling tests. The corpus
+//! cross-checks are pure parsing and may run in parallel with it.
+
+use skglm::bench::scenario::{builtin_corpus, conform, parse_corpus};
+use skglm::util::json::Json;
+
+fn repo_root_corpus() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../scenarios.jsonl");
+    std::fs::read_to_string(path).unwrap_or_else(|e| panic!("reading {path}: {e}"))
+}
+
+#[test]
+fn repo_corpus_file_matches_builtin_corpus() {
+    let parsed = parse_corpus(&repo_root_corpus()).expect("scenarios.jsonl must parse");
+    let builtin = builtin_corpus();
+    assert_eq!(
+        parsed.len(),
+        builtin.len(),
+        "scenarios.jsonl and builtin_corpus() drifted apart (counts differ)"
+    );
+    for (file, code) in parsed.iter().zip(builtin.iter()) {
+        assert_eq!(file, code, "scenario {:?} differs between file and code", code.id);
+    }
+}
+
+#[test]
+fn corpus_meets_the_issue_floor() {
+    let c = builtin_corpus();
+    assert!(c.len() >= 30, "only {} scenarios", c.len());
+    let smoke: Vec<_> = c.iter().filter(|s| s.smoke).collect();
+    assert!(smoke.len() >= 6, "smoke subset too small to gate CI: {}", smoke.len());
+}
+
+#[test]
+fn conform_smoke_runs_green_and_emits_structured_results() {
+    // redirect results away from the repo root (also suppresses the
+    // repo-root BENCH_scenarios.json copy, per the BENCH convention)
+    let tmp = std::env::temp_dir().join(format!("skglm_conform_{}", std::process::id()));
+    std::env::set_var("SKGLM_RESULTS", &tmp);
+
+    let written = conform(None, None, true).expect("smoke conformance subset must pass");
+
+    // one JSON per smoke scenario + the aggregate, all under the redirect
+    let n_smoke = builtin_corpus().iter().filter(|s| s.smoke).count();
+    assert_eq!(written.len(), n_smoke + 1, "{written:?}");
+    for p in &written {
+        assert!(p.starts_with(&tmp), "{} escaped the results redirect", p.display());
+        assert!(p.exists(), "{}", p.display());
+    }
+
+    // the aggregate is a valid AgentLab-style report: counts + per-row
+    // scenario_id / outcome / objective / metrics / violations
+    let agg_path = tmp.join("scenarios").join("BENCH_scenarios.json");
+    let agg = Json::parse(&std::fs::read_to_string(&agg_path).unwrap()).unwrap();
+    assert_eq!(agg.get("total").and_then(Json::as_usize), Some(n_smoke));
+    assert_eq!(agg.get("fail").and_then(Json::as_usize), Some(0));
+    let rows = agg.get("scenarios").and_then(Json::as_arr).expect("scenarios array");
+    assert_eq!(rows.len(), n_smoke);
+    for row in rows {
+        let id = row.get("scenario_id").and_then(Json::as_str).expect("scenario_id");
+        assert_eq!(row.get("outcome").and_then(Json::as_str), Some("pass"), "{id}");
+        assert!(
+            row.get("objective").and_then(Json::as_f64).map(f64::is_finite).unwrap_or(false),
+            "{id}: objective must be finite"
+        );
+        let metrics = row.get("metrics").expect("metrics object");
+        assert!(
+            metrics.get("kkt_final").and_then(Json::as_f64).is_some(),
+            "{id}: kkt_final missing"
+        );
+        assert!(
+            metrics.get("certificate").and_then(Json::as_str).is_some(),
+            "{id}: certificate missing"
+        );
+        assert_eq!(
+            row.get("violations").and_then(Json::as_arr).map(|a| a.len()),
+            Some(0),
+            "{id}: passing scenario must have no violations"
+        );
+    }
+
+    std::env::remove_var("SKGLM_RESULTS");
+    let _ = std::fs::remove_dir_all(&tmp);
+}

@@ -1,0 +1,171 @@
+//! Integration: every `coordinator::specs::*` constructor round-trips
+//! through the real scheduler — one `Job::Fit` at λ_max/5 and one 3-λ
+//! `Job::Path` each — without panicking on a worker, and returns finite
+//! objectives with its declared metadata intact. This is the
+//! constructor-level complement to the scenario conformance corpus
+//! (`skglm conform`): the corpus certifies solver quality per
+//! (datafit × penalty); this test certifies that *every* public spec
+//! constructor is schedulable at all.
+
+use skglm::coordinator::{specs, FitScheduler, FitSpec, JobEvent};
+use skglm::data::{
+    correlated, grouped_correlated, poisson_correlated, probit_correlated, CorrelatedSpec,
+    Dataset, GroupedSpec,
+};
+use skglm::solver::SolverOpts;
+use std::sync::Arc;
+
+const RATIOS: [f64; 3] = [0.5, 0.25, 0.1];
+
+fn quad_dataset(seed: u64) -> Arc<Dataset> {
+    Arc::new(correlated(CorrelatedSpec { n: 60, p: 90, rho: 0.5, nnz: 8, snr: 10.0 }, seed))
+}
+
+/// Multitask targets in the task-major layout (`y[t·n + i]`): each task
+/// regresses on the same design with a sign-flipped planted signal.
+fn multitask_dataset(n: usize, p: usize, n_tasks: usize, seed: u64) -> Arc<Dataset> {
+    let base = correlated(CorrelatedSpec { n, p, rho: 0.5, nnz: 6, snr: 10.0 }, seed);
+    let mut y = vec![0.0; n * n_tasks];
+    let mut xb = vec![0.0; n];
+    for t in 0..n_tasks {
+        let sign = if t % 2 == 0 { 1.0 } else { -1.0 };
+        let w: Vec<f64> = base.beta_true.iter().map(|&b| sign * b).collect();
+        base.design.matvec(&w, &mut xb);
+        for i in 0..n {
+            y[t * n + i] = xb[i];
+        }
+    }
+    Arc::new(Dataset {
+        name: format!("specs_mtl_{seed}"),
+        design: base.design,
+        y,
+        beta_true: Vec::new(),
+    })
+}
+
+/// Submit one single fit (at λ_max/5) + one 3-λ path for the spec and
+/// assert both complete with finite objectives and no worker failure.
+fn roundtrip(name: &str, ds: &Arc<Dataset>, make: &dyn Fn(f64) -> Box<dyn FitSpec>) {
+    let proto = make(1.0);
+    let lam_max = proto.lambda_max(&ds.design, &ds.y);
+    assert!(
+        lam_max.is_finite() && lam_max > 0.0,
+        "{name}: lambda_max = {lam_max} is not a usable anchor"
+    );
+
+    let opts = SolverOpts::default().with_tol(1e-6);
+    let mut sched = FitScheduler::start(2);
+    let fit_job = sched.submit_fit(Arc::clone(ds), make(lam_max / 5.0), opts.clone());
+    let path_job = sched.submit_path(Arc::clone(ds), make(1.0), RATIOS.to_vec(), opts);
+
+    // terminal events: FitDone + PathDone (a Failed in either slot is a
+    // hard failure, reported with its original panic message)
+    let mut fit_done = false;
+    let mut path_points = 0usize;
+    let mut path_done = false;
+    while !(fit_done && path_done) {
+        match sched.events.recv().expect("scheduler died") {
+            JobEvent::FitDone(o) => {
+                assert_eq!(o.job_id, fit_job, "{name}: unexpected fit job id");
+                assert!(
+                    o.result.objective.is_finite(),
+                    "{name}: single fit returned objective {}",
+                    o.result.objective
+                );
+                fit_done = true;
+            }
+            JobEvent::PathPoint(p) => {
+                assert_eq!(p.job_id, path_job);
+                assert!(
+                    p.point.objective.is_finite(),
+                    "{name}: path point {} returned objective {}",
+                    p.index,
+                    p.point.objective
+                );
+                path_points += 1;
+            }
+            JobEvent::PathDone(s) => {
+                assert_eq!(s.job_id, path_job);
+                path_done = true;
+            }
+            JobEvent::Failed { job_id, message } => {
+                panic!("{name}: job {job_id} panicked on its worker: {message}")
+            }
+        }
+    }
+    sched.shutdown();
+    assert_eq!(path_points, RATIOS.len(), "{name}: path dropped points");
+}
+
+#[test]
+fn every_scalar_quadratic_spec_is_schedulable() {
+    let ds = quad_dataset(3);
+    let p = ds.design.ncols();
+    let cases: Vec<(&str, Box<dyn Fn(f64) -> Box<dyn FitSpec>>)> = vec![
+        ("lasso", Box::new(specs::lasso)),
+        (
+            "weighted_lasso",
+            Box::new(move |l| {
+                specs::weighted_lasso(l, (0..p).map(|j| 0.5 + 0.5 * ((j % 3) as f64)).collect())
+            }),
+        ),
+        ("elastic_net", Box::new(|l| specs::elastic_net(l, 0.7))),
+        ("mcp", Box::new(|l| specs::mcp(l, 3.0))),
+        ("scad", Box::new(|l| specs::scad(l, 3.7))),
+        ("lq", Box::new(|l| specs::lq(l, 0.5))),
+    ];
+    for (name, make) in &cases {
+        roundtrip(name, &ds, make.as_ref());
+    }
+}
+
+#[test]
+fn every_glm_spec_is_schedulable() {
+    let spec = CorrelatedSpec { n: 60, p: 90, rho: 0.5, nnz: 8, snr: 10.0 };
+    let logit = Arc::new(probit_correlated(spec, 5));
+    roundtrip("logistic_l1", &logit, &specs::logistic_l1);
+
+    let pois = Arc::new(poisson_correlated(CorrelatedSpec { snr: 0.0, ..spec }, 6));
+    roundtrip("poisson_l1", &pois, &specs::poisson_l1);
+
+    let prob = Arc::new(probit_correlated(spec, 7));
+    roundtrip("probit_l1", &prob, &specs::probit_l1);
+}
+
+#[test]
+fn every_group_spec_is_schedulable() {
+    let (ds, part) = grouped_correlated(
+        GroupedSpec { n: 80, p: 60, group_size: 5, active_groups: 3, rho: 0.5, snr: 10.0 },
+        9,
+    );
+    let ds = Arc::new(ds);
+    let cases: Vec<(&str, Box<dyn Fn(f64) -> Box<dyn FitSpec>>)> = vec![
+        ("group_lasso", {
+            let part = Arc::clone(&part);
+            Box::new(move |l| specs::group_lasso(l, Arc::clone(&part)))
+        }),
+        ("weighted_group_lasso", {
+            let part = Arc::clone(&part);
+            Box::new(move |l| specs::weighted_group_lasso(l, Arc::clone(&part)))
+        }),
+        ("group_mcp", {
+            let part = Arc::clone(&part);
+            Box::new(move |l| specs::group_mcp(l, 3.0, Arc::clone(&part)))
+        }),
+        ("group_scad", {
+            let part = Arc::clone(&part);
+            Box::new(move |l| specs::group_scad(l, 3.7, Arc::clone(&part)))
+        }),
+    ];
+    for (name, make) in &cases {
+        roundtrip(name, &ds, make.as_ref());
+    }
+}
+
+#[test]
+fn every_multitask_spec_is_schedulable() {
+    let (n, p, n_tasks) = (50, 30, 3);
+    let ds = multitask_dataset(n, p, n_tasks, 13);
+    roundtrip("multitask_l21", &ds, &|l| specs::multitask_l21(l, p, n_tasks));
+    roundtrip("multitask_mcp", &ds, &|l| specs::multitask_mcp(l, 3.0, p, n_tasks));
+}

@@ -672,3 +672,85 @@ fn prop_group_prox_trivial_partition_equals_scalar_prox() {
         },
     );
 }
+
+/// Subgradient inclusion: `x = prox_{step·g}(v)` is optimal for
+/// `½(x−v)² + step·g(x)`, so `(v−x)/step ∈ ∂g(x)` — equivalently the
+/// penalty's own score of the point must vanish:
+/// `subdiff_distance(x, (x−v)/step) ≈ 0` (it measures
+/// `dist(−grad, ∂g(x))`, and here `−grad = (v−x)/step`). This ties every
+/// scalar penalty's closed-form prox to its hand-derived subdifferential
+/// — a sign error in either one breaks the identity. ℓ_q is checked only
+/// away from 0 (`subdiff_distance` is defined as 0 there; the solver
+/// scores ℓ_q by the fixed-point violation instead, see
+/// `Penalty::use_cd_score`).
+#[test]
+fn prop_prox_satisfies_subgradient_inclusion_all_penalties() {
+    use skglm::penalty::WeightedL1;
+
+    #[derive(Debug, Clone)]
+    struct Probe {
+        v: f64,
+        step: f64,
+        lam: f64,
+        /// margins above each penalty's validity floor (MCP: γ > step;
+        /// SCAD: γ > 1 + step)
+        gamma_margin: f64,
+        q: f64,
+        weight: f64,
+    }
+    check(
+        29,
+        CASES,
+        |rng: &mut Rng| Probe {
+            v: rng.uniform_range(-10.0, 10.0),
+            step: rng.uniform_range(0.01, 2.0),
+            lam: rng.uniform_range(0.0, 2.0),
+            gamma_margin: rng.uniform_range(0.5, 3.5),
+            q: rng.uniform_range(0.3, 0.9),
+            // exercise w = 0 (unpenalized feature) on ~1/5 of cases
+            weight: if rng.bernoulli(0.2) { 0.0 } else { rng.uniform_range(0.1, 3.0) },
+        },
+        |pr| {
+            // the score is a distance in gradient units ≈ λ/step scale;
+            // closed forms are exact, so only rounding headroom is needed
+            let tol = 1e-8 * (1.0 + pr.lam) * (1.0 + 1.0 / pr.step);
+            let run = |name: &str, prox: &dyn Fn(f64, f64) -> f64, score: &dyn Fn(f64, f64) -> f64, skip_at_zero: bool| {
+                let x = prox(pr.v, pr.step);
+                if skip_at_zero && x == 0.0 {
+                    return Ok(());
+                }
+                let grad = (x - pr.v) / pr.step; // so −grad = (v−x)/step
+                let d = score(x, grad);
+                ensure(
+                    d <= tol,
+                    format!(
+                        "{name}: prox({}, {}) = {x} violates subgradient inclusion: dist {d:.3e} > {tol:.3e}",
+                        pr.v, pr.step
+                    ),
+                )
+            };
+
+            let p = L1::new(pr.lam);
+            run("l1", &|v, s| p.prox(v, s, 0), &|x, g| p.subdiff_distance(x, g, 0), false)?;
+
+            let p = WeightedL1::new(pr.lam, vec![pr.weight]);
+            run("weighted_l1", &|v, s| p.prox(v, s, 0), &|x, g| p.subdiff_distance(x, g, 0), false)?;
+
+            let p = L1L2::new(pr.lam, 0.5);
+            run("enet", &|v, s| p.prox(v, s, 0), &|x, g| p.subdiff_distance(x, g, 0), false)?;
+
+            let p = Mcp::new(pr.lam, pr.step + pr.gamma_margin);
+            run("mcp", &|v, s| p.prox(v, s, 0), &|x, g| p.subdiff_distance(x, g, 0), false)?;
+
+            // SCAD needs both the constructor floor (γ > 2) and the
+            // prox-regime floor (γ > 1 + step)
+            let p = Scad::new(pr.lam, 2.0_f64.max(1.0 + pr.step) + pr.gamma_margin);
+            run("scad", &|v, s| p.prox(v, s, 0), &|x, g| p.subdiff_distance(x, g, 0), false)?;
+
+            let p = Lq::new(pr.lam, pr.q);
+            run("lq", &|v, s| p.prox(v, s, 0), &|x, g| p.subdiff_distance(x, g, 0), true)?;
+
+            Ok(())
+        },
+    );
+}
