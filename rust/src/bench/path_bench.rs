@@ -67,7 +67,7 @@ pub fn compare_cold_vs_warm(
     let cold_time = t0.elapsed().as_secs_f64();
 
     // warm: one scheduler path job on one worker, streamed per-λ
-    let mut sched = FitScheduler::start(1);
+    let sched = FitScheduler::start(1);
     let t1 = Instant::now();
     sched.submit_path(Arc::clone(&ds), specs::lasso(1.0), ratios.clone(), opts);
     let mut warm_epochs = 0;
@@ -83,6 +83,8 @@ pub fn compare_cold_vs_warm(
             JobEvent::Failed { job_id, message } => {
                 panic!("path job {job_id} failed: {message}")
             }
+            JobEvent::Cancelled { job_id, .. } => panic!("path job {job_id} cancelled"),
+            JobEvent::SchedulerDown => panic!("scheduler died mid-path"),
         }
     }
     let warm_time = t1.elapsed().as_secs_f64();

@@ -503,7 +503,7 @@ fn run_path_variant(
 ) -> std::result::Result<PathRun, String> {
     set_thread_budget(threads);
     let opts = SolverOpts::default().with_tol(tol).with_inner(engine);
-    let mut sched = FitScheduler::start(1);
+    let sched = FitScheduler::start(1);
     sched.submit_path(Arc::clone(ds), make_spec(), ratios.to_vec(), opts);
     let drained = drain_one_path(&sched, ratios.len());
     sched.shutdown();
@@ -548,7 +548,8 @@ fn drain_one_path(
                 return Err(format!("solve panicked on its worker: {message}"))
             }
             Ok(JobEvent::FitDone(_)) => return Err("unexpected FitDone event".into()),
-            Err(_) => return Err("scheduler died".into()),
+            Ok(JobEvent::Cancelled { .. }) => return Err("path job was cancelled".into()),
+            Ok(JobEvent::SchedulerDown) | Err(_) => return Err("scheduler died".into()),
         }
     }
 }

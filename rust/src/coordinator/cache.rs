@@ -254,6 +254,62 @@ impl DatasetCache {
         d + c
     }
 
+    /// Bytes accounted to one dataset across both maps and both
+    /// normalization variants (service per-tenant budget metering).
+    pub fn bytes_for(&self, dataset: &Arc<Dataset>) -> usize {
+        let ds_key = Self::dataset_key(dataset);
+        let d: usize = self
+            .designs
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|((k, _), _)| *k == ds_key)
+            .map(|(_, s)| s.entry.bytes())
+            .sum();
+        let c: usize = self
+            .coefs
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|((k, _, _, _), _)| *k == ds_key)
+            .map(|(_, e)| e.bytes())
+            .sum();
+        d + c
+    }
+
+    /// Drop every cache entry belonging to one dataset (both
+    /// normalization variants, designs and coefficients). Returns the
+    /// bytes freed; the drops are counted as evictions. The service calls
+    /// this to reclaim a tenant's idle datasets when its byte budget is
+    /// exceeded.
+    pub fn evict_dataset(&self, dataset: &Arc<Dataset>) -> usize {
+        let ds_key = Self::dataset_key(dataset);
+        let mut freed = 0usize;
+        {
+            let mut map = self.designs.lock().unwrap();
+            let keys: Vec<(usize, bool)> =
+                map.keys().filter(|(k, _)| *k == ds_key).copied().collect();
+            for key in keys {
+                if let Some(slot) = map.remove(&key) {
+                    freed += slot.entry.bytes();
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        {
+            let mut map = self.coefs.lock().unwrap();
+            let keys: Vec<CoefKey> =
+                map.keys().filter(|(k, _, _, _)| *k == ds_key).copied().collect();
+            for key in keys {
+                if let Some(entry) = map.remove(&key) {
+                    freed += entry.bytes();
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        freed
+    }
+
     /// Re-run budget enforcement with no protected entry. The scheduler
     /// calls this after every job: Gram stores grow **during** solves, so
     /// waiting for the next insert would leave the budget unenforced for
@@ -484,5 +540,27 @@ mod tests {
         let b = cache.design_entry(&d, false);
         assert!(Arc::ptr_eq(&a.gram, &b.gram), "jobs must share one Gram store");
         assert_eq!(a.gram.n_slots(), 0);
+    }
+
+    #[test]
+    fn per_dataset_metering_and_eviction() {
+        let cache = DatasetCache::new();
+        let d1 = ds();
+        let d2 = Arc::new(correlated(
+            CorrelatedSpec { n: 30, p: 40, rho: 0.3, nnz: 4, snr: 10.0 },
+            7,
+        ));
+        let _e1 = cache.design_entry(&d1, false);
+        let _e2 = cache.design_entry(&d2, true);
+        cache.store_coef(&d1, false, "quadratic", "l1", 0.5, &[1.0; 40]);
+        let b1 = cache.bytes_for(&d1);
+        let b2 = cache.bytes_for(&d2);
+        assert!(b1 > 0 && b2 > 0);
+        assert_eq!(cache.bytes(), b1 + b2, "per-dataset meters must sum to the total");
+        let freed = cache.evict_dataset(&d1);
+        assert_eq!(freed, b1);
+        assert_eq!(cache.bytes_for(&d1), 0);
+        assert_eq!(cache.bytes_for(&d2), b2, "evicting one tenant's dataset spares others");
+        assert!(cache.stats().evictions >= 2, "design + coef entries count as evictions");
     }
 }

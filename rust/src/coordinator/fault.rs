@@ -1,0 +1,323 @@
+//! Deterministic fault injection for the fit service (`SKGLM_FAULTS` /
+//! `--faults`). Every degradation path the service claims to survive is
+//! exercised by injecting the degradation on purpose:
+//!
+//! | directive            | effect                                              |
+//! |----------------------|-----------------------------------------------------|
+//! | `panic@N`            | the N-th accepted submit panics on its worker       |
+//! | `panic_seed=S`       | any job whose dataset seed is S panics              |
+//! | `slow=MS`            | every solve sleeps MS ms first                      |
+//! | `slow=MS@N`          | only the N-th accepted submit sleeps                |
+//! | `worker_exit@N`      | one worker dies when the N-th submit is accepted    |
+//! | `die_seed=S`         | one worker dies when a seed-S job is accepted       |
+//! | `drop_conn_tenant=T@N` | close tenant T's connections after N frames sent  |
+//! | `truncate_tenant=T@N`  | truncate tenant T's N-th outbound frame           |
+//! | `cache_bytes=B`      | shrink the dataset-cache byte budget to B           |
+//! | `tenant_bytes=B`     | shrink the per-tenant byte budget to B              |
+//!
+//! Counters are deterministic (accepted-submit order / per-connection
+//! frame order), so a scripted session can predict exactly which of its
+//! jobs and frames degrade. Plans compose comma-separated:
+//! `slow=150,panic_seed=666999,truncate_tenant=evil@2`.
+
+use super::job::FitSpec;
+use crate::solver::{ContinuationState, FitResult, SolverOpts};
+use std::time::Duration;
+
+/// Parsed fault plan (empty by default — no faults).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// accepted-submit indices (0-based) whose solve panics
+    pub panic_jobs: Vec<usize>,
+    /// dataset seeds whose solve panics
+    pub panic_seeds: Vec<u64>,
+    /// sleep applied to every solve, ms
+    pub slow_all_ms: Option<u64>,
+    /// (accepted-submit index, ms) targeted slowness
+    pub slow_jobs: Vec<(usize, u64)>,
+    /// (dataset seed, ms) — any job on a seed-S dataset sleeps per solve
+    pub slow_seeds: Vec<(u64, u64)>,
+    /// accepted-submit indices that kill one worker on acceptance
+    pub worker_exit_jobs: Vec<usize>,
+    /// dataset seeds that kill one worker on acceptance
+    pub die_seeds: Vec<u64>,
+    /// (tenant, frames) — close the connection after N outbound frames
+    pub drop_conn_tenant: Vec<(String, usize)>,
+    /// (tenant, frame index 1-based) — truncate that outbound frame
+    pub truncate_tenant: Vec<(String, usize)>,
+    /// override for the dataset-cache byte budget
+    pub cache_bytes: Option<usize>,
+    /// override for the per-tenant byte budget
+    pub tenant_bytes: Option<usize>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+
+    /// Parse a comma-separated plan; unknown directives are errors (a
+    /// fault plan that silently no-ops would defeat the harness).
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, rest) = match part.split_once('=') {
+                Some((k, v)) => (k, Some(v)),
+                None => match part.split_once('@') {
+                    Some((k, _)) => (k, None),
+                    None => (part, None),
+                },
+            };
+            match key {
+                "panic" => plan.panic_jobs.push(parse_at(part, "panic")?),
+                "panic_seed" => plan.panic_seeds.push(parse_num(rest, part)?),
+                "slow" => {
+                    let v = rest.ok_or_else(|| format!("slow needs =MS in {part:?}"))?;
+                    match v.split_once('@') {
+                        Some((ms, idx)) => plan.slow_jobs.push((
+                            idx.parse().map_err(|_| format!("bad index in {part:?}"))?,
+                            ms.parse().map_err(|_| format!("bad ms in {part:?}"))?,
+                        )),
+                        None => {
+                            plan.slow_all_ms =
+                                Some(v.parse().map_err(|_| format!("bad ms in {part:?}"))?)
+                        }
+                    }
+                }
+                "slow_seed" => {
+                    let v = rest.ok_or_else(|| format!("slow_seed needs =SEED@MS in {part:?}"))?;
+                    let (seed, ms) =
+                        v.split_once('@').ok_or_else(|| format!("missing @MS in {part:?}"))?;
+                    plan.slow_seeds.push((
+                        seed.parse().map_err(|_| format!("bad seed in {part:?}"))?,
+                        ms.parse().map_err(|_| format!("bad ms in {part:?}"))?,
+                    ));
+                }
+                "worker_exit" => plan.worker_exit_jobs.push(parse_at(part, "worker_exit")?),
+                "die_seed" => plan.die_seeds.push(parse_num(rest, part)?),
+                "drop_conn_tenant" => {
+                    let (t, n) = parse_tenant_at(rest, part)?;
+                    plan.drop_conn_tenant.push((t, n));
+                }
+                "truncate_tenant" => {
+                    let (t, n) = parse_tenant_at(rest, part)?;
+                    plan.truncate_tenant.push((t, n));
+                }
+                "cache_bytes" => plan.cache_bytes = Some(parse_num(rest, part)? as usize),
+                "tenant_bytes" => plan.tenant_bytes = Some(parse_num(rest, part)? as usize),
+                other => return Err(format!("unknown fault directive {other:?} in {part:?}")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Resolve the active plan: an explicit `--faults` value wins, then
+    /// `SKGLM_FAULTS`, then the empty plan.
+    pub fn from_env(cli: Option<&str>) -> Result<FaultPlan, String> {
+        match cli {
+            Some(s) => FaultPlan::parse(s),
+            None => match std::env::var("SKGLM_FAULTS") {
+                Ok(s) if !s.trim().is_empty() => FaultPlan::parse(&s),
+                _ => Ok(FaultPlan::default()),
+            },
+        }
+    }
+
+    /// Faults for the `submit_index`-th accepted submit of a job whose
+    /// dataset seed is `seed`.
+    pub fn job_faults(&self, submit_index: usize, seed: u64) -> JobFaults {
+        let mut slow_ms = self.slow_all_ms.unwrap_or(0);
+        if let Some(&(_, ms)) =
+            self.slow_jobs.iter().find(|&&(idx, _)| idx == submit_index)
+        {
+            slow_ms = slow_ms.max(ms);
+        }
+        if let Some(&(_, ms)) = self.slow_seeds.iter().find(|&&(s, _)| s == seed) {
+            slow_ms = slow_ms.max(ms);
+        }
+        JobFaults {
+            panic: self.panic_jobs.contains(&submit_index) || self.panic_seeds.contains(&seed),
+            slow_ms,
+            kill_worker: self.worker_exit_jobs.contains(&submit_index)
+                || self.die_seeds.contains(&seed),
+        }
+    }
+
+    /// Connection faults for a tenant, or `None` when unaffected.
+    pub fn conn_faults(&self, tenant: &str) -> ConnFaults {
+        ConnFaults {
+            drop_after: self
+                .drop_conn_tenant
+                .iter()
+                .find(|(t, _)| t == tenant)
+                .map(|&(_, n)| n),
+            truncate_at: self
+                .truncate_tenant
+                .iter()
+                .find(|(t, _)| t == tenant)
+                .map(|&(_, n)| n),
+        }
+    }
+}
+
+fn parse_at(part: &str, key: &str) -> Result<usize, String> {
+    part.strip_prefix(key)
+        .and_then(|r| r.strip_prefix('@'))
+        .and_then(|n| n.parse().ok())
+        .ok_or_else(|| format!("{key} needs @INDEX in {part:?}"))
+}
+
+fn parse_num(rest: Option<&str>, part: &str) -> Result<u64, String> {
+    rest.and_then(|v| v.parse().ok()).ok_or_else(|| format!("bad number in {part:?}"))
+}
+
+fn parse_tenant_at(rest: Option<&str>, part: &str) -> Result<(String, usize), String> {
+    let v = rest.ok_or_else(|| format!("missing =TENANT@N in {part:?}"))?;
+    let (t, n) = v.split_once('@').ok_or_else(|| format!("missing @N in {part:?}"))?;
+    Ok((t.to_string(), n.parse().map_err(|_| format!("bad frame count in {part:?}"))?))
+}
+
+/// Faults resolved for one job.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JobFaults {
+    pub panic: bool,
+    pub slow_ms: u64,
+    pub kill_worker: bool,
+}
+
+impl JobFaults {
+    pub fn is_empty(&self) -> bool {
+        !self.panic && self.slow_ms == 0 && !self.kill_worker
+    }
+}
+
+/// Faults resolved for one connection.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConnFaults {
+    /// close the socket after this many outbound frames
+    pub drop_after: Option<usize>,
+    /// truncate this (1-based) outbound frame, then close
+    pub truncate_at: Option<usize>,
+}
+
+/// Delegating [`FitSpec`] wrapper that injects slowness and/or a panic
+/// into every solve (path points included, via `at_lambda`).
+pub struct FaultSpec {
+    inner: Box<dyn FitSpec>,
+    slow_ms: u64,
+    panic: bool,
+}
+
+impl FaultSpec {
+    pub fn wrap(inner: Box<dyn FitSpec>, faults: &JobFaults) -> Box<dyn FitSpec> {
+        if faults.slow_ms == 0 && !faults.panic {
+            return inner;
+        }
+        Box::new(FaultSpec { inner, slow_ms: faults.slow_ms, panic: faults.panic })
+    }
+}
+
+impl FitSpec for FaultSpec {
+    fn label(&self) -> String {
+        self.inner.label()
+    }
+    fn datafit_name(&self) -> &'static str {
+        self.inner.datafit_name()
+    }
+    fn family(&self) -> &'static str {
+        self.inner.family()
+    }
+    fn lambda(&self) -> f64 {
+        self.inner.lambda()
+    }
+    fn is_convex(&self) -> bool {
+        // keep injected jobs away from the coefficient cache: a panic
+        // mid-solve must not poison warm starts for healthy jobs
+        false
+    }
+    fn normalize_design(&self) -> bool {
+        self.inner.normalize_design()
+    }
+    fn lambda_max(&self, design: &crate::linalg::Design, y: &[f64]) -> f64 {
+        self.inner.lambda_max(design, y)
+    }
+    fn at_lambda(&self, lambda: f64) -> Box<dyn FitSpec> {
+        Box::new(FaultSpec {
+            inner: self.inner.at_lambda(lambda),
+            slow_ms: self.slow_ms,
+            panic: self.panic,
+        })
+    }
+    fn solve(
+        &self,
+        design: &crate::linalg::Design,
+        y: &[f64],
+        opts: &SolverOpts,
+        state: &mut ContinuationState,
+        col_sq_norms: Option<&[f64]>,
+        frozen: Option<&[bool]>,
+    ) -> FitResult {
+        if self.slow_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.slow_ms));
+        }
+        if self.panic {
+            panic!("injected worker fault (fault plan)");
+        }
+        self.inner.solve(design, y, opts, state, col_sq_norms, frozen)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_composite_plan() {
+        let plan = FaultPlan::parse(
+            "panic@3,slow=150,slow=40@5,slow_seed=111@200,worker_exit@7,panic_seed=666999,\
+             die_seed=42,drop_conn_tenant=evil@2,truncate_tenant=chaos@1,cache_bytes=4096,\
+             tenant_bytes=1024",
+        )
+        .unwrap();
+        assert_eq!(plan.panic_jobs, vec![3]);
+        assert_eq!(plan.slow_all_ms, Some(150));
+        assert_eq!(plan.slow_jobs, vec![(5, 40)]);
+        assert_eq!(plan.slow_seeds, vec![(111, 200)]);
+        assert_eq!(plan.worker_exit_jobs, vec![7]);
+        assert_eq!(plan.panic_seeds, vec![666999]);
+        assert_eq!(plan.die_seeds, vec![42]);
+        assert_eq!(plan.drop_conn_tenant, vec![("evil".to_string(), 2)]);
+        assert_eq!(plan.truncate_tenant, vec![("chaos".to_string(), 1)]);
+        assert_eq!(plan.cache_bytes, Some(4096));
+        assert_eq!(plan.tenant_bytes, Some(1024));
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn empty_and_unknown_plans() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ").unwrap().is_empty());
+        assert!(FaultPlan::parse("frobnicate=1").is_err());
+        assert!(FaultPlan::parse("panic").is_err(), "panic needs an index");
+        assert!(FaultPlan::parse("slow").is_err(), "slow needs a duration");
+    }
+
+    #[test]
+    fn job_faults_resolve_by_index_and_seed() {
+        let plan = FaultPlan::parse("panic@1,slow=10,slow=90@2,die_seed=7").unwrap();
+        let f0 = plan.job_faults(0, 0);
+        assert!(!f0.panic && f0.slow_ms == 10 && !f0.kill_worker);
+        let f1 = plan.job_faults(1, 0);
+        assert!(f1.panic);
+        let f2 = plan.job_faults(2, 7);
+        assert!(f2.slow_ms == 90 && f2.kill_worker);
+    }
+
+    #[test]
+    fn conn_faults_resolve_by_tenant() {
+        let plan = FaultPlan::parse("drop_conn_tenant=evil@3").unwrap();
+        assert_eq!(plan.conn_faults("evil").drop_after, Some(3));
+        assert_eq!(plan.conn_faults("good").drop_after, None);
+        assert_eq!(plan.conn_faults("good").truncate_at, None);
+    }
+}

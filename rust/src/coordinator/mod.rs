@@ -16,15 +16,39 @@
 //! This is the long-running-process shape of the library (a model-fitting
 //! microservice); tokio is unavailable offline, so it is a compact
 //! std::sync::mpsc equivalent.
+//!
+//! On top of the scheduler sits the production service stack:
+//!
+//! - [`wire`] — length-prefixed JSON framing with typed, recoverable
+//!   error taxonomy for untrusted input;
+//! - [`service`] — the TCP front door (`skglm serve`): admission
+//!   control, per-job deadlines and priorities, cancellation (explicit
+//!   or on client disconnect), per-tenant cache byte budgets, and an
+//!   event router that fans the scheduler's stream out to subscribers;
+//! - [`client`] — the protocol client (`skglm client`) with timeouts and
+//!   exponential-backoff-with-jitter retries;
+//! - [`fault`] — the deterministic fault-injection plan
+//!   (`SKGLM_FAULTS` / `--faults`) behind every robustness test;
+//! - [`smoke`] — the scripted loopback acceptance session CI runs.
 
 pub mod cache;
+pub mod client;
+pub mod fault;
 pub mod job;
 pub mod pool;
 pub mod scheduler;
+pub mod service;
+pub mod smoke;
+pub mod wire;
 
 pub use cache::{CacheStats, DatasetCache};
+pub use client::{ClientConfig, ClientError, ServiceClient};
+pub use fault::{FaultPlan, FaultSpec};
 pub use job::{specs, BlockSpec, FitSpec, GlmSpec, SolverTopology};
 pub use pool::run_parallel;
 pub use scheduler::{
-    FitOutcome, FitScheduler, Job, JobEvent, PathPointOutcome, PathSummary,
+    FitOutcome, FitScheduler, Job, JobCtl, JobEvent, JobPolicy, PathPointOutcome, PathSummary,
+    Priority,
 };
+pub use service::{ExitReason, ServiceConfig, ServiceHandle};
+pub use wire::{FrameReader, WireError};

@@ -1,5 +1,6 @@
 //! Path-aware fit scheduler: a leader/worker queue over trait-based
-//! [`FitSpec`] jobs with completion-order result streaming.
+//! [`FitSpec`] jobs with completion-order result streaming, priority
+//! classes, cooperative cancellation and per-job deadlines.
 //!
 //! Replaces the old closed-enum `SolveService`. Two job shapes:
 //!
@@ -13,6 +14,26 @@
 //!   back immediately as [`JobEvent::PathPoint`] — callers see the path
 //!   fill in completion order rather than waiting for the sweep.
 //!
+//! Robustness policy (the production service rides on these):
+//!
+//! - **Priorities** ([`Priority`]): interactive jobs are always popped
+//!   before batch jobs, and a *running* batch path cooperatively yields
+//!   at λ-point granularity when interactive work is waiting — the
+//!   remainder of the sweep is requeued as [`Job::PathResume`] with its
+//!   warm [`ContinuationState`] intact, so no work is lost.
+//! - **Cancellation** ([`FitScheduler::cancel`]): raises a flag that the
+//!   solver polls between outer iterations (via
+//!   [`crate::solver::SolveBudget`]) and the path loop polls between λ
+//!   points; a cancelled job frees its worker within one λ point and
+//!   emits [`JobEvent::Cancelled`] as its terminal event.
+//! - **Deadlines** ([`JobPolicy::deadline`]): a deadline-exceeded solve
+//!   stops cooperatively and still reports a finite partial objective
+//!   with its optimality [`crate::solver::Certificate`]; the terminal
+//!   event carries `timed_out = true`.
+//! - **Liveness** ([`JobEvent::SchedulerDown`]): the last worker to exit
+//!   (graceful shutdown or fault-injected death) emits a terminal
+//!   `SchedulerDown`, so consumers never block forever on a dead pool.
+//!
 //! Results stream back over a channel in completion order, every event
 //! tagged with its job id; jobs from different callers interleave freely.
 //! Built on std::sync::mpsc since tokio is unavailable offline.
@@ -25,10 +46,12 @@ use crate::linalg::parallel::{register_solver_workers, SolverWorkersGuard};
 use crate::metrics::{estimation_error, prediction_mse, support_recovery};
 use crate::solver::screening::{solve_lasso_screened_warm_with, ScreenWorkspace};
 use crate::solver::{ContinuationState, FitResult, SolverOpts};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A schedulable unit of work.
 pub enum Job {
@@ -37,6 +60,86 @@ pub enum Job {
     /// A warm-started sweep over `ratios · λ_max` (sorted descending
     /// internally — warm starts flow from high λ to low).
     Path { dataset: Arc<Dataset>, spec: Box<dyn FitSpec>, ratios: Vec<f64>, opts: SolverOpts },
+    /// Internal: the remainder of a preempted path sweep, carrying its
+    /// warm continuation state. Produced by the worker when a batch path
+    /// yields to interactive work; never constructed by callers.
+    PathResume(Box<PathResume>),
+}
+
+/// Scheduling class. Interactive jobs are popped before batch jobs and
+/// preempt running batch paths at λ-point granularity.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Priority {
+    Interactive,
+    #[default]
+    Batch,
+}
+
+/// Per-job scheduling policy (see [`FitScheduler::submit_with`]).
+#[derive(Clone, Debug, Default)]
+pub struct JobPolicy {
+    pub priority: Priority,
+    /// Cooperative wall-clock deadline: the job stops within one outer
+    /// iteration / λ point of this instant and reports partial results.
+    pub deadline: Option<Instant>,
+}
+
+impl JobPolicy {
+    pub fn interactive() -> Self {
+        Self { priority: Priority::Interactive, deadline: None }
+    }
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// Shared per-job control block: the cancellation flag (also handed to
+/// the solver via [`crate::solver::SolveBudget`]), the deadline, and the
+/// priority class.
+#[derive(Debug)]
+pub struct JobCtl {
+    cancel: Arc<AtomicBool>,
+    deadline: Option<Instant>,
+    priority: Priority,
+}
+
+impl JobCtl {
+    fn new(policy: &JobPolicy) -> Self {
+        Self {
+            cancel: Arc::new(AtomicBool::new(false)),
+            deadline: policy.deadline,
+            priority: policy.priority,
+        }
+    }
+
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+    pub fn deadline_exceeded(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+    pub fn priority(&self) -> Priority {
+        self.priority
+    }
+
+    /// Clone `base` with this job's budget (deadline + cancel flag)
+    /// merged in; caller-provided budget fields win.
+    fn solver_opts(&self, base: &SolverOpts) -> SolverOpts {
+        let mut opts = base.clone();
+        let mut budget = opts.budget.take().unwrap_or_default();
+        if budget.deadline.is_none() {
+            budget.deadline = self.deadline;
+        }
+        if budget.cancel.is_none() {
+            budget.cancel = Some(Arc::clone(&self.cancel));
+        }
+        opts.budget = Some(budget);
+        opts
+    }
 }
 
 /// A completed single fit.
@@ -48,6 +151,9 @@ pub struct FitOutcome {
     pub wall_time: f64,
     /// true when the coefficient cache seeded the solve
     pub warm_started: bool,
+    /// true when the job's deadline stopped the solve before convergence;
+    /// `result` then holds the partial iterate with its certificate
+    pub timed_out: bool,
 }
 
 /// One solved point of a path job, streamed as soon as it finishes.
@@ -72,9 +178,15 @@ pub struct PathPointOutcome {
 pub struct PathSummary {
     pub job_id: u64,
     pub label: String,
+    /// points actually emitted (== `n_planned` unless the job timed out)
     pub n_points: usize,
+    /// points the λ grid asked for
+    pub n_planned: usize,
     pub total_epochs: usize,
     pub total_time: f64,
+    /// true when the deadline cut the sweep short; the emitted points
+    /// (including a final partial one with its certificate) still stand
+    pub timed_out: bool,
 }
 
 /// Everything the scheduler streams back, tagged with its job id.
@@ -90,19 +202,38 @@ pub enum JobEvent {
     /// `Failed` is the job's **terminal** event: a path job that fails
     /// mid-sweep emits its points so far, then `Failed`, and **no**
     /// `PathDone` — consumers must count job-terminal events
-    /// (`FitDone`/`PathDone`/`Failed`), not a fixed per-point total, or
-    /// they will block forever on a failed sweep (see `skglm serve`).
+    /// (`FitDone`/`PathDone`/`Failed`/`Cancelled`), not a fixed per-point
+    /// total, or they will block forever on a failed sweep.
     Failed { job_id: u64, message: String },
+    /// Terminal event of a cancelled job. A cancelled path stops within
+    /// one λ point; `points_emitted` counts the `PathPoint`s that were
+    /// streamed before the cancellation landed (0 for fits and for jobs
+    /// cancelled while still queued).
+    Cancelled { job_id: u64, points_emitted: usize },
+    /// The last worker exited (graceful shutdown or fault-injected
+    /// death): no further events will ever arrive. Consumers must treat
+    /// this as terminal for every outstanding job instead of blocking on
+    /// `events.recv()` forever.
+    SchedulerDown,
 }
 
 impl JobEvent {
+    /// Job id carried by the event; [`JobEvent::SchedulerDown`] is not
+    /// job-scoped and reports `u64::MAX`.
     pub fn job_id(&self) -> u64 {
         match self {
             JobEvent::FitDone(o) => o.job_id,
             JobEvent::PathPoint(o) => o.job_id,
             JobEvent::PathDone(s) => s.job_id,
             JobEvent::Failed { job_id, .. } => *job_id,
+            JobEvent::Cancelled { job_id, .. } => *job_id,
+            JobEvent::SchedulerDown => u64::MAX,
         }
+    }
+
+    /// Is this the last event the job will ever emit?
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, JobEvent::PathPoint(_))
     }
 }
 
@@ -119,19 +250,110 @@ pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
-enum Msg {
-    Job(u64, Job),
-    Shutdown,
+struct QueuedJob {
+    id: u64,
+    job: Job,
+    ctl: Arc<JobCtl>,
 }
 
-/// The scheduler: submit jobs, stream events, shut down cleanly.
+#[derive(Default)]
+struct QueueState {
+    interactive: VecDeque<QueuedJob>,
+    batch: VecDeque<QueuedJob>,
+    /// workers asked to exit after the queues drain (graceful shutdown)
+    graceful_exits: usize,
+    /// workers asked to exit immediately (fault injection)
+    kill_now: usize,
+}
+
+/// Two-class FIFO job queue with condvar wakeups. Interactive beats
+/// batch; exit requests are honored immediately (`kill_now`) or only
+/// once both queues are empty (`graceful_exits`).
+struct JobQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+impl JobQueue {
+    fn new() -> Self {
+        Self { state: Mutex::new(QueueState::default()), cv: Condvar::new() }
+    }
+
+    fn push(&self, qj: QueuedJob) {
+        let mut st = self.state.lock().unwrap();
+        match qj.ctl.priority() {
+            Priority::Interactive => st.interactive.push_back(qj),
+            Priority::Batch => st.batch.push_back(qj),
+        }
+        drop(st);
+        self.cv.notify_one();
+    }
+
+    /// Requeue a preempted path remainder at the *front* of the batch
+    /// queue: it resumes as soon as interactive work drains, ahead of
+    /// batch jobs that were submitted after it started.
+    fn push_resume_front(&self, qj: QueuedJob) {
+        let mut st = self.state.lock().unwrap();
+        st.batch.push_front(qj);
+        drop(st);
+        self.cv.notify_one();
+    }
+
+    /// Block for the next job; `None` means "this worker should exit".
+    fn pop_blocking(&self) -> Option<QueuedJob> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.kill_now > 0 {
+                st.kill_now -= 1;
+                return None;
+            }
+            if let Some(j) = st.interactive.pop_front() {
+                return Some(j);
+            }
+            if let Some(j) = st.batch.pop_front() {
+                return Some(j);
+            }
+            if st.graceful_exits > 0 {
+                st.graceful_exits -= 1;
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn interactive_waiting(&self) -> bool {
+        !self.state.lock().unwrap().interactive.is_empty()
+    }
+
+    fn depth(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.interactive.len() + st.batch.len()
+    }
+
+    fn request_exit(&self, n: usize, immediate: bool) {
+        let mut st = self.state.lock().unwrap();
+        if immediate {
+            st.kill_now += n;
+        } else {
+            st.graceful_exits += n;
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+/// The scheduler: submit jobs, stream events, cancel, shut down cleanly.
 pub struct FitScheduler {
-    tx: Sender<Msg>,
+    queue: Arc<JobQueue>,
     /// Completion-order event stream.
     pub events: Receiver<JobEvent>,
     workers: Vec<JoinHandle<()>>,
-    next_id: u64,
+    next_id: AtomicU64,
     cache: Arc<DatasetCache>,
+    /// Control blocks of queued + running jobs (removed at terminal emit).
+    registry: Arc<Mutex<HashMap<u64, Arc<JobCtl>>>>,
+    /// Workers still alive (the last one to exit emits `SchedulerDown`).
+    workers_alive: Arc<AtomicUsize>,
     /// Registers the worker count against the kernel-engine thread budget
     /// for the scheduler's lifetime: each job's kernels then get
     /// `budget / workers` threads, so kernel × worker parallelism never
@@ -142,58 +364,96 @@ pub struct FitScheduler {
 impl FitScheduler {
     /// Spawn `n_workers` solver threads (at least one).
     pub fn start(n_workers: usize) -> Self {
-        let (tx, rx) = channel::<Msg>();
-        let rx = Arc::new(Mutex::new(rx));
+        Self::start_with_cache(n_workers, Arc::new(DatasetCache::new()))
+    }
+
+    /// Spawn with an explicit (e.g. budget-restricted) dataset cache —
+    /// the service uses this to wire tenant byte budgets into the LRU.
+    pub fn start_with_cache(n_workers: usize, cache: Arc<DatasetCache>) -> Self {
+        let n_workers = n_workers.max(1);
+        let queue = Arc::new(JobQueue::new());
         let (ev_tx, ev_rx) = channel::<JobEvent>();
-        let cache = Arc::new(DatasetCache::new());
-        let workers = (0..n_workers.max(1))
+        let registry: Arc<Mutex<HashMap<u64, Arc<JobCtl>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let workers_alive = Arc::new(AtomicUsize::new(n_workers));
+        let workers = (0..n_workers)
             .map(|_| {
-                let rx = Arc::clone(&rx);
+                let queue = Arc::clone(&queue);
                 let ev_tx = ev_tx.clone();
                 let cache = Arc::clone(&cache);
-                std::thread::spawn(move || loop {
-                    let msg = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    match msg {
-                        Ok(Msg::Job(id, job)) => {
-                            // a panicking solve (divergent fit, violated
-                            // penalty regime, ...) is surfaced as a Failed
-                            // event; the worker survives to run the rest
-                            // of the batch
-                            let res = std::panic::catch_unwind(
-                                std::panic::AssertUnwindSafe(|| {
-                                    run_job(id, job, &cache, &ev_tx)
-                                }),
-                            );
-                            if let Err(payload) = res {
+                let registry = Arc::clone(&registry);
+                let alive = Arc::clone(&workers_alive);
+                std::thread::spawn(move || {
+                    while let Some(qj) = queue.pop_blocking() {
+                        let QueuedJob { id, job, ctl } = qj;
+                        if ctl.is_cancelled() {
+                            registry.lock().unwrap().remove(&id);
+                            let _ = ev_tx
+                                .send(JobEvent::Cancelled { job_id: id, points_emitted: 0 });
+                            continue;
+                        }
+                        // a panicking solve (divergent fit, violated
+                        // penalty regime, ...) is surfaced as a Failed
+                        // event; the worker survives to run the rest of
+                        // the batch
+                        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || run_job(id, job, &ctl, &cache, &ev_tx, &queue),
+                        ));
+                        match res {
+                            // preempted path: its registry entry stays
+                            // live for cancellation until it resumes
+                            Ok(RunOutcome::Requeued) => {}
+                            Ok(RunOutcome::Terminal) => {
+                                registry.lock().unwrap().remove(&id);
+                            }
+                            Err(payload) => {
+                                registry.lock().unwrap().remove(&id);
                                 let _ = ev_tx.send(JobEvent::Failed {
                                     job_id: id,
                                     message: panic_message(payload),
                                 });
                             }
                         }
-                        Ok(Msg::Shutdown) | Err(_) => break,
+                    }
+                    // last worker out signals liveness loss before the
+                    // event channel closes
+                    if alive.fetch_sub(1, Ordering::SeqCst) == 1 {
+                        let _ = ev_tx.send(JobEvent::SchedulerDown);
                     }
                 })
             })
             .collect();
-        let _kernel_budget = register_solver_workers(n_workers.max(1));
-        Self { tx, events: ev_rx, workers, next_id: 0, cache, _kernel_budget }
+        let _kernel_budget = register_solver_workers(n_workers);
+        Self {
+            queue,
+            events: ev_rx,
+            workers,
+            next_id: AtomicU64::new(0),
+            cache,
+            registry,
+            workers_alive,
+            _kernel_budget,
+        }
     }
 
-    /// Submit any [`Job`]; returns its id.
-    pub fn submit(&mut self, job: Job) -> u64 {
-        let id = self.next_id;
-        self.next_id += 1;
-        self.tx.send(Msg::Job(id, job)).expect("scheduler is down");
-        id
+    /// Submit any [`Job`] with default policy (batch, no deadline).
+    pub fn submit(&self, job: Job) -> u64 {
+        self.submit_with(job, JobPolicy::default()).0
+    }
+
+    /// Submit with an explicit [`JobPolicy`]; returns the job id and its
+    /// control block (for out-of-band cancellation).
+    pub fn submit_with(&self, job: Job, policy: JobPolicy) -> (u64, Arc<JobCtl>) {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let ctl = Arc::new(JobCtl::new(&policy));
+        self.registry.lock().unwrap().insert(id, Arc::clone(&ctl));
+        self.queue.push(QueuedJob { id, job, ctl: Arc::clone(&ctl) });
+        (id, ctl)
     }
 
     /// Submit a single fit.
     pub fn submit_fit(
-        &mut self,
+        &self,
         dataset: Arc<Dataset>,
         spec: Box<dyn FitSpec>,
         opts: SolverOpts,
@@ -203,13 +463,75 @@ impl FitScheduler {
 
     /// Submit a warm-started path sweep (one worker, streamed points).
     pub fn submit_path(
-        &mut self,
+        &self,
         dataset: Arc<Dataset>,
         spec: Box<dyn FitSpec>,
         ratios: Vec<f64>,
         opts: SolverOpts,
     ) -> u64 {
         self.submit(Job::Path { dataset, spec, ratios, opts })
+    }
+
+    /// Request cancellation of a queued or running job. Returns false
+    /// when the job already reached a terminal event (or never existed).
+    /// Cancellation is cooperative: a running solve stops within one
+    /// outer iteration, a path within one λ point, and the job's
+    /// terminal event is [`JobEvent::Cancelled`].
+    pub fn cancel(&self, job_id: u64) -> bool {
+        match self.registry.lock().unwrap().get(&job_id) {
+            Some(ctl) => {
+                ctl.cancel();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Jobs queued or running (registry size — drops to zero as terminal
+    /// events are emitted). The service's admission control polls this.
+    pub fn pending(&self) -> usize {
+        self.registry.lock().unwrap().len()
+    }
+
+    /// Jobs waiting in the queues (not yet picked up by a worker).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    /// Workers currently alive (fault observability).
+    pub fn workers_alive(&self) -> usize {
+        self.workers_alive.load(Ordering::SeqCst)
+    }
+
+    /// Fault injection: make `n` workers exit as soon as they are idle,
+    /// *without* draining the queues first — queued jobs orphan, and when
+    /// the last worker dies [`JobEvent::SchedulerDown`] is emitted.
+    pub fn kill_workers(&self, n: usize) {
+        self.queue.request_exit(n, true);
+    }
+
+    /// Move the event receiver out (the service's router thread owns it;
+    /// the scheduler keeps a closed placeholder).
+    pub fn split_events(&mut self) -> Receiver<JobEvent> {
+        let (tx, rx) = channel::<JobEvent>();
+        drop(tx);
+        std::mem::replace(&mut self.events, rx)
+    }
+
+    /// Next event, never blocking forever: a closed channel (all workers
+    /// gone) maps to [`JobEvent::SchedulerDown`].
+    pub fn recv_event(&self) -> JobEvent {
+        self.events.recv().unwrap_or(JobEvent::SchedulerDown)
+    }
+
+    /// Like [`FitScheduler::recv_event`] with a timeout (`None` = no
+    /// event yet).
+    pub fn recv_event_timeout(&self, timeout: Duration) -> Option<JobEvent> {
+        match self.events.recv_timeout(timeout) {
+            Ok(e) => Some(e),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => Some(JobEvent::SchedulerDown),
+        }
     }
 
     /// Block until `count` events arrive (any kind, completion order).
@@ -248,25 +570,64 @@ impl FitScheduler {
         &self.cache
     }
 
+    /// Shared handle to the cache (service tenant accounting).
+    pub fn cache_arc(&self) -> Arc<DatasetCache> {
+        Arc::clone(&self.cache)
+    }
+
     /// Graceful shutdown: queued jobs finish, then workers exit. Safe to
     /// call with jobs in flight even when their events are never read —
     /// workers ignore send failures on a dropped receiver.
     pub fn shutdown(self) {
-        for _ in &self.workers {
-            let _ = self.tx.send(Msg::Shutdown);
-        }
+        self.queue.request_exit(self.workers.len(), false);
         for w in self.workers {
             let _ = w.join();
         }
     }
 }
 
-fn run_job(id: u64, job: Job, cache: &DatasetCache, out: &Sender<JobEvent>) {
+enum RunOutcome {
+    Terminal,
+    Requeued,
+}
+
+fn run_job(
+    id: u64,
+    job: Job,
+    ctl: &Arc<JobCtl>,
+    cache: &DatasetCache,
+    out: &Sender<JobEvent>,
+    queue: &Arc<JobQueue>,
+) -> RunOutcome {
     match job {
-        Job::Fit { dataset, spec, opts } => run_fit(id, &dataset, spec, &opts, cache, out),
-        Job::Path { dataset, spec, ratios, opts } => {
-            run_path(id, &dataset, spec, ratios, &opts, cache, out)
+        Job::Fit { dataset, spec, opts } => {
+            run_fit(id, &dataset, spec, &opts, ctl, cache, out);
+            RunOutcome::Terminal
         }
+        Job::Path { dataset, spec, mut ratios, opts } => {
+            // warm starts flow from high λ (sparse) to low λ (dense)
+            ratios.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+            let entry = cache.design_entry(&dataset, spec.normalize_design());
+            let lambda_max = spec.lambda_max(entry.design(), &dataset.y);
+            let mut state = ContinuationState::default();
+            // one Gram store for the whole sweep AND for sibling jobs:
+            // blocks computed at λᵢ are exactly reusable at λᵢ₊₁
+            state.gram = Some(Arc::clone(&entry.gram));
+            let rs = PathResume {
+                dataset,
+                spec,
+                ratios,
+                lambda_max,
+                next_index: 0,
+                state,
+                total_epochs: 0,
+                emitted: 0,
+                elapsed_before: 0.0,
+                opts,
+            };
+            run_path_segment(id, rs, ctl, cache, out, queue)
+        }
+        Job::PathResume(rs) => run_path_segment(id, *rs, ctl, cache, out, queue),
     }
 }
 
@@ -275,6 +636,7 @@ fn run_fit(
     dataset: &Arc<Dataset>,
     spec: Box<dyn FitSpec>,
     opts: &SolverOpts,
+    ctl: &Arc<JobCtl>,
     cache: &DatasetCache,
     out: &Sender<JobEvent>,
 ) {
@@ -295,8 +657,13 @@ fn run_fit(
             warm_started = true;
         }
     }
+    let opts = ctl.solver_opts(opts);
     let result =
-        spec.solve(design, &dataset.y, opts, &mut state, Some(&entry.col_sq_norms), None);
+        spec.solve(design, &dataset.y, &opts, &mut state, Some(&entry.col_sq_norms), None);
+    if ctl.is_cancelled() {
+        let _ = out.send(JobEvent::Cancelled { job_id: id, points_emitted: 0 });
+        return;
+    }
     if spec.is_convex() {
         cache.store_coef(
             dataset,
@@ -307,6 +674,7 @@ fn run_fit(
             &result.beta,
         );
     }
+    let timed_out = !result.converged && ctl.deadline_exceeded();
     let _ = out.send(JobEvent::FitDone(FitOutcome {
         job_id: id,
         label: spec.label(),
@@ -314,45 +682,80 @@ fn run_fit(
         result,
         wall_time: t0.elapsed().as_secs_f64(),
         warm_started,
+        timed_out,
     }));
     // Gram blocks grew *during* the solve; re-check the byte budget now
     // rather than waiting for the next cache insert
     cache.enforce_budget_now();
 }
 
-fn run_path(
-    id: u64,
-    dataset: &Arc<Dataset>,
+/// The remainder of a path sweep: everything a worker needs to continue
+/// from `next_index` with warm starts intact after a preemption.
+pub struct PathResume {
+    dataset: Arc<Dataset>,
     spec: Box<dyn FitSpec>,
-    mut ratios: Vec<f64>,
-    opts: &SolverOpts,
+    /// full grid, sorted descending
+    ratios: Vec<f64>,
+    lambda_max: f64,
+    next_index: usize,
+    state: ContinuationState,
+    total_epochs: usize,
+    /// points streamed so far
+    emitted: usize,
+    /// wall time spent in earlier segments
+    elapsed_before: f64,
+    opts: SolverOpts,
+}
+
+fn run_path_segment(
+    id: u64,
+    mut rs: PathResume,
+    ctl: &Arc<JobCtl>,
     cache: &DatasetCache,
     out: &Sender<JobEvent>,
-) {
-    let t0 = Instant::now();
-    let normalize = spec.normalize_design();
-    let entry = cache.design_entry(dataset, normalize);
+    queue: &Arc<JobQueue>,
+) -> RunOutcome {
+    let seg0 = Instant::now();
+    let normalize = rs.spec.normalize_design();
+    let entry = cache.design_entry(&rs.dataset, normalize);
     let design = entry.design();
-    let y = &dataset.y;
-    let lambda_max = spec.lambda_max(design, y);
-    // warm starts flow from high λ (sparse) to low λ (dense)
-    ratios.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
-    let beta_true =
-        if dataset.beta_true.is_empty() { None } else { Some(dataset.beta_true.as_slice()) };
-    let mut state = ContinuationState::default();
-    // one Gram store for the whole sweep AND for sibling jobs: blocks
-    // computed at λᵢ are exactly reusable at λᵢ₊₁ (incremental growth)
-    state.gram = Some(Arc::clone(&entry.gram));
-    let mut total_epochs = 0;
+    let n_planned = rs.ratios.len();
+    let opts = ctl.solver_opts(&rs.opts);
+    let beta_true = if rs.dataset.beta_true.is_empty() {
+        None
+    } else {
+        Some(rs.dataset.beta_true.clone())
+    };
     // screening support is λ-independent; decide once for the sweep
-    let gap_screened = spec.supports_gap_screening();
-    // one scratch workspace for the whole sweep (buffer-reuse satellite):
+    let gap_screened = rs.spec.supports_gap_screening();
+    // one scratch workspace for the segment (buffer-reuse satellite):
     // xtr / residual / mask / score buffers live across λ points
     let mut screen_work = ScreenWorkspace::new();
 
-    for (index, &ratio) in ratios.iter().enumerate() {
+    while rs.next_index < n_planned {
+        if ctl.is_cancelled() {
+            let _ = out.send(JobEvent::Cancelled { job_id: id, points_emitted: rs.emitted });
+            return RunOutcome::Terminal;
+        }
+        if ctl.deadline_exceeded() {
+            let _ = out.send(JobEvent::PathDone(path_summary(id, &rs, seg0, true)));
+            cache.enforce_budget_now();
+            return RunOutcome::Terminal;
+        }
+        // cooperative preemption: a batch sweep yields between λ points
+        // whenever interactive work is waiting; the remainder requeues at
+        // the front of the batch queue with its warm state intact
+        if ctl.priority() == Priority::Batch && queue.interactive_waiting() {
+            rs.elapsed_before += seg0.elapsed().as_secs_f64();
+            let ctl = Arc::clone(ctl);
+            queue.push_resume_front(QueuedJob { id, job: Job::PathResume(Box::new(rs)), ctl });
+            return RunOutcome::Requeued;
+        }
+
+        let index = rs.next_index;
+        let ratio = rs.ratios[index];
         let pt0 = Instant::now();
-        let lambda = lambda_max * ratio;
+        let lambda = rs.lambda_max * ratio;
 
         // Gap-safe screening runs *inside* the solve for specs that
         // support it (quadratic × ℓ1): the mask is rebuilt per λ — a λᵢ
@@ -362,26 +765,42 @@ fn run_path(
         let (result, n_screened) = if gap_screened {
             solve_lasso_screened_warm_with(
                 design,
-                y,
+                &rs.dataset.y,
                 lambda,
-                opts,
-                &mut state,
+                &opts,
+                &mut rs.state,
                 Some(&entry.col_sq_norms),
                 &mut screen_work,
             )
         } else {
-            let point_spec = spec.at_lambda(lambda);
-            let r = point_spec.solve(design, y, opts, &mut state, Some(&entry.col_sq_norms), None);
+            let point_spec = rs.spec.at_lambda(lambda);
+            let r = point_spec.solve(
+                design,
+                &rs.dataset.y,
+                &opts,
+                &mut rs.state,
+                Some(&entry.col_sq_norms),
+                None,
+            );
             (r, 0)
         };
-        total_epochs += result.n_epochs;
+        rs.total_epochs += result.n_epochs;
+        if ctl.is_cancelled() {
+            // the cancel landed mid-solve: drop the partial point
+            let _ = out.send(JobEvent::Cancelled { job_id: id, points_emitted: rs.emitted });
+            return RunOutcome::Terminal;
+        }
+        // a deadline that fired mid-solve still yields a well-formed
+        // partial point (finite objective + certificate); emit it, then
+        // the timed-out terminal
+        let interrupted = !result.converged && ctl.deadline_exceeded();
 
         // Metrics vs. ground truth are computed in ORIGINAL coordinates:
         // for normalized specs the solve ran on X·diag(s), so the
         // original-design coefficients are s ⊙ β and the prediction uses
         // the dataset's own design.
         let support_size = result.support().len();
-        let (recovery, est, pred) = match beta_true {
+        let (recovery, est, pred) = match beta_true.as_deref() {
             None => (None, None, None),
             Some(bt) => {
                 let rescaled: Option<Vec<f64>> = entry.scales.as_ref().map(|scales| {
@@ -389,7 +808,7 @@ fn run_path(
                 });
                 let metric_beta: &[f64] = rescaled.as_deref().unwrap_or(&result.beta);
                 let metric_design: &crate::linalg::Design =
-                    if rescaled.is_some() { &dataset.design } else { design };
+                    if rescaled.is_some() { &rs.dataset.design } else { design };
                 (
                     Some(support_recovery(metric_beta, bt, 1e-8)),
                     Some(estimation_error(metric_beta, bt)),
@@ -418,31 +837,45 @@ fn run_path(
             converged: result.converged,
             certificate: result.certificate,
         }));
+        rs.emitted += 1;
+        rs.next_index += 1;
+        if interrupted {
+            let _ = out.send(JobEvent::PathDone(path_summary(id, &rs, seg0, true)));
+            cache.enforce_budget_now();
+            return RunOutcome::Terminal;
+        }
     }
 
     // seed future single fits on this dataset with the densest solution
-    if spec.is_convex() {
-        if let Some(beta) = &state.beta {
+    if rs.spec.is_convex() {
+        if let Some(beta) = &rs.state.beta {
             cache.store_coef(
-                dataset,
+                &rs.dataset,
                 normalize,
-                spec.datafit_name(),
-                spec.family(),
-                lambda_max * ratios.last().copied().unwrap_or(1.0),
+                rs.spec.datafit_name(),
+                rs.spec.family(),
+                rs.lambda_max * rs.ratios.last().copied().unwrap_or(1.0),
                 beta,
             );
         }
     }
-    let _ = out.send(JobEvent::PathDone(PathSummary {
-        job_id: id,
-        label: spec.label(),
-        n_points: ratios.len(),
-        total_epochs,
-        total_time: t0.elapsed().as_secs_f64(),
-    }));
+    let _ = out.send(JobEvent::PathDone(path_summary(id, &rs, seg0, false)));
     // the sweep's Gram blocks count against the cache budget; enforce it
     // at job completion (stores grow during solves, not at insert time)
     cache.enforce_budget_now();
+    RunOutcome::Terminal
+}
+
+fn path_summary(id: u64, rs: &PathResume, seg0: Instant, timed_out: bool) -> PathSummary {
+    PathSummary {
+        job_id: id,
+        label: rs.spec.label(),
+        n_points: rs.emitted,
+        n_planned: rs.ratios.len(),
+        total_epochs: rs.total_epochs,
+        total_time: rs.elapsed_before + seg0.elapsed().as_secs_f64(),
+        timed_out,
+    }
 }
 
 #[cfg(test)]
@@ -464,7 +897,7 @@ mod tests {
     fn sweep_over_lambda_completes() {
         let ds = dataset(0);
         let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
-        let mut sched = FitScheduler::start(2);
+        let sched = FitScheduler::start(2);
         for k in 1..=6 {
             sched.submit_fit(
                 Arc::clone(&ds),
@@ -483,6 +916,7 @@ mod tests {
         for o in &outcomes {
             assert!(o.result.converged);
             assert!(o.wall_time >= 0.0);
+            assert!(!o.timed_out);
         }
     }
 
@@ -490,7 +924,7 @@ mod tests {
     fn mixed_trait_jobs() {
         let ds = dataset(1);
         let lam = quadratic_lambda_max(&ds.design, &ds.y) / 10.0;
-        let mut sched = FitScheduler::start(2);
+        let sched = FitScheduler::start(2);
         sched.submit_fit(Arc::clone(&ds), specs::lasso(lam), SolverOpts::default());
         sched.submit_fit(Arc::clone(&ds), specs::elastic_net(lam, 0.5), SolverOpts::default());
         sched.submit_fit(Arc::clone(&ds), specs::mcp(lam, 3.0), SolverOpts::default());
@@ -507,7 +941,7 @@ mod tests {
     fn coefficient_cache_warm_starts_second_convex_fit() {
         let ds = dataset(2);
         let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
-        let mut sched = FitScheduler::start(1);
+        let sched = FitScheduler::start(1);
         let opts = SolverOpts::default().with_tol(1e-10);
         sched.submit_fit(Arc::clone(&ds), specs::lasso(lam_max / 5.0), opts.clone());
         let first = sched.collect_fits(1);
@@ -528,7 +962,7 @@ mod tests {
     fn non_convex_fits_never_reuse_coefficients() {
         let ds = dataset(3);
         let lam = quadratic_lambda_max(&ds.design, &ds.y) / 8.0;
-        let mut sched = FitScheduler::start(1);
+        let sched = FitScheduler::start(1);
         sched.submit_fit(Arc::clone(&ds), specs::mcp(lam, 3.0), SolverOpts::default());
         sched.submit_fit(Arc::clone(&ds), specs::mcp(lam / 2.0, 3.0), SolverOpts::default());
         let outcomes = sched.collect_fits(2);
@@ -586,7 +1020,7 @@ mod tests {
     fn worker_panic_surfaces_as_failed_event_and_batch_survives() {
         let ds = dataset(5);
         let lam = quadratic_lambda_max(&ds.design, &ds.y) / 10.0;
-        let mut sched = FitScheduler::start(1); // one worker: it must survive
+        let sched = FitScheduler::start(1); // one worker: it must survive
         let bad = sched.submit_fit(Arc::clone(&ds), Box::new(PanicSpec), SolverOpts::default());
         let good = sched.submit_fit(Arc::clone(&ds), specs::lasso(lam), SolverOpts::default());
         let events = sched.collect_events(2);
@@ -611,6 +1045,267 @@ mod tests {
             }
         }
         assert!(saw_failed && saw_done, "one divergent fit must not take down the batch");
+        sched.shutdown();
+    }
+
+    /// Delegating spec that sleeps before every solve — deterministic
+    /// slowness for cancellation/deadline/preemption tests.
+    struct SlowSpec {
+        inner: Box<dyn FitSpec>,
+        ms: u64,
+    }
+    impl FitSpec for SlowSpec {
+        fn label(&self) -> String {
+            self.inner.label()
+        }
+        fn datafit_name(&self) -> &'static str {
+            self.inner.datafit_name()
+        }
+        fn family(&self) -> &'static str {
+            self.inner.family()
+        }
+        fn lambda(&self) -> f64 {
+            self.inner.lambda()
+        }
+        fn is_convex(&self) -> bool {
+            false
+        }
+        fn normalize_design(&self) -> bool {
+            self.inner.normalize_design()
+        }
+        fn lambda_max(&self, d: &crate::linalg::Design, y: &[f64]) -> f64 {
+            self.inner.lambda_max(d, y)
+        }
+        fn at_lambda(&self, lambda: f64) -> Box<dyn FitSpec> {
+            Box::new(SlowSpec { inner: self.inner.at_lambda(lambda), ms: self.ms })
+        }
+        fn solve(
+            &self,
+            design: &crate::linalg::Design,
+            y: &[f64],
+            opts: &SolverOpts,
+            state: &mut ContinuationState,
+            col_sq_norms: Option<&[f64]>,
+            frozen: Option<&[bool]>,
+        ) -> FitResult {
+            std::thread::sleep(Duration::from_millis(self.ms));
+            self.inner.solve(design, y, opts, state, col_sq_norms, frozen)
+        }
+    }
+
+    fn slow_lasso(lam: f64, ms: u64) -> Box<dyn FitSpec> {
+        Box::new(SlowSpec { inner: specs::lasso(lam), ms })
+    }
+
+    #[test]
+    fn cancel_stops_path_within_one_point_and_frees_worker() {
+        let ds = dataset(6);
+        let sched = FitScheduler::start(1);
+        let ratios: Vec<f64> = (1..=32).map(|k| 1.0 / (k as f64 + 1.0)).collect();
+        let (path_id, _ctl) = sched.submit_with(
+            Job::Path {
+                dataset: Arc::clone(&ds),
+                spec: slow_lasso(1.0, 25),
+                ratios,
+                opts: SolverOpts::default(),
+            },
+            JobPolicy::default(),
+        );
+        // wait for the first streamed point, then cancel
+        match sched.recv_event_timeout(Duration::from_secs(30)) {
+            Some(JobEvent::PathPoint(p)) => assert_eq!(p.job_id, path_id),
+            other => panic!("expected first PathPoint, got {:?}", other.map(|e| e.job_id())),
+        }
+        assert!(sched.cancel(path_id));
+        let mut extra_points = 0;
+        loop {
+            match sched.recv_event_timeout(Duration::from_secs(30)) {
+                Some(JobEvent::PathPoint(_)) => extra_points += 1,
+                Some(JobEvent::Cancelled { job_id, points_emitted }) => {
+                    assert_eq!(job_id, path_id);
+                    assert_eq!(points_emitted, 1 + extra_points);
+                    break;
+                }
+                other => panic!("unexpected event {:?}", other.map(|e| e.job_id())),
+            }
+        }
+        assert!(
+            extra_points <= 1,
+            "cancelled path must stop within one λ point, saw {extra_points} more"
+        );
+        // the worker is free again: a fresh fit completes
+        let lam = quadratic_lambda_max(&ds.design, &ds.y) / 10.0;
+        sched.submit_fit(Arc::clone(&ds), specs::lasso(lam), SolverOpts::default());
+        match sched.recv_event_timeout(Duration::from_secs(30)) {
+            Some(JobEvent::FitDone(o)) => assert!(o.result.converged),
+            other => panic!("worker wedged after cancel: {:?}", other.map(|e| e.job_id())),
+        }
+        sched.shutdown();
+    }
+
+    #[test]
+    fn deadline_returns_partial_path_with_certificate() {
+        let ds = dataset(7);
+        let sched = FitScheduler::start(1);
+        let ratios: Vec<f64> = (1..=16).map(|k| 1.0 / (k as f64 + 1.0)).collect();
+        let deadline = Instant::now() + Duration::from_millis(90);
+        let (job_id, _ctl) = sched.submit_with(
+            Job::Path {
+                dataset: Arc::clone(&ds),
+                spec: slow_lasso(1.0, 40),
+                ratios,
+                opts: SolverOpts::default(),
+            },
+            JobPolicy::default().with_deadline(deadline),
+        );
+        let mut points = 0;
+        loop {
+            match sched.recv_event_timeout(Duration::from_secs(30)) {
+                Some(JobEvent::PathPoint(p)) => {
+                    assert!(p.point.objective.is_finite(), "partial point objective not finite");
+                    assert!(p.kkt.is_finite(), "partial point certificate not finite");
+                    points += 1;
+                }
+                Some(JobEvent::PathDone(s)) => {
+                    assert_eq!(s.job_id, job_id);
+                    assert!(s.timed_out, "deadline-bounded sweep must report timed_out");
+                    assert_eq!(s.n_points, points);
+                    assert_eq!(s.n_planned, 16);
+                    assert!(s.n_points < 16, "sweep should have been cut short");
+                    break;
+                }
+                other => panic!("unexpected event {:?}", other.map(|e| e.job_id())),
+            }
+        }
+        sched.shutdown();
+    }
+
+    #[test]
+    fn interactive_fit_preempts_batch_path_between_points() {
+        let ds = dataset(8);
+        let lam = quadratic_lambda_max(&ds.design, &ds.y) / 10.0;
+        let sched = FitScheduler::start(1); // single worker forces preemption
+        let ratios: Vec<f64> = (1..=12).map(|k| 1.0 / (k as f64 + 1.0)).collect();
+        let n_points = ratios.len();
+        let (path_id, _) = sched.submit_with(
+            Job::Path {
+                dataset: Arc::clone(&ds),
+                spec: slow_lasso(1.0, 20),
+                ratios,
+                opts: SolverOpts::default(),
+            },
+            JobPolicy::default(),
+        );
+        // let the sweep start, then inject an interactive fit
+        std::thread::sleep(Duration::from_millis(50));
+        let (fit_id, _) = sched.submit_with(
+            Job::Fit {
+                dataset: Arc::clone(&ds),
+                spec: specs::lasso(lam),
+                opts: SolverOpts::default(),
+            },
+            JobPolicy::interactive(),
+        );
+        let mut order = Vec::new();
+        let mut indices = Vec::new();
+        let mut terminals = 0;
+        while terminals < 2 {
+            match sched.recv_event_timeout(Duration::from_secs(60)) {
+                Some(JobEvent::PathPoint(p)) => {
+                    assert_eq!(p.job_id, path_id);
+                    indices.push(p.index);
+                }
+                Some(JobEvent::FitDone(o)) => {
+                    assert_eq!(o.job_id, fit_id);
+                    order.push("fit");
+                    terminals += 1;
+                }
+                Some(JobEvent::PathDone(s)) => {
+                    assert_eq!(s.job_id, path_id);
+                    assert!(!s.timed_out);
+                    assert_eq!(s.n_points, n_points, "preempted sweep must still finish");
+                    order.push("path");
+                    terminals += 1;
+                }
+                other => panic!("unexpected event {:?}", other.map(|e| e.job_id())),
+            }
+        }
+        assert_eq!(
+            order,
+            vec!["fit", "path"],
+            "interactive fit must complete before the batch sweep"
+        );
+        // every λ index exactly once, in order, across the preemption
+        assert_eq!(indices, (0..n_points).collect::<Vec<_>>());
+        sched.shutdown();
+    }
+
+    #[test]
+    fn cancel_while_queued_never_runs() {
+        let ds = dataset(9);
+        let sched = FitScheduler::start(1);
+        // occupy the single worker
+        let ratios: Vec<f64> = (1..=8).map(|k| 1.0 / (k as f64 + 1.0)).collect();
+        let (path_id, _) = sched.submit_with(
+            Job::Path {
+                dataset: Arc::clone(&ds),
+                spec: slow_lasso(1.0, 25),
+                ratios,
+                opts: SolverOpts::default(),
+            },
+            JobPolicy::default(),
+        );
+        // queue an interactive fit and cancel it before it can start
+        let (queued_id, _) = sched.submit_with(
+            Job::Fit {
+                dataset: Arc::clone(&ds),
+                spec: Box::new(PanicSpec), // would fail loudly if it ever ran
+                opts: SolverOpts::default(),
+            },
+            JobPolicy::interactive(),
+        );
+        assert!(sched.cancel(queued_id));
+        sched.cancel(path_id);
+        let mut saw_queued_cancel = false;
+        let mut terminals = 0;
+        while terminals < 2 {
+            match sched.recv_event_timeout(Duration::from_secs(30)) {
+                Some(JobEvent::Cancelled { job_id, points_emitted }) => {
+                    if job_id == queued_id {
+                        assert_eq!(points_emitted, 0);
+                        saw_queued_cancel = true;
+                    }
+                    terminals += 1;
+                }
+                Some(JobEvent::PathPoint(_)) => {}
+                Some(JobEvent::PathDone(_)) | Some(JobEvent::FitDone(_)) => terminals += 1,
+                Some(JobEvent::Failed { message, .. }) => {
+                    panic!("cancelled queued job ran anyway: {message}")
+                }
+                other => panic!("unexpected event {:?}", other.map(|e| e.job_id())),
+            }
+        }
+        assert!(saw_queued_cancel);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn killed_workers_surface_scheduler_down() {
+        let sched = FitScheduler::start(2);
+        assert_eq!(sched.workers_alive(), 2);
+        sched.kill_workers(2);
+        match sched.recv_event_timeout(Duration::from_secs(30)) {
+            Some(JobEvent::SchedulerDown) => {}
+            other => panic!("expected SchedulerDown, got {:?}", other.map(|e| e.job_id())),
+        }
+        assert_eq!(sched.workers_alive(), 0);
+        // the channel is closed now; recv_event keeps reporting down
+        // instead of blocking or panicking
+        assert!(matches!(sched.recv_event(), JobEvent::SchedulerDown));
+        // submitting into a dead pool must not panic (the service layer
+        // rejects before this point; the queue just holds the job)
+        let ds = dataset(10);
+        sched.submit_fit(Arc::clone(&ds), specs::lasso(0.5), SolverOpts::default());
         sched.shutdown();
     }
 }

@@ -1,0 +1,1034 @@
+//! The production fit service: a std-only TCP front door over
+//! [`FitScheduler`] (`skglm serve`).
+//!
+//! Concurrent clients speak the length-prefixed JSON protocol of
+//! [`super::wire`]; every request envelope carries `session` and `tenant`
+//! ids, and every reply echoes the request's `req` correlation id so
+//! replies and streamed job events share one connection. The service
+//! enforces the robustness contract end to end:
+//!
+//! - **Typed errors, never dropped connections** — malformed frames,
+//!   unknown fields, out-of-range λ, depth/size bombs all get
+//!   `{"type":"error","code":...}` frames and the connection lives on;
+//!   only genuine transport loss tears it down.
+//! - **Admission control** — at most `max_queue` jobs queued or running;
+//!   beyond that submits are rejected with `code:"rejected"` and a
+//!   `retry_after_ms` hint (clients back off instead of piling on).
+//! - **Deadlines** — `deadline_ms` becomes a cooperative
+//!   [`crate::solver::SolveBudget`]; a deadline-exceeded job still
+//!   returns its partial result with a finite objective and its
+//!   optimality certificate, marked `outcome:"timeout"`.
+//! - **Priorities** — `priority:"interactive"` fits preempt running
+//!   batch path sweeps at λ-point granularity (scheduler-level
+//!   [`Priority`]).
+//! - **Cancellation** — `cancel` (or the submitting client
+//!   disconnecting mid-stream) stops the job within one λ point and
+//!   frees the worker; orphaned jobs never wedge the pool.
+//! - **Tenant byte budgets** — each tenant's datasets are metered
+//!   against the shared [`DatasetCache`]; a tenant over budget has its
+//!   idle datasets evicted first and is refused with
+//!   `code:"tenant_budget"` only when eviction cannot make room.
+//! - **Fault injection** — a [`FaultPlan`] deterministically injects
+//!   worker panics, slow solves, worker deaths, truncated frames and
+//!   dropped connections, so every degradation path above is testable.
+//!
+//! The scheduler's event stream is owned by one **router** thread that
+//! fans events out to per-connection writer threads; when the last
+//! worker dies ([`JobEvent::SchedulerDown`]) the router fails every live
+//! job, broadcasts `{"type":"scheduler_down"}`, and brings the service
+//! down with a nonzero exit — no consumer ever blocks on a dead pool.
+
+use super::cache::DatasetCache;
+use super::fault::{ConnFaults, FaultPlan, FaultSpec};
+use super::job::{specs, FitSpec};
+use super::scheduler::{FitScheduler, Job, JobEvent, JobPolicy, Priority};
+use super::wire::{read_frame, write_frame, write_truncated_frame, WireError, DEFAULT_MAX_FRAME};
+use crate::data::{correlated, poisson_correlated, CorrelatedSpec, Dataset};
+use crate::util::json::Json;
+use std::collections::{HashMap, VecDeque};
+use std::io::Write as _;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server configuration (see `skglm serve --help` for the CLI surface).
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests).
+    pub addr: String,
+    /// Solver worker threads.
+    pub workers: usize,
+    /// Admission cap: jobs queued or running before submits are rejected.
+    pub max_queue: usize,
+    /// Per-frame payload cap in bytes.
+    pub max_frame: usize,
+    /// Byte budget for the shared dataset/coefficient cache.
+    pub cache_bytes: Option<usize>,
+    /// Per-tenant byte budget inside that cache.
+    pub tenant_bytes: Option<usize>,
+    /// Active fault plan (empty in production).
+    pub faults: FaultPlan,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            max_queue: 32,
+            max_frame: DEFAULT_MAX_FRAME,
+            cache_bytes: None,
+            tenant_bytes: None,
+            faults: FaultPlan::default(),
+        }
+    }
+}
+
+/// Why the service stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExitReason {
+    /// Clean stop ([`ServiceHandle::stop`] or a `shutdown` verb).
+    Stopped,
+    /// The worker pool died with work outstanding (fault or panic storm).
+    SchedulerDown,
+}
+
+/// What a job is doing right now (the `status` verb reports this).
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum JobState {
+    Live,
+    Done(&'static str),
+}
+
+/// Whether a job was submitted as a single fit or a path sweep — fits
+/// run as 1-point paths internally, and the router folds their
+/// `PathPoint` + `PathDone` pair back into one `fit_done` frame.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum JobKind {
+    Fit,
+    Path,
+}
+
+struct JobRecord {
+    kind: JobKind,
+    tenant: String,
+    label: String,
+    req: u64,
+    /// writer channels of every subscribed connection
+    sinks: Vec<Sender<Json>>,
+    points_emitted: usize,
+    /// fit-kind only: the solved point, folded into `fit_done`
+    fit_point: Option<Json>,
+    state: JobState,
+}
+
+#[derive(Default)]
+struct JobTable {
+    live: HashMap<u64, JobRecord>,
+    /// terminal outcomes kept for late `status` queries (bounded)
+    done: VecDeque<(u64, JobRecord)>,
+}
+
+impl JobTable {
+    fn record(&mut self, id: u64) -> Option<&mut JobRecord> {
+        self.live.get_mut(&id)
+    }
+
+    fn finish(&mut self, id: u64, outcome: &'static str) {
+        if let Some(mut rec) = self.live.remove(&id) {
+            rec.state = JobState::Done(outcome);
+            rec.sinks.clear();
+            rec.fit_point = None;
+            self.done.push_back((id, rec));
+            while self.done.len() > 256 {
+                self.done.pop_front();
+            }
+        }
+    }
+
+    fn status_of(&self, id: u64) -> Option<(&JobRecord, &'static str)> {
+        if let Some(rec) = self.live.get(&id) {
+            return Some((rec, "live"));
+        }
+        self.done.iter().rev().find(|(i, _)| *i == id).map(|(_, rec)| {
+            let s = match rec.state {
+                JobState::Done(s) => s,
+                JobState::Live => "live",
+            };
+            (rec, s)
+        })
+    }
+}
+
+/// Per-tenant accounting: which cached datasets the tenant created and
+/// how many of its jobs are still live (cancellation-on-disconnect and
+/// budget eviction both consult this).
+#[derive(Default)]
+struct TenantLedger {
+    /// tenant → dataset descriptor keys it has materialized
+    datasets: HashMap<String, Vec<String>>,
+}
+
+struct ServerShared {
+    scheduler: Mutex<Option<FitScheduler>>,
+    cache: Arc<DatasetCache>,
+    jobs: Mutex<JobTable>,
+    tenants: Mutex<TenantLedger>,
+    /// descriptor key → materialized dataset (shared across submits)
+    datasets: Mutex<HashMap<String, Arc<Dataset>>>,
+    /// accepted submits, total (fault-plan index space)
+    submits: AtomicUsize,
+    stop: Arc<AtomicBool>,
+    stop_requested: Arc<AtomicBool>,
+    config: ServiceConfig,
+}
+
+impl ServerShared {
+    fn with_scheduler<R>(&self, f: impl FnOnce(&FitScheduler) -> R) -> Option<R> {
+        self.scheduler.lock().unwrap().as_ref().map(f)
+    }
+}
+
+/// A running service instance.
+pub struct ServiceHandle {
+    /// The actual bound address (resolves port 0).
+    pub addr: SocketAddr,
+    shared: Arc<ServerShared>,
+    accept: Option<JoinHandle<()>>,
+    router: Option<JoinHandle<ExitReason>>,
+}
+
+impl ServiceHandle {
+    /// Ask the service to stop accepting and shut down.
+    pub fn stop(&self) {
+        self.shared.stop_requested.store(true, Ordering::SeqCst);
+        self.shared.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Is the service still running?
+    pub fn is_running(&self) -> bool {
+        !self.shared.stop.load(Ordering::SeqCst)
+    }
+
+    /// Block until the service has fully stopped (accept loop, workers
+    /// and router all joined) and report why it exited.
+    pub fn join(mut self) -> ExitReason {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // graceful worker shutdown: the last worker emits SchedulerDown,
+        // which lets the router exit its recv loop
+        if let Some(sched) = self.shared.scheduler.lock().unwrap().take() {
+            sched.shutdown();
+        }
+        match self.router.take() {
+            Some(h) => h.join().unwrap_or(ExitReason::SchedulerDown),
+            None => ExitReason::Stopped,
+        }
+    }
+}
+
+/// Spawn the service: bind, start the scheduler + router, accept loop.
+pub fn spawn(config: ServiceConfig) -> std::io::Result<ServiceHandle> {
+    let listener = TcpListener::bind(&config.addr)?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+
+    let mut config = config;
+    if let Some(b) = config.faults.cache_bytes {
+        config.cache_bytes = Some(b);
+    }
+    if let Some(b) = config.faults.tenant_bytes {
+        config.tenant_bytes = Some(b);
+    }
+    let cache = Arc::new(match config.cache_bytes {
+        Some(b) => DatasetCache::with_budget(b),
+        None => DatasetCache::new(),
+    });
+    let mut scheduler = FitScheduler::start_with_cache(config.workers, Arc::clone(&cache));
+    let events = scheduler.split_events();
+
+    let shared = Arc::new(ServerShared {
+        scheduler: Mutex::new(Some(scheduler)),
+        cache,
+        jobs: Mutex::new(JobTable::default()),
+        tenants: Mutex::new(TenantLedger::default()),
+        datasets: Mutex::new(HashMap::new()),
+        submits: AtomicUsize::new(0),
+        stop: Arc::new(AtomicBool::new(false)),
+        stop_requested: Arc::new(AtomicBool::new(false)),
+        config,
+    });
+
+    let router = {
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || route_events(events, &shared))
+    };
+
+    let accept = {
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || {
+            while !shared.stop.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let shared = Arc::clone(&shared);
+                        std::thread::spawn(move || serve_connection(stream, &shared));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        })
+    };
+
+    Ok(ServiceHandle { addr, shared, accept: Some(accept), router: Some(router) })
+}
+
+// ---------------------------------------------------------------------
+// router: scheduler events → subscriber frames
+// ---------------------------------------------------------------------
+
+fn route_events(events: Receiver<JobEvent>, shared: &ServerShared) -> ExitReason {
+    for event in events.iter() {
+        match event {
+            JobEvent::SchedulerDown => {
+                let clean = shared.stop_requested.load(Ordering::SeqCst);
+                if !clean {
+                    // fail every live job, tell every subscriber, and
+                    // bring the whole service down: a dead pool must be
+                    // loud, not a silent hang
+                    let mut jobs = shared.jobs.lock().unwrap();
+                    let ids: Vec<u64> = jobs.live.keys().copied().collect();
+                    for id in ids {
+                        if let Some(rec) = jobs.record(id) {
+                            let frame = Json::obj()
+                                .with("type", "scheduler_down")
+                                .with("job", id as f64)
+                                .with("req", rec.req as f64);
+                            for sink in &rec.sinks {
+                                let _ = sink.send(frame.clone());
+                            }
+                        }
+                        jobs.finish(id, "scheduler_down");
+                    }
+                    shared.stop.store(true, Ordering::SeqCst);
+                }
+                return if clean { ExitReason::Stopped } else { ExitReason::SchedulerDown };
+            }
+            ev => {
+                let id = ev.job_id();
+                let terminal = ev.is_terminal();
+                let mut jobs = shared.jobs.lock().unwrap();
+                let Some(rec) = jobs.record(id) else { continue };
+                let (frame, outcome) = event_frame(ev, rec);
+                if let Some(frame) = frame {
+                    rec.sinks.retain(|sink| sink.send(frame.clone()).is_ok());
+                }
+                if terminal {
+                    jobs.finish(id, outcome);
+                }
+            }
+        }
+    }
+    // channel closed without SchedulerDown: all workers already joined
+    ExitReason::Stopped
+}
+
+/// Render one scheduler event as a wire frame for `rec`'s subscribers.
+/// Returns `(frame, terminal_outcome)`; `frame` is `None` when the event
+/// is folded into a later one (a fit-kind job's single `PathPoint`).
+fn event_frame(ev: JobEvent, rec: &mut JobRecord) -> (Option<Json>, &'static str) {
+    let base = |ty: &str, job: u64| {
+        Json::obj()
+            .with("type", ty)
+            .with("job", job as f64)
+            .with("req", rec.req as f64)
+    };
+    match ev {
+        JobEvent::PathPoint(p) => {
+            rec.points_emitted += 1;
+            let point = base("path_point", p.job_id)
+                .with("index", p.index as f64)
+                .with("lambda", p.point.lambda)
+                .with("lambda_ratio", p.point.lambda_ratio)
+                .with("objective", p.point.objective)
+                .with("support_size", p.point.support_size as f64)
+                .with("epochs", p.epochs as f64)
+                .with("n_screened", p.n_screened as f64)
+                .with("kkt", p.kkt)
+                .with("converged", p.converged)
+                .with("certificate", p.certificate.name());
+            if rec.kind == JobKind::Fit {
+                // folded into fit_done at PathDone
+                rec.fit_point = Some(point);
+                (None, "live")
+            } else {
+                (Some(point), "live")
+            }
+        }
+        JobEvent::PathDone(s) => {
+            let outcome = if s.timed_out { "timeout" } else { "ok" };
+            if rec.kind == JobKind::Fit {
+                let mut frame = match rec.fit_point.take() {
+                    Some(point) => {
+                        let mut f = point;
+                        if let Json::Obj(fields) = &mut f {
+                            fields.retain(|(k, _)| k != "type" && k != "index");
+                        }
+                        f.with("type", "fit_done")
+                    }
+                    // deadline hit before the single point finished:
+                    // still a typed terminal frame, with no point data
+                    None => base("fit_done", s.job_id),
+                };
+                frame = frame
+                    .with("label", s.label.as_str())
+                    .with("total_epochs", s.total_epochs as f64)
+                    .with("total_time", s.total_time)
+                    .with("outcome", outcome);
+                (Some(frame), outcome)
+            } else {
+                let frame = base("path_done", s.job_id)
+                    .with("label", s.label.as_str())
+                    .with("n_points", s.n_points as f64)
+                    .with("n_planned", s.n_planned as f64)
+                    .with("total_epochs", s.total_epochs as f64)
+                    .with("total_time", s.total_time)
+                    .with("outcome", outcome);
+                (Some(frame), outcome)
+            }
+        }
+        JobEvent::FitDone(o) => {
+            // direct Job::Fit submissions (not used by the wire path, but
+            // kept total so library users can share a service scheduler)
+            let outcome = if o.timed_out { "timeout" } else { "ok" };
+            let frame = base("fit_done", o.job_id)
+                .with("label", o.label.as_str())
+                .with("lambda", o.lambda)
+                .with("objective", o.result.objective)
+                .with("support_size", o.result.support().len() as f64)
+                .with("kkt", o.result.kkt)
+                .with("converged", o.result.converged)
+                .with("certificate", o.result.certificate.name())
+                .with("outcome", outcome);
+            (Some(frame), outcome)
+        }
+        JobEvent::Failed { job_id, message } => {
+            let frame = base("failed", job_id).with("message", message.as_str());
+            (Some(frame), "failed")
+        }
+        JobEvent::Cancelled { job_id, points_emitted } => {
+            let frame =
+                base("cancelled", job_id).with("points_emitted", points_emitted as f64);
+            (Some(frame), "cancelled")
+        }
+        JobEvent::SchedulerDown => unreachable!("handled by the router loop"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// per-connection reader / writer
+// ---------------------------------------------------------------------
+
+/// Writer thread: serializes frames from the channel onto the socket,
+/// applying connection-scoped faults (frame truncation / mid-stream
+/// disconnect) when the plan targets this connection's tenant.
+fn run_writer(stream: TcpStream, frames: Receiver<Json>, faults: Arc<Mutex<ConnFaults>>) {
+    let mut stream = stream;
+    let mut sent = 0usize;
+    for frame in frames.iter() {
+        let f = *faults.lock().unwrap();
+        if let Some(n) = f.truncate_at {
+            if sent + 1 == n {
+                let _ = write_truncated_frame(&mut stream, &frame, 5);
+                let _ = stream.flush();
+                let _ = stream.shutdown(Shutdown::Both);
+                return;
+            }
+        }
+        if let Some(n) = f.drop_after {
+            if sent >= n {
+                let _ = stream.shutdown(Shutdown::Both);
+                return;
+            }
+        }
+        if write_frame(&mut stream, &frame).is_err() {
+            return;
+        }
+        sent += 1;
+    }
+}
+
+fn serve_connection(stream: TcpStream, shared: &ServerShared) {
+    let Ok(write_half) = stream.try_clone() else { return };
+    let (tx, rx) = channel::<Json>();
+    let conn_faults = Arc::new(Mutex::new(ConnFaults::default()));
+    let writer = {
+        let faults = Arc::clone(&conn_faults);
+        std::thread::spawn(move || run_writer(write_half, rx, faults))
+    };
+
+    let mut conn = ConnState {
+        tx,
+        tenant: None,
+        submitted: Vec::new(),
+        faults: conn_faults,
+    };
+    let mut stream = stream;
+    let max_frame = shared.config.max_frame;
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match read_frame(&mut stream, max_frame) {
+            Ok(Some(frame)) => handle_request(frame, &mut conn, shared),
+            Ok(None) => break, // clean close
+            Err(e) if e.recoverable() => {
+                // typed rejection; the connection keeps serving
+                let _ = conn.tx.send(error_frame(0, e.code(), &e.to_string()));
+            }
+            Err(_) => break, // transport loss / truncation
+        }
+    }
+    // a submitter that vanished mid-stream must not wedge a worker:
+    // cancel every still-live job this connection owns, which frees the
+    // worker within one λ point
+    for id in &conn.submitted {
+        let live = shared.jobs.lock().unwrap().live.contains_key(id);
+        if live {
+            shared.with_scheduler(|s| s.cancel(*id));
+        }
+    }
+    drop(conn);
+    let _ = writer.join();
+}
+
+struct ConnState {
+    tx: Sender<Json>,
+    tenant: Option<String>,
+    /// jobs this connection submitted (cancelled if it disconnects)
+    submitted: Vec<u64>,
+    faults: Arc<Mutex<ConnFaults>>,
+}
+
+fn error_frame(req: u64, code: &str, message: &str) -> Json {
+    Json::obj()
+        .with("type", "error")
+        .with("req", req as f64)
+        .with("code", code)
+        .with("message", message)
+}
+
+// ---------------------------------------------------------------------
+// request dispatch
+// ---------------------------------------------------------------------
+
+const ENVELOPE_FIELDS: &[&str] = &["v", "verb", "req", "session", "tenant"];
+
+fn handle_request(frame: Json, conn: &mut ConnState, shared: &ServerShared) {
+    let req = frame.get("req").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let reply = dispatch(&frame, req, conn, shared);
+    let _ = conn.tx.send(reply);
+}
+
+fn dispatch(frame: &Json, req: u64, conn: &mut ConnState, shared: &ServerShared) -> Json {
+    let Some(fields) = frame.fields() else {
+        return error_frame(req, "bad_request", "request frame must be a json object");
+    };
+    let Some(verb) = frame.get("verb").and_then(Json::as_str) else {
+        return error_frame(req, "bad_request", "missing string field 'verb'");
+    };
+    if let Some(v) = frame.get("v").and_then(Json::as_f64) {
+        if v as u64 != super::wire::WIRE_VERSION {
+            return error_frame(req, "bad_version", "unsupported protocol version");
+        }
+    }
+    let tenant = frame
+        .get("tenant")
+        .and_then(Json::as_str)
+        .unwrap_or("anon")
+        .to_string();
+    if conn.tenant.as_deref() != Some(&tenant) {
+        conn.tenant = Some(tenant.clone());
+        // connection-scoped fault plan activates once the tenant is known
+        *conn.faults.lock().unwrap() = shared.config.faults.conn_faults(&tenant);
+    }
+
+    let verb_fields: &[&str] = match verb {
+        "ping" | "stats" | "shutdown" => &[],
+        "submit" => &[
+            "kind", "model", "dataset", "lambda_ratio", "grid", "params", "deadline_ms",
+            "priority", "tol",
+        ],
+        "cancel" | "status" | "subscribe" => &["job"],
+        _ => return error_frame(req, "unknown_verb", &format!("unknown verb {verb:?}")),
+    };
+    for (key, _) in fields {
+        if !ENVELOPE_FIELDS.contains(&key.as_str()) && !verb_fields.contains(&key.as_str()) {
+            return error_frame(
+                req,
+                "unknown_field",
+                &format!("field {key:?} is not valid for verb {verb:?}"),
+            );
+        }
+    }
+
+    match verb {
+        "ping" => Json::obj()
+            .with("type", "pong")
+            .with("req", req as f64)
+            .with("v", super::wire::WIRE_VERSION as f64),
+        "stats" => {
+            let stats = shared.cache.stats();
+            let (pending, workers) = shared
+                .with_scheduler(|s| (s.pending(), s.workers_alive()))
+                .unwrap_or((0, 0));
+            Json::obj()
+                .with("type", "stats")
+                .with("req", req as f64)
+                .with("pending", pending as f64)
+                .with("workers_alive", workers as f64)
+                .with("cache_bytes", shared.cache.bytes() as f64)
+                .with("evictions", stats.evictions as f64)
+        }
+        "shutdown" => {
+            shared.stop_requested.store(true, Ordering::SeqCst);
+            shared.stop.store(true, Ordering::SeqCst);
+            Json::obj().with("type", "shutting_down").with("req", req as f64)
+        }
+        "cancel" => {
+            let Some(job) = frame.get("job").and_then(Json::as_f64) else {
+                return error_frame(req, "bad_request", "cancel needs a numeric 'job'");
+            };
+            let found = shared.with_scheduler(|s| s.cancel(job as u64)).unwrap_or(false);
+            Json::obj()
+                .with("type", "cancel_ok")
+                .with("req", req as f64)
+                .with("job", job)
+                .with("found", found)
+        }
+        "status" => {
+            let Some(job) = frame.get("job").and_then(Json::as_f64) else {
+                return error_frame(req, "bad_request", "status needs a numeric 'job'");
+            };
+            let jobs = shared.jobs.lock().unwrap();
+            match jobs.status_of(job as u64) {
+                Some((rec, state)) => Json::obj()
+                    .with("type", "status")
+                    .with("req", req as f64)
+                    .with("job", job)
+                    .with("state", state)
+                    .with("label", rec.label.as_str())
+                    .with("tenant", rec.tenant.as_str())
+                    .with("points_emitted", rec.points_emitted as f64),
+                None => error_frame(req, "job_not_found", "no such job"),
+            }
+        }
+        "subscribe" => {
+            let Some(job) = frame.get("job").and_then(Json::as_f64) else {
+                return error_frame(req, "bad_request", "subscribe needs a numeric 'job'");
+            };
+            let mut jobs = shared.jobs.lock().unwrap();
+            match jobs.record(job as u64) {
+                Some(rec) => {
+                    rec.sinks.push(conn.tx.clone());
+                    Json::obj()
+                        .with("type", "subscribed")
+                        .with("req", req as f64)
+                        .with("job", job)
+                }
+                None => error_frame(req, "job_not_found", "job is not live"),
+            }
+        }
+        "submit" => handle_submit(frame, req, &tenant, conn, shared),
+        _ => unreachable!("verbs validated above"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// submit: validation → admission → tenant budget → scheduler
+// ---------------------------------------------------------------------
+
+/// A validated dataset descriptor (also the cache-registry key).
+struct DatasetRef {
+    key: String,
+    seed: u64,
+    build: Box<dyn FnOnce() -> Dataset>,
+    /// rough residency estimate (design bytes) for admission-time
+    /// tenant-budget checks, before the dataset is materialized
+    est_bytes: usize,
+}
+
+fn parse_dataset(spec: &Json) -> Result<DatasetRef, String> {
+    let Some(fields) = spec.fields() else {
+        return Err("'dataset' must be an object".to_string());
+    };
+    let kind = spec
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or("dataset needs a string 'kind'")?;
+    let seed = spec.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let num = |k: &str, default: f64| spec.get(k).and_then(Json::as_f64).unwrap_or(default);
+    let allowed: &[&str] = match kind {
+        "fig1" => &["kind", "seed", "scale"],
+        "correlated" | "poisson" => &["kind", "seed", "n", "p", "rho", "nnz", "snr"],
+        other => return Err(format!("unknown dataset kind {other:?}")),
+    };
+    for (key, _) in fields {
+        if !allowed.contains(&key.as_str()) {
+            return Err(format!("field {key:?} is not valid for dataset kind {kind:?}"));
+        }
+    }
+    match kind {
+        "fig1" => {
+            let scale = num("scale", 0.05);
+            if !(0.001..=1.0).contains(&scale) {
+                return Err(format!("fig1 scale {scale} out of range (0.001..=1)"));
+            }
+            let cs = CorrelatedSpec::figure1(scale);
+            Ok(DatasetRef {
+                key: format!("fig1:{scale}:{seed}"),
+                seed,
+                est_bytes: cs.n * cs.p * 8,
+                build: Box::new(move || correlated(cs, seed)),
+            })
+        }
+        "correlated" | "poisson" => {
+            let n = num("n", 100.0) as usize;
+            let p = num("p", 200.0) as usize;
+            if !(4..=20_000).contains(&n) || !(4..=50_000).contains(&p) {
+                return Err(format!("dataset size n={n}, p={p} out of range"));
+            }
+            let cs = CorrelatedSpec {
+                n,
+                p,
+                rho: num("rho", 0.6).clamp(0.0, 0.99),
+                nnz: (num("nnz", 10.0) as usize).min(p),
+                snr: num("snr", 5.0),
+            };
+            let poisson = kind == "poisson";
+            Ok(DatasetRef {
+                key: format!("{kind}:{n}:{p}:{}:{}:{}:{seed}", cs.rho, cs.nnz, cs.snr),
+                seed,
+                est_bytes: n * p * 8,
+                build: Box::new(move || {
+                    if poisson {
+                        poisson_correlated(cs, seed)
+                    } else {
+                        correlated(cs, seed)
+                    }
+                }),
+            })
+        }
+        _ => unreachable!("kind validated above"),
+    }
+}
+
+fn parse_model(frame: &Json) -> Result<Box<dyn FitSpec>, String> {
+    let model = frame
+        .get("model")
+        .and_then(Json::as_str)
+        .ok_or("submit needs a string 'model'")?;
+    let params = frame.get("params");
+    let param = |k: &str, default: f64| {
+        params.and_then(|p| p.get(k)).and_then(Json::as_f64).unwrap_or(default)
+    };
+    // λ is a placeholder: path submission re-anchors it at λ_max · ratio
+    let spec: Box<dyn FitSpec> = match model {
+        "lasso" => specs::lasso(1.0),
+        "elastic_net" => {
+            let r = param("l1_ratio", 0.5);
+            if !(0.0 < r && r <= 1.0) {
+                return Err(format!("l1_ratio {r} out of range (0,1]"));
+            }
+            specs::elastic_net(1.0, r)
+        }
+        "mcp" => {
+            let g = param("gamma", 3.0);
+            if g <= 1.0 {
+                return Err(format!("mcp gamma {g} must be > 1"));
+            }
+            specs::mcp(1.0, g)
+        }
+        "scad" => {
+            let g = param("gamma", 3.7);
+            if g <= 2.0 {
+                return Err(format!("scad gamma {g} must be > 2"));
+            }
+            specs::scad(1.0, g)
+        }
+        "lq" => {
+            let q = param("q", 0.5);
+            if !(0.0 < q && q < 1.0) {
+                return Err(format!("lq q {q} out of range (0,1)"));
+            }
+            specs::lq(1.0, q)
+        }
+        "poisson" => specs::poisson_l1(1.0),
+        other => return Err(format!("unknown model {other:?}")),
+    };
+    Ok(spec)
+}
+
+fn handle_submit(
+    frame: &Json,
+    req: u64,
+    tenant: &str,
+    conn: &mut ConnState,
+    shared: &ServerShared,
+) -> Json {
+    // ---- validation (all typed rejections, connection survives) ----
+    let kind = match frame.get("kind").and_then(Json::as_str) {
+        Some("fit") => JobKind::Fit,
+        Some("path") => JobKind::Path,
+        Some(other) => {
+            return error_frame(req, "bad_request", &format!("unknown kind {other:?}"))
+        }
+        None => JobKind::Fit,
+    };
+    let ratios: Vec<f64> = match kind {
+        JobKind::Fit => {
+            let r = frame.get("lambda_ratio").and_then(Json::as_f64).unwrap_or(0.1);
+            if !(r > 0.0 && r <= 1.0) || !r.is_finite() {
+                return error_frame(
+                    req,
+                    "bad_lambda",
+                    &format!("lambda_ratio {r} out of range (0,1]"),
+                );
+            }
+            vec![r]
+        }
+        JobKind::Path => {
+            if let Some(grid) = frame.get("grid") {
+                let min = grid.get("min_ratio").and_then(Json::as_f64).unwrap_or(0.01);
+                let count = grid.get("count").and_then(Json::as_f64).unwrap_or(16.0) as usize;
+                if !(min > 0.0 && min < 1.0) {
+                    return error_frame(
+                        req,
+                        "bad_lambda",
+                        &format!("grid min_ratio {min} out of range (0,1)"),
+                    );
+                }
+                if !(2..=1024).contains(&count) {
+                    return error_frame(
+                        req,
+                        "bad_request",
+                        &format!("grid count {count} out of range (2..=1024)"),
+                    );
+                }
+                crate::estimators::path::geometric_grid(min, count)
+            } else {
+                crate::estimators::path::geometric_grid(0.01, 16)
+            }
+        }
+    };
+    let dataset_spec = frame.get("dataset").cloned().unwrap_or_else(|| {
+        Json::obj().with("kind", "fig1").with("scale", 0.02).with("seed", 0.0)
+    });
+    let ds_ref = match parse_dataset(&dataset_spec) {
+        Ok(d) => d,
+        Err(msg) => return error_frame(req, "bad_dataset", &msg),
+    };
+    let spec = match parse_model(frame) {
+        Ok(s) => s,
+        Err(msg) => return error_frame(req, "bad_model", &msg),
+    };
+
+    // ---- admission control (bounded queue; reject with retry hint) ----
+    let pending = shared.with_scheduler(|s| s.pending()).unwrap_or(usize::MAX);
+    if pending >= shared.config.max_queue {
+        let retry_ms = 100 * (1 + pending.min(20)) as f64;
+        return error_frame(req, "rejected", "admission queue is full")
+            .with("retry_after_ms", retry_ms)
+            .with("pending", pending as f64);
+    }
+
+    // ---- tenant byte budget (evict idle datasets before refusing) ----
+    let dataset = {
+        let mut registry = shared.datasets.lock().unwrap();
+        if let Some(budget) = shared.config.tenant_bytes {
+            if !registry.contains_key(&ds_ref.key) {
+                let mut ledger = shared.tenants.lock().unwrap();
+                let keys = ledger.datasets.entry(tenant.to_string()).or_default();
+                let used = |registry: &HashMap<String, Arc<Dataset>>, keys: &[String]| {
+                    keys.iter()
+                        .filter_map(|k| registry.get(k))
+                        .map(|ds| shared.cache.bytes_for(ds))
+                        .sum::<usize>()
+                };
+                if used(&registry, keys) + ds_ref.est_bytes > budget {
+                    // over budget: evict this tenant's datasets, but only
+                    // when none of its jobs are still running on them
+                    let has_live_jobs = shared
+                        .jobs
+                        .lock()
+                        .unwrap()
+                        .live
+                        .values()
+                        .any(|r| r.tenant == tenant);
+                    if !has_live_jobs {
+                        for k in keys.iter() {
+                            if let Some(ds) = registry.get(k) {
+                                shared.cache.evict_dataset(ds);
+                            }
+                            registry.remove(k);
+                        }
+                        keys.clear();
+                    }
+                }
+                if used(&registry, keys) + ds_ref.est_bytes > budget {
+                    return error_frame(
+                        req,
+                        "tenant_budget",
+                        &format!(
+                            "tenant {tenant:?} would exceed its {budget}-byte cache budget"
+                        ),
+                    )
+                    .with("budget_bytes", budget as f64)
+                    .with("estimated_bytes", ds_ref.est_bytes as f64);
+                }
+                keys.push(ds_ref.key.clone());
+            }
+        }
+        match registry.get(&ds_ref.key) {
+            Some(ds) => Arc::clone(ds),
+            None => {
+                let ds = Arc::new((ds_ref.build)());
+                registry.insert(ds_ref.key.clone(), Arc::clone(&ds));
+                ds
+            }
+        }
+    };
+
+    // ---- policy: priority + deadline ----
+    let priority = match frame.get("priority").and_then(Json::as_str) {
+        Some("interactive") => Priority::Interactive,
+        Some("batch") => Priority::Batch,
+        Some(other) => {
+            return error_frame(req, "bad_request", &format!("unknown priority {other:?}"))
+        }
+        // interactive single fits, batch path sweeps by default
+        None => match kind {
+            JobKind::Fit => Priority::Interactive,
+            JobKind::Path => Priority::Batch,
+        },
+    };
+    let mut policy = JobPolicy { priority, deadline: None };
+    if let Some(ms) = frame.get("deadline_ms").and_then(Json::as_f64) {
+        if !(ms > 0.0) || !ms.is_finite() {
+            return error_frame(req, "bad_request", &format!("deadline_ms {ms} invalid"));
+        }
+        policy = policy.with_deadline(Instant::now() + Duration::from_millis(ms as u64));
+    }
+    let mut opts = crate::solver::SolverOpts::default();
+    if let Some(tol) = frame.get("tol").and_then(Json::as_f64) {
+        if !(tol > 0.0) || !tol.is_finite() {
+            return error_frame(req, "bad_request", &format!("tol {tol} invalid"));
+        }
+        opts = opts.with_tol(tol);
+    }
+
+    // ---- fault plan (deterministic by accepted-submit index / seed) ----
+    let submit_index = shared.submits.fetch_add(1, Ordering::SeqCst);
+    let jf = shared.config.faults.job_faults(submit_index, ds_ref.seed);
+    let spec = FaultSpec::wrap(spec, &jf);
+    let label = spec.label();
+    if jf.kill_worker {
+        shared.with_scheduler(|s| s.kill_workers(1));
+    }
+
+    // ---- submit: fits run as 1-point paths (λ_max anchored inside) ----
+    let job = Job::Path { dataset, spec, ratios: ratios.clone(), opts };
+    let Some((id, _ctl)) = shared.with_scheduler(|s| s.submit_with(job, policy)) else {
+        return error_frame(req, "scheduler_down", "worker pool is shut down");
+    };
+    shared.jobs.lock().unwrap().live.insert(
+        id,
+        JobRecord {
+            kind,
+            tenant: tenant.to_string(),
+            label: label.clone(),
+            req,
+            sinks: vec![conn.tx.clone()],
+            points_emitted: 0,
+            fit_point: None,
+            state: JobState::Live,
+        },
+    );
+    conn.submitted.push(id);
+    Json::obj()
+        .with("type", "accepted")
+        .with("req", req as f64)
+        .with("job", id as f64)
+        .with("label", label.as_str())
+        .with("n_points", ratios.len() as f64)
+        .with(
+            "kind",
+            match kind {
+                JobKind::Fit => "fit",
+                JobKind::Path => "path",
+            },
+        )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_default_is_loopback_ephemeral() {
+        let cfg = ServiceConfig::default();
+        assert_eq!(cfg.addr, "127.0.0.1:0");
+        assert!(cfg.max_queue > 0 && cfg.workers > 0);
+    }
+
+    #[test]
+    fn service_spawns_and_stops_cleanly() {
+        let handle = spawn(ServiceConfig {
+            workers: 1,
+            ..ServiceConfig::default()
+        })
+        .expect("bind loopback");
+        assert!(handle.is_running());
+        assert_ne!(handle.addr.port(), 0);
+        handle.stop();
+        assert_eq!(handle.join(), ExitReason::Stopped);
+    }
+
+    #[test]
+    fn dataset_descriptor_validation() {
+        let good = Json::obj().with("kind", "fig1").with("scale", 0.02).with("seed", 3.0);
+        let d = parse_dataset(&good).unwrap();
+        assert_eq!(d.key, "fig1:0.02:3");
+        assert_eq!(d.seed, 3);
+        assert!(d.est_bytes > 0);
+
+        let bad_kind = Json::obj().with("kind", "exotic");
+        assert!(parse_dataset(&bad_kind).is_err());
+        let bad_field = Json::obj().with("kind", "fig1").with("frobnicate", 1.0);
+        assert!(parse_dataset(&bad_field).is_err());
+        let bad_scale = Json::obj().with("kind", "fig1").with("scale", 50.0);
+        assert!(parse_dataset(&bad_scale).is_err());
+    }
+
+    #[test]
+    fn model_validation() {
+        let lasso = Json::obj().with("model", "lasso");
+        assert_eq!(parse_model(&lasso).unwrap().family(), "l1");
+        let mcp = Json::obj()
+            .with("model", "mcp")
+            .with("params", Json::obj().with("gamma", 3.0));
+        assert_eq!(parse_model(&mcp).unwrap().family(), "mcp");
+        let bad_gamma = Json::obj()
+            .with("model", "mcp")
+            .with("params", Json::obj().with("gamma", 0.5));
+        assert!(parse_model(&bad_gamma).is_err());
+        let unknown = Json::obj().with("model", "ridge");
+        assert!(parse_model(&unknown).is_err());
+    }
+}

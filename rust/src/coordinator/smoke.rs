@@ -1,0 +1,462 @@
+//! Scripted loopback acceptance session for the fit service
+//! (`skglm client --script smoke`, run by CI).
+//!
+//! Self-hosts a service on an ephemeral port under a deterministic
+//! [`FaultPlan`] and drives every robustness claim end to end through
+//! real sockets: typed error frames on malformed/bomb/oversized input
+//! (connection survives each), admission-control rejection with
+//! `retry_after_ms` plus a client retry that eventually lands,
+//! mid-path cancellation within one λ point, deadline-bounded partial
+//! results with optimality certificates, an injected worker panic
+//! survived by resubmission, a mid-stream client disconnect that frees
+//! (not wedges) the worker, tenant byte-budget enforcement, injected
+//! frame truncation and connection drops, and finally a full worker-pool
+//! death that surfaces as `scheduler_down` and a nonzero service exit.
+//!
+//! Every step lands in a structured JSON transcript (CI uploads it as an
+//! artifact); any failed step fails the suite.
+
+use super::client::{ClientConfig, ClientError, ServiceClient};
+use super::fault::FaultPlan;
+use super::service::{spawn, ExitReason, ServiceConfig};
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// Dataset seeds the fault plan keys on (arbitrary, just distinctive).
+const SLOW_SEED: u64 = 111;
+const PANIC_SEED: u64 = 666999;
+const DIE_SEED: u64 = 424242;
+
+const EVENT_TIMEOUT: Duration = Duration::from_secs(30);
+
+struct Transcript {
+    steps: Vec<Json>,
+    passed: bool,
+}
+
+impl Transcript {
+    fn new() -> Self {
+        Self { steps: Vec::new(), passed: true }
+    }
+
+    fn record(&mut self, name: &str, ok: bool, detail: String) {
+        if !ok {
+            self.passed = false;
+        }
+        eprintln!("  [{}] {name}: {detail}", if ok { "ok" } else { "FAIL" });
+        self.steps.push(
+            Json::obj()
+                .with("name", name)
+                .with("ok", ok)
+                .with("detail", detail.as_str()),
+        );
+    }
+
+    fn into_json(self, exit: &str) -> (Json, bool) {
+        let passed = self.passed;
+        (
+            Json::obj()
+                .with("suite", "serve-smoke")
+                .with("passed", passed)
+                .with("service_exit", exit)
+                .with("steps", Json::Arr(self.steps)),
+            passed,
+        )
+    }
+}
+
+fn client(addr: &str, tenant: &str) -> Result<ServiceClient, ClientError> {
+    ServiceClient::connect(ClientConfig {
+        addr: addr.to_string(),
+        tenant: tenant.to_string(),
+        session: format!("smoke-{tenant}"),
+        max_retries: 12,
+        retry_seed: 7,
+        ..ClientConfig::default()
+    })
+}
+
+fn dataset(kind: &str, n: f64, p: f64, seed: u64) -> Json {
+    Json::obj()
+        .with("kind", kind)
+        .with("n", n)
+        .with("p", p)
+        .with("seed", seed as f64)
+}
+
+fn fit_body(seed: u64) -> Vec<(&'static str, Json)> {
+    vec![
+        ("kind", Json::Str("fit".into())),
+        ("model", Json::Str("lasso".into())),
+        ("lambda_ratio", Json::Num(0.1)),
+        ("dataset", dataset("correlated", 40.0, 60.0, seed)),
+    ]
+}
+
+fn path_body(seed: u64, count: f64) -> Vec<(&'static str, Json)> {
+    vec![
+        ("kind", Json::Str("path".into())),
+        ("model", Json::Str("lasso".into())),
+        ("grid", Json::obj().with("min_ratio", 0.05).with("count", count)),
+        ("dataset", dataset("correlated", 40.0, 60.0, seed)),
+    ]
+}
+
+/// Run the whole scripted session; returns the transcript and overall
+/// pass/fail.
+pub fn run_smoke() -> (Json, bool) {
+    let mut t = Transcript::new();
+    let faults = FaultPlan::parse(&format!(
+        "slow_seed={SLOW_SEED}@200,panic_seed={PANIC_SEED},die_seed={DIE_SEED},\
+         truncate_tenant=chaos@2,drop_conn_tenant=evil@3"
+    ))
+    .expect("static fault plan parses");
+    let handle = match spawn(ServiceConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        max_queue: 3,
+        max_frame: 64 << 10,
+        tenant_bytes: Some(150_000),
+        faults,
+        ..ServiceConfig::default()
+    }) {
+        Ok(h) => h,
+        Err(e) => {
+            t.record("spawn", false, format!("bind failed: {e}"));
+            return t.into_json("never_started");
+        }
+    };
+    let addr = handle.addr.to_string();
+
+    if let Err(e) = drive(&addr, &mut t) {
+        t.record("session", false, format!("aborted: {e}"));
+    }
+
+    // the finale killed every worker; the service must exit loudly
+    let exit = handle.join();
+    t.record(
+        "service_exit_is_scheduler_down",
+        exit == ExitReason::SchedulerDown,
+        format!("{exit:?}"),
+    );
+    t.into_json(if exit == ExitReason::SchedulerDown { "scheduler_down" } else { "stopped" })
+}
+
+fn drive(addr: &str, t: &mut Transcript) -> Result<(), ClientError> {
+    let mut c = client(addr, "smoke")?;
+
+    // --- liveness ---
+    let pong = c.ping()?;
+    t.record(
+        "ping",
+        pong.get("type").and_then(Json::as_str) == Some("pong"),
+        pong.render(),
+    );
+
+    // --- typed errors; the connection must survive every one ---
+    c.send_bytes(&{
+        let mut b = 7u32.to_be_bytes().to_vec();
+        b.extend_from_slice(b"not-jso");
+        b
+    })?;
+    let err = c.recv_any(EVENT_TIMEOUT)?;
+    t.record(
+        "malformed_frame_typed_error",
+        err.get("code").and_then(Json::as_str) == Some("parse_error"),
+        err.render(),
+    );
+
+    let bomb = "[".repeat(50_000);
+    c.send_bytes(&{
+        let mut b = (bomb.len() as u32).to_be_bytes().to_vec();
+        b.extend_from_slice(bomb.as_bytes());
+        b
+    })?;
+    let err = c.recv_any(EVENT_TIMEOUT)?;
+    t.record(
+        "depth_bomb_typed_error",
+        err.get("code").and_then(Json::as_str) == Some("depth_limit"),
+        err.render(),
+    );
+
+    let huge = vec![b'x'; 80 << 10]; // over the 64 KiB frame cap
+    c.send_bytes(&{
+        let mut b = (huge.len() as u32).to_be_bytes().to_vec();
+        b.extend_from_slice(&huge);
+        b
+    })?;
+    let err = c.recv_any(EVENT_TIMEOUT)?;
+    t.record(
+        "oversized_frame_typed_error",
+        err.get("code").and_then(Json::as_str) == Some("oversized_frame"),
+        err.render(),
+    );
+
+    let err = c.request_frame(
+        "submit",
+        &[("model", Json::Str("lasso".into())), ("frobnicate", Json::Num(1.0))],
+    )?;
+    t.record(
+        "unknown_field_typed_error",
+        err.get("code").and_then(Json::as_str) == Some("unknown_field"),
+        err.render(),
+    );
+
+    let err = c.request_frame(
+        "submit",
+        &[("model", Json::Str("lasso".into())), ("lambda_ratio", Json::Num(1.5))],
+    )?;
+    t.record(
+        "out_of_range_lambda_typed_error",
+        err.get("code").and_then(Json::as_str) == Some("bad_lambda"),
+        err.render(),
+    );
+
+    let err = c.request_frame("submit", &[("model", Json::Str("ridge".into()))])?;
+    t.record(
+        "unknown_model_typed_error",
+        err.get("code").and_then(Json::as_str) == Some("bad_model"),
+        err.render(),
+    );
+
+    let pong = c.ping()?;
+    t.record(
+        "connection_survived_all_bad_input",
+        pong.get("type").and_then(Json::as_str) == Some("pong"),
+        pong.render(),
+    );
+
+    // --- happy-path fit with certificate ---
+    let acc = c.submit(&fit_body(1))?;
+    let job = acc.get("job").and_then(Json::as_f64).unwrap_or(-1.0) as u64;
+    let (_, done) = c.wait_terminal(job, EVENT_TIMEOUT)?;
+    let obj = done.get("objective").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    t.record(
+        "fit_done_with_certificate",
+        done.get("type").and_then(Json::as_str) == Some("fit_done")
+            && done.get("outcome").and_then(Json::as_str) == Some("ok")
+            && done.get("certificate").and_then(Json::as_str).is_some()
+            && obj.is_finite(),
+        done.render(),
+    );
+    let st = c.status(job)?;
+    t.record(
+        "status_after_done",
+        st.get("state").and_then(Json::as_str) == Some("ok"),
+        st.render(),
+    );
+
+    // --- admission control: fill the queue, get rejected, retry in ---
+    let mut slow_jobs = Vec::new();
+    for _ in 0..3 {
+        let acc = c.submit(&path_body(SLOW_SEED, 4.0))?;
+        slow_jobs.push(acc.get("job").and_then(Json::as_f64).unwrap_or(-1.0) as u64);
+    }
+    let rejected = match c.submit(&fit_body(1)) {
+        Err(ClientError::Server { code, retry_after_ms, .. }) if code == "rejected" => {
+            t.record(
+                "backpressure_rejection_with_retry_hint",
+                retry_after_ms.is_some(),
+                format!("rejected, retry_after_ms={retry_after_ms:?}"),
+            );
+            true
+        }
+        other => {
+            t.record(
+                "backpressure_rejection_with_retry_hint",
+                false,
+                format!("expected rejection, got {other:?}"),
+            );
+            false
+        }
+    };
+    if rejected {
+        let acc = c.submit_retrying(&fit_body(1))?;
+        let job = acc.get("job").and_then(Json::as_f64).unwrap_or(-1.0) as u64;
+        let (_, done) = c.wait_terminal(job, EVENT_TIMEOUT)?;
+        t.record(
+            "client_retry_with_backoff_lands",
+            done.get("outcome").and_then(Json::as_str) == Some("ok"),
+            done.render(),
+        );
+    }
+    for id in slow_jobs {
+        let _ = c.wait_terminal(id, EVENT_TIMEOUT)?;
+    }
+
+    // --- cancellation stops a path within one λ point ---
+    let acc = c.submit(&path_body(SLOW_SEED, 8.0))?;
+    let job = acc.get("job").and_then(Json::as_f64).unwrap_or(-1.0) as u64;
+    let first = c.next_event(EVENT_TIMEOUT)?;
+    let saw_point = first.get("type").and_then(Json::as_str) == Some("path_point");
+    c.cancel(job)?;
+    let (points, term) = c.wait_terminal(job, EVENT_TIMEOUT)?;
+    let emitted = 1 + points.len(); // the point read before cancelling
+    t.record(
+        "cancel_stops_path_mid_sweep",
+        saw_point
+            && term.get("type").and_then(Json::as_str) == Some("cancelled")
+            && emitted < 8,
+        format!("emitted {emitted} of 8 before cancel; terminal {}", term.render()),
+    );
+
+    // --- deadline returns partial results with certificates ---
+    let mut body = path_body(SLOW_SEED, 8.0);
+    body.push(("deadline_ms", Json::Num(500.0)));
+    let acc = c.submit(&body)?;
+    let job = acc.get("job").and_then(Json::as_f64).unwrap_or(-1.0) as u64;
+    let (points, term) = c.wait_terminal(job, EVENT_TIMEOUT)?;
+    let n_points = term.get("n_points").and_then(Json::as_f64).unwrap_or(-1.0) as usize;
+    let all_finite = points.iter().all(|p| {
+        p.get("objective").and_then(Json::as_f64).map(f64::is_finite).unwrap_or(false)
+            && p.get("certificate").and_then(Json::as_str).is_some()
+    });
+    t.record(
+        "deadline_bounded_partial_path",
+        term.get("outcome").and_then(Json::as_str) == Some("timeout")
+            && n_points < 8
+            && n_points == points.len()
+            && all_finite,
+        format!("{n_points}/8 points before the deadline; terminal {}", term.render()),
+    );
+
+    // --- injected worker panic → typed failure → resubmit succeeds ---
+    let acc = c.submit(&fit_body(PANIC_SEED))?;
+    let job = acc.get("job").and_then(Json::as_f64).unwrap_or(-1.0) as u64;
+    let (_, term) = c.wait_terminal(job, EVENT_TIMEOUT)?;
+    t.record(
+        "worker_panic_is_typed_failure",
+        term.get("type").and_then(Json::as_str) == Some("failed")
+            && term
+                .get("message")
+                .and_then(Json::as_str)
+                .is_some_and(|m| m.contains("injected")),
+        term.render(),
+    );
+    let acc = c.submit_retrying(&fit_body(2))?;
+    let job = acc.get("job").and_then(Json::as_f64).unwrap_or(-1.0) as u64;
+    let (_, done) = c.wait_terminal(job, EVENT_TIMEOUT)?;
+    t.record(
+        "resubmit_after_panic_succeeds",
+        done.get("outcome").and_then(Json::as_str) == Some("ok"),
+        done.render(),
+    );
+
+    // --- a vanishing client frees (not wedges) its worker ---
+    {
+        let mut ghost = client(addr, "vanish")?;
+        let acc = ghost.submit(&path_body(SLOW_SEED, 8.0))?;
+        let _first = ghost.next_event(EVENT_TIMEOUT)?;
+        let _ = acc;
+        ghost.abandon(); // vanish mid-stream
+    }
+    // the orphaned job is cancelled within one λ point; a fresh fit must
+    // get a worker promptly
+    let acc = c.submit(&fit_body(3))?;
+    let job = acc.get("job").and_then(Json::as_f64).unwrap_or(-1.0) as u64;
+    let (_, done) = c.wait_terminal(job, Duration::from_secs(10))?;
+    let stats = c.stats()?;
+    t.record(
+        "disconnect_does_not_wedge_workers",
+        done.get("outcome").and_then(Json::as_str) == Some("ok")
+            && stats.get("workers_alive").and_then(Json::as_f64) == Some(2.0),
+        format!("fit after ghost disconnect: {}; {}", done.render(), stats.render()),
+    );
+
+    // --- tenant byte budget ---
+    {
+        let mut hoarder = client(addr, "hoarder")?;
+        let acc = hoarder.submit(&[
+            ("kind", Json::Str("fit".into())),
+            ("model", Json::Str("lasso".into())),
+            ("lambda_ratio", Json::Num(0.1)),
+            ("dataset", dataset("correlated", 50.0, 100.0, 9)),
+        ])?;
+        let job = acc.get("job").and_then(Json::as_f64).unwrap_or(-1.0) as u64;
+        let _ = hoarder.wait_terminal(job, EVENT_TIMEOUT)?;
+        let err = hoarder.request_frame(
+            "submit",
+            &[
+                ("kind", Json::Str("fit".into())),
+                ("model", Json::Str("lasso".into())),
+                ("lambda_ratio", Json::Num(0.1)),
+                ("dataset", dataset("correlated", 200.0, 400.0, 10)),
+            ],
+        )?;
+        t.record(
+            "tenant_budget_typed_rejection",
+            err.get("code").and_then(Json::as_str) == Some("tenant_budget"),
+            err.render(),
+        );
+    }
+
+    // --- injected frame truncation (tenant-scoped) ---
+    {
+        let mut chaos = client(addr, "chaos")?;
+        let _acc = chaos.submit(&fit_body(4))?; // reply frame 1 is fine
+        // frame 2 (the fit_done) is truncated by the fault plan
+        let got = chaos.recv_any(EVENT_TIMEOUT);
+        let truncated = matches!(
+            got,
+            Err(ClientError::Wire(super::wire::WireError::Truncated { .. }))
+                | Err(ClientError::Io(_))
+        );
+        t.record(
+            "injected_truncation_detected_by_client",
+            truncated,
+            format!("{got:?}"),
+        );
+    }
+
+    // --- injected mid-stream disconnect (tenant-scoped) ---
+    {
+        let mut evil = client(addr, "evil")?;
+        let _acc = evil.submit(&path_body(1, 4.0))?; // frame 1
+        let mut frames = 0;
+        let outcome = loop {
+            match evil.next_event(EVENT_TIMEOUT) {
+                Ok(_) => frames += 1,
+                Err(e) => break e,
+            }
+        };
+        t.record(
+            "injected_disconnect_detected_by_client",
+            frames < 5 && matches!(outcome, ClientError::Io(_) | ClientError::Wire(_)),
+            format!("{frames} events then {outcome:?}"),
+        );
+    }
+    let pong = c.ping()?;
+    t.record(
+        "server_alive_after_conn_faults",
+        pong.get("type").and_then(Json::as_str) == Some("pong"),
+        pong.render(),
+    );
+
+    // --- finale: kill the whole pool; death must be loud ---
+    let _ = c.submit(&fit_body(DIE_SEED));
+    let _ = c.submit(&fit_body(DIE_SEED));
+    let mut workers_alive = f64::NAN;
+    for _ in 0..100 {
+        match c.stats() {
+            Ok(s) => {
+                workers_alive = s.get("workers_alive").and_then(Json::as_f64).unwrap_or(f64::NAN);
+                if workers_alive == 0.0 {
+                    break;
+                }
+            }
+            // the service tears connections down as it stops — that, too,
+            // is the pool dying loudly rather than hanging
+            Err(_) => {
+                workers_alive = 0.0;
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    t.record(
+        "worker_pool_death_is_observable",
+        workers_alive == 0.0,
+        format!("workers_alive reached {workers_alive}"),
+    );
+    Ok(())
+}

@@ -1,0 +1,380 @@
+//! Length-prefixed JSON framing for the fit service (`skglm serve`).
+//!
+//! A frame is a 4-byte big-endian length followed by that many bytes of
+//! UTF-8 JSON. Requests carry an envelope — `v` (protocol version),
+//! `verb`, `req` (client-chosen correlation id), `session`, `tenant` —
+//! and responses echo `req` so replies and subscription events can share
+//! one connection. Every degradation of untrusted input maps to a typed
+//! [`WireError`] so the service can answer with a structured error frame
+//! instead of dropping the connection: oversized frames are drained (the
+//! stream stays in sync), parse/depth/string-bomb failures surface the
+//! [`JsonError`] variant, and only genuine I/O loss (`Io`/`Truncated`)
+//! tears the connection down.
+//!
+//! [`read_frame`] is the blocking server-side reader; [`FrameReader`] is
+//! the resumable client-side variant that tolerates read timeouts landing
+//! mid-frame (bytes accumulate across `poll` calls instead of losing
+//! sync).
+
+use crate::util::json::{Json, JsonError, ParseLimits};
+use std::io::{Read, Write};
+
+/// Protocol version stamped on every request envelope.
+pub const WIRE_VERSION: u64 = 1;
+
+/// Default cap on a single frame's payload (4 MiB): big enough for any
+/// legitimate request, small enough that a hostile length prefix cannot
+/// balloon memory.
+pub const DEFAULT_MAX_FRAME: usize = 4 << 20;
+
+/// Parse limits applied to frame payloads of at most `max_frame` bytes.
+pub fn frame_limits(max_frame: usize) -> ParseLimits {
+    ParseLimits { max_bytes: max_frame, max_depth: 32, max_string: max_frame }
+}
+
+/// Everything that can go wrong reading a frame.
+#[derive(Debug)]
+pub enum WireError {
+    /// Transport failure (includes read timeouts — inspect `kind()`).
+    Io(std::io::Error),
+    /// EOF landed mid-frame: the peer vanished or truncated a frame.
+    Truncated { got: usize, want: usize },
+    /// Length prefix beyond the cap. The payload was drained, so the
+    /// stream is still in sync and the connection can answer and live on.
+    Oversized { len: usize, max: usize },
+    /// Payload is not valid JSON within limits (syntax, depth bomb,
+    /// string bomb, ...).
+    BadJson(JsonError),
+    /// Payload is not UTF-8.
+    NotUtf8,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "i/o: {e}"),
+            WireError::Truncated { got, want } => {
+                write!(f, "truncated frame: got {got} of {want} bytes")
+            }
+            WireError::Oversized { len, max } => {
+                write!(f, "oversized frame: {len} bytes exceeds cap of {max}")
+            }
+            WireError::BadJson(e) => write!(f, "bad json: {e}"),
+            WireError::NotUtf8 => write!(f, "frame is not utf-8"),
+        }
+    }
+}
+
+impl WireError {
+    /// Can the connection keep serving after this error? Oversized and
+    /// malformed payloads were fully consumed (stream still framed);
+    /// I/O loss and truncation were not.
+    pub fn recoverable(&self) -> bool {
+        matches!(self, WireError::Oversized { .. } | WireError::BadJson(_) | WireError::NotUtf8)
+    }
+
+    /// Stable error code used in `{"type":"error","code":...}` frames.
+    pub fn code(&self) -> &'static str {
+        match self {
+            WireError::Io(_) => "io",
+            WireError::Truncated { .. } => "truncated_frame",
+            WireError::Oversized { .. } => "oversized_frame",
+            WireError::BadJson(JsonError::TooDeep { .. }) => "depth_limit",
+            WireError::BadJson(JsonError::TooLarge { .. })
+            | WireError::BadJson(JsonError::StringTooLong { .. }) => "size_limit",
+            WireError::BadJson(JsonError::Syntax { .. }) => "parse_error",
+            WireError::NotUtf8 => "not_utf8",
+        }
+    }
+}
+
+/// Serialize `frame` as one length-prefixed frame.
+pub fn write_frame(w: &mut impl Write, frame: &Json) -> std::io::Result<()> {
+    let body = frame.render();
+    let len = body.len() as u32;
+    w.write_all(&len.to_be_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+/// Raw variant for fault injection: write `keep` bytes of the payload
+/// while the length prefix promises all of it (a deliberately truncated
+/// frame).
+pub fn write_truncated_frame(
+    w: &mut impl Write,
+    frame: &Json,
+    keep: usize,
+) -> std::io::Result<()> {
+    let body = frame.render();
+    let len = body.len() as u32;
+    w.write_all(&len.to_be_bytes())?;
+    w.write_all(&body.as_bytes()[..keep.min(body.len())])?;
+    w.flush()
+}
+
+/// Read to fill `buf`, returning how many bytes landed before EOF.
+fn read_full(r: &mut impl Read, buf: &mut [u8]) -> Result<usize, std::io::Error> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => break,
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(got)
+}
+
+/// Blocking read of one frame. `Ok(None)` is a clean close (EOF exactly
+/// at a frame boundary); EOF anywhere else is [`WireError::Truncated`].
+/// An oversized frame is drained before returning the error, so the next
+/// `read_frame` call starts at the next frame.
+pub fn read_frame(r: &mut impl Read, max_frame: usize) -> Result<Option<Json>, WireError> {
+    let mut len_buf = [0u8; 4];
+    match read_full(r, &mut len_buf).map_err(WireError::Io)? {
+        0 => return Ok(None),
+        4 => {}
+        got => return Err(WireError::Truncated { got, want: 4 }),
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > max_frame {
+        // drain to stay in sync
+        let mut remaining = len;
+        let mut sink = [0u8; 8192];
+        while remaining > 0 {
+            let take = remaining.min(sink.len());
+            let got = read_full(r, &mut sink[..take]).map_err(WireError::Io)?;
+            if got == 0 {
+                return Err(WireError::Truncated { got: len - remaining, want: len });
+            }
+            remaining -= got;
+        }
+        return Err(WireError::Oversized { len, max: max_frame });
+    }
+    let mut buf = vec![0u8; len];
+    let got = read_full(r, &mut buf).map_err(WireError::Io)?;
+    if got < len {
+        return Err(WireError::Truncated { got, want: len });
+    }
+    parse_payload(&buf, max_frame).map(Some)
+}
+
+fn parse_payload(buf: &[u8], max_frame: usize) -> Result<Json, WireError> {
+    let text = std::str::from_utf8(buf).map_err(|_| WireError::NotUtf8)?;
+    Json::parse_limited(text, frame_limits(max_frame)).map_err(WireError::BadJson)
+}
+
+/// Resumable frame reader: accumulates bytes across `poll` calls so a
+/// read timeout mid-frame does not lose stream sync (the client uses
+/// this with `set_read_timeout`).
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    /// payload bytes of an oversized frame still to be discarded
+    skip: usize,
+}
+
+/// What one [`FrameReader::poll`] produced.
+pub enum Poll {
+    /// A complete frame.
+    Frame(Json),
+    /// Not enough bytes yet (e.g. the read timed out mid-frame); call
+    /// `poll` again.
+    Pending,
+    /// Clean EOF at a frame boundary.
+    Eof,
+}
+
+impl FrameReader {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Read once and try to complete a frame. Timeouts
+    /// (`WouldBlock`/`TimedOut`) surface as `Ok(Pending)`; all other
+    /// errors are fatal for the connection.
+    pub fn poll(&mut self, r: &mut impl Read, max_frame: usize) -> Result<Poll, WireError> {
+        loop {
+            // serve a complete frame from the buffer first
+            if self.buf.len() >= 4 {
+                let len =
+                    u32::from_be_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]])
+                        as usize;
+                if len > max_frame {
+                    // drop the prefix; remaining payload bytes will be
+                    // skipped as they arrive
+                    let have = self.buf.len() - 4;
+                    if have >= len {
+                        self.buf.drain(..4 + len);
+                    } else {
+                        // mark how much is left to skip by keeping a
+                        // synthetic state: simplest is to consume what we
+                        // have and remember the deficit in-band
+                        self.buf.clear();
+                        self.skip = len - have;
+                    }
+                    return Err(WireError::Oversized { len, max: max_frame });
+                }
+                if self.buf.len() >= 4 + len {
+                    let payload: Vec<u8> = self.buf.drain(..4 + len).skip(4).collect();
+                    return parse_payload(&payload, max_frame).map(Poll::Frame);
+                }
+            }
+            // need more bytes
+            let mut chunk = [0u8; 8192];
+            match r.read(&mut chunk) {
+                Ok(0) => {
+                    if self.buf.is_empty() && self.skip == 0 {
+                        return Ok(Poll::Eof);
+                    }
+                    return Err(WireError::Truncated {
+                        got: self.buf.len(),
+                        want: self.buf.len().max(4),
+                    });
+                }
+                Ok(n) => {
+                    let mut data = &chunk[..n];
+                    if self.skip > 0 {
+                        let eat = self.skip.min(data.len());
+                        self.skip -= eat;
+                        data = &data[eat..];
+                    }
+                    self.buf.extend_from_slice(data);
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Ok(Poll::Pending)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(WireError::Io(e)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn frame_bytes(j: &Json) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, j).unwrap();
+        out
+    }
+
+    #[test]
+    fn frame_round_trip() {
+        let j = Json::obj().with("verb", "ping").with("req", 1u64);
+        let bytes = frame_bytes(&j);
+        let mut cur = Cursor::new(bytes);
+        let back = read_frame(&mut cur, DEFAULT_MAX_FRAME).unwrap().unwrap();
+        assert_eq!(back, j);
+        // clean EOF after the frame
+        assert!(matches!(read_frame(&mut cur, DEFAULT_MAX_FRAME), Ok(None)));
+    }
+
+    #[test]
+    fn oversized_frame_is_drained_and_stream_stays_in_sync() {
+        let big = Json::obj().with("blob", "x".repeat(4096));
+        let small = Json::obj().with("verb", "ping");
+        let mut bytes = frame_bytes(&big);
+        bytes.extend_from_slice(&frame_bytes(&small));
+        let mut cur = Cursor::new(bytes);
+        match read_frame(&mut cur, 256) {
+            Err(WireError::Oversized { max: 256, .. }) => {}
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+        // the next frame is still readable
+        let back = read_frame(&mut cur, 256).unwrap().unwrap();
+        assert_eq!(back, small);
+    }
+
+    #[test]
+    fn truncated_frame_is_typed() {
+        let j = Json::obj().with("verb", "status").with("job", 3u64);
+        let mut bytes = Vec::new();
+        write_truncated_frame(&mut bytes, &j, 5).unwrap();
+        let mut cur = Cursor::new(bytes);
+        match read_frame(&mut cur, DEFAULT_MAX_FRAME) {
+            Err(WireError::Truncated { got: 5, .. }) => {}
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn depth_bomb_payload_is_typed_not_fatal() {
+        let bomb = "[".repeat(10_000);
+        let mut bytes = (bomb.len() as u32).to_be_bytes().to_vec();
+        bytes.extend_from_slice(bomb.as_bytes());
+        let mut cur = Cursor::new(bytes);
+        match read_frame(&mut cur, DEFAULT_MAX_FRAME) {
+            Err(e @ WireError::BadJson(JsonError::TooDeep { .. })) => {
+                assert!(e.recoverable());
+                assert_eq!(e.code(), "depth_limit");
+            }
+            other => panic!("expected depth error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_reader_resumes_across_split_reads() {
+        let j = Json::obj().with("verb", "submit").with("req", 9u64);
+        let bytes = frame_bytes(&j);
+        // feed the frame in two halves through a reader that times out
+        // in between
+        struct TwoPart {
+            parts: Vec<Vec<u8>>,
+            timeouts_between: bool,
+        }
+        impl Read for TwoPart {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                if self.parts.is_empty() {
+                    return Ok(0);
+                }
+                if self.timeouts_between && self.parts.len() == 1 {
+                    self.timeouts_between = false;
+                    return Err(std::io::Error::from(std::io::ErrorKind::WouldBlock));
+                }
+                let part = self.parts.remove(0);
+                buf[..part.len()].copy_from_slice(&part);
+                Ok(part.len())
+            }
+        }
+        let mid = bytes.len() / 2;
+        let mut r = TwoPart {
+            parts: vec![bytes[..mid].to_vec(), bytes[mid..].to_vec()],
+            timeouts_between: true,
+        };
+        let mut fr = FrameReader::new();
+        // first half arrives
+        assert!(matches!(fr.poll(&mut r, DEFAULT_MAX_FRAME), Ok(Poll::Pending)));
+        // second half completes the frame
+        match fr.poll(&mut r, DEFAULT_MAX_FRAME) {
+            Ok(Poll::Frame(back)) => assert_eq!(back, j),
+            _ => panic!("expected completed frame"),
+        }
+        assert!(matches!(fr.poll(&mut r, DEFAULT_MAX_FRAME), Ok(Poll::Eof)));
+    }
+
+    #[test]
+    fn frame_reader_skips_oversized_then_recovers() {
+        let big = Json::obj().with("blob", "y".repeat(2048));
+        let small = Json::obj().with("verb", "ping");
+        let mut bytes = frame_bytes(&big);
+        bytes.extend_from_slice(&frame_bytes(&small));
+        let mut cur = Cursor::new(bytes);
+        let mut fr = FrameReader::new();
+        match fr.poll(&mut cur, 128) {
+            Err(WireError::Oversized { .. }) => {}
+            other => panic!("expected Oversized, got {:?}", other.is_ok()),
+        }
+        match fr.poll(&mut cur, 128) {
+            Ok(Poll::Frame(back)) => assert_eq!(back, small),
+            _ => panic!("reader did not resync after oversized frame"),
+        }
+    }
+}

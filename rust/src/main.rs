@@ -5,7 +5,8 @@
 //! skglm path    --penalty mcp --points 20   # warm-started sweep via the scheduler
 //! skglm exp     <fig1..fig10|table1|table2|pathsched|all> [--full]
 //! skglm conform [--smoke] [--filter l1]  # scenario conformance corpus
-//! skglm serve   --workers 4         # demo of the path-aware fit scheduler
+//! skglm serve   --listen 127.0.0.1:7878 --workers 4   # TCP fit service
+//! skglm client  submit --model lasso --watch          # protocol client
 //! skglm info                        # capability table + runtime probe
 //! ```
 
@@ -44,6 +45,7 @@ fn dispatch(args: &mut Args) -> Result<()> {
         Some("exp") => cmd_exp(args),
         Some("conform") => cmd_conform(args),
         Some("serve") => cmd_serve(args),
+        Some("client") => cmd_client(args),
         Some("synth") => cmd_synth(args),
         Some("info") => cmd_info(args),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
@@ -68,7 +70,18 @@ const USAGE: &str = "usage:
   skglm cv    --dataset <name> [--folds 5] [--points 15] [--workers 4] [--small]
   skglm exp   <fig1..fig10|table1|table2|pathsched|kernels|glms|groups|gram|scenarios|summary|all> [--full]
   skglm conform [--smoke] [--filter <substr>] [--corpus <scenarios.jsonl>]
-  skglm serve [--workers 4] [--lambdas 8]
+  skglm serve [--listen 127.0.0.1:7878] [--workers 4] [--queue 32] \\
+              [--frame-bytes N] [--cache-bytes N] [--tenant-bytes N] \\
+              [--faults <plan>] [--demo [--lambdas 8]]
+  skglm client [ping|stats|status|cancel|submit|shutdown] \\
+              [--addr 127.0.0.1:7878] [--tenant cli] [--session cli] \\
+              [--timeout-s 30] [--retries 6] [--retry-seed 0] [--job <id>] \\
+              [--kind fit|path] [--model lasso|enet|mcp|scad|lq|poisson] \\
+              [--lambda-ratio 0.1] [--points 16] [--min-ratio 0.01] \\
+              [--deadline-ms N] [--priority interactive|batch] \\
+              [--dataset fig1|correlated|poisson] [--scale 0.02] \\
+              [--n 200] [--p 400] [--data-seed 42] [--watch]
+  skglm client --script smoke [--transcript <out.json>]
   skglm synth --dataset <rcv1|news20|...|fig1> --out <file.svm> [--small]
   skglm info
 
@@ -87,7 +100,15 @@ const USAGE: &str = "usage:
   through the real scheduler, cross-engine / thread-count / warm-vs-cold
   oracles per scenario — and exits non-zero when any scenario fails;
   --smoke runs the CI gate subset, --filter selects scenarios whose
-  id/datafit/penalty contains the substring";
+  id/datafit/penalty contains the substring. `serve` runs the TCP fit
+  service (length-prefixed JSON frames; see ARCHITECTURE.md §Service):
+  admission control at --queue depth, per-tenant cache byte budgets, and
+  a --faults plan (or SKGLM_FAULTS) for deterministic fault injection;
+  --demo drives a geometric λ sweep through the wire against the running
+  service. `client` talks to a service: submit/cancel/status/stats/ping/
+  shutdown verbs, --watch streams job events to the terminal, and
+  --script smoke self-hosts the scripted loopback acceptance session CI
+  runs (exits non-zero when any step degrades)";
 
 /// Load `name` as a libsvm file when it names one on disk.
 fn try_load_libsvm(name: &str) -> Option<Result<Dataset>> {
@@ -463,7 +484,7 @@ fn cmd_path(args: &mut Args) -> Result<()> {
         other => bail!("unknown datafit {other:?} (quadratic|poisson|probit)"),
     };
     let ratios = skglm::estimators::path::geometric_grid(min_ratio, points);
-    let mut sched = FitScheduler::start(1);
+    let sched = FitScheduler::start(1);
     let job = sched.submit_path(
         Arc::clone(&ds),
         spec,
@@ -497,7 +518,10 @@ fn cmd_path(args: &mut Args) -> Result<()> {
             Ok(JobEvent::Failed { job_id, message }) => {
                 bail!("path job {job_id} failed on its worker: {message}")
             }
-            Err(_) => bail!("scheduler died"),
+            Ok(JobEvent::Cancelled { job_id, points_emitted }) => {
+                bail!("path job {job_id} was cancelled after {points_emitted} points")
+            }
+            Ok(JobEvent::SchedulerDown) | Err(_) => bail!("scheduler died"),
         }
     }
     sched.shutdown();
@@ -532,91 +556,260 @@ fn cmd_conform(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// Map a [`skglm::coordinator::ClientError`] into the CLI error surface.
+fn client_err<T>(r: std::result::Result<T, skglm::coordinator::ClientError>) -> Result<T> {
+    r.map_err(|e| anyhow::anyhow!("{e}"))
+}
+
 fn cmd_serve(args: &mut Args) -> Result<()> {
-    use skglm::coordinator::{specs, FitScheduler, JobEvent};
-    use std::sync::Arc;
+    use skglm::coordinator::service::{spawn, ExitReason, ServiceConfig};
+    use skglm::coordinator::FaultPlan;
+    let listen = args.get_or("listen", "127.0.0.1:7878");
     let workers = args.get_usize("workers", 4)?;
+    let max_queue = args.get_usize("queue", 32)?;
+    let max_frame =
+        args.get_usize("frame-bytes", skglm::coordinator::wire::DEFAULT_MAX_FRAME)?;
+    let cache_bytes = args.get_usize("cache-bytes", 0)?;
+    let tenant_bytes = args.get_usize("tenant-bytes", 0)?;
+    let faults_cli = args.get("faults");
+    let demo = args.has("demo");
     let n_lambdas = args.get_usize("lambdas", 8)?;
     args.finish()?;
 
-    let ds = Arc::new(correlated(CorrelatedSpec::figure1(0.2), 42));
-    let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
-    let mut sched = FitScheduler::start(workers);
-    println!("fit scheduler up with {workers} workers; mixed single-fit + path workload");
-
-    // single fits across the model zoo (trait-based specs, shared Arc dataset)
-    let mut jobs = 0usize;
-    for k in 0..n_lambdas {
-        let lam = lam_max / (10.0 * (k + 1) as f64);
-        sched.submit_fit(Arc::clone(&ds), specs::lasso(lam), SolverOpts::default());
-        jobs += 1;
+    let faults = FaultPlan::from_env(faults_cli.as_deref())
+        .map_err(|e| anyhow::anyhow!("bad fault plan: {e}"))?;
+    if !faults.is_empty() {
+        eprintln!("fault injection ACTIVE: {faults:?}");
     }
-    sched.submit_fit(Arc::clone(&ds), specs::elastic_net(lam_max / 20.0, 0.5), SolverOpts::default());
-    sched.submit_fit(Arc::clone(&ds), specs::mcp(lam_max / 20.0, 3.0), SolverOpts::default());
-    jobs += 2;
-    // prox-Newton GLM jobs share the queue with the CD jobs
-    let pois = Arc::new(skglm::data::poisson_correlated(CorrelatedSpec::figure1(0.2), 42));
-    let pois_lmax = specs::poisson_l1(1.0).lambda_max(&pois.design, &pois.y);
-    sched.submit_fit(Arc::clone(&pois), specs::poisson_l1(pois_lmax / 10.0), SolverOpts::default());
-    let prob = Arc::new(skglm::data::probit_correlated(CorrelatedSpec::figure1(0.2), 42));
-    let prob_lmax = specs::probit_l1(1.0).lambda_max(&prob.design, &prob.y);
-    sched.submit_fit(Arc::clone(&prob), specs::probit_l1(prob_lmax / 10.0), SolverOpts::default());
-    jobs += 2;
-    // one warm-started path sweep, streamed per-λ
-    let path_points = 8;
-    let ratios = skglm::estimators::path::geometric_grid(1e-2, path_points);
-    sched.submit_path(Arc::clone(&ds), specs::lasso(1.0), ratios, SolverOpts::default().with_tol(1e-7));
-    jobs += 1;
+    let handle = spawn(ServiceConfig {
+        addr: listen,
+        workers,
+        max_queue,
+        max_frame,
+        cache_bytes: (cache_bytes > 0).then_some(cache_bytes),
+        tenant_bytes: (tenant_bytes > 0).then_some(tenant_bytes),
+        faults,
+    })?;
+    println!(
+        "fit service listening on {} ({workers} workers, admission queue {max_queue})",
+        handle.addr
+    );
 
-    println!("{:<24} {:<4} {:<8} {:<7} wall_s", "event", "job", "support", "epochs");
-    // count TERMINAL events (FitDone / PathDone / Failed) rather than a
-    // fixed total: a path job that fails mid-sweep emits fewer points
-    // than planned, and a fixed count would hang on recv forever
-    let mut remaining = jobs;
-    while remaining > 0 {
-        match sched.events.recv() {
-            Ok(JobEvent::FitDone(o)) => {
-                let tag = format!("fit {}", o.label);
-                let warm = if o.warm_started { "  (warm)" } else { "" };
-                println!(
-                    "{:<24} {:<4} {:<8} {:<7} {:.3}{}",
-                    tag,
-                    o.job_id,
-                    o.result.support().len(),
-                    o.result.n_epochs,
-                    o.wall_time,
-                    warm
-                );
-                remaining -= 1;
-            }
-            Ok(JobEvent::PathPoint(p)) => {
-                let tag = format!("path point #{}", p.index);
-                println!(
-                    "{:<24} {:<4} {:<8} {:<7} {:.3}",
-                    tag, p.job_id, p.point.support_size, p.epochs, p.wall_time
-                );
-            }
-            Ok(JobEvent::PathDone(s)) => {
-                let tag = format!("path done ({} pts)", s.n_points);
-                println!(
-                    "{:<24} {:<4} {:<8} {:<7} {:.3}",
-                    tag, s.job_id, "-", s.total_epochs, s.total_time
-                );
-                remaining -= 1;
-            }
-            Ok(JobEvent::Failed { job_id, message }) => {
-                println!("{:<24} {:<4} {message}", "job FAILED", job_id);
-                remaining -= 1;
-            }
-            Err(_) => bail!("scheduler died"),
+    let demo_result = if demo {
+        let addr = handle.addr.to_string();
+        let r = run_serve_demo(&addr, n_lambdas.max(2));
+        handle.stop();
+        r
+    } else {
+        println!("stop with: skglm client shutdown --addr {}", handle.addr);
+        Ok(())
+    };
+    let exit = handle.join();
+    demo_result?;
+    match exit {
+        ExitReason::Stopped => Ok(()),
+        ExitReason::SchedulerDown => {
+            bail!("service exited: worker pool died (scheduler down)")
         }
     }
-    let stats = sched.cache().stats();
+}
+
+/// `serve --demo`: drive a geometric λ sweep of single lasso fits plus
+/// one streamed path job through the wire against the freshly spawned
+/// service — the same spacing the path solver uses, not an arithmetic
+/// grid, and exercising the real client/submit/stream round trip.
+fn run_serve_demo(addr: &str, n_lambdas: usize) -> Result<()> {
+    use skglm::coordinator::{ClientConfig, ServiceClient};
+    use skglm::util::json::Json;
+    use std::time::Duration;
+
+    let mut c = client_err(ServiceClient::connect(ClientConfig {
+        addr: addr.to_string(),
+        tenant: "demo".to_string(),
+        session: "serve-demo".to_string(),
+        ..ClientConfig::default()
+    }))?;
+    let dataset = || Json::obj().with("kind", "fig1").with("scale", 0.05).with("seed", 42.0);
+    let ratios = skglm::estimators::path::geometric_grid(1e-2, n_lambdas);
+    let mut remaining = 0usize;
+    for &r in &ratios {
+        client_err(c.submit_retrying(&[
+            ("kind", Json::Str("fit".to_string())),
+            ("model", Json::Str("lasso".to_string())),
+            ("lambda_ratio", Json::Num(r)),
+            ("dataset", dataset()),
+        ]))?;
+        remaining += 1;
+    }
+    client_err(c.submit_retrying(&[
+        ("kind", Json::Str("path".to_string())),
+        ("model", Json::Str("lasso".to_string())),
+        ("grid", Json::obj().with("min_ratio", 1e-2).with("count", n_lambdas as f64)),
+        ("dataset", dataset()),
+    ]))?;
+    remaining += 1;
+    println!("submitted {remaining} jobs over the wire; streaming events");
     println!(
-        "cache: designs {} hit / {} miss, coefficients {} hit / {} miss",
-        stats.design_hits, stats.design_misses, stats.coef_hits, stats.coef_misses
+        "{:<12} {:<4} {:<12} {:<8} {:<7} outcome",
+        "event", "job", "lambda_ratio", "support", "epochs"
     );
-    sched.shutdown();
+    while remaining > 0 {
+        let ev = client_err(c.next_event(Duration::from_secs(120)))?;
+        let ty = ev.get("type").and_then(Json::as_str).unwrap_or("?").to_string();
+        let job = ev.get("job").and_then(Json::as_f64).unwrap_or(-1.0) as i64;
+        let ratio = ev.get("lambda_ratio").and_then(Json::as_f64);
+        let support = ev.get("support_size").and_then(Json::as_f64);
+        let epochs =
+            ev.get("epochs").or_else(|| ev.get("total_epochs")).and_then(Json::as_f64);
+        let outcome = ev.get("outcome").and_then(Json::as_str).unwrap_or("");
+        println!(
+            "{:<12} {:<4} {:<12} {:<8} {:<7} {}",
+            ty,
+            job,
+            ratio.map(|v| format!("{v:.4e}")).unwrap_or_else(|| "-".to_string()),
+            support.map(|v| (v as usize).to_string()).unwrap_or_else(|| "-".to_string()),
+            epochs.map(|v| (v as usize).to_string()).unwrap_or_else(|| "-".to_string()),
+            outcome
+        );
+        match ty.as_str() {
+            "fit_done" | "path_done" | "failed" | "cancelled" => remaining -= 1,
+            "scheduler_down" => bail!("service workers died mid-demo"),
+            _ => {}
+        }
+    }
+    let stats = client_err(c.stats())?;
+    println!("service stats: {}", stats.render());
+    let _ = c.shutdown_server();
+    Ok(())
+}
+
+fn cmd_client(args: &mut Args) -> Result<()> {
+    use skglm::coordinator::{ClientConfig, ServiceClient};
+    use skglm::util::json::Json;
+    use std::time::Duration;
+
+    // --script smoke: the scripted loopback acceptance session (the CI
+    // gate); self-hosts its own faulted service on an ephemeral port
+    if let Some(script) = args.get("script") {
+        let transcript = args.get("transcript");
+        args.finish()?;
+        if script != "smoke" {
+            bail!("unknown --script {script:?} (available: smoke)");
+        }
+        let (report, passed) = skglm::coordinator::smoke::run_smoke();
+        let text = report.render();
+        match &transcript {
+            Some(path) => {
+                std::fs::write(path, text.as_bytes())?;
+                eprintln!("transcript -> {path}");
+            }
+            None => println!("{text}"),
+        }
+        if !passed {
+            bail!("serve-smoke acceptance session FAILED (see transcript)");
+        }
+        println!("serve-smoke acceptance session passed");
+        return Ok(());
+    }
+
+    let verb = args.positional.get(1).cloned().unwrap_or_else(|| "ping".to_string());
+    let cfg = ClientConfig {
+        addr: args.get_or("addr", "127.0.0.1:7878"),
+        tenant: args.get_or("tenant", "cli"),
+        session: args.get_or("session", "cli"),
+        io_timeout: Duration::from_secs_f64(args.get_f64("timeout-s", 30.0)?.max(0.1)),
+        max_retries: args.get_usize("retries", 6)?,
+        retry_seed: args.get_usize("retry-seed", 0)? as u64,
+        ..ClientConfig::default()
+    };
+
+    match verb.as_str() {
+        "ping" | "stats" | "shutdown" => {
+            args.finish()?;
+            let mut c = client_err(ServiceClient::connect(cfg))?;
+            let reply = client_err(match verb.as_str() {
+                "ping" => c.ping(),
+                "stats" => c.stats(),
+                _ => c.shutdown_server(),
+            })?;
+            println!("{}", reply.render());
+        }
+        "status" | "cancel" => {
+            let job = args
+                .get("job")
+                .ok_or_else(|| anyhow::anyhow!("{verb} needs --job <id>"))?
+                .parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--job expects an integer job id"))?;
+            args.finish()?;
+            let mut c = client_err(ServiceClient::connect(cfg))?;
+            let reply =
+                client_err(if verb == "status" { c.status(job) } else { c.cancel(job) })?;
+            println!("{}", reply.render());
+        }
+        "submit" => {
+            let kind = args.get_or("kind", "fit");
+            let model = args.get_or("model", "lasso");
+            let ratio = args.get_f64("lambda-ratio", 0.1)?;
+            let points = args.get_usize("points", 16)?;
+            let min_ratio = args.get_f64("min-ratio", 0.01)?;
+            let deadline_ms = args.get_usize("deadline-ms", 0)?;
+            let priority = args.get("priority");
+            let ds_kind = args.get_or("dataset", "fig1");
+            let scale = args.get_f64("scale", 0.02)?;
+            let n = args.get_usize("n", 200)?;
+            let p = args.get_usize("p", 400)?;
+            let data_seed = args.get_usize("data-seed", 42)?;
+            let watch = args.has("watch");
+            args.finish()?;
+
+            let dataset = if ds_kind == "fig1" {
+                Json::obj()
+                    .with("kind", "fig1")
+                    .with("scale", scale)
+                    .with("seed", data_seed as f64)
+            } else {
+                Json::obj()
+                    .with("kind", ds_kind.as_str())
+                    .with("n", n as f64)
+                    .with("p", p as f64)
+                    .with("seed", data_seed as f64)
+            };
+            let mut body: Vec<(&str, Json)> = vec![
+                ("kind", Json::Str(kind.clone())),
+                ("model", Json::Str(model)),
+                ("dataset", dataset),
+            ];
+            if kind == "path" {
+                body.push((
+                    "grid",
+                    Json::obj().with("min_ratio", min_ratio).with("count", points as f64),
+                ));
+            } else {
+                body.push(("lambda_ratio", Json::Num(ratio)));
+            }
+            if deadline_ms > 0 {
+                body.push(("deadline_ms", Json::Num(deadline_ms as f64)));
+            }
+            if let Some(pr) = &priority {
+                body.push(("priority", Json::Str(pr.clone())));
+            }
+            let io_timeout = cfg.io_timeout;
+            let mut c = client_err(ServiceClient::connect(cfg))?;
+            let accepted = client_err(c.submit_retrying(&body))?;
+            println!("{}", accepted.render());
+            if watch {
+                let job = accepted.get("job").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                let (pts, terminal) = client_err(c.wait_terminal(job, io_timeout))?;
+                for pt in &pts {
+                    println!("{}", pt.render());
+                }
+                println!("{}", terminal.render());
+            }
+        }
+        other => bail!(
+            "unknown client verb {other:?} (ping|stats|status|cancel|submit|shutdown, or --script smoke)"
+        ),
+    }
     Ok(())
 }
 

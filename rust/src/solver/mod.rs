@@ -29,7 +29,7 @@ pub use gram::{gram_inner_solver, EngineDispatch, InnerEngine};
 pub use inner::InnerProfile;
 pub use skglm::{
     solve, solve_continued, solve_prepared, Certificate, ContinuationState, FitResult,
-    GradEngine, HistoryPoint, SolverOpts,
+    GradEngine, HistoryPoint, SolveBudget, SolverOpts, StopReason,
 };
 pub use block_cd::{
     block_lambda_max_for, solve_blocks, solve_blocks_continued, BlockDatafit, BlockFitResult,

@@ -17,7 +17,7 @@
 //! and swept — lives behind the trait; the control flow does not fork.
 
 use super::inner::{InnerProfile, InnerStats};
-use super::skglm::{HistoryPoint, SolverOpts};
+use super::skglm::{HistoryPoint, SolverOpts, StopReason};
 use std::time::Instant;
 
 /// One problem instance viewed as blocks of coordinates: the contract the
@@ -77,6 +77,10 @@ pub struct OuterOutcome {
     /// per-stage attribution: inner-solve profiles merged, plus the outer
     /// scoring passes and the final KKT pass under `score_secs`
     pub profile: InnerProfile,
+    /// `Some` when a [`super::skglm::SolveBudget`] stopped the loop before
+    /// convergence; the objective/kkt fields still describe the partial
+    /// iterate.
+    pub stopped: Option<StopReason>,
 }
 
 /// Run Algorithm 1's outer loop over `coords`. `ws0` seeds the working-set
@@ -100,9 +104,16 @@ pub fn solve_outer<C: BlockCoords>(
         rejected_extrapolations: 0,
         ws_size: ws0.unwrap_or(opts.ws_start).min(nb).max(1),
         profile: InnerProfile::default(),
+        stopped: None,
     };
 
     for outer in 1..=opts.max_outer {
+        if let Some(budget) = &opts.budget {
+            if let Some(reason) = budget.check(out.n_epochs) {
+                out.stopped = Some(reason);
+                break;
+            }
+        }
         out.n_outer = outer;
         coords.screen();
 
@@ -262,6 +273,42 @@ mod tests {
         assert_eq!(toy.v, toy.target);
         assert!(out.n_outer >= 2, "ws growth should take multiple iterations");
         assert_eq!(out.history.len(), out.n_outer);
+    }
+
+    #[test]
+    fn epoch_budget_stops_with_partial_iterate() {
+        use super::super::skglm::SolveBudget;
+        let mut toy = Toy { v: vec![0.0; 6], target: vec![1.0; 6], epochs: 0 };
+        let opts = SolverOpts {
+            ws_start: 1,
+            tol: 1e-12,
+            budget: Some(SolveBudget { max_total_epochs: Some(1), ..Default::default() }),
+            ..Default::default()
+        };
+        let out = solve_outer(&mut toy, &opts, None);
+        assert_eq!(out.stopped, Some(StopReason::EpochBudget));
+        assert!(!out.converged);
+        assert!(out.objective.is_finite(), "partial objective must be reported");
+        assert!(out.kkt.is_finite(), "partial certificate must be reported");
+        assert!(toy.v != toy.target, "budget must have stopped the loop early");
+    }
+
+    #[test]
+    fn cancel_flag_stops_before_first_iteration() {
+        use super::super::skglm::SolveBudget;
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let flag = Arc::new(AtomicBool::new(false));
+        flag.store(true, Ordering::Relaxed);
+        let mut toy = Toy { v: vec![0.0; 4], target: vec![1.0; 4], epochs: 0 };
+        let opts = SolverOpts {
+            budget: Some(SolveBudget { cancel: Some(flag), ..Default::default() }),
+            ..Default::default()
+        };
+        let out = solve_outer(&mut toy, &opts, None);
+        assert_eq!(out.stopped, Some(StopReason::Cancelled));
+        assert_eq!(out.n_outer, 0);
+        assert_eq!(toy.epochs, 0, "no inner work after cancellation");
     }
 
     #[test]

@@ -196,6 +196,11 @@ pub fn solve_prox_newton_prepared<D: Datafit, P: Penalty>(
     let mut ws_size = ws0.unwrap_or(opts.ws_start).min(p).max(1);
 
     for outer in 1..=opts.max_outer {
+        if let Some(budget) = &opts.budget {
+            if budget.check(result.n_epochs).is_some() {
+                break; // partial iterate; final metrics computed below
+            }
+        }
         result.n_outer = outer;
 
         // ---- scoring pass on the true gradient ----

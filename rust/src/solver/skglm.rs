@@ -26,7 +26,9 @@ use crate::datafit::Datafit;
 use crate::linalg::gram::GramCache;
 use crate::linalg::Design;
 use crate::penalty::Penalty;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Pluggable full-gradient engine (the PJRT runtime implements this for
 /// dense quadratic scoring; `None`/unsupported shapes fall back to the
@@ -70,6 +72,76 @@ pub struct SolverOpts {
     /// (residual) for datafits without the Gram contract.
     pub inner: InnerEngine,
     pub verbose: bool,
+    /// Cooperative execution budget, checked at the top of every outer
+    /// iteration. `None` (the default) means run to convergence.
+    pub budget: Option<SolveBudget>,
+}
+
+/// Why a solve stopped before converging (see [`SolveBudget`]). The
+/// partial result is still well-formed: the outer loops compute the final
+/// objective and optimality certificate on whatever iterate they reached.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// The cancel flag was raised by another thread.
+    Cancelled,
+    /// The wall-clock deadline passed.
+    Deadline,
+    /// The cumulative inner-epoch budget was exhausted.
+    EpochBudget,
+}
+
+impl StopReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            StopReason::Cancelled => "cancelled",
+            StopReason::Deadline => "deadline",
+            StopReason::EpochBudget => "epoch_budget",
+        }
+    }
+}
+
+/// Cooperative execution budget. Every outer loop (working-set CD,
+/// screened Lasso, block CD, prox-Newton — they all share this options
+/// struct) polls `check` once per outer iteration, so a budgeted solve
+/// stops within one outer iteration of the limit and still returns a
+/// finite partial objective with its [`Certificate`]. All fields are
+/// optional; an empty budget never fires.
+#[derive(Clone, Debug, Default)]
+pub struct SolveBudget {
+    /// Absolute wall-clock deadline.
+    pub deadline: Option<Instant>,
+    /// Cap on cumulative inner CD epochs across the whole solve.
+    pub max_total_epochs: Option<usize>,
+    /// Externally raised cancellation flag (e.g. a scheduler job control).
+    pub cancel: Option<Arc<AtomicBool>>,
+}
+
+impl SolveBudget {
+    pub fn is_unlimited(&self) -> bool {
+        self.deadline.is_none() && self.max_total_epochs.is_none() && self.cancel.is_none()
+    }
+
+    /// Poll the budget; `epochs_done` is the cumulative epoch count so
+    /// far. Cancellation takes precedence over the deadline, which takes
+    /// precedence over the epoch cap.
+    pub fn check(&self, epochs_done: usize) -> Option<StopReason> {
+        if let Some(flag) = &self.cancel {
+            if flag.load(Ordering::Relaxed) {
+                return Some(StopReason::Cancelled);
+            }
+        }
+        if let Some(deadline) = self.deadline {
+            if Instant::now() >= deadline {
+                return Some(StopReason::Deadline);
+            }
+        }
+        if let Some(cap) = self.max_total_epochs {
+            if epochs_done >= cap {
+                return Some(StopReason::EpochBudget);
+            }
+        }
+        None
+    }
 }
 
 impl Default for SolverOpts {
@@ -84,6 +156,7 @@ impl Default for SolverOpts {
             inner_tol_ratio: 0.1,
             inner: InnerEngine::default(),
             verbose: false,
+            budget: None,
         }
     }
 }
@@ -105,6 +178,19 @@ impl SolverOpts {
     /// dispatch).
     pub fn with_inner(mut self, inner: InnerEngine) -> Self {
         self.inner = inner;
+        self
+    }
+    /// Attach a cooperative execution budget (deadline / epoch cap /
+    /// cancel flag); see [`SolveBudget`].
+    pub fn with_budget(mut self, budget: SolveBudget) -> Self {
+        self.budget = Some(budget);
+        self
+    }
+    /// Convenience: cap wall-clock time from now.
+    pub fn with_time_limit(mut self, limit: std::time::Duration) -> Self {
+        let mut budget = self.budget.take().unwrap_or_default();
+        budget.deadline = Some(Instant::now() + limit);
+        self.budget = Some(budget);
         self
     }
 }

@@ -2,9 +2,62 @@
 //! writer covers what the result emitters need: objects, arrays, strings,
 //! numbers, booleans — numbers are written with enough digits to
 //! round-trip f64. The parser ([`Json::parse`]) is the recursive-descent
-//! inverse the scenario-corpus loader uses on `scenarios.jsonl`.
+//! inverse the scenario-corpus loader uses on `scenarios.jsonl`; the wire
+//! layer feeds it untrusted network frames through
+//! [`Json::parse_limited`], which bounds input size, string size and
+//! nesting depth (a depth bomb would otherwise blow the stack) and
+//! reports typed [`JsonError`]s.
 
 use std::fmt::Write as _;
+
+/// Resource limits applied while parsing untrusted input.
+#[derive(Clone, Copy, Debug)]
+pub struct ParseLimits {
+    /// Maximum input length in bytes (checked before parsing starts).
+    pub max_bytes: usize,
+    /// Maximum array/object nesting depth.
+    pub max_depth: usize,
+    /// Maximum decoded length of any single string, in bytes.
+    pub max_string: usize,
+}
+
+impl Default for ParseLimits {
+    fn default() -> Self {
+        // Generous for trusted local files; the wire layer tightens
+        // max_bytes to its frame cap.
+        Self { max_bytes: 64 << 20, max_depth: 64, max_string: 4 << 20 }
+    }
+}
+
+/// Typed parse failure; `Display` renders the legacy string form.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JsonError {
+    /// Input longer than [`ParseLimits::max_bytes`].
+    TooLarge { bytes: usize, limit: usize },
+    /// Nesting deeper than [`ParseLimits::max_depth`].
+    TooDeep { limit: usize, at: usize },
+    /// A string longer than [`ParseLimits::max_string`].
+    StringTooLong { limit: usize, at: usize },
+    /// Any other grammar violation, with the byte offset.
+    Syntax { message: String, at: usize },
+}
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::TooLarge { bytes, limit } => {
+                write!(f, "input of {bytes} bytes exceeds limit of {limit}")
+            }
+            JsonError::TooDeep { limit, at } => {
+                write!(f, "nesting deeper than {limit} at byte {at}")
+            }
+            JsonError::StringTooLong { limit, at } => {
+                write!(f, "string longer than {limit} bytes at byte {at}")
+            }
+            JsonError::Syntax { message, at } => write!(f, "{message} at byte {at}"),
+        }
+    }
+}
 
 /// A JSON value.
 #[derive(Clone, Debug, PartialEq)]
@@ -57,13 +110,28 @@ impl Json {
     /// Parse one JSON document. Strict: the whole input must be consumed
     /// (modulo surrounding whitespace), and errors report the byte
     /// offset. `Raw` is a write-only variant and is never produced.
+    /// Default [`ParseLimits`] apply (so even trusted-file callers cannot
+    /// blow the stack on deep nesting); errors are stringified for
+    /// compatibility — use [`Json::parse_limited`] for typed errors.
     pub fn parse(input: &str) -> Result<Json, String> {
-        let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+        Json::parse_limited(input, ParseLimits::default()).map_err(|e| e.to_string())
+    }
+
+    /// Parse one JSON document from untrusted input under explicit
+    /// resource limits, reporting typed [`JsonError`]s.
+    pub fn parse_limited(input: &str, limits: ParseLimits) -> Result<Json, JsonError> {
+        if input.len() > limits.max_bytes {
+            return Err(JsonError::TooLarge { bytes: input.len(), limit: limits.max_bytes });
+        }
+        let mut p = Parser { bytes: input.as_bytes(), pos: 0, depth: 0, limits };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
         if p.pos != p.bytes.len() {
-            return Err(format!("trailing characters at byte {}", p.pos));
+            return Err(JsonError::Syntax {
+                message: "trailing characters".to_string(),
+                at: p.pos,
+            });
         }
         Ok(v)
     }
@@ -223,6 +291,8 @@ impl From<Vec<Json>> for Json {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
+    limits: ParseLimits,
 }
 
 impl<'a> Parser<'a> {
@@ -236,11 +306,19 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn err(&self, msg: &str) -> String {
-        format!("{msg} at byte {}", self.pos)
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError::Syntax { message: msg.to_string(), at: self.pos }
     }
 
-    fn expect_literal(&mut self, lit: &str, val: Json) -> Result<Json, String> {
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > self.limits.max_depth {
+            return Err(JsonError::TooDeep { limit: self.limits.max_depth, at: self.pos });
+        }
+        Ok(())
+    }
+
+    fn expect_literal(&mut self, lit: &str, val: Json) -> Result<Json, JsonError> {
         if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
             self.pos += lit.len();
             Ok(val)
@@ -249,7 +327,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    fn value(&mut self) -> Result<Json, JsonError> {
         match self.peek() {
             None => Err(self.err("unexpected end of input")),
             Some(b'n') => self.expect_literal("null", Json::Null),
@@ -263,7 +341,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn number(&mut self) -> Result<Json, String> {
+    fn number(&mut self) -> Result<Json, JsonError> {
         let start = self.pos;
         if self.peek() == Some(b'-') {
             self.pos += 1;
@@ -290,10 +368,10 @@ impl<'a> Parser<'a> {
             .map_err(|_| self.err("invalid number bytes"))?;
         text.parse::<f64>()
             .map(Json::Num)
-            .map_err(|_| format!("invalid number {text:?} at byte {start}"))
+            .map_err(|_| JsonError::Syntax { message: format!("invalid number {text:?}"), at: start })
     }
 
-    fn string(&mut self) -> Result<String, String> {
+    fn string(&mut self) -> Result<String, JsonError> {
         debug_assert_eq!(self.peek(), Some(b'"'));
         self.pos += 1;
         let mut out = String::new();
@@ -303,6 +381,12 @@ impl<'a> Parser<'a> {
                 Some(b'"') => {
                     self.pos += 1;
                     return Ok(out);
+                }
+                Some(_) if out.len() > self.limits.max_string => {
+                    return Err(JsonError::StringTooLong {
+                        limit: self.limits.max_string,
+                        at: self.pos,
+                    });
                 }
                 Some(b'\\') => {
                     self.pos += 1;
@@ -359,7 +443,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn hex4(&mut self) -> Result<u32, String> {
+    fn hex4(&mut self) -> Result<u32, JsonError> {
         if self.pos + 4 > self.bytes.len() {
             return Err(self.err("truncated \\u escape"));
         }
@@ -371,12 +455,14 @@ impl<'a> Parser<'a> {
         Ok(v)
     }
 
-    fn array(&mut self) -> Result<Json, String> {
+    fn array(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.pos += 1; // '['
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -387,6 +473,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -394,12 +481,14 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
+    fn object(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.pos += 1; // '{'
         let mut fields = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(fields));
         }
         loop {
@@ -421,6 +510,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(fields));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -515,6 +605,50 @@ mod tests {
         ] {
             assert!(Json::parse(bad).is_err(), "accepted malformed {bad:?}");
         }
+    }
+
+    #[test]
+    fn depth_bomb_gets_typed_rejection_not_stack_overflow() {
+        let limits = ParseLimits { max_depth: 32, ..Default::default() };
+        let bomb = "[".repeat(100_000); // would recurse 100k deep unchecked
+        match Json::parse_limited(&bomb, limits) {
+            Err(JsonError::TooDeep { limit: 32, .. }) => {}
+            other => panic!("expected TooDeep, got {other:?}"),
+        }
+        // mixed array/object nesting counts too
+        let mixed = format!("{}1{}", "{\"k\":[".repeat(40), "]}".repeat(40));
+        assert!(matches!(
+            Json::parse_limited(&mixed, limits),
+            Err(JsonError::TooDeep { .. })
+        ));
+        // default limits also protect Json::parse (stringified error)
+        assert!(Json::parse(&bomb).is_err());
+    }
+
+    #[test]
+    fn depth_within_limit_is_accepted() {
+        let limits = ParseLimits { max_depth: 32, ..Default::default() };
+        let ok = format!("{}1{}", "[".repeat(32), "]".repeat(32));
+        assert!(Json::parse_limited(&ok, limits).is_ok());
+        let too_deep = format!("{}1{}", "[".repeat(33), "]".repeat(33));
+        assert!(Json::parse_limited(&too_deep, limits).is_err());
+    }
+
+    #[test]
+    fn oversized_input_and_strings_get_typed_rejection() {
+        let limits = ParseLimits { max_bytes: 64, max_string: 16, ..Default::default() };
+        let big = format!("[{}]", "1,".repeat(100));
+        match Json::parse_limited(&big, limits) {
+            Err(JsonError::TooLarge { limit: 64, .. }) => {}
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        let long_str = format!("\"{}\"", "x".repeat(40));
+        match Json::parse_limited(&long_str, limits) {
+            Err(JsonError::StringTooLong { limit: 16, .. }) => {}
+            other => panic!("expected StringTooLong, got {other:?}"),
+        }
+        let short_str = format!("\"{}\"", "x".repeat(10));
+        assert!(Json::parse_limited(&short_str, limits).is_ok());
     }
 
     #[test]

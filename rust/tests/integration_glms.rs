@@ -22,7 +22,7 @@ fn poisson_path_streams_through_the_scheduler() {
     ));
     let n_points = 6;
     let ratios = geometric_grid(1e-2, n_points);
-    let mut sched = FitScheduler::start(1);
+    let sched = FitScheduler::start(1);
     let job = sched.submit_path(
         Arc::clone(&ds),
         specs::poisson_l1(1.0),
@@ -45,6 +45,8 @@ fn poisson_path_streams_through_the_scheduler() {
             JobEvent::Failed { job_id, message } => {
                 panic!("path job {job_id} failed: {message}")
             }
+            JobEvent::Cancelled { job_id, .. } => panic!("job {job_id} cancelled"),
+            JobEvent::SchedulerDown => panic!("scheduler died"),
         }
     }
     sched.shutdown();
@@ -67,7 +69,7 @@ fn probit_fit_and_path_specs_run_through_the_scheduler() {
         7,
     ));
     let lam_max = specs::probit_l1(1.0).lambda_max(&ds.design, &ds.y);
-    let mut sched = FitScheduler::start(2);
+    let sched = FitScheduler::start(2);
     sched.submit_fit(Arc::clone(&ds), specs::probit_l1(lam_max / 8.0), SolverOpts::default());
     sched.submit_fit(Arc::clone(&ds), specs::probit_l1(lam_max / 15.0), SolverOpts::default());
     let outcomes = sched.collect_fits(2);

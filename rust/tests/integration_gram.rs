@@ -18,7 +18,7 @@ fn dataset(seed: u64) -> Arc<Dataset> {
 
 /// Collect one path job's points, indexed by grid position.
 fn run_path_job(
-    sched: &mut FitScheduler,
+    sched: &FitScheduler,
     ds: &Arc<Dataset>,
     ratios: &[f64],
     inner: InnerEngine,
@@ -53,9 +53,9 @@ fn scheduler_warm_path_gram_matches_residual_lambda_by_lambda() {
     // min ratio 0.05 keeps the restricted designs well-conditioned, so
     // the 1e-12 bar measures engine agreement rather than conditioning
     let ratios = geometric_grid(5e-2, 6);
-    let mut sched = FitScheduler::start(1);
-    let residual = run_path_job(&mut sched, &ds, &ratios, InnerEngine::Residual);
-    let gram = run_path_job(&mut sched, &ds, &ratios, InnerEngine::Gram);
+    let sched = FitScheduler::start(1);
+    let residual = run_path_job(&sched, &ds, &ratios, InnerEngine::Residual);
+    let gram = run_path_job(&sched, &ds, &ratios, InnerEngine::Gram);
     sched.shutdown();
     for (idx, (br, bg)) in residual.iter().zip(gram.iter()).enumerate() {
         for (j, (a, b)) in br.iter().zip(bg.iter()).enumerate() {
@@ -73,7 +73,7 @@ fn scheduler_warm_path_gram_matches_residual_lambda_by_lambda() {
 fn gram_blocks_are_shared_across_jobs_through_the_design_cache() {
     let ds = dataset(5);
     let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
-    let mut sched = FitScheduler::start(1);
+    let sched = FitScheduler::start(1);
     let opts = SolverOpts::default().with_tol(1e-10).with_inner(InnerEngine::Gram);
     sched.submit_fit(Arc::clone(&ds), specs::lasso(lam_max / 5.0), opts.clone());
     let _ = sched.collect_events(1);

@@ -18,7 +18,7 @@ fn group_lasso_path_streams_through_the_scheduler_with_screening() {
     );
     let ds = Arc::new(ds);
     let ratios = geometric_grid(1e-2, 6);
-    let mut sched = FitScheduler::start(1);
+    let sched = FitScheduler::start(1);
     let job = sched.submit_path(
         Arc::clone(&ds),
         specs::group_lasso(1.0, Arc::clone(&part)),
@@ -40,6 +40,7 @@ fn group_lasso_path_streams_through_the_scheduler_with_screening() {
                 panic!("group path job {job_id} failed: {message}")
             }
             JobEvent::FitDone(_) => panic!("unexpected fit event"),
+            other => panic!("unexpected terminal event for job {}", other.job_id()),
         }
     }
     assert_eq!(points.len(), ratios.len());
@@ -131,7 +132,7 @@ fn multitask_via_scheduler_equals_direct_solve() {
     let direct =
         solve_multitask(&ds.design, &ds.y, t, &skglm::penalty::BlockL21::new(lam), &opts);
 
-    let mut sched = FitScheduler::start(1);
+    let sched = FitScheduler::start(1);
     sched.submit_fit(
         Arc::clone(&ds),
         specs::multitask_l21(lam, ds.design.ncols(), t),
@@ -159,7 +160,7 @@ fn multitask_via_scheduler_equals_direct_solve() {
 fn multitask_path_sweeps_warm_through_the_scheduler() {
     let (ds, t) = multitask_dataset(13);
     let ratios = geometric_grid(5e-2, 5);
-    let mut sched = FitScheduler::start(1);
+    let sched = FitScheduler::start(1);
     sched.submit_path(
         Arc::clone(&ds),
         specs::multitask_l21(1.0, ds.design.ncols(), t),
@@ -181,6 +182,7 @@ fn multitask_path_sweeps_warm_through_the_scheduler() {
                 panic!("multitask path job {job_id} failed: {message}")
             }
             JobEvent::FitDone(_) => panic!("unexpected fit event"),
+            other => panic!("unexpected terminal event for job {}", other.job_id()),
         }
     }
     assert_eq!(n_points, ratios.len());

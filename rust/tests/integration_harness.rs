@@ -137,7 +137,7 @@ fn coordinator_scheduler_parallel_sweep_matches_serial() {
     let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
     let lambdas: Vec<f64> = (1..=5).map(|k| lam_max / (4.0 * k as f64)).collect();
 
-    let mut sched = FitScheduler::start(3);
+    let sched = FitScheduler::start(3);
     for &lam in &lambdas {
         sched.submit_fit(Arc::clone(&ds), specs::lasso(lam), SolverOpts::default().with_tol(1e-10));
     }

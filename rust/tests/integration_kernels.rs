@@ -111,7 +111,7 @@ fn budget_rules_and_thread_invariance() {
     let shared = Arc::new(big_problem());
     let ratios = vec![0.5, 0.2, 0.08];
     let opts = SolverOpts::default().with_tol(1e-9);
-    let mut sched = FitScheduler::start(2);
+    let sched = FitScheduler::start(2);
     sched.submit_path(Arc::clone(&shared), specs::lasso(1.0), ratios.clone(), opts.clone());
     let mut par_points: Vec<(usize, f64, usize)> = Vec::new();
     loop {
@@ -124,12 +124,13 @@ fn budget_rules_and_thread_invariance() {
             JobEvent::Failed { job_id, message } => {
                 panic!("path job {job_id} failed: {message}")
             }
+            other => panic!("unexpected terminal event for job {}", other.job_id()),
         }
     }
     sched.shutdown();
 
     parallel::set_thread_budget(1);
-    let mut sched = FitScheduler::start(1);
+    let sched = FitScheduler::start(1);
     sched.submit_path(Arc::clone(&shared), specs::lasso(1.0), ratios, opts);
     let mut ser_points: Vec<(usize, f64, usize)> = Vec::new();
     loop {
@@ -142,6 +143,7 @@ fn budget_rules_and_thread_invariance() {
             JobEvent::Failed { job_id, message } => {
                 panic!("path job {job_id} failed: {message}")
             }
+            other => panic!("unexpected terminal event for job {}", other.job_id()),
         }
     }
     sched.shutdown();

@@ -18,7 +18,7 @@ fn dataset(seed: u64) -> Arc<Dataset> {
 fn path_job_streams_every_point_then_done() {
     let ds = dataset(11);
     let ratios = geometric_grid(1e-2, 7);
-    let mut sched = FitScheduler::start(1);
+    let sched = FitScheduler::start(1);
     let job = sched.submit_path(
         Arc::clone(&ds),
         specs::lasso(1.0),
@@ -47,6 +47,7 @@ fn path_job_streams_every_point_then_done() {
             JobEvent::Failed { job_id, message } => {
                 panic!("path job {job_id} failed: {message}")
             }
+            other => panic!("unexpected terminal event for job {}", other.job_id()),
         }
     }
     assert!(done);
@@ -62,7 +63,7 @@ fn warm_path_matches_cold_fits_and_costs_fewer_epochs() {
     let ds = dataset(12);
     let ratios = geometric_grid(5e-3, 9);
     let tol = 1e-9;
-    let mut sched = FitScheduler::start(1);
+    let sched = FitScheduler::start(1);
     sched.submit_path(
         Arc::clone(&ds),
         specs::lasso(1.0),
@@ -105,7 +106,7 @@ fn warm_path_matches_cold_fits_and_costs_fewer_epochs() {
 fn nonconvex_path_converges_at_every_point() {
     let ds = dataset(13);
     let ratios = geometric_grid(5e-2, 6);
-    let mut sched = FitScheduler::start(1);
+    let sched = FitScheduler::start(1);
     sched.submit_path(
         Arc::clone(&ds),
         specs::mcp(1.0, 3.0),
@@ -131,7 +132,7 @@ fn mixed_fit_and_path_jobs_interleave_with_correct_tags() {
     let ds = dataset(14);
     let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
     let ratios = geometric_grid(1e-2, 5);
-    let mut sched = FitScheduler::start(3);
+    let sched = FitScheduler::start(3);
     let path_id = sched.submit_path(
         Arc::clone(&ds),
         specs::lasso(1.0),
@@ -171,6 +172,7 @@ fn mixed_fit_and_path_jobs_interleave_with_correct_tags() {
             JobEvent::Failed { job_id, message } => {
                 panic!("job {job_id} failed: {message}")
             }
+            other => panic!("unexpected terminal event for job {}", other.job_id()),
         }
     }
     assert_eq!(fit_seen, fit_ids.len());
@@ -182,7 +184,7 @@ fn mixed_fit_and_path_jobs_interleave_with_correct_tags() {
 fn shutdown_with_jobs_in_flight_does_not_hang_or_panic() {
     let ds = dataset(15);
     let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
-    let mut sched = FitScheduler::start(2);
+    let sched = FitScheduler::start(2);
     for k in 1..=6 {
         sched.submit_fit(
             Arc::clone(&ds),
@@ -214,7 +216,7 @@ fn generic_job_enum_roundtrip() {
         beta_true: Vec::new(),
     });
     let lam = skglm::estimators::SparseLogisticRegression::lambda_max(&ds.design, &ds.y) / 6.0;
-    let mut sched = FitScheduler::start(1);
+    let sched = FitScheduler::start(1);
     let id = sched.submit(Job::Fit {
         dataset: Arc::clone(&ds),
         spec: specs::logistic_l1(lam),

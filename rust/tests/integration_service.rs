@@ -1,0 +1,336 @@
+//! End-to-end regression tests for the production fit service: real TCP
+//! sockets against [`skglm::coordinator::service`], exercising the
+//! robustness contract — typed error frames that never drop the
+//! connection, admission-control backpressure with `retry_after_ms`,
+//! mid-path cancellation within one λ point, deadline-bounded partial
+//! results carrying optimality certificates, client disconnects that
+//! free (not wedge) workers, injected worker panics survived by
+//! resubmission, and a dead worker pool surfacing as `scheduler_down`.
+
+use skglm::coordinator::service::{spawn, ExitReason, ServiceConfig};
+use skglm::coordinator::{ClientConfig, ClientError, FaultPlan, ServiceClient};
+use skglm::util::json::Json;
+use std::time::Duration;
+
+const EVENT_TIMEOUT: Duration = Duration::from_secs(30);
+
+fn service(faults: &str, workers: usize, max_queue: usize) -> skglm::coordinator::ServiceHandle {
+    spawn(ServiceConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        max_queue,
+        faults: FaultPlan::parse(faults).expect("test fault plan parses"),
+        ..ServiceConfig::default()
+    })
+    .expect("service binds an ephemeral port")
+}
+
+fn client(handle: &skglm::coordinator::ServiceHandle, tenant: &str) -> ServiceClient {
+    ServiceClient::connect(ClientConfig {
+        addr: handle.addr.to_string(),
+        tenant: tenant.to_string(),
+        session: format!("itest-{tenant}"),
+        retry_seed: 9,
+        ..ClientConfig::default()
+    })
+    .expect("client connects")
+}
+
+fn dataset(seed: u64) -> Json {
+    Json::obj()
+        .with("kind", "correlated")
+        .with("n", 40.0)
+        .with("p", 60.0)
+        .with("seed", seed as f64)
+}
+
+fn fit_body(seed: u64) -> Vec<(&'static str, Json)> {
+    vec![
+        ("kind", Json::Str("fit".to_string())),
+        ("model", Json::Str("lasso".to_string())),
+        ("lambda_ratio", Json::Num(0.1)),
+        ("dataset", dataset(seed)),
+    ]
+}
+
+fn path_body(seed: u64, count: usize) -> Vec<(&'static str, Json)> {
+    vec![
+        ("kind", Json::Str("path".to_string())),
+        ("model", Json::Str("lasso".to_string())),
+        ("grid", Json::obj().with("min_ratio", 0.05).with("count", count as f64)),
+        ("dataset", dataset(seed)),
+    ]
+}
+
+fn job_id(accepted: &Json) -> u64 {
+    accepted.get("job").and_then(Json::as_f64).expect("accepted frame carries a job id") as u64
+}
+
+fn frame_type(f: &Json) -> &str {
+    f.get("type").and_then(Json::as_str).unwrap_or("")
+}
+
+#[test]
+fn submit_streams_fit_done_with_certificate_and_status_roundtrip() {
+    let handle = service("", 2, 8);
+    let mut c = client(&handle, "basic");
+    let accepted = c.submit(&fit_body(1)).expect("submit accepted");
+    let job = job_id(&accepted);
+    let (points, terminal) = c.wait_terminal(job, EVENT_TIMEOUT).expect("fit terminates");
+    assert!(points.is_empty(), "fit jobs fold their point into fit_done");
+    assert_eq!(frame_type(&terminal), "fit_done");
+    assert_eq!(terminal.get("outcome").and_then(Json::as_str), Some("ok"));
+    let obj = terminal.get("objective").and_then(Json::as_f64).expect("objective present");
+    assert!(obj.is_finite());
+    assert!(
+        terminal.get("certificate").and_then(Json::as_str).is_some(),
+        "terminal frame must carry the optimality certificate"
+    );
+    let status = c.status(job).expect("status of a finished job");
+    assert_eq!(status.get("state").and_then(Json::as_str), Some("ok"));
+    handle.stop();
+    assert_eq!(handle.join(), ExitReason::Stopped);
+}
+
+#[test]
+fn malformed_input_gets_typed_errors_and_the_connection_survives() {
+    let handle = service("", 1, 8);
+    let mut c = client(&handle, "mal");
+
+    // raw garbage framing → parse_error, connection stays up
+    c.send_bytes(&[0, 0, 0, 7, b'n', b'o', b't', b'-', b'j', b's', b'o'])
+        .expect("send malformed frame");
+    let reply = c.recv_any(EVENT_TIMEOUT).expect("typed reply, not a dropped connection");
+    assert_eq!(frame_type(&reply), "error");
+    assert_eq!(reply.get("code").and_then(Json::as_str), Some("parse_error"));
+
+    // depth bomb → depth_limit
+    let mut bomb = (50_000u32).to_be_bytes().to_vec();
+    bomb.resize(4 + 50_000, b'[');
+    c.send_bytes(&bomb).expect("send depth bomb");
+    let reply = c.recv_any(EVENT_TIMEOUT).expect("depth bomb gets a typed reply");
+    assert_eq!(reply.get("code").and_then(Json::as_str), Some("depth_limit"));
+
+    // unknown envelope field → unknown_field
+    let err = c
+        .request("submit", &[("bogus_field", Json::Num(1.0))])
+        .expect_err("unknown field must be rejected");
+    match err {
+        ClientError::Server { code, .. } => assert_eq!(code, "unknown_field"),
+        other => panic!("expected a typed server error, got {other}"),
+    }
+
+    // out-of-range λ → bad_lambda
+    let mut body = fit_body(2);
+    body[2] = ("lambda_ratio", Json::Num(1.5));
+    match c.submit(&body).expect_err("lambda_ratio 1.5 must be rejected") {
+        ClientError::Server { code, .. } => assert_eq!(code, "bad_lambda"),
+        other => panic!("expected a typed server error, got {other}"),
+    }
+
+    // unknown model → bad_model
+    let mut body = fit_body(2);
+    body[1] = ("model", Json::Str("ridge".to_string()));
+    match c.submit(&body).expect_err("unknown model must be rejected") {
+        ClientError::Server { code, .. } => assert_eq!(code, "bad_model"),
+        other => panic!("expected a typed server error, got {other}"),
+    }
+
+    // after all of that the same connection still serves requests
+    let pong = c.ping().expect("connection survives every typed rejection");
+    assert_eq!(frame_type(&pong), "pong");
+    handle.stop();
+    assert_eq!(handle.join(), ExitReason::Stopped);
+}
+
+#[test]
+fn admission_control_rejects_with_retry_after_then_retry_lands() {
+    // 1 worker, queue depth 2, every solve slowed by 200 ms: the third
+    // concurrent submit must be rejected with a backoff hint, and the
+    // retrying submit path must eventually land once the queue drains.
+    let handle = service("slow=200", 1, 2);
+    let mut c = client(&handle, "burst");
+    let mut live = Vec::new();
+    let mut hint = None;
+    for seed in 10..20u64 {
+        match c.submit(&fit_body(seed)) {
+            Ok(accepted) => live.push(job_id(&accepted)),
+            Err(ClientError::Server { code, retry_after_ms, .. }) => {
+                assert_eq!(code, "rejected");
+                hint = retry_after_ms;
+                break;
+            }
+            Err(other) => panic!("unexpected submit failure: {other}"),
+        }
+    }
+    let hint = hint.expect("queue of depth 2 must reject before 10 submits");
+    assert!(hint > 0, "rejection must carry a positive retry_after_ms hint");
+
+    let accepted = c.submit_retrying(&fit_body(99)).expect("backoff retry eventually lands");
+    live.push(job_id(&accepted));
+    for job in live {
+        let (_, terminal) = c.wait_terminal(job, EVENT_TIMEOUT).expect("job terminates");
+        assert_eq!(frame_type(&terminal), "fit_done");
+    }
+    handle.stop();
+    assert_eq!(handle.join(), ExitReason::Stopped);
+}
+
+#[test]
+fn cancelled_path_stops_within_one_lambda_point() {
+    // a 32-λ sweep where every point costs ≥150 ms: cancel after the
+    // first streamed point and require the job to stop within one point
+    let handle = service("slow_seed=777@150", 1, 4);
+    let mut c = client(&handle, "cancel");
+    let accepted = c.submit(&path_body(777, 32)).expect("path accepted");
+    let job = job_id(&accepted);
+    let first = c.next_event(EVENT_TIMEOUT).expect("first path point streams");
+    assert_eq!(frame_type(&first), "path_point");
+    let cancel = c.cancel(job).expect("cancel round-trips");
+    assert_eq!(cancel.get("found").and_then(Json::as_bool), Some(true));
+    let (points, terminal) = c.wait_terminal(job, EVENT_TIMEOUT).expect("terminal event");
+    assert_eq!(frame_type(&terminal), "cancelled");
+    let emitted =
+        terminal.get("points_emitted").and_then(Json::as_f64).expect("points_emitted") as usize;
+    assert!(
+        emitted <= 1 + points.len() + 1,
+        "cancellation must land within one λ point (emitted {emitted})"
+    );
+    assert!(emitted < 32, "a cancelled 32-λ path must not run to completion");
+    // the freed worker picks up new work promptly
+    let accepted = c.submit(&fit_body(3)).expect("fresh submit after cancel");
+    let (_, terminal) =
+        c.wait_terminal(job_id(&accepted), EVENT_TIMEOUT).expect("fresh fit completes");
+    assert_eq!(frame_type(&terminal), "fit_done");
+    handle.stop();
+    assert_eq!(handle.join(), ExitReason::Stopped);
+}
+
+#[test]
+fn deadline_exceeded_returns_partial_points_with_certificates() {
+    let handle = service("slow_seed=888@150", 1, 4);
+    let mut c = client(&handle, "deadline");
+    let mut body = path_body(888, 8);
+    body.push(("deadline_ms", Json::Num(500.0)));
+    let accepted = c.submit(&body).expect("deadline path accepted");
+    let job = job_id(&accepted);
+    let (points, terminal) = c.wait_terminal(job, EVENT_TIMEOUT).expect("terminates by deadline");
+    assert_eq!(frame_type(&terminal), "path_done");
+    assert_eq!(
+        terminal.get("outcome").and_then(Json::as_str),
+        Some("timeout"),
+        "a deadline-cut sweep must be marked outcome:timeout"
+    );
+    let n_points = terminal.get("n_points").and_then(Json::as_f64).unwrap_or(-1.0) as usize;
+    assert_eq!(n_points, points.len(), "summary count matches streamed points");
+    assert!(n_points < 8, "500 ms deadline must cut a 8×150 ms sweep short");
+    for p in &points {
+        let obj = p.get("objective").and_then(Json::as_f64).expect("objective");
+        assert!(obj.is_finite(), "partial results must have finite objectives");
+        assert!(
+            p.get("certificate").and_then(Json::as_str).is_some(),
+            "every emitted point carries its optimality certificate"
+        );
+    }
+    handle.stop();
+    assert_eq!(handle.join(), ExitReason::Stopped);
+}
+
+#[test]
+fn mid_stream_disconnect_frees_the_worker() {
+    let handle = service("slow_seed=555@200", 1, 4);
+    let ghost = {
+        let mut g = client(&handle, "ghost");
+        let _ = g.submit(&path_body(555, 16)).expect("ghost path accepted");
+        let first = g.next_event(EVENT_TIMEOUT).expect("ghost sees one point");
+        assert_eq!(frame_type(&first), "path_point");
+        g
+    };
+    // vanish mid-stream: the server must cancel the orphan, not wedge
+    ghost.abandon();
+
+    let mut c = client(&handle, "alive");
+    let accepted = c.submit(&fit_body(4)).expect("submit after ghost disconnect");
+    let (_, terminal) = c
+        .wait_terminal(job_id(&accepted), Duration::from_secs(15))
+        .expect("the single worker is freed within one λ point");
+    assert_eq!(frame_type(&terminal), "fit_done");
+    let stats = c.stats().expect("stats");
+    assert_eq!(stats.get("workers_alive").and_then(Json::as_f64), Some(1.0));
+    handle.stop();
+    assert_eq!(handle.join(), ExitReason::Stopped);
+}
+
+#[test]
+fn injected_worker_panic_surfaces_failed_and_resubmit_succeeds() {
+    let handle = service("panic_seed=666999", 2, 8);
+    let mut c = client(&handle, "panicky");
+    let accepted = c.submit(&fit_body(666999)).expect("doomed fit accepted");
+    let (_, terminal) =
+        c.wait_terminal(job_id(&accepted), EVENT_TIMEOUT).expect("failure is terminal");
+    assert_eq!(frame_type(&terminal), "failed");
+    let msg = terminal.get("message").and_then(Json::as_str).unwrap_or("");
+    assert!(msg.contains("injected"), "panic message preserved, got {msg:?}");
+    // the pool survives one panic; a clean resubmit succeeds
+    let accepted = c.submit_retrying(&fit_body(5)).expect("resubmit after panic");
+    let (_, terminal) = c.wait_terminal(job_id(&accepted), EVENT_TIMEOUT).expect("fit lands");
+    assert_eq!(frame_type(&terminal), "fit_done");
+    assert_eq!(terminal.get("outcome").and_then(Json::as_str), Some("ok"));
+    handle.stop();
+    assert_eq!(handle.join(), ExitReason::Stopped);
+}
+
+#[test]
+fn tenant_over_budget_gets_a_typed_rejection() {
+    let handle = spawn(ServiceConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        max_queue: 8,
+        tenant_bytes: Some(100_000),
+        ..ServiceConfig::default()
+    })
+    .expect("service binds");
+    let mut c = client(&handle, "hoarder");
+    // 40×60 ≈ 19 kB: fits the budget
+    let accepted = c.submit(&fit_body(6)).expect("small dataset accepted");
+    let (_, terminal) = c.wait_terminal(job_id(&accepted), EVENT_TIMEOUT).expect("fit done");
+    assert_eq!(frame_type(&terminal), "fit_done");
+    // 200×400 ≈ 640 kB: over the 100 kB tenant budget
+    let mut body = fit_body(7);
+    body[3] = (
+        "dataset",
+        Json::obj()
+            .with("kind", "correlated")
+            .with("n", 200.0)
+            .with("p", 400.0)
+            .with("seed", 7.0),
+    );
+    match c.submit(&body).expect_err("oversized tenant dataset must be refused") {
+        ClientError::Server { code, .. } => assert_eq!(code, "tenant_budget"),
+        other => panic!("expected a typed tenant_budget error, got {other}"),
+    }
+    // the refusal is not a ban: the tenant can still run within budget
+    let pong = c.ping().expect("connection survives the budget rejection");
+    assert_eq!(frame_type(&pong), "pong");
+    handle.stop();
+    assert_eq!(handle.join(), ExitReason::Stopped);
+}
+
+#[test]
+fn dead_worker_pool_surfaces_scheduler_down_and_nonzero_exit() {
+    let handle = service("die_seed=424242", 1, 4);
+    let mut c = client(&handle, "doom");
+    let accepted = c.submit(&fit_body(424242)).expect("pool-killing submit accepted");
+    let (_, terminal) =
+        c.wait_terminal(job_id(&accepted), EVENT_TIMEOUT).expect("terminal event arrives");
+    assert!(
+        matches!(frame_type(&terminal), "scheduler_down" | "failed" | "cancelled"),
+        "a dead pool must be loud, got {:?}",
+        frame_type(&terminal)
+    );
+    assert_eq!(
+        handle.join(),
+        ExitReason::SchedulerDown,
+        "service exit must report the dead worker pool"
+    );
+}

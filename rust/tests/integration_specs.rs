@@ -54,7 +54,7 @@ fn roundtrip(name: &str, ds: &Arc<Dataset>, make: &dyn Fn(f64) -> Box<dyn FitSpe
     );
 
     let opts = SolverOpts::default().with_tol(1e-6);
-    let mut sched = FitScheduler::start(2);
+    let sched = FitScheduler::start(2);
     let fit_job = sched.submit_fit(Arc::clone(ds), make(lam_max / 5.0), opts.clone());
     let path_job = sched.submit_path(Arc::clone(ds), make(1.0), RATIOS.to_vec(), opts);
 
@@ -91,6 +91,10 @@ fn roundtrip(name: &str, ds: &Arc<Dataset>, make: &dyn Fn(f64) -> Box<dyn FitSpe
             JobEvent::Failed { job_id, message } => {
                 panic!("{name}: job {job_id} panicked on its worker: {message}")
             }
+            JobEvent::Cancelled { job_id, .. } => {
+                panic!("{name}: job {job_id} unexpectedly cancelled")
+            }
+            JobEvent::SchedulerDown => panic!("{name}: scheduler died"),
         }
     }
     sched.shutdown();
