@@ -1,0 +1,538 @@
+//! Lightweight Rust source lexer for the static-analysis pass.
+//!
+//! No `syn` offline — mirroring the `util/json.rs` philosophy, this is a
+//! hand-rolled character-level scanner, not a parser. It produces a
+//! per-line model that is exactly what lexical lint rules need:
+//!
+//! - `code`: the line with comments removed and string/char literal
+//!   *contents* blanked (so `"panic!"` inside a string never trips the
+//!   panic-audit rule);
+//! - `comment`: the comment text on the line (line comments and the
+//!   in-line share of block comments) — justification comments and
+//!   `lint: allow(...)` suppressions are read from here;
+//! - `strings`: the string literals that *end* on the line (the
+//!   doc-conformance rule reads error-code literals from these);
+//! - `is_test`: whether the line sits inside a `#[cfg(test)]` item or a
+//!   `#[test]` function (brace-depth tracked), so rules can exempt test
+//!   code.
+//!
+//! It also records per-function line spans ([`FnSpan`]) for the
+//! lock-order rule's acquisition sequences. Known approximations (all
+//! conservative for this repo's style): attributes and macros are not
+//! expanded, and a `fn` signature is recognized lexically (`fn name(`),
+//! so function-like macro bodies attribute to the enclosing item.
+
+/// One lexed source line.
+#[derive(Clone, Debug, Default)]
+pub struct Line {
+    /// Comment-free code with string/char contents blanked to `""`/`''`.
+    pub code: String,
+    /// Comment text on this line (without the `//` / `/* */` markers).
+    pub comment: String,
+    /// String literals terminating on this line, in order.
+    pub strings: Vec<String>,
+    /// Inside a `#[cfg(test)]` item or `#[test]` function.
+    pub is_test: bool,
+}
+
+/// A function's 1-based inclusive line span.
+#[derive(Clone, Debug)]
+pub struct FnSpan {
+    pub name: String,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// An inline `// lint: allow(rule, reason)` suppression. It applies to
+/// the line it sits on and to the immediately following line (so a
+/// comment-only line can annotate the statement below it).
+#[derive(Clone, Debug)]
+pub struct Suppression {
+    pub rule: String,
+    pub reason: String,
+    /// 1-based line.
+    pub line: usize,
+}
+
+/// One lexed source file.
+#[derive(Clone, Debug)]
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes.
+    pub path: String,
+    /// Raw text lines (for excerpts).
+    pub raw: Vec<String>,
+    pub lines: Vec<Line>,
+    pub fns: Vec<FnSpan>,
+    pub suppressions: Vec<Suppression>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum St {
+    Code,
+    LineComment,
+    /// Nestable `/* */`, with current depth.
+    Block(u32),
+    Str,
+    /// Raw string with this many `#`s in its delimiter.
+    RawStr(u32),
+    CharLit,
+}
+
+impl SourceFile {
+    /// Lex `text` into the per-line model.
+    pub fn parse(path: &str, text: &str) -> SourceFile {
+        let raw: Vec<String> = text.lines().map(|l| l.to_string()).collect();
+        let mut lines: Vec<Line> = Vec::with_capacity(raw.len());
+        let mut cur = Line::default();
+        let mut cur_str = String::new();
+        let mut st = St::Code;
+
+        let chars: Vec<char> = text.chars().collect();
+        let mut i = 0usize;
+        while i < chars.len() {
+            let c = chars[i];
+            if c == '\n' {
+                // a newline ends the line in every state; Str/RawStr and
+                // Block comments simply continue on the next line
+                if st == St::LineComment {
+                    st = St::Code;
+                }
+                lines.push(std::mem::take(&mut cur));
+                i += 1;
+                continue;
+            }
+            match st {
+                St::Code => {
+                    let next = chars.get(i + 1).copied();
+                    if c == '/' && next == Some('/') {
+                        st = St::LineComment;
+                        i += 2;
+                    } else if c == '/' && next == Some('*') {
+                        st = St::Block(1);
+                        i += 2;
+                    } else if c == '"' {
+                        cur.code.push_str("\"\"");
+                        cur_str.clear();
+                        st = St::Str;
+                        i += 1;
+                    } else if (c == 'r' || c == 'b') && raw_string_hashes(&chars, i).is_some() {
+                        let (hashes, consumed) =
+                            raw_string_hashes(&chars, i).expect("checked above");
+                        cur.code.push_str("\"\"");
+                        cur_str.clear();
+                        st = St::RawStr(hashes);
+                        i += consumed;
+                    } else if c == '\'' {
+                        if char_literal_starts(&chars, i) {
+                            cur.code.push_str("''");
+                            st = St::CharLit;
+                            i += 1;
+                        } else {
+                            // lifetime: keep as code
+                            cur.code.push(c);
+                            i += 1;
+                        }
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                }
+                St::LineComment => {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+                St::Block(depth) => {
+                    let next = chars.get(i + 1).copied();
+                    if c == '*' && next == Some('/') {
+                        st = if depth == 1 { St::Code } else { St::Block(depth - 1) };
+                        i += 2;
+                    } else if c == '/' && next == Some('*') {
+                        st = St::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        cur.comment.push(c);
+                        i += 1;
+                    }
+                }
+                St::Str => {
+                    if c == '\\' {
+                        // keep escapes verbatim; fidelity is not needed
+                        cur_str.push(c);
+                        if let Some(&n) = chars.get(i + 1) {
+                            if n != '\n' {
+                                cur_str.push(n);
+                            }
+                        }
+                        i += 2;
+                    } else if c == '"' {
+                        cur.strings.push(std::mem::take(&mut cur_str));
+                        st = St::Code;
+                        i += 1;
+                    } else {
+                        cur_str.push(c);
+                        i += 1;
+                    }
+                }
+                St::RawStr(hashes) => {
+                    if c == '"' && closes_raw(&chars, i, hashes) {
+                        cur.strings.push(std::mem::take(&mut cur_str));
+                        st = St::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        cur_str.push(c);
+                        i += 1;
+                    }
+                }
+                St::CharLit => {
+                    if c == '\\' {
+                        i += 2;
+                    } else if c == '\'' {
+                        st = St::Code;
+                        i += 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+        if !cur.code.is_empty() || !cur.comment.is_empty() || !cur.strings.is_empty() {
+            lines.push(cur);
+        }
+        while lines.len() < raw.len() {
+            lines.push(Line::default());
+        }
+
+        let mut file = SourceFile {
+            path: path.to_string(),
+            raw,
+            lines,
+            fns: Vec::new(),
+            suppressions: Vec::new(),
+        };
+        file.mark_regions();
+        file.collect_suppressions();
+        file
+    }
+
+    /// Brace-depth pass: mark `#[cfg(test)]` / `#[test]` regions and
+    /// record function spans.
+    fn mark_regions(&mut self) {
+        let mut depth: i64 = 0;
+        // (close_at_depth) for an open test region
+        let mut test_regions: Vec<i64> = Vec::new();
+        // armed by a test attribute, waiting for its item's `{`
+        let mut test_pending = false;
+        // armed by `fn name(`, waiting for the body's `{`
+        let mut fn_pending: Option<String> = None;
+        // open functions: (name, start_line, close_at_depth)
+        let mut fn_stack: Vec<(String, usize, i64)> = Vec::new();
+        let mut spans: Vec<FnSpan> = Vec::new();
+
+        for idx in 0..self.lines.len() {
+            let code = self.lines[idx].code.clone();
+            if code.contains("#[cfg(test)]") || code.contains("#[test]") {
+                test_pending = true;
+            }
+            if let Some(name) = fn_decl_name(&code) {
+                fn_pending = Some(name);
+            }
+            // a `;` before the body's `{` means a bodiless declaration
+            // (trait method signature): drop the pending fn
+            for ch in code.chars() {
+                match ch {
+                    '{' => {
+                        if test_pending {
+                            test_regions.push(depth);
+                            test_pending = false;
+                        }
+                        if let Some(name) = fn_pending.take() {
+                            fn_stack.push((name, idx + 1, depth));
+                        }
+                        depth += 1;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        while test_regions.last() == Some(&depth) {
+                            test_regions.pop();
+                            // the closer line itself is still test code
+                            self.lines[idx].is_test = true;
+                        }
+                        while fn_stack.last().map(|f| f.2) == Some(depth) {
+                            let (name, start, _) =
+                                fn_stack.pop().expect("last() was Some");
+                            spans.push(FnSpan { name, start, end: idx + 1 });
+                        }
+                    }
+                    ';' => {
+                        if fn_pending.is_some() && fn_stack.last().map(|f| f.2) != Some(depth) {
+                            fn_pending = None;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            if !test_regions.is_empty() || test_pending {
+                self.lines[idx].is_test = true;
+            }
+        }
+        spans.sort_by_key(|s| s.start);
+        self.fns = spans;
+    }
+
+    fn collect_suppressions(&mut self) {
+        let mut out = Vec::new();
+        for (idx, line) in self.lines.iter().enumerate() {
+            if let Some(s) = parse_suppression(&line.comment, idx + 1) {
+                out.push(s);
+            }
+        }
+        self.suppressions = out;
+    }
+
+    /// Is line `lineno` (1-based) suppressed for `rule`? Returns the
+    /// matching suppression's index for usage inventory.
+    pub fn suppression_for(&self, rule: &str, lineno: usize) -> Option<usize> {
+        self.suppressions
+            .iter()
+            .position(|s| s.rule == rule && (s.line == lineno || s.line + 1 == lineno))
+    }
+
+    /// The innermost function span containing `lineno`, if any.
+    pub fn fn_at(&self, lineno: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.start <= lineno && lineno <= f.end)
+            .min_by_key(|f| f.end - f.start)
+    }
+
+    /// Raw text of a 1-based line, trimmed, for finding excerpts.
+    pub fn excerpt(&self, lineno: usize) -> String {
+        self.raw
+            .get(lineno - 1)
+            .map(|l| l.trim().to_string())
+            .unwrap_or_default()
+    }
+}
+
+/// `// lint: allow(rule, reason...)` anywhere in a comment.
+fn parse_suppression(comment: &str, lineno: usize) -> Option<Suppression> {
+    let at = comment.find("lint: allow(")?;
+    let body = &comment[at + "lint: allow(".len()..];
+    let close = body.find(')')?;
+    let body = &body[..close];
+    let (rule, reason) = match body.split_once(',') {
+        Some((r, why)) => (r.trim(), why.trim()),
+        None => (body.trim(), ""),
+    };
+    if rule.is_empty() {
+        return None;
+    }
+    Some(Suppression { rule: rule.to_string(), reason: reason.to_string(), line: lineno })
+}
+
+/// `fn name` on this code line (lexical; returns the identifier).
+fn fn_decl_name(code: &str) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut search = 0usize;
+    while let Some(rel) = code[search..].find("fn ") {
+        let at = search + rel;
+        // word boundary on the left ("fn" not a suffix of an identifier)
+        let ok_left = at == 0 || !is_ident_char(bytes[at - 1] as char);
+        if ok_left {
+            let rest = code[at + 3..].trim_start();
+            let name: String = rest.chars().take_while(|&c| is_ident_char(c)).collect();
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+        search = at + 3;
+    }
+    None
+}
+
+pub(crate) fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// At `chars[i]` sitting on `r` or `b`: does a raw string literal start
+/// here (`r"`, `r#"`, `br##"` …)? Returns (hash count, chars consumed up
+/// to and including the opening quote). Only valid when `chars[i]` is not
+/// part of a longer identifier (checked by the caller's position: we also
+/// verify the char before is not an identifier char).
+fn raw_string_hashes(chars: &[char], i: usize) -> Option<(u32, usize)> {
+    if i > 0 && is_ident_char(chars[i - 1]) {
+        return None;
+    }
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+        if chars.get(j) != Some(&'r') {
+            return None;
+        }
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+/// Does `"` at `chars[i]` close a raw string with `hashes` delimiter
+/// hashes (i.e. is it followed by that many `#`s)?
+fn closes_raw(chars: &[char], i: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// Disambiguate `'` between a char literal and a lifetime: `'\...'` and
+/// `'x'` are literals; `'a`, `'static`, `'_` are lifetimes.
+fn char_literal_starts(chars: &[char], i: usize) -> bool {
+    match chars.get(i + 1) {
+        Some('\\') => true,
+        Some(&c) if c != '\'' => chars.get(i + 2) == Some(&'\''),
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_line_and_block_comments() {
+        let f = SourceFile::parse(
+            "t.rs",
+            "let a = 1; // trailing note\n/* block\nstill block */ let b = 2;\n",
+        );
+        assert_eq!(f.lines[0].code.trim(), "let a = 1;");
+        assert_eq!(f.lines[0].comment.trim(), "trailing note");
+        assert_eq!(f.lines[1].code, "");
+        assert_eq!(f.lines[1].comment.trim(), "block");
+        assert_eq!(f.lines[2].code.trim(), "let b = 2;");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let f = SourceFile::parse("t.rs", "/* a /* b */ c */ let x = 1;\n");
+        assert_eq!(f.lines[0].code.trim(), "let x = 1;");
+    }
+
+    #[test]
+    fn blanks_string_contents_and_collects_them() {
+        let f = SourceFile::parse("t.rs", "let s = \"panic!(do not trip)\"; s.len();\n");
+        assert!(!f.lines[0].code.contains("panic!"), "{}", f.lines[0].code);
+        assert_eq!(f.lines[0].strings, vec!["panic!(do not trip)".to_string()]);
+        assert!(f.lines[0].code.contains("\"\""));
+    }
+
+    #[test]
+    fn string_escapes_and_embedded_quote() {
+        let f = SourceFile::parse("t.rs", r#"let s = "a\"b // not a comment";"#);
+        assert_eq!(f.lines[0].strings.len(), 1);
+        assert!(f.lines[0].comment.is_empty());
+        assert!(f.lines[0].code.ends_with(';'));
+    }
+
+    #[test]
+    fn raw_strings_span_lines() {
+        let f = SourceFile::parse("t.rs", "let s = r#\"one\ntwo \"quoted\" \"#; done();\n");
+        assert_eq!(f.lines[0].strings.len(), 0, "raw string has not ended yet");
+        assert_eq!(f.lines[1].strings.len(), 1);
+        assert!(f.lines[1].strings[0].contains("quoted"));
+        assert!(f.lines[1].code.contains("done()"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let f = SourceFile::parse(
+            "t.rs",
+            "fn f<'a>(x: &'a str) -> char { let c = '\"'; let d = '\\n'; 'x' }\n",
+        );
+        // the quote inside the char literal must not open a string
+        assert!(f.lines[0].strings.is_empty());
+        assert!(f.lines[0].code.contains("&'a str"), "{}", f.lines[0].code);
+    }
+
+    #[test]
+    fn comment_markers_inside_strings_are_inert() {
+        let f = SourceFile::parse("t.rs", "let u = \"http://x\"; real();\n");
+        assert!(f.lines[0].code.contains("real()"));
+        assert!(f.lines[0].comment.is_empty());
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn prod() { body(); }\n#[cfg(test)]\nmod tests {\n    fn helper() {}\n}\nfn prod2() {}\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(!f.lines[0].is_test);
+        assert!(f.lines[1].is_test, "attribute line");
+        assert!(f.lines[2].is_test);
+        assert!(f.lines[3].is_test);
+        assert!(f.lines[4].is_test, "closing brace line");
+        assert!(!f.lines[5].is_test);
+    }
+
+    #[test]
+    fn test_attr_fn_is_marked() {
+        let src = "#[test]\nfn check() {\n    assert!(true);\n}\nfn prod() {}\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(f.lines[2].is_test);
+        assert!(!f.lines[4].is_test);
+    }
+
+    #[test]
+    fn fn_spans_cover_bodies_and_nest() {
+        let src = "impl X {\n    fn one(&self) {\n        a();\n    }\n    fn two() { b(); }\n}\n";
+        let f = SourceFile::parse("t.rs", src);
+        let names: Vec<&str> = f.fns.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["one", "two"]);
+        assert_eq!((f.fns[0].start, f.fns[0].end), (2, 4));
+        assert_eq!((f.fns[1].start, f.fns[1].end), (5, 5));
+        assert_eq!(f.fn_at(3).map(|s| s.name.as_str()), Some("one"));
+        assert_eq!(f.fn_at(6), None);
+    }
+
+    #[test]
+    fn trait_method_signatures_are_not_spans() {
+        let src = "trait T {\n    fn decl(&self) -> usize;\n    fn with_body(&self) { x(); }\n}\n";
+        let f = SourceFile::parse("t.rs", src);
+        let names: Vec<&str> = f.fns.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["with_body"]);
+    }
+
+    #[test]
+    fn multiline_fn_signature() {
+        let src = "fn long(\n    a: usize,\n) -> usize {\n    a\n}\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert_eq!(f.fns.len(), 1);
+        assert_eq!(f.fns[0].name, "long");
+        assert_eq!((f.fns[0].start, f.fns[0].end), (3, 5));
+    }
+
+    #[test]
+    fn suppressions_parse_and_match_next_line() {
+        let src = "// lint: allow(panic-audit, documented API contract)\nfoo.unwrap();\nbar.unwrap();\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert_eq!(f.suppressions.len(), 1);
+        assert_eq!(f.suppressions[0].rule, "panic-audit");
+        assert_eq!(f.suppressions[0].reason, "documented API contract");
+        assert!(f.suppression_for("panic-audit", 1).is_some());
+        assert!(f.suppression_for("panic-audit", 2).is_some());
+        assert!(f.suppression_for("panic-audit", 3).is_none());
+        assert!(f.suppression_for("lock-order", 2).is_none());
+    }
+
+    #[test]
+    fn fn_keyword_inside_identifier_is_ignored() {
+        let f = SourceFile::parse("t.rs", "let definitely_fn = 1;\nlet x = infn foo;\n");
+        assert!(f.fns.is_empty());
+    }
+}

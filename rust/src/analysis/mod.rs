@@ -1,0 +1,334 @@
+//! `skglm analyze`: the self-hosted static-analysis pass.
+//!
+//! PR 6 built systematic conformance checking for *numerics*
+//! (scenarios.jsonl oracles); this module is the counterpart for
+//! *code-level* invariants. A hand-rolled lexer ([`lexer`]) feeds six
+//! project-specific lint rules ([`rules`]): panic-audit, lock-order,
+//! atomic-ordering, unsafe-audit, determinism, doc-conformance. The run
+//! emits `BENCH_analysis.json` (rolled into `BENCH_SUMMARY.json` like
+//! every other gate) and fails — a real `Err`, so CI trips — when any
+//! finding survives suppression.
+//!
+//! Everything here is std-only and offline: the analyzer scans the
+//! checked-out tree it is part of, so `skglm analyze` run at the repo
+//! root audits the very binary that runs it.
+
+pub mod lexer;
+pub mod rules;
+
+use crate::bench::report::{ensure_dir, results_dir};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+use lexer::SourceFile;
+use rules::{DocContext, Outcome, RULES};
+
+/// A full analysis run over one source tree.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub files_scanned: usize,
+    pub total_lines: usize,
+    pub outcome: Outcome,
+}
+
+impl Report {
+    pub fn to_json(&self) -> Json {
+        let findings = Json::Arr(
+            self.outcome
+                .findings
+                .iter()
+                .map(|f| {
+                    Json::obj()
+                        .with("rule_id", f.rule_id.as_str())
+                        .with("file", f.file.as_str())
+                        .with("line", f.line)
+                        .with("severity", f.severity.as_str())
+                        .with("excerpt", f.excerpt.as_str())
+                        .with("justification", f.justification.as_str())
+                })
+                .collect(),
+        );
+        let suppressions = Json::Arr(
+            self.outcome
+                .suppressions
+                .iter()
+                .map(|s| {
+                    Json::obj()
+                        .with("rule_id", s.rule_id.as_str())
+                        .with("file", s.file.as_str())
+                        .with("line", s.line)
+                        .with("reason", s.reason.as_str())
+                        .with("used", s.used)
+                })
+                .collect(),
+        );
+        let unsafe_inventory = Json::Arr(
+            self.outcome
+                .unsafe_inventory
+                .iter()
+                .map(|u| {
+                    Json::obj()
+                        .with("file", u.file.as_str())
+                        .with("line", u.line)
+                        .with("excerpt", u.excerpt.as_str())
+                        .with("has_safety", u.has_safety)
+                })
+                .collect(),
+        );
+        let rules = Json::Arr(
+            RULES
+                .iter()
+                .map(|(id, desc)| {
+                    let n = self
+                        .outcome
+                        .findings
+                        .iter()
+                        .filter(|f| f.rule_id == *id)
+                        .count();
+                    Json::obj()
+                        .with("id", *id)
+                        .with("description", *desc)
+                        .with("findings", n)
+                })
+                .collect(),
+        );
+        Json::obj()
+            .with("experiment", "analysis")
+            .with("files_scanned", self.files_scanned)
+            .with("total_lines", self.total_lines)
+            .with("findings_total", self.outcome.findings.len())
+            .with("suppressions_total", self.outcome.suppressions.len())
+            .with("unsafe_total", self.outcome.unsafe_inventory.len())
+            .with("rules", rules)
+            .with("findings", findings)
+            .with("suppressions", suppressions)
+            .with("unsafe_inventory", unsafe_inventory)
+    }
+}
+
+/// Recursively collect `.rs` files.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.with_context(|| format!("reading entry in {}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            // skip build output if the walker is ever pointed at a root
+            let name = entry.file_name();
+            if name == "target" || name == ".git" {
+                continue;
+            }
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lex and lint the source tree under `root`. Scans `root/rust/src`
+/// when present (the repo layout), else `root/src`, else `root` itself
+/// — the fallbacks keep fixture trees in tests trivial to build.
+pub fn analyze_repo(root: &Path) -> Result<Report> {
+    let scan = if root.join("rust").join("src").is_dir() {
+        root.join("rust").join("src")
+    } else if root.join("src").is_dir() {
+        root.join("src")
+    } else {
+        root.to_path_buf()
+    };
+    let mut paths = Vec::new();
+    collect_rs(&scan, &mut paths)?;
+    paths.sort();
+    if paths.is_empty() {
+        anyhow::bail!("no .rs files found under {}", scan.display());
+    }
+
+    let mut files = Vec::with_capacity(paths.len());
+    let mut total_lines = 0usize;
+    for p in &paths {
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading {}", p.display()))?;
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        total_lines += text.lines().count();
+        files.push(SourceFile::parse(&rel, &text));
+    }
+
+    let docs = DocContext {
+        architecture: std::fs::read_to_string(root.join("ARCHITECTURE.md")).unwrap_or_default(),
+        scenarios_jsonl: std::fs::read_to_string(root.join("scenarios.jsonl")).ok(),
+    };
+    let outcome = rules::run_all(&files, &docs);
+    Ok(Report { files_scanned: files.len(), total_lines, outcome })
+}
+
+/// Emit `BENCH_analysis.json` (results dir always; repo root only
+/// outside `SKGLM_RESULTS` redirection, the shared BENCH convention).
+pub fn write_report(report: &Report) -> Result<Vec<PathBuf>> {
+    let dir = results_dir().join("analysis");
+    ensure_dir(&dir)?;
+    let json = report.to_json();
+    let mut written = Vec::new();
+    let path = dir.join("BENCH_analysis.json");
+    std::fs::write(&path, json.render())
+        .with_context(|| format!("writing {}", path.display()))?;
+    written.push(path);
+    if std::env::var_os("SKGLM_RESULTS").is_none() {
+        let root = PathBuf::from("BENCH_analysis.json");
+        std::fs::write(&root, json.render())
+            .with_context(|| format!("writing {}", root.display()))?;
+        written.push(root);
+    }
+    Ok(written)
+}
+
+/// The `skglm analyze` / `exp analysis` entry point: scan → emit →
+/// **fail** (a real error, so the CI gate trips) when any finding
+/// survives suppression. `quiet` drops the per-finding lines but keeps
+/// the summary.
+pub fn run(root: &Path, quiet: bool) -> Result<Vec<PathBuf>> {
+    let report = analyze_repo(root)?;
+    let written = write_report(&report)?;
+    if !quiet {
+        for f in &report.outcome.findings {
+            eprintln!(
+                "[analyze] {}:{} [{}] {}\n[analyze]     {}",
+                f.file, f.line, f.rule_id, f.excerpt, f.justification
+            );
+        }
+        for s in report.outcome.suppressions.iter().filter(|s| !s.used) {
+            eprintln!(
+                "[analyze] note: unused suppression at {}:{} for {} ({})",
+                s.file, s.line, s.rule_id, s.reason
+            );
+        }
+    }
+    let unsafe_total = report.outcome.unsafe_inventory.len();
+    eprintln!(
+        "[analyze] {} files / {} lines scanned: {} finding(s), {} suppression(s), {} unsafe site(s)",
+        report.files_scanned,
+        report.total_lines,
+        report.outcome.findings.len(),
+        report.outcome.suppressions.len(),
+        unsafe_total,
+    );
+    if !report.outcome.findings.is_empty() {
+        anyhow::bail!(
+            "{} static-analysis finding(s); fix them or justify with `// lint: allow(rule, reason)`",
+            report.outcome.findings.len()
+        );
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture_tree(stem: &str, files: &[(&str, &str)]) -> PathBuf {
+        let root =
+            std::env::temp_dir().join(format!("skglm_analyze_{stem}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        for (rel, body) in files {
+            let p = root.join(rel);
+            std::fs::create_dir_all(p.parent().expect("fixture paths have parents")).unwrap();
+            std::fs::write(&p, body).unwrap();
+        }
+        root
+    }
+
+    #[test]
+    fn violating_tree_fails_and_clean_tree_passes() {
+        let bad = fixture_tree(
+            "bad",
+            &[(
+                "rust/src/coordinator/wire.rs",
+                "fn f(v: Vec<u8>) -> u8 { v.first().copied().unwrap() }\n",
+            )],
+        );
+        let report = analyze_repo(&bad).unwrap();
+        assert_eq!(report.files_scanned, 1);
+        assert_eq!(report.outcome.findings.len(), 1);
+        assert_eq!(report.outcome.findings[0].rule_id, "panic-audit");
+
+        let good = fixture_tree(
+            "good",
+            &[(
+                "rust/src/coordinator/wire.rs",
+                "fn f(v: Vec<u8>) -> u8 { v.first().copied().unwrap_or(0) }\n",
+            )],
+        );
+        let report = analyze_repo(&good).unwrap();
+        assert!(report.outcome.findings.is_empty(), "{:?}", report.outcome.findings);
+
+        let _ = std::fs::remove_dir_all(&bad);
+        let _ = std::fs::remove_dir_all(&good);
+    }
+
+    #[test]
+    fn src_fallback_layout_is_scanned() {
+        let root = fixture_tree(
+            "fallback",
+            &[("src/lib.rs", "pub fn ok() -> usize { 1 }\n")],
+        );
+        let report = analyze_repo(&root).unwrap();
+        assert_eq!(report.files_scanned, 1);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn run_writes_report_and_fails_on_findings() {
+        let _guard = crate::bench::report::results_env_lock();
+        let tmp = std::env::temp_dir().join(format!("skglm_analysis_out_{}", std::process::id()));
+        std::env::set_var("SKGLM_RESULTS", &tmp);
+        let bad = fixture_tree(
+            "run_bad",
+            &[(
+                "rust/src/coordinator/cache.rs",
+                "fn f(&self) { self.state.lock().unwrap(); }\n",
+            )],
+        );
+        let err = run(&bad, true).unwrap_err();
+        assert!(err.to_string().contains("finding"), "{err}");
+        let written = tmp.join("analysis").join("BENCH_analysis.json");
+        assert!(written.exists(), "report written even on failure");
+        let raw = std::fs::read_to_string(&written).unwrap();
+        assert!(raw.contains("\"experiment\":\"analysis\""), "{raw}");
+        assert!(raw.contains("panic-audit"), "{raw}");
+        std::env::remove_var("SKGLM_RESULTS");
+        let _ = std::fs::remove_dir_all(&tmp);
+        let _ = std::fs::remove_dir_all(&bad);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let root = fixture_tree(
+            "shape",
+            &[(
+                "rust/src/linalg/parallel.rs",
+                "fn f(p: *mut f64) {\n// SAFETY: caller guarantees exclusive access\nunsafe { *p = 1.0; }\n}\n",
+            )],
+        );
+        let report = analyze_repo(&root).unwrap();
+        assert!(report.outcome.findings.is_empty(), "{:?}", report.outcome.findings);
+        assert_eq!(report.outcome.unsafe_inventory.len(), 1);
+        let rendered = report.to_json().render();
+        for key in [
+            "\"experiment\":\"analysis\"",
+            "\"files_scanned\"",
+            "\"findings_total\"",
+            "\"rules\"",
+            "\"unsafe_inventory\"",
+            "\"has_safety\":true",
+        ] {
+            assert!(rendered.contains(key), "missing {key} in {rendered}");
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,1284 @@
+//! The lint rules of `skglm analyze`.
+//!
+//! Each rule is a pure function over the lexed source model
+//! ([`super::lexer::SourceFile`]) plus a little documentation context
+//! (ARCHITECTURE.md, scenarios.jsonl). Findings are structured
+//! (`rule_id`/`file`/`line`/`severity`/`excerpt`/`justification`) and
+//! every rule honours inline `// lint: allow(rule, reason)` suppressions
+//! — a suppressed finding is dropped but the suppression itself is
+//! inventoried in the report with a `used` flag, so dead allows are
+//! visible too.
+//!
+//! These are *lexical* rules, and deliberately conservative: they encode
+//! this repo's invariants (the panic-surviving service loop, the
+//! bit-identity contract of `linalg/`+`solver/`, the documented wire
+//! error table), not general Rust semantics. Known approximations are
+//! documented on each rule.
+
+use super::lexer::{is_ident_char, SourceFile};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One structured finding. `severity` is always `"error"` today (every
+/// rule is a CI gate); the field exists so future advisory rules can
+/// downgrade without a schema change.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule_id: String,
+    pub file: String,
+    pub line: usize,
+    pub severity: String,
+    pub excerpt: String,
+    pub justification: String,
+}
+
+/// A `lint: allow` suppression, inventoried with whether any rule
+/// actually consumed it.
+#[derive(Clone, Debug)]
+pub struct SuppressionRecord {
+    pub rule_id: String,
+    pub file: String,
+    pub line: usize,
+    pub reason: String,
+    pub used: bool,
+}
+
+/// One `unsafe` occurrence (always inventoried, finding or not).
+#[derive(Clone, Debug)]
+pub struct UnsafeSite {
+    pub file: String,
+    pub line: usize,
+    pub excerpt: String,
+    pub has_safety: bool,
+}
+
+/// Full result of a rule-engine run.
+#[derive(Clone, Debug, Default)]
+pub struct Outcome {
+    pub findings: Vec<Finding>,
+    pub suppressions: Vec<SuppressionRecord>,
+    pub unsafe_inventory: Vec<UnsafeSite>,
+}
+
+/// (id, description) for every shipped rule, in report order.
+pub const RULES: [(&str, &str); 6] = [
+    (
+        "panic-audit",
+        "no unwrap/expect/panic!/scalar indexing in non-test coordinator service-path code \
+         (service, scheduler, wire, client, cache): the fit service promises to survive bad input",
+    ),
+    (
+        "lock-order",
+        "per-function Mutex acquisition sequences must form an acyclic lock graph \
+         (two functions taking the same pair of locks in opposite order can deadlock)",
+    ),
+    (
+        "atomic-ordering",
+        "every Ordering::Relaxed on a read-modify-write or cross-thread flag store needs a \
+         nearby comment justifying why relaxed ordering is sound",
+    ),
+    (
+        "unsafe-audit",
+        "every `unsafe` must carry a // SAFETY: comment on the same or the 3 preceding lines; \
+         all sites are inventoried in the report",
+    ),
+    (
+        "determinism",
+        "no Instant::now/SystemTime::now in linalg/, and no HashMap/HashSet iteration in \
+         linalg/ or solver/ (iteration order would break the bit-identity contract)",
+    ),
+    (
+        "doc-conformance",
+        "every wire/service error code appears in ARCHITECTURE.md's error table, and every \
+         scenarios.jsonl field is known to the Scenario parser",
+    ),
+];
+
+/// External documents the doc-conformance rule checks against.
+#[derive(Clone, Debug, Default)]
+pub struct DocContext {
+    /// ARCHITECTURE.md text ("" when absent).
+    pub architecture: String,
+    /// scenarios.jsonl text, when present.
+    pub scenarios_jsonl: Option<String>,
+}
+
+struct Engine<'a> {
+    files: &'a [SourceFile],
+    findings: Vec<Finding>,
+    /// used[file_idx][suppression_idx]
+    used: Vec<Vec<bool>>,
+}
+
+impl<'a> Engine<'a> {
+    fn new(files: &'a [SourceFile]) -> Engine<'a> {
+        let used = files.iter().map(|f| vec![false; f.suppressions.len()]).collect();
+        Engine { files, findings: Vec::new(), used }
+    }
+
+    /// Record a finding unless a matching suppression covers the line
+    /// (in which case the suppression is marked used instead).
+    fn emit(&mut self, file_idx: usize, rule: &str, line: usize, justification: String) {
+        let f = &self.files[file_idx];
+        if let Some(si) = f.suppression_for(rule, line) {
+            self.used[file_idx][si] = true;
+            return;
+        }
+        self.findings.push(Finding {
+            rule_id: rule.to_string(),
+            file: f.path.clone(),
+            line,
+            severity: "error".to_string(),
+            excerpt: f.excerpt(line),
+            justification,
+        });
+    }
+
+    /// A finding not tied to any scanned file (e.g. scenarios.jsonl
+    /// drift); no suppression channel.
+    fn emit_external(&mut self, rule: &str, file: &str, line: usize, excerpt: String, justification: String) {
+        self.findings.push(Finding {
+            rule_id: rule.to_string(),
+            file: file.to_string(),
+            line,
+            severity: "error".to_string(),
+            excerpt,
+            justification,
+        });
+    }
+}
+
+/// Run all six rules over `files`.
+pub fn run_all(files: &[SourceFile], docs: &DocContext) -> Outcome {
+    let mut eng = Engine::new(files);
+    let mut unsafe_inventory = Vec::new();
+    panic_audit(&mut eng);
+    lock_order(&mut eng);
+    atomic_ordering(&mut eng);
+    unsafe_audit(&mut eng, &mut unsafe_inventory);
+    determinism(&mut eng);
+    doc_conformance(&mut eng, docs);
+
+    let mut suppressions = Vec::new();
+    for (fi, f) in files.iter().enumerate() {
+        for (si, s) in f.suppressions.iter().enumerate() {
+            // documentation that *describes* the syntax (e.g. `lint:
+            // allow(rule, reason)` with a placeholder rule name) is not a
+            // suppression; only known rule ids enter the inventory
+            if !RULES.iter().any(|(id, _)| *id == s.rule) {
+                continue;
+            }
+            suppressions.push(SuppressionRecord {
+                rule_id: s.rule.clone(),
+                file: f.path.clone(),
+                line: s.line,
+                reason: s.reason.clone(),
+                used: eng.used[fi][si],
+            });
+        }
+    }
+    let mut findings = eng.findings;
+    findings.sort_by(|a, b| {
+        (&a.rule_id, &a.file, a.line).cmp(&(&b.rule_id, &b.file, b.line))
+    });
+    Outcome { findings, suppressions, unsafe_inventory }
+}
+
+// ---------------------------------------------------------------------
+// rule 1: panic-audit
+// ---------------------------------------------------------------------
+
+/// Service-path files where a panic kills a connection the wire
+/// protocol promised to keep alive.
+const PANIC_SCOPE: [&str; 5] = [
+    "coordinator/service.rs",
+    "coordinator/scheduler.rs",
+    "coordinator/wire.rs",
+    "coordinator/client.rs",
+    "coordinator/cache.rs",
+];
+
+fn panic_audit(eng: &mut Engine<'_>) {
+    for fi in 0..eng.files.len() {
+        let f = &eng.files[fi];
+        if !PANIC_SCOPE.iter().any(|s| f.path.ends_with(s)) {
+            continue;
+        }
+        let mut hits: Vec<(usize, String)> = Vec::new();
+        for (idx, line) in f.lines.iter().enumerate() {
+            if line.is_test {
+                continue;
+            }
+            let code = &line.code;
+            if code.contains(".unwrap()") {
+                hits.push((idx + 1, ".unwrap() may panic".to_string()));
+            }
+            if code.contains(".expect(") {
+                hits.push((idx + 1, ".expect(..) may panic".to_string()));
+            }
+            for mac in ["panic!(", "unreachable!(", "todo!(", "unimplemented!("] {
+                if has_word_prefix(code, mac) {
+                    hits.push((idx + 1, format!("{}..) panics", &mac[..mac.len() - 1])));
+                }
+            }
+            if has_scalar_index(code) {
+                hits.push((
+                    idx + 1,
+                    "scalar indexing panics when out of bounds (range slices are exempt)"
+                        .to_string(),
+                ));
+            }
+        }
+        for (lineno, what) in hits {
+            eng.emit(
+                fi,
+                "panic-audit",
+                lineno,
+                format!(
+                    "{what}; the service contract requires surviving bad input — handle the \
+                     Option/Result, or justify with `// lint: allow(panic-audit, why)`"
+                ),
+            );
+        }
+    }
+}
+
+/// `pat` (a macro call like `panic!(`) appears with a word boundary on
+/// its left, so `log_panic!(..)` or `no_todo!(..)` never match.
+fn has_word_prefix(code: &str, pat: &str) -> bool {
+    let mut search = 0usize;
+    while let Some(rel) = code[search..].find(pat) {
+        let at = search + rel;
+        if at == 0 || !is_ident_char(code.as_bytes()[at - 1] as char) {
+            return true;
+        }
+        search = at + pat.len();
+    }
+    false
+}
+
+/// Detect `expr[i]`-style scalar indexing: a `[` whose previous
+/// non-space char is an identifier char, `)`, or `]` (so array/vec/slice
+/// literals, attributes, and types don't match), with a matching `]` on
+/// the same line and no `..` inside (range slices never panic here the
+/// same way and are exempt by design). A keyword before the `[` (`mut`,
+/// `in`, `return`, …) means a type or array expression, not an index.
+fn has_scalar_index(code: &str) -> bool {
+    const KEYWORDS: [&str; 12] = [
+        "mut", "in", "return", "if", "else", "match", "let", "as", "dyn", "ref", "move", "box",
+    ];
+    let chars: Vec<char> = code.chars().collect();
+    for (i, &c) in chars.iter().enumerate() {
+        if c != '[' {
+            continue;
+        }
+        let head = chars[..i]
+            .iter()
+            .rev()
+            .skip_while(|ch| ch.is_whitespace())
+            .take_while(|ch| is_ident_char(**ch))
+            .collect::<String>();
+        let word: String = head.chars().rev().collect();
+        let prev = chars[..i].iter().rev().find(|ch| !ch.is_whitespace());
+        let indexes = matches!(prev, Some(&p) if is_ident_char(p) || p == ')' || p == ']');
+        if !indexes || KEYWORDS.contains(&word.as_str()) {
+            continue;
+        }
+        let mut depth = 1usize;
+        let mut j = i + 1;
+        while j < chars.len() && depth > 0 {
+            match chars[j] {
+                '[' => depth += 1,
+                ']' => depth -= 1,
+                _ => {}
+            }
+            j += 1;
+        }
+        if depth == 0 {
+            let interior: String = chars[i + 1..j - 1].iter().collect();
+            if !interior.contains("..") && !interior.trim().is_empty() {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// rule 2: lock-order
+// ---------------------------------------------------------------------
+
+/// Build the lock graph from per-function acquisition sequences and
+/// fail on cycles.
+///
+/// A lock is identified as `<file stem>::<field name>` (the identifier
+/// left of `.lock()`, or the argument of `lock_or_recover(..)`). Within
+/// one function, every ordered pair (first acquired → later acquired)
+/// becomes an edge. This over-approximates: it cannot see guard drops,
+/// so two locks taken *sequentially* in one function count as ordered —
+/// conservative, and it keeps the whole codebase on one global lock
+/// order, which is the invariant we actually want.
+fn lock_order(eng: &mut Engine<'_>) {
+    // edge -> representative acquisition site (file_idx, line, fn name)
+    let mut edges: BTreeMap<(String, String), (usize, usize, String)> = BTreeMap::new();
+    for fi in 0..eng.files.len() {
+        let f = &eng.files[fi];
+        let stem = file_stem(&f.path);
+        for span in &f.fns {
+            let mut seq: Vec<(String, usize)> = Vec::new();
+            for lineno in span.start..=span.end {
+                let line = &f.lines[lineno - 1];
+                if line.is_test {
+                    continue;
+                }
+                for name in lock_names(&line.code) {
+                    let id = format!("{stem}::{name}");
+                    if !seq.iter().any(|(n, _)| *n == id) {
+                        seq.push((id, lineno));
+                    }
+                }
+            }
+            for i in 0..seq.len() {
+                for j in (i + 1)..seq.len() {
+                    let key = (seq[i].0.clone(), seq[j].0.clone());
+                    edges
+                        .entry(key)
+                        .or_insert((fi, seq[j].1, span.name.clone()));
+                }
+            }
+        }
+    }
+
+    // adjacency (every node present, even sink-only ones)
+    let mut adj: BTreeMap<String, Vec<String>> = BTreeMap::new();
+    for (from, to) in edges.keys() {
+        adj.entry(from.clone()).or_default().push(to.clone());
+        adj.entry(to.clone()).or_default();
+    }
+    // iterative DFS cycle detection (0 = unvisited, 1 = on stack, 2 = done)
+    let mut state: BTreeMap<String, u8> = adj.keys().map(|k| (k.clone(), 0u8)).collect();
+    let starts: Vec<String> = adj.keys().cloned().collect();
+    for start in starts {
+        if state[&start] != 0 {
+            continue;
+        }
+        let mut stack: Vec<(String, usize)> = vec![(start.clone(), 0)];
+        let mut path: Vec<String> = vec![start.clone()];
+        state.insert(start, 1);
+        while let Some((node, cursor)) = stack.last().cloned() {
+            let succs = &adj[&node];
+            if cursor < succs.len() {
+                if let Some(top) = stack.last_mut() {
+                    top.1 += 1;
+                }
+                let succ = succs[cursor].clone();
+                match state[&succ] {
+                    0 => {
+                        state.insert(succ.clone(), 1);
+                        stack.push((succ.clone(), 0));
+                        path.push(succ);
+                    }
+                    1 => {
+                        // back edge: the cycle is `path` from succ onward
+                        let from = path.iter().position(|n| *n == succ).unwrap_or(0);
+                        let mut cycle: Vec<String> = path[from..].to_vec();
+                        cycle.push(succ.clone());
+                        // anchor the finding at the back edge's site
+                        let key = (node.clone(), succ.clone());
+                        let (fi, lineno, fn_name) =
+                            edges.get(&key).cloned().unwrap_or((0, 1, String::new()));
+                        eng.emit(
+                            fi,
+                            "lock-order",
+                            lineno,
+                            format!(
+                                "lock cycle {} (closing edge acquired in fn {fn_name}); \
+                                 pick one global acquisition order",
+                                cycle.join(" -> ")
+                            ),
+                        );
+                        state.insert(succ, 2); // report each cycle once
+                    }
+                    _ => {}
+                }
+            } else {
+                state.insert(node, 2);
+                stack.pop();
+                path.pop();
+            }
+        }
+    }
+}
+
+fn file_stem(path: &str) -> String {
+    path.rsplit('/')
+        .next()
+        .unwrap_or(path)
+        .trim_end_matches(".rs")
+        .to_string()
+}
+
+/// Lock acquisitions on one code line, in positional order: the field
+/// name left of `.lock()`, or the argument of `lock_or_recover(&x)` /
+/// `lock_or_recover(&self.x)`. `wait_or_recover` re-acquires the same
+/// guard and is not a new acquisition.
+fn lock_names(code: &str) -> Vec<String> {
+    let mut hits: Vec<(usize, String)> = Vec::new();
+    let mut search = 0usize;
+    while let Some(rel) = code[search..].find(".lock()") {
+        let at = search + rel;
+        if let Some(name) = ident_chain_before(code, at) {
+            hits.push((at, name));
+        }
+        search = at + ".lock()".len();
+    }
+    search = 0;
+    while let Some(rel) = code[search..].find("lock_or_recover(") {
+        let at = search + rel;
+        if at == 0 || !is_ident_char(code.as_bytes()[at - 1] as char) {
+            let arg = &code[at + "lock_or_recover(".len()..];
+            let arg = arg.trim_start().trim_start_matches('&').trim_start();
+            let chain: String = arg
+                .chars()
+                .take_while(|&c| is_ident_char(c) || c == '.')
+                .collect();
+            if let Some(last) = last_component(&chain) {
+                hits.push((at, last));
+            }
+        }
+        search = at + "lock_or_recover(".len();
+    }
+    hits.sort_by_key(|(pos, _)| *pos);
+    hits.into_iter().map(|(_, n)| n).collect()
+}
+
+/// The identifier chain ending at byte `at` (e.g. for `self.inner.lock()`
+/// with `at` on the final `.`, yields `inner`).
+fn ident_chain_before(code: &str, at: usize) -> Option<String> {
+    let head: Vec<char> = code[..at].chars().collect();
+    let mut i = head.len();
+    while i > 0 && (is_ident_char(head[i - 1]) || head[i - 1] == '.') {
+        i -= 1;
+    }
+    let chain: String = head[i..].iter().collect();
+    last_component(&chain)
+}
+
+fn last_component(chain: &str) -> Option<String> {
+    chain
+        .split('.')
+        .filter(|c| !c.is_empty() && *c != "self")
+        .next_back()
+        .map(|s| s.to_string())
+}
+
+// ---------------------------------------------------------------------
+// rule 3: atomic-ordering
+// ---------------------------------------------------------------------
+
+const RMW_OPS: [&str; 10] = [
+    ".fetch_add(",
+    ".fetch_sub(",
+    ".fetch_or(",
+    ".fetch_and(",
+    ".fetch_xor(",
+    ".fetch_max(",
+    ".fetch_min(",
+    ".fetch_update(",
+    ".compare_exchange",
+    ".swap(",
+];
+
+/// Flag `Ordering::Relaxed` on read-modify-write operations and on
+/// cross-thread boolean flag stores (`.store(true/false, Relaxed)`)
+/// unless a comment mentioning "relaxed" sits on the same line or the 4
+/// preceding lines. Relaxed *loads* are exempt: the paired store site is
+/// where the justification lives.
+fn atomic_ordering(eng: &mut Engine<'_>) {
+    for fi in 0..eng.files.len() {
+        let f = &eng.files[fi];
+        let mut hits: Vec<(usize, String)> = Vec::new();
+        for (idx, line) in f.lines.iter().enumerate() {
+            if line.is_test || !line.code.contains("Relaxed") {
+                continue;
+            }
+            let code = &line.code;
+            let rmw = RMW_OPS.iter().find(|op| code.contains(*op));
+            let flag_store = code.contains(".store(true") || code.contains(".store(false");
+            let what = match (rmw, flag_store) {
+                (Some(op), _) => format!(
+                    "relaxed read-modify-write ({})",
+                    op.trim_start_matches('.').trim_end_matches('(')
+                ),
+                (None, true) => "relaxed cross-thread flag store".to_string(),
+                (None, false) => continue,
+            };
+            if comment_nearby(f, idx + 1, 4, "relaxed") {
+                continue;
+            }
+            hits.push((idx + 1, what));
+        }
+        for (lineno, what) in hits {
+            eng.emit(
+                fi,
+                "atomic-ordering",
+                lineno,
+                format!(
+                    "{what} without a justification comment; explain why Relaxed is sound here \
+                     (what the op synchronises with, or why it needs no ordering) in a comment \
+                     containing the word \"relaxed\""
+                ),
+            );
+        }
+    }
+}
+
+/// A comment on line `lineno` or its `window` preceding lines contains
+/// `needle` (case-insensitive).
+fn comment_nearby(f: &SourceFile, lineno: usize, window: usize, needle: &str) -> bool {
+    let lo = lineno.saturating_sub(window).max(1);
+    (lo..=lineno).any(|l| {
+        f.lines
+            .get(l - 1)
+            .map(|line| line.comment.to_ascii_lowercase().contains(needle))
+            .unwrap_or(false)
+    })
+}
+
+// ---------------------------------------------------------------------
+// rule 4: unsafe-audit
+// ---------------------------------------------------------------------
+
+/// Every `unsafe` (blocks and `unsafe impl`) must carry a `SAFETY:`
+/// comment on the same line or within the 3 preceding lines; all sites
+/// are inventoried regardless.
+fn unsafe_audit(eng: &mut Engine<'_>, inventory: &mut Vec<UnsafeSite>) {
+    for fi in 0..eng.files.len() {
+        let f = &eng.files[fi];
+        let mut hits: Vec<usize> = Vec::new();
+        for (idx, line) in f.lines.iter().enumerate() {
+            if has_word(&line.code, "unsafe") {
+                let lineno = idx + 1;
+                let has_safety = safety_nearby(f, lineno, 3);
+                inventory.push(UnsafeSite {
+                    file: f.path.clone(),
+                    line: lineno,
+                    excerpt: f.excerpt(lineno),
+                    has_safety,
+                });
+                if !has_safety {
+                    hits.push(lineno);
+                }
+            }
+        }
+        for lineno in hits {
+            eng.emit(
+                fi,
+                "unsafe-audit",
+                lineno,
+                "`unsafe` without a `// SAFETY:` comment on the same or the 3 preceding lines; \
+                 state the invariant that makes this sound"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+fn safety_nearby(f: &SourceFile, lineno: usize, window: usize) -> bool {
+    let lo = lineno.saturating_sub(window).max(1);
+    (lo..=lineno).any(|l| {
+        f.lines
+            .get(l - 1)
+            .map(|line| line.comment.contains("SAFETY:"))
+            .unwrap_or(false)
+    })
+}
+
+/// `word` appears in `code` with identifier boundaries on both sides.
+fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut search = 0usize;
+    while let Some(rel) = code[search..].find(word) {
+        let at = search + rel;
+        let left_ok = at == 0 || !is_ident_char(bytes[at - 1] as char);
+        let end = at + word.len();
+        let right_ok = end >= bytes.len() || !is_ident_char(bytes[end] as char);
+        if left_ok && right_ok {
+            return true;
+        }
+        search = at + word.len();
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// rule 5: determinism
+// ---------------------------------------------------------------------
+
+/// Guard the bit-identity contract: `linalg/` must not read wall-clock
+/// time (`Instant::now` / `SystemTime::now`), and neither `linalg/` nor
+/// `solver/` may *iterate* a `HashMap`/`HashSet` (keyed lookups are
+/// fine; iteration order is nondeterministic and must never feed
+/// numeric accumulation). `solver/` wall-clock reads are deliberately
+/// exempt: deadlines and profiling are an intentional, documented
+/// wall-clock dependence that never feeds the iterate sequence.
+fn determinism(eng: &mut Engine<'_>) {
+    for fi in 0..eng.files.len() {
+        let f = &eng.files[fi];
+        let in_linalg = f.path.contains("linalg/");
+        let in_solver = f.path.contains("solver/");
+        if !in_linalg && !in_solver {
+            continue;
+        }
+        let mut hits: Vec<(usize, String)> = Vec::new();
+
+        if in_linalg {
+            for (idx, line) in f.lines.iter().enumerate() {
+                if line.is_test {
+                    continue;
+                }
+                for pat in ["Instant::now", "SystemTime::now"] {
+                    if line.code.contains(pat) {
+                        hits.push((
+                            idx + 1,
+                            format!(
+                                "{pat} in a linalg hot path; kernel results must be a pure \
+                                 function of their inputs (bit-identity across runs and thread \
+                                 counts)"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+
+        // pass 1: names bound to hash containers in this file
+        let mut maps: BTreeSet<String> = BTreeSet::new();
+        for line in &f.lines {
+            for ty in ["HashMap<", "HashSet<", "HashMap::", "HashSet::"] {
+                if let Some(name) = binding_before_type(&line.code, ty) {
+                    maps.insert(name);
+                }
+            }
+        }
+        // pass 2: iteration over any of those names
+        for (idx, line) in f.lines.iter().enumerate() {
+            if line.is_test {
+                continue;
+            }
+            for name in &maps {
+                if iterates(&line.code, name) {
+                    hits.push((
+                        idx + 1,
+                        format!(
+                            "iteration over hash container `{name}`; HashMap/HashSet order is \
+                             nondeterministic and breaks the bit-identity contract — iterate a \
+                             sorted working set (or a Vec) instead"
+                        ),
+                    ));
+                    break;
+                }
+            }
+        }
+        for (lineno, what) in hits {
+            eng.emit(fi, "determinism", lineno, what);
+        }
+    }
+}
+
+/// For a line mentioning a hash-container type (`x: HashMap<..>` field
+/// or `let x = HashMap::new()` binding), extract the bound identifier.
+fn binding_before_type(code: &str, ty: &str) -> Option<String> {
+    let at = code.find(ty)?;
+    let mut head = code[..at].trim_end();
+    // strip a path prefix like `std::collections::`
+    while let Some(stripped) = head.strip_suffix("::") {
+        let mut h = stripped;
+        while h
+            .chars()
+            .next_back()
+            .map(is_ident_char)
+            .unwrap_or(false)
+        {
+            h = &h[..h.len() - 1];
+        }
+        head = h.trim_end();
+    }
+    if let Some(h) = head.strip_suffix(':') {
+        // `name: HashMap<..>` (field or annotated let)
+        return trailing_ident(h);
+    }
+    if let Some(h) = head.strip_suffix('=') {
+        // `let name = HashMap::new()`
+        return trailing_ident(h);
+    }
+    None
+}
+
+fn trailing_ident(s: &str) -> Option<String> {
+    let s = s.trim_end();
+    let name: String = s
+        .chars()
+        .rev()
+        .take_while(|&c| is_ident_char(c))
+        .collect::<Vec<char>>()
+        .into_iter()
+        .rev()
+        .collect();
+    if name.is_empty() || name.chars().next().map(|c| c.is_ascii_digit()).unwrap_or(true) {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// Does this line iterate container `name`? Checks iterator-producing
+/// method calls and `for .. in` loops.
+fn iterates(code: &str, name: &str) -> bool {
+    for m in [
+        ".iter()",
+        ".iter_mut()",
+        ".keys()",
+        ".values()",
+        ".values_mut()",
+        ".into_iter()",
+        ".drain(",
+        ".retain(",
+    ] {
+        let pat = format!("{name}{m}");
+        let mut search = 0usize;
+        while let Some(rel) = code[search..].find(&pat) {
+            let at = search + rel;
+            if at == 0 || !is_ident_char(code.as_bytes()[at - 1] as char) {
+                return true;
+            }
+            search = at + pat.len();
+        }
+    }
+    if code.contains("for ") {
+        if let Some(at) = code.rfind(" in ") {
+            let mut expr = code[at + 4..].trim_start();
+            expr = expr.trim_start_matches('&');
+            expr = expr.strip_prefix("mut ").unwrap_or(expr).trim_start();
+            expr = expr.strip_prefix("self.").unwrap_or(expr);
+            if let Some(rest) = expr.strip_prefix(name) {
+                let boundary = rest.chars().next().map(|c| !is_ident_char(c)).unwrap_or(true);
+                // `map.keys()` etc already matched above; a bare `for k in map {`
+                // or `for k in &map {` iterates directly
+                let direct = rest.trim_start().is_empty()
+                    || rest.trim_start().starts_with('{')
+                    || rest.starts_with(' ');
+                if boundary && direct {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// rule 6: doc-conformance
+// ---------------------------------------------------------------------
+
+/// Cross-check code against documentation:
+/// - every `WireError::code()` string in `coordinator/wire.rs` and every
+///   literal error code passed to `error_frame(..)` in
+///   `coordinator/service.rs` must appear backticked in ARCHITECTURE.md;
+/// - every field key used in `scenarios.jsonl` must be a known field of
+///   the `Scenario::from_json` parser.
+fn doc_conformance(eng: &mut Engine<'_>, docs: &DocContext) {
+    // (file_idx, line, code string)
+    let mut codes: Vec<(usize, usize, String)> = Vec::new();
+    for fi in 0..eng.files.len() {
+        let f = &eng.files[fi];
+        if f.path.ends_with("coordinator/wire.rs") {
+            // string literals inside `fn code(..)`
+            if let Some(span) = f.fns.iter().find(|s| s.name == "code") {
+                for lineno in span.start..=span.end {
+                    for s in &f.lines[lineno - 1].strings {
+                        if looks_like_code(s) {
+                            codes.push((fi, lineno, s.clone()));
+                        }
+                    }
+                }
+            }
+        }
+        if f.path.ends_with("coordinator/service.rs") {
+            // first string literal at (or within 3 lines below) each
+            // error_frame(..) *call* — the definition line is skipped,
+            // and calls forwarding a computed code have no literal
+            for (idx, line) in f.lines.iter().enumerate() {
+                if !line.code.contains("error_frame(") || line.code.contains("fn error_frame") {
+                    continue;
+                }
+                'win: for l in idx..(idx + 4).min(f.lines.len()) {
+                    for s in &f.lines[l].strings {
+                        if looks_like_code(s) {
+                            codes.push((fi, idx + 1, s.clone()));
+                        }
+                        break 'win; // first literal only, code-like or not
+                    }
+                }
+            }
+        }
+    }
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    for (fi, lineno, code) in codes {
+        if !seen.insert(code.clone()) {
+            continue;
+        }
+        let backticked = format!("`{code}`");
+        if !docs.architecture.contains(&backticked) {
+            eng.emit(
+                fi,
+                "doc-conformance",
+                lineno,
+                format!(
+                    "error code \"{code}\" is not in ARCHITECTURE.md's error-code table; \
+                     clients key on documented codes — add it to the table"
+                ),
+            );
+        }
+    }
+
+    // scenarios.jsonl fields vs the Scenario::from_json known-field list
+    let mut known: BTreeSet<String> = BTreeSet::new();
+    for f in eng.files {
+        if !f.path.ends_with("bench/scenario.rs") {
+            continue;
+        }
+        if let Some(span) = f.fns.iter().find(|s| s.name == "from_json") {
+            for lineno in span.start..=span.end {
+                let line = &f.lines[lineno - 1];
+                // match arms lex as `"" =>` with the field name in strings
+                if line.code.trim_start().starts_with("\"\" =>") {
+                    if let Some(s) = line.strings.first() {
+                        known.insert(s.clone());
+                    }
+                }
+            }
+        }
+    }
+    if let (Some(jsonl), false) = (&docs.scenarios_jsonl, known.is_empty()) {
+        for (idx, raw) in jsonl.lines().enumerate() {
+            let raw = raw.trim();
+            if raw.is_empty() || raw.starts_with('#') {
+                continue;
+            }
+            let parsed = match crate::util::json::Json::parse(raw) {
+                Ok(j) => j,
+                Err(e) => {
+                    eng.emit_external(
+                        "doc-conformance",
+                        "scenarios.jsonl",
+                        idx + 1,
+                        truncate(raw, 80),
+                        format!("line does not parse as JSON: {e}"),
+                    );
+                    continue;
+                }
+            };
+            if let Some(fields) = parsed.fields() {
+                for (key, _) in fields {
+                    if !known.contains(key) {
+                        eng.emit_external(
+                            "doc-conformance",
+                            "scenarios.jsonl",
+                            idx + 1,
+                            truncate(raw, 80),
+                            format!(
+                                "field \"{key}\" is unknown to Scenario::from_json (known: {}); \
+                                 the parser rejects it at load time",
+                                known.iter().cloned().collect::<Vec<_>>().join(", ")
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Error codes are lowercase snake_case tokens; filters out message
+/// literals that share a line with a code.
+fn looks_like_code(s: &str) -> bool {
+    !s.is_empty()
+        && s.len() <= 32
+        && s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        format!("{}…", &s[..s.char_indices().take_while(|(i, _)| *i < n).last().map(|(i, c)| i + c.len_utf8()).unwrap_or(0)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::SourceFile;
+
+    fn run_src(path: &str, src: &str) -> Outcome {
+        let files = vec![SourceFile::parse(path, src)];
+        run_all(&files, &DocContext::default())
+    }
+
+    fn rule_hits<'a>(out: &'a Outcome, rule: &str) -> Vec<&'a Finding> {
+        out.findings.iter().filter(|f| f.rule_id == rule).collect()
+    }
+
+    // ---- panic-audit ----
+
+    #[test]
+    fn panic_audit_flags_unwrap_expect_macros_and_indexing() {
+        let src = "fn f(v: Vec<u8>) {\n\
+                   let a = v.first().unwrap();\n\
+                   let b = v.first().expect(\"x\");\n\
+                   panic!(\"boom\");\n\
+                   let c = v[0];\n\
+                   }\n";
+        let out = run_src("rust/src/coordinator/wire.rs", src);
+        assert_eq!(rule_hits(&out, "panic-audit").len(), 4, "{:?}", out.findings);
+    }
+
+    #[test]
+    fn panic_audit_is_scoped_ignores_tests_ranges_and_unwrap_or() {
+        let clean = "fn f(v: Vec<u8>) {\n\
+                     let a = v.first().copied().unwrap_or(0);\n\
+                     let b = v.first().copied().unwrap_or_else(|| 0);\n\
+                     let s = &v[1..3];\n\
+                     let t = &v[..];\n\
+                     }\n\
+                     #[cfg(test)]\n\
+                     mod tests {\n\
+                     fn t() { Some(1).unwrap(); }\n\
+                     }\n";
+        let out = run_src("rust/src/coordinator/service.rs", clean);
+        assert!(rule_hits(&out, "panic-audit").is_empty(), "{:?}", out.findings);
+        // same panicky code outside the scoped files is not this rule's business
+        let out = run_src("rust/src/solver/outer.rs", "fn f() { Some(1).unwrap(); }\n");
+        assert!(rule_hits(&out, "panic-audit").is_empty());
+    }
+
+    #[test]
+    fn panic_audit_suppression_is_honoured_and_inventoried() {
+        let src = "fn f(v: Vec<u8>) {\n\
+                   // lint: allow(panic-audit, length checked by caller)\n\
+                   let c = v[0];\n\
+                   }\n";
+        let out = run_src("rust/src/coordinator/cache.rs", src);
+        assert!(rule_hits(&out, "panic-audit").is_empty(), "{:?}", out.findings);
+        assert_eq!(out.suppressions.len(), 1);
+        assert!(out.suppressions[0].used);
+        assert_eq!(out.suppressions[0].reason, "length checked by caller");
+    }
+
+    #[test]
+    fn unused_suppression_is_inventoried_as_unused() {
+        let src = "// lint: allow(panic-audit, nothing here panics)\nfn f() { let x = 1; }\n";
+        let out = run_src("rust/src/coordinator/cache.rs", src);
+        assert_eq!(out.suppressions.len(), 1);
+        assert!(!out.suppressions[0].used);
+    }
+
+    // ---- lock-order ----
+
+    #[test]
+    fn lock_order_flags_a_cycle() {
+        let src = "fn ab(&self) {\n\
+                   let a = self.alpha.lock().unwrap();\n\
+                   let b = self.beta.lock().unwrap();\n\
+                   }\n\
+                   fn ba(&self) {\n\
+                   let b = self.beta.lock().unwrap();\n\
+                   let a = self.alpha.lock().unwrap();\n\
+                   }\n";
+        let out = run_src("rust/src/coordinator/scheduler.rs", src);
+        let hits = rule_hits(&out, "lock-order");
+        assert_eq!(hits.len(), 1, "{:?}", out.findings);
+        assert!(hits[0].justification.contains("alpha"), "{}", hits[0].justification);
+        assert!(hits[0].justification.contains("beta"));
+    }
+
+    #[test]
+    fn lock_order_consistent_order_is_clean() {
+        let src = "fn ab(&self) {\n\
+                   let a = self.alpha.lock().unwrap();\n\
+                   let b = self.beta.lock().unwrap();\n\
+                   }\n\
+                   fn ab2(&self) {\n\
+                   let a = lock_or_recover(&self.alpha);\n\
+                   let b = lock_or_recover(&self.beta);\n\
+                   }\n";
+        let out = run_src("rust/src/coordinator/scheduler.rs", src);
+        assert!(rule_hits(&out, "lock-order").is_empty(), "{:?}", out.findings);
+    }
+
+    #[test]
+    fn lock_order_suppression_applies() {
+        let src = "fn ab(&self) {\n\
+                   let a = self.alpha.lock().unwrap();\n\
+                   let b = self.beta.lock().unwrap();\n\
+                   }\n\
+                   fn ba(&self) {\n\
+                   let b = self.beta.lock().unwrap();\n\
+                   // lint: allow(lock-order, guards are dropped between acquisitions)\n\
+                   let a = self.alpha.lock().unwrap();\n\
+                   }\n";
+        let out = run_src("rust/src/coordinator/scheduler.rs", src);
+        assert!(rule_hits(&out, "lock-order").is_empty(), "{:?}", out.findings);
+        assert!(out.suppressions.iter().any(|s| s.rule_id == "lock-order" && s.used));
+    }
+
+    // ---- atomic-ordering ----
+
+    #[test]
+    fn atomic_ordering_flags_unjustified_rmw_and_flag_store() {
+        let src = "fn f(&self) {\n\
+                   self.next.fetch_add(1, Ordering::Relaxed);\n\
+                   self.done.store(true, Ordering::Relaxed);\n\
+                   }\n";
+        let out = run_src("rust/src/coordinator/pool.rs", src);
+        assert_eq!(rule_hits(&out, "atomic-ordering").len(), 2, "{:?}", out.findings);
+    }
+
+    #[test]
+    fn atomic_ordering_justified_or_non_relaxed_is_clean() {
+        let src = "fn f(&self) {\n\
+                   // relaxed is fine: the counter is only read after join()\n\
+                   self.next.fetch_add(1, Ordering::Relaxed);\n\
+                   self.done.store(true, Ordering::Release);\n\
+                   let v = self.next.load(Ordering::Relaxed);\n\
+                   let _ = v;\n\
+                   }\n";
+        let out = run_src("rust/src/coordinator/pool.rs", src);
+        assert!(rule_hits(&out, "atomic-ordering").is_empty(), "{:?}", out.findings);
+    }
+
+    #[test]
+    fn atomic_ordering_suppression_applies() {
+        let src = "fn f(&self) {\n\
+                   // lint: allow(atomic-ordering, counter is advisory)\n\
+                   self.next.fetch_add(1, Ordering::Relaxed);\n\
+                   }\n";
+        let out = run_src("rust/src/linalg/parallel.rs", src);
+        assert!(rule_hits(&out, "atomic-ordering").is_empty(), "{:?}", out.findings);
+        assert!(out.suppressions[0].used);
+    }
+
+    // ---- unsafe-audit ----
+
+    #[test]
+    fn unsafe_audit_flags_missing_safety_and_inventories_all() {
+        let src = "fn f(p: *mut f64) {\n\
+                   unsafe { *p = 1.0; }\n\
+                   // SAFETY: p is valid for writes, established by caller\n\
+                   unsafe { *p = 2.0; }\n\
+                   }\n";
+        let out = run_src("rust/src/linalg/parallel.rs", src);
+        assert_eq!(rule_hits(&out, "unsafe-audit").len(), 1, "{:?}", out.findings);
+        assert_eq!(out.unsafe_inventory.len(), 2);
+        assert!(!out.unsafe_inventory[0].has_safety);
+        assert!(out.unsafe_inventory[1].has_safety);
+    }
+
+    #[test]
+    fn unsafe_in_strings_or_comments_is_inert() {
+        let src = "fn f() { let s = \"unsafe\"; } // unsafe in prose only\n";
+        let out = run_src("rust/src/linalg/parallel.rs", src);
+        assert!(out.unsafe_inventory.is_empty());
+        assert!(rule_hits(&out, "unsafe-audit").is_empty());
+    }
+
+    #[test]
+    fn unsafe_audit_suppression_applies() {
+        let src = "// lint: allow(unsafe-audit, documented at module level)\n\
+                   unsafe fn g() {}\n";
+        let out = run_src("rust/src/linalg/parallel.rs", src);
+        assert!(rule_hits(&out, "unsafe-audit").is_empty(), "{:?}", out.findings);
+        assert!(out.suppressions[0].used);
+        assert_eq!(out.unsafe_inventory.len(), 1, "inventory is unconditional");
+    }
+
+    // ---- determinism ----
+
+    #[test]
+    fn determinism_flags_clock_and_map_iteration() {
+        let src = "use std::collections::HashMap;\n\
+                   struct S { slot: HashMap<usize, usize> }\n\
+                   fn f(s: &S) -> f64 {\n\
+                   let t = Instant::now();\n\
+                   let mut acc = 0.0;\n\
+                   for (_, v) in s.slot.iter() { acc += *v as f64; }\n\
+                   let _ = t;\n\
+                   acc\n\
+                   }\n";
+        let out = run_src("rust/src/linalg/gram.rs", src);
+        let hits = rule_hits(&out, "determinism");
+        assert_eq!(hits.len(), 2, "{:?}", out.findings);
+    }
+
+    #[test]
+    fn determinism_keyed_lookup_and_solver_clock_are_clean() {
+        let src = "use std::collections::HashMap;\n\
+                   struct S { slot: HashMap<usize, usize> }\n\
+                   fn f(s: &S, j: usize) -> usize {\n\
+                   let deadline = Instant::now();\n\
+                   let _ = deadline;\n\
+                   *s.slot.get(&j).unwrap_or(&0)\n\
+                   }\n";
+        // solver/: wall clock allowed (deadlines), keyed lookups always fine
+        let out = run_src("rust/src/solver/outer.rs", src);
+        assert!(rule_hits(&out, "determinism").is_empty(), "{:?}", out.findings);
+        // outside linalg//solver/ entirely: out of scope
+        let out = run_src("rust/src/bench/harness.rs", "fn f() { let t = Instant::now(); let _ = t; }\n");
+        assert!(rule_hits(&out, "determinism").is_empty());
+    }
+
+    #[test]
+    fn determinism_for_loop_over_set_and_suppression() {
+        let src = "use std::collections::HashSet;\n\
+                   fn f() {\n\
+                   let keep: HashSet<usize> = HashSet::new();\n\
+                   for j in &keep { let _ = j; }\n\
+                   }\n";
+        let out = run_src("rust/src/linalg/gram.rs", src);
+        assert_eq!(rule_hits(&out, "determinism").len(), 1, "{:?}", out.findings);
+        let src = "use std::collections::HashSet;\n\
+                   fn f() {\n\
+                   let keep: HashSet<usize> = HashSet::new();\n\
+                   // lint: allow(determinism, order does not feed numerics here)\n\
+                   for j in &keep { let _ = j; }\n\
+                   }\n";
+        let out = run_src("rust/src/linalg/gram.rs", src);
+        assert!(rule_hits(&out, "determinism").is_empty(), "{:?}", out.findings);
+    }
+
+    // ---- doc-conformance ----
+
+    fn wire_src() -> &'static str {
+        "impl WireError {\n\
+         pub fn code(&self) -> &'static str {\n\
+         match self {\n\
+         WireError::Io(_) => \"io\",\n\
+         WireError::Truncated => \"truncated_frame\",\n\
+         }\n\
+         }\n\
+         }\n"
+    }
+
+    #[test]
+    fn doc_conformance_flags_missing_code_and_unknown_field() {
+        let files = vec![
+            SourceFile::parse("rust/src/coordinator/wire.rs", wire_src()),
+            SourceFile::parse(
+                "rust/src/bench/scenario.rs",
+                "fn from_json(j: &Json) -> Result<Scenario> {\n\
+                 match key {\n\
+                 \"id\" => {}\n\
+                 \"n\" => {}\n\
+                 }\n\
+                 Ok(s)\n\
+                 }\n",
+            ),
+        ];
+        let docs = DocContext {
+            architecture: "codes: `io` only".to_string(),
+            scenarios_jsonl: Some("{\"id\": \"a\", \"bogus\": 1}\n".to_string()),
+        };
+        let out = run_all(&files, &docs);
+        let hits = rule_hits(&out, "doc-conformance");
+        assert_eq!(hits.len(), 2, "{:?}", out.findings);
+        assert!(hits.iter().any(|h| h.justification.contains("truncated_frame")));
+        assert!(hits.iter().any(|h| h.justification.contains("bogus")));
+    }
+
+    #[test]
+    fn doc_conformance_clean_when_docs_match() {
+        let files = vec![
+            SourceFile::parse("rust/src/coordinator/wire.rs", wire_src()),
+            SourceFile::parse(
+                "rust/src/coordinator/service.rs",
+                "fn handle(&self) -> Json {\n\
+                 error_frame(req, \"bad_request\", \"malformed\")\n\
+                 }\n\
+                 fn error_frame(req: u64, code: &str, message: &str) -> Json {\n\
+                 Json::obj()\n\
+                 }\n",
+            ),
+        ];
+        let docs = DocContext {
+            architecture: "`io` `truncated_frame` `bad_request`".to_string(),
+            scenarios_jsonl: None,
+        };
+        let out = run_all(&files, &docs);
+        assert!(rule_hits(&out, "doc-conformance").is_empty(), "{:?}", out.findings);
+    }
+
+    #[test]
+    fn doc_conformance_suppression_applies() {
+        let files = vec![SourceFile::parse(
+            "rust/src/coordinator/wire.rs",
+            "impl WireError {\n\
+             pub fn code(&self) -> &'static str {\n\
+             // lint: allow(doc-conformance, experimental code, not yet documented)\n\
+             match self { WireError::New => \"brand_new\" }\n\
+             }\n\
+             }\n",
+        )];
+        let docs = DocContext { architecture: String::new(), scenarios_jsonl: None };
+        let out = run_all(&files, &docs);
+        assert!(rule_hits(&out, "doc-conformance").is_empty(), "{:?}", out.findings);
+    }
+
+    // ---- helpers ----
+
+    #[test]
+    fn scalar_index_detector_edges() {
+        assert!(has_scalar_index("let x = v[0];"));
+        assert!(has_scalar_index("let x = self.buf[i + 1];"));
+        assert!(!has_scalar_index("let s = &v[1..3];"));
+        assert!(!has_scalar_index("let s = &v[..n];"));
+        assert!(!has_scalar_index("#[derive(Debug)]"));
+        assert!(!has_scalar_index("let a: [u8; 4] = [0; 4];"));
+        assert!(!has_scalar_index("fn f(x: &[u8]) {}"));
+        assert!(!has_scalar_index("fn f(buf: &mut [u8]) {}"));
+        assert!(!has_scalar_index("for x in [1, 2, 3] {}"));
+        assert!(!has_scalar_index("return [a, b];"));
+        assert!(has_scalar_index("m[&key].push(1);"));
+    }
+
+    #[test]
+    fn lock_name_extraction() {
+        assert_eq!(lock_names("let g = self.state.lock().unwrap();"), vec!["state"]);
+        assert_eq!(lock_names("let g = lock_or_recover(&self.jobs);"), vec!["jobs"]);
+        assert_eq!(lock_names("let g = util::lock_or_recover(&inner);"), vec!["inner"]);
+        assert_eq!(
+            lock_names("let a = x.lock().unwrap(); let b = lock_or_recover(&y);"),
+            vec!["x", "y"]
+        );
+        assert!(lock_names("let g = cv.wait_or_recover(guard);").is_empty());
+    }
+
+    #[test]
+    fn binding_extraction() {
+        assert_eq!(
+            binding_before_type("    slot: HashMap<usize, usize>,", "HashMap<"),
+            Some("slot".to_string())
+        );
+        assert_eq!(
+            binding_before_type(
+                "let keep: std::collections::HashSet<usize> = x.collect();",
+                "HashSet<"
+            ),
+            Some("keep".to_string())
+        );
+        assert_eq!(
+            binding_before_type("let mut m = HashMap::new();", "HashMap::"),
+            Some("m".to_string())
+        );
+        assert_eq!(binding_before_type("use std::collections::HashMap;", "HashMap<"), None);
+    }
+}

@@ -644,6 +644,8 @@ pub fn run_experiment(name: &str, scale: Scale) -> Result<Vec<PathBuf>> {
         "glms" => crate::bench::glm_bench::run_glms(scale),
         "groups" => crate::bench::group_bench::run_groups(scale),
         "gram" => crate::bench::gram_bench::run_gram(scale),
+        // the static-analysis gate: scale-independent, fails on findings
+        "analysis" => crate::analysis::run(std::path::Path::new("."), false),
         // the conformance corpus: Smoke = the CI smoke subset, Full = all
         "scenarios" => {
             crate::bench::scenario::conform(None, None, scale == Scale::Smoke)
@@ -668,7 +670,7 @@ pub fn run_experiment(name: &str, scale: Scale) -> Result<Vec<PathBuf>> {
 
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table1",
-    "table2", "pathsched", "kernels", "glms", "groups", "gram", "scenarios",
+    "table2", "pathsched", "kernels", "glms", "groups", "gram", "analysis", "scenarios",
 ];
 
 #[cfg(test)]

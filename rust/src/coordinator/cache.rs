@@ -24,6 +24,7 @@
 use crate::data::Dataset;
 use crate::linalg::gram::GramCache;
 use crate::linalg::Design;
+use crate::util::lock_or_recover;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -151,7 +152,16 @@ impl DatasetCache {
     }
 
     fn touch(&self) -> u64 {
+        // relaxed is sound: ticks only order LRU recency among entries,
+        // an advisory heuristic — no other memory hangs off this counter
         self.tick.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Bump a statistics counter. Relaxed ordering is sound: these are
+    /// monotonic advisory counters read only by [`DatasetCache::stats`]
+    /// for observability — nothing synchronises with them.
+    fn bump(counter: &AtomicUsize) {
+        counter.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Design + Gram-diagonal + Gram-block entry for (dataset,
@@ -161,10 +171,10 @@ impl DatasetCache {
     pub fn design_entry(&self, dataset: &Arc<Dataset>, normalize: bool) -> Arc<DesignEntry> {
         let key = (Self::dataset_key(dataset), normalize);
         {
-            let mut map = self.designs.lock().unwrap();
+            let mut map = lock_or_recover(&self.designs);
             if let Some(slot) = map.get_mut(&key) {
                 slot.last_used = self.touch();
-                self.design_hits.fetch_add(1, Ordering::Relaxed);
+                Self::bump(&self.design_hits);
                 return Arc::clone(&slot.entry);
             }
         }
@@ -190,9 +200,9 @@ impl DatasetCache {
                 gram: Arc::new(GramCache::with_default_budget()),
             })
         };
-        self.design_misses.fetch_add(1, Ordering::Relaxed);
+        Self::bump(&self.design_misses);
         let out = {
-            let mut map = self.designs.lock().unwrap();
+            let mut map = lock_or_recover(&self.designs);
             let slot = map
                 .entry(key)
                 .or_insert_with(|| DesignSlot { entry, last_used: 0 });
@@ -214,15 +224,15 @@ impl DatasetCache {
         family: &'static str,
     ) -> Option<(f64, Vec<f64>)> {
         let key = (Self::dataset_key(dataset), normalize, datafit, family);
-        let mut map = self.coefs.lock().unwrap();
+        let mut map = lock_or_recover(&self.coefs);
         match map.get_mut(&key) {
             Some(entry) => {
                 entry.last_used = self.touch();
-                self.coef_hits.fetch_add(1, Ordering::Relaxed);
+                Self::bump(&self.coef_hits);
                 Some((entry.lambda, entry.beta.clone()))
             }
             None => {
-                self.coef_misses.fetch_add(1, Ordering::Relaxed);
+                Self::bump(&self.coef_misses);
                 None
             }
         }
@@ -240,7 +250,7 @@ impl DatasetCache {
     ) {
         let key = (Self::dataset_key(dataset), normalize, datafit, family);
         {
-            let mut map = self.coefs.lock().unwrap();
+            let mut map = lock_or_recover(&self.coefs);
             let last_used = self.touch();
             map.insert(key, CoefEntry { lambda, beta: beta.to_vec(), last_used });
         }
@@ -249,8 +259,8 @@ impl DatasetCache {
 
     /// Current accounted bytes (designs + coefficients + Gram blocks).
     pub fn bytes(&self) -> usize {
-        let d: usize = self.designs.lock().unwrap().values().map(|s| s.entry.bytes()).sum();
-        let c: usize = self.coefs.lock().unwrap().values().map(|e| e.bytes()).sum();
+        let d: usize = lock_or_recover(&self.designs).values().map(|s| s.entry.bytes()).sum();
+        let c: usize = lock_or_recover(&self.coefs).values().map(|e| e.bytes()).sum();
         d + c
     }
 
@@ -258,18 +268,12 @@ impl DatasetCache {
     /// normalization variants (service per-tenant budget metering).
     pub fn bytes_for(&self, dataset: &Arc<Dataset>) -> usize {
         let ds_key = Self::dataset_key(dataset);
-        let d: usize = self
-            .designs
-            .lock()
-            .unwrap()
+        let d: usize = lock_or_recover(&self.designs)
             .iter()
             .filter(|((k, _), _)| *k == ds_key)
             .map(|(_, s)| s.entry.bytes())
             .sum();
-        let c: usize = self
-            .coefs
-            .lock()
-            .unwrap()
+        let c: usize = lock_or_recover(&self.coefs)
             .iter()
             .filter(|((k, _, _, _), _)| *k == ds_key)
             .map(|(_, e)| e.bytes())
@@ -286,24 +290,24 @@ impl DatasetCache {
         let ds_key = Self::dataset_key(dataset);
         let mut freed = 0usize;
         {
-            let mut map = self.designs.lock().unwrap();
+            let mut map = lock_or_recover(&self.designs);
             let keys: Vec<(usize, bool)> =
                 map.keys().filter(|(k, _)| *k == ds_key).copied().collect();
             for key in keys {
                 if let Some(slot) = map.remove(&key) {
                     freed += slot.entry.bytes();
-                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                    Self::bump(&self.evictions);
                 }
             }
         }
         {
-            let mut map = self.coefs.lock().unwrap();
+            let mut map = lock_or_recover(&self.coefs);
             let keys: Vec<CoefKey> =
                 map.keys().filter(|(k, _, _, _)| *k == ds_key).copied().collect();
             for key in keys {
                 if let Some(entry) = map.remove(&key) {
                     freed += entry.bytes();
-                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                    Self::bump(&self.evictions);
                 }
             }
         }
@@ -323,7 +327,7 @@ impl DatasetCache {
     /// promotes the entry to MRU, and evicting it then would thrash the
     /// very reuse the cache exists for.
     fn remove_design_if_untouched(&self, key: (usize, bool), seen: u64) -> bool {
-        let mut map = self.designs.lock().unwrap();
+        let mut map = lock_or_recover(&self.designs);
         match map.get(&key) {
             Some(slot) if slot.last_used == seen => {
                 map.remove(&key);
@@ -334,7 +338,7 @@ impl DatasetCache {
     }
 
     fn remove_coef_if_untouched(&self, key: CoefKey, seen: u64) -> bool {
-        let mut map = self.coefs.lock().unwrap();
+        let mut map = lock_or_recover(&self.coefs);
         match map.get(&key) {
             Some(entry) if entry.last_used == seen => {
                 map.remove(&key);
@@ -354,14 +358,14 @@ impl DatasetCache {
             }
             // oldest evictable entry across both maps
             let oldest_design = {
-                let map = self.designs.lock().unwrap();
+                let map = lock_or_recover(&self.designs);
                 map.iter()
                     .filter(|(k, _)| Some(**k) != keep_design)
                     .min_by_key(|(_, s)| s.last_used)
                     .map(|(k, s)| (*k, s.last_used))
             };
             let oldest_coef = {
-                let map = self.coefs.lock().unwrap();
+                let map = lock_or_recover(&self.coefs);
                 map.iter()
                     .filter(|(k, _)| Some(**k) != keep_coef)
                     .min_by_key(|(_, e)| e.last_used)
@@ -381,7 +385,7 @@ impl DatasetCache {
                 return; // nothing evictable (only protected entries left)
             }
             if evicted {
-                self.evictions.fetch_add(1, Ordering::Relaxed);
+                Self::bump(&self.evictions);
             }
         }
     }

@@ -193,7 +193,9 @@ impl ServiceClient {
             .iter()
             .position(|f| !is_event(f) && f.get("req").and_then(Json::as_f64) == Some(req as f64))
         {
-            return Ok(self.queued.remove(pos).unwrap());
+            if let Some(frame) = self.queued.remove(pos) {
+                return Ok(frame);
+            }
         }
         loop {
             let remaining = deadline.saturating_duration_since(Instant::now());
@@ -311,7 +313,9 @@ impl ServiceClient {
     /// Next streamed event within `timeout` (queued frames first).
     pub fn next_event(&mut self, timeout: Duration) -> Result<Json, ClientError> {
         if let Some(pos) = self.queued.iter().position(is_event) {
-            return Ok(self.queued.remove(pos).unwrap());
+            if let Some(frame) = self.queued.remove(pos) {
+                return Ok(frame);
+            }
         }
         let deadline = Instant::now() + timeout;
         loop {

@@ -37,6 +37,8 @@ where
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
+                // relaxed claim counter: indices only partition jobs;
+                // results flow through the per-slot mutexes
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;

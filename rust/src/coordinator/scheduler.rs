@@ -41,6 +41,7 @@
 use super::cache::DatasetCache;
 use super::job::FitSpec;
 use crate::data::Dataset;
+use crate::util::{lock_or_recover, wait_or_recover};
 use crate::estimators::path::PathPoint;
 use crate::linalg::parallel::{register_solver_workers, SolverWorkersGuard};
 use crate::metrics::{estimation_error, prediction_mse, support_recovery};
@@ -114,6 +115,8 @@ impl JobCtl {
     }
 
     pub fn cancel(&self) {
+        // relaxed is sound: the flag is the entire message — cancellation
+        // is cooperative polling, no other data is published through it
         self.cancel.store(true, Ordering::Relaxed);
     }
     pub fn is_cancelled(&self) -> bool {
@@ -280,7 +283,7 @@ impl JobQueue {
     }
 
     fn push(&self, qj: QueuedJob) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state);
         match qj.ctl.priority() {
             Priority::Interactive => st.interactive.push_back(qj),
             Priority::Batch => st.batch.push_back(qj),
@@ -293,7 +296,7 @@ impl JobQueue {
     /// queue: it resumes as soon as interactive work drains, ahead of
     /// batch jobs that were submitted after it started.
     fn push_resume_front(&self, qj: QueuedJob) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state);
         st.batch.push_front(qj);
         drop(st);
         self.cv.notify_one();
@@ -301,7 +304,7 @@ impl JobQueue {
 
     /// Block for the next job; `None` means "this worker should exit".
     fn pop_blocking(&self) -> Option<QueuedJob> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state);
         loop {
             if st.kill_now > 0 {
                 st.kill_now -= 1;
@@ -317,21 +320,21 @@ impl JobQueue {
                 st.graceful_exits -= 1;
                 return None;
             }
-            st = self.cv.wait(st).unwrap();
+            st = wait_or_recover(&self.cv, st);
         }
     }
 
     fn interactive_waiting(&self) -> bool {
-        !self.state.lock().unwrap().interactive.is_empty()
+        !lock_or_recover(&self.state).interactive.is_empty()
     }
 
     fn depth(&self) -> usize {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state);
         st.interactive.len() + st.batch.len()
     }
 
     fn request_exit(&self, n: usize, immediate: bool) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state);
         if immediate {
             st.kill_now += n;
         } else {
@@ -387,7 +390,7 @@ impl FitScheduler {
                     while let Some(qj) = queue.pop_blocking() {
                         let QueuedJob { id, job, ctl } = qj;
                         if ctl.is_cancelled() {
-                            registry.lock().unwrap().remove(&id);
+                            lock_or_recover(&registry).remove(&id);
                             let _ = ev_tx
                                 .send(JobEvent::Cancelled { job_id: id, points_emitted: 0 });
                             continue;
@@ -404,10 +407,10 @@ impl FitScheduler {
                             // live for cancellation until it resumes
                             Ok(RunOutcome::Requeued) => {}
                             Ok(RunOutcome::Terminal) => {
-                                registry.lock().unwrap().remove(&id);
+                                lock_or_recover(&registry).remove(&id);
                             }
                             Err(payload) => {
-                                registry.lock().unwrap().remove(&id);
+                                lock_or_recover(&registry).remove(&id);
                                 let _ = ev_tx.send(JobEvent::Failed {
                                     job_id: id,
                                     message: panic_message(payload),
@@ -446,7 +449,7 @@ impl FitScheduler {
     pub fn submit_with(&self, job: Job, policy: JobPolicy) -> (u64, Arc<JobCtl>) {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let ctl = Arc::new(JobCtl::new(&policy));
-        self.registry.lock().unwrap().insert(id, Arc::clone(&ctl));
+        lock_or_recover(&self.registry).insert(id, Arc::clone(&ctl));
         self.queue.push(QueuedJob { id, job, ctl: Arc::clone(&ctl) });
         (id, ctl)
     }
@@ -478,7 +481,7 @@ impl FitScheduler {
     /// outer iteration, a path within one λ point, and the job's
     /// terminal event is [`JobEvent::Cancelled`].
     pub fn cancel(&self, job_id: u64) -> bool {
-        match self.registry.lock().unwrap().get(&job_id) {
+        match lock_or_recover(&self.registry).get(&job_id) {
             Some(ctl) => {
                 ctl.cancel();
                 true
@@ -490,7 +493,7 @@ impl FitScheduler {
     /// Jobs queued or running (registry size — drops to zero as terminal
     /// events are emitted). The service's admission control polls this.
     pub fn pending(&self) -> usize {
-        self.registry.lock().unwrap().len()
+        lock_or_recover(&self.registry).len()
     }
 
     /// Jobs waiting in the queues (not yet picked up by a worker).
@@ -542,6 +545,7 @@ impl FitScheduler {
     /// know cannot fail, or drain `self.events` with a terminal-event
     /// loop instead.
     pub fn collect_events(&self, count: usize) -> Vec<JobEvent> {
+        // lint: allow(panic-audit, documented contract: panics when all workers died; test/bench helper, not on the service path)
         (0..count).map(|_| self.events.recv().expect("worker died")).collect()
     }
 
@@ -555,8 +559,10 @@ impl FitScheduler {
             .map(|e| match e {
                 JobEvent::FitDone(o) => o,
                 JobEvent::Failed { job_id, message } => {
+                    // lint: allow(panic-audit, documented contract: re-raises the job's original panic; test/bench helper, not on the service path)
                     panic!("job {job_id} failed on its worker: {message}")
                 }
+                // lint: allow(panic-audit, documented contract: mixed workloads must use collect_events)
                 other => panic!(
                     "collect_fits saw a path event (job {}); use collect_events",
                     other.job_id()
@@ -753,6 +759,7 @@ fn run_path_segment(
         }
 
         let index = rs.next_index;
+        // lint: allow(panic-audit, next_index stays below ratios.len by the PathResume invariant re-established before every requeue)
         let ratio = rs.ratios[index];
         let pt0 = Instant::now();
         let lambda = rs.lambda_max * ratio;

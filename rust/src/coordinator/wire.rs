@@ -199,6 +199,7 @@ impl FrameReader {
             // serve a complete frame from the buffer first
             if self.buf.len() >= 4 {
                 let len =
+                    // lint: allow(panic-audit, the buf.len >= 4 guard above keeps 0..=3 in bounds)
                     u32::from_be_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]])
                         as usize;
                 if len > max_frame {

@@ -25,6 +25,7 @@
 //! println!("support size: {}", fit.support().len());
 //! ```
 
+pub mod analysis;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;

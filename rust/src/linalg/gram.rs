@@ -27,6 +27,7 @@
 
 use super::design::Design;
 use super::parallel::{self, KernelPolicy};
+use crate::util::lock_or_recover;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -310,7 +311,7 @@ pub struct GramCache {
 
 impl std::fmt::Debug for GramCache {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let s = self.store.lock().unwrap();
+        let s = lock_or_recover(&self.store);
         f.debug_struct("GramCache")
             .field("slots", &s.n_slots())
             .field("bytes", &s.bytes())
@@ -348,10 +349,12 @@ impl GramCache {
     /// exceeds the budget is still served — the solve needs it — and the
     /// next call's eviction pass shrinks the store again.
     pub fn ensure_gather(&self, design: &Design, ws: &[usize], out: &mut Vec<f64>) -> GramAssembly {
-        let mut store = self.store.lock().unwrap();
+        let mut store = lock_or_recover(&self.store);
         let mut asm = GramAssembly::default();
         if store.bytes() + store.projected_growth_bytes(ws) > self.budget {
             asm.evicted = store.compact_to(ws);
+            // relaxed: observability counter; the store itself is guarded
+            // by the `store` mutex held across this whole assembly
             self.evicted_slots.fetch_add(asm.evicted, Ordering::Relaxed);
         }
         let before = store.assembly_flops();
@@ -365,7 +368,7 @@ impl GramCache {
     /// Dispatcher estimate: stored-entry cost of the blocks `ws` still
     /// needs.
     pub fn projected_assembly_flops(&self, design: &Design, ws: &[usize]) -> f64 {
-        self.store.lock().unwrap().projected_assembly_flops(design, ws)
+        lock_or_recover(&self.store).projected_assembly_flops(design, ws)
     }
 
     /// Current byte footprint — served from a mirrored counter, never
@@ -376,12 +379,12 @@ impl GramCache {
     }
 
     pub fn n_slots(&self) -> usize {
-        self.store.lock().unwrap().n_slots()
+        lock_or_recover(&self.store).n_slots()
     }
 
     /// Cumulative assembly work across every solve sharing this cache.
     pub fn assembly_flops(&self) -> u64 {
-        self.store.lock().unwrap().assembly_flops()
+        lock_or_recover(&self.store).assembly_flops()
     }
 
     /// Total slots evicted by budget enforcement.

@@ -50,8 +50,8 @@ pub fn thread_budget() -> usize {
     let resolved = env_thread_budget().unwrap_or_else(|| {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     });
-    // Racy first-resolution is fine: every racer computes the same value,
-    // and an interleaved `set_thread_budget` wins either way.
+    // Racy relaxed first-resolution is fine: every racer computes the
+    // same value, and an interleaved `set_thread_budget` wins either way.
     let _ = BUDGET.compare_exchange(0, resolved, Ordering::Relaxed, Ordering::Relaxed);
     BUDGET.load(Ordering::Relaxed).max(1)
 }
@@ -77,6 +77,9 @@ pub struct SolverWorkersGuard {
 
 /// Register `n` solver worker threads; the guard releases them on drop.
 pub fn register_solver_workers(n: usize) -> SolverWorkersGuard {
+    // relaxed is sound: the count only scales per-kernel thread fan-out,
+    // an advisory policy input — any momentarily stale read still yields
+    // a valid thread split
     SOLVER_WORKERS.fetch_add(n, Ordering::Relaxed);
     SolverWorkersGuard { n }
 }
@@ -88,6 +91,7 @@ pub fn solver_workers() -> usize {
 
 impl Drop for SolverWorkersGuard {
     fn drop(&mut self) {
+        // relaxed: same advisory-counter argument as register_solver_workers
         SOLVER_WORKERS.fetch_sub(self.n, Ordering::Relaxed);
     }
 }
@@ -233,8 +237,7 @@ struct Job {
 }
 
 // SAFETY: `task` points at a `Sync` closure that outlives the job (the
-// submitting thread blocks until `remaining == 0`); all other fields are
-// thread-safe primitives.
+// submitter blocks until `remaining == 0`); other fields are thread-safe.
 unsafe impl Send for Job {}
 unsafe impl Sync for Job {}
 
@@ -249,6 +252,8 @@ fn execute(job: &Job) {
     // completion handshake; see `Job`.
     let task = unsafe { &*job.task };
     loop {
+        // relaxed claim counter: indices only partition work; results are
+        // published to the submitter by the completion handshake's mutex
         let i = job.next.fetch_add(1, Ordering::Relaxed);
         if i >= job.n_tasks {
             break;
@@ -257,6 +262,8 @@ fn execute(job: &Job) {
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(i)));
         IN_KERNEL_TASK.with(|c| c.set(false));
         if outcome.is_err() {
+            // relaxed flag store: the submitter reads the flag only after
+            // the completion handshake's Mutex/Condvar has synchronised
             job.panicked.store(true, Ordering::Relaxed);
         }
     }

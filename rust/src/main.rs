@@ -5,6 +5,7 @@
 //! skglm path    --penalty mcp --points 20   # warm-started sweep via the scheduler
 //! skglm exp     <fig1..fig10|table1|table2|pathsched|all> [--full]
 //! skglm conform [--smoke] [--filter l1]  # scenario conformance corpus
+//! skglm analyze [--root .]          # self-hosted static-analysis pass
 //! skglm serve   --listen 127.0.0.1:7878 --workers 4   # TCP fit service
 //! skglm client  submit --model lasso --watch          # protocol client
 //! skglm info                        # capability table + runtime probe
@@ -44,6 +45,7 @@ fn dispatch(args: &mut Args) -> Result<()> {
         Some("cv") => cmd_cv(args),
         Some("exp") => cmd_exp(args),
         Some("conform") => cmd_conform(args),
+        Some("analyze") => cmd_analyze(args),
         Some("serve") => cmd_serve(args),
         Some("client") => cmd_client(args),
         Some("synth") => cmd_synth(args),
@@ -68,8 +70,9 @@ const USAGE: &str = "usage:
               [--inner auto|residual|gram] \\
               [--points 20] [--min-ratio 1e-3] [--gamma 3.0] [--small] [--seed 42]
   skglm cv    --dataset <name> [--folds 5] [--points 15] [--workers 4] [--small]
-  skglm exp   <fig1..fig10|table1|table2|pathsched|kernels|glms|groups|gram|scenarios|summary|all> [--full]
+  skglm exp   <fig1..fig10|table1|table2|pathsched|kernels|glms|groups|gram|analysis|scenarios|summary|all> [--full]
   skglm conform [--smoke] [--filter <substr>] [--corpus <scenarios.jsonl>]
+  skglm analyze [--root <repo>] [--quiet]
   skglm serve [--listen 127.0.0.1:7878] [--workers 4] [--queue 32] \\
               [--frame-bytes N] [--cache-bytes N] [--tenant-bytes N] \\
               [--faults <plan>] [--demo [--lambdas 8]]
@@ -108,7 +111,12 @@ const USAGE: &str = "usage:
   service. `client` talks to a service: submit/cancel/status/stats/ping/
   shutdown verbs, --watch streams job events to the terminal, and
   --script smoke self-hosts the scripted loopback acceptance session CI
-  runs (exits non-zero when any step degrades)";
+  runs (exits non-zero when any step degrades). `analyze` runs the
+  self-hosted static-analysis pass (panic-audit, lock-order,
+  atomic-ordering, unsafe-audit, determinism, doc-conformance; see
+  ARCHITECTURE.md §Static analysis) over the source tree at --root,
+  writes BENCH_analysis.json, and exits non-zero on any finding not
+  covered by an inline `// lint: allow(rule, reason)` suppression";
 
 /// Load `name` as a libsvm file when it names one on disk.
 fn try_load_libsvm(name: &str) -> Option<Result<Dataset>> {
@@ -537,6 +545,17 @@ fn cmd_exp(args: &mut Args) -> Result<()> {
     let scale = if args.has("full") { Scale::Full } else { Scale::Smoke };
     args.finish()?;
     let outputs = run_experiment(&name, scale)?;
+    for p in outputs {
+        println!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &mut Args) -> Result<()> {
+    let root = args.get_or("root", ".");
+    let quiet = args.has("quiet");
+    args.finish()?;
+    let outputs = skglm::analysis::run(std::path::Path::new(&root), quiet)?;
     for p in outputs {
         println!("wrote {}", p.display());
     }

@@ -18,3 +18,65 @@ pub fn env_byte_budget(var: &str, default: usize) -> usize {
         .filter(|&b| b > 0)
         .unwrap_or(default)
 }
+
+/// Acquire a mutex, recovering from poisoning instead of panicking.
+///
+/// The scheduler/cache panic-survival contract (worker panics are
+/// caught, the job fails, the process lives) would be defeated if one
+/// panicked worker permanently poisoned a shared mutex: every later
+/// `lock().unwrap()` would cascade the panic. Each call site using this
+/// helper is responsible for keeping the guarded data consistent at
+/// every await-free panic point (the repo convention is mutate-last:
+/// compute, then push/store under the lock).
+pub fn lock_or_recover<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// [`std::sync::Condvar::wait`] with the same poison-recovery policy as
+/// [`lock_or_recover`].
+pub fn wait_or_recover<'a, T>(
+    cv: &std::sync::Condvar,
+    guard: std::sync::MutexGuard<'a, T>,
+) -> std::sync::MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex};
+
+    #[test]
+    fn lock_or_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let g = lock_or_recover(&m);
+        assert_eq!(*g, 7);
+    }
+
+    #[test]
+    fn wait_or_recover_wakes_after_poisoned_notify() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = Arc::clone(&pair);
+        let _ = std::thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            let mut g = m.lock().unwrap();
+            *g = true;
+            cv.notify_all();
+            panic!("poison while holding");
+        })
+        .join();
+        let (m, cv) = &*pair;
+        let mut g = lock_or_recover(m);
+        while !*g {
+            g = wait_or_recover(cv, g);
+        }
+        assert!(*g);
+    }
+}

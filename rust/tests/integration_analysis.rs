@@ -1,0 +1,88 @@
+//! Integration: `skglm analyze` run against this very repository.
+//!
+//! The self-scan is the point of the whole subsystem: the analyzer ships
+//! inside the binary it audits, so the gate below ("the checked-in tree
+//! has zero findings") is what CI enforces. A second test proves the
+//! gate has teeth — a deliberately violating tree must fail.
+
+use skglm::analysis::{analyze_repo, run};
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    // rust/ -> repo root
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .to_path_buf()
+}
+
+#[test]
+fn self_scan_is_clean() {
+    let report = analyze_repo(&repo_root()).expect("self-scan runs");
+    assert!(report.files_scanned > 20, "expected the full tree, got {}", report.files_scanned);
+    if !report.outcome.findings.is_empty() {
+        for f in &report.outcome.findings {
+            eprintln!("[self-scan] {}:{} [{}] {}", f.file, f.line, f.rule_id, f.excerpt);
+            eprintln!("[self-scan]     {}", f.justification);
+        }
+        panic!(
+            "{} static-analysis finding(s) in the checked-in tree; fix them or \
+             justify with `// lint: allow(rule, reason)`",
+            report.outcome.findings.len()
+        );
+    }
+}
+
+#[test]
+fn self_scan_inventories_unsafe_and_suppressions() {
+    let report = analyze_repo(&repo_root()).expect("self-scan runs");
+    // linalg/parallel.rs's pool is the only unsafe in the tree; every
+    // site must carry a SAFETY comment
+    assert!(!report.outcome.unsafe_inventory.is_empty(), "unsafe inventory must not be empty");
+    for site in &report.outcome.unsafe_inventory {
+        assert!(
+            site.file.contains("linalg/parallel.rs"),
+            "unexpected unsafe outside the kernel pool: {}:{}",
+            site.file,
+            site.line
+        );
+        assert!(site.has_safety, "unsafe without SAFETY at {}:{}", site.file, site.line);
+    }
+    // suppressions exist (the documented allows) and every one is used —
+    // a dead allow means the justification outlived the violation
+    assert!(!report.outcome.suppressions.is_empty());
+    for s in &report.outcome.suppressions {
+        assert!(s.used, "unused suppression at {}:{} for {}", s.file, s.line, s.rule_id);
+        assert!(!s.reason.is_empty(), "empty reason at {}:{}", s.file, s.line);
+    }
+}
+
+#[test]
+fn violating_tree_fails_the_gate() {
+    let root =
+        std::env::temp_dir().join(format!("skglm_analyze_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let src = root.join("rust").join("src").join("coordinator");
+    std::fs::create_dir_all(&src).expect("mkdir fixture");
+    std::fs::write(
+        src.join("wire.rs"),
+        "fn f(v: Vec<u8>) -> u8 { v[0] }\n\
+         fn g(o: Option<u8>) -> u8 { o.unwrap() }\n",
+    )
+    .expect("write fixture");
+
+    let report = analyze_repo(&root).expect("fixture scan runs");
+    assert_eq!(report.outcome.findings.len(), 2, "{:?}", report.outcome.findings);
+    assert!(report.outcome.findings.iter().all(|f| f.rule_id == "panic-audit"));
+    assert!(report.outcome.findings.iter().all(|f| f.severity == "error"));
+
+    // the CLI entry point fails loudly on the same tree (quiet mode, and
+    // results redirected so the fixture run cannot clobber real reports)
+    let out = root.join("results");
+    std::env::set_var("SKGLM_RESULTS", &out);
+    let err = run(&root, true).expect_err("violating tree must fail the gate");
+    assert!(err.to_string().contains("finding"), "{err}");
+    assert!(out.join("analysis").join("BENCH_analysis.json").exists());
+    std::env::remove_var("SKGLM_RESULTS");
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -34,6 +34,9 @@ cargo run --release -p skglm --bin skglm -- conform --smoke
 echo "==> serve smoke gate (loopback fit service under a fault plan; writes BENCH_serve_smoke.json; non-zero exit on any unhandled degradation)"
 cargo run --release -p skglm --bin skglm -- client --script smoke --transcript BENCH_serve_smoke.json
 
+echo "==> static-analysis gate (writes BENCH_analysis.json; non-zero exit on any finding)"
+cargo run --release -p skglm --bin skglm -- analyze
+
 echo "==> roll up BENCH_*.json -> BENCH_SUMMARY.json"
 cargo run --release -p skglm --bin skglm -- exp summary
 
