@@ -1,0 +1,338 @@
+//! Bench scenario `batch`: simultaneous many-fit batching
+//! ([`crate::solver::solve_batch`]) measured against the sequential
+//! baseline (B independent scalar solves) over a B × shape × density
+//! grid, with per-stage flop attribution (CD epochs vs Gram assembly vs
+//! multi-RHS panel passes) from [`crate::solver::InnerProfile`].
+//!
+//! What the JSON certifies (ISSUE 9 acceptance):
+//! - `speedup` per cell: sequential wall time / batched wall time for the
+//!   same B sibling fits — the headline cell is dense `n=10^4, p=10^3`
+//!   at `B >= 8`, where batching must report `>= 2x` (Full scale);
+//! - `max_obj_gap` per cell: worst batched-vs-sequential objective gap
+//!   across members, `<= 1e-12` everywhere (each member is in fact
+//!   bit-identical to its scalar run — the gap is recorded as evidence);
+//! - `panel_ratio` per cell: share of modelled work done by the panel
+//!   kernel — the amortisation diagnostic (grows with B);
+//! - `thread_invariant`: one batched cell re-run under thread budgets
+//!   {1, 2, 4} produces bit-identical coefficients (ordered reductions).
+//!
+//! Results land in `results/batch/` and — the perf-trajectory anchor —
+//! `BENCH_batch.json` at the repo root (skipped when `SKGLM_RESULTS`
+//! redirects outputs, e.g. under `cargo test`).
+
+use crate::bench::figures::Scale;
+use crate::bench::report::{ensure_dir, results_dir, write_markdown};
+use crate::data::{correlated, sparse, CorrelatedSpec, Dataset, SparseSpec};
+use crate::datafit::Quadratic;
+use crate::estimators::linear::quadratic_lambda_max;
+use crate::penalty::{BatchPenalty, L1};
+use crate::solver::{solve, solve_batch, BatchFit, SolverOpts};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use anyhow::Result;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// One (shape, B) measurement: batched vs sequential sibling λ-fits.
+#[derive(Clone, Debug)]
+pub struct BatchBenchRow {
+    /// workload shape, e.g. `d2000x500` or `s5000x20000@1e-3`
+    pub shape: String,
+    /// batch width (number of sibling fits solved simultaneously)
+    pub b: usize,
+    pub batch_wall_s: f64,
+    pub seq_wall_s: f64,
+    /// sequential wall / batched wall (>1 ⇒ batching wins)
+    pub speedup: f64,
+    /// worst per-member |obj_batch - obj_seq| across the batch
+    pub max_obj_gap: f64,
+    /// batched run: modelled CD-epoch flops
+    pub epoch_flops: f64,
+    /// batched run: modelled Gram-assembly flops
+    pub assembly_flops: f64,
+    /// batched run: modelled multi-RHS panel flops
+    pub panel_flops: f64,
+    /// panel share of the batched run's modelled work
+    pub panel_ratio: f64,
+    /// shared outer iterations of the batched loop
+    pub n_outer: usize,
+    /// total CD epochs across all batch members
+    pub epochs: usize,
+}
+
+/// Sibling λ grid for a batch of width `b`: a geometric sweep inside
+/// `[0.02, 0.3] * λ_max` — the FaSTGLZ regularisation-grid scenario.
+fn sibling_lambdas(lam_max: f64, b: usize) -> Vec<f64> {
+    if b == 1 {
+        return vec![lam_max * 0.1];
+    }
+    let (hi, lo) = (0.3f64, 0.02f64);
+    let step = (lo / hi).powf(1.0 / (b - 1) as f64);
+    (0..b).map(|k| lam_max * hi * step.powi(k as i32)).collect()
+}
+
+/// Lasso objective `0.5/n ||y - X beta||^2 + lam ||beta||_1` in the
+/// solver's own arithmetic (parity evidence between the two runs).
+fn lasso_objective(ds: &Dataset, beta: &[f64], lam: f64) -> f64 {
+    let n = ds.design.nrows();
+    let mut xb = vec![0.0; n];
+    ds.design.matvec(beta, &mut xb);
+    let rss: f64 = ds.y.iter().zip(&xb).map(|(yi, xi)| (yi - xi) * (yi - xi)).sum();
+    let l1: f64 = beta.iter().map(|v| v.abs()).sum();
+    0.5 * rss / n as f64 + lam * l1
+}
+
+fn bench_cell(ds: &Dataset, shape: &str, b: usize, opts: &SolverOpts) -> BatchBenchRow {
+    let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+    let lams = sibling_lambdas(lam_max, b);
+
+    // batched: one multi-RHS solve over all B siblings
+    let fits: Vec<BatchFit> =
+        lams.iter().map(|&l| BatchFit::new(BatchPenalty::L1(L1::new(l)))).collect();
+    let t0 = Instant::now();
+    let out = solve_batch(&ds.design, &ds.y, fits, opts, None, None);
+    let batch_wall_s = t0.elapsed().as_secs_f64();
+
+    // sequential baseline: the same B fits, one scalar solve at a time
+    let t1 = Instant::now();
+    let seq: Vec<crate::solver::FitResult> = lams
+        .iter()
+        .map(|&l| {
+            let mut f = Quadratic::new();
+            solve(&ds.design, &ds.y, &mut f, &L1::new(l), opts, None, None)
+        })
+        .collect();
+    let seq_wall_s = t1.elapsed().as_secs_f64();
+
+    let mut max_obj_gap = 0.0f64;
+    for ((m, s), &lam) in out.members.iter().zip(&seq).zip(&lams) {
+        let ob = lasso_objective(ds, &m.result.beta, lam);
+        let os = lasso_objective(ds, &s.beta, lam);
+        max_obj_gap = max_obj_gap.max((ob - os).abs());
+    }
+
+    let p = &out.profile;
+    BatchBenchRow {
+        shape: shape.to_string(),
+        b,
+        batch_wall_s,
+        seq_wall_s,
+        speedup: seq_wall_s / batch_wall_s.max(1e-12),
+        max_obj_gap,
+        epoch_flops: p.epoch_flops,
+        assembly_flops: p.gram_assembly_flops,
+        panel_flops: p.panel_flops,
+        panel_ratio: p.panel_flop_ratio(),
+        n_outer: out.n_outer,
+        epochs: out.members.iter().map(|m| m.result.n_epochs).sum(),
+    }
+}
+
+/// Bit-invariance across kernel thread budgets: the batched panel kernel
+/// uses ordered per-RHS reductions, so coefficients must not drift with
+/// the thread count.
+fn thread_invariance_check(ds: &Dataset, b: usize, opts: &SolverOpts) -> bool {
+    let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+    let lams = sibling_lambdas(lam_max, b);
+    let run = || {
+        let fits: Vec<BatchFit> =
+            lams.iter().map(|&l| BatchFit::new(BatchPenalty::L1(L1::new(l)))).collect();
+        solve_batch(&ds.design, &ds.y, fits, opts, None, None)
+    };
+    let before = crate::linalg::parallel::thread_budget();
+    let mut reference: Option<Vec<u64>> = None;
+    let mut ok = true;
+    for budget in [1usize, 2, 4] {
+        crate::linalg::parallel::set_thread_budget(budget);
+        let out = run();
+        let bits: Vec<u64> = out
+            .members
+            .iter()
+            .flat_map(|m| m.result.beta.iter().map(|v| v.to_bits()))
+            .collect();
+        match &reference {
+            None => reference = Some(bits),
+            Some(r) => ok &= r == &bits,
+        }
+    }
+    crate::linalg::parallel::set_thread_budget(before);
+    ok
+}
+
+/// Run the batched-vs-sequential grid and persist `BENCH_batch.json`.
+pub fn run_batch(scale: Scale) -> Result<Vec<PathBuf>> {
+    // (n, p, batch widths): the Full dense 10^4 x 10^3 cell at B >= 8 is
+    // the ISSUE 9 acceptance configuration
+    let dense_shapes: Vec<(usize, usize, Vec<usize>)> = match scale {
+        Scale::Smoke => vec![(400, 120, vec![1, 2, 8])],
+        Scale::Full => vec![
+            (2000, 500, vec![1, 2, 8, 33]),
+            (10_000, 1_000, vec![8, 16]),
+        ],
+    };
+    let sparse_shapes: Vec<(usize, usize, f64, Vec<usize>)> = match scale {
+        Scale::Smoke => vec![(800, 2000, 5e-3, vec![2, 8])],
+        Scale::Full => vec![(5000, 20_000, 1e-3, vec![2, 8, 33])],
+    };
+
+    let opts = SolverOpts::default().with_tol(1e-10);
+    let mut rows: Vec<BatchBenchRow> = Vec::new();
+
+    for (n, p, widths) in &dense_shapes {
+        let ds = correlated(
+            CorrelatedSpec { n: *n, p: *p, rho: 0.5, nnz: (p / 20).max(1), snr: 8.0 },
+            42,
+        );
+        for &b in widths {
+            rows.push(bench_cell(&ds, &format!("d{n}x{p}"), b, &opts));
+        }
+    }
+    for (n, p, density, widths) in &sparse_shapes {
+        let ds = sparse(
+            "batch",
+            SparseSpec {
+                n: *n,
+                p: *p,
+                density: *density,
+                support_frac: 0.002,
+                snr: 5.0,
+                binary: false,
+            },
+            7,
+        );
+        for &b in widths {
+            rows.push(bench_cell(&ds, &format!("s{n}x{p}@{density:e}"), b, &opts));
+        }
+    }
+
+    // bit-invariance cell: small enough to run thrice, wide enough to
+    // exercise the multi-RHS panel
+    let inv_ds = correlated(CorrelatedSpec { n: 300, p: 100, rho: 0.5, nnz: 6, snr: 8.0 }, 19);
+    let thread_invariant = thread_invariance_check(&inv_ds, 8, &opts);
+
+    let parity_ok = rows.iter().all(|r| r.max_obj_gap <= 1e-12);
+    // acceptance headline: best speedup on the dense 10^4 x 10^3 cell at
+    // B >= 8 (Full scale only; smoke shapes are too small to certify)
+    let headline = rows
+        .iter()
+        .filter(|r| r.shape == "d10000x1000" && r.b >= 8)
+        .map(|r| r.speedup)
+        .fold(f64::NAN, f64::max);
+    let headline_ok = match scale {
+        Scale::Full => headline >= 2.0,
+        Scale::Smoke => true,
+    };
+
+    // ---- report ----
+    let mut t = Table::new(&[
+        "shape", "B", "batch_s", "seq_s", "speedup", "obj_gap", "epoch_Mflop", "asm_Mflop",
+        "panel_Mflop", "panel_ratio", "outer", "epochs",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.shape.clone(),
+            r.b.to_string(),
+            format!("{:.4}", r.batch_wall_s),
+            format!("{:.4}", r.seq_wall_s),
+            format!("{:.2}x", r.speedup),
+            format!("{:.2e}", r.max_obj_gap),
+            format!("{:.2}", r.epoch_flops / 1e6),
+            format!("{:.2}", r.assembly_flops / 1e6),
+            format!("{:.2}", r.panel_flops / 1e6),
+            format!("{:.3}", r.panel_ratio),
+            r.n_outer.to_string(),
+            r.epochs.to_string(),
+        ]);
+    }
+    let md = write_markdown("batch", "batched_vs_sequential", &t)?;
+
+    let jrows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj()
+                .with("shape", r.shape.as_str())
+                .with("b", r.b)
+                .with("batch_wall_s", r.batch_wall_s)
+                .with("seq_wall_s", r.seq_wall_s)
+                .with("speedup", r.speedup)
+                .with("max_obj_gap", r.max_obj_gap)
+                .with("epoch_flops", r.epoch_flops)
+                .with("assembly_flops", r.assembly_flops)
+                .with("panel_flops", r.panel_flops)
+                .with("panel_ratio", r.panel_ratio)
+                .with("n_outer", r.n_outer)
+                .with("epochs", r.epochs)
+        })
+        .collect();
+    let json = Json::obj()
+        .with("bench", "batch")
+        .with(
+            "scale",
+            match scale {
+                Scale::Smoke => "smoke",
+                Scale::Full => "full",
+            },
+        )
+        .with("rows", Json::Arr(jrows))
+        .with("parity_ok", parity_ok)
+        .with("thread_invariant", thread_invariant)
+        .with("headline_speedup", if headline.is_nan() { 0.0 } else { headline })
+        .with("headline_ok", headline_ok);
+
+    let dir = results_dir().join("batch");
+    ensure_dir(&dir)?;
+    let json_path = dir.join("BENCH_batch.json");
+    std::fs::write(&json_path, json.render())?;
+    let mut outputs = vec![json_path, md];
+    // the repo-root trajectory file (skipped when results are redirected,
+    // e.g. by tests)
+    if std::env::var_os("SKGLM_RESULTS").is_none() {
+        let root = PathBuf::from("BENCH_batch.json");
+        std::fs::write(&root, json.render())?;
+        outputs.push(root);
+    }
+
+    if let Some(best) = rows.iter().max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap()) {
+        eprintln!(
+            "[batch] {} B={}: batched = {:.2}x sequential wall, panel share {:.1}% \
+             (parity <= 1e-12: {parity_ok}, thread bit-invariant: {thread_invariant})",
+            best.shape, best.b, best.speedup, 100.0 * best.panel_ratio
+        );
+    }
+    Ok(outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_grid_runs_and_persists_json() {
+        let _guard = crate::bench::report::results_env_lock();
+        let tmp = std::env::temp_dir().join(format!("skglm_batch_{}", std::process::id()));
+        std::env::set_var("SKGLM_RESULTS", &tmp);
+        let out = run_batch(Scale::Smoke).unwrap();
+        assert!(!out.is_empty());
+        for p in &out {
+            assert!(p.exists(), "{}", p.display());
+        }
+        let raw = std::fs::read_to_string(&out[0]).unwrap();
+        assert!(raw.contains("\"bench\":\"batch\""));
+        assert!(raw.contains("\"parity_ok\":true"), "objective parity failed: {raw}");
+        assert!(raw.contains("\"thread_invariant\":true"), "thread drift: {raw}");
+        std::env::remove_var("SKGLM_RESULTS");
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn sibling_lambda_grid_is_descending_and_sized() {
+        assert_eq!(sibling_lambdas(1.0, 1).len(), 1);
+        let g = sibling_lambdas(2.0, 8);
+        assert_eq!(g.len(), 8);
+        for w in g.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+        assert!((g[0] - 2.0 * 0.3).abs() < 1e-12);
+        assert!((g[7] - 2.0 * 0.02).abs() < 1e-9);
+    }
+}

@@ -2,6 +2,7 @@
 //! fair comparison between solvers?"), experiment runners for every paper
 //! figure/table, and result emitters.
 
+pub mod batch_bench;
 pub mod capability;
 pub mod figures;
 pub mod glm_bench;

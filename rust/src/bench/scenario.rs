@@ -17,7 +17,11 @@
 //!   agreement ≤ 1e-10 for convex scenarios, objective agreement for
 //!   non-convex ones (engines may round to different critical points);
 //! - **threads**: the same warm sweep under thread budget 4 —
-//!   bit-identical coefficients (the PR-2 kernel-engine invariant).
+//!   bit-identical coefficients (the PR-2 kernel-engine invariant);
+//! - **batched**: two identical sibling paths submitted at batch
+//!   priority behind a blocker, fusing into one multi-RHS panel job
+//!   (batchable specs only) — every member's objectives must agree with
+//!   the baseline λ-by-λ.
 //!
 //! Per-scenario oracles additionally check the solver's own certificate
 //! (duality gap / stationarity, [`crate::solver::Certificate`]) against
@@ -273,6 +277,12 @@ pub fn builtin_corpus() -> Vec<Scenario> {
     c.push(mtl("mtl_mcp_a", "block_mcp", 30));
     c.push(Scenario { n_tasks: 4, ..mtl("mtl_mcp_b", "block_mcp", 31) });
 
+    // ---- batched sibling fusion A/B (ISSUE 9): cells whose specs are
+    // batchable, sized to exercise the multi-RHS panel through the
+    // scheduler's fusion path ----
+    c.push(Scenario { id: "quad_l1_batch_wide".into(), n: 100, p: 240, seed: 32, smoke: true, ..base() });
+    c.push(Scenario { id: "quad_mcp_batch_dense".into(), penalty: "mcp".into(), n: 150, p: 100, seed: 33, smoke: true, ..base() });
+
     debug_assert!(c.len() >= 30, "corpus shrank below the acceptance floor");
     c
 }
@@ -508,6 +518,84 @@ fn run_path_variant(
     let drained = drain_one_path(&sched, ratios.len());
     sched.shutdown();
     drained
+}
+
+/// Run the batched A/B variant: two identical sibling paths submitted at
+/// batch priority behind a blocker fit, so the lead finds its sibling
+/// still queued and fuses it into one multi-RHS panel job (ISSUE 9).
+/// Returns both member runs plus whether fusion actually fired (the lone
+/// worker may, rarely, drain the queue before the sibling lands — the
+/// correctness oracle holds either way, so fusion is reported, not
+/// required).
+fn run_batched_variant(
+    ds: &Arc<Dataset>,
+    make_spec: &dyn Fn() -> Box<dyn FitSpec>,
+    ratios: &[f64],
+    tol: f64,
+) -> std::result::Result<(Vec<PathRun>, bool), String> {
+    set_thread_budget(1);
+    let opts = SolverOpts::default().with_tol(tol);
+    let sched = FitScheduler::start(1);
+    let blocker = sched.submit_fit(Arc::clone(ds), make_spec(), opts.clone());
+    let lead = sched.submit_path(Arc::clone(ds), make_spec(), ratios.to_vec(), opts.clone());
+    let sib = sched.submit_path(Arc::clone(ds), make_spec(), ratios.to_vec(), opts);
+    let mut recs: std::collections::HashMap<u64, Vec<(usize, PointRec)>> =
+        [(lead, Vec::new()), (sib, Vec::new())].into_iter().collect();
+    let mut done: std::collections::HashMap<u64, (usize, f64)> =
+        std::collections::HashMap::new();
+    let mut blocker_done = false;
+    while !(blocker_done && done.len() == 2) {
+        match sched.events.recv() {
+            Ok(JobEvent::FitDone(f)) if f.job_id == blocker => blocker_done = true,
+            Ok(JobEvent::PathPoint(p)) => {
+                recs.entry(p.job_id).or_default().push((
+                    p.index,
+                    PointRec {
+                        lambda: p.point.lambda,
+                        objective: p.point.objective,
+                        beta: p.point.beta,
+                        kkt: p.kkt,
+                        converged: p.converged,
+                        certificate: p.certificate.name(),
+                    },
+                ));
+            }
+            Ok(JobEvent::PathDone(s)) => {
+                done.insert(s.job_id, (s.total_epochs, s.total_time));
+            }
+            Ok(JobEvent::Failed { job_id, message }) => {
+                return Err(format!("job {job_id} panicked on its worker: {message}"))
+            }
+            Ok(JobEvent::Cancelled { job_id, .. }) => {
+                return Err(format!("job {job_id} was cancelled"))
+            }
+            Ok(JobEvent::FitDone(f)) => {
+                return Err(format!("unexpected FitDone for job {}", f.job_id))
+            }
+            Ok(JobEvent::SchedulerDown) | Err(_) => return Err("scheduler died".into()),
+        }
+    }
+    let fused = sched.fusion_stats().batched_jobs > 0;
+    sched.shutdown();
+    let mut runs = Vec::with_capacity(2);
+    for id in [lead, sib] {
+        let mut points = recs.remove(&id).unwrap_or_default();
+        points.sort_by_key(|(i, _)| *i);
+        if points.len() != ratios.len() {
+            return Err(format!(
+                "sibling path {id} emitted {} points, expected {}",
+                points.len(),
+                ratios.len()
+            ));
+        }
+        let (total_epochs, wall_s) = done[&id];
+        runs.push(PathRun {
+            points: points.into_iter().map(|(_, r)| r).collect(),
+            total_epochs,
+            wall_s,
+        });
+    }
+    Ok((runs, fused))
 }
 
 fn drain_one_path(
@@ -750,6 +838,39 @@ pub fn run_scenario(s: &Scenario) -> ScenarioOutcome {
         Err(e) => violations.push(format!("4-thread run failed: {e}")),
     }
 
+    // ---- batched sibling fusion (ISSUE 9): two identical sibling paths
+    // fuse into one multi-RHS panel job; every member must land on the
+    // baseline objectives λ-by-λ. Fused members skip the gap-safe pass
+    // (the panel amortises it), so the bar is objective agreement at the
+    // warm/cold tolerance, not bitwise identity with the screened run ----
+    let mut batch_dev: Option<f64> = None;
+    let mut batch_fused: Option<bool> = None;
+    if crate::solver::batching_enabled() && make_spec().batch_penalty().is_some() {
+        let bar = if convex { (100.0 * s.tol).max(1e-9) } else { ENGINE_TOL_NONCONVEX };
+        match run_batched_variant(&ds, &make_spec, &ratios, s.tol) {
+            Ok((runs, fused)) => {
+                let mut worst = 0.0f64;
+                for (m, run) in runs.iter().enumerate() {
+                    let dev = baseline
+                        .points
+                        .iter()
+                        .zip(run.points.iter())
+                        .map(|(a, b)| rel_dev(a.objective, b.objective))
+                        .fold(0.0, f64::max);
+                    worst = worst.max(dev);
+                    if !(dev <= bar) {
+                        violations.push(format!(
+                            "batched sibling {m} deviates from baseline: max objective rel dev {dev:.3e} > {bar:.1e}"
+                        ));
+                    }
+                }
+                batch_dev = Some(worst);
+                batch_fused = Some(fused);
+            }
+            Err(e) => violations.push(format!("batched sibling run failed: {e}")),
+        }
+    }
+
     let final_pt = baseline.points.last().expect("baseline has points");
     let mut metrics = Json::obj()
         .with("datafit", s.datafit.as_str())
@@ -772,6 +893,14 @@ pub fn run_scenario(s: &Scenario) -> ScenarioOutcome {
     metrics = match warm_cold_dev {
         Some(d) => metrics.with("warm_cold_max_dev", d),
         None => metrics.with("warm_cold_max_dev", Json::Null),
+    };
+    metrics = match batch_dev {
+        Some(d) => metrics.with("batch_max_dev", d),
+        None => metrics.with("batch_max_dev", Json::Null),
+    };
+    metrics = match batch_fused {
+        Some(b) => metrics.with("batch_fused", b),
+        None => metrics.with("batch_fused", Json::Null),
     };
 
     ScenarioOutcome {

@@ -99,6 +99,23 @@ impl Args {
         }
     }
 
+    /// Consume the global `--batch [on|off]` knob (many-fit batching;
+    /// overrides `SKGLM_BATCH`, which defaults to on). A bare `--batch`
+    /// switch means on. Returns the override if present.
+    pub fn take_batch(&mut self) -> anyhow::Result<Option<bool>> {
+        if self.has("batch") {
+            return Ok(Some(true));
+        }
+        match self.get("batch") {
+            None => Ok(None),
+            Some(v) => match v.trim().to_ascii_lowercase().as_str() {
+                "1" | "on" | "true" => Ok(Some(true)),
+                "0" | "off" | "false" => Ok(Some(false)),
+                other => anyhow::bail!("--batch expects on|off, got {other:?}"),
+            },
+        }
+    }
+
     /// Error on unconsumed flags (call after all gets).
     pub fn finish(&self) -> anyhow::Result<()> {
         let unknown: Vec<&String> = self
@@ -218,6 +235,22 @@ mod tests {
         assert!(e.take_threads().is_err());
         let mut f = parse("solve --small --threads");
         assert!(f.take_threads().is_err());
+    }
+
+    #[test]
+    fn batch_flag_parses_and_validates() {
+        let mut a = parse("cv --batch off");
+        assert_eq!(a.take_batch().unwrap(), Some(false));
+        assert!(a.finish().is_ok());
+        let mut b = parse("cv --batch on");
+        assert_eq!(b.take_batch().unwrap(), Some(true));
+        // bare switch means on
+        let mut c = parse("cv --batch --small");
+        assert_eq!(c.take_batch().unwrap(), Some(true));
+        let mut d = parse("cv");
+        assert_eq!(d.take_batch().unwrap(), None);
+        let mut e = parse("cv --batch sideways");
+        assert!(e.take_batch().is_err());
     }
 
     #[test]

@@ -15,13 +15,13 @@ use crate::datafit::multitask::QuadraticMultiTask;
 use crate::estimators::linear::quadratic_lambda_max;
 use crate::linalg::Design;
 use crate::penalty::{
-    BlockPenalty, GroupLasso, GroupMcp, GroupScad, WeightedGroupLasso, L1L2, Lq, Mcp, Penalty,
-    Scad, L1,
+    BatchPenalty, BlockPenalty, GroupLasso, GroupMcp, GroupScad, WeightedGroupLasso, L1L2, Lq,
+    Mcp, Penalty, Scad, L1,
 };
 use crate::solver::{
-    block_lambda_max_for, glm_lambda_max, solve_blocks_continued, solve_continued,
-    solve_prox_newton_continued, BlockDatafit, BlockPartition, ContinuationState, FitResult,
-    GroupScreenCfg, SolverOpts,
+    block_lambda_max_for, glm_lambda_max, solve_batch, solve_blocks_continued, solve_continued,
+    solve_prox_newton_continued, BatchFit, BlockDatafit, BlockPartition, ContinuationState,
+    FitResult, GroupScreenCfg, SolverOpts,
 };
 use std::sync::Arc;
 
@@ -73,6 +73,22 @@ pub trait FitSpec: Send + Sync {
     /// Gap-safe screening is sound for this spec (convex quadratic × ℓ1).
     fn supports_gap_screening(&self) -> bool {
         false
+    }
+
+    /// This spec's penalty in the batched solver's closed universe, if
+    /// the spec is eligible for many-fit fusion (direct-CD quadratic ×
+    /// a [`Penalty::as_batchable`] penalty). `None` — the default —
+    /// opts out: the scheduler never coalesces jobs carrying this spec.
+    fn batch_penalty(&self) -> Option<BatchPenalty> {
+        None
+    }
+
+    /// Per-row 0/1 observation weights (CV-fold membership masks);
+    /// `None` = fit on every row. Weighted specs run the masked
+    /// quadratic datafit — standalone via a one-member batch, fused as
+    /// a panel column of a batched job.
+    fn row_weights(&self) -> Option<Arc<Vec<f64>>> {
+        None
     }
 
     /// Solve on `design`/`y`, warm-starting from `state` and updating it
@@ -197,6 +213,16 @@ impl<D: Datafit + 'static, P: Penalty + 'static> FitSpec for GlmSpec<D, P> {
             && self.family == "l1"
     }
 
+    fn batch_penalty(&self) -> Option<BatchPenalty> {
+        // the batched engine is a direct-CD quadratic solver: prox-Newton
+        // topologies and non-quadratic datafits must never be coalesced
+        // into it, whatever their penalty
+        if self.topology != SolverTopology::DirectCd || self.datafit.name() != "quadratic" {
+            return None;
+        }
+        self.penalty.as_batchable()
+    }
+
     fn solve(
         &self,
         design: &Design,
@@ -232,6 +258,134 @@ impl<D: Datafit + 'static, P: Penalty + 'static> FitSpec for GlmSpec<D, P> {
                 col_sq_norms,
             ),
         }
+    }
+}
+
+/// A batchable [`FitSpec`] carrying optional per-row 0/1 observation
+/// weights — the job form of one member of a fused many-fit batch.
+///
+/// Wrapping is what lets CV folds become *sibling scheduler jobs*: k
+/// wrapped specs over the same dataset differ only in their row masks,
+/// so the scheduler's fusion pass coalesces them into one
+/// [`solve_batch`] call sharing every design read. A wrapped spec also
+/// runs correctly standalone (no siblings queued): the masked path
+/// routes through a one-member batch, which is bitwise the arithmetic
+/// the fused path would run for that member.
+pub struct BatchedFitSpec {
+    inner: Box<dyn FitSpec>,
+    weights: Option<Arc<Vec<f64>>>,
+}
+
+impl BatchedFitSpec {
+    /// Wrap a batchable spec. Panics if the spec opted out of batching —
+    /// a weighted fit on a non-batchable spec has no engine to run on.
+    pub fn new(inner: Box<dyn FitSpec>) -> Self {
+        assert!(
+            inner.batch_penalty().is_some(),
+            "spec {} is not batchable (direct-CD quadratic × {{l1, mcp}} only)",
+            inner.label()
+        );
+        Self { inner, weights: None }
+    }
+
+    /// Attach per-row 0/1 weights (CV-fold membership mask).
+    pub fn with_row_weights(mut self, weights: Arc<Vec<f64>>) -> Self {
+        self.weights = Some(weights);
+        self
+    }
+
+    pub fn boxed(self) -> Box<dyn FitSpec> {
+        Box::new(self)
+    }
+}
+
+impl FitSpec for BatchedFitSpec {
+    fn label(&self) -> String {
+        if self.weights.is_some() {
+            format!("{}+mask", self.inner.label())
+        } else {
+            self.inner.label()
+        }
+    }
+
+    fn datafit_name(&self) -> &'static str {
+        self.inner.datafit_name()
+    }
+
+    fn family(&self) -> &'static str {
+        self.inner.family()
+    }
+
+    fn lambda(&self) -> f64 {
+        self.inner.lambda()
+    }
+
+    fn is_convex(&self) -> bool {
+        // a masked member's optimum is a *fold* optimum, not the
+        // full-data one: sharing the coefficient cache with unmasked
+        // jobs of the same (datafit, family) would warm-start — and,
+        // worse, store — the wrong solution, so masked specs report
+        // non-convex to opt out of cache reuse entirely
+        self.weights.is_none() && self.inner.is_convex()
+    }
+
+    fn normalize_design(&self) -> bool {
+        self.inner.normalize_design()
+    }
+
+    fn lambda_max(&self, design: &Design, y: &[f64]) -> f64 {
+        match &self.weights {
+            None => self.inner.lambda_max(design, y),
+            Some(w) => {
+                crate::solver::batch_lambda_max(design, y, &[Some(Arc::clone(w))])[0]
+            }
+        }
+    }
+
+    fn at_lambda(&self, lambda: f64) -> Box<dyn FitSpec> {
+        Box::new(BatchedFitSpec {
+            inner: self.inner.at_lambda(lambda),
+            weights: self.weights.clone(),
+        })
+    }
+
+    fn supports_gap_screening(&self) -> bool {
+        // the screened fast path has no masked-row support
+        self.weights.is_none() && self.inner.supports_gap_screening()
+    }
+
+    fn batch_penalty(&self) -> Option<BatchPenalty> {
+        self.inner.batch_penalty()
+    }
+
+    fn row_weights(&self) -> Option<Arc<Vec<f64>>> {
+        self.weights.clone()
+    }
+
+    fn solve(
+        &self,
+        design: &Design,
+        y: &[f64],
+        opts: &SolverOpts,
+        state: &mut ContinuationState,
+        col_sq_norms: Option<&[f64]>,
+        frozen: Option<&[bool]>,
+    ) -> FitResult {
+        let Some(weights) = &self.weights else {
+            return self.inner.solve(design, y, opts, state, col_sq_norms, frozen);
+        };
+        // standalone masked solve: a one-member batch — bitwise the
+        // arithmetic the fused scheduler path runs for this member
+        let pen = self.batch_penalty().expect("checked at construction");
+        let mut fit = BatchFit::new(pen).with_row_weights(Arc::clone(weights));
+        if let Some(beta) = &state.beta {
+            fit = fit.warm(beta.clone(), state.ws_size);
+        }
+        let mut out =
+            solve_batch(design, y, vec![fit], opts, col_sq_norms, state.gram.clone());
+        let member = out.members.pop().expect("one-member batch returns one result");
+        state.update_from(&member.result);
+        member.result
     }
 }
 
@@ -695,6 +849,88 @@ mod tests {
         assert!(mt.is_convex());
         assert_eq!(mt.datafit_name(), "quadratic_multitask");
         assert_eq!(mt.family(), "l21");
+    }
+
+    #[test]
+    fn batched_fit_spec_masked_solve_matches_row_subset() {
+        use crate::linalg::DenseMatrix;
+        let ds = correlated(CorrelatedSpec { n: 66, p: 40, rho: 0.4, nnz: 5, snr: 10.0 }, 11);
+        let keep: Vec<usize> = (0..66).filter(|i| i % 3 != 0).collect();
+        let mut mask = vec![0.0; 66];
+        for &i in &keep {
+            mask[i] = 1.0;
+        }
+        let lam = quadratic_lambda_max(&ds.design, &ds.y) / 5.0;
+        let spec = BatchedFitSpec::new(specs::lasso(lam)).with_row_weights(Arc::new(mask));
+        assert!(!spec.is_convex(), "masked specs must opt out of coefficient-cache reuse");
+        assert!(!spec.supports_gap_screening());
+        assert!(spec.batch_penalty().is_some());
+        assert!(spec.label().ends_with("+mask"));
+        assert!(spec.row_weights().is_some());
+
+        let mut state = ContinuationState::default();
+        let opts = SolverOpts::default().with_tol(1e-10);
+        let fit = spec.solve(&ds.design, &ds.y, &opts, &mut state, None, None);
+        assert!(fit.converged, "kkt {}", fit.kkt);
+        assert!(state.beta.is_some(), "masked solve must still feed continuation");
+
+        let rows: Vec<Vec<f64>> = keep
+            .iter()
+            .map(|&i| match &ds.design {
+                Design::Dense(m) => (0..m.ncols()).map(|j| m.get(i, j)).collect(),
+                Design::Sparse(_) => unreachable!("fixture is dense"),
+            })
+            .collect();
+        let sub: Design = DenseMatrix::from_rows(&rows).into();
+        let y_sub: Vec<f64> = keep.iter().map(|&i| ds.y[i]).collect();
+        let reference = crate::estimators::Lasso::new(lam).with_tol(1e-10).fit(&sub, &y_sub);
+        for (a, b) in fit.beta.iter().zip(reference.beta.iter()) {
+            assert!((a - b).abs() < 1e-9, "masked member drifted: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batched_fit_spec_unmasked_delegates_to_inner() {
+        let ds = correlated(CorrelatedSpec { n: 50, p: 30, rho: 0.3, nnz: 4, snr: 10.0 }, 3);
+        let lam = quadratic_lambda_max(&ds.design, &ds.y) / 6.0;
+        let wrapped = BatchedFitSpec::new(specs::lasso(lam));
+        assert!(wrapped.is_convex());
+        assert!(wrapped.supports_gap_screening());
+        assert_eq!(wrapped.label(), "quadratic/l1");
+        let opts = SolverOpts::default().with_tol(1e-10);
+        let mut s1 = ContinuationState::default();
+        let mut s2 = ContinuationState::default();
+        let a = wrapped.solve(&ds.design, &ds.y, &opts, &mut s1, None, None);
+        let b = specs::lasso(lam).solve(&ds.design, &ds.y, &opts, &mut s2, None, None);
+        assert_eq!(a.beta, b.beta, "unmasked wrapper must be a transparent pass-through");
+        // λ-continuation keeps the mask and the batchability
+        let next = wrapped.at_lambda(lam / 2.0);
+        assert_eq!(next.lambda(), lam / 2.0);
+        assert!(next.batch_penalty().is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "not batchable")]
+    fn batched_fit_spec_rejects_non_batchable_specs() {
+        BatchedFitSpec::new(specs::poisson_l1(0.1));
+    }
+
+    #[test]
+    fn batch_penalty_hook_matches_topology_and_family() {
+        assert!(specs::lasso(0.1).batch_penalty().is_some());
+        assert!(specs::mcp(0.1, 3.0).batch_penalty().is_some());
+        // SCAD has no batchable form yet
+        assert!(specs::scad(0.1, 3.7).batch_penalty().is_none());
+        // non-quadratic datafits and prox-Newton topologies never batch
+        assert!(specs::logistic_l1(0.1).batch_penalty().is_none());
+        assert!(specs::poisson_l1(0.1).batch_penalty().is_none());
+        let make: MakePenalty<L1> = Arc::new(L1::new);
+        let lmax: LambdaMax = Arc::new(|d: &Design, y: &[f64]| quadratic_lambda_max(d, y));
+        let pn = GlmSpec::new(Quadratic::new(), "l1", 0.1, false, make, lmax).with_prox_newton();
+        assert!(pn.batch_penalty().is_none());
+        // block specs keep the default opt-out
+        let part = Arc::new(BlockPartition::uniform(12, 3));
+        assert!(specs::group_lasso(0.1, part).batch_penalty().is_none());
     }
 
     #[test]

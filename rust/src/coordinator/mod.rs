@@ -44,11 +44,11 @@ pub mod wire;
 pub use cache::{CacheStats, DatasetCache};
 pub use client::{ClientConfig, ClientError, ServiceClient};
 pub use fault::{FaultPlan, FaultSpec};
-pub use job::{specs, BlockSpec, FitSpec, GlmSpec, SolverTopology};
+pub use job::{specs, BatchedFitSpec, BlockSpec, FitSpec, GlmSpec, SolverTopology};
 pub use pool::run_parallel;
 pub use scheduler::{
-    FitOutcome, FitScheduler, Job, JobCtl, JobEvent, JobPolicy, PathPointOutcome, PathSummary,
-    Priority,
+    FitOutcome, FitScheduler, FusionStats, Job, JobCtl, JobEvent, JobPolicy, PathPointOutcome,
+    PathSummary, Priority,
 };
 pub use service::{ExitReason, ServiceConfig, ServiceHandle};
 pub use wire::{FrameReader, WireError};

@@ -46,7 +46,9 @@ use crate::estimators::path::PathPoint;
 use crate::linalg::parallel::{register_solver_workers, SolverWorkersGuard};
 use crate::metrics::{estimation_error, prediction_mse, support_recovery};
 use crate::solver::screening::{solve_lasso_screened_warm_with, ScreenWorkspace};
-use crate::solver::{ContinuationState, FitResult, SolverOpts};
+use crate::solver::{
+    solve_batch, BatchFit, ContinuationState, FitResult, SolverOpts, StopReason,
+};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -127,6 +129,19 @@ impl JobCtl {
     }
     pub fn priority(&self) -> Priority {
         self.priority
+    }
+
+    /// The raw cancellation flag — handed to a fused batch member so a
+    /// single member retires (freeing its panel column) without touching
+    /// its siblings.
+    pub(crate) fn cancel_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.cancel)
+    }
+
+    /// The job's wall-clock deadline, if any (fused batch members carry
+    /// it individually).
+    pub(crate) fn deadline(&self) -> Option<Instant> {
+        self.deadline
     }
 
     /// Clone `base` with this job's budget (deadline + cancel flag)
@@ -253,6 +268,91 @@ pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
+/// Most sibling fits one batched job will absorb (lead + 31): panel
+/// memory grows linearly in B and the per-pass kernel win saturates well
+/// before this.
+const MAX_BATCH_FUSE: usize = 32;
+
+/// Scheduler-side many-fit fusion counters. All counters are monotone
+/// event/work tallies updated with `Ordering::Relaxed`: each one is an
+/// independent statistic — no other data is published through them, and
+/// readers only ever want a (possibly slightly stale) snapshot, so no
+/// ordering edge is needed.
+#[derive(Default)]
+struct FusionCounters {
+    /// fused batched jobs executed (each coalesces ≥ 2 sibling fits)
+    batched_jobs: AtomicU64,
+    /// member fits those batched jobs carried
+    batched_fits: AtomicU64,
+    /// modelled flops spent in multi-RHS panel passes, over all batches
+    panel_flops: AtomicU64,
+    /// total modelled flops of those batched solves (panel ratio base)
+    total_flops: AtomicU64,
+}
+
+impl FusionCounters {
+    fn record(&self, n_members: usize, profile: &crate::solver::InnerProfile) {
+        // relaxed throughout: monotone counters, no publication (struct-level note)
+        self.batched_jobs.fetch_add(1, Ordering::Relaxed);
+        self.batched_fits.fetch_add(n_members as u64, Ordering::Relaxed);
+        self.panel_flops.fetch_add(profile.panel_flops as u64, Ordering::Relaxed);
+        self.total_flops.fetch_add(profile.total_flops() as u64, Ordering::Relaxed);
+    }
+
+    /// Record one fused *path* job: `n_members` sweeps coalesced, with
+    /// flops accumulated across every λ point's batched solve.
+    fn record_path(&self, n_members: usize, panel_flops: f64, total_flops: f64) {
+        // relaxed throughout: monotone counters, no publication (struct-level note)
+        self.batched_jobs.fetch_add(1, Ordering::Relaxed);
+        self.batched_fits.fetch_add(n_members as u64, Ordering::Relaxed);
+        self.panel_flops.fetch_add(panel_flops as u64, Ordering::Relaxed);
+        self.total_flops.fetch_add(total_flops as u64, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> FusionStats {
+        FusionStats {
+            batched_jobs: self.batched_jobs.load(Ordering::Relaxed),
+            batched_fits: self.batched_fits.load(Ordering::Relaxed),
+            panel_flops: self.panel_flops.load(Ordering::Relaxed),
+            total_flops: self.total_flops.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time snapshot of the scheduler's many-fit fusion activity
+/// ([`FitScheduler::fusion_stats`]; surfaced by the service `stats` verb).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FusionStats {
+    /// fused batched jobs executed
+    pub batched_jobs: u64,
+    /// member fits coalesced into those jobs
+    pub batched_fits: u64,
+    /// modelled flops in multi-RHS panel passes
+    pub panel_flops: u64,
+    /// total modelled flops of the batched solves
+    pub total_flops: u64,
+}
+
+impl FusionStats {
+    /// Mean members per fused job (0 when nothing fused yet).
+    pub fn fits_per_batch(&self) -> f64 {
+        if self.batched_jobs == 0 {
+            0.0
+        } else {
+            self.batched_fits as f64 / self.batched_jobs as f64
+        }
+    }
+
+    /// Share of the batched solves' modelled work done by panel kernels.
+    pub fn panel_flop_ratio(&self) -> f64 {
+        if self.total_flops == 0 {
+            0.0
+        } else {
+            self.panel_flops as f64 / self.total_flops as f64
+        }
+    }
+}
+
 struct QueuedJob {
     id: u64,
     job: Job,
@@ -328,6 +428,63 @@ impl JobQueue {
         !lock_or_recover(&self.state).interactive.is_empty()
     }
 
+    /// Pop every queued batch-priority `Job::Fit` fusible with a lead fit
+    /// on (`dataset`, `normalize`, `opts`) — up to `cap` — preserving the
+    /// queue order of everything else. Fusible means: same cached
+    /// `DesignEntry` (pointer-identical dataset + same normalization), a
+    /// batchable spec, and solver knobs identical to the lead's (one
+    /// `SolverOpts` drives the whole batched solve; per-member deadlines
+    /// and cancel flags ride on the `BatchFit`s instead).
+    fn take_siblings(
+        &self,
+        dataset: &Arc<Dataset>,
+        normalize: bool,
+        opts: &SolverOpts,
+        cap: usize,
+    ) -> Vec<QueuedJob> {
+        let mut taken = Vec::new();
+        let mut st = lock_or_recover(&self.state);
+        let mut kept = VecDeque::with_capacity(st.batch.len());
+        while let Some(qj) = st.batch.pop_front() {
+            if taken.len() < cap && is_fusible_sibling(&qj, dataset, normalize, opts) {
+                taken.push(qj);
+            } else {
+                kept.push_back(qj);
+            }
+        }
+        st.batch = kept;
+        taken
+    }
+
+    /// Pop every queued batch-priority `Job::Path` fusible with a lead
+    /// sweep on (`dataset`, `normalize`, `opts`, `ratios`) — up to `cap` —
+    /// preserving the queue order of everything else. On top of the fit
+    /// fusion key ([`JobQueue::take_siblings`]) a path sibling must also
+    /// sweep the *same ratio grid*, so the fused runner can advance every
+    /// member in λ-lockstep with one batched solve per point.
+    fn take_path_siblings(
+        &self,
+        dataset: &Arc<Dataset>,
+        normalize: bool,
+        opts: &SolverOpts,
+        ratios: &[f64],
+        cap: usize,
+    ) -> Vec<QueuedJob> {
+        let mut taken = Vec::new();
+        let mut st = lock_or_recover(&self.state);
+        let mut kept = VecDeque::with_capacity(st.batch.len());
+        while let Some(qj) = st.batch.pop_front() {
+            if taken.len() < cap && is_fusible_path_sibling(&qj, dataset, normalize, opts, ratios)
+            {
+                taken.push(qj);
+            } else {
+                kept.push_back(qj);
+            }
+        }
+        st.batch = kept;
+        taken
+    }
+
     fn depth(&self) -> usize {
         let st = lock_or_recover(&self.state);
         st.interactive.len() + st.batch.len()
@@ -345,6 +502,77 @@ impl JobQueue {
     }
 }
 
+/// Can `qj` join a fused batch led by a fit on (`dataset`, `normalize`,
+/// `opts`)? See [`JobQueue::take_siblings`].
+fn is_fusible_sibling(
+    qj: &QueuedJob,
+    dataset: &Arc<Dataset>,
+    normalize: bool,
+    opts: &SolverOpts,
+) -> bool {
+    match &qj.job {
+        Job::Fit { dataset: ds, spec, opts: jopts } => {
+            Arc::ptr_eq(ds, dataset)
+                && spec.normalize_design() == normalize
+                && spec.batch_penalty().is_some()
+                && fusible_opts(opts, jopts)
+        }
+        _ => false,
+    }
+}
+
+/// Can `qj` join a fused batched *path* led by a sweep on (`dataset`,
+/// `normalize`, `opts`) over `lead_ratios` (sorted descending)? See
+/// [`JobQueue::take_path_siblings`].
+fn is_fusible_path_sibling(
+    qj: &QueuedJob,
+    dataset: &Arc<Dataset>,
+    normalize: bool,
+    opts: &SolverOpts,
+    lead_ratios: &[f64],
+) -> bool {
+    match &qj.job {
+        Job::Path { dataset: ds, spec, ratios, opts: jopts } => {
+            Arc::ptr_eq(ds, dataset)
+                && spec.normalize_design() == normalize
+                && spec.batch_penalty().is_some()
+                && fusible_opts(opts, jopts)
+                && same_grid(lead_ratios, ratios)
+        }
+        _ => false,
+    }
+}
+
+/// Exact (bitwise) grid equality after sorting `other` descending — the
+/// lead's grid is already sorted when fusion is attempted. Fused members
+/// advance in λ-lockstep, so approximate grid matches are not fusible.
+fn same_grid(sorted_desc: &[f64], other: &[f64]) -> bool {
+    if sorted_desc.len() != other.len() {
+        return false;
+    }
+    let mut o = other.to_vec();
+    o.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+    sorted_desc.iter().zip(&o).all(|(a, b)| a == b)
+}
+
+/// One `SolverOpts` drives every member of a batched solve, so siblings
+/// must agree on all solver knobs; a caller-provided
+/// [`crate::solver::SolveBudget`] cannot be split per member, so only
+/// budget-free jobs fuse (per-member deadlines/cancellation come from the
+/// [`JobCtl`] instead).
+fn fusible_opts(a: &SolverOpts, b: &SolverOpts) -> bool {
+    a.budget.is_none()
+        && b.budget.is_none()
+        && a.max_outer == b.max_outer
+        && a.max_epochs == b.max_epochs
+        && a.tol == b.tol
+        && a.ws_start == b.ws_start
+        && a.use_ws == b.use_ws
+        && a.anderson_m == b.anderson_m
+        && a.inner_tol_ratio == b.inner_tol_ratio
+        && a.inner == b.inner
+}
+
 /// The scheduler: submit jobs, stream events, cancel, shut down cleanly.
 pub struct FitScheduler {
     queue: Arc<JobQueue>,
@@ -355,6 +583,8 @@ pub struct FitScheduler {
     cache: Arc<DatasetCache>,
     /// Control blocks of queued + running jobs (removed at terminal emit).
     registry: Arc<Mutex<HashMap<u64, Arc<JobCtl>>>>,
+    /// Many-fit fusion counters (monotone, Relaxed — see [`FusionStats`]).
+    fusion: Arc<FusionCounters>,
     /// Workers still alive (the last one to exit emits `SchedulerDown`).
     workers_alive: Arc<AtomicUsize>,
     /// Registers the worker count against the kernel-engine thread budget
@@ -378,6 +608,7 @@ impl FitScheduler {
         let (ev_tx, ev_rx) = channel::<JobEvent>();
         let registry: Arc<Mutex<HashMap<u64, Arc<JobCtl>>>> =
             Arc::new(Mutex::new(HashMap::new()));
+        let fusion = Arc::new(FusionCounters::default());
         let workers_alive = Arc::new(AtomicUsize::new(n_workers));
         let workers = (0..n_workers)
             .map(|_| {
@@ -385,6 +616,7 @@ impl FitScheduler {
                 let ev_tx = ev_tx.clone();
                 let cache = Arc::clone(&cache);
                 let registry = Arc::clone(&registry);
+                let fusion = Arc::clone(&fusion);
                 let alive = Arc::clone(&workers_alive);
                 std::thread::spawn(move || {
                     while let Some(qj) = queue.pop_blocking() {
@@ -400,7 +632,7 @@ impl FitScheduler {
                         // event; the worker survives to run the rest of
                         // the batch
                         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                            || run_job(id, job, &ctl, &cache, &ev_tx, &queue),
+                            || run_job(id, job, &ctl, &cache, &ev_tx, &queue, &registry, &fusion),
                         ));
                         match res {
                             // preempted path: its registry entry stays
@@ -434,6 +666,7 @@ impl FitScheduler {
             next_id: AtomicU64::new(0),
             cache,
             registry,
+            fusion,
             workers_alive,
             _kernel_budget,
         }
@@ -571,6 +804,12 @@ impl FitScheduler {
             .collect()
     }
 
+    /// Snapshot of the many-fit fusion counters (the service `stats`
+    /// verb and `skglm client stats` surface these).
+    pub fn fusion_stats(&self) -> FusionStats {
+        self.fusion.snapshot()
+    }
+
     /// The shared dataset/coefficient cache (stats, tests).
     pub fn cache(&self) -> &DatasetCache {
         &self.cache
@@ -597,6 +836,7 @@ enum RunOutcome {
     Requeued,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_job(
     id: u64,
     job: Job,
@@ -604,15 +844,60 @@ fn run_job(
     cache: &DatasetCache,
     out: &Sender<JobEvent>,
     queue: &Arc<JobQueue>,
+    registry: &Mutex<HashMap<u64, Arc<JobCtl>>>,
+    fusion: &FusionCounters,
 ) -> RunOutcome {
     match job {
         Job::Fit { dataset, spec, opts } => {
+            // many-fit fusion: a batch-priority batchable fit absorbs
+            // every queued sibling on the same DesignEntry into one
+            // multi-RHS batched solve (interactive fits stay scalar —
+            // fusing would trade their latency for siblings' throughput)
+            if ctl.priority() == Priority::Batch
+                && opts.budget.is_none()
+                && spec.batch_penalty().is_some()
+            {
+                let siblings = queue.take_siblings(
+                    &dataset,
+                    spec.normalize_design(),
+                    &opts,
+                    MAX_BATCH_FUSE - 1,
+                );
+                if !siblings.is_empty() {
+                    run_fit_batch(
+                        id, dataset, spec, opts, ctl, siblings, cache, out, registry, fusion,
+                    );
+                    return RunOutcome::Terminal;
+                }
+            }
             run_fit(id, &dataset, spec, &opts, ctl, cache, out);
             RunOutcome::Terminal
         }
         Job::Path { dataset, spec, mut ratios, opts } => {
             // warm starts flow from high λ (sparse) to low λ (dense)
             ratios.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+            // many-sweep fusion: a batch-priority batchable path absorbs
+            // queued siblings sweeping the same grid on the same
+            // DesignEntry; the fused runner advances all of them in
+            // λ-lockstep, one multi-RHS batched solve per point
+            if ctl.priority() == Priority::Batch
+                && opts.budget.is_none()
+                && spec.batch_penalty().is_some()
+            {
+                let siblings = queue.take_path_siblings(
+                    &dataset,
+                    spec.normalize_design(),
+                    &opts,
+                    &ratios,
+                    MAX_BATCH_FUSE - 1,
+                );
+                if !siblings.is_empty() {
+                    return run_path_batch(
+                        id, dataset, spec, ratios, opts, ctl, siblings, cache, out, queue,
+                        registry, fusion,
+                    );
+                }
+            }
             let entry = cache.design_entry(&dataset, spec.normalize_design());
             let lambda_max = spec.lambda_max(entry.design(), &dataset.y);
             let mut state = ContinuationState::default();
@@ -695,6 +980,138 @@ fn run_fit(
     cache.enforce_budget_now();
 }
 
+/// One fused batched job: the lead fit plus every sibling
+/// [`JobQueue::take_siblings`] pulled off the batch queue, solved as one
+/// [`solve_batch`] call over a shared residual panel. Per-job semantics
+/// are preserved: each member streams its own terminal [`JobEvent`]
+/// (`FitDone`, or `Cancelled` for a member cancelled before or during the
+/// solve), cancellation of one member never aborts its siblings, and a
+/// member whose deadline fires retires with a partial result and
+/// `timed_out = true` while the rest run on.
+#[allow(clippy::too_many_arguments)]
+fn run_fit_batch(
+    lead_id: u64,
+    dataset: Arc<Dataset>,
+    lead_spec: Box<dyn FitSpec>,
+    opts: SolverOpts,
+    lead_ctl: &Arc<JobCtl>,
+    siblings: Vec<QueuedJob>,
+    cache: &DatasetCache,
+    out: &Sender<JobEvent>,
+    registry: &Mutex<HashMap<u64, Arc<JobCtl>>>,
+    fusion: &FusionCounters,
+) {
+    struct MemberJob {
+        id: u64,
+        spec: Box<dyn FitSpec>,
+        ctl: Arc<JobCtl>,
+        warm_started: bool,
+        lead: bool,
+    }
+
+    let t0 = Instant::now();
+    let normalize = lead_spec.normalize_design();
+    let entry = cache.design_entry(&dataset, normalize);
+    let design = entry.design();
+
+    // roster: lead first, then siblings in queue order; a sibling
+    // cancelled while it was still queued terminates here without ever
+    // occupying a panel column
+    let mut members = vec![MemberJob {
+        id: lead_id,
+        spec: lead_spec,
+        ctl: Arc::clone(lead_ctl),
+        warm_started: false,
+        lead: true,
+    }];
+    for qj in siblings {
+        let QueuedJob { id, job, ctl } = qj;
+        match job {
+            Job::Fit { spec, .. } => {
+                if ctl.is_cancelled() {
+                    lock_or_recover(registry).remove(&id);
+                    let _ = out.send(JobEvent::Cancelled { job_id: id, points_emitted: 0 });
+                    continue;
+                }
+                members.push(MemberJob { id, spec, ctl, warm_started: false, lead: false });
+            }
+            // lint: allow(panic-audit, take_siblings filters on is_fusible_sibling which only matches Job::Fit)
+            _ => unreachable!("take_siblings only returns Fit jobs"),
+        }
+    }
+
+    let mut fits = Vec::with_capacity(members.len());
+    for m in &mut members {
+        // lint: allow(panic-audit, is_fusible_sibling admits only specs with batch_penalty Some)
+        let pen = m.spec.batch_penalty().expect("fusion key requires a batchable spec");
+        let mut fit = BatchFit::new(pen);
+        if let Some(w) = m.spec.row_weights() {
+            fit = fit.with_row_weights(w);
+        }
+        if m.spec.is_convex() {
+            if let Some((_lambda, beta)) =
+                cache.warm_coef(&dataset, normalize, m.spec.datafit_name(), m.spec.family())
+            {
+                fit = fit.warm(beta, None);
+                m.warm_started = true;
+            }
+        }
+        // per-member budget: the member's own cancel flag and deadline —
+        // NOT merged into the shared SolverOpts, so one member stopping
+        // never stops the batch
+        fit = fit.with_cancel(m.ctl.cancel_flag());
+        if let Some(d) = m.ctl.deadline() {
+            fit = fit.with_deadline(d);
+        }
+        fits.push(fit);
+    }
+
+    let outcome = solve_batch(
+        design,
+        &dataset.y,
+        fits,
+        &opts,
+        Some(&entry.col_sq_norms),
+        Some(Arc::clone(&entry.gram)),
+    );
+    fusion.record(members.len(), &outcome.profile);
+
+    let wall = t0.elapsed().as_secs_f64();
+    for (m, member_out) in members.iter().zip(outcome.members) {
+        if member_out.stopped == Some(StopReason::Cancelled) || m.ctl.is_cancelled() {
+            let _ = out.send(JobEvent::Cancelled { job_id: m.id, points_emitted: 0 });
+        } else {
+            if m.spec.is_convex() {
+                cache.store_coef(
+                    &dataset,
+                    normalize,
+                    m.spec.datafit_name(),
+                    m.spec.family(),
+                    m.spec.lambda(),
+                    &member_out.result.beta,
+                );
+            }
+            let timed_out = member_out.stopped == Some(StopReason::Deadline)
+                || (!member_out.result.converged && m.ctl.deadline_exceeded());
+            let _ = out.send(JobEvent::FitDone(FitOutcome {
+                job_id: m.id,
+                label: m.spec.label(),
+                lambda: m.spec.lambda(),
+                result: member_out.result,
+                wall_time: wall,
+                warm_started: m.warm_started,
+                timed_out,
+            }));
+        }
+        // the worker loop only clears the lead's registry entry; sibling
+        // entries are ours to retire with their terminal events
+        if !m.lead {
+            lock_or_recover(registry).remove(&m.id);
+        }
+    }
+    cache.enforce_budget_now();
+}
+
 /// The remainder of a path sweep: everything a worker needs to continue
 /// from `next_index` with warm starts intact after a preemption.
 pub struct PathResume {
@@ -727,11 +1144,6 @@ fn run_path_segment(
     let design = entry.design();
     let n_planned = rs.ratios.len();
     let opts = ctl.solver_opts(&rs.opts);
-    let beta_true = if rs.dataset.beta_true.is_empty() {
-        None
-    } else {
-        Some(rs.dataset.beta_true.clone())
-    };
     // screening support is λ-independent; decide once for the sweep
     let gap_screened = rs.spec.supports_gap_screening();
     // one scratch workspace for the segment (buffer-reuse satellite):
@@ -802,47 +1214,21 @@ fn run_path_segment(
         // the timed-out terminal
         let interrupted = !result.converged && ctl.deadline_exceeded();
 
-        // Metrics vs. ground truth are computed in ORIGINAL coordinates:
-        // for normalized specs the solve ran on X·diag(s), so the
-        // original-design coefficients are s ⊙ β and the prediction uses
-        // the dataset's own design.
-        let support_size = result.support().len();
-        let (recovery, est, pred) = match beta_true.as_deref() {
-            None => (None, None, None),
-            Some(bt) => {
-                let rescaled: Option<Vec<f64>> = entry.scales.as_ref().map(|scales| {
-                    result.beta.iter().zip(scales.iter()).map(|(b, s)| b * s).collect()
-                });
-                let metric_beta: &[f64] = rescaled.as_deref().unwrap_or(&result.beta);
-                let metric_design: &crate::linalg::Design =
-                    if rescaled.is_some() { &rs.dataset.design } else { design };
-                (
-                    Some(support_recovery(metric_beta, bt, 1e-8)),
-                    Some(estimation_error(metric_beta, bt)),
-                    Some(prediction_mse(metric_design, metric_beta, bt)),
-                )
-            }
-        };
-        let point = PathPoint {
-            lambda,
-            lambda_ratio: ratio,
-            objective: result.objective,
-            support_size,
-            recovery,
-            estimation_error: est,
-            prediction_mse: pred,
-            beta: result.beta,
-        };
+        let epochs = result.n_epochs;
+        let kkt = result.kkt;
+        let converged = result.converged;
+        let certificate = result.certificate;
+        let point = make_path_point(&entry, &rs.dataset, result, lambda, ratio);
         let _ = out.send(JobEvent::PathPoint(PathPointOutcome {
             job_id: id,
             index,
             point,
-            epochs: result.n_epochs,
+            epochs,
             n_screened,
             wall_time: pt0.elapsed().as_secs_f64(),
-            kkt: result.kkt,
-            converged: result.converged,
-            certificate: result.certificate,
+            kkt,
+            converged,
+            certificate,
         }));
         rs.emitted += 1;
         rs.next_index += 1;
@@ -883,6 +1269,310 @@ fn path_summary(id: u64, rs: &PathResume, seg0: Instant, timed_out: bool) -> Pat
         total_time: rs.elapsed_before + seg0.elapsed().as_secs_f64(),
         timed_out,
     }
+}
+
+/// Build the streamed [`PathPoint`] for one solved λ point. Metrics vs.
+/// ground truth are computed in ORIGINAL coordinates: for normalized
+/// specs the solve ran on X·diag(s), so the original-design coefficients
+/// are s ⊙ β and the prediction uses the dataset's own design.
+fn make_path_point(
+    entry: &super::cache::DesignEntry,
+    dataset: &Dataset,
+    result: FitResult,
+    lambda: f64,
+    ratio: f64,
+) -> PathPoint {
+    let support_size = result.support().len();
+    let (recovery, est, pred) = if dataset.beta_true.is_empty() {
+        (None, None, None)
+    } else {
+        let bt: &[f64] = &dataset.beta_true;
+        let rescaled: Option<Vec<f64>> = entry
+            .scales
+            .as_ref()
+            .map(|scales| result.beta.iter().zip(scales.iter()).map(|(b, s)| b * s).collect());
+        let metric_beta: &[f64] = rescaled.as_deref().unwrap_or(&result.beta);
+        let metric_design: &crate::linalg::Design =
+            if rescaled.is_some() { &dataset.design } else { entry.design() };
+        (
+            Some(support_recovery(metric_beta, bt, 1e-8)),
+            Some(estimation_error(metric_beta, bt)),
+            Some(prediction_mse(metric_design, metric_beta, bt)),
+        )
+    };
+    PathPoint {
+        lambda,
+        lambda_ratio: ratio,
+        objective: result.objective,
+        support_size,
+        recovery,
+        estimation_error: est,
+        prediction_mse: pred,
+        beta: result.beta,
+    }
+}
+
+/// One fused batched *path* job: the lead sweep plus every sibling
+/// [`JobQueue::take_path_siblings`] pulled off the batch queue, advanced
+/// in λ-lockstep — each grid point is one [`solve_batch`] call over a
+/// shared residual panel, with every member warm-continued from its own
+/// previous point. Per-job semantics are preserved:
+///
+/// - each member streams its own [`JobEvent::PathPoint`]s and terminal
+///   event (`PathDone`, or `Cancelled` with its emitted-point count);
+/// - cancelling one member frees its panel column without touching its
+///   siblings; a member whose deadline fires emits its final partial
+///   point and a `timed_out` summary while the rest sweep on;
+/// - cooperative preemption **de-fuses**: when interactive work is
+///   waiting, every surviving member is requeued at the batch-queue front
+///   as its own [`Job::PathResume`] with warm state intact (it may later
+///   resume scalar — identical arithmetic, point for point).
+///
+/// Fused members skip the gap-safe screening fast path (`n_screened = 0`
+/// on their points): the multi-RHS panel amortization replaces it, and
+/// the streamed objectives/certificates meet the same tolerance.
+#[allow(clippy::too_many_arguments)]
+fn run_path_batch(
+    lead_id: u64,
+    dataset: Arc<Dataset>,
+    lead_spec: Box<dyn FitSpec>,
+    ratios: Vec<f64>,
+    opts: SolverOpts,
+    lead_ctl: &Arc<JobCtl>,
+    siblings: Vec<QueuedJob>,
+    cache: &DatasetCache,
+    out: &Sender<JobEvent>,
+    queue: &Arc<JobQueue>,
+    registry: &Mutex<HashMap<u64, Arc<JobCtl>>>,
+    fusion: &FusionCounters,
+) -> RunOutcome {
+    struct PathMember {
+        id: u64,
+        ctl: Arc<JobCtl>,
+        rs: PathResume,
+        lead: bool,
+    }
+
+    let seg0 = Instant::now();
+    let normalize = lead_spec.normalize_design();
+    let entry = cache.design_entry(&dataset, normalize);
+    let design = entry.design();
+    let n_planned = ratios.len();
+
+    let make_rs = |spec: Box<dyn FitSpec>, ratios: Vec<f64>, opts: SolverOpts| -> PathResume {
+        let lambda_max = spec.lambda_max(design, &dataset.y);
+        let mut state = ContinuationState::default();
+        state.gram = Some(Arc::clone(&entry.gram));
+        PathResume {
+            dataset: Arc::clone(&dataset),
+            spec,
+            ratios,
+            lambda_max,
+            next_index: 0,
+            state,
+            total_epochs: 0,
+            emitted: 0,
+            elapsed_before: 0.0,
+            opts,
+        }
+    };
+
+    // roster: lead first, then siblings in queue order; a sibling
+    // cancelled while it was still queued terminates here without ever
+    // occupying a panel column
+    let mut members = vec![PathMember {
+        id: lead_id,
+        ctl: Arc::clone(lead_ctl),
+        rs: make_rs(lead_spec, ratios.clone(), opts.clone()),
+        lead: true,
+    }];
+    for qj in siblings {
+        let QueuedJob { id, job, ctl } = qj;
+        match job {
+            Job::Path { spec, ratios: mut r, opts: jopts, .. } => {
+                if ctl.is_cancelled() {
+                    lock_or_recover(registry).remove(&id);
+                    let _ = out.send(JobEvent::Cancelled { job_id: id, points_emitted: 0 });
+                    continue;
+                }
+                r.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+                members.push(PathMember { id, ctl, rs: make_rs(spec, r, jopts), lead: false });
+            }
+            // lint: allow(panic-audit, take_path_siblings filters on is_fusible_path_sibling which only matches Job::Path)
+            _ => unreachable!("take_path_siblings only returns Path jobs"),
+        }
+    }
+    if members.len() == 1 {
+        // every joiner was pre-cancelled: run the lead as a plain sweep
+        // lint: allow(panic-audit, roster always holds the lead — it is pushed unconditionally above)
+        let m = members.pop().expect("roster holds the lead");
+        return run_path_segment(m.id, m.rs, lead_ctl, cache, out, queue);
+    }
+
+    let n_fused = members.len();
+    let mut panel_flops = 0.0;
+    let mut total_flops = 0.0;
+    let mut index = 0;
+
+    while index < n_planned && !members.is_empty() {
+        // per-member cancel/deadline checks between λ points
+        members.retain_mut(|m| {
+            if m.ctl.is_cancelled() {
+                let _ =
+                    out.send(JobEvent::Cancelled { job_id: m.id, points_emitted: m.rs.emitted });
+                if !m.lead {
+                    lock_or_recover(registry).remove(&m.id);
+                }
+                false
+            } else if m.ctl.deadline_exceeded() {
+                let _ = out.send(JobEvent::PathDone(path_summary(m.id, &m.rs, seg0, true)));
+                if !m.lead {
+                    lock_or_recover(registry).remove(&m.id);
+                }
+                false
+            } else {
+                true
+            }
+        });
+        if members.is_empty() {
+            break;
+        }
+        // cooperative preemption de-fuses the batch: each survivor
+        // resumes as its own scalar sweep with warm state intact, ahead
+        // of batch jobs submitted after the fused job started
+        if queue.interactive_waiting() {
+            let elapsed = seg0.elapsed().as_secs_f64();
+            let mut lead_requeued = false;
+            for mut m in members.drain(..).rev() {
+                m.rs.elapsed_before += elapsed;
+                lead_requeued |= m.lead;
+                let ctl = Arc::clone(&m.ctl);
+                queue.push_resume_front(QueuedJob {
+                    id: m.id,
+                    job: Job::PathResume(Box::new(m.rs)),
+                    ctl,
+                });
+            }
+            fusion.record_path(n_fused, panel_flops, total_flops);
+            cache.enforce_budget_now();
+            return if lead_requeued { RunOutcome::Requeued } else { RunOutcome::Terminal };
+        }
+
+        // lint: allow(panic-audit, the loop exits above once index reaches ratios.len)
+        let ratio = ratios[index];
+        let pt0 = Instant::now();
+        let mut fits = Vec::with_capacity(members.len());
+        for m in &members {
+            let lambda = m.rs.lambda_max * ratio;
+            let pen = m
+                .rs
+                .spec
+                .batch_penalty()
+                // lint: allow(panic-audit, the fusion trigger and is_fusible_path_sibling both require batch_penalty Some)
+                .expect("fusion key requires a batchable spec")
+                .with_lambda(lambda);
+            let mut fit = BatchFit::new(pen);
+            if let Some(w) = m.rs.spec.row_weights() {
+                fit = fit.with_row_weights(w);
+            }
+            if let Some(beta) = &m.rs.state.beta {
+                fit = fit.warm(beta.clone(), m.rs.state.ws_size);
+            }
+            // per-member budget rides on the BatchFit, never on the
+            // shared SolverOpts — one member stopping never stops the rest
+            fit = fit.with_cancel(m.ctl.cancel_flag());
+            if let Some(d) = m.ctl.deadline() {
+                fit = fit.with_deadline(d);
+            }
+            fits.push(fit);
+        }
+        let outcome = solve_batch(
+            design,
+            &dataset.y,
+            fits,
+            &opts,
+            Some(&entry.col_sq_norms),
+            Some(Arc::clone(&entry.gram)),
+        );
+        panel_flops += outcome.profile.panel_flops;
+        total_flops += outcome.profile.total_flops();
+
+        let wall = pt0.elapsed().as_secs_f64();
+        let mut keep = Vec::with_capacity(members.len());
+        for (m, mo) in members.iter_mut().zip(outcome.members) {
+            if mo.stopped == Some(StopReason::Cancelled) || m.ctl.is_cancelled() {
+                // the cancel landed mid-solve: drop the partial point
+                let _ =
+                    out.send(JobEvent::Cancelled { job_id: m.id, points_emitted: m.rs.emitted });
+                if !m.lead {
+                    lock_or_recover(registry).remove(&m.id);
+                }
+                keep.push(false);
+                continue;
+            }
+            let interrupted = mo.stopped == Some(StopReason::Deadline)
+                || (!mo.result.converged && m.ctl.deadline_exceeded());
+            m.rs.total_epochs += mo.result.n_epochs;
+            m.rs.state.update_from(&mo.result);
+            let lambda = m.rs.lambda_max * ratio;
+            let epochs = mo.result.n_epochs;
+            let kkt = mo.result.kkt;
+            let converged = mo.result.converged;
+            let certificate = mo.result.certificate;
+            let point = make_path_point(&entry, &dataset, mo.result, lambda, ratio);
+            let _ = out.send(JobEvent::PathPoint(PathPointOutcome {
+                job_id: m.id,
+                index,
+                point,
+                epochs,
+                n_screened: 0,
+                wall_time: wall,
+                kkt,
+                converged,
+                certificate,
+            }));
+            m.rs.emitted += 1;
+            m.rs.next_index += 1;
+            if interrupted {
+                // deadline fired mid-solve: the partial point stands,
+                // followed by this member's timed-out terminal
+                let _ = out.send(JobEvent::PathDone(path_summary(m.id, &m.rs, seg0, true)));
+                if !m.lead {
+                    lock_or_recover(registry).remove(&m.id);
+                }
+                keep.push(false);
+            } else {
+                keep.push(true);
+            }
+        }
+        let mut keep_it = keep.into_iter();
+        members.retain(|_| keep_it.next().unwrap_or(true));
+        index += 1;
+    }
+
+    for m in &members {
+        // seed future single fits on this dataset with the densest
+        // solution (mirrors the scalar sweep)
+        if m.rs.spec.is_convex() {
+            if let Some(beta) = &m.rs.state.beta {
+                cache.store_coef(
+                    &m.rs.dataset,
+                    normalize,
+                    m.rs.spec.datafit_name(),
+                    m.rs.spec.family(),
+                    m.rs.lambda_max * m.rs.ratios.last().copied().unwrap_or(1.0),
+                    beta,
+                );
+            }
+        }
+        let _ = out.send(JobEvent::PathDone(path_summary(m.id, &m.rs, seg0, false)));
+        if !m.lead {
+            lock_or_recover(registry).remove(&m.id);
+        }
+    }
+    fusion.record_path(n_fused, panel_flops, total_flops);
+    cache.enforce_budget_now();
+    RunOutcome::Terminal
 }
 
 #[cfg(test)]
@@ -1293,6 +1983,237 @@ mod tests {
             }
         }
         assert!(saw_queued_cancel);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn sibling_fits_fuse_into_one_batched_job() {
+        let ds = dataset(11);
+        let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+        let sched = FitScheduler::start(1);
+        let opts = SolverOpts::default().with_tol(1e-10);
+        // occupy the single worker so the lasso fits pile up in the queue
+        sched.submit_fit(Arc::clone(&ds), slow_lasso(lam_max / 3.0, 400), opts.clone());
+        let lams: Vec<f64> = (2..=5).map(|k| lam_max / (2.0 * k as f64)).collect();
+        for &lam in &lams {
+            sched.submit_fit(Arc::clone(&ds), specs::lasso(lam), opts.clone());
+        }
+        let outcomes = sched.collect_fits(5);
+        // the blocker ran scalar; the four lasso fits fused into one job
+        let stats = sched.fusion_stats();
+        assert_eq!(stats.batched_jobs, 1, "expected exactly one fused job");
+        assert_eq!(stats.batched_fits, 4, "all four siblings should have fused");
+        assert!((stats.fits_per_batch() - 4.0).abs() < 1e-12);
+        assert!(
+            stats.panel_flop_ratio() > 0.0 && stats.panel_flop_ratio() < 1.0,
+            "panel ratio {} outside (0,1)",
+            stats.panel_flop_ratio()
+        );
+        // every member solved its own λ to its own certificate
+        for &lam in &lams {
+            let o = outcomes
+                .iter()
+                .find(|o| (o.lambda - lam).abs() < 1e-15)
+                .expect("member outcome missing");
+            assert!(o.result.converged, "member at λ={lam} did not converge");
+            assert!(!o.timed_out);
+            let reference = Lasso::new(lam).with_tol(1e-10).fit(&ds.design, &ds.y);
+            assert!(
+                (o.result.objective - reference.objective).abs() < 1e-10,
+                "fused member objective drifted from scalar at λ={lam}"
+            );
+        }
+        sched.shutdown();
+    }
+
+    #[test]
+    fn cancel_one_member_leaves_siblings_running() {
+        let ds = dataset(12);
+        let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+        let sched = FitScheduler::start(1);
+        let opts = SolverOpts::default().with_tol(1e-10);
+        sched.submit_fit(Arc::clone(&ds), slow_lasso(lam_max / 3.0, 400), opts.clone());
+        let a = sched.submit_fit(Arc::clone(&ds), specs::lasso(lam_max / 4.0), opts.clone());
+        let b = sched.submit_fit(Arc::clone(&ds), specs::lasso(lam_max / 6.0), opts.clone());
+        let c = sched.submit_fit(Arc::clone(&ds), specs::lasso(lam_max / 8.0), opts.clone());
+        assert!(sched.cancel(b), "cancel must land while b is still queued");
+        let mut done = Vec::new();
+        let mut cancelled = Vec::new();
+        for _ in 0..4 {
+            match sched.recv_event_timeout(Duration::from_secs(60)) {
+                Some(JobEvent::FitDone(o)) => done.push(o),
+                Some(JobEvent::Cancelled { job_id, points_emitted }) => {
+                    assert_eq!(points_emitted, 0);
+                    cancelled.push(job_id);
+                }
+                other => panic!("unexpected event {:?}", other.map(|e| e.job_id())),
+            }
+        }
+        assert_eq!(cancelled, vec![b], "only the cancelled member may terminate Cancelled");
+        for id in [a, c] {
+            let o = done.iter().find(|o| o.job_id == id).expect("sibling outcome missing");
+            assert!(o.result.converged, "surviving sibling {id} must converge");
+        }
+        let stats = sched.fusion_stats();
+        assert_eq!(stats.batched_jobs, 1);
+        assert_eq!(stats.batched_fits, 2, "the cancelled member never joins the panel");
+        sched.shutdown();
+    }
+
+    #[test]
+    fn deadline_member_reports_partial_without_stopping_siblings() {
+        let ds = dataset(13);
+        let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+        let sched = FitScheduler::start(1);
+        let opts = SolverOpts::default().with_tol(1e-10);
+        sched.submit_fit(Arc::clone(&ds), slow_lasso(lam_max / 3.0, 400), opts.clone());
+        let a = sched.submit_fit(Arc::clone(&ds), specs::lasso(lam_max / 4.0), opts.clone());
+        // a deadline already in the past: the member must retire at the
+        // first scoring pass with a finite partial result
+        let (b, _) = sched.submit_with(
+            Job::Fit {
+                dataset: Arc::clone(&ds),
+                spec: specs::lasso(lam_max / 6.0),
+                opts: opts.clone(),
+            },
+            JobPolicy::default().with_deadline(Instant::now()),
+        );
+        let c = sched.submit_fit(Arc::clone(&ds), specs::lasso(lam_max / 8.0), opts.clone());
+        let outcomes = sched.collect_fits(4);
+        let stats = sched.fusion_stats();
+        assert_eq!(stats.batched_jobs, 1);
+        assert_eq!(stats.batched_fits, 3, "the deadline member still joins the batch");
+        let bo = outcomes.iter().find(|o| o.job_id == b).expect("deadline member outcome");
+        assert!(bo.timed_out, "expired deadline must surface as timed_out");
+        assert!(!bo.result.converged);
+        assert!(bo.result.objective.is_finite(), "partial result must be well-formed");
+        assert!(bo.result.kkt.is_finite());
+        for id in [a, c] {
+            let o = outcomes.iter().find(|o| o.job_id == id).expect("sibling outcome");
+            assert!(o.result.converged, "sibling {id} must run to its certificate");
+            assert!(!o.timed_out);
+        }
+        sched.shutdown();
+    }
+
+    #[test]
+    fn interactive_and_non_batchable_fits_never_fuse() {
+        let ds = dataset(14);
+        let lam = quadratic_lambda_max(&ds.design, &ds.y) / 5.0;
+        let sched = FitScheduler::start(1);
+        let opts = SolverOpts::default();
+        sched.submit_fit(Arc::clone(&ds), slow_lasso(lam, 300), opts.clone());
+        // interactive siblings: latency wins over throughput — no fusion
+        for _ in 0..2 {
+            sched.submit_with(
+                Job::Fit {
+                    dataset: Arc::clone(&ds),
+                    spec: specs::lasso(lam),
+                    opts: opts.clone(),
+                },
+                JobPolicy::interactive(),
+            );
+        }
+        // SCAD has no batchable penalty form: stays scalar even at batch
+        // priority
+        sched.submit_fit(Arc::clone(&ds), specs::scad(lam, 3.7), opts.clone());
+        sched.submit_fit(Arc::clone(&ds), specs::scad(lam / 2.0, 3.7), opts.clone());
+        let outcomes = sched.collect_fits(5);
+        assert_eq!(outcomes.len(), 5);
+        let stats = sched.fusion_stats();
+        assert_eq!(stats.batched_jobs, 0, "nothing here is allowed to fuse");
+        assert_eq!(stats.batched_fits, 0);
+        assert_eq!(stats.fits_per_batch(), 0.0);
+        assert_eq!(stats.panel_flop_ratio(), 0.0);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn sibling_paths_fuse_and_match_cold_sweeps() {
+        let ds = dataset(15);
+        let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+        let sched = FitScheduler::start(1);
+        let opts = SolverOpts::default().with_tol(1e-10);
+        let ratios = vec![0.5, 0.25, 0.1, 0.05];
+        // occupy the single worker so both sweeps pile up in the queue
+        sched.submit_fit(Arc::clone(&ds), slow_lasso(lam_max / 3.0, 400), opts.clone());
+        let lasso_id =
+            sched.submit_path(Arc::clone(&ds), specs::lasso(1.0), ratios.clone(), opts.clone());
+        let mcp_id =
+            sched.submit_path(Arc::clone(&ds), specs::mcp(1.0, 3.0), ratios.clone(), opts.clone());
+        // blocker FitDone + 2 × (4 points + PathDone)
+        let events = sched.collect_events(1 + 2 * (ratios.len() + 1));
+        let stats = sched.fusion_stats();
+        assert_eq!(stats.batched_jobs, 1, "the two sweeps should fuse into one job");
+        assert_eq!(stats.batched_fits, 2);
+        assert!(stats.panel_flop_ratio() > 0.0 && stats.panel_flop_ratio() < 1.0);
+        for id in [lasso_id, mcp_id] {
+            let points: Vec<_> = events
+                .iter()
+                .filter_map(|e| match e {
+                    JobEvent::PathPoint(p) if p.job_id == id => Some(p),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(points.len(), ratios.len(), "member {id} must stream every point");
+            for p in &points {
+                assert!(p.converged, "fused member point at λ={} did not converge", p.point.lambda);
+                assert!(p.kkt <= 1e-10, "fused member kkt {} above tol", p.kkt);
+                assert_eq!(p.n_screened, 0, "fused sweeps skip the screening fast path");
+            }
+            let done = events
+                .iter()
+                .find_map(|e| match e {
+                    JobEvent::PathDone(s) if s.job_id == id => Some(s),
+                    _ => None,
+                })
+                .expect("member summary missing");
+            assert_eq!(done.n_points, ratios.len());
+            assert!(!done.timed_out);
+        }
+        // fused lasso points must not be worse than cold scalar fits
+        for p in events.iter().filter_map(|e| match e {
+            JobEvent::PathPoint(p) if p.job_id == lasso_id => Some(p),
+            _ => None,
+        }) {
+            let cold = Lasso::new(p.point.lambda).with_tol(1e-10).fit(&ds.design, &ds.y);
+            assert!(
+                p.point.objective <= cold.objective + 1e-8,
+                "fused objective {} worse than cold {} at λ={}",
+                p.point.objective,
+                cold.objective,
+                p.point.lambda
+            );
+        }
+        sched.shutdown();
+    }
+
+    #[test]
+    fn precancelled_path_sibling_falls_back_to_scalar_sweep() {
+        let ds = dataset(16);
+        let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+        let sched = FitScheduler::start(1);
+        let opts = SolverOpts::default().with_tol(1e-8);
+        let ratios = vec![0.4, 0.1];
+        sched.submit_fit(Arc::clone(&ds), slow_lasso(lam_max / 3.0, 300), opts.clone());
+        let lead =
+            sched.submit_path(Arc::clone(&ds), specs::lasso(1.0), ratios.clone(), opts.clone());
+        let sib =
+            sched.submit_path(Arc::clone(&ds), specs::lasso(1.0), ratios.clone(), opts.clone());
+        assert!(sched.cancel(sib), "cancel must land while the sibling is still queued");
+        // blocker FitDone + sibling Cancelled + lead (2 points + PathDone)
+        let events = sched.collect_events(2 + ratios.len() + 1);
+        assert!(events.iter().any(|e| matches!(
+            e,
+            JobEvent::Cancelled { job_id, points_emitted: 0 } if *job_id == sib
+        )));
+        let lead_points = events
+            .iter()
+            .filter(|e| matches!(e, JobEvent::PathPoint(p) if p.job_id == lead))
+            .count();
+        assert_eq!(lead_points, ratios.len(), "lead must complete its sweep scalar");
+        let stats = sched.fusion_stats();
+        assert_eq!(stats.batched_jobs, 0, "a lone lead must not count as a fused job");
         sched.shutdown();
     }
 

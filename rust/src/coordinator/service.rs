@@ -587,9 +587,9 @@ fn dispatch(frame: &Json, req: u64, conn: &mut ConnState, shared: &ServerShared)
             .with("v", super::wire::WIRE_VERSION as f64),
         "stats" => {
             let stats = shared.cache.stats();
-            let (pending, workers) = shared
-                .with_scheduler(|s| (s.pending(), s.workers_alive()))
-                .unwrap_or((0, 0));
+            let (pending, workers, fusion) = shared
+                .with_scheduler(|s| (s.pending(), s.workers_alive(), s.fusion_stats()))
+                .unwrap_or((0, 0, Default::default()));
             Json::obj()
                 .with("type", "stats")
                 .with("req", req as f64)
@@ -597,6 +597,11 @@ fn dispatch(frame: &Json, req: u64, conn: &mut ConnState, shared: &ServerShared)
                 .with("workers_alive", workers as f64)
                 .with("cache_bytes", shared.cache.bytes() as f64)
                 .with("evictions", stats.evictions as f64)
+                // many-fit fusion counters (scheduler-lifetime monotone)
+                .with("batched_jobs", fusion.batched_jobs as f64)
+                .with("batched_fits", fusion.batched_fits as f64)
+                .with("fits_per_batch", fusion.fits_per_batch())
+                .with("panel_flop_ratio", fusion.panel_flop_ratio())
         }
         "shutdown" => {
             shared.stop_requested.store(true, Ordering::SeqCst);

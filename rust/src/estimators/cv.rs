@@ -59,6 +59,31 @@ fn take_rows(design: &Design, rows: &[usize]) -> Design {
     }
 }
 
+/// Shuffled k-fold assignment shared by every CV entry point (the
+/// batched and sequential paths must hold out identical rows).
+fn fold_assignment(n: usize, k_folds: usize, seed: u64) -> Vec<Vec<usize>> {
+    let mut order: Vec<usize> = (0..n).collect();
+    Rng::seed_from_u64(seed).shuffle(&mut order);
+    (0..k_folds).map(|k| order.iter().skip(k).step_by(k_folds).cloned().collect()).collect()
+}
+
+/// 0/1 **training** masks for each fold: 1.0 on training rows, 0.0 on the
+/// fold's held-out validation rows. A masked batch member on the full
+/// design follows the fold-restricted loss exactly (masked rows stay
+/// identically zero in the residual panel).
+fn fold_masks(n: usize, folds: &[Vec<usize>]) -> Vec<std::sync::Arc<Vec<f64>>> {
+    folds
+        .iter()
+        .map(|val_rows| {
+            let mut w = vec![1.0; n];
+            for &i in val_rows {
+                w[i] = 0.0;
+            }
+            std::sync::Arc::new(w)
+        })
+        .collect()
+}
+
 /// K-fold CV over a geometric λ grid for the Lasso. `threads` bounds the
 /// worker pool (folds run concurrently; λ is warm-started within a fold).
 ///
@@ -67,6 +92,14 @@ fn take_rows(design: &Design, rows: &[usize]) -> Design {
 /// anchoring at the full-data λ_max would leak the fold's validation rows
 /// into its model-selection grid and bias the chosen λ. The winning ratio
 /// is then rescaled by the full-data λ_max for the final refit.
+///
+/// When many-fit batching is on ([`crate::solver::batching_enabled`],
+/// `SKGLM_BATCH`/`--batch`) the k folds run as **one batched job**: every
+/// λ point is a single [`crate::solver::solve_batch`] call over all k
+/// fold members (0/1 row masks on the shared full design, per-member warm
+/// continuation along the grid), and the per-fold anchors come from one
+/// multi-RHS panel pass — the same training-rows-only leakage guard,
+/// computed without materialising k row-subset designs.
 pub fn lasso_cv(
     dataset: &Dataset,
     lambda_ratios: &[f64],
@@ -76,16 +109,107 @@ pub fn lasso_cv(
     threads: usize,
 ) -> CvResult {
     assert!(k_folds >= 2);
-    let n = dataset.n();
-    assert!(n >= 2 * k_folds, "need at least 2 samples per fold");
-    let lam_max = super::linear::quadratic_lambda_max(&dataset.design, &dataset.y);
+    assert!(dataset.n() >= 2 * k_folds, "need at least 2 samples per fold");
+    if crate::solver::batching_enabled() {
+        lasso_cv_batched(dataset, lambda_ratios, k_folds, opts, seed)
+    } else {
+        lasso_cv_sequential(dataset, lambda_ratios, k_folds, opts, seed, threads)
+    }
+}
 
-    // shuffled fold assignment
-    let mut order: Vec<usize> = (0..n).collect();
-    Rng::seed_from_u64(seed).shuffle(&mut order);
-    let folds: Vec<Vec<usize>> = (0..k_folds)
-        .map(|k| order.iter().skip(k).step_by(k_folds).cloned().collect())
-        .collect();
+/// The batched CV engine behind [`lasso_cv`]: folds × λ as one fused
+/// many-fit job (λ-outer, folds-inner).
+fn lasso_cv_batched(
+    dataset: &Dataset,
+    lambda_ratios: &[f64],
+    k_folds: usize,
+    opts: &SolverOpts,
+    seed: u64,
+) -> CvResult {
+    use crate::penalty::{BatchPenalty, L1};
+    use crate::solver::{batch_lambda_max, solve_batch, BatchFit};
+    use std::sync::Arc;
+
+    let n = dataset.n();
+    let lam_max = super::linear::quadratic_lambda_max(&dataset.design, &dataset.y);
+    let folds = fold_assignment(n, k_folds, seed);
+    let masks = fold_masks(n, &folds);
+
+    // leakage guard: per-fold anchors from the masked targets — one
+    // multi-RHS panel pass instead of k row-subset λ_max passes. Masked
+    // rows contribute exact zeros, so each anchor equals the λ_max of the
+    // fold's training rows.
+    let mask_opts: Vec<Option<Arc<Vec<f64>>>> =
+        masks.iter().map(|w| Some(Arc::clone(w))).collect();
+    let fold_lambda_max = batch_lambda_max(&dataset.design, &dataset.y, &mask_opts);
+
+    let mut warm: Vec<Option<(Vec<f64>, Option<usize>)>> = vec![None; k_folds];
+    let mut cv_mse = vec![0.0; lambda_ratios.len()];
+    let mut pred = vec![0.0; n];
+    for (li, &ratio) in lambda_ratios.iter().enumerate() {
+        let mut fits = Vec::with_capacity(k_folds);
+        for f in 0..k_folds {
+            let pen = BatchPenalty::L1(L1::new(fold_lambda_max[f] * ratio));
+            let mut fit = BatchFit::new(pen).with_row_weights(Arc::clone(&masks[f]));
+            if let Some((beta, ws)) = &warm[f] {
+                fit = fit.warm(beta.clone(), *ws);
+            }
+            fits.push(fit);
+        }
+        let out = solve_batch(&dataset.design, &dataset.y, fits, opts, None, None);
+        for (f, m) in out.members.into_iter().enumerate() {
+            let beta = m.result.beta;
+            // validation MSE on the held-out rows: one full-design
+            // matvec restricted to the fold's validation rows (row i of
+            // X·β is the same arithmetic as on a row-subset design)
+            dataset.design.matvec(&beta, &mut pred);
+            let val = &folds[f];
+            let mse = val
+                .iter()
+                .map(|&i| (pred[i] - dataset.y[i]) * (pred[i] - dataset.y[i]))
+                .sum::<f64>()
+                / val.len() as f64;
+            cv_mse[li] += mse / k_folds as f64;
+            let ws = m.result.history.last().map(|h| h.ws_size);
+            warm[f] = Some((beta, ws));
+        }
+    }
+
+    let best_index = cv_mse
+        .iter()
+        .enumerate()
+        .min_by(|a, b| crate::util::order::nan_last(*a.1, *b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    let best_lambda = lam_max * lambda_ratios[best_index];
+    let beta = super::linear::Lasso::new(best_lambda)
+        .with_solver(opts.clone())
+        .fit(&dataset.design, &dataset.y)
+        .beta;
+    CvResult {
+        lambda_ratios: lambda_ratios.to_vec(),
+        cv_mse,
+        best_index,
+        best_lambda,
+        lambda_max: lam_max,
+        fold_lambda_max,
+        beta,
+    }
+}
+
+/// The sequential CV engine behind [`lasso_cv`]: one row-subset path
+/// sweep per fold on the coordinator's thread pool.
+fn lasso_cv_sequential(
+    dataset: &Dataset,
+    lambda_ratios: &[f64],
+    k_folds: usize,
+    opts: &SolverOpts,
+    seed: u64,
+    threads: usize,
+) -> CvResult {
+    let n = dataset.n();
+    let lam_max = super::linear::quadratic_lambda_max(&dataset.design, &dataset.y);
+    let folds = fold_assignment(n, k_folds, seed);
 
     // one job per fold: warm-started path over the grid, validation MSE
     let jobs: Vec<_> = folds
@@ -165,10 +289,53 @@ pub fn lasso_cv(
     }
 }
 
+/// Per-fold **group** λ_max anchors from one multi-RHS panel pass:
+/// column f of the n×k panel holds `(w_f ⊙ y) / n_eff_f`, so column f of
+/// `XᵀR` is the fold's gradient at 0 and the anchor is the largest block
+/// ℓ2-norm (`max_b ‖X_bᵀ(w_f ⊙ y)‖₂ / n_eff_f`, unit block weights —
+/// matching [`crate::solver::block_lambda_max_for`] on the fold's
+/// training rows, since masked rows contribute exact zeros).
+fn group_cv_fold_anchors(
+    design: &Design,
+    y: &[f64],
+    part: &crate::solver::BlockPartition,
+    masks: &[std::sync::Arc<Vec<f64>>],
+) -> Vec<f64> {
+    let n = design.nrows();
+    let p = design.ncols();
+    let k = masks.len();
+    let mut panel = vec![0.0; n * k];
+    for (f, w) in masks.iter().enumerate() {
+        let n_eff: f64 = w.iter().sum();
+        let col = &mut panel[f * n..(f + 1) * n];
+        for i in 0..n {
+            col[i] = w[i] * y[i] / n_eff;
+        }
+    }
+    let mut grads = vec![0.0; p * k];
+    design.matmul_t(&panel, k, &mut grads);
+    (0..k)
+        .map(|f| {
+            let g = &grads[f * p..(f + 1) * p];
+            let mut best = 0.0f64;
+            for b in 0..part.n_blocks() {
+                let sq: f64 = part.coords(b).iter().map(|&j| g[j] * g[j]).sum();
+                best = best.max(sq.sqrt());
+            }
+            best
+        })
+        .collect()
+}
+
 /// K-fold CV for the **group Lasso** over a geometric λ grid — the same
 /// leakage-guarded protocol as [`lasso_cv`] (per-fold training-rows-only
 /// λ_max anchors, warm-started within-fold sweeps, NaN-last winner
 /// selection), with solves running on the block-coordinate engine.
+///
+/// Block penalties are outside the batched engine's scalar penalty
+/// universe, so the fold sweeps stay on block CD; with batching enabled
+/// the per-fold anchors still come from one shared multi-RHS panel pass
+/// ([`group_cv_fold_anchors`]) instead of k row-subset gradient passes.
 pub fn group_lasso_cv(
     dataset: &Dataset,
     part: &std::sync::Arc<crate::solver::BlockPartition>,
@@ -185,19 +352,25 @@ pub fn group_lasso_cv(
     assert!(n >= 2 * k_folds, "need at least 2 samples per fold");
     let lam_max = super::group::group_lambda_max(&dataset.design, &dataset.y, part, None);
 
-    let mut order: Vec<usize> = (0..n).collect();
-    Rng::seed_from_u64(seed).shuffle(&mut order);
-    let folds: Vec<Vec<usize>> = (0..k_folds)
-        .map(|k| order.iter().skip(k).step_by(k_folds).cloned().collect())
-        .collect();
+    let folds = fold_assignment(n, k_folds, seed);
+
+    // batched anchor pass: one XᵀR panel over all folds' masked targets
+    let panel_anchors: Option<Vec<f64>> = if crate::solver::batching_enabled() {
+        let masks = fold_masks(n, &folds);
+        Some(group_cv_fold_anchors(&dataset.design, &dataset.y, part, &masks))
+    } else {
+        None
+    };
 
     let jobs: Vec<_> = folds
         .iter()
-        .map(|val_rows| {
+        .enumerate()
+        .map(|(f, val_rows)| {
             let val_rows = val_rows.clone();
             let ratios = lambda_ratios.to_vec();
             let opts = opts.clone();
             let part = std::sync::Arc::clone(part);
+            let anchor = panel_anchors.as_ref().map(|a| a[f]);
             move || -> (f64, Vec<f64>) {
                 let mut in_val = vec![false; n];
                 for &i in &val_rows {
@@ -209,8 +382,9 @@ pub fn group_lasso_cv(
                 let x_val = take_rows(&dataset.design, &val_rows);
                 let y_val: Vec<f64> = val_rows.iter().map(|&i| dataset.y[i]).collect();
 
-                let fold_lam_max =
-                    super::group::group_lambda_max(&x_train, &y_train, &part, None);
+                let fold_lam_max = anchor.unwrap_or_else(|| {
+                    super::group::group_lambda_max(&x_train, &y_train, &part, None)
+                });
                 // warm-started within-fold sweep through the block engine
                 let mut state = ContinuationState::default();
                 let mut datafit =
@@ -371,6 +545,68 @@ mod tests {
         assert_eq!(rec.false_negatives, 0, "cv-selected model misses true features");
         // per-fold anchors are training-only (leakage guard inherited)
         assert_eq!(cv.fold_lambda_max.len(), 4);
+    }
+
+    #[test]
+    fn batched_and_sequential_cv_agree() {
+        let ds = correlated(CorrelatedSpec { n: 90, p: 40, rho: 0.3, nnz: 5, snr: 10.0 }, 11);
+        let ratios = geometric_grid(1e-2, 8);
+        let opts = SolverOpts::default().with_tol(1e-10);
+        let b = lasso_cv_batched(&ds, &ratios, 3, &opts, 0);
+        let s = lasso_cv_sequential(&ds, &ratios, 3, &opts, 0, 2);
+        assert_eq!(b.best_index, s.best_index, "batched CV must pick the same λ");
+        // per-fold anchors: masked panel pass vs row-subset λ_max
+        for (ba, sa) in b.fold_lambda_max.iter().zip(&s.fold_lambda_max) {
+            assert!((ba - sa).abs() <= 1e-10 * sa.abs(), "fold anchor drifted: {ba} vs {sa}");
+        }
+        // fold optima agree to solver tolerance, so the CV curves do too
+        for (bm, sm) in b.cv_mse.iter().zip(&s.cv_mse) {
+            assert!((bm - sm).abs() <= 2e-6 * (1.0 + sm.abs()), "cv mse drifted: {bm} vs {sm}");
+        }
+        assert!((b.best_lambda - s.best_lambda).abs() <= 1e-12 * s.best_lambda);
+    }
+
+    #[test]
+    fn batched_cv_works_on_sparse_designs() {
+        let ds = paper_dataset_small("rcv1", 7).unwrap();
+        let ratios = geometric_grid(1e-2, 5);
+        let cv = lasso_cv_batched(&ds, &ratios, 3, &SolverOpts::default().with_tol(1e-6), 1);
+        assert!(cv.cv_mse.iter().all(|m| m.is_finite()));
+        assert!(cv.best_lambda > 0.0);
+    }
+
+    #[test]
+    fn group_panel_anchors_match_subset_anchors() {
+        let (ds, part) = crate::data::grouped_correlated(
+            crate::data::GroupedSpec {
+                n: 80,
+                p: 24,
+                group_size: 4,
+                active_groups: 2,
+                rho: 0.3,
+                snr: 8.0,
+            },
+            7,
+        );
+        let folds = fold_assignment(ds.n(), 4, 3);
+        let masks = fold_masks(ds.n(), &folds);
+        let anchors = group_cv_fold_anchors(&ds.design, &ds.y, &part, &masks);
+        for (f, val_rows) in folds.iter().enumerate() {
+            let mut in_val = vec![false; ds.n()];
+            for &i in val_rows {
+                in_val[i] = true;
+            }
+            let train_rows: Vec<usize> = (0..ds.n()).filter(|&i| !in_val[i]).collect();
+            let x_train = take_rows(&ds.design, &train_rows);
+            let y_train: Vec<f64> = train_rows.iter().map(|&i| ds.y[i]).collect();
+            let subset = crate::estimators::group::group_lambda_max(&x_train, &y_train, &part, None);
+            assert!(
+                (anchors[f] - subset).abs() <= 1e-10 * subset,
+                "panel anchor {} drifted from subset anchor {} on fold {f}",
+                anchors[f],
+                subset
+            );
+        }
     }
 
     #[test]

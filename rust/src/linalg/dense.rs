@@ -155,6 +155,81 @@ impl DenseMatrix {
         }
     }
 
+    /// Multi-RHS blocked `Xᵀ R` over the column range `cols`: `R` is a
+    /// residual **panel** of `n_rhs` column-major vectors (`R[:, c] =
+    /// r[c·n .. (c+1)·n]`) and the output is feature-major
+    /// (`out[(j − cols.start)·n_rhs + c] = X[:, j]ᵀ R[:, c]`), so a
+    /// PANEL-aligned column split maps to a contiguous output split —
+    /// the batched-fit scoring kernel (FaSTGLZ): each loaded design
+    /// element is reused across all `n_rhs` fits *and* across the 8-wide
+    /// column panel.
+    ///
+    /// Bitwise contract: for every `(j, c)` the summation order is
+    /// identical to [`DenseMatrix::matvec_t_panel`] on `R[:, c]` alone
+    /// (i-ascending inside full panels, [`dot`] on the remainder
+    /// columns), so batched scoring reproduces single-fit scoring
+    /// bit-for-bit and stays independent of the thread split.
+    pub fn matmul_t_panel(
+        &self,
+        r: &[f64],
+        n_rhs: usize,
+        cols: std::ops::Range<usize>,
+        out: &mut [f64],
+    ) {
+        assert_eq!(r.len(), self.n * n_rhs);
+        assert!(cols.end <= self.p);
+        assert_eq!(out.len(), (cols.end - cols.start) * n_rhs);
+        if n_rhs == 1 {
+            return self.matvec_t_panel(r, cols, out);
+        }
+        if n_rhs == 0 {
+            return;
+        }
+        let n = self.n;
+        // 8 × n_rhs accumulator block, [k·n_rhs + c] — matches the output
+        // layout so a full panel flushes with one copy
+        let mut acc = vec![0.0f64; PANEL * n_rhs];
+        let mut j = cols.start;
+        let mut o = 0usize;
+        while j + PANEL <= cols.end {
+            let c0 = self.col(j);
+            let c1 = self.col(j + 1);
+            let c2 = self.col(j + 2);
+            let c3 = self.col(j + 3);
+            let c4 = self.col(j + 4);
+            let c5 = self.col(j + 5);
+            let c6 = self.col(j + 6);
+            let c7 = self.col(j + 7);
+            acc.fill(0.0);
+            for i in 0..n {
+                let x = [c0[i], c1[i], c2[i], c3[i], c4[i], c5[i], c6[i], c7[i]];
+                for c in 0..n_rhs {
+                    let ri = r[c * n + i];
+                    let a = &mut acc[c..];
+                    a[0] += x[0] * ri;
+                    a[n_rhs] += x[1] * ri;
+                    a[2 * n_rhs] += x[2] * ri;
+                    a[3 * n_rhs] += x[3] * ri;
+                    a[4 * n_rhs] += x[4] * ri;
+                    a[5 * n_rhs] += x[5] * ri;
+                    a[6 * n_rhs] += x[6] * ri;
+                    a[7 * n_rhs] += x[7] * ri;
+                }
+            }
+            out[o..o + PANEL * n_rhs].copy_from_slice(&acc);
+            j += PANEL;
+            o += PANEL * n_rhs;
+        }
+        while j < cols.end {
+            let col = self.col(j);
+            for c in 0..n_rhs {
+                out[o + c] = dot(col, &r[c * n..(c + 1) * n]);
+            }
+            j += 1;
+            o += n_rhs;
+        }
+    }
+
     /// Gathered blocked dots: `out[k] = X[:, cols[k]]ᵀ r` for an
     /// **arbitrary** (not necessarily contiguous) column list. Columns are
     /// processed [`PANEL`] at a time so every loaded element of `r` is

@@ -157,6 +157,100 @@ impl Design {
         }
     }
 
+    /// Multi-RHS `Xᵀ R` for a residual panel `R ∈ ℝ^{n×B}` (column-major,
+    /// `B = n_rhs`), output feature-major (`out[j·B + c]`) — the batched
+    /// scoring pass (FaSTGLZ). One read of the design serves all `B`
+    /// sibling fits. Routed through the kernel engine exactly like
+    /// [`Design::matvec_t`]: PANEL-aligned column splits for dense,
+    /// nnz-balanced column chunks for CSC — and because the per-`(j, c)`
+    /// summation order is chunk-independent, the result is bit-identical
+    /// across thread counts *and* to `B` single-RHS `matvec_t` calls.
+    pub fn matmul_t(&self, r: &[f64], n_rhs: usize, out: &mut [f64]) {
+        let work = self.stored_entries().saturating_mul(n_rhs.max(1));
+        let threads = KernelPolicy::global().threads_for(work);
+        self.matmul_t_threads(r, n_rhs, out, threads);
+    }
+
+    /// [`Design::matmul_t`] with an explicit thread count (1 = the blocked
+    /// serial kernel). Benches and bit-invariance tests call this
+    /// directly.
+    pub fn matmul_t_threads(&self, r: &[f64], n_rhs: usize, out: &mut [f64], threads: usize) {
+        assert_eq!(r.len(), self.nrows() * n_rhs);
+        assert_eq!(out.len(), self.ncols() * n_rhs);
+        if n_rhs == 0 {
+            return;
+        }
+        match self {
+            Design::Dense(m) => {
+                let col_ranges = parallel::even_chunks_aligned(
+                    m.ncols(),
+                    parallel::chunk_count(threads),
+                    PANEL,
+                );
+                // output ranges are the column ranges scaled by the panel
+                // width (feature-major layout keeps a column split
+                // contiguous in the output)
+                let out_ranges: Vec<std::ops::Range<usize>> = col_ranges
+                    .iter()
+                    .map(|c| c.start * n_rhs..c.end * n_rhs)
+                    .collect();
+                parallel::par_slices(out, &out_ranges, threads, |k, _, sub| {
+                    m.matmul_t_panel(r, n_rhs, col_ranges[k].clone(), sub)
+                });
+            }
+            Design::Sparse(m) => {
+                let col_ranges =
+                    parallel::balanced_chunks(m.indptr(), parallel::chunk_count(threads));
+                let out_ranges: Vec<std::ops::Range<usize>> = col_ranges
+                    .iter()
+                    .map(|c| c.start * n_rhs..c.end * n_rhs)
+                    .collect();
+                parallel::par_slices(out, &out_ranges, threads, |k, _, sub| {
+                    m.matmul_t_range(r, n_rhs, col_ranges[k].clone(), sub)
+                });
+            }
+        }
+    }
+
+    /// Weighted axpy over stored entries: `r_i += c · X_ij · w_i`. The
+    /// panel-resident residual update for row-masked batch members (CV
+    /// folds batched as 0/1 row weights): masked-out rows contribute
+    /// `±0.0` and therefore stay exactly zero in the panel column.
+    #[inline]
+    pub fn col_axpy_weighted(&self, j: usize, c: f64, w: &[f64], r: &mut [f64]) {
+        match self {
+            Design::Dense(m) => {
+                let col = m.col(j);
+                for (i, &x) in col.iter().enumerate() {
+                    r[i] += c * x * w[i];
+                }
+            }
+            Design::Sparse(m) => {
+                let (rows, vals) = m.col(j);
+                for (&i, &v) in rows.iter().zip(vals.iter()) {
+                    let i = i as usize;
+                    r[i] += c * v * w[i];
+                }
+            }
+        }
+    }
+
+    /// Panel axpy: commit per-fit CD deltas for column `j` into every
+    /// panel column at once — `R[:, c] += coefs[c] · X[:, j]` for each
+    /// `c` with a nonzero delta. One design-column read serves all `B`
+    /// residual updates; per panel column this is exactly
+    /// [`Design::col_axpy`], so batched commits match scalar commits
+    /// bitwise.
+    pub fn col_axpy_panel(&self, j: usize, coefs: &[f64], panel: &mut [f64]) {
+        let n = self.nrows();
+        assert_eq!(panel.len(), n * coefs.len());
+        for (c, &a) in coefs.iter().enumerate() {
+            if a != 0.0 {
+                self.col_axpy(j, a, &mut panel[c * n..(c + 1) * n]);
+            }
+        }
+    }
+
     /// `Xᵀ r` restricted to a subset of columns (the working set); writes
     /// `out[k] = X[:, ws[k]]ᵀ r`. Parallelised over nnz-balanced slices of
     /// `ws` when the restricted pass is big enough.
@@ -421,6 +515,108 @@ mod tests {
         for dd in [&d, &s] {
             dd.matvec_t_groups(&r, &[2, 0, 1], &mut perm);
             assert_eq!(perm, vec![full[2], full[0], full[1]]);
+        }
+    }
+
+    /// Deterministic LCG fixture (no rand dep): n×p dense + a sparsified
+    /// CSC twin, plus a B-column residual panel.
+    fn batch_fixture(n: usize, p: usize, b: usize) -> (Design, Design, Vec<f64>) {
+        let mut s = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((s >> 11) as f64 / (1u64 << 53) as f64) * 2.0 - 1.0
+        };
+        let mut rows = Vec::with_capacity(n);
+        let mut trips = Vec::new();
+        for i in 0..n {
+            let mut row = Vec::with_capacity(p);
+            for j in 0..p {
+                let v = next();
+                // sparsify the twin but keep values identical where kept
+                let keep = (i + 3 * j) % 4 != 0;
+                let dv = if keep { v } else { 0.0 };
+                row.push(dv);
+                if dv != 0.0 {
+                    trips.push((i, j, dv));
+                }
+            }
+            rows.push(row);
+        }
+        let dense = DenseMatrix::from_rows(&rows);
+        let sparse = CscMatrix::from_triplets(n, p, &trips);
+        let panel: Vec<f64> = (0..n * b).map(|_| next()).collect();
+        (Design::Dense(dense), Design::Sparse(sparse), panel)
+    }
+
+    #[test]
+    fn matmul_t_matches_per_column_matvec_t_bitwise() {
+        let (n, p, b) = (23, 19, 5); // odd p exercises the panel remainder
+        let (d, s, panel) = batch_fixture(n, p, b);
+        for design in [&d, &s] {
+            let mut out = vec![0.0; p * b];
+            design.matmul_t_threads(&panel, b, &mut out, 1);
+            for c in 0..b {
+                let mut single = vec![0.0; p];
+                design.matvec_t_threads(&panel[c * n..(c + 1) * n], &mut single, 1);
+                for j in 0..p {
+                    assert_eq!(
+                        out[j * b + c].to_bits(),
+                        single[j].to_bits(),
+                        "multi-RHS ({j},{c}) drifted from single-RHS"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_t_bit_identical_across_thread_counts() {
+        let (n, p, b) = (31, 27, 3);
+        let (d, s, panel) = batch_fixture(n, p, b);
+        for design in [&d, &s] {
+            let mut base = vec![0.0; p * b];
+            design.matmul_t_threads(&panel, b, &mut base, 1);
+            for threads in [2usize, 3, 4, 8] {
+                let mut out = vec![0.0; p * b];
+                design.matmul_t_threads(&panel, b, &mut out, threads);
+                for (k, (a, bb)) in base.iter().zip(out.iter()).enumerate() {
+                    assert_eq!(a.to_bits(), bb.to_bits(), "entry {k} at {threads} threads");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_axpy_and_weighted_axpy_match_scalar_paths() {
+        let (n, p, b) = (17, 9, 4);
+        let (d, s, panel) = batch_fixture(n, p, b);
+        let coefs = [0.7, 0.0, -1.3, 2.1];
+        for design in [&d, &s] {
+            let mut got = panel.clone();
+            design.col_axpy_panel(3, &coefs, &mut got);
+            let mut want = panel.clone();
+            for (c, &a) in coefs.iter().enumerate() {
+                if a != 0.0 {
+                    design.col_axpy(3, a, &mut want[c * n..(c + 1) * n]);
+                }
+            }
+            for (x, y) in got.iter().zip(want.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            // all-ones weights reduce the weighted axpy to (c·x)·1.0 ≡ c·x
+            let ones = vec![1.0; n];
+            let mut r1 = vec![0.25; n];
+            let mut r2 = vec![0.25; n];
+            design.col_axpy_weighted(2, -0.9, &ones, &mut r1);
+            design.col_axpy(2, -0.9, &mut r2);
+            for (x, y) in r1.iter().zip(r2.iter()) {
+                assert!((x - y).abs() < 1e-15);
+            }
+            // zero weights leave rows untouched
+            let zeros = vec![0.0; n];
+            let mut r3 = vec![0.0; n];
+            design.col_axpy_weighted(2, 5.0, &zeros, &mut r3);
+            assert!(r3.iter().all(|&v| v == 0.0));
         }
     }
 

@@ -193,6 +193,45 @@ impl CscMatrix {
         }
     }
 
+    /// Multi-RHS `Xᵀ R` over the column range `cols`: `R` is a residual
+    /// panel of `n_rhs` column-major vectors (`R[:, c] = r[c·n ..
+    /// (c+1)·n]`) and the output is feature-major
+    /// (`out[(j − cols.start)·n_rhs + c] = X[:, j]ᵀ R[:, c]`) — the CSC
+    /// side of the batched-fit scoring kernel. Each stored `(i, v)` is
+    /// loaded once and applied to all `n_rhs` panel columns.
+    ///
+    /// Bitwise contract: for every `(j, c)` the nonzeros accumulate in
+    /// ascending row order into a single accumulator, exactly as
+    /// [`CscMatrix::col_dot`] does, so batched scoring matches
+    /// single-fit scoring bit-for-bit regardless of the nnz-balanced
+    /// thread split.
+    pub fn matmul_t_range(
+        &self,
+        r: &[f64],
+        n_rhs: usize,
+        cols: std::ops::Range<usize>,
+        out: &mut [f64],
+    ) {
+        assert_eq!(r.len(), self.n * n_rhs);
+        assert!(cols.end <= self.p);
+        assert_eq!(out.len(), (cols.end - cols.start) * n_rhs);
+        if n_rhs == 1 {
+            return self.matvec_t_range(r, cols, out);
+        }
+        let n = self.n;
+        for (idx, j) in cols.clone().enumerate() {
+            let (rows, vals) = self.col(j);
+            let o = &mut out[idx * n_rhs..(idx + 1) * n_rhs];
+            o.fill(0.0);
+            for (&i, &v) in rows.iter().zip(vals.iter()) {
+                let i = i as usize;
+                for (c, oc) in o.iter_mut().enumerate() {
+                    *oc += v * r[c * n + i];
+                }
+            }
+        }
+    }
+
     /// Column pointers (nnz-balanced chunking in the kernel engine).
     #[inline]
     pub fn indptr(&self) -> &[usize] {

@@ -39,6 +39,11 @@ fn dispatch(args: &mut Args) -> Result<()> {
     if let Some(t) = args.take_threads()? {
         skglm::linalg::parallel::set_thread_budget(t);
     }
+    // global many-fit batching gate: --batch > SKGLM_BATCH > on (see
+    // ARCHITECTURE.md §Batched fits); the library reads the env var
+    if let Some(on) = args.take_batch()? {
+        std::env::set_var("SKGLM_BATCH", if on { "1" } else { "0" });
+    }
     match args.subcommand() {
         Some("solve") => cmd_solve(args),
         Some("path") => cmd_path(args),
@@ -70,7 +75,7 @@ const USAGE: &str = "usage:
               [--inner auto|residual|gram] \\
               [--points 20] [--min-ratio 1e-3] [--gamma 3.0] [--small] [--seed 42]
   skglm cv    --dataset <name> [--folds 5] [--points 15] [--workers 4] [--small]
-  skglm exp   <fig1..fig10|table1|table2|pathsched|kernels|glms|groups|gram|analysis|scenarios|summary|all> [--full]
+  skglm exp   <fig1..fig10|table1|table2|pathsched|kernels|glms|groups|gram|batch|analysis|scenarios|summary|all> [--full]
   skglm conform [--smoke] [--filter <substr>] [--corpus <scenarios.jsonl>]
   skglm analyze [--root <repo>] [--quiet]
   skglm serve [--listen 127.0.0.1:7878] [--workers 4] [--queue 32] \\
@@ -96,7 +101,11 @@ const USAGE: &str = "usage:
   cached working-set Grams), or cost-model auto dispatch (the default;
   non-quadratic datafits always run residual). every subcommand accepts
   --threads N (kernel + worker thread budget; overrides the SKGLM_THREADS
-  env var; defaults to hardware parallelism). `exp summary` rolls every
+  env var; defaults to hardware parallelism) and --batch on|off (many-fit
+  batching: CV folds and fusible sibling jobs solved as one multi-RHS
+  panel batch; overrides the SKGLM_BATCH env var; defaults to on — each
+  batch member is bit-identical to the scalar solver, so the switch is
+  for A/B benchmarking). `exp summary` rolls every
   repo-root BENCH_*.json into BENCH_SUMMARY.json. `conform` runs the
   declarative scenario conformance corpus (scenarios.jsonl at the repo
   root when present, else the built-in corpus) — every datafit × penalty

@@ -1,0 +1,149 @@
+//! Closed penalty universe for the batched many-fit engine (FaSTGLZ).
+//!
+//! Batched members live in one `Vec`, so their penalties must share a
+//! concrete type; a two-arm enum keeps the CD hot loop monomorphic and
+//! inlinable (same argument as [`crate::linalg::Design`]). Only the
+//! separable scalar penalties with a per-λ closed form that the batch
+//! scheduler fuses today are included — a penalty opts in by overriding
+//! [`Penalty::as_batchable`].
+
+use super::{L1, Mcp, Penalty};
+
+/// A batchable separable penalty: the member-fit penalty type of the
+/// batched solver and the scheduler's fusion layer. `with_lambda`
+/// re-anchors the regularisation level while preserving every other
+/// hyper-parameter — the λ-grid continuation hook.
+#[derive(Clone, Debug)]
+pub enum BatchPenalty {
+    L1(L1),
+    Mcp(Mcp),
+}
+
+impl BatchPenalty {
+    /// Same penalty family/shape at a different λ (warm-start
+    /// continuation along a shared ratio grid).
+    pub fn with_lambda(&self, lambda: f64) -> BatchPenalty {
+        match self {
+            BatchPenalty::L1(_) => BatchPenalty::L1(L1::new(lambda)),
+            BatchPenalty::Mcp(p) => BatchPenalty::Mcp(Mcp::new(lambda, p.gamma)),
+        }
+    }
+
+    /// Current regularisation level.
+    pub fn lambda(&self) -> f64 {
+        match self {
+            BatchPenalty::L1(p) => p.lambda,
+            BatchPenalty::Mcp(p) => p.lambda,
+        }
+    }
+}
+
+impl Penalty for BatchPenalty {
+    #[inline]
+    fn value(&self, beta_j: f64, j: usize) -> f64 {
+        match self {
+            BatchPenalty::L1(p) => p.value(beta_j, j),
+            BatchPenalty::Mcp(p) => p.value(beta_j, j),
+        }
+    }
+
+    #[inline]
+    fn prox(&self, v: f64, step: f64, j: usize) -> f64 {
+        match self {
+            BatchPenalty::L1(p) => p.prox(v, step, j),
+            BatchPenalty::Mcp(p) => p.prox(v, step, j),
+        }
+    }
+
+    #[inline]
+    fn subdiff_distance(&self, beta_j: f64, grad_j: f64, j: usize) -> f64 {
+        match self {
+            BatchPenalty::L1(p) => p.subdiff_distance(beta_j, grad_j, j),
+            BatchPenalty::Mcp(p) => p.subdiff_distance(beta_j, grad_j, j),
+        }
+    }
+
+    #[inline]
+    fn in_gsupp(&self, beta_j: f64) -> bool {
+        match self {
+            BatchPenalty::L1(p) => p.in_gsupp(beta_j),
+            BatchPenalty::Mcp(p) => p.in_gsupp(beta_j),
+        }
+    }
+
+    fn is_convex(&self) -> bool {
+        match self {
+            BatchPenalty::L1(p) => p.is_convex(),
+            BatchPenalty::Mcp(p) => p.is_convex(),
+        }
+    }
+
+    fn use_cd_score(&self) -> bool {
+        match self {
+            BatchPenalty::L1(p) => p.use_cd_score(),
+            BatchPenalty::Mcp(p) => p.use_cd_score(),
+        }
+    }
+
+    fn validate_step(&self, step: f64) {
+        match self {
+            BatchPenalty::L1(p) => p.validate_step(step),
+            BatchPenalty::Mcp(p) => p.validate_step(step),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            BatchPenalty::L1(p) => p.name(),
+            BatchPenalty::Mcp(p) => p.name(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delegates_bitwise_to_wrapped_penalty() {
+        let l1 = L1::new(0.7);
+        let mcp = Mcp::new(0.7, 3.0);
+        let bl1 = BatchPenalty::L1(l1.clone());
+        let bmcp = BatchPenalty::Mcp(mcp.clone());
+        for &v in &[-2.0, -0.3, 0.0, 0.5, 4.0] {
+            assert_eq!(bl1.prox(v, 1.0, 0).to_bits(), l1.prox(v, 1.0, 0).to_bits());
+            assert_eq!(
+                bmcp.prox(v, 1.0, 0).to_bits(),
+                mcp.prox(v, 1.0, 0).to_bits()
+            );
+            assert_eq!(bl1.value(v, 0).to_bits(), l1.value(v, 0).to_bits());
+            assert_eq!(
+                bmcp.subdiff_distance(v, 0.3, 0).to_bits(),
+                mcp.subdiff_distance(v, 0.3, 0).to_bits()
+            );
+        }
+        assert_eq!(bl1.name(), "l1");
+        assert_eq!(bmcp.name(), "mcp");
+        assert!(bl1.is_convex());
+        assert!(!bmcp.is_convex());
+    }
+
+    #[test]
+    fn with_lambda_preserves_shape() {
+        let b = BatchPenalty::Mcp(Mcp::new(1.0, 3.0));
+        let b2 = b.with_lambda(0.25);
+        assert_eq!(b2.lambda(), 0.25);
+        match b2 {
+            BatchPenalty::Mcp(p) => assert_eq!(p.gamma, 3.0),
+            _ => panic!("family changed"),
+        }
+        assert_eq!(b.with_lambda(0.5).lambda(), 0.5);
+    }
+
+    #[test]
+    fn as_batchable_roundtrip() {
+        assert!(L1::new(1.0).as_batchable().is_some());
+        assert!(Mcp::new(1.0, 3.0).as_batchable().is_some());
+        assert!(crate::penalty::Scad::new(1.0, 3.7).as_batchable().is_none());
+    }
+}

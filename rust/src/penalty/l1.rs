@@ -63,6 +63,10 @@ impl Penalty for L1 {
     fn name(&self) -> &'static str {
         "l1"
     }
+
+    fn as_batchable(&self) -> Option<super::BatchPenalty> {
+        Some(super::BatchPenalty::L1(self.clone()))
+    }
 }
 
 #[cfg(test)]

@@ -111,6 +111,10 @@ impl Penalty for Mcp {
     fn name(&self) -> &'static str {
         "mcp"
     }
+
+    fn as_batchable(&self) -> Option<super::BatchPenalty> {
+        Some(super::BatchPenalty::Mcp(self.clone()))
+    }
 }
 
 #[cfg(test)]

@@ -9,6 +9,7 @@
 //! q<1 — Appendix C, Example 1) opt into the fixed-point-violation score
 //! `score^cd` (Eq. 24) via [`Penalty::use_cd_score`].
 
+pub mod batch;
 pub mod block;
 pub mod box_ind;
 pub mod l1;
@@ -18,6 +19,7 @@ pub mod mcp;
 pub mod scad;
 pub mod weighted_l1;
 
+pub use batch::BatchPenalty;
 pub use block::{
     BlockL21, BlockMcp, BlockPenalty, BlockScad, GroupLasso, GroupMcp, GroupScad,
     WeightedGroupLasso,
@@ -71,6 +73,14 @@ pub trait Penalty: Clone + Send + Sync {
     /// `Σ_j g_j(β_j)`.
     fn value_sum(&self, beta: &[f64]) -> f64 {
         beta.iter().enumerate().map(|(j, &b)| self.value(b, j)).sum()
+    }
+
+    /// Batched-solver opt-in: penalties the many-fit engine can carry as
+    /// a [`BatchPenalty`] member return their enum form (the scheduler's
+    /// fusion layer fuses only jobs whose penalties are batchable).
+    /// Position-dependent or block penalties stay `None`.
+    fn as_batchable(&self) -> Option<BatchPenalty> {
+        None
     }
 }
 

@@ -1,0 +1,1247 @@
+//! Batched many-fit engine (FaSTGLZ): solve `B` sibling quadratic fits on
+//! **one** design simultaneously, so every read of `X` is amortized over
+//! all `B` fits.
+//!
+//! The members of a batch share the design and target but differ in
+//! penalty (λ, family), row weights (CV folds as 0/1 masks) and warm
+//! start. Their residuals live side by side in a column-major `n × B`
+//! **panel**; the outer scoring pass — the O(n·p) hot spot — becomes one
+//! multi-RHS `XᵀR` panel kernel ([`Design::matmul_t`]) instead of `B`
+//! separate `Xᵀr` passes, and the inner CD epochs interleave the members
+//! column-by-column so each working-set column is loaded once per sweep
+//! for all members ([`Design::col_axpy_panel`] commits the deltas).
+//!
+//! Parity contract (tested): every member follows **exactly** the scalar
+//! solver's trajectory — same summation orders in the panel kernels, same
+//! CD update arithmetic, same Anderson proposals and guards, same gated
+//! stationarity checks — so an unmasked member's `beta` is bit-identical
+//! to a standalone [`super::skglm::solve`] at the same options, and the
+//! whole batch is bit-identical across kernel thread counts.
+//!
+//! Retirement: members leave the batch independently — when their KKT
+//! certificate passes, their `JobCtl` cancel flag is raised, or their
+//! deadline expires (deadline partials). A retiring member's panel column
+//! is swap-removed, shrinking every subsequent panel pass; the rest of
+//! the batch is never aborted.
+
+use super::anderson::Anderson;
+use super::cd;
+use super::gram::{gram_inner_solver, EngineDispatch, InnerEngine};
+use super::inner::{
+    coordinate_scores_into, gather, try_accept, ws_score_max, InnerProfile, InnerStats,
+    FORCE_CHECK_EVERY,
+};
+use super::outer::{select_working_set, solve_outer, BlockCoords};
+use super::skglm::{Certificate, FitResult, HistoryPoint, SolverOpts, StopReason};
+use crate::datafit::Datafit;
+use crate::linalg::gram::GramCache;
+use crate::linalg::Design;
+use crate::penalty::{BatchPenalty, Penalty};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Quadratic datafit with optional per-row weights — the member datafit
+/// of the batched engine. With `weights = None` it reproduces
+/// [`crate::datafit::Quadratic`] **bitwise** (same Lipschitz pass, same
+/// state arithmetic). With 0/1 weights it is the fold-restricted loss
+/// `‖w ⊙ (Xβ − y)‖² / (2·Σw)`: masked rows stay exactly zero in the
+/// state, so a masked fit on the full design follows the same iterates as
+/// a scalar fit on the row-subset design (up to column-norm summation
+/// order).
+#[derive(Clone, Debug)]
+pub struct MaskedQuadratic {
+    lipschitz: Vec<f64>,
+    inv_n: f64,
+    weights: Option<Arc<Vec<f64>>>,
+}
+
+impl MaskedQuadratic {
+    pub fn new(weights: Option<Arc<Vec<f64>>>) -> Self {
+        Self { lipschitz: Vec::new(), inv_n: 0.0, weights }
+    }
+
+    /// `1/n_eff` — the gradient scale the batched scoring pass applies to
+    /// the raw panel dot products.
+    #[inline]
+    pub fn inv_n(&self) -> f64 {
+        self.inv_n
+    }
+
+    #[inline]
+    pub fn is_masked(&self) -> bool {
+        self.weights.is_some()
+    }
+}
+
+impl Datafit for MaskedQuadratic {
+    fn init(&mut self, design: &Design, y: &[f64]) {
+        assert_eq!(design.nrows(), y.len());
+        match &self.weights {
+            None => {
+                // exact Quadratic::init arithmetic
+                let n = design.nrows() as f64;
+                self.inv_n = 1.0 / n;
+                self.lipschitz = design.col_sq_norms().iter().map(|s| s / n).collect();
+            }
+            Some(w) => {
+                assert_eq!(w.len(), design.nrows());
+                let n_eff: f64 = w.iter().sum();
+                assert!(n_eff > 0.0, "row weights must keep at least one row");
+                self.inv_n = 1.0 / n_eff;
+                self.lipschitz = (0..design.ncols())
+                    .map(|j| design.col_weighted_sq_norm(j, w) / n_eff)
+                    .collect();
+            }
+        }
+    }
+
+    fn init_cached(&mut self, design: &Design, y: &[f64], col_sq_norms: Option<&[f64]>) {
+        match (&self.weights, col_sq_norms) {
+            (None, Some(norms)) => {
+                // exact Quadratic::init_cached arithmetic
+                assert_eq!(design.nrows(), y.len());
+                assert_eq!(norms.len(), design.ncols());
+                let n = design.nrows() as f64;
+                self.inv_n = 1.0 / n;
+                self.lipschitz = norms.iter().map(|s| s / n).collect();
+            }
+            // masked members can't reuse unweighted norms
+            _ => self.init(design, y),
+        }
+    }
+
+    fn lipschitz(&self) -> &[f64] {
+        &self.lipschitz
+    }
+
+    /// State = `w ⊙ (Xβ − y)` (plain residual when unmasked).
+    fn init_state(&self, design: &Design, y: &[f64], beta: &[f64]) -> Vec<f64> {
+        let mut s = vec![0.0; design.nrows()];
+        design.matvec(beta, &mut s);
+        for (r, &yi) in s.iter_mut().zip(y.iter()) {
+            *r -= yi;
+        }
+        if let Some(w) = &self.weights {
+            for (r, &wi) in s.iter_mut().zip(w.iter()) {
+                *r *= wi;
+            }
+        }
+        s
+    }
+
+    #[inline]
+    fn update_state(&self, design: &Design, j: usize, delta: f64, state: &mut [f64]) {
+        match &self.weights {
+            None => design.col_axpy(j, delta, state),
+            Some(w) => design.col_axpy_weighted(j, delta, w, state),
+        }
+    }
+
+    fn value(&self, _y: &[f64], _beta: &[f64], state: &[f64]) -> f64 {
+        0.5 * self.inv_n * crate::linalg::sq_nrm2(state)
+    }
+
+    #[inline]
+    fn grad_j(&self, design: &Design, _y: &[f64], state: &[f64], _beta: &[f64], j: usize) -> f64 {
+        // masked rows are zero in the state, so no mask is needed here
+        self.inv_n * design.col_dot(j, state)
+    }
+
+    fn grad_full(
+        &self,
+        design: &Design,
+        _y: &[f64],
+        state: &[f64],
+        _beta: &[f64],
+        out: &mut [f64],
+    ) {
+        design.matvec_t(state, out);
+        for g in out.iter_mut() {
+            *g *= self.inv_n;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "quadratic"
+    }
+
+    /// The Gram engine's recursion maintains `g += δ·c·(XᵀX)_row`, which
+    /// is only exact for the **unweighted** residual — masked members must
+    /// stay on the residual engine (documented fusion rule).
+    fn residual_quadratic_scale(&self) -> Option<f64> {
+        match &self.weights {
+            None => Some(self.inv_n),
+            Some(_) => None,
+        }
+    }
+}
+
+/// One member of a batch: its penalty (λ included), optional 0/1 row
+/// weights (CV folds), warm start, and per-member controls (a scheduler
+/// `JobCtl`'s cancel flag / deadline — retirement granularity).
+#[derive(Clone, Debug, Default)]
+pub struct BatchFit {
+    pub penalty: Option<BatchPenalty>,
+    pub row_weights: Option<Arc<Vec<f64>>>,
+    pub beta0: Option<Vec<f64>>,
+    pub ws0: Option<usize>,
+    pub cancel: Option<Arc<AtomicBool>>,
+    pub deadline: Option<Instant>,
+}
+
+impl BatchFit {
+    pub fn new(penalty: BatchPenalty) -> Self {
+        Self { penalty: Some(penalty), ..Default::default() }
+    }
+
+    pub fn with_row_weights(mut self, w: Arc<Vec<f64>>) -> Self {
+        self.row_weights = Some(w);
+        self
+    }
+
+    /// Warm start (λ-grid continuation): previous β and working-set size.
+    pub fn warm(mut self, beta0: Vec<f64>, ws0: Option<usize>) -> Self {
+        self.beta0 = Some(beta0);
+        self.ws0 = ws0;
+        self
+    }
+
+    pub fn with_cancel(mut self, flag: Arc<AtomicBool>) -> Self {
+        self.cancel = Some(flag);
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// Per-member outcome: the scalar-equivalent [`FitResult`] plus why the
+/// member stopped early, if it did (`None` = ran to its own certificate
+/// or to the shared outer-iteration limit).
+#[derive(Clone, Debug)]
+pub struct BatchMemberResult {
+    pub result: FitResult,
+    pub stopped: Option<StopReason>,
+}
+
+/// Outcome of a batched solve: per-member results in input order plus
+/// batch-level attribution (the panel-kernel share lives in
+/// `profile.panel_flops`).
+#[derive(Clone, Debug)]
+pub struct BatchOutcome {
+    pub members: Vec<BatchMemberResult>,
+    /// outer iterations of the shared batch loop
+    pub n_outer: usize,
+    /// whole-batch profile: merged member inner profiles + outer panel
+    /// passes
+    pub profile: InnerProfile,
+}
+
+/// Per-member λ_max via **one** multi-RHS panel pass: column `c` of the
+/// panel is `w_c ⊙ y` and the anchor is `max_j |X_jᵀ(w_c ⊙ y)| / Σw_c`
+/// (`w = 1` when unmasked — the usual `max|Xᵀy|/n`). This is the batched
+/// CV path's per-fold leakage-safe λ_max computation.
+/// Is many-fit batching enabled for this process? Reads `SKGLM_BATCH`
+/// (also set by the `--batch` CLI flag): unset or anything but
+/// `0`/`off`/`false` means **on**. Each batch member is bit-identical to
+/// the scalar solver, so the switch exists for A/B benchmarking and
+/// incident bisection, not correctness.
+pub fn batching_enabled() -> bool {
+    match std::env::var("SKGLM_BATCH") {
+        Ok(v) => {
+            let v = v.trim().to_ascii_lowercase();
+            !(v == "0" || v == "off" || v == "false")
+        }
+        Err(_) => true,
+    }
+}
+
+pub fn batch_lambda_max(
+    design: &Design,
+    y: &[f64],
+    weights: &[Option<Arc<Vec<f64>>>],
+) -> Vec<f64> {
+    let n = design.nrows();
+    let p = design.ncols();
+    let b = weights.len();
+    if b == 0 {
+        return Vec::new();
+    }
+    let mut panel = vec![0.0; n * b];
+    let mut n_eff = vec![0.0f64; b];
+    for (c, w) in weights.iter().enumerate() {
+        let col = &mut panel[c * n..(c + 1) * n];
+        match w {
+            None => {
+                col.copy_from_slice(y);
+                n_eff[c] = n as f64;
+            }
+            Some(w) => {
+                assert_eq!(w.len(), n);
+                for (ci, (&wi, &yi)) in col.iter_mut().zip(w.iter().zip(y.iter())) {
+                    *ci = wi * yi;
+                }
+                n_eff[c] = w.iter().sum();
+                assert!(n_eff[c] > 0.0, "row weights must keep at least one row");
+            }
+        }
+    }
+    let mut xty = vec![0.0; p * b];
+    design.matmul_t(&panel, b, &mut xty);
+    (0..b)
+        .map(|c| {
+            let mut m = 0.0f64;
+            for j in 0..p {
+                m = m.max(xty[j * b + c].abs());
+            }
+            m / n_eff[c]
+        })
+        .collect()
+}
+
+/// Internal per-member solver state.
+struct Member {
+    penalty: BatchPenalty,
+    datafit: MaskedQuadratic,
+    beta: Vec<f64>,
+    /// working set selected by this member's last scoring pass
+    ws: Vec<usize>,
+    ws_size: usize,
+    inner_tol: f64,
+    dispatch: EngineDispatch,
+    cancel: Option<Arc<AtomicBool>>,
+    deadline: Option<Instant>,
+    history: Vec<HistoryPoint>,
+    n_outer: usize,
+    n_epochs: usize,
+    accepted: usize,
+    rejected: usize,
+    profile: InnerProfile,
+    /// per-feature score scratch (clobbered by selection)
+    scores: Vec<f64>,
+    done: Option<BatchMemberResult>,
+}
+
+/// The batched [`BlockCoords`] instantiation driven by the shared
+/// [`solve_outer`] loop. `live` maps panel slots to member indices; a
+/// member's residual/state is the panel column of its slot.
+struct BatchedCoords<'a> {
+    design: &'a Design,
+    y: &'a [f64],
+    tol: f64,
+    inner_tol_ratio: f64,
+    use_ws: bool,
+    members: Vec<Member>,
+    /// slot → member index (panel column order); retirement swap-removes
+    live: Vec<usize>,
+    /// column-major n × live.len() residual panel
+    panel: Vec<f64>,
+    /// feature-major p × live.len() panel-gradient scratch
+    grads: Vec<f64>,
+    /// union-membership mask over features (the outer working set)
+    in_union: Vec<bool>,
+    all_features: Vec<usize>,
+    gram: Option<Arc<GramCache>>,
+    start: Instant,
+    /// batch-level extras not attributable to one member (panel passes)
+    profile: InnerProfile,
+}
+
+/// Per-member context for one interleaved residual inner solve.
+struct ResCtx {
+    slot: usize,
+    member: usize,
+    ws: Vec<usize>,
+    /// membership of `union[pos]` in this member's ws
+    ws_mask: Vec<bool>,
+    accel: Option<Anderson>,
+    ws_beta: Vec<f64>,
+    state_snaps: Vec<Vec<f64>>,
+    epochs_since_check: usize,
+    epoch_flops: f64,
+    max_move: f64,
+    stats: InnerStats,
+}
+
+fn push_snap(snaps: &mut Vec<Vec<f64>>, state: &[f64], cap: usize) {
+    if snaps.len() == cap {
+        snaps.remove(0);
+    }
+    snaps.push(state.to_vec());
+}
+
+impl BatchedCoords<'_> {
+    /// Retire members whose cancel flag is raised or deadline has passed
+    /// — the per-fit-retirement granularity of `JobCtl` honoring.
+    /// Descending slot order keeps swap-remove indices valid.
+    fn retire_stopped(&mut self) {
+        let mut slot = self.live.len();
+        while slot > 0 {
+            slot -= 1;
+            let m = &self.members[self.live[slot]];
+            let reason = if m
+                .cancel
+                .as_ref()
+                .map(|c| c.load(Ordering::Relaxed))
+                .unwrap_or(false)
+            {
+                Some(StopReason::Cancelled)
+            } else if m.deadline.map(|d| Instant::now() >= d).unwrap_or(false) {
+                Some(StopReason::Deadline)
+            } else {
+                None
+            };
+            if reason.is_some() {
+                self.retire_slot(slot, reason, false);
+            }
+        }
+    }
+
+    /// Finalize a member: compute the scalar-identical final certificate
+    /// (full [`coordinate_scores_into`] pass — exactly the scalar
+    /// `final_kkt`), record its [`FitResult`], and free its panel column
+    /// by swap-removing the slot. `score_converged` mirrors the scalar
+    /// loop's converged-by-scoring-pass break: the final certificate may
+    /// land a hair above tol (different summation order) and the fit
+    /// still counts as converged.
+    fn retire_slot(&mut self, slot: usize, stopped: Option<StopReason>, score_converged: bool) {
+        let n = self.design.nrows();
+        let mi = self.live[slot];
+        {
+            let m = &mut self.members[mi];
+            let state = &self.panel[slot * n..(slot + 1) * n];
+            let t_score = Instant::now();
+            let mut fs = vec![0.0; self.all_features.len()];
+            coordinate_scores_into(
+                self.design,
+                self.y,
+                &m.datafit,
+                &m.penalty,
+                &m.beta,
+                state,
+                &self.all_features,
+                &mut fs,
+            );
+            let kkt = fs.iter().fold(0.0f64, |a, &s| a.max(s));
+            m.profile.score_secs += t_score.elapsed().as_secs_f64();
+            let objective = cd::objective(&m.datafit, &m.penalty, self.y, &m.beta, state);
+            m.done = Some(BatchMemberResult {
+                result: FitResult {
+                    beta: std::mem::take(&mut m.beta),
+                    objective,
+                    kkt,
+                    certificate: Certificate::Stationarity,
+                    n_outer: m.n_outer,
+                    n_epochs: m.n_epochs,
+                    converged: score_converged || kkt <= self.tol,
+                    history: std::mem::take(&mut m.history),
+                    accepted_extrapolations: m.accepted,
+                    rejected_extrapolations: m.rejected,
+                    profile: m.profile,
+                },
+                stopped,
+            });
+        }
+        // free the member's panel column: move the last column into the
+        // vacated slot (mirrors Vec::swap_remove on `live`)
+        let b = self.live.len();
+        if slot != b - 1 {
+            let (head, tail) = self.panel.split_at_mut((b - 1) * n);
+            head[slot * n..(slot + 1) * n].copy_from_slice(&tail[..n]);
+        }
+        self.live.swap_remove(slot);
+        self.panel.truncate((b - 1) * n);
+    }
+
+    /// Retire every remaining live member (budget stop / outer-limit
+    /// exhaustion) so each gets a well-formed partial result.
+    fn finalize(&mut self, stopped: Option<StopReason>) {
+        while !self.live.is_empty() {
+            let slot = self.live.len() - 1;
+            self.retire_slot(slot, stopped, false);
+        }
+    }
+
+    /// Interleaved residual inner solve: one CD epoch sweeps the
+    /// working-set **union** column by column, applying every active
+    /// member's update for that column before moving on — each design
+    /// column is read once per sweep for the whole batch, and unmasked
+    /// members' deltas are committed with one panel axpy. Per member the
+    /// update order, Anderson schedule and gated checks are exactly
+    /// [`super::inner::inner_solver`]'s.
+    fn residual_inner(
+        &mut self,
+        union: &[usize],
+        res_slots: &[usize],
+        opts: &SolverOpts,
+    ) -> Vec<InnerStats> {
+        let design = self.design;
+        let y = self.y;
+        let n = design.nrows();
+        let snap_cap = opts.anderson_m + 1;
+
+        // per-member contexts
+        let mut ctxs: Vec<ResCtx> = Vec::with_capacity(res_slots.len());
+        for &slot in res_slots {
+            let mi = self.live[slot];
+            let m = &self.members[mi];
+            let ws = m.ws.clone();
+            // ws ⊆ union (both sorted): mark membership per union position
+            let mut ws_mask = vec![false; union.len()];
+            let mut k = 0usize;
+            for (pos, &j) in union.iter().enumerate() {
+                if k < ws.len() && ws[k] == j {
+                    ws_mask[pos] = true;
+                    k += 1;
+                }
+            }
+            debug_assert_eq!(k, ws.len(), "member ws must be a subset of the union");
+            let mut ctx = ResCtx {
+                slot,
+                member: mi,
+                epoch_flops: 2.0 * design.subset_stored_entries(&ws) as f64,
+                ws_beta: vec![0.0; ws.len()],
+                ws,
+                ws_mask,
+                accel: if opts.anderson_m >= 2 { Some(Anderson::new(opts.anderson_m)) } else { None },
+                state_snaps: Vec::new(),
+                epochs_since_check: 0,
+                max_move: 0.0,
+                stats: InnerStats::default(),
+            };
+            // seed the Anderson buffer with the entry point
+            if let Some(acc) = ctx.accel.as_mut() {
+                gather(&self.members[mi].beta, &ctx.ws, &mut ctx.ws_beta);
+                acc.push(&ctx.ws_beta);
+                push_snap(&mut ctx.state_snaps, &self.panel[slot * n..(slot + 1) * n], snap_cap);
+            }
+            ctxs.push(ctx);
+        }
+
+        let mut active: Vec<usize> = (0..ctxs.len()).collect();
+        // per-slot delta scratch for the panel axpy commit
+        let mut deltas = vec![0.0f64; self.live.len()];
+
+        for epoch in 1..=opts.max_epochs {
+            if active.is_empty() {
+                break;
+            }
+            let t_epoch = Instant::now();
+            let reverse = epoch % 2 == 0;
+            for ci in &active {
+                ctxs[*ci].max_move = 0.0;
+            }
+            // ---- one interleaved CD sweep over the union ----
+            for pos in 0..union.len() {
+                let upos = if reverse { union.len() - 1 - pos } else { pos };
+                let j = union[upos];
+                let mut touched = false;
+                for &ci in &active {
+                    let ctx = &mut ctxs[ci];
+                    if !ctx.ws_mask[upos] {
+                        continue;
+                    }
+                    let s = ctx.slot;
+                    let m = &mut self.members[ctx.member];
+                    let lj = m.datafit.lipschitz()[j];
+                    if lj == 0.0 {
+                        continue;
+                    }
+                    let old = m.beta[j];
+                    let grad = {
+                        let state = &self.panel[s * n..(s + 1) * n];
+                        m.datafit.grad_j(design, y, state, &m.beta, j)
+                    };
+                    let new = m.penalty.prox(old - grad / lj, 1.0 / lj, j);
+                    if new != old {
+                        m.beta[j] = new;
+                        let delta = new - old;
+                        if m.datafit.is_masked() {
+                            // masked commits need the row weights
+                            let state = &mut self.panel[s * n..(s + 1) * n];
+                            m.datafit.update_state(design, j, delta, state);
+                        } else {
+                            deltas[s] = delta;
+                            touched = true;
+                        }
+                        ctx.max_move = ctx.max_move.max(lj * delta.abs());
+                    }
+                }
+                if touched {
+                    // one column read commits every unmasked member's move
+                    design.col_axpy_panel(j, &deltas, &mut self.panel);
+                    for d in deltas.iter_mut() {
+                        *d = 0.0;
+                    }
+                }
+            }
+            let epoch_share = t_epoch.elapsed().as_secs_f64() / active.len() as f64;
+
+            // ---- per-member epoch end: Anderson + gated checks ----
+            let mut idx = active.len();
+            while idx > 0 {
+                idx -= 1;
+                let ci = active[idx];
+                let ctx = &mut ctxs[ci];
+                let m = &mut self.members[ctx.member];
+                let s = ctx.slot;
+                ctx.stats.epochs = epoch;
+                ctx.stats.profile.epoch_secs += epoch_share;
+                ctx.stats.profile.epoch_flops += ctx.epoch_flops;
+                ctx.stats.profile.residual_epochs += 1;
+
+                if let Some(acc) = ctx.accel.as_mut() {
+                    let t_extr = Instant::now();
+                    gather(&m.beta, &ctx.ws, &mut ctx.ws_beta);
+                    let full = acc.push(&ctx.ws_beta);
+                    push_snap(&mut ctx.state_snaps, &self.panel[s * n..(s + 1) * n], snap_cap);
+                    if full && epoch % acc.m() == 0 {
+                        if let Some(c) = acc.coefficients() {
+                            let extr = acc.combine(&c);
+                            // state is affine in β: combine snapshots
+                            let trial_state = acc.combine_series(&c, &ctx.state_snaps);
+                            let state = &mut self.panel[s * n..(s + 1) * n];
+                            if try_accept(
+                                &m.datafit, &m.penalty, y, &mut m.beta, state, &ctx.ws, &extr,
+                                &trial_state,
+                            ) {
+                                ctx.stats.accepted_extrapolations += 1;
+                                acc.clear();
+                                ctx.state_snaps.clear();
+                                gather(&m.beta, &ctx.ws, &mut ctx.ws_beta);
+                                acc.push(&ctx.ws_beta);
+                                push_snap(
+                                    &mut ctx.state_snaps,
+                                    &self.panel[s * n..(s + 1) * n],
+                                    snap_cap,
+                                );
+                            } else {
+                                ctx.stats.rejected_extrapolations += 1;
+                            }
+                        }
+                    }
+                    ctx.stats.profile.extrapolation_secs += t_extr.elapsed().as_secs_f64();
+                }
+
+                ctx.epochs_since_check += 1;
+                let due = ctx.max_move <= m.inner_tol
+                    || ctx.epochs_since_check >= FORCE_CHECK_EVERY
+                    || epoch == opts.max_epochs;
+                if due {
+                    ctx.epochs_since_check = 0;
+                    ctx.stats.score_checks += 1;
+                    let t_score = Instant::now();
+                    let state = &self.panel[s * n..(s + 1) * n];
+                    let score =
+                        ws_score_max(design, y, &m.datafit, &m.penalty, &m.beta, state, &ctx.ws);
+                    ctx.stats.profile.score_secs += t_score.elapsed().as_secs_f64();
+                    ctx.stats.profile.epoch_flops += ctx.epoch_flops / 2.0;
+                    ctx.stats.ws_score = score;
+                    if score <= m.inner_tol {
+                        active.remove(idx);
+                    }
+                }
+            }
+        }
+
+        ctxs.into_iter().map(|c| c.stats).collect()
+    }
+}
+
+impl BlockCoords for BatchedCoords<'_> {
+    fn n_blocks(&self) -> usize {
+        self.design.ncols()
+    }
+
+    fn score_pass(&mut self, scores: &mut [f64]) -> f64 {
+        // per-fit JobCtl honoring happens at retirement granularity: a
+        // cancelled/expired member frees its panel column here, before
+        // the batch pays for another panel pass over it
+        self.retire_stopped();
+        let design = self.design;
+        let n = design.nrows();
+        let p = design.ncols();
+        let b = self.live.len();
+        let mut kkt_live = 0.0f64;
+        if b > 0 {
+            // ---- ONE multi-RHS panel pass for all live members ----
+            self.grads.clear();
+            self.grads.resize(p * b, 0.0);
+            design.matmul_t(&self.panel[..n * b], b, &mut self.grads);
+            let se = design.stored_entries() as f64;
+            self.profile.panel_flops += se * b as f64;
+
+            let mut retire: Vec<usize> = Vec::new();
+            for s in 0..b {
+                let mi = self.live[s];
+                let m = &mut self.members[mi];
+                m.n_outer += 1;
+                m.profile.panel_flops += se;
+                // exact scalar score arithmetic on this member's gradient
+                // column (grads[j·b + s] · inv_n ≡ the scalar grad_full)
+                let inv_n = m.datafit.inv_n();
+                let mut kkt = 0.0f64;
+                for j in 0..p {
+                    let lj = m.datafit.lipschitz()[j];
+                    let sc = if lj == 0.0 {
+                        0.0
+                    } else {
+                        let g = self.grads[j * b + s] * inv_n;
+                        if m.penalty.use_cd_score() {
+                            (m.beta[j] - m.penalty.prox(m.beta[j] - g / lj, 1.0 / lj, j)).abs()
+                        } else {
+                            m.penalty.subdiff_distance(m.beta[j], g, j)
+                        }
+                    };
+                    m.scores[j] = sc;
+                    kkt = kkt.max(sc);
+                }
+                let state = &self.panel[s * n..(s + 1) * n];
+                let objective = cd::objective(&m.datafit, &m.penalty, self.y, &m.beta, state);
+                m.history.push(HistoryPoint {
+                    t: self.start.elapsed().as_secs_f64(),
+                    objective,
+                    kkt,
+                    ws_size: if self.use_ws { m.ws_size.min(p) } else { p },
+                });
+                if kkt <= self.tol {
+                    retire.push(s); // certificate passed: retire
+                    continue;
+                }
+                // per-member working-set growth + selection (scalar rules)
+                if self.use_ws {
+                    let gsupp = (0..p).filter(|&j| m.penalty.in_gsupp(m.beta[j])).count();
+                    m.ws_size = m.ws_size.max(2 * gsupp).min(p);
+                    m.ws =
+                        select_working_set(&mut m.scores, m.ws_size, |j| {
+                            m.penalty.in_gsupp(m.beta[j])
+                        });
+                } else {
+                    m.ws = (0..p).collect();
+                }
+                if m.ws.is_empty() {
+                    retire.push(s);
+                    continue;
+                }
+                m.inner_tol = (self.inner_tol_ratio * kkt).max(0.1 * self.tol);
+                kkt_live = kkt_live.max(kkt);
+            }
+            // descending order keeps swap-remove slots valid
+            for &slot in retire.iter().rev() {
+                self.retire_slot(slot, None, true);
+            }
+        }
+        // outer working set = union of live members' working sets; the
+        // shared solve_outer selection reproduces it exactly via the
+        // ±∞-score trick below
+        self.in_union.fill(false);
+        for &mi in &self.live {
+            for &j in &self.members[mi].ws {
+                self.in_union[j] = true;
+            }
+        }
+        for (j, out) in scores.iter_mut().enumerate() {
+            *out = if self.in_union[j] { 1.0 } else { f64::NEG_INFINITY };
+        }
+        // all-retired ⇒ 0.0 ⇒ the shared loop stops converged
+        if self.live.is_empty() {
+            0.0
+        } else {
+            kkt_live
+        }
+    }
+
+    fn objective(&self) -> f64 {
+        let n = self.design.nrows();
+        self.live
+            .iter()
+            .enumerate()
+            .map(|(s, &mi)| {
+                let m = &self.members[mi];
+                cd::objective(
+                    &m.datafit,
+                    &m.penalty,
+                    self.y,
+                    &m.beta,
+                    &self.panel[s * n..(s + 1) * n],
+                )
+            })
+            .sum()
+    }
+
+    fn in_gsupp(&self, j: usize) -> bool {
+        self.in_union[j]
+    }
+
+    fn inner_solve(&mut self, ws: &[usize], _inner_tol: f64, opts: &SolverOpts) -> InnerStats {
+        let design = self.design;
+        let n = design.nrows();
+        let mut agg = InnerStats::default();
+        // route each member: Gram engine members run the exact scalar
+        // gram_inner_solver on the shared store; the rest run the
+        // interleaved panel epochs (per-member inner tolerances)
+        let mut res_slots: Vec<usize> = Vec::new();
+        for s in 0..self.live.len() {
+            let mi = self.live[s];
+            let quad;
+            let use_gram;
+            {
+                let m = &self.members[mi];
+                quad = m.datafit.residual_quadratic_scale();
+                use_gram =
+                    m.dispatch.use_gram(design, &m.ws, self.gram.as_deref(), quad.is_some());
+            }
+            if use_gram {
+                let gram_ref = self.gram.as_ref().expect("use_gram implies a store").clone();
+                let m = &mut self.members[mi];
+                let state = &mut self.panel[s * n..(s + 1) * n];
+                let stats = gram_inner_solver(
+                    design,
+                    m.datafit.lipschitz(),
+                    quad.expect("use_gram implies the Gram contract"),
+                    &m.penalty,
+                    &mut m.beta,
+                    state,
+                    &m.ws,
+                    &gram_ref,
+                    opts.max_epochs,
+                    m.inner_tol,
+                    opts.anderson_m,
+                );
+                m.dispatch.record_epochs(stats.epochs);
+                m.n_epochs += stats.epochs;
+                m.accepted += stats.accepted_extrapolations;
+                m.rejected += stats.rejected_extrapolations;
+                m.profile.merge(&stats.profile);
+                agg.epochs += stats.epochs;
+                agg.accepted_extrapolations += stats.accepted_extrapolations;
+                agg.rejected_extrapolations += stats.rejected_extrapolations;
+                agg.score_checks += stats.score_checks;
+                agg.ws_score = agg.ws_score.max(stats.ws_score);
+                agg.profile.merge(&stats.profile);
+            } else {
+                res_slots.push(s);
+            }
+        }
+        if !res_slots.is_empty() {
+            let stats_list = self.residual_inner(ws, &res_slots, opts);
+            for (k, stats) in stats_list.into_iter().enumerate() {
+                let mi = self.live[res_slots[k]];
+                let m = &mut self.members[mi];
+                m.dispatch.record_epochs(stats.epochs);
+                m.n_epochs += stats.epochs;
+                m.accepted += stats.accepted_extrapolations;
+                m.rejected += stats.rejected_extrapolations;
+                m.profile.merge(&stats.profile);
+                agg.epochs += stats.epochs;
+                agg.accepted_extrapolations += stats.accepted_extrapolations;
+                agg.rejected_extrapolations += stats.rejected_extrapolations;
+                agg.score_checks += stats.score_checks;
+                agg.ws_score = agg.ws_score.max(stats.ws_score);
+                agg.profile.merge(&stats.profile);
+            }
+        }
+        agg
+    }
+
+    fn final_kkt(&mut self) -> f64 {
+        // live members' exact certificates (same pass the scalar solver
+        // runs); retired members already carry theirs
+        let n = self.design.nrows();
+        let mut worst = 0.0f64;
+        for s in 0..self.live.len() {
+            let mi = self.live[s];
+            let m = &self.members[mi];
+            let state = &self.panel[s * n..(s + 1) * n];
+            let mut fs = vec![0.0; self.all_features.len()];
+            coordinate_scores_into(
+                self.design,
+                self.y,
+                &m.datafit,
+                &m.penalty,
+                &m.beta,
+                state,
+                &self.all_features,
+                &mut fs,
+            );
+            worst = worst.max(fs.iter().fold(0.0f64, |a, &s| a.max(s)));
+        }
+        worst
+    }
+
+    fn label(&self) -> &'static str {
+        "batch"
+    }
+}
+
+/// Solve `fits.len()` sibling fits on one design simultaneously. Member
+/// order is preserved in the outcome. `col_sq_norms` is the coordinator's
+/// cached Gram diagonal (unmasked members reuse it); `gram` a shared
+/// working-set Gram store for the whole batch (one `GramStore` across all
+/// members — masked members are forced onto the residual engine).
+///
+/// The batch-level `opts.budget` stops the whole loop cooperatively;
+/// per-member cancel flags / deadlines retire individual members.
+pub fn solve_batch(
+    design: &Design,
+    y: &[f64],
+    fits: Vec<BatchFit>,
+    opts: &SolverOpts,
+    col_sq_norms: Option<&[f64]>,
+    gram: Option<Arc<GramCache>>,
+) -> BatchOutcome {
+    let p = design.ncols();
+    let n = design.nrows();
+    let n_members = fits.len();
+    let mut members = Vec::with_capacity(n_members);
+    let mut panel = Vec::with_capacity(n * n_members);
+    for fit in fits {
+        let penalty = fit.penalty.expect("BatchFit requires a penalty");
+        let mut datafit = MaskedQuadratic::new(fit.row_weights);
+        datafit.init_cached(design, y, col_sq_norms);
+        // non-convex validity (solve_prepared parity, per member)
+        let min_l = datafit
+            .lipschitz()
+            .iter()
+            .cloned()
+            .filter(|&l| l > 0.0)
+            .fold(f64::INFINITY, f64::min);
+        if min_l.is_finite() {
+            penalty.validate_step(1.0 / min_l);
+        }
+        let beta = match fit.beta0 {
+            Some(b) => {
+                assert_eq!(b.len(), p);
+                b
+            }
+            None => vec![0.0; p],
+        };
+        let state = datafit.init_state(design, y, &beta);
+        panel.extend_from_slice(&state);
+        members.push(Member {
+            ws_size: fit.ws0.unwrap_or(opts.ws_start).min(p).max(1),
+            penalty,
+            datafit,
+            beta,
+            ws: Vec::new(),
+            inner_tol: opts.tol,
+            dispatch: EngineDispatch::new(opts.inner),
+            cancel: fit.cancel,
+            deadline: fit.deadline,
+            history: Vec::new(),
+            n_outer: 0,
+            n_epochs: 0,
+            accepted: 0,
+            rejected: 0,
+            profile: InnerProfile::default(),
+            scores: vec![0.0; p],
+            done: None,
+        });
+    }
+    // shared Gram store (solve_prepared parity): created only when the
+    // requested engine may want it and some member satisfies the contract
+    let gram = match gram {
+        Some(g) => Some(g),
+        None if opts.inner != InnerEngine::Residual
+            && members.iter().any(|m| m.datafit.residual_quadratic_scale().is_some()) =>
+        {
+            Some(Arc::new(GramCache::with_default_budget()))
+        }
+        None => None,
+    };
+    let mut coords = BatchedCoords {
+        design,
+        y,
+        tol: opts.tol,
+        inner_tol_ratio: opts.inner_tol_ratio,
+        use_ws: opts.use_ws,
+        live: (0..n_members).collect(),
+        members,
+        panel,
+        grads: Vec::new(),
+        in_union: vec![false; p],
+        all_features: (0..p).collect(),
+        gram,
+        start: Instant::now(),
+        profile: InnerProfile::default(),
+    };
+    let out = solve_outer(&mut coords, opts, None);
+    coords.finalize(out.stopped);
+    let mut profile = out.profile;
+    profile.merge(&coords.profile);
+    BatchOutcome {
+        members: coords
+            .members
+            .into_iter()
+            .map(|m| m.done.expect("finalize retires every member"))
+            .collect(),
+        n_outer: out.n_outer,
+        profile,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{correlated, CorrelatedSpec};
+    use crate::datafit::Quadratic;
+    use crate::penalty::{Mcp, L1};
+    use crate::solver::skglm::solve;
+
+    fn problem(seed: u64) -> (Design, Vec<f64>, f64) {
+        let ds = correlated(
+            CorrelatedSpec { n: 80, p: 60, rho: 0.5, nnz: 6, snr: 10.0 },
+            seed,
+        );
+        let n = ds.design.nrows() as f64;
+        let mut xty = vec![0.0; ds.design.ncols()];
+        ds.design.matvec_t(&ds.y, &mut xty);
+        let lam_max = xty.iter().fold(0.0f64, |m, v| m.max(v.abs())) / n;
+        (ds.design, ds.y, lam_max)
+    }
+
+    #[test]
+    fn single_member_batch_is_bitwise_scalar() {
+        let (design, y, lam_max) = problem(7);
+        for lam_ratio in [0.5, 0.1, 0.02] {
+            let lam = lam_max * lam_ratio;
+            let opts = SolverOpts::default().with_tol(1e-10);
+            let mut f = Quadratic::new();
+            let scalar = solve(&design, &y, &mut f, &L1::new(lam), &opts, None, None);
+            let out = solve_batch(
+                &design,
+                &y,
+                vec![BatchFit::new(BatchPenalty::L1(L1::new(lam)))],
+                &opts,
+                None,
+                None,
+            );
+            let m = &out.members[0].result;
+            assert_eq!(m.beta.len(), scalar.beta.len());
+            for (a, b) in m.beta.iter().zip(scalar.beta.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "beta drifted at lam {lam}");
+            }
+            assert_eq!(m.kkt.to_bits(), scalar.kkt.to_bits());
+            assert_eq!(m.n_outer, scalar.n_outer);
+            assert_eq!(m.n_epochs, scalar.n_epochs);
+            assert_eq!(m.converged, scalar.converged);
+            assert!(out.profile.panel_flops > 0.0);
+        }
+    }
+
+    #[test]
+    fn mixed_batch_members_match_their_scalar_runs() {
+        let (design, y, lam_max) = problem(13);
+        let opts = SolverOpts::default().with_tol(1e-10);
+        let lams = [lam_max / 3.0, lam_max / 10.0, lam_max / 30.0, lam_max / 100.0];
+        let fits: Vec<BatchFit> = lams
+            .iter()
+            .map(|&l| BatchFit::new(BatchPenalty::L1(L1::new(l))))
+            .collect();
+        let out = solve_batch(&design, &y, fits, &opts, None, None);
+        for (k, &lam) in lams.iter().enumerate() {
+            let mut f = Quadratic::new();
+            let scalar = solve(&design, &y, &mut f, &L1::new(lam), &opts, None, None);
+            let m = &out.members[k].result;
+            for (a, b) in m.beta.iter().zip(scalar.beta.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "member {k} drifted");
+            }
+            assert_eq!(m.n_epochs, scalar.n_epochs, "member {k} epoch count");
+            assert!(out.members[k].stopped.is_none());
+        }
+    }
+
+    #[test]
+    fn mcp_members_match_scalar_trajectories() {
+        let (design, y, _lam_max) = problem(23);
+        // normalize like the MCP paper setup so gamma*L_j > 1 holds
+        let mut design = design;
+        let _norms = design.normalize_cols((design.nrows() as f64).sqrt());
+        let mut xty = vec![0.0; design.ncols()];
+        design.matvec_t(&y, &mut xty);
+        let lam = xty.iter().fold(0.0f64, |m, v| m.max(v.abs())) / design.nrows() as f64 / 10.0;
+        let opts = SolverOpts::default().with_tol(1e-9);
+        let out = solve_batch(
+            &design,
+            &y,
+            vec![
+                BatchFit::new(BatchPenalty::Mcp(Mcp::new(lam, 3.0))),
+                BatchFit::new(BatchPenalty::L1(L1::new(lam))),
+            ],
+            &opts,
+            None,
+            None,
+        );
+        let mut f = Quadratic::new();
+        let mcp = solve(&design, &y, &mut f, &Mcp::new(lam, 3.0), &opts, None, None);
+        let mut f2 = Quadratic::new();
+        let l1 = solve(&design, &y, &mut f2, &L1::new(lam), &opts, None, None);
+        for (a, b) in out.members[0].result.beta.iter().zip(mcp.beta.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "MCP member drifted");
+        }
+        for (a, b) in out.members[1].result.beta.iter().zip(l1.beta.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "L1 member drifted");
+        }
+    }
+
+    #[test]
+    fn masked_member_matches_row_subset_fit() {
+        let (design, y, lam_max) = problem(31);
+        let n = design.nrows();
+        // mask out every third row; rebuild the kept-rows design densely
+        let keep: Vec<bool> = (0..n).map(|i| i % 3 != 0).collect();
+        let w: Vec<f64> = keep.iter().map(|&k| if k { 1.0 } else { 0.0 }).collect();
+        let rows: Vec<Vec<f64>> = (0..n)
+            .filter(|&i| keep[i])
+            .map(|i| {
+                (0..design.ncols())
+                    .map(|j| match &design {
+                        Design::Dense(m) => m.col(j)[i],
+                        Design::Sparse(_) => unreachable!(),
+                    })
+                    .collect()
+            })
+            .collect();
+        let y_sub: Vec<f64> = (0..n).filter(|&i| keep[i]).map(|i| y[i]).collect();
+        let sub = Design::Dense(crate::linalg::DenseMatrix::from_rows(&rows));
+        let lam = lam_max / 10.0;
+        let opts = SolverOpts::default().with_tol(1e-10);
+        let mut f = Quadratic::new();
+        let scalar = solve(&sub, &y_sub, &mut f, &L1::new(lam), &opts, None, None);
+        let out = solve_batch(
+            &design,
+            &y,
+            vec![BatchFit::new(BatchPenalty::L1(L1::new(lam)))
+                .with_row_weights(Arc::new(w))],
+            &opts,
+            None,
+            None,
+        );
+        let m = &out.members[0].result;
+        assert!(m.converged);
+        for (a, b) in m.beta.iter().zip(scalar.beta.iter()) {
+            assert!(
+                (a - b).abs() < 1e-9,
+                "masked fit should match the row-subset fit: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn cancelled_member_retires_without_aborting_batch() {
+        let (design, y, lam_max) = problem(41);
+        let flag = Arc::new(AtomicBool::new(true)); // cancelled from the start
+        let lam = lam_max / 20.0;
+        let opts = SolverOpts::default().with_tol(1e-10);
+        let out = solve_batch(
+            &design,
+            &y,
+            vec![
+                BatchFit::new(BatchPenalty::L1(L1::new(lam))).with_cancel(flag),
+                BatchFit::new(BatchPenalty::L1(L1::new(lam))),
+            ],
+            &opts,
+            None,
+            None,
+        );
+        assert_eq!(out.members[0].stopped, Some(StopReason::Cancelled));
+        assert!(!out.members[0].result.converged);
+        assert!(out.members[1].stopped.is_none());
+        assert!(out.members[1].result.converged, "survivor must still converge");
+        // the cancelled member's partial result matches the untouched warm start
+        assert!(out.members[0].result.beta.iter().all(|&b| b == 0.0));
+    }
+
+    #[test]
+    fn warm_started_batch_continues_a_grid() {
+        let (design, y, lam_max) = problem(47);
+        let opts = SolverOpts::default().with_tol(1e-10);
+        let first = solve_batch(
+            &design,
+            &y,
+            vec![BatchFit::new(BatchPenalty::L1(L1::new(lam_max / 5.0)))],
+            &opts,
+            None,
+            None,
+        );
+        let warm_beta = first.members[0].result.beta.clone();
+        let ws0 = first.members[0].result.history.last().map(|h| h.ws_size);
+        let cont = solve_batch(
+            &design,
+            &y,
+            vec![BatchFit::new(BatchPenalty::L1(L1::new(lam_max / 15.0)))
+                .warm(warm_beta, ws0)],
+            &opts,
+            None,
+            None,
+        );
+        let m = &cont.members[0].result;
+        assert!(m.converged);
+        // warm continuation should beat a cold start on epochs
+        let cold = solve_batch(
+            &design,
+            &y,
+            vec![BatchFit::new(BatchPenalty::L1(L1::new(lam_max / 15.0)))],
+            &opts,
+            None,
+            None,
+        );
+        assert!(m.n_epochs <= cold.members[0].result.n_epochs);
+    }
+
+    #[test]
+    fn batch_lambda_max_matches_scalar_and_masks() {
+        let (design, y, lam_max) = problem(53);
+        let n = design.nrows();
+        let w: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { 0.0 }).collect();
+        let lams =
+            batch_lambda_max(&design, &y, &[None, Some(Arc::new(w.clone()))]);
+        assert!((lams[0] - lam_max).abs() <= 1e-12 * lam_max.max(1.0));
+        // masked anchor equals the subset formula
+        let mut masked_y = vec![0.0; n];
+        for i in 0..n {
+            masked_y[i] = w[i] * y[i];
+        }
+        let mut xty = vec![0.0; design.ncols()];
+        design.matvec_t(&masked_y, &mut xty);
+        let want = xty.iter().fold(0.0f64, |m, v| m.max(v.abs())) / w.iter().sum::<f64>();
+        assert!((lams[1] - want).abs() <= 1e-12 * want.max(1.0));
+    }
+
+    #[test]
+    fn gram_engine_batch_matches_residual_batch() {
+        let (design, y, lam_max) = problem(61);
+        let lam = lam_max / 15.0;
+        let run = |inner: InnerEngine| {
+            let opts = SolverOpts::default().with_tol(1e-12).with_inner(inner);
+            solve_batch(
+                &design,
+                &y,
+                vec![
+                    BatchFit::new(BatchPenalty::L1(L1::new(lam))),
+                    BatchFit::new(BatchPenalty::L1(L1::new(lam / 3.0))),
+                ],
+                &opts,
+                None,
+                None,
+            )
+        };
+        let res = run(InnerEngine::Residual);
+        let gram = run(InnerEngine::Gram);
+        for k in 0..2 {
+            let (a, b) = (&res.members[k].result, &gram.members[k].result);
+            assert!(a.converged && b.converged);
+            assert!(
+                (a.objective - b.objective).abs() < 1e-12,
+                "member {k}: {} vs {}",
+                a.objective,
+                b.objective
+            );
+        }
+        // the forced-Gram batch really ran Gram epochs
+        assert!(gram.profile.gram_epochs > 0);
+    }
+}

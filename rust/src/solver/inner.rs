@@ -24,8 +24,9 @@ use crate::penalty::Penalty;
 use std::time::Instant;
 
 /// Forced stationarity evaluation at least every this many epochs, even
-/// while the cheap move bound stays large.
-const FORCE_CHECK_EVERY: usize = 50;
+/// while the cheap move bound stays large. Shared with the batched
+/// many-fit engine (`solver::batch`) so its gating matches bitwise.
+pub(crate) const FORCE_CHECK_EVERY: usize = 50;
 
 /// Per-stage wall-time and (modelled) flop attribution of the inner
 /// solvers, accumulated up through [`super::outer::OuterOutcome`] and
@@ -48,6 +49,10 @@ pub struct InnerProfile {
     pub epoch_flops: f64,
     /// Gram-block entries computed (stored-entry touches)
     pub gram_assembly_flops: f64,
+    /// stored-entry touches spent in multi-RHS panel passes (`XᵀR`,
+    /// `stored_entries·B` per batched scoring pass) — the batched
+    /// engine's share of the work; 0 for scalar fits
+    pub panel_flops: f64,
     /// epochs run by the residual engine
     pub residual_epochs: usize,
     /// epochs run by the Gram engine
@@ -63,15 +68,28 @@ impl InnerProfile {
         self.gram_assembly_secs += o.gram_assembly_secs;
         self.epoch_flops += o.epoch_flops;
         self.gram_assembly_flops += o.gram_assembly_flops;
+        self.panel_flops += o.panel_flops;
         self.residual_epochs += o.residual_epochs;
         self.gram_epochs += o.gram_epochs;
     }
 
-    /// Total modelled flops (epochs + Gram assembly) — the engine
-    /// comparison metric `exp gram` records even where wall time is too
-    /// noisy to measure.
+    /// Total modelled flops (epochs + Gram assembly + batched panel
+    /// passes) — the engine comparison metric `exp gram` records even
+    /// where wall time is too noisy to measure.
     pub fn total_flops(&self) -> f64 {
-        self.epoch_flops + self.gram_assembly_flops
+        self.epoch_flops + self.gram_assembly_flops + self.panel_flops
+    }
+
+    /// Fraction of modelled work done by multi-RHS panel kernels — the
+    /// batching diagnostic surfaced by `exp batch` and the service stats
+    /// verb. 0 when nothing ran batched.
+    pub fn panel_flop_ratio(&self) -> f64 {
+        let total = self.total_flops();
+        if total > 0.0 {
+            self.panel_flops / total
+        } else {
+            0.0
+        }
     }
 }
 
@@ -143,8 +161,9 @@ pub fn coordinate_scores_into<D: Datafit, P: Penalty>(
 }
 
 /// Max score over the working set (allocates a scratch score buffer; only
-/// runs on the move-bound-gated checks, never every epoch).
-fn ws_score_max<D: Datafit, P: Penalty>(
+/// runs on the move-bound-gated checks, never every epoch). Shared with
+/// the batched engine's per-member gated checks.
+pub(crate) fn ws_score_max<D: Datafit, P: Penalty>(
     design: &Design,
     y: &[f64],
     datafit: &D,
@@ -274,7 +293,7 @@ pub fn inner_solver<D: Datafit, P: Penalty>(
 }
 
 #[inline]
-fn gather(beta: &[f64], ws: &[usize], out: &mut [f64]) {
+pub(crate) fn gather(beta: &[f64], ws: &[usize], out: &mut [f64]) {
     for (o, &j) in out.iter_mut().zip(ws.iter()) {
         *o = beta[j];
     }
@@ -300,9 +319,11 @@ fn replay_state<D: Datafit>(
 }
 
 /// Objective guard: commit the extrapolated point iff it strictly
-/// decreases the (working-set-restricted) objective.
+/// decreases the (working-set-restricted) objective. Shared with the
+/// batched engine's per-member Anderson proposals (identical arithmetic
+/// keeps batch == scalar trajectories).
 #[allow(clippy::too_many_arguments)]
-fn try_accept<D: Datafit, P: Penalty>(
+pub(crate) fn try_accept<D: Datafit, P: Penalty>(
     datafit: &D,
     penalty: &P,
     y: &[f64],

@@ -14,6 +14,7 @@
 
 pub mod anderson;
 pub mod baselines;
+pub mod batch;
 pub mod block_cd;
 pub mod cd;
 pub mod gram;
@@ -25,6 +26,10 @@ pub mod prox_newton;
 pub mod screening;
 pub mod skglm;
 
+pub use batch::{
+    batch_lambda_max, batching_enabled, solve_batch, BatchFit, BatchMemberResult, BatchOutcome,
+    MaskedQuadratic,
+};
 pub use gram::{gram_inner_solver, EngineDispatch, InnerEngine};
 pub use inner::InnerProfile;
 pub use skglm::{

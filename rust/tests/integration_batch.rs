@@ -1,0 +1,224 @@
+//! Integration: scheduler-level many-fit fusion (ISSUE 9) — sibling
+//! `Job::Fit`s on one design coalesce into one multi-RHS batched job,
+//! sibling `Job::Path`s with one λ grid fuse into a λ-lockstep panel
+//! sweep, and the fused jobs preserve the per-job contract: one event
+//! stream per job id, single-member cancellation, deadline partials.
+//!
+//! Every test parks a long path job on the lone worker first so the
+//! siblings are provably co-queued when the lead is dequeued — fusion is
+//! then deterministic, not a race.
+
+use skglm::coordinator::{specs, FitScheduler, Job, JobEvent, JobPolicy};
+use skglm::data::{correlated, CorrelatedSpec, Dataset};
+use skglm::estimators::linear::quadratic_lambda_max;
+use skglm::estimators::path::geometric_grid;
+use skglm::solver::SolverOpts;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn dataset(seed: u64) -> Arc<Dataset> {
+    Arc::new(correlated(CorrelatedSpec { n: 80, p: 120, rho: 0.5, nnz: 8, snr: 10.0 }, seed))
+}
+
+/// A path sweep heavy enough to occupy the lone worker for many
+/// milliseconds while the microsecond-scale sibling submissions land.
+fn submit_blocker(sched: &FitScheduler) -> (u64, usize) {
+    let ds = Arc::new(correlated(
+        CorrelatedSpec { n: 300, p: 500, rho: 0.5, nnz: 25, snr: 10.0 },
+        99,
+    ));
+    let ratios = geometric_grid(1e-3, 16);
+    let n_events = ratios.len() + 1;
+    let id = sched.submit_path(ds, specs::lasso(1.0), ratios, SolverOpts::default().with_tol(1e-10));
+    (id, n_events)
+}
+
+fn fit_done_by_job(events: &[JobEvent]) -> HashMap<u64, &skglm::coordinator::FitOutcome> {
+    let mut map = HashMap::new();
+    for e in events {
+        if let JobEvent::FitDone(f) = e {
+            map.insert(f.job_id, f);
+        }
+    }
+    map
+}
+
+#[test]
+fn sibling_fits_fuse_into_one_batched_job_and_match_scalar_runs() {
+    let ds = dataset(41);
+    let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+    let lams = [lam_max / 4.0, lam_max / 10.0, lam_max / 25.0];
+    let opts = SolverOpts::default().with_tol(1e-10);
+
+    let sched = FitScheduler::start(1);
+    let (blocker, blocker_events) = submit_blocker(&sched);
+    let ids: Vec<u64> = lams
+        .iter()
+        .map(|&l| sched.submit_fit(Arc::clone(&ds), specs::lasso(l), opts.clone()))
+        .collect();
+    let events = sched.collect_events(blocker_events + lams.len());
+    let stats = sched.fusion_stats();
+    sched.shutdown();
+
+    // one terminal event per job id, streamed on the shared channel
+    let fits = fit_done_by_job(&events);
+    assert_eq!(fits.len(), lams.len());
+    for e in events.iter().filter(|e| e.job_id() != blocker) {
+        assert!(ids.contains(&e.job_id()), "stray event for job {}", e.job_id());
+    }
+    // the three siblings ran as ONE batched job
+    assert_eq!(stats.batched_jobs, 1, "siblings did not fuse: {stats:?}");
+    assert_eq!(stats.batched_fits, 3);
+    assert!((stats.fits_per_batch() - 3.0).abs() < 1e-12);
+    assert!(
+        stats.panel_flop_ratio() > 0.0 && stats.panel_flop_ratio() < 1.0,
+        "panel share out of range: {}",
+        stats.panel_flop_ratio()
+    );
+
+    // scalar reference: the same fits one at a time (nothing co-queued,
+    // so nothing can fuse) — same optima, job by job
+    let sched = FitScheduler::start(1);
+    for (k, &l) in lams.iter().enumerate() {
+        let id = sched.submit_fit(Arc::clone(&ds), specs::lasso(l), opts.clone());
+        let events = sched.collect_events(1);
+        match &events[0] {
+            JobEvent::FitDone(f) => {
+                assert_eq!(f.job_id, id);
+                let fused = fits[&ids[k]];
+                assert!(
+                    (fused.result.objective - f.result.objective).abs()
+                        <= 1e-8 * (1.0 + f.result.objective.abs()),
+                    "member {k}: fused objective {} vs scalar {}",
+                    fused.result.objective,
+                    f.result.objective
+                );
+                assert!(fused.result.converged && f.result.converged);
+            }
+            other => panic!("expected FitDone, got event for job {}", other.job_id()),
+        }
+    }
+    let stats = sched.fusion_stats();
+    sched.shutdown();
+    assert_eq!(stats.batched_jobs, 0, "sequential submissions must not fuse");
+}
+
+#[test]
+fn cancelling_one_sibling_leaves_the_rest_of_the_batch_intact() {
+    let ds = dataset(42);
+    let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+    let opts = SolverOpts::default().with_tol(1e-10);
+
+    let sched = FitScheduler::start(1);
+    let (blocker, blocker_events) = submit_blocker(&sched);
+    let keep_a = sched.submit_fit(Arc::clone(&ds), specs::lasso(lam_max / 5.0), opts.clone());
+    let victim = sched.submit_fit(Arc::clone(&ds), specs::lasso(lam_max / 10.0), opts.clone());
+    let keep_b = sched.submit_fit(Arc::clone(&ds), specs::lasso(lam_max / 20.0), opts.clone());
+    assert!(sched.cancel(victim), "victim should still be live");
+    let events = sched.collect_events(blocker_events + 3);
+    sched.shutdown();
+
+    let mut cancelled = Vec::new();
+    let mut completed = Vec::new();
+    for e in &events {
+        match e {
+            JobEvent::Cancelled { job_id, points_emitted } => {
+                cancelled.push(*job_id);
+                assert_eq!(*points_emitted, 0, "a cancelled fit emits no points");
+            }
+            JobEvent::FitDone(f) => completed.push(f.job_id),
+            _ => assert_eq!(e.job_id(), blocker, "unexpected event {}", e.job_id()),
+        }
+    }
+    assert_eq!(cancelled, vec![victim]);
+    completed.sort_unstable();
+    let mut expect = vec![keep_a, keep_b];
+    expect.sort_unstable();
+    assert_eq!(completed, expect, "surviving siblings must both complete");
+}
+
+#[test]
+fn expired_deadline_retires_one_member_with_a_partial_result() {
+    let ds = dataset(43);
+    let lam_max = quadratic_lambda_max(&ds.design, &ds.y);
+    let opts = SolverOpts::default().with_tol(1e-10);
+
+    let sched = FitScheduler::start(1);
+    let (_blocker, blocker_events) = submit_blocker(&sched);
+    let healthy = sched.submit_fit(Arc::clone(&ds), specs::lasso(lam_max / 10.0), opts.clone());
+    let (doomed, _ctl) = sched.submit_with(
+        Job::Fit {
+            dataset: Arc::clone(&ds),
+            spec: specs::lasso(lam_max / 10.0),
+            opts: opts.clone(),
+        },
+        JobPolicy::default().with_deadline(Instant::now()),
+    );
+    let events = sched.collect_events(blocker_events + 2);
+    sched.shutdown();
+
+    let fits = fit_done_by_job(&events);
+    assert_eq!(fits.len(), 2);
+    assert!(!fits[&healthy].timed_out, "healthy member must run to convergence");
+    assert!(fits[&healthy].result.converged);
+    assert!(fits[&doomed].timed_out, "expired deadline must report a partial");
+    // the partial still carries a usable (if unconverged) iterate
+    assert_eq!(fits[&doomed].result.beta.len(), ds.design.ncols());
+}
+
+#[test]
+fn sibling_paths_fuse_and_stream_identical_per_member_sweeps() {
+    let ds = dataset(44);
+    let ratios = geometric_grid(1e-2, 5);
+    let opts = SolverOpts::default().with_tol(1e-9);
+
+    let sched = FitScheduler::start(1);
+    let (blocker, blocker_events) = submit_blocker(&sched);
+    let a = sched.submit_path(Arc::clone(&ds), specs::lasso(1.0), ratios.clone(), opts.clone());
+    let b = sched.submit_path(Arc::clone(&ds), specs::lasso(1.0), ratios.clone(), opts);
+    let events = sched.collect_events(blocker_events + 2 * (ratios.len() + 1));
+    let stats = sched.fusion_stats();
+    sched.shutdown();
+
+    assert_eq!(stats.batched_jobs, 1, "sibling paths did not fuse: {stats:?}");
+    assert_eq!(stats.batched_fits, 2);
+
+    let mut points: HashMap<u64, Vec<(usize, f64)>> = HashMap::new();
+    let mut done: HashMap<u64, usize> = HashMap::new();
+    for e in &events {
+        match e {
+            JobEvent::PathPoint(p) if p.job_id != blocker => {
+                assert!(p.converged, "fused point {} of job {} unconverged", p.index, p.job_id);
+                points.entry(p.job_id).or_default().push((p.index, p.point.objective));
+            }
+            JobEvent::PathDone(s) if s.job_id != blocker => {
+                assert!(!s.timed_out);
+                assert_eq!(s.n_points, ratios.len());
+                done.insert(s.job_id, s.n_points);
+            }
+            other => assert_eq!(other.job_id(), blocker, "unexpected event {}", other.job_id()),
+        }
+    }
+    assert_eq!(done.len(), 2, "both path jobs must terminate: {done:?}");
+    for id in [a, b] {
+        let mut pts = points.remove(&id).unwrap_or_default();
+        pts.sort_by_key(|(i, _)| *i);
+        assert_eq!(
+            pts.iter().map(|(i, _)| *i).collect::<Vec<_>>(),
+            (0..ratios.len()).collect::<Vec<_>>(),
+            "job {id} missing points"
+        );
+        // identical specs advanced in λ-lockstep: member sweeps agree
+        if id == b {
+            continue;
+        }
+        let other = &points[&b];
+        for ((_, oa), (_, ob)) in pts.iter().zip(other.iter()) {
+            assert!(
+                (oa - ob).abs() <= 1e-12 * (1.0 + oa.abs()),
+                "sibling sweeps diverged: {oa} vs {ob}"
+            );
+        }
+    }
+}

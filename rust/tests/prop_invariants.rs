@@ -754,3 +754,106 @@ fn prop_prox_satisfies_subgradient_inclusion_all_penalties() {
         },
     );
 }
+
+/// Batched multi-RHS solves match their scalar runs (ISSUE 9): for a
+/// random design seen both dense and CSC, mixed L1/MCP members, and
+/// batch widths B ∈ {1, 2, 8, 33}, every member of one `solve_batch`
+/// call agrees with its own scalar solve to 1e-12 on the coefficients
+/// and the objective (the engines are in fact bit-identical — 1e-12 is
+/// the ISSUE's acceptance bar).
+#[test]
+fn prop_batch_members_match_scalar_solver() {
+    use skglm::penalty::BatchPenalty;
+    use skglm::solver::{solve_batch, BatchFit};
+
+    check(
+        9,
+        4,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let (n, p) = (50, 70);
+            let mut rows = Vec::new();
+            let mut trips = Vec::new();
+            for i in 0..n {
+                let mut row = vec![0.0; p];
+                for j in 0..p {
+                    if rng.bernoulli(0.3) {
+                        let v = rng.normal();
+                        row[j] = v;
+                        trips.push((i, j, v));
+                    }
+                }
+                rows.push(row);
+            }
+            let dense: Design = skglm::linalg::DenseMatrix::from_rows(&rows).into();
+            let sparse: Design = skglm::linalg::CscMatrix::from_triplets(n, p, &trips).into();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let opts = SolverOpts::default().with_tol(1e-10);
+
+            for design in [&dense, &sparse] {
+                let lam_max = skglm::estimators::linear::quadratic_lambda_max(design, &y);
+                // γ safely above 1/L_min so MCP members are valid for
+                // every step size the CD loop can take on this design
+                let min_l = design
+                    .col_sq_norms()
+                    .iter()
+                    .map(|&s| s / n as f64)
+                    .filter(|&l| l > 0.0)
+                    .fold(f64::INFINITY, f64::min);
+                let gamma = (2.0 / min_l).max(3.0);
+
+                for &b in &[1usize, 2, 8, 33] {
+                    // member k: λ geometric in k, alternating L1 / MCP
+                    let lams: Vec<f64> = (0..b)
+                        .map(|k| {
+                            let t = if b == 1 { 0.0 } else { k as f64 / (b - 1) as f64 };
+                            lam_max * 0.5 * (0.1f64).powf(t)
+                        })
+                        .collect();
+                    let fits: Vec<BatchFit> = lams
+                        .iter()
+                        .enumerate()
+                        .map(|(k, &lam)| {
+                            let pen = if k % 2 == 0 {
+                                BatchPenalty::L1(L1::new(lam))
+                            } else {
+                                BatchPenalty::Mcp(Mcp::new(lam, gamma))
+                            };
+                            BatchFit::new(pen)
+                        })
+                        .collect();
+                    let out = solve_batch(design, &y, fits, &opts, None, None);
+                    ensure(
+                        out.members.len() == b,
+                        format!("B={b}: got {} members", out.members.len()),
+                    )?;
+                    for (k, &lam) in lams.iter().enumerate() {
+                        let mut f = Quadratic::new();
+                        let scalar = if k % 2 == 0 {
+                            solve(design, &y, &mut f, &L1::new(lam), &opts, None, None)
+                        } else {
+                            solve(design, &y, &mut f, &Mcp::new(lam, gamma), &opts, None, None)
+                        };
+                        let m = &out.members[k].result;
+                        close(m.objective, scalar.objective, 1e-12)?;
+                        for (x, z) in m.beta.iter().zip(scalar.beta.iter()) {
+                            ensure(
+                                (x - z).abs() <= 1e-12,
+                                format!(
+                                    "B={b} member {k}: beta {x} vs scalar {z} (diff {:.3e})",
+                                    (x - z).abs()
+                                ),
+                            )?;
+                        }
+                        ensure(
+                            out.members[k].stopped.is_none(),
+                            format!("B={b} member {k}: unexpected early stop"),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

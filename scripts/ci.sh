@@ -28,6 +28,9 @@ cargo run --release -p skglm --bin skglm -- exp groups
 echo "==> gram inner-engine bench smoke (writes BENCH_gram.json)"
 cargo run --release -p skglm --bin skglm -- exp gram
 
+echo "==> batched-fit bench smoke (writes BENCH_batch.json)"
+cargo run --release -p skglm --bin skglm -- exp batch
+
 echo "==> scenario conformance smoke gate (writes BENCH_scenarios.json; non-zero exit on any failing scenario)"
 cargo run --release -p skglm --bin skglm -- conform --smoke
 
