@@ -2,9 +2,10 @@
 //!
 //! PR 6 built systematic conformance checking for *numerics*
 //! (scenarios.jsonl oracles); this module is the counterpart for
-//! *code-level* invariants. A hand-rolled lexer ([`lexer`]) feeds six
+//! *code-level* invariants. A hand-rolled lexer ([`lexer`]) feeds seven
 //! project-specific lint rules ([`rules`]): panic-audit, lock-order,
-//! atomic-ordering, unsafe-audit, determinism, doc-conformance. The run
+//! atomic-ordering, unsafe-audit, determinism, doc-conformance,
+//! isa-gate. The run
 //! emits `BENCH_analysis.json` (rolled into `BENCH_SUMMARY.json` like
 //! every other gate) and fails — a real `Err`, so CI trips — when any
 //! finding survives suppression.

@@ -60,7 +60,7 @@ pub struct Outcome {
 }
 
 /// (id, description) for every shipped rule, in report order.
-pub const RULES: [(&str, &str); 6] = [
+pub const RULES: [(&str, &str); 7] = [
     (
         "panic-audit",
         "no unwrap/expect/panic!/scalar indexing in non-test coordinator service-path code \
@@ -90,6 +90,12 @@ pub const RULES: [(&str, &str); 6] = [
         "doc-conformance",
         "every wire/service error code appears in ARCHITECTURE.md's error table, and every \
          scenarios.jsonl field is known to the Scenario parser",
+    ),
+    (
+        "isa-gate",
+        "vendor SIMD intrinsics and #[target_feature] live only in linalg/simd.rs; every \
+         #[target_feature] fn there is dispatcher-gated (never plain `pub`) and carries a \
+         // SAFETY: comment within the 3 lines above its attribute",
     ),
 ];
 
@@ -147,7 +153,7 @@ impl<'a> Engine<'a> {
     }
 }
 
-/// Run all six rules over `files`.
+/// Run all seven rules over `files`.
 pub fn run_all(files: &[SourceFile], docs: &DocContext) -> Outcome {
     let mut eng = Engine::new(files);
     let mut unsafe_inventory = Vec::new();
@@ -157,6 +163,7 @@ pub fn run_all(files: &[SourceFile], docs: &DocContext) -> Outcome {
     unsafe_audit(&mut eng, &mut unsafe_inventory);
     determinism(&mut eng);
     doc_conformance(&mut eng, docs);
+    isa_gate(&mut eng);
 
     let mut suppressions = Vec::new();
     for (fi, f) in files.iter().enumerate() {
@@ -915,6 +922,107 @@ fn truncate(s: &str, n: usize) -> String {
     }
 }
 
+// ---------------------------------------------------------------------
+// rule 7: isa-gate
+// ---------------------------------------------------------------------
+
+/// The one file allowed to contain vendor SIMD.
+const ISA_HOME: &str = "linalg/simd.rs";
+
+/// Call/path prefixes that mark vendor SIMD usage: the `arch` module
+/// paths, x86 `_mm*` intrinsics, and the aarch64 NEON families used by
+/// the kernels. Matched with a word boundary on the left, so e.g. a
+/// `dot_mm256_like` identifier never trips it.
+const INTRINSIC_TOKENS: [&str; 8] = [
+    "core::arch",
+    "std::arch",
+    "_mm256_",
+    "_mm_",
+    "vld1q_",
+    "vst1q_",
+    "vfmaq_",
+    "vaddvq_",
+];
+
+/// Keep every vendor intrinsic behind the one runtime dispatcher:
+/// - intrinsic tokens and `#[target_feature]` may appear only in
+///   `linalg/simd.rs`, where dispatch guarantees the feature was
+///   detected before any variant runs;
+/// - inside simd.rs, every `#[target_feature]` attribute needs a
+///   `// SAFETY:` comment on its own or the 3 preceding lines (why the
+///   feature is guaranteed when this variant is selected), and the fn
+///   it gates must not be plain `pub` — `pub(super)`/`pub(crate)`/
+///   private keeps the unsafe variants unreachable except through the
+///   bounds-checking dispatch wrappers.
+fn isa_gate(eng: &mut Engine<'_>) {
+    for fi in 0..eng.files.len() {
+        let f = &eng.files[fi];
+        let in_home = f.path.ends_with(ISA_HOME);
+        let mut hits: Vec<(usize, String)> = Vec::new();
+        for (idx, line) in f.lines.iter().enumerate() {
+            if line.is_test {
+                continue;
+            }
+            let code = &line.code;
+            if !in_home {
+                for tok in INTRINSIC_TOKENS {
+                    if has_word_prefix(code, tok) {
+                        hits.push((
+                            idx + 1,
+                            format!(
+                                "vendor intrinsic `{tok}…` outside {ISA_HOME}; SIMD must go \
+                                 through the runtime-dispatched `linalg::simd` kernels"
+                            ),
+                        ));
+                        break;
+                    }
+                }
+                if code.contains("#[target_feature") {
+                    hits.push((
+                        idx + 1,
+                        format!(
+                            "#[target_feature] outside {ISA_HOME}; feature-gated code belongs \
+                             behind the `linalg::simd` dispatcher"
+                        ),
+                    ));
+                }
+                continue;
+            }
+            if !code.contains("#[target_feature") {
+                continue;
+            }
+            let lineno = idx + 1;
+            if !safety_nearby(f, lineno, 3) {
+                hits.push((
+                    lineno,
+                    "#[target_feature] without a nearby `// SAFETY:` comment; state why the \
+                     feature is guaranteed when this variant is selected"
+                        .to_string(),
+                ));
+            }
+            for l in idx + 1..(idx + 4).min(f.lines.len()) {
+                let head = f.lines[l].code.trim_start();
+                if !head.contains("fn ") {
+                    continue;
+                }
+                if head.starts_with("pub ") && !head.starts_with("pub(") {
+                    hits.push((
+                        l + 1,
+                        "#[target_feature] fn exported as plain `pub`; keep ISA variants \
+                         pub(super)/pub(crate) so they are only reachable through the dispatch \
+                         wrappers that checked the feature"
+                            .to_string(),
+                    ));
+                }
+                break;
+            }
+        }
+        for (lineno, what) in hits {
+            eng.emit(fi, "isa-gate", lineno, what);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1231,6 +1339,50 @@ mod tests {
         let docs = DocContext { architecture: String::new(), scenarios_jsonl: None };
         let out = run_all(&files, &docs);
         assert!(rule_hits(&out, "doc-conformance").is_empty(), "{:?}", out.findings);
+    }
+
+    // ---- isa-gate ----
+
+    #[test]
+    fn isa_gate_flags_intrinsics_and_target_feature_outside_home() {
+        let src = "fn f(a: &[f64]) -> f64 {\n\
+                   let v = unsafe { _mm256_loadu_pd(a.as_ptr()) };\n\
+                   let _ = v;\n\
+                   0.0\n\
+                   }\n\
+                   #[target_feature(enable = \"avx2\")]\n\
+                   unsafe fn g() {}\n";
+        let out = run_src("rust/src/linalg/dense.rs", src);
+        let hits = rule_hits(&out, "isa-gate");
+        assert_eq!(hits.len(), 2, "{:?}", out.findings);
+        assert!(hits[0].justification.contains("_mm256_"), "{}", hits[0].justification);
+    }
+
+    #[test]
+    fn isa_gate_home_file_requires_safety_and_gating() {
+        // undocumented attribute + plain-pub export: two findings
+        let src = "#[target_feature(enable = \"avx2\")]\n\
+                   pub unsafe fn dot_avx2(a: &[f64]) -> f64 { 0.0 }\n";
+        let out = run_src("rust/src/linalg/simd.rs", src);
+        assert_eq!(rule_hits(&out, "isa-gate").len(), 2, "{:?}", out.findings);
+        // SAFETY-documented, pub(super)-gated: clean
+        let src = "// SAFETY: AVX2 is runtime-detected before dispatch.\n\
+                   #[target_feature(enable = \"avx2\")]\n\
+                   pub(super) unsafe fn dot_avx2(a: &[f64]) -> f64 { 0.0 }\n";
+        let out = run_src("rust/src/linalg/simd.rs", src);
+        assert!(rule_hits(&out, "isa-gate").is_empty(), "{:?}", out.findings);
+    }
+
+    #[test]
+    fn isa_gate_suppression_applies() {
+        let src = "fn f(a: &[f64]) {\n\
+                   // lint: allow(isa-gate, migration shim, removed next PR)\n\
+                   let v = unsafe { _mm_setzero_ps() };\n\
+                   let _ = v;\n\
+                   }\n";
+        let out = run_src("rust/src/linalg/dense.rs", src);
+        assert!(rule_hits(&out, "isa-gate").is_empty(), "{:?}", out.findings);
+        assert!(out.suppressions.iter().any(|s| s.rule_id == "isa-gate" && s.used));
     }
 
     // ---- helpers ----

@@ -645,6 +645,7 @@ pub fn run_experiment(name: &str, scale: Scale) -> Result<Vec<PathBuf>> {
         "groups" => crate::bench::group_bench::run_groups(scale),
         "gram" => crate::bench::gram_bench::run_gram(scale),
         "batch" => crate::bench::batch_bench::run_batch(scale),
+        "simd" => crate::bench::simd_bench::run_simd(scale),
         // the static-analysis gate: scale-independent, fails on findings
         "analysis" => crate::analysis::run(std::path::Path::new("."), false),
         // the conformance corpus: Smoke = the CI smoke subset, Full = all
@@ -671,7 +672,8 @@ pub fn run_experiment(name: &str, scale: Scale) -> Result<Vec<PathBuf>> {
 
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table1",
-    "table2", "pathsched", "kernels", "glms", "groups", "gram", "batch", "analysis", "scenarios",
+    "table2", "pathsched", "kernels", "glms", "groups", "gram", "batch", "simd", "analysis",
+    "scenarios",
 ];
 
 #[cfg(test)]

@@ -13,5 +13,6 @@ pub mod kernel_bench;
 pub mod path_bench;
 pub mod report;
 pub mod scenario;
+pub mod simd_bench;
 
 pub use harness::{black_box_curve, budget_schedule, BenchPoint, SolverCurve};

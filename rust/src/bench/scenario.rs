@@ -21,11 +21,19 @@
 //! - **batched**: two identical sibling paths submitted at batch
 //!   priority behind a blocker, fusing into one multi-RHS panel job
 //!   (batchable specs only) — every member's objectives must agree with
-//!   the baseline λ-by-λ.
+//!   the baseline λ-by-λ;
+//! - **precision** (ISSUE 10): a scenario may declare `precision`
+//!   (`f64` | `f32` | `mixed`) — every variant then runs its full-design
+//!   passes at that precision and the certificate bar is floored at
+//!   [`Precision::tol_floor`]. Reduced-precision scenarios also solve an
+//!   f64 reference run; the objective deviation is recorded as a metric
+//!   (`precision_ref_dev`), not gated — the floored certificate is the
+//!   contract, closeness to f64 is diagnostic.
 //!
 //! Per-scenario oracles additionally check the solver's own certificate
 //! (duality gap / stationarity, [`crate::solver::Certificate`]) against
-//! the scenario's declared tolerance at **every** path point — the
+//! the scenario's declared tolerance (floored by the declared precision)
+//! at **every** path point — the
 //! residual is read off [`PathPointOutcome`](crate::coordinator::scheduler::PathPointOutcome),
 //! never recomputed. Results are emitted in an AgentLab-style schema
 //! (`scenario_id`, `outcome: pass|fail|skip`, `objective`, `metrics`,
@@ -46,6 +54,7 @@ use crate::data::{
     CorrelatedSpec, Dataset, GroupedSpec, SparseSpec,
 };
 use crate::linalg::parallel::{set_thread_budget, thread_budget};
+use crate::linalg::simd::Precision;
 use crate::solver::{InnerEngine, SolverOpts};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -82,6 +91,9 @@ pub struct Scenario {
     pub group_size: usize,
     /// number of tasks (multitask datafit)
     pub n_tasks: usize,
+    /// full-design pass precision: f64 | f32 | mixed (ISSUE 10); the
+    /// certificate bar is floored at the precision's certified floor
+    pub precision: String,
     /// member of the CI smoke subset (`skglm conform --smoke`)
     pub smoke: bool,
 }
@@ -102,6 +114,7 @@ impl Default for Scenario {
             q: 0.5,
             group_size: 5,
             n_tasks: 3,
+            precision: "f64".into(),
             smoke: false,
         }
     }
@@ -134,6 +147,7 @@ impl Scenario {
                 "q" => s.q = val.as_f64().ok_or_else(bad)?,
                 "group_size" => s.group_size = val.as_usize().ok_or_else(bad)?,
                 "n_tasks" => s.n_tasks = val.as_usize().ok_or_else(bad)?,
+                "precision" => s.precision = val.as_str().ok_or_else(bad)?.to_string(),
                 "smoke" => s.smoke = val.as_bool().ok_or_else(bad)?,
                 other => return Err(format!("unknown scenario field {other:?}")),
             }
@@ -149,6 +163,12 @@ impl Scenario {
         }
         if !(s.tol > 0.0) {
             return Err(format!("{}: tol must be positive", s.id));
+        }
+        if Precision::parse(&s.precision).is_none() {
+            return Err(format!(
+                "{}: precision must be f64|f32|mixed, got {:?}",
+                s.id, s.precision
+            ));
         }
         Ok(s)
     }
@@ -170,6 +190,7 @@ impl Scenario {
             .with("q", self.q)
             .with("group_size", self.group_size)
             .with("n_tasks", self.n_tasks)
+            .with("precision", self.precision.as_str())
             .with("smoke", self.smoke)
     }
 }
@@ -282,6 +303,12 @@ pub fn builtin_corpus() -> Vec<Scenario> {
     // scheduler's fusion path ----
     c.push(Scenario { id: "quad_l1_batch_wide".into(), n: 100, p: 240, seed: 32, smoke: true, ..base() });
     c.push(Scenario { id: "quad_mcp_batch_dense".into(), penalty: "mcp".into(), n: 150, p: 100, seed: 33, smoke: true, ..base() });
+
+    // ---- reduced-precision A/B (ISSUE 10): dense quadratic cells whose
+    // full-design passes run from the f32 shadow, certified at the
+    // precision's floored tolerance ----
+    c.push(Scenario { id: "quad_l1_prec_f32".into(), precision: "f32".into(), n: 100, p: 150, seed: 34, smoke: true, ..base() });
+    c.push(Scenario { id: "quad_mcp_prec_mixed".into(), penalty: "mcp".into(), precision: "mixed".into(), n: 100, p: 150, seed: 35, smoke: true, ..base() });
 
     debug_assert!(c.len() >= 30, "corpus shrank below the acceptance floor");
     c
@@ -510,9 +537,11 @@ fn run_path_variant(
     tol: f64,
     engine: InnerEngine,
     threads: usize,
+    precision: Precision,
 ) -> std::result::Result<PathRun, String> {
     set_thread_budget(threads);
-    let opts = SolverOpts::default().with_tol(tol).with_inner(engine);
+    let opts =
+        SolverOpts::default().with_tol(tol).with_inner(engine).with_precision(precision);
     let sched = FitScheduler::start(1);
     sched.submit_path(Arc::clone(ds), make_spec(), ratios.to_vec(), opts);
     let drained = drain_one_path(&sched, ratios.len());
@@ -532,9 +561,10 @@ fn run_batched_variant(
     make_spec: &dyn Fn() -> Box<dyn FitSpec>,
     ratios: &[f64],
     tol: f64,
+    precision: Precision,
 ) -> std::result::Result<(Vec<PathRun>, bool), String> {
     set_thread_budget(1);
-    let opts = SolverOpts::default().with_tol(tol);
+    let opts = SolverOpts::default().with_tol(tol).with_precision(precision);
     let sched = FitScheduler::start(1);
     let blocker = sched.submit_fit(Arc::clone(ds), make_spec(), opts.clone());
     let lead = sched.submit_path(Arc::clone(ds), make_spec(), ratios.to_vec(), opts.clone());
@@ -723,13 +753,25 @@ pub fn run_scenario(s: &Scenario) -> ScenarioOutcome {
         }
     };
     let convex = make_spec().is_convex();
+    // declared precision + the floored certificate bar: a reduced-
+    // precision solve cannot certify below Precision::tol_floor, so
+    // every kkt oracle in this scenario uses the floored tolerance
+    let prec = Precision::parse(&s.precision).unwrap_or_default();
+    let ftol = s.tol.max(prec.tol_floor());
     // 3-λ geometric-ish grid from 0.5·λ_max down to the declared ratio
     let ratios = vec![0.5, (0.5 * s.lambda_ratio).sqrt(), s.lambda_ratio];
     let mut violations: Vec<String> = Vec::new();
 
     // ---- baseline: residual engine, 1 thread, warm sweep ----
-    let baseline = match run_path_variant(&ds, &make_spec, &ratios, s.tol, InnerEngine::Residual, 1)
-    {
+    let baseline = match run_path_variant(
+        &ds,
+        &make_spec,
+        &ratios,
+        s.tol,
+        InnerEngine::Residual,
+        1,
+        prec,
+    ) {
         Ok(r) => r,
         Err(e) => {
             return ScenarioOutcome {
@@ -745,10 +787,10 @@ pub fn run_scenario(s: &Scenario) -> ScenarioOutcome {
         if !pt.objective.is_finite() {
             violations.push(format!("point {i}: non-finite objective {}", pt.objective));
         }
-        if !(pt.kkt <= s.tol) {
+        if !(pt.kkt <= ftol) {
             violations.push(format!(
-                "point {i} (λ={:.3e}): {} {:.3e} exceeds declared tol {:.1e}",
-                pt.lambda, pt.certificate, pt.kkt, s.tol
+                "point {i} (λ={:.3e}): {} {:.3e} exceeds floored tol {:.1e}",
+                pt.lambda, pt.certificate, pt.kkt, ftol
             ));
         }
         if !pt.converged {
@@ -761,10 +803,10 @@ pub fn run_scenario(s: &Scenario) -> ScenarioOutcome {
     // critical points, so the oracle is convex-gated) ----
     let mut warm_cold_dev: Option<f64> = None;
     if convex {
-        let bar = (100.0 * s.tol).max(1e-9);
+        let bar = (100.0 * ftol).max(1e-9);
         let mut worst = 0.0f64;
         for (i, &r) in ratios.iter().enumerate() {
-            match run_path_variant(&ds, &make_spec, &[r], s.tol, InnerEngine::Residual, 1) {
+            match run_path_variant(&ds, &make_spec, &[r], s.tol, InnerEngine::Residual, 1, prec) {
                 Ok(cold) => {
                     let dev = rel_dev(baseline.points[i].objective, cold.points[0].objective);
                     worst = worst.max(dev);
@@ -784,16 +826,25 @@ pub fn run_scenario(s: &Scenario) -> ScenarioOutcome {
     // ---- cross-engine agreement (Gram contract: quadratic datafit) ----
     let mut engine_dev: Option<f64> = None;
     if s.datafit == "quadratic" {
-        let bar = if convex { ENGINE_TOL } else { ENGINE_TOL_NONCONVEX };
+        // reduced precision quantises both engines' gradients at the
+        // storage epsilon, so the strict f64 agreement bars don't apply;
+        // the floored-certificate-scale bar does
+        let bar = if prec != Precision::F64 {
+            (100.0 * ftol).max(1e-9)
+        } else if convex {
+            ENGINE_TOL
+        } else {
+            ENGINE_TOL_NONCONVEX
+        };
         let mut worst = 0.0f64;
         for engine in [InnerEngine::Gram, InnerEngine::Auto] {
-            match run_path_variant(&ds, &make_spec, &ratios, s.tol, engine, 1) {
+            match run_path_variant(&ds, &make_spec, &ratios, s.tol, engine, 1, prec) {
                 Ok(run) => {
                     for (i, pt) in run.points.iter().enumerate() {
-                        if !(pt.kkt <= s.tol) {
+                        if !(pt.kkt <= ftol) {
                             violations.push(format!(
-                                "{engine:?} engine point {i}: {} {:.3e} exceeds tol {:.1e}",
-                                pt.certificate, pt.kkt, s.tol
+                                "{engine:?} engine point {i}: {} {:.3e} exceeds floored tol {:.1e}",
+                                pt.certificate, pt.kkt, ftol
                             ));
                         }
                     }
@@ -825,7 +876,7 @@ pub fn run_scenario(s: &Scenario) -> ScenarioOutcome {
     // dispatcher's cost model is timing-fed, so only the explicit engine
     // promises bitwise reproducibility) ----
     let mut thread_bit_identical: Option<bool> = None;
-    match run_path_variant(&ds, &make_spec, &ratios, s.tol, InnerEngine::Residual, 4) {
+    match run_path_variant(&ds, &make_spec, &ratios, s.tol, InnerEngine::Residual, 4, prec) {
         Ok(t4) => {
             let same = runs_bit_identical(&baseline, &t4);
             thread_bit_identical = Some(same);
@@ -846,8 +897,12 @@ pub fn run_scenario(s: &Scenario) -> ScenarioOutcome {
     let mut batch_dev: Option<f64> = None;
     let mut batch_fused: Option<bool> = None;
     if crate::solver::batching_enabled() && make_spec().batch_penalty().is_some() {
-        let bar = if convex { (100.0 * s.tol).max(1e-9) } else { ENGINE_TOL_NONCONVEX };
-        match run_batched_variant(&ds, &make_spec, &ratios, s.tol) {
+        let bar = if convex {
+            (100.0 * ftol).max(1e-9)
+        } else {
+            ENGINE_TOL_NONCONVEX.max(100.0 * ftol)
+        };
+        match run_batched_variant(&ds, &make_spec, &ratios, s.tol, prec) {
             Ok((runs, fused)) => {
                 let mut worst = 0.0f64;
                 for (m, run) in runs.iter().enumerate() {
@@ -871,12 +926,42 @@ pub fn run_scenario(s: &Scenario) -> ScenarioOutcome {
         }
     }
 
+    // ---- f64 reference A/B (ISSUE 10): a reduced-precision scenario
+    // also solves the same warm sweep in full f64. The objective
+    // deviation is *recorded*, never gated — the floored certificate
+    // above is the contract; closeness to f64 is diagnostic ----
+    let mut precision_ref_dev: Option<f64> = None;
+    if prec != Precision::F64 {
+        match run_path_variant(
+            &ds,
+            &make_spec,
+            &ratios,
+            s.tol,
+            InnerEngine::Residual,
+            1,
+            Precision::F64,
+        ) {
+            Ok(reference) => {
+                let dev = baseline
+                    .points
+                    .iter()
+                    .zip(reference.points.iter())
+                    .map(|(a, b)| rel_dev(a.objective, b.objective))
+                    .fold(0.0, f64::max);
+                precision_ref_dev = Some(dev);
+            }
+            Err(e) => violations.push(format!("f64 reference run failed: {e}")),
+        }
+    }
+
     let final_pt = baseline.points.last().expect("baseline has points");
     let mut metrics = Json::obj()
         .with("datafit", s.datafit.as_str())
         .with("penalty", s.penalty.as_str())
         .with("convex", convex)
         .with("tol", s.tol)
+        .with("precision", s.precision.as_str())
+        .with("floored_tol", ftol)
         .with("certificate", final_pt.certificate)
         .with("kkt_final", final_pt.kkt)
         .with("n_points", baseline.points.len())
@@ -901,6 +986,10 @@ pub fn run_scenario(s: &Scenario) -> ScenarioOutcome {
     metrics = match batch_fused {
         Some(b) => metrics.with("batch_fused", b),
         None => metrics.with("batch_fused", Json::Null),
+    };
+    metrics = match precision_ref_dev {
+        Some(d) => metrics.with("precision_ref_dev", d),
+        None => metrics.with("precision_ref_dev", Json::Null),
     };
 
     ScenarioOutcome {
@@ -1058,6 +1147,13 @@ mod tests {
         }
         // both densities appear
         assert!(c.iter().any(|s| s.density < 1.0));
+        // both reduced precisions are smoke-gated (ISSUE 10)
+        for pr in ["f32", "mixed"] {
+            assert!(
+                c.iter().any(|s| s.smoke && s.precision == pr),
+                "no smoke precision={pr} scenario"
+            );
+        }
         // every scenario's (datafit, penalty) pair actually builds
         for s in &c {
             assert!(build_task(s).is_ok(), "{}: task does not build", s.id);
@@ -1088,6 +1184,10 @@ mod tests {
         assert!(
             parse_corpus("{\"id\":\"a\",\"lambda_ratio\":0.9}\n").is_err(),
             "ratio above the warm anchor must fail"
+        );
+        assert!(
+            parse_corpus("{\"id\":\"a\",\"precision\":\"f16\"}\n").is_err(),
+            "unknown precision must fail loudly"
         );
     }
 

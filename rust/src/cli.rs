@@ -116,6 +116,44 @@ impl Args {
         }
     }
 
+    /// Consume the global `--isa NAME` knob (kernel ISA override;
+    /// overrides `SKGLM_ISA`). Accepted names: `scalar`, `avx2`,
+    /// `avx2fma`, `neon`, `neonfma`, `auto`. Returns the name if present.
+    pub fn take_isa(&mut self) -> anyhow::Result<Option<String>> {
+        if self.has("isa") {
+            anyhow::bail!("--isa needs a value (e.g. --isa scalar)");
+        }
+        match self.get("isa") {
+            None => Ok(None),
+            Some(v) => {
+                let name = v.trim().to_ascii_lowercase();
+                if name == "auto" || crate::linalg::KernelIsa::parse(&name).is_some() {
+                    Ok(Some(name))
+                } else {
+                    anyhow::bail!(
+                        "--isa expects scalar|avx2|avx2fma|neon|neonfma|auto, got {v:?}"
+                    )
+                }
+            }
+        }
+    }
+
+    /// Consume the global `--precision MODE` knob (full-design pass
+    /// precision; overrides `SKGLM_PRECISION`). Returns the parsed mode
+    /// if present.
+    pub fn take_precision(&mut self) -> anyhow::Result<Option<crate::linalg::Precision>> {
+        if self.has("precision") {
+            anyhow::bail!("--precision needs a value (e.g. --precision mixed)");
+        }
+        match self.get("precision") {
+            None => Ok(None),
+            Some(v) => match crate::linalg::Precision::parse(v.trim()) {
+                Some(p) => Ok(Some(p)),
+                None => anyhow::bail!("--precision expects f64|f32|mixed, got {v:?}"),
+            },
+        }
+    }
+
     /// Error on unconsumed flags (call after all gets).
     pub fn finish(&self) -> anyhow::Result<()> {
         let unknown: Vec<&String> = self
@@ -251,6 +289,42 @@ mod tests {
         assert_eq!(d.take_batch().unwrap(), None);
         let mut e = parse("cv --batch sideways");
         assert!(e.take_batch().is_err());
+    }
+
+    #[test]
+    fn isa_flag_parses_and_validates() {
+        let mut a = parse("solve --isa scalar");
+        assert_eq!(a.take_isa().unwrap().as_deref(), Some("scalar"));
+        assert!(a.finish().is_ok());
+        let mut b = parse("solve --isa AVX2");
+        assert_eq!(b.take_isa().unwrap().as_deref(), Some("avx2"));
+        let mut c = parse("solve --isa auto");
+        assert_eq!(c.take_isa().unwrap().as_deref(), Some("auto"));
+        let mut d = parse("solve");
+        assert_eq!(d.take_isa().unwrap(), None);
+        let mut e = parse("solve --isa warp9");
+        assert!(e.take_isa().is_err());
+        // value forgotten: --isa parses as a switch and must error
+        let mut f = parse("solve --isa --small");
+        assert!(f.take_isa().is_err());
+    }
+
+    #[test]
+    fn precision_flag_parses_and_validates() {
+        use crate::linalg::Precision;
+        let mut a = parse("solve --precision mixed");
+        assert_eq!(a.take_precision().unwrap(), Some(Precision::Mixed));
+        assert!(a.finish().is_ok());
+        let mut b = parse("solve --precision f32");
+        assert_eq!(b.take_precision().unwrap(), Some(Precision::F32));
+        let mut c = parse("solve --precision f64");
+        assert_eq!(c.take_precision().unwrap(), Some(Precision::F64));
+        let mut d = parse("solve");
+        assert_eq!(d.take_precision().unwrap(), None);
+        let mut e = parse("solve --precision f16");
+        assert!(e.take_precision().is_err());
+        let mut f = parse("solve --precision --small");
+        assert!(f.take_precision().is_err());
     }
 
     #[test]

@@ -288,6 +288,9 @@ struct FusionCounters {
     panel_flops: AtomicU64,
     /// total modelled flops of those batched solves (panel ratio base)
     total_flops: AtomicU64,
+    /// modelled flops executed at reduced (f32/mixed) precision — kept
+    /// apart because scalar-f64 and vector-f32 flops are not comparable
+    reduced_precision_flops: AtomicU64,
 }
 
 impl FusionCounters {
@@ -297,16 +300,24 @@ impl FusionCounters {
         self.batched_fits.fetch_add(n_members as u64, Ordering::Relaxed);
         self.panel_flops.fetch_add(profile.panel_flops as u64, Ordering::Relaxed);
         self.total_flops.fetch_add(profile.total_flops() as u64, Ordering::Relaxed);
+        if profile.precision != crate::linalg::Precision::F64 {
+            self.reduced_precision_flops
+                .fetch_add(profile.total_flops() as u64, Ordering::Relaxed);
+        }
     }
 
     /// Record one fused *path* job: `n_members` sweeps coalesced, with
     /// flops accumulated across every λ point's batched solve.
-    fn record_path(&self, n_members: usize, panel_flops: f64, total_flops: f64) {
+    /// `reduced` marks flops executed at f32/mixed precision.
+    fn record_path(&self, n_members: usize, panel_flops: f64, total_flops: f64, reduced: bool) {
         // relaxed throughout: monotone counters, no publication (struct-level note)
         self.batched_jobs.fetch_add(1, Ordering::Relaxed);
         self.batched_fits.fetch_add(n_members as u64, Ordering::Relaxed);
         self.panel_flops.fetch_add(panel_flops as u64, Ordering::Relaxed);
         self.total_flops.fetch_add(total_flops as u64, Ordering::Relaxed);
+        if reduced {
+            self.reduced_precision_flops.fetch_add(total_flops as u64, Ordering::Relaxed);
+        }
     }
 
     fn snapshot(&self) -> FusionStats {
@@ -315,6 +326,8 @@ impl FusionCounters {
             batched_fits: self.batched_fits.load(Ordering::Relaxed),
             panel_flops: self.panel_flops.load(Ordering::Relaxed),
             total_flops: self.total_flops.load(Ordering::Relaxed),
+            reduced_precision_flops: self.reduced_precision_flops.load(Ordering::Relaxed),
+            kernel_isa: crate::linalg::simd::isa(),
         }
     }
 }
@@ -331,6 +344,12 @@ pub struct FusionStats {
     pub panel_flops: u64,
     /// total modelled flops of the batched solves
     pub total_flops: u64,
+    /// modelled flops executed at reduced (f32/mixed) precision —
+    /// scalar-f64 and vector-f32 flops are not comparable, so the split
+    /// travels with the totals
+    pub reduced_precision_flops: u64,
+    /// effective kernel ISA of this process (labels the flop counters)
+    pub kernel_isa: crate::linalg::KernelIsa,
 }
 
 impl FusionStats {
@@ -571,6 +590,7 @@ fn fusible_opts(a: &SolverOpts, b: &SolverOpts) -> bool {
         && a.anderson_m == b.anderson_m
         && a.inner_tol_ratio == b.inner_tol_ratio
         && a.inner == b.inner
+        && a.precision == b.precision
 }
 
 /// The scheduler: submit jobs, stream events, cancel, shut down cleanly.
@@ -1453,7 +1473,8 @@ fn run_path_batch(
                     ctl,
                 });
             }
-            fusion.record_path(n_fused, panel_flops, total_flops);
+            let reduced = opts.precision != crate::linalg::Precision::F64;
+            fusion.record_path(n_fused, panel_flops, total_flops, reduced);
             cache.enforce_budget_now();
             return if lead_requeued { RunOutcome::Requeued } else { RunOutcome::Terminal };
         }
@@ -1570,7 +1591,8 @@ fn run_path_batch(
             lock_or_recover(registry).remove(&m.id);
         }
     }
-    fusion.record_path(n_fused, panel_flops, total_flops);
+    let reduced = opts.precision != crate::linalg::Precision::F64;
+    fusion.record_path(n_fused, panel_flops, total_flops, reduced);
     cache.enforce_budget_now();
     RunOutcome::Terminal
 }

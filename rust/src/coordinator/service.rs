@@ -565,7 +565,7 @@ fn dispatch(frame: &Json, req: u64, conn: &mut ConnState, shared: &ServerShared)
         "ping" | "stats" | "shutdown" => &[],
         "submit" => &[
             "kind", "model", "dataset", "lambda_ratio", "grid", "params", "deadline_ms",
-            "priority", "tol",
+            "priority", "tol", "precision", "isa",
         ],
         "cancel" | "status" | "subscribe" => &["job"],
         _ => return error_frame(req, "unknown_verb", &format!("unknown verb {verb:?}")),
@@ -602,6 +602,11 @@ fn dispatch(frame: &Json, req: u64, conn: &mut ConnState, shared: &ServerShared)
                 .with("batched_fits", fusion.batched_fits as f64)
                 .with("fits_per_batch", fusion.fits_per_batch())
                 .with("panel_flop_ratio", fusion.panel_flop_ratio())
+                // kernel floor labels: flop counters are only comparable
+                // within one (isa, precision) combination
+                .with("reduced_precision_flops", fusion.reduced_precision_flops as f64)
+                .with("kernel_isa", crate::linalg::simd::isa().as_str())
+                .with("default_precision", crate::linalg::simd::default_precision().as_str())
         }
         "shutdown" => {
             shared.stop_requested.store(true, Ordering::SeqCst);
@@ -937,6 +942,49 @@ fn handle_submit(
             return error_frame(req, "bad_request", &format!("tol {tol} invalid"));
         }
         opts = opts.with_tol(tol);
+    }
+    // ---- kernel floor: precision is honored, isa is assert-only ------
+    // (the ISA is probed once per process; a submit cannot change it, so
+    // a concrete request that disagrees is a typed rejection, never a
+    // silent default)
+    if let Some(p) = frame.get("precision") {
+        let Some(name) = p.as_str() else {
+            return error_frame(req, "bad_precision", "precision must be a string");
+        };
+        match crate::linalg::Precision::parse(name) {
+            Some(prec) => opts = opts.with_precision(prec),
+            None => {
+                return error_frame(
+                    req,
+                    "bad_precision",
+                    &format!("unknown precision {name:?} (expected f64, f32 or mixed)"),
+                )
+            }
+        }
+    }
+    if let Some(i) = frame.get("isa") {
+        let Some(name) = i.as_str() else {
+            return error_frame(req, "bad_precision", "isa must be a string");
+        };
+        if name != "auto" {
+            let active = crate::linalg::simd::isa();
+            match crate::linalg::KernelIsa::parse(name) {
+                None => {
+                    return error_frame(req, "bad_precision", &format!("unknown isa {name:?}"))
+                }
+                Some(want) if want != active => {
+                    return error_frame(
+                        req,
+                        "bad_precision",
+                        &format!(
+                            "isa {name:?} is not active on this host (running {})",
+                            active.as_str()
+                        ),
+                    )
+                }
+                Some(_) => {}
+            }
+        }
     }
 
     // ---- fault plan (deterministic by accepted-submit index / seed) ----

@@ -219,6 +219,16 @@ fn drive(addr: &str, t: &mut Transcript) -> Result<(), ClientError> {
         err.render(),
     );
 
+    let err = c.request_frame(
+        "submit",
+        &[("model", Json::Str("lasso".into())), ("precision", Json::Str("f16".into()))],
+    )?;
+    t.record(
+        "unknown_precision_typed_error",
+        err.get("code").and_then(Json::as_str) == Some("bad_precision"),
+        err.render(),
+    );
+
     let pong = c.ping()?;
     t.record(
         "connection_survived_all_bad_input",

@@ -2,10 +2,12 @@
 //! hot loop is built from.
 //!
 //! Coordinate descent touches one column at a time, so the design matrix is
-//! stored column-major: `X[:, j]` is a contiguous slice. The kernels here
-//! (dot, axpy, nrm2) are written so LLVM auto-vectorises them; the 4-way
-//! manually unrolled variants exist because rustc does not always unroll
-//! reductions profitably on its own (measured in `benches/micro_kernels.rs`).
+//! stored column-major: `X[:, j]` is a contiguous slice. The public kernels
+//! (dot, axpy, the blocked panels) dispatch on the runtime-probed
+//! [`super::simd::KernelIsa`]; the `*_scalar` variants are the historical
+//! portable implementations, kept verbatim both as the `--isa scalar`
+//! floor (bit-identical to the pre-SIMD kernels) and as the reference the
+//! vector kernels are property-tested against.
 
 /// Panel width of the blocked `Xᵀr` micro-kernel: 8 f64 accumulators fit
 /// comfortably in vector registers while multiplying the reuse of each
@@ -109,14 +111,27 @@ impl DenseMatrix {
     }
 
     /// Blocked `Xᵀ r` over the column range `cols`: writes
-    /// `out[k] = X[:, cols.start + k]ᵀ r`. Columns are processed
+    /// `out[k] = X[:, cols.start + k]ᵀ r`, dispatched on the active
+    /// [`super::simd::KernelIsa`]. Under a vector ISA every output is the
+    /// dispatched [`dot`] of its column; under `--isa scalar` this is the
+    /// historical panel kernel, bit-identical to the pre-SIMD code.
+    pub fn matvec_t_panel(&self, r: &[f64], cols: std::ops::Range<usize>, out: &mut [f64]) {
+        super::simd::matvec_t_panel(self, r, cols, out)
+    }
+
+    /// The historical scalar panel kernel: columns are processed
     /// [`PANEL`] at a time so every loaded element of `r` is reused across
     /// the panel — the cache win over per-column [`dot`] (measured in
     /// `benches/micro_kernels.rs`). Panel membership is determined by the
     /// absolute column index when `cols.start` is PANEL-aligned (the
     /// kernel engine aligns its chunks), so results are independent of
     /// how the column space was split across threads.
-    pub fn matvec_t_panel(&self, r: &[f64], cols: std::ops::Range<usize>, out: &mut [f64]) {
+    pub(crate) fn matvec_t_panel_scalar(
+        &self,
+        r: &[f64],
+        cols: std::ops::Range<usize>,
+        out: &mut [f64],
+    ) {
         assert_eq!(r.len(), self.n);
         assert!(cols.end <= self.p);
         assert_eq!(out.len(), cols.end - cols.start);
@@ -149,7 +164,7 @@ impl DenseMatrix {
             o += PANEL;
         }
         while j < cols.end {
-            out[o] = dot(self.col(j), r);
+            out[o] = dot_scalar(self.col(j), r);
             j += 1;
             o += 1;
         }
@@ -164,12 +179,24 @@ impl DenseMatrix {
     /// element is reused across all `n_rhs` fits *and* across the 8-wide
     /// column panel.
     ///
-    /// Bitwise contract: for every `(j, c)` the summation order is
-    /// identical to [`DenseMatrix::matvec_t_panel`] on `R[:, c]` alone
-    /// (i-ascending inside full panels, [`dot`] on the remainder
-    /// columns), so batched scoring reproduces single-fit scoring
+    /// Bitwise contract: for every `(j, c)` the result is identical to
+    /// [`DenseMatrix::matvec_t_panel`] on `R[:, c]` alone under the same
+    /// active ISA, so batched scoring reproduces single-fit scoring
     /// bit-for-bit and stays independent of the thread split.
     pub fn matmul_t_panel(
+        &self,
+        r: &[f64],
+        n_rhs: usize,
+        cols: std::ops::Range<usize>,
+        out: &mut [f64],
+    ) {
+        super::simd::matmul_t_panel(self, r, n_rhs, cols, out)
+    }
+
+    /// The historical scalar multi-RHS kernel (i-ascending inside full
+    /// panels, [`dot_scalar`] on the remainder columns) — the
+    /// `--isa scalar` floor.
+    pub(crate) fn matmul_t_panel_scalar(
         &self,
         r: &[f64],
         n_rhs: usize,
@@ -180,7 +207,7 @@ impl DenseMatrix {
         assert!(cols.end <= self.p);
         assert_eq!(out.len(), (cols.end - cols.start) * n_rhs);
         if n_rhs == 1 {
-            return self.matvec_t_panel(r, cols, out);
+            return self.matvec_t_panel_scalar(r, cols, out);
         }
         if n_rhs == 0 {
             return;
@@ -223,7 +250,7 @@ impl DenseMatrix {
         while j < cols.end {
             let col = self.col(j);
             for c in 0..n_rhs {
-                out[o + c] = dot(col, &r[c * n..(c + 1) * n]);
+                out[o + c] = dot_scalar(col, &r[c * n..(c + 1) * n]);
             }
             j += 1;
             o += n_rhs;
@@ -231,14 +258,19 @@ impl DenseMatrix {
     }
 
     /// Gathered blocked dots: `out[k] = X[:, cols[k]]ᵀ r` for an
-    /// **arbitrary** (not necessarily contiguous) column list. Columns are
-    /// processed [`PANEL`] at a time so every loaded element of `r` is
-    /// reused across the panel — the working-set Gram assembly kernel
-    /// (`r` is itself a design column there). Each panel's summation
-    /// order depends only on the position inside `cols`, so splitting
-    /// `cols` across threads at PANEL-aligned boundaries keeps results
-    /// thread-count independent.
+    /// **arbitrary** (not necessarily contiguous) column list — the
+    /// working-set Gram assembly kernel (`r` is itself a design column
+    /// there), dispatched on the active [`super::simd::KernelIsa`].
     pub fn gather_dots_panel(&self, r: &[f64], cols: &[usize], out: &mut [f64]) {
+        super::simd::gather_dots_panel(self, r, cols, out)
+    }
+
+    /// The historical scalar gather kernel: columns are processed
+    /// [`PANEL`] at a time so every loaded element of `r` is reused
+    /// across the panel. Each panel's summation order depends only on
+    /// the position inside `cols`, so splitting `cols` across threads at
+    /// PANEL-aligned boundaries keeps results thread-count independent.
+    pub(crate) fn gather_dots_panel_scalar(&self, r: &[f64], cols: &[usize], out: &mut [f64]) {
         assert_eq!(r.len(), self.n);
         assert_eq!(out.len(), cols.len());
         let n = self.n;
@@ -268,7 +300,7 @@ impl DenseMatrix {
             k += PANEL;
         }
         while k < cols.len() {
-            out[k] = dot(self.col(cols[k]), r);
+            out[k] = dot_scalar(self.col(cols[k]), r);
             k += 1;
         }
     }
@@ -312,10 +344,19 @@ impl DenseMatrix {
     }
 }
 
-/// Dot product with 4-way unrolled accumulators (keeps the FP dependency
-/// chain short so the compiler vectorises the reduction).
+/// Dot product, dispatched on the active [`super::simd::KernelIsa`].
+/// Non-FMA ISAs (incl. `--isa scalar`) are bit-exact against the scalar
+/// `dot_scalar`; FMA ISAs agree to ≤ 1e-12 relative.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    super::simd::dot(a, b)
+}
+
+/// The historical scalar dot: 4-way unrolled accumulators (lane ℓ owns
+/// indices `4k+ℓ`), reduced `(s0+s1)+(s2+s3)`, sequential tail. The
+/// vector kernels reproduce exactly this lane order.
+#[inline]
+pub(crate) fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
     let chunks = n / 4;
@@ -334,9 +375,16 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x`, dispatched on the active [`super::simd::KernelIsa`].
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    super::simd::axpy(alpha, x, y)
+}
+
+/// The historical scalar axpy (element-wise, so every non-FMA vector
+/// variant is bit-exact against it).
+#[inline]
+pub(crate) fn axpy_scalar(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
     for (yi, xi) in y.iter_mut().zip(x.iter()) {
         *yi += alpha * xi;

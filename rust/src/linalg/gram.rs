@@ -27,6 +27,7 @@
 
 use super::design::Design;
 use super::parallel::{self, KernelPolicy};
+use super::simd::{self, Precision, ShadowF32};
 use crate::util::lock_or_recover;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -56,6 +57,16 @@ pub struct GramStore {
     scratch: Vec<f64>,
     /// cumulative stored-entry touches spent assembling blocks
     assembly_flops: u64,
+    /// precision of dense off-diagonal assembly ([`Precision::F64`] uses
+    /// the gather-dot panel kernel; reduced modes go through an f32
+    /// shadow of the design). Diagonals are **always** computed in f64 —
+    /// the [`GramStore::check_same_design`] spoof guard compares them
+    /// bitwise against `sq_nrm2`. Sparse designs always assemble in f64.
+    precision: Precision,
+    /// lazily-built f32 design mirror for reduced-precision assembly;
+    /// accounted as design-side storage, *not* against the Gram byte
+    /// budget (evicting triangle slots could never reclaim it)
+    shadow: Option<ShadowF32>,
     /// identity of the design the blocks belong to, recorded at first
     /// admit: (nrows, ncols, stored entries). A store paired with a
     /// different design would silently return wrong gradients; this
@@ -66,6 +77,16 @@ pub struct GramStore {
 impl GramStore {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A store whose dense off-diagonal blocks are assembled at `prec`.
+    pub fn with_precision(prec: Precision) -> Self {
+        Self { precision: prec, ..Self::default() }
+    }
+
+    /// Assembly precision of dense off-diagonal blocks.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// Number of admitted columns.
@@ -182,19 +203,38 @@ impl GramStore {
             Design::Dense(m) => {
                 let r = m.col(j);
                 let threads = KernelPolicy::global().threads_for(m.nrows() * (k + 1));
-                // PANEL-aligned boundaries: a slot's panel membership (and
-                // hence its summation order) depends only on its position
-                // in the row, never on the thread count — same invariant
-                // as the kernel engine's Xᵀr pass
-                let ranges = parallel::even_chunks_aligned(
-                    k,
-                    parallel::chunk_count(threads),
-                    super::dense::PANEL,
-                );
-                let cols = &self.cols;
-                parallel::par_slices(&mut row[..k], &ranges, threads, |_, rng, sub| {
-                    m.gather_dots_panel(r, &cols[rng], sub);
-                });
+                if self.precision == Precision::F64 {
+                    // PANEL-aligned boundaries: a slot's panel membership
+                    // (and hence its summation order) depends only on its
+                    // position in the row, never on the thread count —
+                    // same invariant as the kernel engine's Xᵀr pass
+                    let ranges = parallel::even_chunks_aligned(
+                        k,
+                        parallel::chunk_count(threads),
+                        super::dense::PANEL,
+                    );
+                    let cols = &self.cols;
+                    parallel::par_slices(&mut row[..k], &ranges, threads, |_, rng, sub| {
+                        m.gather_dots_panel(r, &cols[rng], sub);
+                    });
+                } else {
+                    // reduced precision: one shadow pair-dot per slot. The
+                    // reduced dots have a fixed 4-lane order on every ISA,
+                    // so the blocks are bit-identical across hosts.
+                    let shadow = self.shadow.get_or_insert_with(|| ShadowF32::from_dense(m));
+                    let shadow = &*shadow;
+                    let rj = shadow.col(j);
+                    let prec = self.precision;
+                    let ranges = parallel::even_chunks(k, parallel::chunk_count(threads));
+                    let cols = &self.cols;
+                    parallel::par_slices(&mut row[..k], &ranges, threads, |_, rng, sub| {
+                        for (o, &c) in sub.iter_mut().zip(cols[rng].iter()) {
+                            *o = simd::reduced_dot(prec, shadow.col(c), rj);
+                        }
+                    });
+                }
+                // diagonal always f64: the same-design spoof guard
+                // recomputes it bitwise via `sq_nrm2`
                 row[k] = super::dense::sq_nrm2(r);
                 self.assembly_flops += (m.nrows() * (k + 1)) as u64;
             }
@@ -302,6 +342,9 @@ pub const DEFAULT_GRAM_BUDGET: usize = 256 << 20;
 pub struct GramCache {
     store: Mutex<GramStore>,
     budget: usize,
+    /// dense off-diagonal assembly precision (mirrors the store's; kept
+    /// here so callers can read it without taking the store mutex)
+    precision: Precision,
     evicted_slots: AtomicUsize,
     /// byte footprint mirrored out of the store after every mutation, so
     /// accounting callers (the scheduler cache's budget enforcement)
@@ -328,9 +371,15 @@ impl Default for GramCache {
 
 impl GramCache {
     pub fn with_budget(budget_bytes: usize) -> Self {
+        Self::with_budget_at(budget_bytes, Precision::F64)
+    }
+
+    /// A cache whose dense off-diagonal blocks are assembled at `prec`.
+    pub fn with_budget_at(budget_bytes: usize, prec: Precision) -> Self {
         Self {
-            store: Mutex::new(GramStore::new()),
+            store: Mutex::new(GramStore::with_precision(prec)),
             budget: budget_bytes.max(1),
+            precision: prec,
             evicted_slots: AtomicUsize::new(0),
             cur_bytes: AtomicUsize::new(0),
         }
@@ -338,7 +387,21 @@ impl GramCache {
 
     /// [`DEFAULT_GRAM_BUDGET`], or the `SKGLM_GRAM_BYTES` override.
     pub fn with_default_budget() -> Self {
-        Self::with_budget(crate::util::env_byte_budget("SKGLM_GRAM_BYTES", DEFAULT_GRAM_BUDGET))
+        Self::with_default_budget_at(Precision::F64)
+    }
+
+    /// [`GramCache::with_default_budget`] at an explicit assembly
+    /// precision.
+    pub fn with_default_budget_at(prec: Precision) -> Self {
+        Self::with_budget_at(
+            crate::util::env_byte_budget("SKGLM_GRAM_BYTES", DEFAULT_GRAM_BUDGET),
+            prec,
+        )
+    }
+
+    /// Assembly precision of dense off-diagonal blocks.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// Admit `ws` (respecting the byte budget) and gather the symmetric
@@ -518,6 +581,53 @@ mod tests {
         // the gathered block is still correct after eviction
         assert!((gw[0] - reference_pair(&d, 8, 8)).abs() < 1e-12);
         assert!((gw[1] - reference_pair(&d, 8, 9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reduced_precision_blocks_track_f64_with_f64_diagonals() {
+        let d = dense_design();
+        let ws = [3usize, 0, 7, 5];
+        let mut exact = GramStore::new();
+        exact.ensure(&d, &ws);
+        let mut ge = Vec::new();
+        exact.gather(&ws, &mut ge);
+        for prec in [Precision::Mixed, Precision::F32] {
+            let mut store = GramStore::with_precision(prec);
+            assert_eq!(store.precision(), prec);
+            store.ensure(&d, &ws);
+            let mut gw = Vec::new();
+            store.gather(&ws, &mut gw);
+            let m = ws.len();
+            for k in 0..m {
+                for l in 0..m {
+                    let (got, want) = (gw[k * m + l], ge[k * m + l]);
+                    if k == l {
+                        // diagonals stay exact: the same-design guard
+                        // compares them bitwise against sq_nrm2
+                        assert!(got == want, "{prec:?} diag[{k}] = {got} vs {want}");
+                    } else {
+                        let scale = want.abs().max(1.0);
+                        assert!(
+                            (got - want).abs() <= 1e-4 * scale,
+                            "{prec:?} G[{k}][{l}] = {got} vs {want}"
+                        );
+                    }
+                }
+            }
+            // re-ensuring on the same design passes the spoof guard
+            store.ensure(&d, &ws);
+        }
+    }
+
+    #[test]
+    fn precision_cache_reports_its_mode() {
+        let cache = GramCache::with_default_budget_at(Precision::Mixed);
+        assert_eq!(cache.precision(), Precision::Mixed);
+        assert_eq!(GramCache::with_default_budget().precision(), Precision::F64);
+        let d = dense_design();
+        let mut gw = Vec::new();
+        cache.ensure_gather(&d, &[1, 4, 9], &mut gw);
+        assert_eq!(cache.n_slots(), 3);
     }
 
     #[test]

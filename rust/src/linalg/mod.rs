@@ -7,10 +7,12 @@ pub mod dense;
 pub mod design;
 pub mod gram;
 pub mod parallel;
+pub mod simd;
 pub mod sparse;
 
 pub use dense::{axpy, dot, norm1, norm_inf, nrm2, sq_nrm2, DenseMatrix};
 pub use design::{group_reduce_sq, Design};
 pub use gram::{GramCache, GramStore};
 pub use parallel::KernelPolicy;
+pub use simd::{KernelIsa, Precision, ShadowF32};
 pub use sparse::CscMatrix;

@@ -1,0 +1,1464 @@
+//! Runtime-dispatched SIMD micro-kernels and the precision ladder.
+//!
+//! The repo's hot kernels (`dot`, `axpy`, the blocked `Xᵀr` panels, the
+//! multi-RHS batched panel, the gathered Gram-assembly dots) no longer
+//! rely on LLVM auto-vectorisation: this module probes the CPU **once**
+//! per process ([`isa`]) and dispatches `#[target_feature]`-compiled
+//! variants — AVX2 / AVX2+FMA on x86_64, NEON / NEON+FMA on aarch64,
+//! scalar everywhere else. The probe is overridable for testing and
+//! reproducibility with `--isa` / `SKGLM_ISA`.
+//!
+//! # Bit-identity contract (per ISA)
+//!
+//! The PR 2 contract — coefficients are bit-identical across thread
+//! counts — is preserved *per ISA* by construction:
+//!
+//! * `--isa scalar` routes every kernel to the untouched pre-SIMD code
+//!   paths in [`super::dense`], so the scalar floor is bit-identical to
+//!   the historical kernels.
+//! * Every vector `dot` accumulates in the **same fixed 4-lane order**
+//!   as the scalar `dense::dot_scalar` (lane ℓ owns indices `4k+ℓ`,
+//!   reduced as `(l0+l1)+(l2+l3)`, sequential tail), so the non-FMA
+//!   vector dots are **bit-exact** against scalar.
+//! * The vector panel kernels produce, for every `(column, rhs)` pair,
+//!   exactly the dispatched `dot` of that column — the result depends
+//!   only on the column and the right-hand side, never on how the
+//!   column space was split across threads or panels. FMA variants fuse
+//!   the multiply-add (≤ 1e-12 relative vs scalar) but keep the same
+//!   lane order, so they are equally split-invariant.
+//!
+//! # Precision ladder
+//!
+//! [`Precision`] selects how the O(n·p) full-design passes are
+//! evaluated: `f64` (default), `f32` (f32 storage *and* accumulation)
+//! or `mixed` (f32 storage and multiply, f64 accumulation). Reduced
+//! precision applies to the *design path only* — scoring scans, Gram
+//! assembly off-diagonals and the batched residual panel; inner CD
+//! epochs, KKT and certificate checks always run in f64. The reduced
+//! kernels have **no FMA variant** and use one fixed 4-lane order, so
+//! their results are bit-identical across every ISA. Reduced storage
+//! lives in 32-byte-aligned buffers ([`ShadowF32`]) so vector loads are
+//! never split across cache lines.
+
+use super::dense::DenseMatrix;
+use super::parallel::{self, KernelPolicy};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// The instruction-set floor the kernel layer dispatches on. Probed once
+/// per process ([`isa`]); `Scalar` is always available and bit-identical
+/// to the pre-SIMD kernels.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KernelIsa {
+    /// Portable scalar kernels (the historical code paths).
+    #[default]
+    Scalar,
+    /// AVX2 256-bit kernels, separate multiply + add (bit-exact vs scalar).
+    Avx2,
+    /// AVX2 with fused multiply-add (≤ 1e-12 relative vs scalar).
+    Avx2Fma,
+    /// NEON 128-bit kernels, separate multiply + add (bit-exact vs scalar).
+    Neon,
+    /// NEON with fused multiply-add (≤ 1e-12 relative vs scalar).
+    NeonFma,
+}
+
+impl KernelIsa {
+    /// Stable lowercase name (CLI/env/wire spelling).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::Avx2 => "avx2",
+            KernelIsa::Avx2Fma => "avx2fma",
+            KernelIsa::Neon => "neon",
+            KernelIsa::NeonFma => "neonfma",
+        }
+    }
+
+    /// Parse a concrete ISA name (`"auto"` is handled by the callers
+    /// that own the probe).
+    pub fn parse(s: &str) -> Option<KernelIsa> {
+        match s {
+            "scalar" => Some(KernelIsa::Scalar),
+            "avx2" => Some(KernelIsa::Avx2),
+            "avx2fma" => Some(KernelIsa::Avx2Fma),
+            "neon" => Some(KernelIsa::Neon),
+            "neonfma" => Some(KernelIsa::NeonFma),
+            _ => None,
+        }
+    }
+
+    /// Whether this variant fuses multiply-adds (then only ≤ 1e-12
+    /// relative agreement with scalar is guaranteed, not bit-equality).
+    pub fn is_fma(self) -> bool {
+        matches!(self, KernelIsa::Avx2Fma | KernelIsa::NeonFma)
+    }
+
+    /// Whether the current CPU can execute this variant.
+    pub fn supported(self) -> bool {
+        match self {
+            KernelIsa::Scalar => true,
+            KernelIsa::Avx2 | KernelIsa::Avx2Fma => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    let avx2 = std::arch::is_x86_feature_detected!("avx2");
+                    if self == KernelIsa::Avx2 {
+                        avx2
+                    } else {
+                        avx2 && std::arch::is_x86_feature_detected!("fma")
+                    }
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            KernelIsa::Neon | KernelIsa::NeonFma => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    std::arch::is_aarch64_feature_detected!("neon")
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+}
+
+/// Best ISA the current CPU supports (ignores the env/CLI override).
+pub fn detect() -> KernelIsa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            if std::arch::is_x86_feature_detected!("fma") {
+                return KernelIsa::Avx2Fma;
+            }
+            return KernelIsa::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return KernelIsa::NeonFma;
+        }
+    }
+    KernelIsa::Scalar
+}
+
+const ISA_UNSET: u8 = u8::MAX;
+
+/// Process-wide active ISA. One probe per process keeps the dispatch a
+/// single atomic load and keeps `GramCache`'s bitwise same-design guard
+/// valid (all kernels in a process agree on the ISA).
+static ACTIVE_ISA: AtomicU8 = AtomicU8::new(ISA_UNSET);
+
+fn encode(isa: KernelIsa) -> u8 {
+    match isa {
+        KernelIsa::Scalar => 0,
+        KernelIsa::Avx2 => 1,
+        KernelIsa::Avx2Fma => 2,
+        KernelIsa::Neon => 3,
+        KernelIsa::NeonFma => 4,
+    }
+}
+
+fn decode(v: u8) -> KernelIsa {
+    match v {
+        1 => KernelIsa::Avx2,
+        2 => KernelIsa::Avx2Fma,
+        3 => KernelIsa::Neon,
+        4 => KernelIsa::NeonFma,
+        _ => KernelIsa::Scalar,
+    }
+}
+
+fn probe() -> KernelIsa {
+    if let Ok(v) = std::env::var("SKGLM_ISA") {
+        if let Some(req) = KernelIsa::parse(&v) {
+            return if req.supported() { req } else { KernelIsa::Scalar };
+        }
+        // "auto" (or an unvalidated value reaching the env directly)
+        // falls through to detection; the CLI and the service validate
+        // spellings before they get here.
+    }
+    detect()
+}
+
+/// The active ISA for this process (probing on first use).
+pub fn isa() -> KernelIsa {
+    let cur = ACTIVE_ISA.load(Ordering::Acquire);
+    if cur != ISA_UNSET {
+        return decode(cur);
+    }
+    install(probe())
+}
+
+/// Pin the process ISA (first caller wins; unsupported requests clamp to
+/// `Scalar`). Returns the ISA actually in effect — callers that pinned
+/// after a kernel already ran get the earlier winner back.
+pub fn set_isa_override(req: KernelIsa) -> KernelIsa {
+    let eff = if req.supported() { req } else { KernelIsa::Scalar };
+    install(eff)
+}
+
+/// Resolve a CLI/env ISA spelling (including `"auto"`) and pin it.
+/// Returns `None` for an unknown name, leaving the probe untouched.
+pub fn install_isa(name: &str) -> Option<KernelIsa> {
+    if name == "auto" {
+        return Some(set_isa_override(detect()));
+    }
+    KernelIsa::parse(name).map(set_isa_override)
+}
+
+fn install(isa: KernelIsa) -> KernelIsa {
+    let swapped =
+        ACTIVE_ISA.compare_exchange(ISA_UNSET, encode(isa), Ordering::AcqRel, Ordering::Acquire);
+    match swapped {
+        Ok(_) => isa,
+        Err(winner) => decode(winner),
+    }
+}
+
+/// Numeric precision of the full-design passes (scoring scans, Gram
+/// off-diagonals, batched residual panels). KKT and certificate checks
+/// always run in f64 regardless of this setting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Everything in f64 (the default; the historical behaviour).
+    #[default]
+    F64,
+    /// f32 design storage, f32 multiply *and* accumulation.
+    F32,
+    /// f32 design storage and multiply, f64 accumulation.
+    Mixed,
+}
+
+impl Precision {
+    /// Stable lowercase name (CLI/env/wire spelling).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+            Precision::Mixed => "mixed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f64" => Some(Precision::F64),
+            "f32" => Some(Precision::F32),
+            "mixed" => Some(Precision::Mixed),
+            _ => None,
+        }
+    }
+
+    /// Smallest KKT tolerance a solve at this precision can honour: the
+    /// reduced-precision gradient is quantised at roughly the storage
+    /// epsilon, so the (always-f64) KKT check cannot be driven below
+    /// this floor. Solvers clamp `tol` to `max(tol, floor)`.
+    pub fn tol_floor(self) -> f64 {
+        match self {
+            Precision::F64 => 0.0,
+            Precision::Mixed => 1e-6,
+            Precision::F32 => 5e-4,
+        }
+    }
+}
+
+/// Process default precision (`SKGLM_PRECISION`, set by `--precision`);
+/// `SolverOpts::default()` starts from this.
+pub fn default_precision() -> Precision {
+    std::env::var("SKGLM_PRECISION")
+        .ok()
+        .and_then(|v| Precision::parse(&v))
+        .unwrap_or_default()
+}
+
+// ---------------------------------------------------------------------------
+// f64 kernels: dispatch wrappers
+// ---------------------------------------------------------------------------
+
+/// Dispatched dot product. Non-FMA ISAs are bit-exact against
+/// `dense::dot_scalar`; FMA ISAs agree to ≤ 1e-12 relative.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    dot_with(isa(), a, b)
+}
+
+/// [`dot`] pinned to a specific ISA (bench/test entry point).
+pub fn dot_with(which: KernelIsa, a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    match which {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm is only selected when AVX2 was detected at
+        // runtime (probe/override clamp unsupported requests to Scalar).
+        KernelIsa::Avx2 => unsafe { x86::dot_avx2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: only selected when AVX2+FMA were detected at runtime.
+        KernelIsa::Avx2Fma => unsafe { x86::dot_fma(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: only selected when NEON was detected at runtime.
+        KernelIsa::Neon => unsafe { aarch::dot_neon(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: only selected when NEON was detected at runtime.
+        KernelIsa::NeonFma => unsafe { aarch::dot_neonfma(a, b) },
+        _ => super::dense::dot_scalar(a, b),
+    }
+}
+
+/// Dispatched `y += alpha·x` (element-wise, so every non-FMA variant is
+/// bit-exact against the scalar loop).
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    axpy_with(isa(), alpha, x, y)
+}
+
+/// [`axpy`] pinned to a specific ISA.
+pub fn axpy_with(which: KernelIsa, alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    match which {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: only selected when AVX2 was detected at runtime.
+        KernelIsa::Avx2 => unsafe { x86::axpy_avx2(alpha, x, y) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: only selected when AVX2+FMA were detected at runtime.
+        KernelIsa::Avx2Fma => unsafe { x86::axpy_fma(alpha, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: only selected when NEON was detected at runtime.
+        KernelIsa::Neon => unsafe { aarch::axpy_neon(alpha, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: only selected when NEON was detected at runtime.
+        KernelIsa::NeonFma => unsafe { aarch::axpy_neonfma(alpha, x, y) },
+        _ => super::dense::axpy_scalar(alpha, x, y),
+    }
+}
+
+/// Dispatched blocked `Xᵀr` over a contiguous column range (see
+/// [`DenseMatrix::matvec_t_panel`] for the layout contract). Under a
+/// vector ISA every output equals the dispatched [`dot`] of its column,
+/// so results are independent of the thread/panel split.
+pub fn matvec_t_panel(m: &DenseMatrix, r: &[f64], cols: Range<usize>, out: &mut [f64]) {
+    matvec_t_panel_with(isa(), m, r, cols, out)
+}
+
+/// [`matvec_t_panel`] pinned to a specific ISA.
+pub fn matvec_t_panel_with(
+    which: KernelIsa,
+    m: &DenseMatrix,
+    r: &[f64],
+    cols: Range<usize>,
+    out: &mut [f64],
+) {
+    assert_eq!(r.len(), m.nrows());
+    assert!(cols.end <= m.ncols());
+    assert_eq!(out.len(), cols.end - cols.start);
+    match which {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: only selected when AVX2 was detected at runtime.
+        KernelIsa::Avx2 => unsafe { x86::matvec_avx2(m, r, cols, out) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: only selected when AVX2+FMA were detected at runtime.
+        KernelIsa::Avx2Fma => unsafe { x86::matvec_fma(m, r, cols, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: only selected when NEON was detected at runtime.
+        KernelIsa::Neon => unsafe { aarch::matvec_neon(m, r, cols, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: only selected when NEON was detected at runtime.
+        KernelIsa::NeonFma => unsafe { aarch::matvec_neonfma(m, r, cols, out) },
+        _ => m.matvec_t_panel_scalar(r, cols, out),
+    }
+}
+
+/// Dispatched multi-RHS panel `Xᵀ R` (see
+/// [`DenseMatrix::matmul_t_panel`] for the feature-major layout). Under
+/// a vector ISA every `(column, rhs)` output equals the dispatched
+/// [`dot`], bit-identical to the single-RHS panel on that rhs alone.
+pub fn matmul_t_panel(
+    m: &DenseMatrix,
+    r: &[f64],
+    n_rhs: usize,
+    cols: Range<usize>,
+    out: &mut [f64],
+) {
+    matmul_t_panel_with(isa(), m, r, n_rhs, cols, out)
+}
+
+/// [`matmul_t_panel`] pinned to a specific ISA.
+pub fn matmul_t_panel_with(
+    which: KernelIsa,
+    m: &DenseMatrix,
+    r: &[f64],
+    n_rhs: usize,
+    cols: Range<usize>,
+    out: &mut [f64],
+) {
+    assert_eq!(r.len(), m.nrows() * n_rhs);
+    assert!(cols.end <= m.ncols());
+    assert_eq!(out.len(), (cols.end - cols.start) * n_rhs);
+    if n_rhs == 1 {
+        return matvec_t_panel_with(which, m, r, cols, out);
+    }
+    if n_rhs == 0 {
+        return;
+    }
+    match which {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: only selected when AVX2 was detected at runtime.
+        KernelIsa::Avx2 => unsafe { x86::matmul_avx2(m, r, n_rhs, cols, out) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: only selected when AVX2+FMA were detected at runtime.
+        KernelIsa::Avx2Fma => unsafe { x86::matmul_fma(m, r, n_rhs, cols, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: only selected when NEON was detected at runtime.
+        KernelIsa::Neon => unsafe { aarch::matmul_neon(m, r, n_rhs, cols, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: only selected when NEON was detected at runtime.
+        KernelIsa::NeonFma => unsafe { aarch::matmul_neonfma(m, r, n_rhs, cols, out) },
+        _ => m.matmul_t_panel_scalar(r, n_rhs, cols, out),
+    }
+}
+
+/// Dispatched gathered dots (the Gram-assembly kernel; see
+/// [`DenseMatrix::gather_dots_panel`]). Under a vector ISA every output
+/// equals the dispatched [`dot`] of its column, so splitting the column
+/// list across threads cannot change the result.
+pub fn gather_dots_panel(m: &DenseMatrix, r: &[f64], cols: &[usize], out: &mut [f64]) {
+    gather_dots_panel_with(isa(), m, r, cols, out)
+}
+
+/// [`gather_dots_panel`] pinned to a specific ISA.
+pub fn gather_dots_panel_with(
+    which: KernelIsa,
+    m: &DenseMatrix,
+    r: &[f64],
+    cols: &[usize],
+    out: &mut [f64],
+) {
+    assert_eq!(r.len(), m.nrows());
+    assert_eq!(out.len(), cols.len());
+    match which {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: only selected when AVX2 was detected at runtime.
+        KernelIsa::Avx2 => unsafe { x86::gather_avx2(m, r, cols, out) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: only selected when AVX2+FMA were detected at runtime.
+        KernelIsa::Avx2Fma => unsafe { x86::gather_fma(m, r, cols, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: only selected when NEON was detected at runtime.
+        KernelIsa::Neon => unsafe { aarch::gather_neon(m, r, cols, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: only selected when NEON was detected at runtime.
+        KernelIsa::NeonFma => unsafe { aarch::gather_neonfma(m, r, cols, out) },
+        _ => m.gather_dots_panel_scalar(r, cols, out),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reduced-precision kernels (no FMA variants: bit-identical across ISAs)
+// ---------------------------------------------------------------------------
+
+/// Fixed-order scalar reference for the `mixed` dot: products rounded
+/// to f32, widened, accumulated in f64 over the same 4 lanes the vector
+/// kernels use. Every ISA reproduces this bit-for-bit.
+pub fn dot_mixed_scalar(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for k in 0..chunks {
+        let i = 4 * k;
+        s0 += (a[i] * b[i]) as f64;
+        s1 += (a[i + 1] * b[i + 1]) as f64;
+        s2 += (a[i + 2] * b[i + 2]) as f64;
+        s3 += (a[i + 3] * b[i + 3]) as f64;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        s += (a[i] * b[i]) as f64;
+    }
+    s
+}
+
+/// Fixed-order scalar reference for the `f32` dot: f32 multiply *and*
+/// accumulation over 4 lanes, widened once at the end. Every ISA
+/// reproduces this bit-for-bit.
+pub fn dot_f32_scalar(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for k in 0..chunks {
+        let i = 4 * k;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s as f64
+}
+
+/// Dispatched `mixed` dot (f32 multiply, f64 accumulate).
+#[inline]
+pub fn dot_mixed(a: &[f32], b: &[f32]) -> f64 {
+    dot_mixed_with(isa(), a, b)
+}
+
+/// [`dot_mixed`] pinned to a specific ISA.
+pub fn dot_mixed_with(which: KernelIsa, a: &[f32], b: &[f32]) -> f64 {
+    match which {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: only selected when AVX2 (hence AVX) was detected at runtime.
+        KernelIsa::Avx2 | KernelIsa::Avx2Fma => unsafe { x86::dot_mixed_avx(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: only selected when NEON was detected at runtime.
+        KernelIsa::Neon | KernelIsa::NeonFma => unsafe { aarch::dot_mixed_neon(a, b) },
+        _ => dot_mixed_scalar(a, b),
+    }
+}
+
+/// Dispatched `f32` dot (f32 multiply and accumulate).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+    dot_f32_with(isa(), a, b)
+}
+
+/// [`dot_f32`] pinned to a specific ISA.
+pub fn dot_f32_with(which: KernelIsa, a: &[f32], b: &[f32]) -> f64 {
+    match which {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: only selected when AVX2 was detected at runtime.
+        KernelIsa::Avx2 | KernelIsa::Avx2Fma => unsafe { x86::dot_f32_sse(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: only selected when NEON was detected at runtime.
+        KernelIsa::Neon | KernelIsa::NeonFma => unsafe { aarch::dot_f32_neon(a, b) },
+        _ => dot_f32_scalar(a, b),
+    }
+}
+
+/// Dispatched reduced-precision dot for `prec` (which must not be
+/// [`Precision::F64`] — that path never builds an f32 shadow).
+#[inline]
+pub fn reduced_dot(prec: Precision, a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_ne!(prec, Precision::F64);
+    match prec {
+        Precision::F32 => dot_f32(a, b),
+        _ => dot_mixed(a, b),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 32-byte-aligned f32 design shadow
+// ---------------------------------------------------------------------------
+
+/// 32-byte-aligned f32 copy of a dense design: column-major, each
+/// column padded to a multiple of 8 f32 so every column starts on a
+/// 32-byte boundary and vector loads are never split.
+#[derive(Clone, Debug)]
+pub struct ShadowF32 {
+    n: usize,
+    p: usize,
+    stride: usize,
+    off: usize,
+    data: Vec<f32>,
+}
+
+impl ShadowF32 {
+    /// Round-to-f32 copy of `m` (one pass over the design).
+    pub fn from_dense(m: &DenseMatrix) -> Self {
+        let n = m.nrows();
+        let p = m.ncols();
+        let stride = n.div_ceil(8) * 8;
+        // over-allocate 7 elements so the aligned window always fits
+        let data = vec![0.0f32; stride * p + 7];
+        let off = data.as_ptr().align_offset(32);
+        debug_assert!(off <= 7);
+        let mut s = Self { n, p, stride, off, data };
+        for j in 0..p {
+            let col = m.col(j);
+            let base = s.off + j * s.stride;
+            for (i, &v) in col.iter().enumerate() {
+                s.data[base + i] = v as f32;
+            }
+        }
+        s
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.p
+    }
+
+    /// 32-byte-aligned column slice (length `n`, padding excluded).
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f32] {
+        debug_assert!(j < self.p);
+        let base = self.off + j * self.stride;
+        &self.data[base..base + self.n]
+    }
+
+    /// Heap bytes held by the shadow (budget accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Round a f64 slice into a reusable f32 scratch buffer.
+pub fn to_f32(src: &[f64], dst: &mut Vec<f32>) {
+    dst.clear();
+    dst.extend(src.iter().map(|&v| v as f32));
+}
+
+/// Reduced-precision scoring scan: `out[j] = scale · dot_prec(col j,
+/// r32)` over every shadow column, parallelised like
+/// `Design::matvec_t` (per-column results are split-invariant, so no
+/// panel alignment is needed).
+pub fn shadow_matvec_t(s: &ShadowF32, r32: &[f32], prec: Precision, scale: f64, out: &mut [f64]) {
+    assert_eq!(r32.len(), s.n);
+    assert_eq!(out.len(), s.p);
+    let threads = KernelPolicy::global().threads_for(s.n * s.p);
+    let ranges = parallel::even_chunks(s.p, parallel::chunk_count(threads));
+    parallel::par_slices(out, &ranges, threads, |_, cols, sub| {
+        for (o, j) in cols.enumerate() {
+            sub[o] = scale * reduced_dot(prec, s.col(j), r32);
+        }
+    });
+}
+
+/// Reduced-precision multi-RHS panel scan: feature-major output
+/// (`out[j·n_rhs + c]`), mirroring `Design::matmul_t`.
+pub fn shadow_matmul_t(
+    s: &ShadowF32,
+    panel32: &[f32],
+    n_rhs: usize,
+    prec: Precision,
+    out: &mut [f64],
+) {
+    assert_eq!(panel32.len(), s.n * n_rhs);
+    assert_eq!(out.len(), s.p * n_rhs);
+    if n_rhs == 0 {
+        return;
+    }
+    let threads = KernelPolicy::global().threads_for(s.n * s.p * n_rhs);
+    let col_ranges = parallel::even_chunks(s.p, parallel::chunk_count(threads));
+    let out_ranges: Vec<Range<usize>> = col_ranges
+        .iter()
+        .map(|r| r.start * n_rhs..r.end * n_rhs)
+        .collect();
+    parallel::par_slices(out, &out_ranges, threads, |k, _, sub| {
+        let cols = col_ranges[k].clone();
+        for (o, j) in cols.enumerate() {
+            let cj = s.col(j);
+            for c in 0..n_rhs {
+                sub[o * n_rhs + c] = reduced_dot(prec, cj, &panel32[c * s.n..(c + 1) * s.n]);
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// x86_64 kernels
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::super::dense::DenseMatrix;
+    use core::arch::x86_64::*;
+    use std::ops::Range;
+
+    // SAFETY: pure register arithmetic; caller must be an AVX2 context.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn madd_mul(a: __m256d, b: __m256d, acc: __m256d) -> __m256d {
+        _mm256_add_pd(acc, _mm256_mul_pd(a, b))
+    }
+
+    // SAFETY: pure register arithmetic; caller must be an AVX2+FMA context.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn madd_fma(a: __m256d, b: __m256d, acc: __m256d) -> __m256d {
+        _mm256_fmadd_pd(a, b, acc)
+    }
+
+    // Reduces in the scalar `dot` lane order: (l0+l1)+(l2+l3).
+    // SAFETY: pure register arithmetic; caller must be an AVX2 context.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn reduce4(v: __m256d) -> f64 {
+        let mut l = [0.0f64; 4];
+        _mm256_storeu_pd(l.as_mut_ptr(), v);
+        (l[0] + l[1]) + (l[2] + l[3])
+    }
+
+    macro_rules! stamp_f64_kernels {
+        ($feat:literal, $madd:ident, $dot:ident, $axpy:ident, $cols4:ident,
+         $matvec:ident, $matmul:ident, $gather:ident) => {
+            // The dispatcher only selects this variant after runtime
+            // feature detection.
+            // SAFETY: `$feat` is available; loads stay inside the
+            // slice bounds (chunks·4 ≤ n, tail is scalar).
+            #[target_feature(enable = $feat)]
+            pub(super) unsafe fn $dot(a: &[f64], b: &[f64]) -> f64 {
+                let n = a.len();
+                let chunks = n / 4;
+                let mut acc = _mm256_setzero_pd();
+                for k in 0..chunks {
+                    let i = 4 * k;
+                    let av = _mm256_loadu_pd(a.as_ptr().add(i));
+                    let bv = _mm256_loadu_pd(b.as_ptr().add(i));
+                    acc = $madd(av, bv, acc);
+                }
+                let mut s = reduce4(acc);
+                for i in 4 * chunks..n {
+                    s += a[i] * b[i];
+                }
+                s
+            }
+
+            // SAFETY: `$feat` is available (runtime-detected before
+            // dispatch); loads/stores stay inside the slice bounds.
+            #[target_feature(enable = $feat)]
+            pub(super) unsafe fn $axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+                let n = y.len();
+                let chunks = n / 4;
+                let av = _mm256_set1_pd(alpha);
+                for k in 0..chunks {
+                    let i = 4 * k;
+                    let xv = _mm256_loadu_pd(x.as_ptr().add(i));
+                    let yv = _mm256_loadu_pd(y.as_ptr().add(i));
+                    _mm256_storeu_pd(y.as_mut_ptr().add(i), $madd(xv, av, yv));
+                }
+                for i in 4 * chunks..n {
+                    y[i] += alpha * x[i];
+                }
+            }
+
+            // Four columns share each loaded r vector; each lane order
+            // matches `$dot` exactly, so s[q] == $dot(c[q], r) bitwise.
+            // SAFETY: `$feat` is available (runtime-detected before
+            // dispatch); every column has length n = r.len().
+            #[target_feature(enable = $feat)]
+            unsafe fn $cols4(c: [&[f64]; 4], r: &[f64]) -> [f64; 4] {
+                let n = r.len();
+                let chunks = n / 4;
+                let mut a0 = _mm256_setzero_pd();
+                let mut a1 = _mm256_setzero_pd();
+                let mut a2 = _mm256_setzero_pd();
+                let mut a3 = _mm256_setzero_pd();
+                for k in 0..chunks {
+                    let i = 4 * k;
+                    let rv = _mm256_loadu_pd(r.as_ptr().add(i));
+                    a0 = $madd(_mm256_loadu_pd(c[0].as_ptr().add(i)), rv, a0);
+                    a1 = $madd(_mm256_loadu_pd(c[1].as_ptr().add(i)), rv, a1);
+                    a2 = $madd(_mm256_loadu_pd(c[2].as_ptr().add(i)), rv, a2);
+                    a3 = $madd(_mm256_loadu_pd(c[3].as_ptr().add(i)), rv, a3);
+                }
+                let mut s = [reduce4(a0), reduce4(a1), reduce4(a2), reduce4(a3)];
+                for i in 4 * chunks..n {
+                    let ri = r[i];
+                    s[0] += c[0][i] * ri;
+                    s[1] += c[1][i] * ri;
+                    s[2] += c[2][i] * ri;
+                    s[3] += c[3][i] * ri;
+                }
+                s
+            }
+
+            // SAFETY: `$feat` is available (runtime-detected before
+            // dispatch); bounds are asserted by the dispatch wrapper.
+            #[target_feature(enable = $feat)]
+            pub(super) unsafe fn $matvec(
+                m: &DenseMatrix,
+                r: &[f64],
+                cols: Range<usize>,
+                out: &mut [f64],
+            ) {
+                let mut j = cols.start;
+                let mut o = 0usize;
+                while j + 4 <= cols.end {
+                    let s = $cols4([m.col(j), m.col(j + 1), m.col(j + 2), m.col(j + 3)], r);
+                    out[o..o + 4].copy_from_slice(&s);
+                    j += 4;
+                    o += 4;
+                }
+                while j < cols.end {
+                    out[o] = $dot(m.col(j), r);
+                    j += 1;
+                    o += 1;
+                }
+            }
+
+            // 4 columns × 2 right-hand sides per inner block: each
+            // design vector load is reused across both rhs and each rhs
+            // load across 4 columns, while every (j, c) accumulator
+            // still steps i in the `$dot` lane order.
+            // SAFETY: `$feat` is available (runtime-detected before
+            // dispatch); bounds are asserted by the dispatch wrapper.
+            #[target_feature(enable = $feat)]
+            pub(super) unsafe fn $matmul(
+                m: &DenseMatrix,
+                r: &[f64],
+                n_rhs: usize,
+                cols: Range<usize>,
+                out: &mut [f64],
+            ) {
+                let n = m.nrows();
+                let chunks = n / 4;
+                let mut j = cols.start;
+                let mut o = 0usize;
+                while j + 4 <= cols.end {
+                    let c = [m.col(j), m.col(j + 1), m.col(j + 2), m.col(j + 3)];
+                    let mut cc = 0usize;
+                    while cc + 2 <= n_rhs {
+                        let r0 = &r[cc * n..(cc + 1) * n];
+                        let r1 = &r[(cc + 1) * n..(cc + 2) * n];
+                        let mut acc = [_mm256_setzero_pd(); 8];
+                        for k in 0..chunks {
+                            let i = 4 * k;
+                            let rv0 = _mm256_loadu_pd(r0.as_ptr().add(i));
+                            let rv1 = _mm256_loadu_pd(r1.as_ptr().add(i));
+                            for q in 0..4 {
+                                let xv = _mm256_loadu_pd(c[q].as_ptr().add(i));
+                                acc[2 * q] = $madd(xv, rv0, acc[2 * q]);
+                                acc[2 * q + 1] = $madd(xv, rv1, acc[2 * q + 1]);
+                            }
+                        }
+                        for q in 0..4 {
+                            let mut s0 = reduce4(acc[2 * q]);
+                            let mut s1 = reduce4(acc[2 * q + 1]);
+                            for i in 4 * chunks..n {
+                                s0 += c[q][i] * r0[i];
+                                s1 += c[q][i] * r1[i];
+                            }
+                            out[(o + q) * n_rhs + cc] = s0;
+                            out[(o + q) * n_rhs + cc + 1] = s1;
+                        }
+                        cc += 2;
+                    }
+                    if cc < n_rhs {
+                        let s = $cols4(c, &r[cc * n..(cc + 1) * n]);
+                        for q in 0..4 {
+                            out[(o + q) * n_rhs + cc] = s[q];
+                        }
+                    }
+                    j += 4;
+                    o += 4;
+                }
+                while j < cols.end {
+                    let col = m.col(j);
+                    for cc in 0..n_rhs {
+                        out[o * n_rhs + cc] = $dot(col, &r[cc * n..(cc + 1) * n]);
+                    }
+                    j += 1;
+                    o += 1;
+                }
+            }
+
+            // Every index in `cols` is a valid column (asserted by the
+            // dispatch wrapper along with the slice bounds).
+            // SAFETY: `$feat` is available (runtime-detected before
+            // dispatch); bounds are asserted by the dispatch wrapper.
+            #[target_feature(enable = $feat)]
+            pub(super) unsafe fn $gather(
+                m: &DenseMatrix,
+                r: &[f64],
+                cols: &[usize],
+                out: &mut [f64],
+            ) {
+                let mut k = 0usize;
+                while k + 4 <= cols.len() {
+                    let s = $cols4(
+                        [
+                            m.col(cols[k]),
+                            m.col(cols[k + 1]),
+                            m.col(cols[k + 2]),
+                            m.col(cols[k + 3]),
+                        ],
+                        r,
+                    );
+                    out[k..k + 4].copy_from_slice(&s);
+                    k += 4;
+                }
+                while k < cols.len() {
+                    out[k] = $dot(m.col(cols[k]), r);
+                    k += 1;
+                }
+            }
+        };
+    }
+
+    #[rustfmt::skip]
+    stamp_f64_kernels!(
+        "avx2", madd_mul, dot_avx2, axpy_avx2, cols4_avx2, matvec_avx2, matmul_avx2, gather_avx2
+    );
+    #[rustfmt::skip]
+    stamp_f64_kernels!(
+        "avx2,fma", madd_fma, dot_fma, axpy_fma, cols4_fma, matvec_fma, matmul_fma, gather_fma
+    );
+
+    // Lane order matches `dot_mixed_scalar`: f32 products widened and
+    // accumulated in 4 f64 lanes, reduced (l0+l1)+(l2+l3).
+    // SAFETY: AVX is available whenever the dispatcher selects an AVX2
+    // variant (runtime-detected); loads stay inside the slice bounds.
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn dot_mixed_avx(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = _mm256_setzero_pd();
+        for k in 0..chunks {
+            let i = 4 * k;
+            let av = _mm_loadu_ps(a.as_ptr().add(i));
+            let bv = _mm_loadu_ps(b.as_ptr().add(i));
+            acc = _mm256_add_pd(acc, _mm256_cvtps_pd(_mm_mul_ps(av, bv)));
+        }
+        let mut l = [0.0f64; 4];
+        _mm256_storeu_pd(l.as_mut_ptr(), acc);
+        let mut s = (l[0] + l[1]) + (l[2] + l[3]);
+        for i in 4 * chunks..n {
+            s += (a[i] * b[i]) as f64;
+        }
+        s
+    }
+
+    // Lane order matches `dot_f32_scalar` (f32 accumulation, widened
+    // once at the end).
+    // SAFETY: SSE is x86_64 baseline, but this is only dispatched from
+    // AVX2-detected contexts anyway; loads stay in the slice bounds.
+    #[target_feature(enable = "sse")]
+    pub(super) unsafe fn dot_f32_sse(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = _mm_setzero_ps();
+        for k in 0..chunks {
+            let i = 4 * k;
+            let av = _mm_loadu_ps(a.as_ptr().add(i));
+            let bv = _mm_loadu_ps(b.as_ptr().add(i));
+            acc = _mm_add_ps(acc, _mm_mul_ps(av, bv));
+        }
+        let mut l = [0.0f32; 4];
+        _mm_storeu_ps(l.as_mut_ptr(), acc);
+        let mut s = (l[0] + l[1]) + (l[2] + l[3]);
+        for i in 4 * chunks..n {
+            s += a[i] * b[i];
+        }
+        s as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64 kernels (two 128-bit accumulator pairs emulate the 4-lane order)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod aarch {
+    use super::super::dense::DenseMatrix;
+    use core::arch::aarch64::*;
+    use std::ops::Range;
+
+    // SAFETY: pure register arithmetic; caller must be a NEON context.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn madd_mul(a: float64x2_t, b: float64x2_t, acc: float64x2_t) -> float64x2_t {
+        vaddq_f64(acc, vmulq_f64(a, b))
+    }
+
+    // SAFETY: pure register arithmetic; caller must be a NEON context.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn madd_fma(a: float64x2_t, b: float64x2_t, acc: float64x2_t) -> float64x2_t {
+        vfmaq_f64(acc, a, b)
+    }
+
+    macro_rules! stamp_f64_kernels {
+        ($madd:ident, $dot:ident, $axpy:ident, $cols4:ident,
+         $matvec:ident, $matmul:ident, $gather:ident) => {
+            // acc01/acc23 hold the scalar `dot` lanes (0,1)/(2,3);
+            // vaddvq_f64 sums each pair, giving (s0+s1)+(s2+s3). The
+            // dispatcher only selects this after feature detection.
+            // SAFETY: NEON is available; loads stay inside the slice
+            // bounds (chunks·4 ≤ n, tail is scalar).
+            #[target_feature(enable = "neon")]
+            pub(super) unsafe fn $dot(a: &[f64], b: &[f64]) -> f64 {
+                let n = a.len();
+                let chunks = n / 4;
+                let mut a01 = vdupq_n_f64(0.0);
+                let mut a23 = vdupq_n_f64(0.0);
+                for k in 0..chunks {
+                    let i = 4 * k;
+                    a01 = $madd(vld1q_f64(a.as_ptr().add(i)), vld1q_f64(b.as_ptr().add(i)), a01);
+                    a23 = $madd(
+                        vld1q_f64(a.as_ptr().add(i + 2)),
+                        vld1q_f64(b.as_ptr().add(i + 2)),
+                        a23,
+                    );
+                }
+                let mut s = vaddvq_f64(a01) + vaddvq_f64(a23);
+                for i in 4 * chunks..n {
+                    s += a[i] * b[i];
+                }
+                s
+            }
+
+            // SAFETY: NEON is available (runtime-detected before
+            // dispatch); loads/stores stay inside the slice bounds.
+            #[target_feature(enable = "neon")]
+            pub(super) unsafe fn $axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+                let n = y.len();
+                let chunks = n / 2;
+                let av = vdupq_n_f64(alpha);
+                for k in 0..chunks {
+                    let i = 2 * k;
+                    let xv = vld1q_f64(x.as_ptr().add(i));
+                    let yv = vld1q_f64(y.as_ptr().add(i));
+                    vst1q_f64(y.as_mut_ptr().add(i), $madd(xv, av, yv));
+                }
+                for i in 2 * chunks..n {
+                    y[i] += alpha * x[i];
+                }
+            }
+
+            // Lane order matches `$dot`, so s[q] == $dot(c[q], r)
+            // bitwise.
+            // SAFETY: NEON is available (runtime-detected before
+            // dispatch); every column has length n = r.len().
+            #[target_feature(enable = "neon")]
+            unsafe fn $cols4(c: [&[f64]; 4], r: &[f64]) -> [f64; 4] {
+                let n = r.len();
+                let chunks = n / 4;
+                let mut acc = [vdupq_n_f64(0.0); 8];
+                for k in 0..chunks {
+                    let i = 4 * k;
+                    let r01 = vld1q_f64(r.as_ptr().add(i));
+                    let r23 = vld1q_f64(r.as_ptr().add(i + 2));
+                    for q in 0..4 {
+                        acc[2 * q] = $madd(vld1q_f64(c[q].as_ptr().add(i)), r01, acc[2 * q]);
+                        acc[2 * q + 1] =
+                            $madd(vld1q_f64(c[q].as_ptr().add(i + 2)), r23, acc[2 * q + 1]);
+                    }
+                }
+                let mut s = [0.0f64; 4];
+                for q in 0..4 {
+                    s[q] = vaddvq_f64(acc[2 * q]) + vaddvq_f64(acc[2 * q + 1]);
+                }
+                for i in 4 * chunks..n {
+                    let ri = r[i];
+                    for q in 0..4 {
+                        s[q] += c[q][i] * ri;
+                    }
+                }
+                s
+            }
+
+            // SAFETY: NEON is available (runtime-detected before
+            // dispatch); bounds are asserted by the dispatch wrapper.
+            #[target_feature(enable = "neon")]
+            pub(super) unsafe fn $matvec(
+                m: &DenseMatrix,
+                r: &[f64],
+                cols: Range<usize>,
+                out: &mut [f64],
+            ) {
+                let mut j = cols.start;
+                let mut o = 0usize;
+                while j + 4 <= cols.end {
+                    let s = $cols4([m.col(j), m.col(j + 1), m.col(j + 2), m.col(j + 3)], r);
+                    out[o..o + 4].copy_from_slice(&s);
+                    j += 4;
+                    o += 4;
+                }
+                while j < cols.end {
+                    out[o] = $dot(m.col(j), r);
+                    j += 1;
+                    o += 1;
+                }
+            }
+
+            // SAFETY: NEON is available (runtime-detected before
+            // dispatch); bounds are asserted by the dispatch wrapper.
+            #[target_feature(enable = "neon")]
+            pub(super) unsafe fn $matmul(
+                m: &DenseMatrix,
+                r: &[f64],
+                n_rhs: usize,
+                cols: Range<usize>,
+                out: &mut [f64],
+            ) {
+                let n = m.nrows();
+                let mut j = cols.start;
+                let mut o = 0usize;
+                while j + 4 <= cols.end {
+                    let c = [m.col(j), m.col(j + 1), m.col(j + 2), m.col(j + 3)];
+                    for cc in 0..n_rhs {
+                        let s = $cols4(c, &r[cc * n..(cc + 1) * n]);
+                        for q in 0..4 {
+                            out[(o + q) * n_rhs + cc] = s[q];
+                        }
+                    }
+                    j += 4;
+                    o += 4;
+                }
+                while j < cols.end {
+                    let col = m.col(j);
+                    for cc in 0..n_rhs {
+                        out[o * n_rhs + cc] = $dot(col, &r[cc * n..(cc + 1) * n]);
+                    }
+                    j += 1;
+                    o += 1;
+                }
+            }
+
+            // Every index in `cols` is a valid column (asserted by the
+            // dispatch wrapper along with the slice bounds).
+            // SAFETY: NEON is available (runtime-detected before
+            // dispatch); bounds are asserted by the dispatch wrapper.
+            #[target_feature(enable = "neon")]
+            pub(super) unsafe fn $gather(
+                m: &DenseMatrix,
+                r: &[f64],
+                cols: &[usize],
+                out: &mut [f64],
+            ) {
+                let mut k = 0usize;
+                while k + 4 <= cols.len() {
+                    let s = $cols4(
+                        [
+                            m.col(cols[k]),
+                            m.col(cols[k + 1]),
+                            m.col(cols[k + 2]),
+                            m.col(cols[k + 3]),
+                        ],
+                        r,
+                    );
+                    out[k..k + 4].copy_from_slice(&s);
+                    k += 4;
+                }
+                while k < cols.len() {
+                    out[k] = $dot(m.col(cols[k]), r);
+                    k += 1;
+                }
+            }
+        };
+    }
+
+    #[rustfmt::skip]
+    stamp_f64_kernels!(
+        madd_mul, dot_neon, axpy_neon, cols4_neon, matvec_neon, matmul_neon, gather_neon
+    );
+    #[rustfmt::skip]
+    stamp_f64_kernels!(
+        madd_fma, dot_neonfma, axpy_neonfma, cols4_neonfma, matvec_neonfma, matmul_neonfma,
+        gather_neonfma
+    );
+
+    // f32 products are widened to the scalar reference's (0,1)/(2,3)
+    // f64 lanes, so the result is bit-identical to `dot_mixed_scalar`.
+    // SAFETY: NEON is available (runtime-detected before dispatch);
+    // loads stay inside the slice bounds.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_mixed_neon(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 4;
+        let mut a01 = vdupq_n_f64(0.0);
+        let mut a23 = vdupq_n_f64(0.0);
+        for k in 0..chunks {
+            let i = 4 * k;
+            let prod = vmulq_f32(vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i)));
+            a01 = vaddq_f64(a01, vcvt_f64_f32(vget_low_f32(prod)));
+            a23 = vaddq_f64(a23, vcvt_high_f64_f32(prod));
+        }
+        let mut s = vaddvq_f64(a01) + vaddvq_f64(a23);
+        for i in 4 * chunks..n {
+            s += (a[i] * b[i]) as f64;
+        }
+        s
+    }
+
+    // Lane order matches `dot_f32_scalar` (explicit lane extraction,
+    // no vaddv tree).
+    // SAFETY: NEON is available (runtime-detected before dispatch);
+    // loads stay inside the slice bounds.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_f32_neon(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = vdupq_n_f32(0.0);
+        for k in 0..chunks {
+            let i = 4 * k;
+            acc = vaddq_f32(
+                acc,
+                vmulq_f32(vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i))),
+            );
+        }
+        let mut s = (vgetq_lane_f32::<0>(acc) + vgetq_lane_f32::<1>(acc))
+            + (vgetq_lane_f32::<2>(acc) + vgetq_lane_f32::<3>(acc));
+        for i in 4 * chunks..n {
+            s += a[i] * b[i];
+        }
+        s as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state % 2000) as f64 / 100.0 - 10.0
+        };
+        let a: Vec<f64> = (0..n).map(|_| next()).collect();
+        let b: Vec<f64> = (0..n).map(|_| next()).collect();
+        (a, b)
+    }
+
+    fn supported_isas() -> Vec<KernelIsa> {
+        [
+            KernelIsa::Scalar,
+            KernelIsa::Avx2,
+            KernelIsa::Avx2Fma,
+            KernelIsa::Neon,
+            KernelIsa::NeonFma,
+        ]
+        .into_iter()
+        .filter(|i| i.supported())
+        .collect()
+    }
+
+    #[test]
+    fn isa_names_round_trip() {
+        for isa in [
+            KernelIsa::Scalar,
+            KernelIsa::Avx2,
+            KernelIsa::Avx2Fma,
+            KernelIsa::Neon,
+            KernelIsa::NeonFma,
+        ] {
+            assert_eq!(KernelIsa::parse(isa.as_str()), Some(isa));
+        }
+        assert_eq!(KernelIsa::parse("sse9"), None);
+        assert_eq!(KernelIsa::parse("auto"), None);
+    }
+
+    #[test]
+    fn precision_names_and_floors() {
+        for p in [Precision::F64, Precision::F32, Precision::Mixed] {
+            assert_eq!(Precision::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Precision::parse("half"), None);
+        assert_eq!(Precision::F64.tol_floor(), 0.0);
+        assert!(Precision::Mixed.tol_floor() < Precision::F32.tol_floor());
+    }
+
+    #[test]
+    fn detected_isa_is_supported_and_active_isa_is_stable() {
+        assert!(detect().supported());
+        let a = isa();
+        assert!(a.supported());
+        // once probed, overrides cannot change the process ISA
+        assert_eq!(set_isa_override(KernelIsa::Scalar), a);
+        assert_eq!(isa(), a);
+    }
+
+    #[test]
+    fn dot_matches_scalar_on_every_supported_isa() {
+        for n in [0usize, 1, 3, 4, 7, 8, 64, 129] {
+            let (a, b) = vecs(n, n as u64 + 1);
+            let reference = crate::linalg::dense::dot_scalar(&a, &b);
+            for which in supported_isas() {
+                let got = dot_with(which, &a, &b);
+                if which.is_fma() {
+                    let scale = reference.abs().max(1.0);
+                    assert!(
+                        (got - reference).abs() <= 1e-12 * scale,
+                        "{which:?} n={n}: {got} vs {reference}"
+                    );
+                } else {
+                    assert_eq!(
+                        got.to_bits(),
+                        reference.to_bits(),
+                        "{which:?} n={n}: {got} vs {reference}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar_on_every_supported_isa() {
+        for n in [0usize, 1, 5, 8, 65] {
+            let (x, y0) = vecs(n, 7 + n as u64);
+            for which in supported_isas() {
+                let mut want = y0.clone();
+                crate::linalg::dense::axpy_scalar(0.37, &x, &mut want);
+                let mut got = y0.clone();
+                axpy_with(which, 0.37, &x, &mut got);
+                for i in 0..n {
+                    if which.is_fma() {
+                        assert!((got[i] - want[i]).abs() <= 1e-12 * want[i].abs().max(1.0));
+                    } else {
+                        assert_eq!(got[i].to_bits(), want[i].to_bits(), "{which:?} n={n} i={i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_kernels_equal_their_own_isa_dot_bitwise() {
+        // vector panel outputs must equal the same-ISA dot per column —
+        // the split-invariance contract (scalar keeps its historical
+        // 8-wide panel order, checked separately below)
+        for (n, p) in [(5usize, 7usize), (6, 8), (13, 9), (3, 17), (32, 12)] {
+            let data: Vec<f64> = (0..n * p).map(|k| ((k * 37 % 19) as f64) - 9.0).collect();
+            let m = DenseMatrix::from_col_major(n, p, data);
+            let (r, _) = vecs(n, 31 + (n * p) as u64);
+            for which in supported_isas() {
+                if which == KernelIsa::Scalar {
+                    continue;
+                }
+                let mut panel = vec![0.0; p];
+                matvec_t_panel_with(which, &m, &r, 0..p, &mut panel);
+                for j in 0..p {
+                    let want = dot_with(which, m.col(j), &r);
+                    assert_eq!(panel[j].to_bits(), want.to_bits(), "{which:?} matvec j={j}");
+                }
+                let cols: Vec<usize> = (0..p).rev().collect();
+                let mut gath = vec![0.0; p];
+                gather_dots_panel_with(which, &m, &r, &cols, &mut gath);
+                for (k, &j) in cols.iter().enumerate() {
+                    let want = dot_with(which, m.col(j), &r);
+                    assert_eq!(gath[k].to_bits(), want.to_bits(), "{which:?} gather j={j}");
+                }
+                for b in [2usize, 3, 5] {
+                    let (panelr, _) = vecs(n * b, 91 + b as u64);
+                    let mut mm = vec![0.0; p * b];
+                    matmul_t_panel_with(which, &m, &panelr, b, 0..p, &mut mm);
+                    for j in 0..p {
+                        for c in 0..b {
+                            let want = dot_with(which, m.col(j), &panelr[c * n..(c + 1) * n]);
+                            assert_eq!(
+                                mm[j * b + c].to_bits(),
+                                want.to_bits(),
+                                "{which:?} matmul j={j} c={c} b={b}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_dispatch_is_bit_identical_to_legacy_kernels() {
+        let (n, p) = (11usize, 19usize);
+        let data: Vec<f64> = (0..n * p).map(|k| ((k * 13 % 23) as f64) - 11.0).collect();
+        let m = DenseMatrix::from_col_major(n, p, data);
+        let (r, _) = vecs(n, 5);
+        let mut legacy = vec![0.0; p];
+        m.matvec_t_panel_scalar(&r, 0..p, &mut legacy);
+        let mut via = vec![0.0; p];
+        matvec_t_panel_with(KernelIsa::Scalar, &m, &r, 0..p, &mut via);
+        for j in 0..p {
+            assert_eq!(via[j].to_bits(), legacy[j].to_bits());
+        }
+        assert_eq!(
+            dot_with(KernelIsa::Scalar, &r, &r).to_bits(),
+            crate::linalg::dense::dot_scalar(&r, &r).to_bits()
+        );
+    }
+
+    #[test]
+    fn reduced_precision_dots_are_isa_invariant() {
+        for n in [0usize, 1, 3, 8, 64, 101] {
+            let (a64, b64) = vecs(n, 17 + n as u64);
+            let a: Vec<f32> = a64.iter().map(|&v| v as f32).collect();
+            let b: Vec<f32> = b64.iter().map(|&v| v as f32).collect();
+            let want_mixed = dot_mixed_scalar(&a, &b);
+            let want_f32 = dot_f32_scalar(&a, &b);
+            for which in supported_isas() {
+                assert_eq!(
+                    dot_mixed_with(which, &a, &b).to_bits(),
+                    want_mixed.to_bits(),
+                    "{which:?} mixed n={n}"
+                );
+                assert_eq!(
+                    dot_f32_with(which, &a, &b).to_bits(),
+                    want_f32.to_bits(),
+                    "{which:?} f32 n={n}"
+                );
+            }
+            // reduced dots track the f64 dot at storage precision
+            let exact = crate::linalg::dense::dot_scalar(&a64, &b64);
+            let scale = (n as f64 + 1.0) * 100.0;
+            assert!((want_mixed - exact).abs() <= 1e-4 * scale, "mixed n={n}");
+            assert!((want_f32 - exact).abs() <= 1e-2 * scale, "f32 n={n}");
+        }
+    }
+
+    #[test]
+    fn shadow_is_aligned_padded_and_faithful() {
+        for (n, p) in [(0usize, 0usize), (1, 1), (5, 3), (8, 4), (13, 9)] {
+            let data: Vec<f64> = (0..n * p).map(|k| (k as f64) * 0.5 - 3.0).collect();
+            let m = DenseMatrix::from_col_major(n, p, data);
+            let s = ShadowF32::from_dense(&m);
+            assert_eq!(s.nrows(), n);
+            assert_eq!(s.ncols(), p);
+            for j in 0..p {
+                let col = s.col(j);
+                assert_eq!(col.as_ptr() as usize % 32, 0, "col {j} not 32-byte aligned");
+                for i in 0..n {
+                    assert_eq!(col[i], m.col(j)[i] as f32);
+                }
+            }
+            assert!(s.bytes() >= n * p * 4);
+        }
+    }
+
+    #[test]
+    fn shadow_scans_match_per_column_reduced_dots() {
+        let (n, p, b) = (9usize, 13usize, 3usize);
+        let data: Vec<f64> = (0..n * p).map(|k| ((k * 7 % 17) as f64) - 8.0).collect();
+        let m = DenseMatrix::from_col_major(n, p, data);
+        let s = ShadowF32::from_dense(&m);
+        let (r64, _) = vecs(n, 3);
+        let mut r32 = Vec::new();
+        to_f32(&r64, &mut r32);
+        for prec in [Precision::F32, Precision::Mixed] {
+            let mut out = vec![0.0; p];
+            shadow_matvec_t(&s, &r32, prec, 0.25, &mut out);
+            for j in 0..p {
+                let want = 0.25 * reduced_dot(prec, s.col(j), &r32);
+                assert_eq!(out[j].to_bits(), want.to_bits(), "{prec:?} j={j}");
+            }
+            let (panel64, _) = vecs(n * b, 41);
+            let mut panel32 = Vec::new();
+            to_f32(&panel64, &mut panel32);
+            let mut mm = vec![0.0; p * b];
+            shadow_matmul_t(&s, &panel32, b, prec, &mut mm);
+            for j in 0..p {
+                for c in 0..b {
+                    let want = reduced_dot(prec, s.col(j), &panel32[c * n..(c + 1) * n]);
+                    assert_eq!(mm[j * b + c].to_bits(), want.to_bits(), "{prec:?} j={j} c={c}");
+                }
+            }
+        }
+    }
+}

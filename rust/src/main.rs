@@ -44,6 +44,16 @@ fn dispatch(args: &mut Args) -> Result<()> {
     if let Some(on) = args.take_batch()? {
         std::env::set_var("SKGLM_BATCH", if on { "1" } else { "0" });
     }
+    // kernel ISA pin: --isa > SKGLM_ISA > runtime probe (see
+    // ARCHITECTURE.md §Kernel ISA & precision); pinned process-wide
+    if let Some(name) = args.take_isa()? {
+        skglm::linalg::simd::install_isa(&name);
+    }
+    // full-design pass precision: --precision > SKGLM_PRECISION > f64;
+    // SolverOpts::default() reads the env var
+    if let Some(p) = args.take_precision()? {
+        std::env::set_var("SKGLM_PRECISION", p.as_str());
+    }
     match args.subcommand() {
         Some("solve") => cmd_solve(args),
         Some("path") => cmd_path(args),
@@ -75,7 +85,7 @@ const USAGE: &str = "usage:
               [--inner auto|residual|gram] \\
               [--points 20] [--min-ratio 1e-3] [--gamma 3.0] [--small] [--seed 42]
   skglm cv    --dataset <name> [--folds 5] [--points 15] [--workers 4] [--small]
-  skglm exp   <fig1..fig10|table1|table2|pathsched|kernels|glms|groups|gram|batch|analysis|scenarios|summary|all> [--full]
+  skglm exp   <fig1..fig10|table1|table2|pathsched|kernels|glms|groups|gram|batch|simd|analysis|scenarios|summary|all> [--full]
   skglm conform [--smoke] [--filter <substr>] [--corpus <scenarios.jsonl>]
   skglm analyze [--root <repo>] [--quiet]
   skglm serve [--listen 127.0.0.1:7878] [--workers 4] [--queue 32] \\
@@ -105,7 +115,13 @@ const USAGE: &str = "usage:
   batching: CV folds and fusible sibling jobs solved as one multi-RHS
   panel batch; overrides the SKGLM_BATCH env var; defaults to on — each
   batch member is bit-identical to the scalar solver, so the switch is
-  for A/B benchmarking). `exp summary` rolls every
+  for A/B benchmarking). --isa scalar|avx2|avx2fma|neon|neonfma|auto pins
+  the micro-kernel ISA (overrides SKGLM_ISA; auto probes the CPU; an
+  unsupported request falls back to scalar) and --precision f64|f32|mixed
+  picks the full-design pass precision (overrides SKGLM_PRECISION;
+  reduced modes keep CD epochs and KKT certificates in f64 and clamp
+  --tol to the mode's certified floor; see ARCHITECTURE.md §Kernel ISA &
+  precision). `exp summary` rolls every
   repo-root BENCH_*.json into BENCH_SUMMARY.json. `conform` runs the
   declarative scenario conformance corpus (scenarios.jsonl at the repo
   root when present, else the built-in corpus) — every datafit × penalty
@@ -122,7 +138,8 @@ const USAGE: &str = "usage:
   --script smoke self-hosts the scripted loopback acceptance session CI
   runs (exits non-zero when any step degrades). `analyze` runs the
   self-hosted static-analysis pass (panic-audit, lock-order,
-  atomic-ordering, unsafe-audit, determinism, doc-conformance; see
+  atomic-ordering, unsafe-audit, determinism, doc-conformance, isa-gate;
+  see
   ARCHITECTURE.md §Static analysis) over the source tree at --root,
   writes BENCH_analysis.json, and exits non-zero on any finding not
   covered by an inline `// lint: allow(rule, reason)` suppression";
@@ -163,6 +180,11 @@ fn print_fit(res: &FitResult, n: usize) {
     println!("cd epochs      : {}", res.n_epochs);
     println!("extrapolations : {} accepted / {} rejected", res.accepted_extrapolations, res.rejected_extrapolations);
     let pr = &res.profile;
+    println!(
+        "kernel floor   : {} isa, {} precision",
+        pr.kernel_isa.as_str(),
+        pr.precision.as_str()
+    );
     if pr.gram_epochs > 0 || pr.residual_epochs > 0 {
         println!(
             "inner engines  : {} gram / {} residual epochs ({:.2} Mflop epochs, {:.2} Mflop gram assembly)",
@@ -820,6 +842,13 @@ fn cmd_client(args: &mut Args) -> Result<()> {
             }
             if let Some(pr) = &priority {
                 body.push(("priority", Json::Str(pr.clone())));
+            }
+            // --precision (resolved into SKGLM_PRECISION by the global
+            // dispatch above) rides the wire so the *service* solves at
+            // the requested precision; f64 is the wire default
+            let precision = skglm::linalg::simd::default_precision();
+            if precision != skglm::linalg::simd::Precision::F64 {
+                body.push(("precision", Json::Str(precision.as_str().to_string())));
             }
             let io_timeout = cfg.io_timeout;
             let mut c = client_err(ServiceClient::connect(cfg))?;

@@ -35,6 +35,7 @@ use super::outer::{select_working_set, solve_outer, BlockCoords};
 use super::skglm::{Certificate, FitResult, HistoryPoint, SolverOpts, StopReason};
 use crate::datafit::Datafit;
 use crate::linalg::gram::GramCache;
+use crate::linalg::simd::{self, Precision, ShadowF32};
 use crate::linalg::Design;
 use crate::penalty::{BatchPenalty, Penalty};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -348,6 +349,13 @@ struct BatchedCoords<'a> {
     start: Instant,
     /// batch-level extras not attributable to one member (panel passes)
     profile: InnerProfile,
+    /// panel-pass precision; reduced modes route the multi-RHS scan
+    /// through `shadow` (dense designs only)
+    precision: Precision,
+    /// f32 design mirror for reduced-precision panel passes
+    shadow: Option<ShadowF32>,
+    /// f32 residual-panel scratch for reduced-precision passes
+    panel32: Vec<f32>,
 }
 
 /// Per-member context for one interleaved residual inner solve.
@@ -670,7 +678,13 @@ impl BlockCoords for BatchedCoords<'_> {
             // ---- ONE multi-RHS panel pass for all live members ----
             self.grads.clear();
             self.grads.resize(p * b, 0.0);
-            design.matmul_t(&self.panel[..n * b], b, &mut self.grads);
+            if let Some(shadow) = &self.shadow {
+                simd::to_f32(&self.panel[..n * b], &mut self.panel32);
+                let prec = self.precision;
+                simd::shadow_matmul_t(shadow, &self.panel32, b, prec, &mut self.grads);
+            } else {
+                design.matmul_t(&self.panel[..n * b], b, &mut self.grads);
+            }
             let se = design.stored_entries() as f64;
             self.profile.panel_flops += se * b as f64;
 
@@ -895,6 +909,22 @@ pub fn solve_batch(
 ) -> BatchOutcome {
     let p = design.ncols();
     let n = design.nrows();
+    // reduced precision cannot certify below its quantisation floor
+    // (solve_prepared parity)
+    let mut opts_floored;
+    let opts = if opts.precision == Precision::F64 {
+        opts
+    } else {
+        opts_floored = opts.clone();
+        opts_floored.tol = opts_floored.tol.max(opts.precision.tol_floor());
+        &opts_floored
+    };
+    // label every profile with what the batch actually ran on
+    let profile_seed = InnerProfile {
+        kernel_isa: simd::isa(),
+        precision: opts.precision,
+        ..Default::default()
+    };
     let n_members = fits.len();
     let mut members = Vec::with_capacity(n_members);
     let mut panel = Vec::with_capacity(n * n_members);
@@ -936,21 +966,27 @@ pub fn solve_batch(
             n_epochs: 0,
             accepted: 0,
             rejected: 0,
-            profile: InnerProfile::default(),
+            profile: profile_seed,
             scores: vec![0.0; p],
             done: None,
         });
     }
     // shared Gram store (solve_prepared parity): created only when the
-    // requested engine may want it and some member satisfies the contract
+    // requested engine may want it and some member satisfies the
+    // contract. Reduced precision never reuses a shared f64 cache.
+    let wants_gram = opts.inner != InnerEngine::Residual
+        && members.iter().any(|m| m.datafit.residual_quadratic_scale().is_some());
     let gram = match gram {
-        Some(g) => Some(g),
-        None if opts.inner != InnerEngine::Residual
-            && members.iter().any(|m| m.datafit.residual_quadratic_scale().is_some()) =>
-        {
-            Some(Arc::new(GramCache::with_default_budget()))
-        }
-        None => None,
+        Some(g) if opts.precision == Precision::F64 => Some(g),
+        _ if wants_gram => Some(Arc::new(GramCache::with_default_budget_at(opts.precision))),
+        _ => None,
+    };
+    // reduced precision routes the panel pass through an f32 design
+    // shadow (dense only; sparse panels stay f64)
+    let shadow = match (opts.precision, design) {
+        (Precision::F64, _) => None,
+        (_, Design::Dense(m)) => Some(ShadowF32::from_dense(m)),
+        _ => None,
     };
     let mut coords = BatchedCoords {
         design,
@@ -966,7 +1002,10 @@ pub fn solve_batch(
         all_features: (0..p).collect(),
         gram,
         start: Instant::now(),
-        profile: InnerProfile::default(),
+        profile: profile_seed,
+        precision: opts.precision,
+        shadow,
+        panel32: Vec::new(),
     };
     let out = solve_outer(&mut coords, opts, None);
     coords.finalize(out.stopped);

@@ -57,6 +57,12 @@ pub struct InnerProfile {
     pub residual_epochs: usize,
     /// epochs run by the Gram engine
     pub gram_epochs: usize,
+    /// effective kernel ISA the counted flops ran on (scalar-f64 flops
+    /// and avx2-f32 flops are not comparable across hosts; the label
+    /// travels with the numbers)
+    pub kernel_isa: crate::linalg::KernelIsa,
+    /// precision of the full-design passes behind the counters
+    pub precision: crate::linalg::Precision,
 }
 
 impl InnerProfile {
@@ -71,6 +77,15 @@ impl InnerProfile {
         self.panel_flops += o.panel_flops;
         self.residual_epochs += o.residual_epochs;
         self.gram_epochs += o.gram_epochs;
+        // labels: adopt the other side's when it carries a non-default
+        // one (merging across ISAs/precisions cannot happen in-process —
+        // the ISA is probed once and pinned)
+        if o.kernel_isa != crate::linalg::KernelIsa::default() {
+            self.kernel_isa = o.kernel_isa;
+        }
+        if o.precision != crate::linalg::Precision::default() {
+            self.precision = o.precision;
+        }
     }
 
     /// Total modelled flops (epochs + Gram assembly + batched panel

@@ -24,6 +24,7 @@ use super::inner::{inner_solver, InnerProfile, InnerStats};
 use super::outer::{solve_outer, BlockCoords};
 use crate::datafit::Datafit;
 use crate::linalg::gram::GramCache;
+use crate::linalg::simd::{self, Precision, ShadowF32};
 use crate::linalg::Design;
 use crate::penalty::Penalty;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -47,6 +48,43 @@ pub trait GradEngine {
     ) -> bool;
 
     fn name(&self) -> &'static str;
+}
+
+/// Reduced-precision scoring engine: serves the dense quadratic full
+/// scan (`∇f = scale · Xᵀ state`) from an f32 shadow of the design.
+/// Installed by `solve_prepared` when `SolverOpts::precision` is not
+/// f64 and no caller engine is present; every other shape keeps the
+/// native f64 path. KKT metrics computed from these gradients carry the
+/// precision's quantisation error, which is why reduced modes clamp the
+/// tolerance to [`Precision::tol_floor`].
+struct ShadowGrad {
+    prec: Precision,
+    /// `Datafit::residual_quadratic_scale` of the datafit (1/n)
+    scale: f64,
+    shadow: ShadowF32,
+    state32: Vec<f32>,
+}
+
+impl GradEngine for ShadowGrad {
+    fn grad_full(
+        &mut self,
+        _design: &Design,
+        _y: &[f64],
+        state: &[f64],
+        _beta: &[f64],
+        out: &mut [f64],
+    ) -> bool {
+        simd::to_f32(state, &mut self.state32);
+        simd::shadow_matvec_t(&self.shadow, &self.state32, self.prec, self.scale, out);
+        true
+    }
+
+    fn name(&self) -> &'static str {
+        match self.prec {
+            Precision::F32 => "shadow-f32",
+            _ => "shadow-mixed",
+        }
+    }
 }
 
 /// Solver options (defaults match the paper's experiments: M = 5,
@@ -75,6 +113,12 @@ pub struct SolverOpts {
     /// Cooperative execution budget, checked at the top of every outer
     /// iteration. `None` (the default) means run to convergence.
     pub budget: Option<SolveBudget>,
+    /// Numeric precision of the full-design passes (scoring scans, Gram
+    /// assembly off-diagonals, batched panels). Inner CD epochs, KKT and
+    /// certificates always run in f64; reduced precision clamps `tol` to
+    /// [`crate::linalg::simd::Precision::tol_floor`]. The default comes
+    /// from `SKGLM_PRECISION` (set by `--precision`), else `f64`.
+    pub precision: Precision,
 }
 
 /// Why a solve stopped before converging (see [`SolveBudget`]). The
@@ -157,6 +201,7 @@ impl Default for SolverOpts {
             inner: InnerEngine::default(),
             verbose: false,
             budget: None,
+            precision: simd::default_precision(),
         }
     }
 }
@@ -191,6 +236,12 @@ impl SolverOpts {
         let mut budget = self.budget.take().unwrap_or_default();
         budget.deadline = Some(Instant::now() + limit);
         self.budget = Some(budget);
+        self
+    }
+    /// Select the full-design pass precision (see
+    /// [`crate::linalg::simd::Precision`]).
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
         self
     }
 }
@@ -375,6 +426,17 @@ pub fn solve_prepared<D: Datafit, P: Penalty>(
 ) -> FitResult {
     let p = design.ncols();
 
+    // reduced precision cannot certify below its quantisation floor:
+    // clamp the tolerance before the outer loop sees it
+    let mut opts_floored;
+    let opts = if opts.precision == Precision::F64 {
+        opts
+    } else {
+        opts_floored = opts.clone();
+        opts_floored.tol = opts_floored.tol.max(opts.precision.tol_floor());
+        &opts_floored
+    };
+
     // non-convex validity (Assumption 6): largest CD step is 1/min L_j>0
     let min_l = datafit
         .lipschitz()
@@ -397,15 +459,33 @@ pub fn solve_prepared<D: Datafit, P: Penalty>(
     let is_frozen = |j: usize| frozen.map(|m| m[j]).unwrap_or(false);
     let all_features: Vec<usize> = (0..p).filter(|&j| !is_frozen(j)).collect();
     // the Gram engine needs a store: use the caller's shared one, or
-    // create a solve-local one when the engine selection may want it
+    // create a solve-local one when the engine selection may want it.
+    // Reduced precision never reuses a shared cache (its blocks would
+    // mix assembly precisions) and builds a solve-local store at the
+    // requested precision instead.
+    let wants_gram =
+        opts.inner != InnerEngine::Residual && datafit.residual_quadratic_scale().is_some();
     let gram = match gram {
-        Some(g) => Some(g),
-        None if opts.inner != InnerEngine::Residual
-            && datafit.residual_quadratic_scale().is_some() =>
-        {
-            Some(Arc::new(GramCache::with_default_budget()))
+        Some(g) if opts.precision == Precision::F64 => Some(g),
+        _ if wants_gram => Some(Arc::new(GramCache::with_default_budget_at(opts.precision))),
+        _ => None,
+    };
+    // reduced-precision scoring: dense quadratic full scans go through
+    // the f32 design shadow; anything else keeps the native f64 path
+    let mut shadow_engine = None;
+    if engine.is_none() && opts.precision != Precision::F64 {
+        if let (Design::Dense(m), Some(scale)) = (design, datafit.residual_quadratic_scale()) {
+            shadow_engine = Some(ShadowGrad {
+                prec: opts.precision,
+                scale,
+                shadow: ShadowF32::from_dense(m),
+                state32: Vec::new(),
+            });
         }
-        None => None,
+    }
+    let engine = match shadow_engine.as_mut() {
+        Some(e) => Some(e as &mut dyn GradEngine),
+        None => engine,
     };
     let mut coords = ScalarCoords {
         design,
@@ -422,6 +502,11 @@ pub fn solve_prepared<D: Datafit, P: Penalty>(
         dispatch: EngineDispatch::new(opts.inner),
     };
     let out = solve_outer(&mut coords, opts, ws0);
+    // label the flop counters with what actually ran — scalar-f64 and
+    // avx2-f32 flops are not comparable across hosts
+    let mut profile = out.profile;
+    profile.kernel_isa = simd::isa();
+    profile.precision = opts.precision;
     FitResult {
         beta: coords.beta,
         objective: out.objective,
@@ -433,7 +518,7 @@ pub fn solve_prepared<D: Datafit, P: Penalty>(
         history: out.history,
         accepted_extrapolations: out.accepted_extrapolations,
         rejected_extrapolations: out.rejected_extrapolations,
-        profile: out.profile,
+        profile,
     }
 }
 

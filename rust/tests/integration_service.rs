@@ -136,9 +136,43 @@ fn malformed_input_gets_typed_errors_and_the_connection_survives() {
         other => panic!("expected a typed server error, got {other}"),
     }
 
+    // unknown precision → bad_precision, not a silent f64 default
+    let mut body = fit_body(2);
+    body.push(("precision", Json::Str("f16".to_string())));
+    match c.submit(&body).expect_err("unknown precision must be rejected") {
+        ClientError::Server { code, .. } => assert_eq!(code, "bad_precision"),
+        other => panic!("expected a typed server error, got {other}"),
+    }
+
+    // unknown isa name → bad_precision ("auto" always passes)
+    let mut body = fit_body(2);
+    body.push(("isa", Json::Str("warp9".to_string())));
+    match c.submit(&body).expect_err("unknown isa must be rejected") {
+        ClientError::Server { code, .. } => assert_eq!(code, "bad_precision"),
+        other => panic!("expected a typed server error, got {other}"),
+    }
+
     // after all of that the same connection still serves requests
     let pong = c.ping().expect("connection survives every typed rejection");
     assert_eq!(frame_type(&pong), "pong");
+    handle.stop();
+    assert_eq!(handle.join(), ExitReason::Stopped);
+}
+
+#[test]
+fn reduced_precision_submit_fits_end_to_end() {
+    let handle = service("", 1, 8);
+    let mut c = client(&handle, "prec");
+    let mut body = fit_body(3);
+    body.push(("precision", Json::Str("mixed".to_string())));
+    body.push(("isa", Json::Str("auto".to_string())));
+    let acc = c.submit(&body).expect("mixed-precision submit is accepted");
+    let job = acc.get("job").and_then(Json::as_f64).expect("accepted frame carries job") as u64;
+    let (_points, terminal) = c.wait_terminal(job, EVENT_TIMEOUT).expect("terminal event");
+    assert_eq!(frame_type(&terminal), "fit_done");
+    assert_eq!(terminal.get("outcome").and_then(Json::as_str), Some("ok"));
+    let obj = terminal.get("objective").and_then(Json::as_f64).expect("objective present");
+    assert!(obj.is_finite());
     handle.stop();
     assert_eq!(handle.join(), ExitReason::Stopped);
 }

@@ -857,3 +857,269 @@ fn prop_batch_members_match_scalar_solver() {
         },
     );
 }
+
+/// ISSUE-10 tentpole property, part 1: every vector ISA this host
+/// supports reproduces the scalar kernels. The non-FMA variants are
+/// bit-exact against the dispatched scalar `dot` lane order (every
+/// panel output *is* that dot); the FMA variants agree to ≤ 1e-12.
+#[test]
+fn prop_simd_kernels_match_scalar() {
+    use skglm::linalg::{simd, DenseMatrix, KernelIsa};
+
+    const VECTOR_ISAS: [KernelIsa; 4] =
+        [KernelIsa::Avx2, KernelIsa::Avx2Fma, KernelIsa::Neon, KernelIsa::NeonFma];
+
+    check(
+        17,
+        30,
+        |rng: &mut Rng| (rng.below(90), 1 + rng.below(40), 1 + rng.below(5), rng.next_u64()),
+        |&(n, p, n_rhs, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let data: Vec<f64> = (0..n * p).map(|_| rng.normal()).collect();
+            let m = DenseMatrix::from_col_major(n, p, data);
+            let r: Vec<f64> = (0..n * n_rhs).map(|_| rng.normal()).collect();
+            let gather_cols: Vec<usize> = (0..p.min(11)).map(|_| rng.below(p)).collect();
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let alpha = rng.uniform_range(-2.0, 2.0);
+
+            // the scalar-dot references every vector output must hit
+            let dot_ref: Vec<f64> =
+                (0..p).map(|j| simd::dot_with(KernelIsa::Scalar, m.col(j), &r[..n])).collect();
+            let mm_ref: Vec<f64> = (0..p)
+                .flat_map(|j| {
+                    (0..n_rhs)
+                        .map(|c| {
+                            simd::dot_with(KernelIsa::Scalar, m.col(j), &r[c * n..(c + 1) * n])
+                        })
+                        .collect::<Vec<f64>>()
+                })
+                .collect();
+            let mut axpy_ref = x.clone();
+            simd::axpy_with(KernelIsa::Scalar, alpha, &r[..n], &mut axpy_ref);
+
+            for which in VECTOR_ISAS {
+                if !which.supported() {
+                    continue;
+                }
+                let cmp = |got: f64, want: f64, what: &str| {
+                    if which.is_fma() {
+                        close(got, want, 1e-12)
+                            .map_err(|e| format!("{}/{what}: {e}", which.as_str()))
+                    } else {
+                        ensure(
+                            got.to_bits() == want.to_bits(),
+                            format!("{}/{what}: {got} != {want} bitwise", which.as_str()),
+                        )
+                    }
+                };
+
+                let mut out = vec![0.0; p];
+                simd::matvec_t_panel_with(which, &m, &r[..n], 0..p, &mut out);
+                for j in 0..p {
+                    cmp(out[j], dot_ref[j], "matvec_t_panel")?;
+                }
+
+                let mut out = vec![0.0; p * n_rhs];
+                simd::matmul_t_panel_with(which, &m, &r, n_rhs, 0..p, &mut out);
+                for (k, &want) in mm_ref.iter().enumerate() {
+                    cmp(out[k], want, "matmul_t_panel")?;
+                }
+
+                let mut out = vec![0.0; gather_cols.len()];
+                simd::gather_dots_panel_with(which, &m, &r[..n], &gather_cols, &mut out);
+                for (k, &j) in gather_cols.iter().enumerate() {
+                    cmp(out[k], dot_ref[j], "gather_dots_panel")?;
+                }
+
+                if p > 0 {
+                    cmp(
+                        simd::dot_with(which, m.col(0), &r[..n]),
+                        dot_ref[0],
+                        "dot",
+                    )?;
+                }
+                let mut y = x.clone();
+                simd::axpy_with(which, alpha, &r[..n], &mut y);
+                for i in 0..n {
+                    cmp(y[i], axpy_ref[i], "axpy")?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ISSUE-10 tentpole property, part 2: the reduced-precision dots have
+/// no FMA variants, so every supported ISA must reproduce the scalar
+/// references bit-for-bit — and both modes track the f64 dot within
+/// f32 rounding of the summed products.
+#[test]
+fn prop_reduced_dots_are_isa_invariant_and_accurate() {
+    use skglm::linalg::{simd, KernelIsa, Precision};
+
+    const ISAS: [KernelIsa; 5] = [
+        KernelIsa::Scalar,
+        KernelIsa::Avx2,
+        KernelIsa::Avx2Fma,
+        KernelIsa::Neon,
+        KernelIsa::NeonFma,
+    ];
+
+    check(
+        19,
+        40,
+        |rng: &mut Rng| (rng.below(200), rng.next_u64()),
+        |&(n, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let a64: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b64: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let a32: Vec<f32> = a64.iter().map(|&v| v as f32).collect();
+            let b32: Vec<f32> = b64.iter().map(|&v| v as f32).collect();
+
+            let mixed_ref = simd::dot_mixed_scalar(&a32, &b32);
+            let f32_ref = simd::dot_f32_scalar(&a32, &b32);
+            for which in ISAS {
+                if !which.supported() {
+                    continue;
+                }
+                let got = simd::dot_mixed_with(which, &a32, &b32);
+                ensure(
+                    got.to_bits() == mixed_ref.to_bits(),
+                    format!("mixed dot differs on {}: {got} vs {mixed_ref}", which.as_str()),
+                )?;
+                let got = simd::dot_f32_with(which, &a32, &b32);
+                ensure(
+                    got.to_bits() == f32_ref.to_bits(),
+                    format!("f32 dot differs on {}: {got} vs {f32_ref}", which.as_str()),
+                )?;
+            }
+
+            // accuracy vs the f64 dot: error bounded by f32 rounding of
+            // the accumulated |a_i b_i| mass
+            let exact: f64 = a64.iter().zip(&b64).map(|(x, z)| x * z).sum();
+            let mass: f64 = a64.iter().zip(&b64).map(|(x, z)| (x * z).abs()).sum();
+            let bound = 1e-5 * (1.0 + mass);
+            for (prec, got) in
+                [(Precision::Mixed, mixed_ref), (Precision::F32, f32_ref)]
+            {
+                ensure(
+                    (got - exact).abs() <= bound,
+                    format!(
+                        "{} dot drifted: |{got} - {exact}| > {bound}",
+                        prec.as_str()
+                    ),
+                )?;
+                // reduced_dot is the same kernel behind the Precision enum
+                let via_enum = simd::reduced_dot(prec, &a32, &b32);
+                ensure(
+                    via_enum.to_bits() == got.to_bits(),
+                    format!("reduced_dot({}) disagrees with the *_with kernel", prec.as_str()),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ISSUE-10 tentpole property, part 3: reduced-precision solves still
+/// converge, their f64 KKT certificate lands under the floored
+/// tolerance, the solution stays close to the f64 fit, and the profile
+/// is labeled with the mode that produced it.
+#[test]
+fn prop_reduced_precision_solves_meet_floored_certificate() {
+    use skglm::linalg::{simd, Precision};
+
+    check(
+        23,
+        4,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let ds = correlated(
+                CorrelatedSpec { n: 60, p: 90, rho: 0.4, nnz: 8, snr: 8.0 },
+                seed,
+            );
+            let lam_max =
+                skglm::estimators::linear::quadratic_lambda_max(&ds.design, &ds.y);
+            let lam = 0.1 * lam_max;
+
+            for prec in [Precision::Mixed, Precision::F32] {
+                let opts = SolverOpts::default().with_tol(1e-8).with_precision(prec);
+                let bar = opts.tol.max(prec.tol_floor());
+                let f64_opts = SolverOpts::default().with_tol(1e-8);
+
+                for (name, is_l1) in [("l1", true), ("mcp", false)] {
+                    let run = |o: &SolverOpts| {
+                        let mut f = Quadratic::new();
+                        if is_l1 {
+                            solve(&ds.design, &ds.y, &mut f, &L1::new(lam), o, None, None)
+                        } else {
+                            solve(&ds.design, &ds.y, &mut f, &Mcp::new(lam, 3.0), o, None, None)
+                        }
+                    };
+                    let res = run(&opts);
+                    let gold = run(&f64_opts);
+                    ensure(
+                        res.converged,
+                        format!("{}/{name}: did not converge", prec.as_str()),
+                    )?;
+                    ensure(
+                        res.kkt <= bar * 1.000001,
+                        format!(
+                            "{}/{name}: kkt {} above floored tol {bar}",
+                            prec.as_str(),
+                            res.kkt
+                        ),
+                    )?;
+                    close(res.objective, gold.objective, 1e-2)
+                        .map_err(|e| format!("{}/{name} objective: {e}", prec.as_str()))?;
+                    ensure(
+                        res.profile.precision == prec,
+                        format!("{}/{name}: profile precision unlabeled", prec.as_str()),
+                    )?;
+                    ensure(
+                        res.profile.kernel_isa == simd::isa(),
+                        format!("{}/{name}: profile isa unlabeled", prec.as_str()),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// PR 2's thread bit-invariance contract, re-pinned per ISA: however the
+/// active ISA splits the panel across threads, every output bit matches
+/// the single-thread pass (asserted via `to_bits`, not a tolerance).
+#[test]
+fn prop_thread_split_is_bit_invariant_under_active_isa() {
+    use skglm::linalg::simd;
+
+    check(
+        29,
+        25,
+        |rng: &mut Rng| (1 + rng.below(150), 1 + rng.below(70), rng.next_u64()),
+        |&(n, p, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let data: Vec<f64> = (0..n * p).map(|_| rng.normal()).collect();
+            let design: Design = skglm::linalg::DenseMatrix::from_col_major(n, p, data).into();
+            let r: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+            let mut base = vec![0.0; p];
+            design.matvec_t_threads(&r, &mut base, 1);
+            for threads in [2usize, 3, 5, 8] {
+                let mut out = vec![0.0; p];
+                design.matvec_t_threads(&r, &mut out, threads);
+                for j in 0..p {
+                    ensure(
+                        out[j].to_bits() == base[j].to_bits(),
+                        format!(
+                            "isa {}: {threads}-thread split changed bits at col {j}",
+                            simd::isa().as_str()
+                        ),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}

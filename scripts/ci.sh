@@ -31,8 +31,14 @@ cargo run --release -p skglm --bin skglm -- exp gram
 echo "==> batched-fit bench smoke (writes BENCH_batch.json)"
 cargo run --release -p skglm --bin skglm -- exp batch
 
+echo "==> simd/precision kernel bench smoke (writes BENCH_simd.json)"
+cargo run --release -p skglm --bin skglm -- exp simd
+
 echo "==> scenario conformance smoke gate (writes BENCH_scenarios.json; non-zero exit on any failing scenario)"
 cargo run --release -p skglm --bin skglm -- conform --smoke
+
+echo "==> scenario conformance smoke gate under the pinned scalar ISA (bit-identity leg of ARCHITECTURE.md §Kernel ISA & precision)"
+SKGLM_ISA=scalar cargo run --release -p skglm --bin skglm -- conform --smoke
 
 echo "==> serve smoke gate (loopback fit service under a fault plan; writes BENCH_serve_smoke.json; non-zero exit on any unhandled degradation)"
 cargo run --release -p skglm --bin skglm -- client --script smoke --transcript BENCH_serve_smoke.json
